@@ -1,0 +1,114 @@
+//! Scaling study (Figure 4 analogue) with local calibration.
+//!
+//! Measures the *real* per-step execution time of the AOT train_step on
+//! this machine, uses it to sanity-check the analytic performance model's
+//! compute term, then sweeps weak and strong scaling of MTL-base vs
+//! MTL-par across the Frontier / Perlmutter / Aurora profiles and prints
+//! the six panels plus the memory-regime analysis (Cases 1-3).
+//!
+//! Run: cargo run --release --example scaling_study -- [--csv fig4.csv]
+
+use std::sync::Arc;
+
+use hydra_mtp::data::batch::BatchBuilder;
+use hydra_mtp::data::generators::{DatasetGenerator, GeneratorConfig};
+use hydra_mtp::data::structures::DatasetId;
+use hydra_mtp::model::arch::{self, ArchDims};
+use hydra_mtp::model::params::ParamSet;
+use hydra_mtp::runtime::Engine;
+use hydra_mtp::scalesim::{self, perfmodel, SimMode, Workload, ALL_MACHINES};
+use hydra_mtp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let seed = args.u64("seed", 2025);
+
+    // --- local calibration: real train_step latency on this host ---
+    println!("== local calibration (real PJRT execution) ==");
+    let engine = Arc::new(Engine::load("artifacts")?);
+    let mut g = DatasetGenerator::new(
+        DatasetId::Ani1x,
+        seed,
+        GeneratorConfig { max_atoms: 16, ..Default::default() },
+    );
+    let samples = g.take(32);
+    let batches = BatchBuilder::build_all(
+        engine.manifest.config.batch_dims(),
+        engine.manifest.config.cutoff,
+        &samples,
+    );
+    let params = ParamSet::init(&engine.manifest.params, 1);
+    // warmup + timed
+    engine.train_step(&params, &batches[0])?;
+    let t0 = std::time::Instant::now();
+    let reps = 10;
+    for i in 0..reps {
+        engine.train_step(&params, &batches[i % batches.len()])?;
+    }
+    let step_t = t0.elapsed() / reps as u32;
+    let graphs_per_batch = batches[0].n_graphs;
+    println!(
+        "measured train_step: {step_t:?} for ~{graphs_per_batch} structures \
+         ({:.2} ms/structure on this CPU)",
+        step_t.as_secs_f64() * 1e3 / graphs_per_batch as f64
+    );
+
+    // Analytic model at the *artifact* dims for comparison.
+    let art_dims = engine.manifest.config.arch_dims();
+    let w_art = Workload {
+        dims: art_dims,
+        n_heads: 5,
+        avg_nodes: 14.0,
+        avg_edges: 160.0,
+        efficiency: 0.25,
+    };
+    let flops = w_art.flops_encoder_per_sample() + w_art.flops_head_per_sample();
+    println!(
+        "analytic FLOPs/structure at artifact dims: {:.2} MFLOP \
+         (host sustains ~{:.2} GFLOP/s on this workload)\n",
+        flops / 1e6,
+        flops * graphs_per_batch as f64 / step_t.as_secs_f64() / 1e9
+    );
+
+    // --- memory regimes (paper Section 4.3 Cases) ---
+    println!("== memory / regime analysis (paper config, 5..60 heads) ==");
+    let paper = ArchDims::paper();
+    for n_heads in [2usize, 5, 10, 20, 60] {
+        let without = arch::memory_without_mtp(&paper, n_heads);
+        let with = arch::memory_with_mtp(&paper);
+        let regime = arch::classify_regime(&paper, n_heads, 4.0);
+        println!(
+            "  {n_heads:>3} heads: DDP {:>8.2} GiB/GPU vs MTP {:>6.2} GiB/GPU  -> {:?}",
+            without as f64 / (1u64 << 30) as f64,
+            with as f64 / (1u64 << 30) as f64,
+            regime
+        );
+    }
+
+    // --- the six Figure-4 panels ---
+    println!("\n== Figure 4 sweep (simulated Frontier / Perlmutter / Aurora) ==\n");
+    let w = Workload::paper(5);
+    let rows = scalesim::fig4_all(&w, seed);
+    for m in &ALL_MACHINES {
+        println!("{}", scalesim::render_panel(&rows, m.name, "weak"));
+        println!("{}", scalesim::render_panel(&rows, m.name, "strong"));
+    }
+
+    // Communication-dominance crossover: where MTL-par starts winning.
+    println!("== per-step comm time at scale (strong scaling, paper model) ==");
+    for m in &ALL_MACHINES {
+        print!("  {:<11}", m.name);
+        for gpus in scalesim::sweep::gpu_counts(m) {
+            let base = perfmodel::step_comm_time(m, &w, SimMode::MtlBase, gpus);
+            let par = perfmodel::step_comm_time(m, &w, SimMode::MtlPar, gpus);
+            print!(" {gpus}:{:.1}x", base / par);
+        }
+        println!();
+    }
+
+    if let Some(path) = args.opt_str("csv") {
+        std::fs::write(path, scalesim::to_csv(&rows))?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}

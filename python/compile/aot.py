@@ -1,0 +1,184 @@
+"""AOT lowering: jax model -> HLO *text* artifacts + manifest.json.
+
+This is the only place Python touches the system: ``make artifacts`` runs it
+once, and the rust coordinator consumes the outputs forever after.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Exported artifacts (all shapes static, one branch per executable — under
+multi-task parallelism each process feeds its own branch parameters):
+
+  train_step.hlo.txt   (params, batch) -> {grads, loss, mae_e, mae_f}
+  eval_step.hlo.txt    (params, batch) -> {loss, mae_e, mae_f}
+  fwd.hlo.txt          (params, batch) -> {energy, forces}
+  encoder_fwd.hlo.txt  (enc_params, batch) -> {h, v}
+
+manifest.json records the flattened input/output order (pytree flatten
+order: dict keys sorted), every shape/dtype, and the initializer metadata the
+rust side needs to build parameter tensors without jax.
+"""
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import DEFAULT, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def _leaf_meta(path, leaf):
+    name = _path_str(path)
+    shape = list(leaf.shape)
+    dtype = jnp.dtype(leaf.dtype).name
+    meta = {"name": name, "shape": shape, "dtype": dtype}
+    # Initializer hint for the rust side (params only; harmless on batch).
+    last = name.rsplit(".", 1)[-1]
+    if last == "embed":
+        meta["init"] = {"kind": "normal", "scale": 0.5}
+    elif len(shape) == 2 and last.startswith("w"):
+        meta["init"] = {"kind": "lecun", "fan_in": shape[0]}
+    elif last.startswith("b"):
+        meta["init"] = {"kind": "zeros"}
+    return meta
+
+
+def _flat_meta(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [_leaf_meta(path, leaf) for path, leaf in leaves]
+
+
+def _spec_tree(tree):
+    """Concrete pytree -> ShapeDtypeStruct pytree."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def export_artifacts(cfg: ModelConfig, out_dir: str, quiet: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, cfg)
+    param_spec = _spec_tree(params)
+    batch = model.batch_spec(cfg)
+
+    fns = {
+        "train_step": (model.make_train_step(cfg), (param_spec, batch)),
+        "eval_step": (model.make_eval_step(cfg), (param_spec, batch)),
+        "fwd": (model.make_forward(cfg), (param_spec, batch)),
+        "encoder_fwd": (
+            model.make_encoder_forward(cfg),
+            (param_spec["encoder"], batch),
+        ),
+    }
+
+    manifest = {
+        "version": 1,
+        "config": cfg.to_dict(),
+        "params": _flat_meta(params),
+        "encoder_params": _flat_meta(params["encoder"]),
+        "branch_params": _flat_meta(params["branch"]),
+        "batch": _flat_meta(batch),
+        "artifacts": {},
+    }
+
+    for name, (fn, args) in fns.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_spec = jax.eval_shape(fn, *args)
+        # jax DCEs unused flat inputs at lowering (e.g. fwd ignores the
+        # label fields); the manifest must list only the *kept* parameters,
+        # in order, or the rust marshaller supplies too many buffers.
+        all_inputs = sum((_flat_meta(a) for a in args), [])
+        kept = getattr(lowered._lowering, "compile_args", {}).get("kept_var_idx")
+        if kept is not None:
+            kept_inputs = [all_inputs[i] for i in sorted(kept)]
+        else:
+            kept_inputs = all_inputs
+        entry = {
+            "file": fname,
+            "inputs": kept_inputs,
+            "outputs": _flat_meta(out_spec),
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "hlo_bytes": len(text),
+        }
+        manifest["artifacts"][name] = entry
+        if not quiet:
+            print(
+                f"wrote {fname}: {len(text)} chars, "
+                f"{len(entry['inputs'])} inputs, {len(entry['outputs'])} outputs"
+            )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if not quiet:
+        print(f"wrote manifest.json ({len(manifest['params'])} param leaves)")
+    return manifest
+
+
+def parse_overrides(pairs):
+    out = {}
+    if not pairs:
+        return out
+    fields = {f.name: f.type for f in dataclasses.fields(ModelConfig)}
+    for pair in pairs:
+        k, v = pair.split("=", 1)
+        if k not in fields:
+            raise SystemExit(f"unknown config field: {k}")
+        typ = fields[k]
+        out[k] = float(v) if typ is float else int(v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--set",
+        nargs="*",
+        metavar="KEY=VAL",
+        help="override ModelConfig fields, e.g. --set hidden=32 max_nodes=128",
+    )
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    overrides = parse_overrides(args.set)
+    cfg = dataclasses.replace(DEFAULT, **overrides) if overrides else DEFAULT
+    export_artifacts(cfg, args.out, quiet=args.quiet)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Static model / batch configuration shared by kernels, model, AOT and tests.
+
+Every shape in the exported HLO artifacts is fixed at lowering time; the rust
+coordinator reads the same numbers back from ``artifacts/manifest.json`` and
+pads every batch to them. The defaults are sized for the CPU PJRT client used
+in tests; the paper configuration (4 layers, 866 hidden, 3x889 heads) is only
+used analytically by the rust-side memory / scaling model.
+"""
+
+from dataclasses import dataclass, asdict, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """HydraGNN-style model dimensions (one shared encoder + one branch).
+
+    The exported train-step artifact covers a *single* branch: under
+    multi-task parallelism each process executes the artifact with its own
+    branch's parameter values, so one executable serves every head.
+    """
+
+    # --- static batch geometry (padded) ---
+    max_nodes: int = 256          # N: atoms per padded batch
+    max_edges: int = 2048         # E: directed edges per padded batch
+    max_graphs: int = 16          # G: structures per padded batch
+
+    # --- encoder (shared MPNN layers) ---
+    num_species: int = 96         # 0 is the padding species
+    hidden: int = 64              # H: node feature width
+    num_layers: int = 4           # EGNN message-passing layers (paper: 4)
+    num_rbf: int = 16             # radial basis features per edge
+    cutoff: float = 6.0           # radial cutoff (Angstrom) baked into RBF
+
+    # --- per-dataset branch (two-level MTL: trunk -> {energy, force}) ---
+    head_hidden: int = 64         # width of the 3 FC trunk layers (paper: 889)
+    head_layers: int = 3          # paper: three fully-connected layers
+
+    # --- loss weights ---
+    # Energy-dominant weighting: per-atom energies carry the multi-fidelity
+    # reference-shift signal the MTL heads must absorb (Tables 1-2); forces
+    # are kept as a secondary task so the equivariant channel still trains.
+    energy_weight: float = 10.0
+    force_weight: float = 1.0
+
+    # --- pallas block sizes (L1 tiling; see DESIGN.md section Hardware-Adaptation) ---
+    # block_edges selected by the perf sweep (python -m compile.perf):
+    # largest tile with grid >= 2 under the 25%-of-VMEM double-buffer cap —
+    # identical MXU utilization to smaller tiles but 4x fewer grid steps.
+    block_edges: int = 1024       # edges per VMEM tile in the message kernel
+    block_nodes: int = 128        # nodes per VMEM tile in the head kernel
+
+    def __post_init__(self) -> None:
+        assert self.max_edges % self.block_edges == 0, "E must tile by block_edges"
+        assert self.max_nodes % self.block_nodes == 0, "N must tile by block_nodes"
+        assert self.hidden % 8 == 0, "hidden should be MXU-lane friendly"
+
+    @property
+    def edge_in(self) -> int:
+        """Input width of the edge MLP: [h_src, h_dst, rbf(dist)]."""
+        return 2 * self.hidden + self.num_rbf
+
+    @property
+    def node_in(self) -> int:
+        """Input width of the node-update MLP: [h, aggregated message]."""
+        return 2 * self.hidden
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+@dataclass(frozen=True)
+class PaperConfig:
+    """The paper's published configuration (Section 5), used by the rust
+    scaling model for exact parameter counts — never lowered on CPU."""
+
+    hidden: int = 866
+    num_layers: int = 4
+    head_hidden: int = 889
+    head_layers: int = 3
+    num_datasets: int = 5
+
+
+DEFAULT = ModelConfig()
+
+# A tiny config for fast unit tests (pytest + hypothesis sweeps).
+TINY = ModelConfig(
+    max_nodes=32,
+    max_edges=64,
+    max_graphs=4,
+    hidden=16,
+    num_layers=2,
+    num_rbf=8,
+    head_hidden=16,
+    block_edges=32,
+    block_nodes=16,
+)

@@ -1,0 +1,14 @@
+"""L1 Pallas kernels (build-time only; lowered into the HLO artifacts)."""
+
+from .egnn_message import egnn_message, egnn_message_fwd_pallas
+from .mlp_head import mlp_head, mlp_head_fwd_pallas, mlp_head_bwd_pallas
+from . import ref
+
+__all__ = [
+    "egnn_message",
+    "egnn_message_fwd_pallas",
+    "mlp_head",
+    "mlp_head_fwd_pallas",
+    "mlp_head_bwd_pallas",
+    "ref",
+]

@@ -1,0 +1,196 @@
+"""Fused EGNN edge-message Pallas kernel (L1 hot spot #1).
+
+One pallas_call fuses, per tile of ``block_edges`` edges:
+
+  1. the two-layer edge MLP on [h_src | h_dst | rbf(dist)],
+  2. the tanh gate that scales the equivariant vector channel, and
+  3. the scatter-add aggregation of both message and vector streams into
+     per-node accumulators.
+
+Hardware adaptation (see DESIGN.md): on GPU this scatter is an atomicAdd per
+edge; on TPU we express it as a masked one-hot matmul
+``(N, BLOCK_E) @ (BLOCK_E, H)`` so accumulation stays in VMEM and runs on the
+MXU. The grid walks edge tiles; the two node-indexed outputs use a constant
+index map so every grid step revisits (and accumulates into) the same block.
+
+interpret=True is mandatory here: the CPU PJRT client cannot execute Mosaic
+custom-calls. Correctness is asserted against kernels.ref.egnn_message_ref.
+
+Autodiff: pallas_call has no VJP rule, so the public entry point is a
+jax.custom_vjp whose forward runs this kernel and whose backward is the exact
+closed-form pure-jnp adjoint (lowered into the same HLO artifact — Python is
+still never on the request path).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .ref import silu, dsilu
+
+
+def _kernel(
+    h_src_ref, h_dst_ref, rbf_ref, rel_hat_ref, dst_ref, emask_ref,
+    w1_ref, b1_ref, w2_ref, b2_ref, wg_ref, bg_ref,
+    m_ref, hagg_ref, vagg_ref,
+    *, num_nodes: int,
+):
+    """One grid step: process BLOCK_E edges, accumulate into N-node outputs."""
+    h_src = h_src_ref[...]
+    h_dst = h_dst_ref[...]
+    rbf = rbf_ref[...]
+    emask = emask_ref[...]                       # (BE, 1)
+
+    # Edge MLP: two dense layers on the MXU.
+    x = jnp.concatenate([h_src, h_dst, rbf], axis=1)
+    u = silu(x @ w1_ref[...] + b1_ref[...])
+    m = silu(u @ w2_ref[...] + b2_ref[...]) * emask
+
+    # Equivariant gate.
+    gate = jnp.tanh(m @ wg_ref[...] + bg_ref[...])        # (BE, 1)
+    gv = rel_hat_ref[...] * gate * emask                  # (BE, 3)
+
+    # Masked one-hot scatter: (N, BE) @ (BE, H) on the MXU.
+    dst = dst_ref[...]                                    # (BE,)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (num_nodes, dst.shape[0]), 0)
+    onehot = (iota == dst[None, :]).astype(m.dtype) * emask[:, 0][None, :]
+
+    m_ref[...] = m
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hagg_ref[...] = jnp.zeros_like(hagg_ref)
+        vagg_ref[...] = jnp.zeros_like(vagg_ref)
+
+    hagg_ref[...] += onehot @ m
+    vagg_ref[...] += onehot @ gv
+
+
+def egnn_message_fwd_pallas(h_src, h_dst, rbf, rel_hat, dst, emask, params,
+                            num_nodes, block_edges):
+    """Raw pallas_call wrapper (forward only)."""
+    e, h = h_src.shape
+    r = rbf.shape[1]
+    assert e % block_edges == 0, (e, block_edges)
+    grid = (e // block_edges,)
+    w1, b1 = params["w1"], params["b1"]
+    w2, b2 = params["w2"], params["b2"]
+    wg, bg = params["wg"], params["bg"]
+
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    edge2 = lambda width: pl.BlockSpec((block_edges, width), lambda i: (i, 0))
+
+    m, hagg, vagg = pl.pallas_call(
+        functools.partial(_kernel, num_nodes=num_nodes),
+        grid=grid,
+        in_specs=[
+            edge2(h),                                  # h_src
+            edge2(h),                                  # h_dst
+            edge2(r),                                  # rbf
+            edge2(3),                                  # rel_hat
+            pl.BlockSpec((block_edges,), lambda i: (i,)),  # dst
+            edge2(1),                                  # emask
+            full(w1.shape), full(b1.shape),
+            full(w2.shape), full(b2.shape),
+            full(wg.shape), full(bg.shape),
+        ],
+        out_specs=[
+            edge2(h),                                  # m (per-edge)
+            pl.BlockSpec((num_nodes, h), lambda i: (0, 0)),   # hagg (accum)
+            pl.BlockSpec((num_nodes, 3), lambda i: (0, 0)),   # vagg (accum)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e, h), h_src.dtype),
+            jax.ShapeDtypeStruct((num_nodes, h), h_src.dtype),
+            jax.ShapeDtypeStruct((num_nodes, 3), h_src.dtype),
+        ],
+        interpret=True,
+    )(h_src, h_dst, rbf, rel_hat, dst, emask, w1, b1, w2, b2, wg, bg)
+    return m, hagg, vagg
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp entry point
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+def egnn_message(h_src, h_dst, rbf, rel_hat, dst, emask, params,
+                 num_nodes, block_edges):
+    """Differentiable fused edge-message op. See module docstring."""
+    return egnn_message_fwd_pallas(
+        h_src, h_dst, rbf, rel_hat, dst, emask, params, num_nodes, block_edges
+    )
+
+
+def _fwd(h_src, h_dst, rbf, rel_hat, dst, emask, params, num_nodes, block_edges):
+    out = egnn_message_fwd_pallas(
+        h_src, h_dst, rbf, rel_hat, dst, emask, params, num_nodes, block_edges
+    )
+    res = (h_src, h_dst, rbf, rel_hat, dst, emask, params)
+    return out, res
+
+
+def _bwd(num_nodes, block_edges, res, cts):
+    """Closed-form adjoint of the fused op (pure jnp, exact).
+
+    Recomputes the cheap forward intermediates (rematerialization — the same
+    trade a hand-written GPU backward kernel makes) and propagates:
+      d(hagg), d(vagg), d(m) -> d(edge MLP inputs) + d(weights).
+    """
+    h_src, h_dst, rbf, rel_hat, dst, emask, params = res
+    dm_out, dhagg, dvagg = cts
+    w1, b1 = params["w1"], params["b1"]
+    w2, b2 = params["w2"], params["b2"]
+    wg, bg = params["wg"], params["bg"]
+
+    # --- recompute forward intermediates ---
+    x = jnp.concatenate([h_src, h_dst, rbf], axis=1)
+    a1 = x @ w1 + b1
+    u = silu(a1)
+    a2 = u @ w2 + b2
+    m = silu(a2) * emask
+    ag = m @ wg + bg
+    gate = jnp.tanh(ag)
+
+    # --- scatter adjoints: gather the node cotangents back to edges ---
+    # hagg = onehot @ m  =>  dm += onehot^T @ dhagg = dhagg[dst] (masked)
+    dm = dm_out + dhagg[dst] * emask
+    # vagg = onehot @ (rel_hat * gate * emask)
+    dgv = dvagg[dst] * emask                              # (E, 3)
+    dgate = jnp.sum(dgv * rel_hat, axis=1, keepdims=True) * emask
+    # (rel_hat is input geometry — not differentiated; positions are fixed
+    #  inputs in this architecture, forces come from the vector channel.)
+
+    # --- gate adjoint ---
+    dag = dgate * (1.0 - gate**2)
+    dwg = m.T @ dag
+    dbg = jnp.sum(dag, axis=0)
+    dm = dm + dag @ wg.T
+
+    # --- edge MLP adjoint ---
+    da2 = dm * emask * dsilu(a2)
+    dw2 = u.T @ da2
+    db2 = jnp.sum(da2, axis=0)
+    du = da2 @ w2.T
+    da1 = du * dsilu(a1)
+    dw1 = x.T @ da1
+    db1 = jnp.sum(da1, axis=0)
+    dx = da1 @ w1.T
+
+    h = h_src.shape[1]
+    dh_src = dx[:, :h]
+    dh_dst = dx[:, h : 2 * h]
+    drbf = dx[:, 2 * h :]
+
+    dparams = {"w1": dw1, "b1": db1, "w2": dw2, "b2": db2, "wg": dwg, "bg": dbg}
+    zeros_rel = jnp.zeros_like(rel_hat)
+    zeros_emask = jnp.zeros_like(emask)
+    # dst is integer-typed: its cotangent is the symbolic float0 zero.
+    ddst = np.zeros(dst.shape, dtype=jax.dtypes.float0)
+    return (dh_src, dh_dst, drbf, zeros_rel, ddst, zeros_emask, dparams)
+
+
+egnn_message.defvjp(_fwd, _bwd)

@@ -1,0 +1,163 @@
+"""Fused 3-layer branch-trunk MLP Pallas kernels (L1 hot spot #2).
+
+The per-dataset branch of the two-level MTL architecture applies three
+fully-connected silu layers to every node embedding (paper: 3 x 889 units).
+Both the forward and the backward pass are hand-written Pallas kernels:
+
+  forward : grid over node tiles; three chained matmuls stay in VMEM, and
+            the pre-activations are emitted as residuals for the backward.
+  backward: grid over node tiles; per-tile weight-gradient contributions are
+            accumulated across grid steps via constant-index-map outputs
+            (the TPU analogue of a grid-stride atomicAdd reduction).
+
+interpret=True is mandatory (CPU PJRT cannot run Mosaic custom-calls); the
+numerics are asserted against kernels.ref.mlp_head_ref and jax.grad of it.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import silu, dsilu
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(h_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref,
+                z_ref, a1_ref, a2_ref, a3_ref):
+    h = h_ref[...]
+    a1 = h @ w1_ref[...] + b1_ref[...]
+    z1 = silu(a1)
+    a2 = z1 @ w2_ref[...] + b2_ref[...]
+    z2 = silu(a2)
+    a3 = z2 @ w3_ref[...] + b3_ref[...]
+    z_ref[...] = silu(a3)
+    a1_ref[...] = a1
+    a2_ref[...] = a2
+    a3_ref[...] = a3
+
+
+def mlp_head_fwd_pallas(h, params, block_nodes):
+    n, hdim = h.shape
+    d = params["w1"].shape[1]
+    assert n % block_nodes == 0, (n, block_nodes)
+    grid = (n // block_nodes,)
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    tile = lambda width: pl.BlockSpec((block_nodes, width), lambda i: (i, 0))
+
+    z, a1, a2, a3 = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            tile(hdim),
+            full(params["w1"].shape), full(params["b1"].shape),
+            full(params["w2"].shape), full(params["b2"].shape),
+            full(params["w3"].shape), full(params["b3"].shape),
+        ],
+        out_specs=[tile(d), tile(d), tile(d), tile(d)],
+        out_shape=[jax.ShapeDtypeStruct((n, d), h.dtype) for _ in range(4)],
+        interpret=True,
+    )(h, params["w1"], params["b1"], params["w2"], params["b2"],
+      params["w3"], params["b3"])
+    return z, (a1, a2, a3)
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+def _bwd_kernel(h_ref, a1_ref, a2_ref, a3_ref, dz_ref,
+                w1_ref, w2_ref, w3_ref,
+                dh_ref, dw1_ref, db1_ref, dw2_ref, db2_ref, dw3_ref, db3_ref):
+    h = h_ref[...]
+    a1, a2, a3 = a1_ref[...], a2_ref[...], a3_ref[...]
+    z1, z2 = silu(a1), silu(a2)
+
+    da3 = dz_ref[...] * dsilu(a3)
+    da2 = (da3 @ w3_ref[...].T) * dsilu(a2)
+    da1 = (da2 @ w2_ref[...].T) * dsilu(a1)
+    dh_ref[...] = da1 @ w1_ref[...].T
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dw1_ref[...] = jnp.zeros_like(dw1_ref)
+        db1_ref[...] = jnp.zeros_like(db1_ref)
+        dw2_ref[...] = jnp.zeros_like(dw2_ref)
+        db2_ref[...] = jnp.zeros_like(db2_ref)
+        dw3_ref[...] = jnp.zeros_like(dw3_ref)
+        db3_ref[...] = jnp.zeros_like(db3_ref)
+
+    dw3_ref[...] += z2.T @ da3
+    db3_ref[...] += jnp.sum(da3, axis=0)
+    dw2_ref[...] += z1.T @ da2
+    db2_ref[...] += jnp.sum(da2, axis=0)
+    dw1_ref[...] += h.T @ da1
+    db1_ref[...] += jnp.sum(da1, axis=0)
+
+
+def mlp_head_bwd_pallas(h, residuals, dz, params, block_nodes):
+    a1, a2, a3 = residuals
+    n, hdim = h.shape
+    d = params["w1"].shape[1]
+    grid = (n // block_nodes,)
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    tile = lambda width: pl.BlockSpec((block_nodes, width), lambda i: (i, 0))
+
+    outs = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            tile(hdim), tile(d), tile(d), tile(d), tile(d),
+            full(params["w1"].shape),
+            full(params["w2"].shape),
+            full(params["w3"].shape),
+        ],
+        out_specs=[
+            tile(hdim),
+            full(params["w1"].shape), full(params["b1"].shape),
+            full(params["w2"].shape), full(params["b2"].shape),
+            full(params["w3"].shape), full(params["b3"].shape),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, hdim), h.dtype),
+            jax.ShapeDtypeStruct(params["w1"].shape, h.dtype),
+            jax.ShapeDtypeStruct(params["b1"].shape, h.dtype),
+            jax.ShapeDtypeStruct(params["w2"].shape, h.dtype),
+            jax.ShapeDtypeStruct(params["b2"].shape, h.dtype),
+            jax.ShapeDtypeStruct(params["w3"].shape, h.dtype),
+            jax.ShapeDtypeStruct(params["b3"].shape, h.dtype),
+        ],
+        interpret=True,
+    )(h, a1, a2, a3, dz, params["w1"], params["w2"], params["w3"])
+    dh, dw1, db1, dw2, db2, dw3, db3 = outs
+    dparams = {"w1": dw1, "b1": db1, "w2": dw2, "b2": db2, "w3": dw3, "b3": db3}
+    return dh, dparams
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp entry point
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def mlp_head(h, params, block_nodes):
+    """Differentiable fused 3-layer trunk MLP. See module docstring."""
+    z, _ = mlp_head_fwd_pallas(h, params, block_nodes)
+    return z
+
+
+def _fwd(h, params, block_nodes):
+    z, residuals = mlp_head_fwd_pallas(h, params, block_nodes)
+    return z, (h, residuals, params)
+
+
+def _bwd(block_nodes, res, dz):
+    h, residuals, params = res
+    dh, dparams = mlp_head_bwd_pallas(h, residuals, dz, params, block_nodes)
+    return dh, dparams
+
+
+mlp_head.defvjp(_fwd, _bwd)

@@ -1,0 +1,323 @@
+"""L2: HydraGNN-style JAX model — EGNN encoder + one two-level MTL branch.
+
+The model follows the paper's architecture (Section 4.2 / Section 5):
+
+  shared encoder : species embedding + ``num_layers`` EGNN message-passing
+                   layers (invariant scalar channel ``h`` plus an equivariant
+                   vector channel ``v`` used for force prediction);
+  branch         : per-dataset trunk of 3 fully-connected layers (L1 Pallas
+                   kernel) that splits into two sub-heads — energy-per-atom
+                   (graph level) and atomic forces (node level, equivariant
+                   via the vector channel).
+
+Under multi-task parallelism each rust process executes the exported
+``train_step`` with *its own* branch parameters, so a single artifact serves
+all heads. Everything here is build-time Python: ``aot.py`` lowers these
+functions once to HLO text.
+
+Batches are statically shaped padded graph batches (see config.ModelConfig):
+    species    i32[N]      0 = padding atom
+    edge_src   i32[E]      source node per directed edge
+    edge_dst   i32[E]      destination node per directed edge
+    rel_hat    f32[E,3]    unit vector x_src - x_dst
+    dist       f32[E]      edge length (Angstrom)
+    node_mask  f32[N]      1 for real atoms
+    edge_mask  f32[E]      1 for real edges
+    node_graph i32[N]      graph id per node (padding -> max_graphs-1 slot ok)
+    graph_mask f32[G]      1 for real structures
+    inv_atoms  f32[G]      1 / natoms per structure (0 for padding)
+    y_energy   f32[G]      target energy per atom
+    y_forces   f32[N,3]    target forces
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import egnn_message, mlp_head
+from .kernels.ref import rbf_expand, silu
+
+BATCH_FIELDS = (
+    ("species", "i4", ("N",)),
+    ("edge_src", "i4", ("E",)),
+    ("edge_dst", "i4", ("E",)),
+    ("rel_hat", "f4", ("E", 3)),
+    ("dist", "f4", ("E",)),
+    ("node_mask", "f4", ("N",)),
+    ("edge_mask", "f4", ("E",)),
+    ("node_graph", "i4", ("N",)),
+    ("graph_mask", "f4", ("G",)),
+    ("inv_atoms", "f4", ("G",)),
+    ("y_energy", "f4", ("G",)),
+    ("y_forces", "f4", ("N", 3)),
+)
+
+
+# ---------------------------------------------------------------------------
+# initialization
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, fan_in, fan_out, dtype=jnp.float32):
+    """LeCun-normal weights, zero bias (matches the rust-side initializer)."""
+    w = jax.random.normal(key, (fan_in, fan_out), dtype) / jnp.sqrt(
+        jnp.asarray(fan_in, dtype)
+    )
+    return w, jnp.zeros((fan_out,), dtype)
+
+
+def init_encoder(key, cfg: ModelConfig):
+    keys = jax.random.split(key, 1 + cfg.num_layers)
+    embed = (
+        jax.random.normal(keys[0], (cfg.num_species, cfg.hidden), jnp.float32)
+        * 0.5
+    )
+    layers = []
+    for li in range(cfg.num_layers):
+        k = jax.random.split(keys[1 + li], 5)
+        ew1, eb1 = _dense_init(k[0], cfg.edge_in, cfg.hidden)
+        ew2, eb2 = _dense_init(k[1], cfg.hidden, cfg.hidden)
+        gw, gb = _dense_init(k[2], cfg.hidden, 1)
+        nw1, nb1 = _dense_init(k[3], cfg.node_in, cfg.hidden)
+        nw2, nb2 = _dense_init(k[4], cfg.hidden, cfg.hidden)
+        layers.append(
+            {
+                "edge": {"w1": ew1, "b1": eb1, "w2": ew2, "b2": eb2,
+                         "wg": gw, "bg": gb},
+                "node": {"w1": nw1, "b1": nb1, "w2": nw2, "b2": nb2},
+            }
+        )
+    return {"embed": embed, "layers": layers}
+
+
+def init_branch(key, cfg: ModelConfig):
+    k = jax.random.split(key, 5)
+    tw1, tb1 = _dense_init(k[0], cfg.hidden, cfg.head_hidden)
+    tw2, tb2 = _dense_init(k[1], cfg.head_hidden, cfg.head_hidden)
+    tw3, tb3 = _dense_init(k[2], cfg.head_hidden, cfg.head_hidden)
+    ew, eb = _dense_init(k[3], cfg.head_hidden, 1)
+    fw, fb = _dense_init(k[4], cfg.head_hidden, 1)
+    return {
+        "trunk": {"w1": tw1, "b1": tb1, "w2": tw2, "b2": tb2,
+                  "w3": tw3, "b3": tb3},
+        "energy": {"w": ew, "b": eb},
+        "force": {"w": fw, "b": fb},
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    ke, kb = jax.random.split(key)
+    return {"branch": init_branch(kb, cfg), "encoder": init_encoder(ke, cfg)}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def encoder_apply(enc, batch, cfg: ModelConfig):
+    """Shared MPNN layers: returns (h [N,H] invariant, v [N,3] equivariant)."""
+    node_mask = batch["node_mask"][:, None]
+    emask = batch["edge_mask"][:, None]
+    h = enc["embed"][batch["species"]] * node_mask
+    v = jnp.zeros((cfg.max_nodes, 3), h.dtype)
+    rbf = rbf_expand(batch["dist"], cfg.num_rbf, cfg.cutoff) * emask
+
+    # Degree normalization: the kernel scatter-adds edge messages; dense
+    # molecular graphs (20+ neighbours within the cutoff) would otherwise
+    # grow |h| layer over layer and push pre-activations into overflow.
+    deg = jnp.zeros(cfg.max_nodes, h.dtype).at[batch["edge_dst"]].add(
+        batch["edge_mask"]
+    )
+    inv_deg = (1.0 / (1.0 + deg))[:, None]
+
+    for layer in enc["layers"]:
+        h_src = h[batch["edge_src"]]
+        h_dst = h[batch["edge_dst"]]
+        _, hagg, vagg = egnn_message(
+            h_src, h_dst, rbf, batch["rel_hat"], batch["edge_dst"], emask,
+            layer["edge"], cfg.max_nodes, cfg.block_edges,
+        )
+        hagg = hagg * inv_deg
+        v = v + vagg * inv_deg * node_mask
+        nin = jnp.concatenate([h, hagg], axis=1)
+        upd = silu(nin @ layer["node"]["w1"] + layer["node"]["b1"])
+        upd = upd @ layer["node"]["w2"] + layer["node"]["b2"]
+        h = (h + upd) * node_mask
+    return h, v
+
+
+def branch_apply(branch, h, v, batch, cfg: ModelConfig):
+    """One dataset branch: trunk MLP -> {energy-per-atom, forces}."""
+    z = mlp_head(h, branch["trunk"], cfg.block_nodes)  # (N, D) pallas
+
+    # Energy sub-head: per-node scalar, masked segment-sum per graph,
+    # normalized to energy *per atom*.
+    e_node = (z @ branch["energy"]["w"] + branch["energy"]["b"])[:, 0]
+    e_node = e_node * batch["node_mask"]
+    seg = (
+        jnp.arange(cfg.max_graphs, dtype=jnp.int32)[:, None]
+        == batch["node_graph"][None, :]
+    ).astype(z.dtype) * batch["node_mask"][None, :]       # (G, N)
+    e_pa = (seg @ e_node) * batch["inv_atoms"]            # (G,)
+
+    # Force sub-head: scalar gate times the equivariant vector channel.
+    gate = z @ branch["force"]["w"] + branch["force"]["b"]  # (N, 1)
+    forces = gate * v * batch["node_mask"][:, None]
+    return e_pa, forces
+
+
+def forward(params, batch, cfg: ModelConfig):
+    h, v = encoder_apply(params["encoder"], batch, cfg)
+    return branch_apply(params["branch"], h, v, batch, cfg)
+
+
+# ---------------------------------------------------------------------------
+# loss / metrics / train step
+# ---------------------------------------------------------------------------
+
+def loss_and_metrics(params, batch, cfg: ModelConfig):
+    e_pa, forces = forward(params, batch, cfg)
+    gmask = batch["graph_mask"]
+    nmask = batch["node_mask"]
+    n_g = jnp.maximum(jnp.sum(gmask), 1.0)
+    n_n = jnp.maximum(jnp.sum(nmask), 1.0)
+
+    de = (e_pa - batch["y_energy"]) * gmask
+    df = (forces - batch["y_forces"]) * nmask[:, None]
+
+    mse_e = jnp.sum(de**2) / n_g
+    mse_f = jnp.sum(df**2) / (3.0 * n_n)
+    loss = cfg.energy_weight * mse_e + cfg.force_weight * mse_f
+
+    mae_e = jnp.sum(jnp.abs(de)) / n_g
+    mae_f = jnp.sum(jnp.abs(df)) / (3.0 * n_n)
+    return loss, (mae_e, mae_f)
+
+
+def make_train_step(cfg: ModelConfig):
+    """Returns train_step(params, batch) -> {loss, mae_e, mae_f, grads}.
+
+    The optimizer update runs in rust (L3) so the artifact stays a pure
+    function: same inputs -> same outputs, no state.
+    """
+
+    def train_step(params, batch):
+        (loss, (mae_e, mae_f)), grads = jax.value_and_grad(
+            loss_and_metrics, has_aux=True
+        )(params, batch, cfg)
+        return {"loss": loss, "mae_e": mae_e, "mae_f": mae_f, "grads": grads}
+
+    return train_step
+
+
+def make_forward(cfg: ModelConfig):
+    def fwd(params, batch):
+        e_pa, forces = forward(params, batch, cfg)
+        return {"energy": e_pa, "forces": forces}
+
+    return fwd
+
+
+def make_eval_step(cfg: ModelConfig):
+    """Forward + metrics, no gradients: the evaluation hot path."""
+
+    def eval_step(params, batch):
+        loss, (mae_e, mae_f) = loss_and_metrics(params, batch, cfg)
+        return {"loss": loss, "mae_e": mae_e, "mae_f": mae_f}
+
+    return eval_step
+
+
+def make_encoder_forward(cfg: ModelConfig):
+    """Encoder-only forward (diagnostics / transfer-learning example)."""
+
+    def enc_fwd(enc_params, batch):
+        h, v = encoder_apply(enc_params, batch, cfg)
+        return {"h": h, "v": v}
+
+    return enc_fwd
+
+
+# ---------------------------------------------------------------------------
+# example inputs (shared by aot.py and tests)
+# ---------------------------------------------------------------------------
+
+def batch_spec(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree describing one padded batch."""
+    dims = {"N": cfg.max_nodes, "E": cfg.max_edges, "G": cfg.max_graphs}
+    out = {}
+    for name, dt, shape in BATCH_FIELDS:
+        shp = tuple(dims[s] if isinstance(s, str) else s for s in shape)
+        dtype = jnp.int32 if dt == "i4" else jnp.float32
+        out[name] = jax.ShapeDtypeStruct(shp, dtype)
+    return out
+
+
+def random_batch(key, cfg: ModelConfig, n_graphs=None):
+    """A synthetic — but *internally consistent* — padded batch for tests."""
+    import numpy as np
+
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    n_graphs = n_graphs or cfg.max_graphs
+    species = np.zeros(cfg.max_nodes, np.int32)
+    node_graph = np.full(cfg.max_nodes, cfg.max_graphs - 1, np.int32)
+    node_mask = np.zeros(cfg.max_nodes, np.float32)
+    inv_atoms = np.zeros(cfg.max_graphs, np.float32)
+    graph_mask = np.zeros(cfg.max_graphs, np.float32)
+    positions = rng.uniform(0, 8, (cfg.max_nodes, 3)).astype(np.float32)
+
+    node = 0
+    per_graph = max(2, cfg.max_nodes // max(n_graphs, 1) - 1)
+    for g in range(n_graphs):
+        take = min(per_graph, cfg.max_nodes - node)
+        if take < 2:
+            break
+        species[node : node + take] = rng.integers(
+            1, cfg.num_species, take, dtype=np.int32
+        )
+        node_graph[node : node + take] = g
+        node_mask[node : node + take] = 1.0
+        inv_atoms[g] = 1.0 / take
+        graph_mask[g] = 1.0
+        node += take
+
+    # Edges: random pairs within each graph.
+    src = np.zeros(cfg.max_edges, np.int32)
+    dst = np.zeros(cfg.max_edges, np.int32)
+    emask = np.zeros(cfg.max_edges, np.float32)
+    real_nodes = np.where(node_mask > 0)[0]
+    if len(real_nodes) >= 2:
+        budget = min(cfg.max_edges, len(real_nodes) * 8)
+        for e in range(budget):
+            g = rng.integers(0, max(n_graphs, 1))
+            members = np.where(node_graph == g)[0]
+            if len(members) < 2:
+                continue
+            a, b = rng.choice(members, 2, replace=False)
+            src[e], dst[e] = a, b
+            emask[e] = 1.0
+    rel = positions[src] - positions[dst]
+    d = np.linalg.norm(rel, axis=1)
+    d = np.where(emask > 0, np.maximum(d, 1e-3), 0.0)
+    rel_hat = np.where(
+        emask[:, None] > 0, rel / np.maximum(d, 1e-3)[:, None], 0.0
+    ).astype(np.float32)
+
+    return {
+        "species": jnp.asarray(species),
+        "edge_src": jnp.asarray(src),
+        "edge_dst": jnp.asarray(dst),
+        "rel_hat": jnp.asarray(rel_hat),
+        "dist": jnp.asarray(d.astype(np.float32)),
+        "node_mask": jnp.asarray(node_mask),
+        "edge_mask": jnp.asarray(emask),
+        "node_graph": jnp.asarray(node_graph),
+        "graph_mask": jnp.asarray(graph_mask),
+        "inv_atoms": jnp.asarray(inv_atoms),
+        "y_energy": jnp.asarray(
+            rng.normal(0, 1, cfg.max_graphs).astype(np.float32) * graph_mask
+        ),
+        "y_forces": jnp.asarray(
+            rng.normal(0, 1, (cfg.max_nodes, 3)).astype(np.float32)
+            * node_mask[:, None]
+        ),
+    }

@@ -1,0 +1,259 @@
+"""L1/L2 performance analysis (build-time tooling).
+
+interpret=True wallclock is CPU-numpy time, NOT a TPU proxy, so the L1
+optimization loop is *structural*: given the kernels' BlockSpecs this module
+computes, per grid step,
+
+  - VMEM footprint (inputs + outputs + weights resident per step), checked
+    against the ~16 MiB/core budget;
+  - MXU utilization estimate: fraction of each matmul's (M, K, N) that fills
+    the 128x128 systolic array, FLOPs-weighted;
+  - HBM <-> VMEM traffic and arithmetic intensity (FLOPs/byte), placing each
+    kernel on the roofline.
+
+It also audits the lowered HLO artifacts (op histogram, fusion count) for
+the L2 pass. Results are recorded in EXPERIMENTS.md §Perf.
+
+Usage: python -m compile.perf [--set key=val ...]
+"""
+
+import argparse
+import collections
+import dataclasses
+import os
+import re
+
+from .config import DEFAULT, ModelConfig
+
+MXU = 128           # systolic array edge
+VMEM_BYTES = 16 * 1024 * 1024
+F32 = 4
+
+
+@dataclasses.dataclass
+class MatmulShape:
+    name: str
+    m: int
+    k: int
+    n: int
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.m * self.k * self.n
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Fraction of the systolic array the tile shapes fill.
+
+        Each dimension pads up to the next multiple of MXU lanes (M, N) /
+        8-deep sublanes (K is pipelined, near-free when >= 8).
+        """
+        def eff(dim, quantum):
+            pad = -dim % quantum
+            return dim / (dim + pad)
+
+        return eff(self.m, 8) * eff(self.n, MXU) * eff(self.k, 8)
+
+
+@dataclasses.dataclass
+class KernelReport:
+    name: str
+    grid: int
+    vmem_bytes: int
+    matmuls: list
+    hbm_bytes: float
+
+    @property
+    def flops(self) -> float:
+        return self.grid * sum(m.flops for m in self.matmuls)
+
+    @property
+    def mxu_utilization(self) -> float:
+        total = sum(m.flops for m in self.matmuls)
+        return sum(m.flops * m.mxu_utilization for m in self.matmuls) / total
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / self.hbm_bytes
+
+    def render(self) -> str:
+        lines = [
+            f"kernel {self.name}: grid={self.grid}",
+            f"  VMEM/step: {self.vmem_bytes / 1024:.1f} KiB "
+            f"({100 * self.vmem_bytes / VMEM_BYTES:.1f}% of 16 MiB budget)",
+            f"  FLOPs: {self.flops / 1e6:.2f} M   "
+            f"HBM traffic: {self.hbm_bytes / 1e6:.2f} MB   "
+            f"intensity: {self.intensity:.1f} FLOP/B",
+            f"  MXU utilization (FLOPs-weighted): {100 * self.mxu_utilization:.1f}%",
+        ]
+        for m in self.matmuls:
+            lines.append(
+                f"    {m.name:<28} ({m.m:>5} x {m.k:>4} x {m.n:>4})"
+                f"  util {100 * m.mxu_utilization:.1f}%"
+            )
+        return "\n".join(lines)
+
+
+def egnn_message_report(cfg: ModelConfig) -> KernelReport:
+    """Structural model of kernels/egnn_message.py's pallas_call."""
+    be = cfg.block_edges
+    h = cfg.hidden
+    r = cfg.num_rbf
+    n = cfg.max_nodes
+    grid = cfg.max_edges // be
+
+    # Resident per grid step: edge tiles + full weights + node accumulators.
+    vmem = F32 * (
+        be * h * 2          # h_src, h_dst
+        + be * r            # rbf
+        + be * 3            # rel_hat
+        + be                # dst (i32)
+        + be                # emask
+        + (2 * h + r) * h + h + h * h + h + h + 1   # weights
+        + be * h            # m out tile
+        + n * h             # hagg accumulator
+        + n * 3             # vagg accumulator
+        + n * be            # one-hot scatter matrix
+    )
+    matmuls = [
+        MatmulShape("edge_mlp_1 (x @ w1)", be, 2 * h + r, h),
+        MatmulShape("edge_mlp_2 (u @ w2)", be, h, h),
+        MatmulShape("gate (m @ wg)", be, h, 1),
+        MatmulShape("scatter_h (onehot @ m)", n, be, h),
+        MatmulShape("scatter_v (onehot @ gv)", n, be, 3),
+    ]
+    # HBM: stream every edge tile once; weights once; node accums once.
+    hbm = F32 * (
+        cfg.max_edges * (2 * h + r + 3 + 1 + 1)
+        + ((2 * h + r) * h + h * h + 2 * h + h + 1)
+        + cfg.max_edges * h      # m written back
+        + n * (h + 3)
+    )
+    return KernelReport("egnn_message", grid, vmem, matmuls, hbm)
+
+
+def mlp_head_report(cfg: ModelConfig, backward: bool = False) -> KernelReport:
+    """Structural model of kernels/mlp_head.py's pallas_calls."""
+    bn = cfg.block_nodes
+    h = cfg.hidden
+    d = cfg.head_hidden
+    n = cfg.max_nodes
+    grid = n // bn
+
+    weights = h * d + d + 2 * (d * d + d)
+    if not backward:
+        vmem = F32 * (bn * h + weights + 4 * bn * d)
+        matmuls = [
+            MatmulShape("trunk_1 (h @ w1)", bn, h, d),
+            MatmulShape("trunk_2 (z1 @ w2)", bn, d, d),
+            MatmulShape("trunk_3 (z2 @ w3)", bn, d, d),
+        ]
+        hbm = F32 * (n * h + weights + 4 * n * d)
+        return KernelReport("mlp_head_fwd", grid, vmem, matmuls, hbm)
+
+    vmem = F32 * (
+        bn * h + 4 * bn * d        # h, a1..a3, dz tiles
+        + (h * d + 2 * d * d)      # w1..w3
+        + bn * h                   # dh tile
+        + (h * d + d + 2 * (d * d + d))  # grad accumulators
+    )
+    matmuls = [
+        MatmulShape("da2 (da3 @ w3^T)", bn, d, d),
+        MatmulShape("da1 (da2 @ w2^T)", bn, d, d),
+        MatmulShape("dh (da1 @ w1^T)", bn, d, h),
+        MatmulShape("dw3 (z2^T @ da3)", d, bn, d),
+        MatmulShape("dw2 (z1^T @ da2)", d, bn, d),
+        MatmulShape("dw1 (h^T @ da1)", h, bn, d),
+    ]
+    hbm = F32 * (n * (h + 4 * d) + (h * d + 2 * d * d) + n * h + weights)
+    return KernelReport("mlp_head_bwd", grid, vmem, matmuls, hbm)
+
+
+def sweep_block_sizes(cfg: ModelConfig):
+    """The L1 optimization loop: evaluate candidate tilings and pick the
+    best (max MXU utilization subject to the VMEM budget)."""
+    rows = []
+    for be in (64, 128, 256, 512, 1024, 2048):
+        if cfg.max_edges % be:
+            continue
+        c = dataclasses.replace(cfg, block_edges=be)
+        r = egnn_message_report(c)
+        rows.append((be, r.vmem_bytes, r.mxu_utilization, r.intensity,
+                     r.vmem_bytes <= VMEM_BYTES))
+    return rows
+
+
+def hlo_histogram(path: str):
+    """Count HLO opcodes + fusions in a lowered artifact (L2 audit)."""
+    ops = collections.Counter()
+    with open(path) as f:
+        for line in f:
+            m = re.search(r"=\s+\S+\s+([a-z0-9-]+)\(", line)
+            if m:
+                ops[m.group(1)] += 1
+    return ops
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+    cfg = DEFAULT
+
+    print("=== L1 structural performance analysis (TPU estimates) ===\n")
+    for rep in (
+        egnn_message_report(cfg),
+        mlp_head_report(cfg, backward=False),
+        mlp_head_report(cfg, backward=True),
+    ):
+        print(rep.render())
+        print()
+
+    print("=== block_edges sweep (egnn_message) ===")
+    print(f"{'block':>6} {'VMEM KiB':>10} {'MXU util':>9} {'FLOP/B':>8} {'fits':>5}")
+    best = None
+    # Tie-break on utilization by preferring the LARGEST block that stays
+    # under 25% of VMEM: fewer grid steps (less per-step overhead) while
+    # leaving room for double-buffering the next tile's DMA.
+    double_buffer_cap = VMEM_BYTES // 4
+    for be, vmem, util, inten, fits in sweep_block_sizes(cfg):
+        print(f"{be:>6} {vmem / 1024:>10.0f} {100 * util:>8.1f}% {inten:>8.1f} {str(fits):>5}")
+        grid = cfg.max_edges // be
+        # grid >= 2 keeps the DMA/compute pipeline alive; grid == 1 has
+        # nothing to overlap with.
+        if vmem <= double_buffer_cap and grid >= 2 and (best is None or util >= best[1]):
+            best = (be, util)
+    print(
+        f"-> selected block_edges={best[0]} "
+        f"(max MXU util, largest tile under the 25% double-buffer cap)\n"
+    )
+
+    print("=== paper-config projection (hidden=866, head=889) ===")
+    from .config import ModelConfig as MC
+    paper = MC(
+        max_nodes=1024, max_edges=8192, max_graphs=32,
+        hidden=866 + 6, num_layers=4, head_hidden=889 + 7,
+        block_edges=512, block_nodes=128,
+    )  # +pad to multiples of 8 for the tile math
+    rep = egnn_message_report(paper)
+    print(
+        f"egnn_message at paper width: MXU util "
+        f"{100 * rep.mxu_utilization:.1f}% "
+        f"(vs {100 * egnn_message_report(cfg).mxu_utilization:.1f}% at CPU-test width 64)\n"
+    )
+
+    print("=== L2 HLO audit ===")
+    for name in ("train_step", "eval_step", "fwd"):
+        path = os.path.join(args.artifacts, f"{name}.hlo.txt")
+        if not os.path.exists(path):
+            continue
+        ops = hlo_histogram(path)
+        total = sum(ops.values())
+        fusions = ops.get("fusion", 0)
+        dots = ops.get("dot", 0)
+        top = ", ".join(f"{k}:{v}" for k, v in ops.most_common(6))
+        print(f"{name:<12} {total:>5} ops | dot {dots:>3} | fusion {fusions:>3} | {top}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""AOT export tests: manifest consistency, determinism, HLO sanity."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model
+from compile.config import TINY
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.export_artifacts(TINY, str(out), quiet=True)
+    return str(out), manifest
+
+
+class TestManifest:
+    def test_all_artifacts_written(self, exported):
+        out, manifest = exported
+        for name, entry in manifest["artifacts"].items():
+            path = os.path.join(out, entry["file"])
+            assert os.path.exists(path), name
+            assert os.path.getsize(path) == entry["hlo_bytes"]
+
+    def test_manifest_roundtrips_as_json(self, exported):
+        out, manifest = exported
+        with open(os.path.join(out, "manifest.json")) as f:
+            loaded = json.load(f)
+        assert loaded["config"] == manifest["config"]
+        assert loaded["artifacts"].keys() == manifest["artifacts"].keys()
+
+    def test_input_count_matches_flattened_pytrees(self, exported):
+        _, manifest = exported
+        params = model.init_params(jax.random.PRNGKey(0), TINY)
+        batch = model.batch_spec(TINY)
+        n_params = len(jax.tree_util.tree_leaves(params))
+        n_batch = len(jax.tree_util.tree_leaves(batch))
+        ts = manifest["artifacts"]["train_step"]
+        assert len(ts["inputs"]) == n_params + n_batch
+
+    def test_train_step_outputs_are_grads_plus_metrics(self, exported):
+        _, manifest = exported
+        ts = manifest["artifacts"]["train_step"]
+        names = [o["name"] for o in ts["outputs"]]
+        assert "loss" in names and "mae_e" in names and "mae_f" in names
+        grads = [n for n in names if n.startswith("grads.")]
+        assert len(grads) == len(manifest["params"])
+
+    def test_grad_outputs_mirror_param_shapes(self, exported):
+        _, manifest = exported
+        ts = manifest["artifacts"]["train_step"]
+        by_name = {o["name"]: o for o in ts["outputs"]}
+        for p in manifest["params"]:
+            g = by_name["grads." + p["name"]]
+            assert g["shape"] == p["shape"]
+            assert g["dtype"] == p["dtype"]
+
+    def test_param_metadata_has_init_hints(self, exported):
+        _, manifest = exported
+        for p in manifest["params"]:
+            leaf = p["name"].rsplit(".", 1)[-1]
+            if leaf.startswith("w") and len(p["shape"]) == 2:
+                assert p["init"]["kind"] == "lecun"
+                assert p["init"]["fan_in"] == p["shape"][0]
+            elif leaf.startswith("b"):
+                assert p["init"]["kind"] == "zeros"
+
+    def test_batch_field_order_is_sorted(self, exported):
+        """Rust relies on dict-key sorted flatten order."""
+        _, manifest = exported
+        names = [b["name"] for b in manifest["batch"]]
+        assert names == sorted(names)
+
+    def test_encoder_params_prefix_of_names(self, exported):
+        _, manifest = exported
+        enc = {p["name"] for p in manifest["encoder_params"]}
+        full = {p["name"] for p in manifest["params"]}
+        assert {"encoder." + n for n in enc} <= full
+
+
+class TestDeterminism:
+    def test_export_is_deterministic(self, exported, tmp_path):
+        out1, manifest1 = exported
+        manifest2 = aot.export_artifacts(TINY, str(tmp_path), quiet=True)
+        for name in manifest1["artifacts"]:
+            assert (
+                manifest1["artifacts"][name]["sha256"]
+                == manifest2["artifacts"][name]["sha256"]
+            ), name
+
+
+class TestHloText:
+    def test_hlo_is_text_parsable_header(self, exported):
+        out, manifest = exported
+        for entry in manifest["artifacts"].values():
+            with open(os.path.join(out, entry["file"])) as f:
+                head = f.read(200)
+            assert head.startswith("HloModule"), entry["file"]
+
+    def test_no_mosaic_custom_calls(self, exported):
+        """interpret=True must have eliminated TPU-only custom calls."""
+        out, manifest = exported
+        for entry in manifest["artifacts"].values():
+            with open(os.path.join(out, entry["file"])) as f:
+                text = f.read()
+            assert "tpu_custom_call" not in text, entry["file"]
+            assert "mosaic" not in text.lower(), entry["file"]
+
+
+class TestOverrides:
+    def test_parse_overrides(self):
+        out = aot.parse_overrides(["hidden=32", "cutoff=5.5"])
+        assert out == {"hidden": 32, "cutoff": 5.5}
+
+    def test_parse_overrides_rejects_unknown(self):
+        with pytest.raises(SystemExit):
+            aot.parse_overrides(["nope=1"])

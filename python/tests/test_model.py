@@ -1,0 +1,159 @@
+"""L2 model tests: shapes, masking, symmetry, gradient flow."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import TINY
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return TINY
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return model.init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def batch(cfg):
+    return model.random_batch(jax.random.PRNGKey(1), cfg)
+
+
+class TestShapes:
+    def test_forward_shapes(self, params, batch, cfg):
+        e_pa, forces = model.forward(params, batch, cfg)
+        assert e_pa.shape == (cfg.max_graphs,)
+        assert forces.shape == (cfg.max_nodes, 3)
+
+    def test_encoder_shapes(self, params, batch, cfg):
+        h, v = model.encoder_apply(params["encoder"], batch, cfg)
+        assert h.shape == (cfg.max_nodes, cfg.hidden)
+        assert v.shape == (cfg.max_nodes, 3)
+
+    def test_train_step_outputs(self, params, batch, cfg):
+        out = model.make_train_step(cfg)(params, batch)
+        assert out["loss"].shape == ()
+        grads_flat = jax.tree_util.tree_leaves(out["grads"])
+        params_flat = jax.tree_util.tree_leaves(params)
+        assert len(grads_flat) == len(params_flat)
+        for g, p in zip(grads_flat, params_flat):
+            assert g.shape == p.shape
+
+    def test_all_grads_finite_and_nonzero_somewhere(self, params, batch, cfg):
+        out = model.make_train_step(cfg)(params, batch)
+        leaves = jax.tree_util.tree_leaves(out["grads"])
+        assert all(np.isfinite(np.asarray(g)).all() for g in leaves)
+        total = sum(float(jnp.sum(jnp.abs(g))) for g in leaves)
+        assert total > 0.0
+
+
+class TestMasking:
+    def test_padding_nodes_have_zero_output(self, params, batch, cfg):
+        _, forces = model.forward(params, batch, cfg)
+        pad = np.asarray(batch["node_mask"]) == 0
+        assert np.abs(np.asarray(forces)[pad]).max() == 0.0
+
+    def test_padding_graphs_have_zero_energy(self, params, batch, cfg):
+        e_pa, _ = model.forward(params, batch, cfg)
+        pad = np.asarray(batch["graph_mask"]) == 0
+        if pad.any():
+            assert np.abs(np.asarray(e_pa)[pad]).max() == 0.0
+
+    def test_garbage_in_padding_does_not_change_result(self, params, batch, cfg):
+        """Corrupting padded node/edge slots must not change predictions."""
+        e_pa0, f0 = model.forward(params, batch, cfg)
+        b = dict(batch)
+        nmask = np.asarray(batch["node_mask"])
+        emask = np.asarray(batch["edge_mask"])
+        species = np.asarray(batch["species"]).copy()
+        species[nmask == 0] = 7  # garbage species in padding
+        yf = np.asarray(batch["y_forces"]).copy()
+        yf[nmask == 0] = 99.0
+        b["species"] = jnp.asarray(species)
+        b["y_forces"] = jnp.asarray(yf)
+        e_pa1, f1 = model.forward(params, b, cfg)
+        np.testing.assert_allclose(e_pa0, e_pa1, rtol=1e-6, atol=1e-6)
+        real = nmask > 0
+        np.testing.assert_allclose(
+            np.asarray(f0)[real], np.asarray(f1)[real], rtol=1e-6, atol=1e-6
+        )
+
+
+class TestSymmetry:
+    def test_energy_rotation_invariant_forces_equivariant(self, params, batch, cfg):
+        """Rotating every edge geometry rotates forces, leaves energy fixed."""
+        rng = np.random.default_rng(0)
+        # A random rotation matrix via QR.
+        q, _ = np.linalg.qr(rng.normal(0, 1, (3, 3)))
+        if np.linalg.det(q) < 0:
+            q[:, 0] *= -1
+        q = q.astype(np.float32)
+
+        e0, f0 = model.forward(params, batch, cfg)
+        b = dict(batch)
+        b["rel_hat"] = jnp.asarray(np.asarray(batch["rel_hat"]) @ q.T)
+        e1, f1 = model.forward(params, b, cfg)
+        np.testing.assert_allclose(e0, e1, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(f0) @ q.T, np.asarray(f1), rtol=1e-3, atol=1e-4
+        )
+
+    def test_node_permutation_equivariance_of_energy(self, params, batch, cfg):
+        """Relabeling atoms within the batch must not change graph energies."""
+        perm = np.random.default_rng(3).permutation(cfg.max_nodes)
+        inv = np.argsort(perm)
+        b = dict(batch)
+        for k in ("species", "node_mask", "node_graph"):
+            b[k] = jnp.asarray(np.asarray(batch[k])[perm])
+        b["y_forces"] = jnp.asarray(np.asarray(batch["y_forces"])[perm])
+        # edges: remap endpoints through the inverse permutation
+        b["edge_src"] = jnp.asarray(inv[np.asarray(batch["edge_src"])].astype(np.int32))
+        b["edge_dst"] = jnp.asarray(inv[np.asarray(batch["edge_dst"])].astype(np.int32))
+        e0, _ = model.forward(params, batch, cfg)
+        e1, _ = model.forward(params, b, cfg)
+        np.testing.assert_allclose(e0, e1, rtol=1e-4, atol=1e-5)
+
+
+class TestTraining:
+    def test_loss_decreases_under_sgd(self, cfg):
+        """A few SGD steps on one batch must reduce the loss (sanity)."""
+        params = model.init_params(jax.random.PRNGKey(7), cfg)
+        batch = model.random_batch(jax.random.PRNGKey(8), cfg)
+        step = jax.jit(model.make_train_step(cfg))
+        losses = []
+        lr = 3e-3
+        for _ in range(8):
+            out = step(params, batch)
+            losses.append(float(out["loss"]))
+            params = jax.tree_util.tree_map(
+                lambda p, g: p - lr * g, params, out["grads"]
+            )
+        assert losses[-1] < losses[0], losses
+
+    def test_eval_step_matches_train_step_metrics(self, params, batch, cfg):
+        tr = model.make_train_step(cfg)(params, batch)
+        ev = model.make_eval_step(cfg)(params, batch)
+        np.testing.assert_allclose(tr["loss"], ev["loss"], rtol=1e-6)
+        np.testing.assert_allclose(tr["mae_e"], ev["mae_e"], rtol=1e-6)
+        np.testing.assert_allclose(tr["mae_f"], ev["mae_f"], rtol=1e-6)
+
+    def test_branch_swap_changes_predictions_encoder_shared(self, batch, cfg):
+        """Two branches over the same encoder: the MTL split point."""
+        p1 = model.init_params(jax.random.PRNGKey(0), cfg)
+        branch2 = model.init_branch(jax.random.PRNGKey(99), cfg)
+        p2 = {"encoder": p1["encoder"], "branch": branch2}
+        e1, _ = model.forward(p1, batch, cfg)
+        e2, _ = model.forward(p2, batch, cfg)
+        gm = np.asarray(batch["graph_mask"]) > 0
+        assert np.abs(np.asarray(e1 - e2)[gm]).max() > 1e-6
+
+    def test_config_post_init_rejects_bad_tiling(self):
+        with pytest.raises(AssertionError):
+            dataclasses.replace(TINY, max_edges=33)

@@ -1,0 +1,70 @@
+"""Tests for the L1/L2 structural performance analyzer."""
+
+import dataclasses
+import os
+
+import pytest
+
+from compile import perf
+from compile.config import DEFAULT, ModelConfig
+
+
+class TestKernelReports:
+    def test_vmem_within_budget_at_default_config(self):
+        for rep in (
+            perf.egnn_message_report(DEFAULT),
+            perf.mlp_head_report(DEFAULT),
+            perf.mlp_head_report(DEFAULT, backward=True),
+        ):
+            assert rep.vmem_bytes < perf.VMEM_BYTES, rep.name
+            assert rep.flops > 0
+            assert rep.hbm_bytes > 0
+            assert 0.0 < rep.mxu_utilization <= 1.0
+
+    def test_paper_width_nearly_saturates_mxu(self):
+        paper = ModelConfig(
+            max_nodes=1024, max_edges=8192, max_graphs=32,
+            hidden=872, num_layers=4, head_hidden=896,
+            block_edges=512, block_nodes=128,
+        )
+        rep = perf.egnn_message_report(paper)
+        assert rep.mxu_utilization > 0.9, rep.mxu_utilization
+
+    def test_wider_hidden_raises_utilization(self):
+        small = perf.egnn_message_report(DEFAULT)
+        wide = perf.egnn_message_report(
+            dataclasses.replace(DEFAULT, hidden=128)
+        )
+        assert wide.mxu_utilization > small.mxu_utilization
+
+    def test_sweep_is_monotone_in_vmem(self):
+        rows = perf.sweep_block_sizes(DEFAULT)
+        vmems = [r[1] for r in rows]
+        assert vmems == sorted(vmems)
+        # Utilization does not depend on the block size here (tiling keeps
+        # the same matmul aspect ratios) but VMEM grows.
+        assert len({round(r[2], 6) for r in rows}) == 1
+
+
+class TestMatmulShape:
+    def test_full_tiles_are_perfect(self):
+        m = perf.MatmulShape("x", 128, 128, 128)
+        assert m.mxu_utilization == 1.0
+
+    def test_narrow_output_is_poor(self):
+        m = perf.MatmulShape("gate", 256, 64, 1)
+        assert m.mxu_utilization < 0.05
+
+    def test_flops(self):
+        assert perf.MatmulShape("x", 2, 3, 4).flops == 48
+
+
+class TestHloAudit:
+    @pytest.mark.skipif(
+        not os.path.exists("../artifacts/train_step.hlo.txt"),
+        reason="artifacts not built",
+    )
+    def test_histogram_finds_dots(self):
+        ops = perf.hlo_histogram("../artifacts/train_step.hlo.txt")
+        assert ops.get("dot", 0) > 10
+        assert sum(ops.values()) > 100

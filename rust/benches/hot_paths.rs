@@ -1,0 +1,115 @@
+//! Micro-benchmarks of every L3 hot path (harness = util::timer; criterion
+//! is unavailable offline). Run with `cargo bench --bench hot_paths`.
+//! These numbers feed EXPERIMENTS.md §Perf.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hydra_mtp::comm::Comm;
+use hydra_mtp::data::batch::{BatchBuilder, GraphBatch};
+use hydra_mtp::data::generators::{DatasetGenerator, GeneratorConfig};
+use hydra_mtp::data::graph::radius_graph;
+use hydra_mtp::data::structures::{AtomicStructure, DatasetId};
+use hydra_mtp::model::optimizer::{AdamW, AdamWConfig};
+use hydra_mtp::model::params::ParamSet;
+use hydra_mtp::runtime::Engine;
+use hydra_mtp::util::timer::{bench, bench_n};
+
+fn samples(n: usize, max_atoms: usize) -> Vec<AtomicStructure> {
+    let mut g = DatasetGenerator::new(
+        DatasetId::Ani1x,
+        2025,
+        GeneratorConfig { max_atoms, ..Default::default() },
+    );
+    g.take(n)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== hydra-mtp hot-path benchmarks ==\n");
+    let budget = Duration::from_millis(600);
+
+    // --- data path ---
+    let ss = samples(64, 16);
+    println!("{}", bench("radius_graph (16-atom molecule)", 3, budget, || {
+        std::hint::black_box(radius_graph(&ss[0], 6.0));
+    }).report());
+
+    let engine = Arc::new(Engine::load("artifacts")?);
+    let dims = engine.manifest.config.batch_dims();
+    let cutoff = engine.manifest.config.cutoff;
+    println!("{}", bench("batch assembly (64 structures)", 2, budget, || {
+        std::hint::black_box(BatchBuilder::build_all(dims, cutoff, &ss));
+    }).report());
+
+    let batches = BatchBuilder::build_all(dims, cutoff, &ss);
+    let batch: &GraphBatch = &batches[0];
+
+    // --- gpack io ---
+    let path = std::env::temp_dir().join(format!("hydra_bench_{}.gpack", std::process::id()));
+    hydra_mtp::data::pack::write_all(&path, &ss)?;
+    let mut reader = hydra_mtp::data::pack::GPackReader::open(&path)?;
+    let mut i = 0usize;
+    println!("{}", bench("gpack random read", 5, budget, || {
+        i = (i * 7 + 1) % reader.len();
+        std::hint::black_box(reader.read(i).unwrap());
+    }).report());
+    std::fs::remove_file(&path).ok();
+
+    // --- runtime path ---
+    let params = ParamSet::init(&engine.manifest.params, 1);
+    println!("{}", bench_n("marshal train_step inputs", 200, || {
+        std::hint::black_box(engine.marshal("train_step", &params, batch).unwrap());
+    }).report());
+
+    println!("{}", bench_n("train_step (fwd+bwd, full batch)", 20, || {
+        std::hint::black_box(engine.train_step(&params, batch).unwrap());
+    }).report());
+
+    println!("{}", bench_n("eval_step (fwd only)", 30, || {
+        std::hint::black_box(engine.eval_step(&params, batch).unwrap());
+    }).report());
+
+    // --- optimizer ---
+    let grads = {
+        let out = engine.train_step(&params, batch)?;
+        out.grads
+    };
+    let mut opt_params = ParamSet::init(&engine.manifest.params, 2);
+    let mut opt = AdamW::new(AdamWConfig::default(), &opt_params);
+    println!("{}", bench("adamw step (full model)", 3, budget, || {
+        opt.step(&mut opt_params, &grads);
+    }).report());
+
+    // --- gradient sync prep: before/after the §Perf L3 iteration ---
+    println!("{}", bench("grad sync prep OLD subset+flatten", 3, budget, || {
+        std::hint::black_box(grads.subset("encoder.").flatten());
+    }).report());
+    let mut flat_buf: Vec<f32> = Vec::new();
+    println!("{}", bench("grad sync prep NEW flatten_prefix", 3, budget, || {
+        grads.flatten_prefix_into("encoder.", &mut flat_buf);
+        std::hint::black_box(&flat_buf);
+    }).report());
+
+    // --- collectives across group sizes and payloads ---
+    for group in [2usize, 4, 8] {
+        for len in [10_000usize, 250_000] {
+            let name = format!("allreduce_mean x{group} ({} Kf32)", len / 1000);
+            let stats = bench_n(&name, 40, || {
+                let comms = Comm::group(group);
+                std::thread::scope(|s| {
+                    for c in comms {
+                        s.spawn(move || {
+                            let mut data = vec![1.0f32; len];
+                            c.allreduce_mean(&mut data);
+                            std::hint::black_box(&data);
+                        });
+                    }
+                });
+            });
+            println!("{}", stats.report());
+        }
+    }
+
+    println!("\ntotal executions against PJRT: {}", engine.executions());
+    Ok(())
+}

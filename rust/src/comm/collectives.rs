@@ -1,0 +1,299 @@
+//! Shared-memory collective operations over a group of rank threads.
+//!
+//! The trainer's "processes" are OS threads (one per simulated GPU); a
+//! `Comm` is one member's handle to a process group, with NCCL-style
+//! collectives implemented as a sense-gated rendezvous: ranks accumulate
+//! into a shared buffer, the last arrival finalizes, everyone copies out,
+//! and the round drains before the next may begin. Numerically this is
+//! exactly the averaging a ring allreduce performs; the *cost* of the ring
+//! on a real fabric is priced separately by `scalesim` (same code path, a
+//! virtual clock instead of a wall clock).
+//!
+//! Traffic counters record every payload so tests and the scaling study can
+//! verify the paper's key claim: multi-task parallelism replaces one global
+//! `P_s + N_h*P_h` allreduce with a global `P_s` allreduce plus per-head
+//! local `P_h` allreduces.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+#[derive(Default)]
+struct RoundState {
+    accum: Vec<f64>,
+    arrived: usize,
+    departing: usize,
+}
+
+struct Shared {
+    size: usize,
+    state: Mutex<RoundState>,
+    cv: Condvar,
+    /// Total f32 elements pushed through allreduce on this communicator.
+    reduced_elems: AtomicU64,
+    /// Number of collective rounds completed.
+    rounds: AtomicU64,
+}
+
+/// One member's handle to a process group.
+#[derive(Clone)]
+pub struct Comm {
+    shared: Arc<Shared>,
+    pub rank_in_group: usize,
+}
+
+impl Comm {
+    /// Create a group of `n` communicator handles (one per member thread).
+    pub fn group(n: usize) -> Vec<Comm> {
+        assert!(n > 0);
+        let shared = Arc::new(Shared {
+            size: n,
+            state: Mutex::new(RoundState::default()),
+            cv: Condvar::new(),
+            reduced_elems: AtomicU64::new(0),
+            rounds: AtomicU64::new(0),
+        });
+        (0..n).map(|i| Comm { shared: Arc::clone(&shared), rank_in_group: i }).collect()
+    }
+
+    pub fn size(&self) -> usize {
+        self.shared.size
+    }
+
+    /// Elementwise mean across the group, in place. All members must call.
+    pub fn allreduce_mean(&self, data: &mut [f32]) {
+        self.reduce(data, true);
+    }
+
+    /// Elementwise sum across the group, in place.
+    pub fn allreduce_sum(&self, data: &mut [f32]) {
+        self.reduce(data, false);
+    }
+
+    fn reduce(&self, data: &mut [f32], mean: bool) {
+        let sh = &self.shared;
+        if sh.size == 1 {
+            sh.rounds.fetch_add(1, Ordering::Relaxed);
+            sh.reduced_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
+            return;
+        }
+        let mut st = sh.state.lock().unwrap();
+        // Gate: previous round must fully drain first.
+        while st.departing > 0 {
+            st = sh.cv.wait(st).unwrap();
+        }
+        // Accumulate in f64: the deterministic, order-insensitive part of
+        // this rendezvous matters less than numeric parity across group
+        // sizes, and f64 accumulation keeps DDP means stable.
+        if st.arrived == 0 {
+            st.accum.clear();
+            st.accum.extend(data.iter().map(|&x| x as f64));
+        } else {
+            for (a, &x) in st.accum.iter_mut().zip(data.iter()) {
+                *a += x as f64;
+            }
+        }
+        st.arrived += 1;
+        if st.arrived == sh.size {
+            if mean {
+                let inv = 1.0 / sh.size as f64;
+                for a in st.accum.iter_mut() {
+                    *a *= inv;
+                }
+            }
+            st.arrived = 0;
+            st.departing = sh.size;
+            sh.rounds.fetch_add(1, Ordering::Relaxed);
+            sh.reduced_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
+            sh.cv.notify_all();
+        } else {
+            while st.departing == 0 {
+                st = sh.cv.wait(st).unwrap();
+            }
+        }
+        for (x, &a) in data.iter_mut().zip(st.accum.iter()) {
+            *x = a as f32;
+        }
+        st.departing -= 1;
+        if st.departing == 0 {
+            sh.cv.notify_all();
+        }
+    }
+
+    /// Broadcast `data` from `root` to every member, in place.
+    pub fn broadcast(&self, root: usize, data: &mut [f32]) {
+        let sh = &self.shared;
+        if sh.size == 1 {
+            return;
+        }
+        let mut st = sh.state.lock().unwrap();
+        while st.departing > 0 {
+            st = sh.cv.wait(st).unwrap();
+        }
+        if self.rank_in_group == root {
+            st.accum.clear();
+            st.accum.extend(data.iter().map(|&x| x as f64));
+        }
+        st.arrived += 1;
+        if st.arrived == sh.size {
+            st.arrived = 0;
+            st.departing = sh.size;
+            sh.rounds.fetch_add(1, Ordering::Relaxed);
+            sh.cv.notify_all();
+        } else {
+            while st.departing == 0 {
+                st = sh.cv.wait(st).unwrap();
+            }
+        }
+        // Root may have arrived last; accum is valid in either case because
+        // only the root writes it and every writer-arrival precedes release.
+        for (x, &a) in data.iter_mut().zip(st.accum.iter()) {
+            *x = a as f32;
+        }
+        st.departing -= 1;
+        if st.departing == 0 {
+            sh.cv.notify_all();
+        }
+    }
+
+    /// Barrier across the group.
+    pub fn barrier(&self) {
+        let mut unit = [0f32; 0];
+        self.reduce(&mut unit, false);
+    }
+
+    /// Allgather of one f64 per rank (metrics aggregation).
+    pub fn allgather_f64(&self, value: f64) -> Vec<f64> {
+        let n = self.shared.size;
+        let mut slots = vec![0f32; 2 * n];
+        // Encode f64 as two f32 halves to reuse the f32 reduce path without
+        // precision loss on metric magnitudes: hi = f32(value), lo = f32(value - hi).
+        let hi = value as f32;
+        let lo = (value - hi as f64) as f32;
+        slots[2 * self.rank_in_group] = hi;
+        slots[2 * self.rank_in_group + 1] = lo;
+        self.allreduce_sum(&mut slots);
+        (0..n).map(|i| slots[2 * i] as f64 + slots[2 * i + 1] as f64).collect()
+    }
+
+    /// (total f32 elements allreduced, completed rounds).
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.shared.reduced_elems.load(Ordering::Relaxed),
+            self.shared.rounds.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn run_group<T: Send + 'static>(
+        n: usize,
+        f: impl Fn(Comm) -> T + Send + Sync + Clone + 'static,
+    ) -> Vec<T> {
+        let comms = Comm::group(n);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                let f = f.clone();
+                thread::spawn(move || f(c))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn allreduce_mean_averages() {
+        let results = run_group(4, |c| {
+            let mut data = vec![c.rank_in_group as f32; 8];
+            c.allreduce_mean(&mut data);
+            data
+        });
+        for r in results {
+            for x in r {
+                assert!((x - 1.5).abs() < 1e-6); // mean of 0,1,2,3
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_sum_sums() {
+        let results = run_group(3, |c| {
+            let mut data = vec![1.0f32, 2.0];
+            c.allreduce_sum(&mut data);
+            data
+        });
+        for r in results {
+            assert_eq!(r, vec![3.0, 6.0]);
+        }
+    }
+
+    #[test]
+    fn repeated_rounds_do_not_interleave() {
+        let results = run_group(4, |c| {
+            let mut out = Vec::new();
+            for round in 0..50 {
+                let mut data = vec![(c.rank_in_group * 100 + round) as f32];
+                c.allreduce_mean(&mut data);
+                out.push(data[0]);
+            }
+            out
+        });
+        // mean over ranks of (rank*100 + round) = 150 + round.
+        for r in &results {
+            for (round, &x) in r.iter().enumerate() {
+                assert!((x - (150.0 + round as f32)).abs() < 1e-4, "round {round}: {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_from_each_root() {
+        for root in 0..3 {
+            let results = run_group(3, move |c| {
+                let mut data = if c.rank_in_group == root {
+                    vec![42.0f32, 7.0]
+                } else {
+                    vec![0.0, 0.0]
+                };
+                c.broadcast(root, &mut data);
+                data
+            });
+            for r in results {
+                assert_eq!(r, vec![42.0, 7.0], "root {root}");
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_collects_per_rank_values() {
+        let results = run_group(4, |c| c.allgather_f64(c.rank_in_group as f64 * 1.5));
+        for r in results {
+            assert_eq!(r, vec![0.0, 1.5, 3.0, 4.5]);
+        }
+    }
+
+    #[test]
+    fn single_member_group_is_identity() {
+        let comms = Comm::group(1);
+        let mut data = vec![3.0f32, 4.0];
+        comms[0].allreduce_mean(&mut data);
+        assert_eq!(data, vec![3.0, 4.0]);
+        comms[0].barrier();
+    }
+
+    #[test]
+    fn stats_count_traffic() {
+        let results = run_group(2, |c| {
+            let mut d = vec![0f32; 10];
+            c.allreduce_mean(&mut d);
+            c.stats()
+        });
+        for (elems, rounds) in results {
+            assert_eq!(elems, 10);
+            assert_eq!(rounds, 1);
+        }
+    }
+}

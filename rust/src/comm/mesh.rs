@@ -1,0 +1,145 @@
+//! DeviceMesh: the 2D process organization of the paper (Figure 3, right).
+//!
+//! Ranks form an `num_heads x replicas` mesh:
+//!   - one **global group** over all ranks synchronizes the shared MPNN
+//!     encoder gradients (the paper's "one global group ... DDP"),
+//!   - `num_heads` **head sub-groups** of `replicas` ranks each synchronize
+//!     one MTL output head's gradients ("N sub-process groups, each with M
+//!     processes, perform local DDPs").
+//!
+//! This mirrors `torch.distributed.DeviceMesh` with (head, replica) axes.
+
+use crate::comm::collectives::Comm;
+
+/// Mesh geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MeshShape {
+    pub num_heads: usize,
+    pub replicas: usize,
+}
+
+impl MeshShape {
+    pub fn world_size(&self) -> usize {
+        self.num_heads * self.replicas
+    }
+
+    /// rank -> (head, replica). Ranks are laid out head-major, matching the
+    /// paper's contiguous sub-groups.
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        assert!(rank < self.world_size());
+        (rank / self.replicas, rank % self.replicas)
+    }
+
+    pub fn rank_of(&self, head: usize, replica: usize) -> usize {
+        assert!(head < self.num_heads && replica < self.replicas);
+        head * self.replicas + replica
+    }
+}
+
+/// One rank's view of the mesh: its coordinates plus communicator handles
+/// for the global group and its head sub-group.
+pub struct MeshRank {
+    pub rank: usize,
+    pub head: usize,
+    pub replica: usize,
+    pub shape: MeshShape,
+    /// All ranks: encoder-gradient DDP.
+    pub global: Comm,
+    /// This rank's head sub-group: head-gradient local DDP.
+    pub head_group: Comm,
+}
+
+/// Build every rank's mesh view. The returned vec is indexed by rank and is
+/// meant to be moved into the rank threads.
+pub fn build_mesh(shape: MeshShape) -> Vec<MeshRank> {
+    let world = shape.world_size();
+    assert!(world > 0);
+    let global = Comm::group(world);
+    let mut head_groups: Vec<Vec<Comm>> =
+        (0..shape.num_heads).map(|_| Comm::group(shape.replicas)).collect();
+
+    let mut out = Vec::with_capacity(world);
+    for (rank, global_comm) in global.into_iter().enumerate() {
+        let (head, replica) = shape.coords(rank);
+        // Pull this rank's handle out of its head group (replica-indexed).
+        let head_comm = std::mem::replace(
+            &mut head_groups[head][replica],
+            // Placeholder that is never used again.
+            Comm::group(1).pop().unwrap(),
+        );
+        out.push(MeshRank {
+            rank,
+            head,
+            replica,
+            shape,
+            global: global_comm,
+            head_group: head_comm,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn coords_roundtrip() {
+        let shape = MeshShape { num_heads: 5, replicas: 4 };
+        for rank in 0..shape.world_size() {
+            let (h, r) = shape.coords(rank);
+            assert_eq!(shape.rank_of(h, r), rank);
+        }
+    }
+
+    #[test]
+    fn subgroups_are_contiguous_head_major() {
+        let shape = MeshShape { num_heads: 3, replicas: 2 };
+        assert_eq!(shape.coords(0), (0, 0));
+        assert_eq!(shape.coords(1), (0, 1));
+        assert_eq!(shape.coords(2), (1, 0));
+        assert_eq!(shape.coords(5), (2, 1));
+    }
+
+    #[test]
+    fn head_groups_reduce_independently_global_reduces_all() {
+        let shape = MeshShape { num_heads: 2, replicas: 2 };
+        let ranks = build_mesh(shape);
+        let handles: Vec<_> = ranks
+            .into_iter()
+            .map(|mr| {
+                thread::spawn(move || {
+                    // Head-group mean of the rank id: head 0 has ranks {0,1}
+                    // -> 0.5; head 1 has ranks {2,3} -> 2.5.
+                    let mut head_val = vec![mr.rank as f32];
+                    mr.head_group.allreduce_mean(&mut head_val);
+                    // Global mean of the rank id: 1.5.
+                    let mut global_val = vec![mr.rank as f32];
+                    mr.global.allreduce_mean(&mut global_val);
+                    (mr.head, head_val[0], global_val[0])
+                })
+            })
+            .collect();
+        for h in handles {
+            let (head, head_mean, global_mean) = h.join().unwrap();
+            let expected = if head == 0 { 0.5 } else { 2.5 };
+            assert!((head_mean - expected).abs() < 1e-6);
+            assert!((global_mean - 1.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mesh_rank_metadata_consistent() {
+        let shape = MeshShape { num_heads: 2, replicas: 3 };
+        let ranks = build_mesh(shape);
+        assert_eq!(ranks.len(), 6);
+        for (i, mr) in ranks.iter().enumerate() {
+            assert_eq!(mr.rank, i);
+            assert_eq!((mr.head, mr.replica), shape.coords(i));
+            assert_eq!(mr.global.size(), 6);
+            assert_eq!(mr.head_group.size(), 3);
+            assert_eq!(mr.head_group.rank_in_group, mr.replica);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Communication layer: shared-memory collectives over rank threads and the
+//! 2D DeviceMesh (global encoder group x per-head sub-groups) that carries
+//! the paper's multi-task-parallel + DDP gradient synchronization.
+
+pub mod collectives;
+pub mod mesh;
+
+pub use collectives::Comm;
+pub use mesh::{build_mesh, MeshRank, MeshShape};

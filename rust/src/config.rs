@@ -1,0 +1,313 @@
+//! Run configuration: typed config structs with JSON load/save and presets
+//! mirroring the paper's experimental setups (Section 5).
+
+use std::path::Path;
+
+use crate::data::structures::DatasetId;
+use crate::util::json::Json;
+
+/// How the model is trained (the seven models of Tables 1-2 plus modes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainMode {
+    /// One dataset, one branch (the five `Model-<dataset>` baselines).
+    Single(DatasetId),
+    /// All datasets mixed through ONE shared branch (`GFM-Baseline-All`).
+    BaselineAll,
+    /// Two-level MTL, one branch per dataset, plain DDP (`MTL-base`):
+    /// every rank holds all heads.
+    MtlBase,
+    /// Two-level MTL with multi-task parallelism (`MTL-par`): each rank
+    /// holds the shared encoder + exactly one head; 2D mesh DDP.
+    MtlPar,
+}
+
+impl TrainMode {
+    pub fn name(&self) -> String {
+        match self {
+            TrainMode::Single(d) => format!("Model-{}", d.name()),
+            TrainMode::BaselineAll => "GFM-Baseline-All".to_string(),
+            TrainMode::MtlBase => "GFM-MTL-All (MTL-base)".to_string(),
+            TrainMode::MtlPar => "GFM-MTL-All (MTL-par)".to_string(),
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<TrainMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "baseline-all" | "baseline" => Ok(TrainMode::BaselineAll),
+            "mtl-base" | "mtlbase" => Ok(TrainMode::MtlBase),
+            "mtl-par" | "mtlpar" => Ok(TrainMode::MtlPar),
+            other => DatasetId::from_name(other)
+                .map(TrainMode::Single)
+                .ok_or_else(|| anyhow::anyhow!("unknown train mode '{s}'")),
+        }
+    }
+}
+
+/// Data generation / loading settings.
+#[derive(Debug, Clone)]
+pub struct DataConfig {
+    pub seed: u64,
+    /// Samples generated per source dataset.
+    pub per_dataset: usize,
+    pub max_atoms: usize,
+    /// Graph cutoff; must match the cutoff baked into the artifacts' RBF.
+    pub cutoff: f64,
+    pub train_frac: f64,
+    pub val_frac: f64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            seed: 2025,
+            per_dataset: 256,
+            max_atoms: 24,
+            cutoff: 6.0,
+            train_frac: 0.8,
+            val_frac: 0.1,
+        }
+    }
+}
+
+/// Optimizer / schedule settings (paper: AdamW, lr 1e-3, local batch 128).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub grad_clip: f64,
+    pub epochs: usize,
+    /// Early stopping patience in epochs (0 disables).
+    pub patience: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            lr: 1e-3,
+            weight_decay: 1e-4,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            grad_clip: 10.0,
+            epochs: 10,
+            patience: 3,
+            seed: 7,
+        }
+    }
+}
+
+/// Mesh geometry for the parallel modes.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelConfig {
+    /// Replicas per head sub-group (M in Figure 3). Head count comes from
+    /// the number of datasets in play.
+    pub replicas: usize,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        ParallelConfig { replicas: 1 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub artifacts_dir: String,
+    pub mode: TrainMode,
+    pub data: DataConfig,
+    pub train: TrainConfig,
+    pub parallel: ParallelConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: "artifacts".to_string(),
+            mode: TrainMode::MtlPar,
+            data: DataConfig::default(),
+            train: TrainConfig::default(),
+            parallel: ParallelConfig::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.train.lr > 0.0, "lr must be positive");
+        anyhow::ensure!(self.train.epochs > 0, "epochs must be positive");
+        anyhow::ensure!(self.parallel.replicas > 0, "replicas must be positive");
+        anyhow::ensure!(self.data.per_dataset > 0, "per_dataset must be positive");
+        anyhow::ensure!(
+            self.data.train_frac + self.data.val_frac < 1.0 + 1e-12,
+            "train+val fractions exceed 1"
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mode = match self.mode {
+            TrainMode::Single(d) => d.name().to_string(),
+            TrainMode::BaselineAll => "baseline-all".to_string(),
+            TrainMode::MtlBase => "mtl-base".to_string(),
+            TrainMode::MtlPar => "mtl-par".to_string(),
+        };
+        Json::obj(vec![
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+            ("mode", Json::str(mode)),
+            (
+                "data",
+                Json::obj(vec![
+                    ("seed", Json::from(self.data.seed as i64)),
+                    ("per_dataset", Json::from(self.data.per_dataset)),
+                    ("max_atoms", Json::from(self.data.max_atoms)),
+                    ("cutoff", Json::from(self.data.cutoff)),
+                    ("train_frac", Json::from(self.data.train_frac)),
+                    ("val_frac", Json::from(self.data.val_frac)),
+                ]),
+            ),
+            (
+                "train",
+                Json::obj(vec![
+                    ("lr", Json::from(self.train.lr)),
+                    ("weight_decay", Json::from(self.train.weight_decay)),
+                    ("beta1", Json::from(self.train.beta1)),
+                    ("beta2", Json::from(self.train.beta2)),
+                    ("eps", Json::from(self.train.eps)),
+                    ("grad_clip", Json::from(self.train.grad_clip)),
+                    ("epochs", Json::from(self.train.epochs)),
+                    ("patience", Json::from(self.train.patience)),
+                    ("seed", Json::from(self.train.seed as i64)),
+                ]),
+            ),
+            (
+                "parallel",
+                Json::obj(vec![("replicas", Json::from(self.parallel.replicas))]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(s) = j.get("artifacts_dir").as_str() {
+            cfg.artifacts_dir = s.to_string();
+        }
+        if let Some(s) = j.get("mode").as_str() {
+            cfg.mode = TrainMode::parse(s)?;
+        }
+        let d = j.get("data");
+        if let Some(v) = d.get("seed").as_i64() {
+            cfg.data.seed = v as u64;
+        }
+        if let Some(v) = d.get("per_dataset").as_i64() {
+            cfg.data.per_dataset = v as usize;
+        }
+        if let Some(v) = d.get("max_atoms").as_i64() {
+            cfg.data.max_atoms = v as usize;
+        }
+        if let Some(v) = d.get("cutoff").as_f64() {
+            cfg.data.cutoff = v;
+        }
+        if let Some(v) = d.get("train_frac").as_f64() {
+            cfg.data.train_frac = v;
+        }
+        if let Some(v) = d.get("val_frac").as_f64() {
+            cfg.data.val_frac = v;
+        }
+        let t = j.get("train");
+        if let Some(v) = t.get("lr").as_f64() {
+            cfg.train.lr = v;
+        }
+        if let Some(v) = t.get("weight_decay").as_f64() {
+            cfg.train.weight_decay = v;
+        }
+        if let Some(v) = t.get("beta1").as_f64() {
+            cfg.train.beta1 = v;
+        }
+        if let Some(v) = t.get("beta2").as_f64() {
+            cfg.train.beta2 = v;
+        }
+        if let Some(v) = t.get("eps").as_f64() {
+            cfg.train.eps = v;
+        }
+        if let Some(v) = t.get("grad_clip").as_f64() {
+            cfg.train.grad_clip = v;
+        }
+        if let Some(v) = t.get("epochs").as_i64() {
+            cfg.train.epochs = v as usize;
+        }
+        if let Some(v) = t.get("patience").as_i64() {
+            cfg.train.patience = v as usize;
+        }
+        if let Some(v) = t.get("seed").as_i64() {
+            cfg.train.seed = v as u64;
+        }
+        if let Some(v) = j.get("parallel").get("replicas").as_i64() {
+            cfg.parallel.replicas = v as usize;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        RunConfig::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = RunConfig::default();
+        cfg.mode = TrainMode::Single(DatasetId::MpTrj);
+        cfg.train.lr = 0.005;
+        cfg.parallel.replicas = 4;
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.mode, cfg.mode);
+        assert_eq!(back.train.lr, 0.005);
+        assert_eq!(back.parallel.replicas, 4);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(TrainMode::parse("mtl-par").unwrap(), TrainMode::MtlPar);
+        assert_eq!(TrainMode::parse("baseline-all").unwrap(), TrainMode::BaselineAll);
+        assert_eq!(
+            TrainMode::parse("ANI1x").unwrap(),
+            TrainMode::Single(DatasetId::Ani1x)
+        );
+        assert!(TrainMode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut cfg = RunConfig::default();
+        cfg.train.lr = -1.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.parallel.replicas = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("hydra_mtp_cfg_{}.json", std::process::id()));
+        let cfg = RunConfig::default();
+        cfg.save(&path).unwrap();
+        let back = RunConfig::load(&path).unwrap();
+        assert_eq!(back.mode, cfg.mode);
+        std::fs::remove_file(path).ok();
+    }
+}

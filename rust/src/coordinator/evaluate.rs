@@ -1,0 +1,172 @@
+//! Cross-dataset evaluation: the MAE matrices of Tables 1 and 2.
+//!
+//! Every trained model is evaluated on every dataset's held-out test split;
+//! MTL models route each dataset through its own branch, single-branch
+//! models use their only head everywhere (exactly how the paper scores the
+//! seven models).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::coordinator::trainer::TrainedModel;
+use crate::data::batch::BatchBuilder;
+use crate::data::structures::{AtomicStructure, DatasetId};
+use crate::runtime::Engine;
+
+/// Per-dataset (energy MAE, force MAE), node/graph weighted.
+pub fn evaluate_model(
+    engine: &Engine,
+    model: &TrainedModel,
+    test: &BTreeMap<DatasetId, Arc<Vec<AtomicStructure>>>,
+) -> anyhow::Result<BTreeMap<DatasetId, (f64, f64)>> {
+    let dims = engine.manifest.config.batch_dims();
+    let cutoff = engine.manifest.config.cutoff;
+    let mut out = BTreeMap::new();
+    for (&d, samples) in test {
+        let full = model.full_params(engine, d);
+        let batches = BatchBuilder::build_all(dims, cutoff, samples);
+        let mut e_sum = 0.0;
+        let mut e_w = 0.0;
+        let mut f_sum = 0.0;
+        let mut f_w = 0.0;
+        for b in &batches {
+            let r = engine.eval_step(&full, b)?;
+            e_sum += r.mae_e * b.n_graphs as f64;
+            e_w += b.n_graphs as f64;
+            f_sum += r.mae_f * b.n_nodes as f64;
+            f_w += b.n_nodes as f64;
+        }
+        out.insert(d, (e_sum / e_w.max(1.0), f_sum / f_w.max(1.0)));
+    }
+    Ok(out)
+}
+
+/// The 7-model x 5-dataset result matrix (Tables 1-2).
+pub struct EvalMatrix {
+    pub model_names: Vec<String>,
+    pub datasets: Vec<DatasetId>,
+    /// mae_e[model][dataset]
+    pub mae_e: Vec<Vec<f64>>,
+    pub mae_f: Vec<Vec<f64>>,
+}
+
+impl EvalMatrix {
+    pub fn new(datasets: Vec<DatasetId>) -> EvalMatrix {
+        EvalMatrix { model_names: Vec::new(), datasets, mae_e: Vec::new(), mae_f: Vec::new() }
+    }
+
+    pub fn push_row(
+        &mut self,
+        name: impl Into<String>,
+        per_dataset: &BTreeMap<DatasetId, (f64, f64)>,
+    ) {
+        self.model_names.push(name.into());
+        self.mae_e.push(self.datasets.iter().map(|d| per_dataset[d].0).collect());
+        self.mae_f.push(self.datasets.iter().map(|d| per_dataset[d].1).collect());
+    }
+
+    /// Paper-style text table. `which` selects energy ("Table 1") or force
+    /// ("Table 2") MAEs; the two best per column are marked with '*'.
+    pub fn render(&self, energy: bool) -> String {
+        let vals = if energy { &self.mae_e } else { &self.mae_f };
+        let title = if energy {
+            "MAE in energy-per-atom predictions (Table 1 analogue)"
+        } else {
+            "MAE in force predictions (Table 2 analogue)"
+        };
+        let mut out = format!("{title}\n");
+        out.push_str(&format!("{:<28}", "model"));
+        for d in &self.datasets {
+            out.push_str(&format!("{:>14}", d.name()));
+        }
+        out.push('\n');
+        // Two best per column.
+        let mut best: Vec<Vec<usize>> = Vec::new();
+        for c in 0..self.datasets.len() {
+            let mut order: Vec<usize> = (0..vals.len()).collect();
+            order.sort_by(|&a, &b| vals[a][c].partial_cmp(&vals[b][c]).unwrap());
+            best.push(order.into_iter().take(2).collect());
+        }
+        for (r, name) in self.model_names.iter().enumerate() {
+            out.push_str(&format!("{name:<28}"));
+            for c in 0..self.datasets.len() {
+                let marker = if best[c].contains(&r) { "*" } else { " " };
+                out.push_str(&format!("{:>13.4}{marker}", vals[r][c]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self, energy: bool) -> String {
+        let vals = if energy { &self.mae_e } else { &self.mae_f };
+        let mut out = String::from("model");
+        for d in &self.datasets {
+            out.push_str(&format!(",{}", d.name()));
+        }
+        out.push('\n');
+        for (r, name) in self.model_names.iter().enumerate() {
+            out.push_str(name);
+            for c in 0..self.datasets.len() {
+                out.push_str(&format!(",{:.6}", vals[r][c]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn row(&self, name: &str) -> Option<usize> {
+        self.model_names.iter().position(|n| n == name)
+    }
+
+    /// Mean MAE of a model's row (transferability summary).
+    pub fn row_mean(&self, r: usize, energy: bool) -> f64 {
+        let vals = if energy { &self.mae_e } else { &self.mae_f };
+        vals[r].iter().sum::<f64>() / vals[r].len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::structures::ALL_DATASETS;
+
+    #[test]
+    fn matrix_render_marks_best() {
+        let mut m = EvalMatrix::new(ALL_DATASETS.to_vec());
+        let mk = |v: f64| -> BTreeMap<DatasetId, (f64, f64)> {
+            ALL_DATASETS.iter().map(|&d| (d, (v, v * 2.0))).collect()
+        };
+        m.push_row("good", &mk(0.1));
+        m.push_row("bad", &mk(5.0));
+        m.push_row("mid", &mk(1.0));
+        let text = m.render(true);
+        // 'good' and 'mid' are the two best everywhere.
+        let good_line = text.lines().find(|l| l.starts_with("good")).unwrap();
+        assert!(good_line.contains('*'));
+        let bad_line = text.lines().find(|l| l.starts_with("bad")).unwrap();
+        assert!(!bad_line.contains('*'));
+    }
+
+    #[test]
+    fn csv_roundtrips_dimensions() {
+        let mut m = EvalMatrix::new(ALL_DATASETS.to_vec());
+        let row: BTreeMap<DatasetId, (f64, f64)> =
+            ALL_DATASETS.iter().map(|&d| (d, (0.5, 0.25))).collect();
+        m.push_row("m1", &row);
+        let csv = m.to_csv(false);
+        assert_eq!(csv.lines().count(), 2);
+        assert_eq!(csv.lines().next().unwrap().split(',').count(), 6);
+        assert!(csv.contains("0.250000"));
+    }
+
+    #[test]
+    fn row_mean() {
+        let mut m = EvalMatrix::new(vec![DatasetId::Ani1x, DatasetId::Qm7x]);
+        let mut row = BTreeMap::new();
+        row.insert(DatasetId::Ani1x, (1.0, 0.0));
+        row.insert(DatasetId::Qm7x, (3.0, 0.0));
+        m.push_row("m", &row);
+        assert_eq!(m.row_mean(0, true), 2.0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Experiment drivers regenerating the paper's tables and figures:
+//!
+//! * `run_tables`  — Tables 1 & 2: train the seven models (five
+//!   single-dataset, GFM-Baseline-All, GFM-MTL-All) and score the 7x5 MAE
+//!   matrices for energies and forces.
+//! * `fig1`        — the element-frequency heatmap over the aggregated data.
+//!
+//! Figure 4 (scaling) lives in `scalesim` since it sweeps simulated
+//! machines; `examples/pretrain_e2e.rs` covers the Section 5.1 convergence
+//! claim end to end.
+
+use std::sync::Arc;
+
+use crate::config::{RunConfig, TrainMode};
+use crate::coordinator::evaluate::{evaluate_model, EvalMatrix};
+use crate::coordinator::trainer::{DataBundle, TrainOutcome, Trainer};
+use crate::data::generators::{element_histogram, DatasetGenerator, GeneratorConfig};
+use crate::data::structures::ALL_DATASETS;
+use crate::elements;
+use crate::runtime::Engine;
+
+/// Train one model in the given mode (shared data bundle) and return it
+/// along with its metrics log.
+pub fn train_mode(
+    engine: &Arc<Engine>,
+    base: &RunConfig,
+    data: &DataBundle,
+    mode: TrainMode,
+) -> anyhow::Result<TrainOutcome> {
+    let mut cfg = base.clone();
+    cfg.mode = mode;
+    cfg.validate()?;
+    let trainer = Trainer::new(Arc::clone(engine), cfg);
+    trainer.train(data)
+}
+
+/// The seven models of Section 5.1, in paper order.
+pub fn paper_model_modes() -> Vec<TrainMode> {
+    let mut modes: Vec<TrainMode> =
+        ALL_DATASETS.iter().map(|&d| TrainMode::Single(d)).collect();
+    modes.push(TrainMode::BaselineAll);
+    modes.push(TrainMode::MtlPar);
+    modes
+}
+
+/// Train all seven models and evaluate the full cross-dataset matrix.
+/// `progress` receives one line per finished model.
+pub fn run_tables(
+    engine: &Arc<Engine>,
+    base: &RunConfig,
+    data: &DataBundle,
+    mut progress: impl FnMut(&str),
+) -> anyhow::Result<EvalMatrix> {
+    let mut matrix = EvalMatrix::new(data.datasets());
+    for mode in paper_model_modes() {
+        let t0 = std::time::Instant::now();
+        let outcome = train_mode(engine, base, data, mode)?;
+        let scores = evaluate_model(engine, &outcome.model, &data.test)?;
+        progress(&format!(
+            "{:<28} trained in {:>7.1?} ({} epochs, best val {:.5})",
+            outcome.model.name,
+            t0.elapsed(),
+            outcome.log.epochs.len(),
+            outcome.log.best_val().unwrap_or(f64::NAN),
+        ));
+        // Use the paper's row label (GFM-MTL-All for the MTL model).
+        let label = match mode {
+            TrainMode::MtlPar | TrainMode::MtlBase => "GFM-MTL-All".to_string(),
+            _ => outcome.model.name.clone(),
+        };
+        matrix.push_row(label, &scores);
+    }
+    Ok(matrix)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1: element frequency heatmap
+// ---------------------------------------------------------------------------
+
+/// Element occurrence counts over freshly generated aggregated data.
+pub fn fig1_histogram(seed: u64, per_dataset: usize, max_atoms: usize) -> Vec<u64> {
+    let mut counts = vec![0u64; elements::MAX_Z + 1];
+    for &d in &ALL_DATASETS {
+        let mut g = DatasetGenerator::new(
+            d,
+            seed,
+            GeneratorConfig { max_atoms, ..Default::default() },
+        );
+        let hist = element_histogram(&g.take(per_dataset));
+        for (z, c) in hist.iter().enumerate() {
+            counts[z] += c;
+        }
+    }
+    counts
+}
+
+/// Render the histogram as a periodic-table-shaped text heatmap (the Fig 1
+/// analogue) plus a CSV appendix.
+pub fn fig1_render(counts: &[u64]) -> String {
+    let max = *counts.iter().max().unwrap_or(&1) as f64;
+    let shade = |c: u64| -> char {
+        if c == 0 {
+            '.'
+        } else {
+            // log-scaled 5-level shading.
+            let t = ((c as f64).ln_1p() / max.ln_1p() * 4.0).round() as usize;
+            [':', '-', '=', '#', '@'][t.min(4)]
+        }
+    };
+    let mut out = String::from(
+        "Element frequency across aggregated ANI1x+QM7-X+Transition1x+MPTrj+Alexandria\n\
+         (periodic-table layout; shade = log frequency: . 0  : low ... @ high)\n\n",
+    );
+    // 7 periods x 18 groups; f-block printed separately.
+    for period in 1..=7u8 {
+        let mut row = vec!["   ".to_string(); 18];
+        for z in 1..=elements::MAX_Z {
+            let e = elements::element(z);
+            if e.period == period && e.group >= 1 {
+                row[(e.group - 1) as usize] = format!("{}{} ", shade(counts[z]), e.symbol);
+            }
+        }
+        out.push_str(&format!("P{period} "));
+        for cell in row {
+            out.push_str(&format!("{cell:<4}"));
+        }
+        out.push('\n');
+    }
+    out.push_str("f-block: ");
+    for z in 1..=elements::MAX_Z {
+        let e = elements::element(z);
+        if e.group == 0 {
+            out.push_str(&format!("{}{} ", shade(counts[z]), e.symbol));
+        }
+    }
+    out.push_str("\n\nCSV: Z,symbol,count\n");
+    for z in 1..=elements::MAX_Z {
+        if counts[z] > 0 {
+            out.push_str(&format!("{z},{},{}\n", elements::symbol(z), counts[z]));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_has_seven_models() {
+        assert_eq!(paper_model_modes().len(), 7);
+    }
+
+    #[test]
+    fn fig1_histogram_covers_organic_and_inorganic() {
+        let counts = fig1_histogram(1, 30, 16);
+        // H and C dominate (three organic datasets).
+        assert!(counts[1] > 0 && counts[6] > 0);
+        assert!(counts[1] >= counts[26], "H should outnumber Fe");
+        // Inorganic coverage: some transition metal must appear.
+        let tm: u64 = (21..=30).map(|z| counts[z]).sum();
+        assert!(tm > 0, "no transition metals generated");
+        // Coverage target: paper says two-thirds of natural elements.
+        let covered = counts.iter().filter(|&&c| c > 0).count();
+        assert!(covered > 40, "only {covered} elements covered");
+    }
+
+    #[test]
+    fn fig1_render_contains_table_and_csv() {
+        let counts = fig1_histogram(2, 20, 16);
+        let text = fig1_render(&counts);
+        assert!(text.contains("P1"));
+        assert!(text.contains("P7"));
+        assert!(text.contains("CSV: Z,symbol,count"));
+        assert!(text.contains("H "));
+    }
+}

@@ -1,0 +1,196 @@
+//! Training metrics: per-epoch aggregates with phase timing (data loading,
+//! forward+backward execution, gradient communication, optimizer), matching
+//! the decomposition the paper's Figure 4 reports ("average total training
+//! time per epoch, including data loading, forward, and backward passes").
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Default)]
+pub struct EpochMetrics {
+    pub epoch: usize,
+    pub steps: usize,
+    pub train_loss: f64,
+    pub mae_e: f64,
+    pub mae_f: f64,
+    pub val_loss: f64,
+    pub time_total: Duration,
+    pub time_data: Duration,
+    pub time_exec: Duration,
+    pub time_comm: Duration,
+    pub time_opt: Duration,
+}
+
+impl EpochMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::from(self.epoch)),
+            ("steps", Json::from(self.steps)),
+            ("train_loss", Json::from(self.train_loss)),
+            ("mae_e", Json::from(self.mae_e)),
+            ("mae_f", Json::from(self.mae_f)),
+            ("val_loss", Json::from(self.val_loss)),
+            ("time_total_s", Json::from(self.time_total.as_secs_f64())),
+            ("time_data_s", Json::from(self.time_data.as_secs_f64())),
+            ("time_exec_s", Json::from(self.time_exec.as_secs_f64())),
+            ("time_comm_s", Json::from(self.time_comm.as_secs_f64())),
+            ("time_opt_s", Json::from(self.time_opt.as_secs_f64())),
+        ])
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "epoch {:>3}  loss {:>10.5}  mae_e {:>9.5}  mae_f {:>9.5}  val {:>10.5}  \
+             [{:>7.2?} total | data {:.0?} exec {:.0?} comm {:.0?} opt {:.0?}]",
+            self.epoch,
+            self.train_loss,
+            self.mae_e,
+            self.mae_f,
+            self.val_loss,
+            self.time_total,
+            self.time_data,
+            self.time_exec,
+            self.time_comm,
+            self.time_opt
+        )
+    }
+}
+
+/// Step-level accumulator a rank carries through an epoch.
+#[derive(Debug, Default, Clone)]
+pub struct StepAccum {
+    pub steps: usize,
+    pub loss_sum: f64,
+    pub mae_e_sum: f64,
+    pub mae_f_sum: f64,
+    pub data: Duration,
+    pub exec: Duration,
+    pub comm: Duration,
+    pub opt: Duration,
+}
+
+impl StepAccum {
+    pub fn record_step(&mut self, loss: f64, mae_e: f64, mae_f: f64) {
+        self.steps += 1;
+        self.loss_sum += loss;
+        self.mae_e_sum += mae_e;
+        self.mae_f_sum += mae_f;
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.steps == 0 {
+            f64::NAN
+        } else {
+            self.loss_sum / self.steps as f64
+        }
+    }
+
+    pub fn into_epoch(self, epoch: usize, total: Duration, val_loss: f64) -> EpochMetrics {
+        let n = self.steps.max(1) as f64;
+        EpochMetrics {
+            epoch,
+            steps: self.steps,
+            train_loss: self.loss_sum / n,
+            mae_e: self.mae_e_sum / n,
+            mae_f: self.mae_f_sum / n,
+            val_loss,
+            time_total: total,
+            time_data: self.data,
+            time_exec: self.exec,
+            time_comm: self.comm,
+            time_opt: self.opt,
+        }
+    }
+}
+
+/// Full run log with CSV/JSON export (EXPERIMENTS.md quotes these).
+#[derive(Debug, Default, Clone)]
+pub struct RunLog {
+    pub model_name: String,
+    pub epochs: Vec<EpochMetrics>,
+}
+
+impl RunLog {
+    pub fn new(model_name: impl Into<String>) -> RunLog {
+        RunLog { model_name: model_name.into(), epochs: Vec::new() }
+    }
+
+    pub fn push(&mut self, m: EpochMetrics) {
+        self.epochs.push(m);
+    }
+
+    pub fn best_val(&self) -> Option<f64> {
+        self.epochs.iter().map(|e| e.val_loss).fold(None, |acc, v| match acc {
+            None => Some(v),
+            Some(best) => Some(best.min(v)),
+        })
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "epoch,steps,train_loss,mae_e,mae_f,val_loss,total_s,data_s,exec_s,comm_s,opt_s\n",
+        );
+        for e in &self.epochs {
+            out.push_str(&format!(
+                "{},{},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4},{:.4},{:.4},{:.4}\n",
+                e.epoch,
+                e.steps,
+                e.train_loss,
+                e.mae_e,
+                e.mae_f,
+                e.val_loss,
+                e.time_total.as_secs_f64(),
+                e.time_data.as_secs_f64(),
+                e.time_exec.as_secs_f64(),
+                e.time_comm.as_secs_f64(),
+                e.time_opt.as_secs_f64(),
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model_name.clone())),
+            ("epochs", Json::Array(self.epochs.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accum_averages() {
+        let mut a = StepAccum::default();
+        a.record_step(2.0, 0.5, 0.1);
+        a.record_step(4.0, 1.5, 0.3);
+        assert_eq!(a.mean_loss(), 3.0);
+        let e = a.into_epoch(1, Duration::from_secs(2), 3.5);
+        assert_eq!(e.train_loss, 3.0);
+        assert_eq!(e.mae_e, 1.0);
+        assert_eq!(e.val_loss, 3.5);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = RunLog::new("test");
+        log.push(StepAccum::default().into_epoch(0, Duration::ZERO, 1.0));
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("epoch,"));
+    }
+
+    #[test]
+    fn best_val_tracks_minimum() {
+        let mut log = RunLog::new("t");
+        for (i, v) in [3.0, 1.5, 2.0].iter().enumerate() {
+            let mut a = StepAccum::default();
+            a.record_step(1.0, 0.0, 0.0);
+            log.push(a.into_epoch(i, Duration::ZERO, *v));
+        }
+        assert_eq!(log.best_val(), Some(1.5));
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: the 2D-parallel trainer (multi-task parallelism x DDP),
+//! cross-dataset evaluation, experiment drivers for the paper's tables and
+//! figures, metrics, and schedules.
+
+pub mod evaluate;
+pub mod experiments;
+pub mod metrics;
+pub mod scheduler;
+pub mod trainer;
+
+pub use evaluate::{evaluate_model, EvalMatrix};
+pub use metrics::{EpochMetrics, RunLog, StepAccum};
+pub use scheduler::{EarlyStopper, LrSchedule};
+pub use trainer::{DataBundle, Heads, TrainOutcome, TrainedModel, Trainer};

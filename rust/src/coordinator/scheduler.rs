@@ -1,0 +1,115 @@
+//! Training schedule helpers: early stopping (paper Section 5.1: "early
+//! stopping was applied to avoid redundant computations") and learning-rate
+//! schedules.
+
+/// Early stopping on validation loss with a patience window.
+#[derive(Debug, Clone)]
+pub struct EarlyStopper {
+    pub patience: usize,
+    best: f64,
+    bad_epochs: usize,
+    /// Relative improvement below which an epoch counts as "no progress".
+    pub min_delta: f64,
+}
+
+impl EarlyStopper {
+    pub fn new(patience: usize) -> EarlyStopper {
+        EarlyStopper { patience, best: f64::INFINITY, bad_epochs: 0, min_delta: 1e-4 }
+    }
+
+    /// Record a validation loss; returns true if training should stop.
+    pub fn update(&mut self, val_loss: f64) -> bool {
+        if self.patience == 0 {
+            return false;
+        }
+        if val_loss < self.best * (1.0 - self.min_delta) || !self.best.is_finite() {
+            self.best = val_loss;
+            self.bad_epochs = 0;
+            false
+        } else {
+            self.bad_epochs += 1;
+            self.bad_epochs >= self.patience
+        }
+    }
+
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+}
+
+/// Learning-rate schedule.
+#[derive(Debug, Clone, Copy)]
+pub enum LrSchedule {
+    Constant(f64),
+    /// Linear warmup to `peak` over `warmup` steps, cosine decay to
+    /// `peak*floor_frac` at `total` steps.
+    WarmupCosine { peak: f64, warmup: usize, total: usize, floor_frac: f64 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f64 {
+        match *self {
+            LrSchedule::Constant(lr) => lr,
+            LrSchedule::WarmupCosine { peak, warmup, total, floor_frac } => {
+                if step < warmup {
+                    peak * (step + 1) as f64 / warmup as f64
+                } else {
+                    let t = ((step - warmup) as f64
+                        / (total.saturating_sub(warmup)).max(1) as f64)
+                        .min(1.0);
+                    let floor = peak * floor_frac;
+                    floor + 0.5 * (peak - floor) * (1.0 + (std::f64::consts::PI * t).cos())
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stops_after_patience_bad_epochs() {
+        let mut es = EarlyStopper::new(2);
+        assert!(!es.update(1.0));
+        assert!(!es.update(0.5)); // improvement
+        assert!(!es.update(0.6)); // bad 1
+        assert!(es.update(0.55)); // bad 2 -> stop
+        assert_eq!(es.best(), 0.5);
+    }
+
+    #[test]
+    fn improvement_resets_counter() {
+        let mut es = EarlyStopper::new(2);
+        es.update(1.0);
+        es.update(1.1); // bad 1
+        assert!(!es.update(0.8)); // improvement resets
+        assert!(!es.update(0.9)); // bad 1
+        assert!(es.update(0.9)); // bad 2
+    }
+
+    #[test]
+    fn zero_patience_never_stops() {
+        let mut es = EarlyStopper::new(0);
+        for _ in 0..100 {
+            assert!(!es.update(5.0));
+        }
+    }
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = LrSchedule::WarmupCosine { peak: 1.0, warmup: 10, total: 110, floor_frac: 0.1 };
+        assert!(s.at(0) < s.at(5));
+        assert!((s.at(9) - 1.0).abs() < 0.11);
+        assert!(s.at(60) < 1.0);
+        assert!((s.at(1000) - 0.1).abs() < 1e-9, "floor: {}", s.at(1000));
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Constant(0.01);
+        assert_eq!(s.at(0), 0.01);
+        assert_eq!(s.at(9999), 0.01);
+    }
+}

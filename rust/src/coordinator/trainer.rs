@@ -1,0 +1,853 @@
+//! The 2D-parallel training coordinator — the paper's system contribution.
+//!
+//! Three execution modes (Section 5.1's seven models reduce to these):
+//!
+//! * `Single(d)` / `BaselineAll` — one branch, plain DDP: every rank holds
+//!   encoder + the branch; gradients allreduce over the global group.
+//! * `MtlBase` — two-level MTL with DDP only: every rank holds encoder +
+//!   ALL `N_h` branches, processes one batch per dataset per step, and
+//!   allreduces the full `P_s + N_h*P_h` gradient payload globally.
+//! * `MtlPar` — **multi-task parallelism** x DDP (the contribution): the
+//!   mesh is `N_h` head sub-groups x `M` replicas; each rank holds encoder
+//!   + exactly ONE branch, works only on its head's dataset, allreduces
+//!   branch gradients within its sub-group (`P_h` payload) and encoder
+//!   gradients globally (`P_s` payload).
+//!
+//! Ranks are OS threads sharing the PJRT engine; collectives are the
+//! `comm` module's rendezvous groups, so the communication *pattern* is
+//! exactly the paper's Figure 3 even though transport is shared memory.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comm::{build_mesh, MeshRank, MeshShape};
+use crate::config::{RunConfig, TrainMode};
+use crate::coordinator::metrics::{RunLog, StepAccum};
+use crate::coordinator::scheduler::EarlyStopper;
+use crate::data::batch::{BatchBuilder, GraphBatch};
+use crate::data::split::{Split, SplitSpec};
+use crate::data::structures::{AtomicStructure, DatasetId};
+use crate::data::DDStore;
+use crate::model::optimizer::{AdamW, AdamWConfig};
+use crate::model::params::ParamSet;
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// data bundle
+// ---------------------------------------------------------------------------
+
+/// Per-dataset train/val/test structure lists.
+pub struct DataBundle {
+    pub train: BTreeMap<DatasetId, Arc<Vec<AtomicStructure>>>,
+    pub val: BTreeMap<DatasetId, Arc<Vec<AtomicStructure>>>,
+    pub test: BTreeMap<DatasetId, Arc<Vec<AtomicStructure>>>,
+}
+
+impl DataBundle {
+    /// Generate synthetic data for `datasets` per the run config.
+    pub fn generate(cfg: &crate::config::DataConfig, datasets: &[DatasetId]) -> DataBundle {
+        use crate::data::generators::{DatasetGenerator, GeneratorConfig};
+        let spec = SplitSpec { train: cfg.train_frac, val: cfg.val_frac };
+        let mut train = BTreeMap::new();
+        let mut val = BTreeMap::new();
+        let mut test = BTreeMap::new();
+        for &d in datasets {
+            let mut g = DatasetGenerator::new(
+                d,
+                cfg.seed,
+                GeneratorConfig { max_atoms: cfg.max_atoms, ..Default::default() },
+            );
+            let samples = g.take(cfg.per_dataset);
+            let mut tr = Vec::new();
+            let mut va = Vec::new();
+            let mut te = Vec::new();
+            for (i, s) in samples.into_iter().enumerate() {
+                match spec.of(i, cfg.seed ^ d.index() as u64) {
+                    Split::Train => tr.push(s),
+                    Split::Val => va.push(s),
+                    Split::Test => te.push(s),
+                }
+            }
+            train.insert(d, Arc::new(tr));
+            val.insert(d, Arc::new(va));
+            test.insert(d, Arc::new(te));
+        }
+        DataBundle { train, val, test }
+    }
+
+    pub fn datasets(&self) -> Vec<DatasetId> {
+        self.train.keys().copied().collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trained model
+// ---------------------------------------------------------------------------
+
+/// Final parameters of a training run.
+pub struct TrainedModel {
+    pub name: String,
+    /// Encoder leaves ("encoder.*").
+    pub encoder: ParamSet,
+    /// Branch leaves ("branch.*"): one shared branch, or one per dataset.
+    pub heads: Heads,
+}
+
+pub enum Heads {
+    Shared(ParamSet),
+    PerDataset(BTreeMap<DatasetId, ParamSet>),
+}
+
+impl TrainedModel {
+    /// The branch used to predict data from `d`.
+    pub fn branch_for(&self, d: DatasetId) -> &ParamSet {
+        match &self.heads {
+            Heads::Shared(b) => b,
+            Heads::PerDataset(m) => m
+                .get(&d)
+                .unwrap_or_else(|| panic!("{}: no branch for {}", self.name, d.name())),
+        }
+    }
+
+    /// Full engine-callable parameter set for dataset `d`.
+    pub fn full_params(&self, engine: &Engine, d: DatasetId) -> ParamSet {
+        let mut full = ParamSet::zeros_like(&engine.manifest.params);
+        full.copy_matching_from(&self.encoder);
+        full.copy_matching_from(self.branch_for(d));
+        full
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trainer
+// ---------------------------------------------------------------------------
+
+pub struct Trainer {
+    pub engine: Arc<Engine>,
+    pub cfg: RunConfig,
+}
+
+/// Outcome of a training run: final model + rank-0 metrics log + comm stats.
+pub struct TrainOutcome {
+    pub model: TrainedModel,
+    pub log: RunLog,
+    /// (global allreduced f32 elements, head-group allreduced f32 elements).
+    pub comm_elems: (u64, u64),
+}
+
+impl Trainer {
+    pub fn new(engine: Arc<Engine>, cfg: RunConfig) -> Trainer {
+        Trainer { engine, cfg }
+    }
+
+    /// Run the configured training mode on `data`.
+    pub fn train(&self, data: &DataBundle) -> anyhow::Result<TrainOutcome> {
+        match self.cfg.mode {
+            TrainMode::Single(d) => self.train_ddp(data, vec![d], false),
+            TrainMode::BaselineAll => {
+                self.train_ddp(data, data.datasets(), false)
+            }
+            TrainMode::MtlBase => self.train_mtl_base(data),
+            TrainMode::MtlPar => self.train_mtl_par(data),
+        }
+    }
+
+    // -- mode: single-branch DDP (Single / BaselineAll) ---------------------
+
+    /// One branch, `replicas` DDP ranks. For BaselineAll the stream mixes
+    /// every dataset through the same head (the paper's GFM-Baseline-All).
+    fn train_ddp(
+        &self,
+        data: &DataBundle,
+        datasets: Vec<DatasetId>,
+        _reserved: bool,
+    ) -> anyhow::Result<TrainOutcome> {
+        let replicas = self.cfg.parallel.replicas;
+        let shape = MeshShape { num_heads: 1, replicas };
+        let mesh = build_mesh(shape);
+        let engine = &self.engine;
+        let cfg = &self.cfg;
+
+        // Mixed stream: concatenate (dataset-tagged) training samples.
+        let mixed: Vec<AtomicStructure> = datasets
+            .iter()
+            .flat_map(|d| data.train[d].iter().cloned())
+            .collect();
+        let store = DDStore::new(mixed, replicas);
+        let val_mixed: Vec<AtomicStructure> = datasets
+            .iter()
+            .flat_map(|d| data.val[d].iter().cloned())
+            .collect();
+        let val_store = DDStore::new(val_mixed, replicas);
+
+        let results = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for mr in mesh {
+                let store = Arc::clone(&store);
+                let val_store = Arc::clone(&val_store);
+                let datasets = datasets.clone();
+                handles.push(scope.spawn(move || {
+                    rank_loop_single_branch(engine, cfg, mr, store, val_store, &datasets)
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rank thread panicked"))
+                .collect::<anyhow::Result<Vec<_>>>()
+        })?;
+
+        let name = self.cfg.mode.name();
+        finalize_shared(name, results, datasets)
+    }
+
+    // -- mode: MTL-base (all heads everywhere, DDP only) ---------------------
+
+    fn train_mtl_base(&self, data: &DataBundle) -> anyhow::Result<TrainOutcome> {
+        let replicas = self.cfg.parallel.replicas;
+        let shape = MeshShape { num_heads: 1, replicas };
+        let mesh = build_mesh(shape);
+        let engine = &self.engine;
+        let cfg = &self.cfg;
+        let datasets = data.datasets();
+
+        let stores: BTreeMap<DatasetId, Arc<DDStore>> = datasets
+            .iter()
+            .map(|&d| (d, DDStore::new(data.train[&d].to_vec(), replicas)))
+            .collect();
+        let val_stores: BTreeMap<DatasetId, Arc<DDStore>> = datasets
+            .iter()
+            .map(|&d| (d, DDStore::new(data.val[&d].to_vec(), replicas)))
+            .collect();
+
+        let results = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for mr in mesh {
+                let stores = stores.clone();
+                let val_stores = val_stores.clone();
+                let datasets = datasets.clone();
+                handles.push(scope.spawn(move || {
+                    rank_loop_mtl_base(engine, cfg, mr, stores, val_stores, &datasets)
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rank thread panicked"))
+                .collect::<anyhow::Result<Vec<_>>>()
+        })?;
+
+        finalize_per_dataset("GFM-MTL-All (MTL-base)".to_string(), results, &datasets)
+    }
+
+    // -- mode: MTL-par (multi-task parallelism x DDP) ------------------------
+
+    fn train_mtl_par(&self, data: &DataBundle) -> anyhow::Result<TrainOutcome> {
+        let datasets = data.datasets();
+        let replicas = self.cfg.parallel.replicas;
+        let shape = MeshShape { num_heads: datasets.len(), replicas };
+        let mesh = build_mesh(shape);
+        let engine = &self.engine;
+        let cfg = &self.cfg;
+
+        // One store per head sub-group: world = replicas.
+        let stores: Vec<Arc<DDStore>> = datasets
+            .iter()
+            .map(|d| DDStore::new(data.train[d].to_vec(), replicas))
+            .collect();
+        let val_stores: Vec<Arc<DDStore>> = datasets
+            .iter()
+            .map(|d| DDStore::new(data.val[d].to_vec(), replicas))
+            .collect();
+
+        let results = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for mr in mesh {
+                let store = Arc::clone(&stores[mr.head]);
+                let val_store = Arc::clone(&val_stores[mr.head]);
+                let dataset = datasets[mr.head];
+                handles.push(scope.spawn(move || {
+                    rank_loop_mtl_par(engine, cfg, mr, store, val_store, dataset)
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rank thread panicked"))
+                .collect::<anyhow::Result<Vec<_>>>()
+        })?;
+
+        finalize_per_dataset("GFM-MTL-All (MTL-par)".to_string(), results, &datasets)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-rank state and loops
+// ---------------------------------------------------------------------------
+
+/// What each rank thread returns.
+struct RankResult {
+    rank: usize,
+    #[allow(dead_code)]
+    head: usize,
+    replica: usize,
+    encoder: ParamSet,
+    /// (dataset, branch) pairs this rank owns.
+    branches: Vec<(DatasetId, ParamSet)>,
+    log: RunLog,
+    comm_global: u64,
+    comm_head: u64,
+}
+
+fn adamw_cfg(cfg: &RunConfig) -> AdamWConfig {
+    AdamWConfig {
+        lr: cfg.train.lr,
+        beta1: cfg.train.beta1,
+        beta2: cfg.train.beta2,
+        eps: cfg.train.eps,
+        weight_decay: cfg.train.weight_decay,
+        grad_clip: cfg.train.grad_clip,
+    }
+}
+
+/// Initialize rank-local parameters. All ranks use the same seeds so DDP
+/// replicas start identical (and stay identical: collectives are exact).
+fn init_rank_params(
+    engine: &Engine,
+    cfg: &RunConfig,
+    datasets: &[DatasetId],
+) -> (ParamSet, Vec<(DatasetId, ParamSet)>) {
+    let full = ParamSet::init(&engine.manifest.params, cfg.train.seed);
+    let encoder = full.subset("encoder.");
+    let branches = datasets
+        .iter()
+        .map(|&d| {
+            let seed = cfg.train.seed ^ (0xB4A9 + d.index() as u64 * 7919);
+            let b = ParamSet::init(&engine.manifest.params, seed).subset("branch.");
+            (d, b)
+        })
+        .collect();
+    (encoder, branches)
+}
+
+/// Plan this rank's padded batches for one epoch from its slice of the
+/// shuffled global index list (identical shuffle on every rank).
+fn plan_epoch_batches(
+    store: &DDStore,
+    rank_in_group: usize,
+    group_size: usize,
+    dims: crate::data::batch::BatchDims,
+    cutoff: f64,
+    epoch_seed: u64,
+) -> Vec<GraphBatch> {
+    let n = store.len();
+    let mut indices: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::new(epoch_seed);
+    rng.shuffle(&mut indices);
+    let my: Vec<usize> =
+        indices.into_iter().skip(rank_in_group).step_by(group_size).collect();
+    let mut builder = BatchBuilder::new(dims, cutoff);
+    let mut batches = Vec::new();
+    for idx in my {
+        if let Some(s) = store.get(rank_in_group, idx) {
+            if let Some(b) = builder.push(&s) {
+                batches.push(b);
+            }
+        }
+    }
+    batches.extend(builder.finish());
+    batches
+}
+
+/// Assemble the full engine-callable ParamSet from encoder + branch.
+fn assemble_full(scratch: &mut ParamSet, encoder: &ParamSet, branch: &ParamSet) {
+    scratch.copy_matching_from(encoder);
+    scratch.copy_matching_from(branch);
+}
+
+/// Mean validation loss across the group (same value on every rank).
+fn distributed_val_loss(
+    engine: &Engine,
+    mr: &MeshRank,
+    full: &ParamSet,
+    val_batches: &[GraphBatch],
+) -> anyhow::Result<f64> {
+    let mut local = 0.0;
+    let mut count = 0.0;
+    for b in val_batches {
+        let out = engine.eval_step(full, b)?;
+        local += out.loss * b.n_graphs as f64;
+        count += b.n_graphs as f64;
+    }
+    let sums = mr.global.allgather_f64(local);
+    let counts = mr.global.allgather_f64(count);
+    let total: f64 = sums.iter().sum();
+    let n: f64 = counts.iter().sum();
+    Ok(if n > 0.0 { total / n } else { f64::NAN })
+}
+
+/// Shared epoch-count agreement: every rank must run the same number of
+/// steps or the collectives deadlock; take the global min of planned counts.
+fn agree_steps(mr: &MeshRank, planned: usize) -> usize {
+    let counts = mr.global.allgather_f64(planned as f64);
+    counts.into_iter().fold(f64::INFINITY, f64::min) as usize
+}
+
+// -- single-branch DDP loop (Single / BaselineAll) ---------------------------
+
+fn rank_loop_single_branch(
+    engine: &Engine,
+    cfg: &RunConfig,
+    mr: MeshRank,
+    store: Arc<DDStore>,
+    val_store: Arc<DDStore>,
+    datasets: &[DatasetId],
+) -> anyhow::Result<RankResult> {
+    let dims = engine.manifest.config.batch_dims();
+    let cutoff = engine.manifest.config.cutoff;
+    let (encoder, mut branches) = init_rank_params(engine, cfg, &datasets[..1]);
+    let mut encoder = encoder;
+    let branch_dataset = branches[0].0;
+    let mut branch = branches.remove(0).1;
+
+    let mut full = ParamSet::zeros_like(&engine.manifest.params);
+    let mut opt_enc = AdamW::new(adamw_cfg(cfg), &encoder);
+    let mut opt_br = AdamW::new(adamw_cfg(cfg), &branch);
+    let mut log = RunLog::new(cfg.mode.name());
+    let mut stopper = EarlyStopper::new(cfg.train.patience);
+    // Reused gradient-sync scratch (no per-step allocation).
+    let mut enc_g = ParamSet::zeros_like(&engine.manifest.params).subset("encoder.");
+    let mut br_g = ParamSet::zeros_like(&engine.manifest.params).subset("branch.");
+    let mut enc_flat: Vec<f32> = Vec::new();
+    let mut br_flat: Vec<f32> = Vec::new();
+
+    let val_batches = plan_epoch_batches(
+        &val_store,
+        mr.replica,
+        mr.shape.replicas,
+        dims,
+        cutoff,
+        cfg.train.seed ^ VAL_SEED,
+    );
+
+    for epoch in 0..cfg.train.epochs {
+        let t_epoch = Instant::now();
+        let mut acc = StepAccum::default();
+
+        let t0 = Instant::now();
+        let batches = plan_epoch_batches(
+            &store,
+            mr.replica,
+            mr.shape.replicas,
+            dims,
+            cutoff,
+            cfg.train.seed.wrapping_add(epoch as u64 * 7_777_777),
+        );
+        acc.data += t0.elapsed();
+        let steps = agree_steps(&mr, batches.len());
+
+        for step in 0..steps {
+            let batch = &batches[step % batches.len().max(1)];
+            assemble_full(&mut full, &encoder, &branch);
+
+            let t1 = Instant::now();
+            let out = engine.train_step(&full, batch)?;
+            acc.exec += t1.elapsed();
+            acc.record_step(out.loss, out.mae_e, out.mae_f);
+
+            // Plain DDP: allreduce the complete gradient payload globally.
+            let t2 = Instant::now();
+            out.grads.flatten_prefix_into("encoder.", &mut enc_flat);
+            out.grads.flatten_prefix_into("branch.", &mut br_flat);
+            mr.global.allreduce_mean(&mut enc_flat);
+            mr.global.allreduce_mean(&mut br_flat);
+            enc_g.unflatten_from(&enc_flat);
+            br_g.unflatten_from(&br_flat);
+            acc.comm += t2.elapsed();
+
+            let t3 = Instant::now();
+            opt_enc.step(&mut encoder, &enc_g);
+            opt_br.step(&mut branch, &br_g);
+            acc.opt += t3.elapsed();
+        }
+
+        assemble_full(&mut full, &encoder, &branch);
+        let val_loss = distributed_val_loss(engine, &mr, &full, &val_batches)?;
+        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss));
+        if stopper.update(val_loss) {
+            break;
+        }
+    }
+
+    let (cg, _) = mr.global.stats();
+    Ok(RankResult {
+        rank: mr.rank,
+        head: mr.head,
+        replica: mr.replica,
+        encoder,
+        branches: vec![(branch_dataset, branch)],
+        log,
+        comm_global: cg,
+        comm_head: 0,
+    })
+}
+
+// -- MTL-base loop ------------------------------------------------------------
+
+fn rank_loop_mtl_base(
+    engine: &Engine,
+    cfg: &RunConfig,
+    mr: MeshRank,
+    stores: BTreeMap<DatasetId, Arc<DDStore>>,
+    val_stores: BTreeMap<DatasetId, Arc<DDStore>>,
+    datasets: &[DatasetId],
+) -> anyhow::Result<RankResult> {
+    let dims = engine.manifest.config.batch_dims();
+    let cutoff = engine.manifest.config.cutoff;
+    let (mut encoder, mut branches) = init_rank_params(engine, cfg, datasets);
+    let mut full = ParamSet::zeros_like(&engine.manifest.params);
+    let mut opt_enc = AdamW::new(adamw_cfg(cfg), &encoder);
+    let mut opt_brs: Vec<AdamW> =
+        branches.iter().map(|(_, b)| AdamW::new(adamw_cfg(cfg), b)).collect();
+    let mut log = RunLog::new("GFM-MTL-All (MTL-base)");
+    let mut stopper = EarlyStopper::new(cfg.train.patience);
+
+    // Validation: every dataset's shard through its own branch.
+    let val_batches: Vec<(usize, Vec<GraphBatch>)> = datasets
+        .iter()
+        .enumerate()
+        .map(|(k, d)| {
+            (
+                k,
+                plan_epoch_batches(
+                    &val_stores[d],
+                    mr.replica,
+                    mr.shape.replicas,
+                    dims,
+                    cutoff,
+                    cfg.train.seed ^ VAL_SEED,
+                ),
+            )
+        })
+        .collect();
+
+    for epoch in 0..cfg.train.epochs {
+        let t_epoch = Instant::now();
+        let mut acc = StepAccum::default();
+
+        let t0 = Instant::now();
+        let per_ds_batches: Vec<Vec<GraphBatch>> = datasets
+            .iter()
+            .map(|d| {
+                plan_epoch_batches(
+                    &stores[d],
+                    mr.replica,
+                    mr.shape.replicas,
+                    dims,
+                    cutoff,
+                    cfg.train.seed.wrapping_add(epoch as u64 * 7_777_777)
+                        ^ d.index() as u64,
+                )
+            })
+            .collect();
+        acc.data += t0.elapsed();
+        let min_batches = per_ds_batches.iter().map(|b| b.len()).min().unwrap_or(0);
+        let steps = agree_steps(&mr, min_batches);
+
+        for step in 0..steps {
+            // One batch per dataset through its branch; encoder grads mean.
+            let mut enc_gsum: Option<Vec<f32>> = None;
+            let mut br_grads: Vec<ParamSet> = Vec::with_capacity(datasets.len());
+            let mut loss_sum = 0.0;
+            let mut mae_e_sum = 0.0;
+            let mut mae_f_sum = 0.0;
+            for (k, _) in datasets.iter().enumerate() {
+                let batch = &per_ds_batches[k][step % per_ds_batches[k].len().max(1)];
+                assemble_full(&mut full, &encoder, &branches[k].1);
+                let t1 = Instant::now();
+                let out = engine.train_step(&full, batch)?;
+                acc.exec += t1.elapsed();
+                loss_sum += out.loss;
+                mae_e_sum += out.mae_e;
+                mae_f_sum += out.mae_f;
+                let enc_flat = out.grads.subset("encoder.").flatten();
+                match &mut enc_gsum {
+                    None => enc_gsum = Some(enc_flat),
+                    Some(acc_flat) => {
+                        for (a, g) in acc_flat.iter_mut().zip(enc_flat) {
+                            *a += g;
+                        }
+                    }
+                }
+                br_grads.push(out.grads.subset("branch."));
+            }
+            let nh = datasets.len() as f64;
+            acc.record_step(loss_sum / nh, mae_e_sum / nh, mae_f_sum / nh);
+
+            // ONE global allreduce over P_s + N_h * P_h (the paper's
+            // MTL-base payload): concatenate encoder mean + all branches.
+            let t2 = Instant::now();
+            let mut enc_flat = enc_gsum.unwrap();
+            for g in enc_flat.iter_mut() {
+                *g /= nh as f32;
+            }
+            let enc_len = enc_flat.len();
+            let mut payload = enc_flat;
+            let mut br_lens = Vec::with_capacity(br_grads.len());
+            for bg in &br_grads {
+                let f = bg.flatten();
+                br_lens.push(f.len());
+                payload.extend(f);
+            }
+            mr.global.allreduce_mean(&mut payload);
+            acc.comm += t2.elapsed();
+
+            let t3 = Instant::now();
+            let mut enc_g = branches_scratch_encoder(engine);
+            enc_g.unflatten_from(&payload[..enc_len]);
+            opt_enc.step(&mut encoder, &enc_g);
+            let mut off = enc_len;
+            for (k, bg) in br_grads.iter_mut().enumerate() {
+                bg.unflatten_from(&payload[off..off + br_lens[k]]);
+                off += br_lens[k];
+                opt_brs[k].step(&mut branches[k].1, bg);
+            }
+            acc.opt += t3.elapsed();
+        }
+
+        // Validation across every head.
+        let mut val_local = 0.0;
+        let mut val_count = 0.0;
+        for (k, batches) in &val_batches {
+            assemble_full(&mut full, &encoder, &branches[*k].1);
+            for b in batches {
+                let out = engine.eval_step(&full, b)?;
+                val_local += out.loss * b.n_graphs as f64;
+                val_count += b.n_graphs as f64;
+            }
+        }
+        let sums = mr.global.allgather_f64(val_local);
+        let counts = mr.global.allgather_f64(val_count);
+        let val_loss = sums.iter().sum::<f64>() / counts.iter().sum::<f64>().max(1.0);
+        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss));
+        if stopper.update(val_loss) {
+            break;
+        }
+    }
+
+    let (cg, _) = mr.global.stats();
+    Ok(RankResult {
+        rank: mr.rank,
+        head: mr.head,
+        replica: mr.replica,
+        encoder,
+        branches,
+        log,
+        comm_global: cg,
+        comm_head: 0,
+    })
+}
+
+/// Encoder-gradient scratch with full names ("encoder.*").
+fn branches_scratch_encoder(engine: &Engine) -> ParamSet {
+    ParamSet::zeros_like(&engine.manifest.params).subset("encoder.")
+}
+
+// -- MTL-par loop --------------------------------------------------------------
+
+fn rank_loop_mtl_par(
+    engine: &Engine,
+    cfg: &RunConfig,
+    mr: MeshRank,
+    store: Arc<DDStore>,
+    val_store: Arc<DDStore>,
+    dataset: DatasetId,
+) -> anyhow::Result<RankResult> {
+    let dims = engine.manifest.config.batch_dims();
+    let cutoff = engine.manifest.config.cutoff;
+    let (mut encoder, mut branches) = init_rank_params(engine, cfg, &[dataset]);
+    let mut branch = branches.remove(0).1;
+    let mut full = ParamSet::zeros_like(&engine.manifest.params);
+    let mut opt_enc = AdamW::new(adamw_cfg(cfg), &encoder);
+    let mut opt_br = AdamW::new(adamw_cfg(cfg), &branch);
+    let mut log = RunLog::new(format!("MTL-par head {}", dataset.name()));
+    let mut stopper = EarlyStopper::new(cfg.train.patience);
+    // Reused gradient-sync scratch (no per-step allocation).
+    let mut enc_g = ParamSet::zeros_like(&engine.manifest.params).subset("encoder.");
+    let mut br_g = ParamSet::zeros_like(&engine.manifest.params).subset("branch.");
+    let mut enc_flat: Vec<f32> = Vec::new();
+    let mut br_flat: Vec<f32> = Vec::new();
+
+    let val_batches = plan_epoch_batches(
+        &val_store,
+        mr.replica,
+        mr.shape.replicas,
+        dims,
+        cutoff,
+        cfg.train.seed ^ VAL_SEED,
+    );
+
+    for epoch in 0..cfg.train.epochs {
+        let t_epoch = Instant::now();
+        let mut acc = StepAccum::default();
+
+        let t0 = Instant::now();
+        let batches = plan_epoch_batches(
+            &store,
+            mr.replica,
+            mr.shape.replicas,
+            dims,
+            cutoff,
+            cfg.train.seed.wrapping_add(epoch as u64 * 7_777_777) ^ dataset.index() as u64,
+        );
+        acc.data += t0.elapsed();
+        let steps = agree_steps(&mr, batches.len());
+
+        for step in 0..steps {
+            let batch = &batches[step % batches.len().max(1)];
+            assemble_full(&mut full, &encoder, &branch);
+
+            let t1 = Instant::now();
+            let out = engine.train_step(&full, batch)?;
+            acc.exec += t1.elapsed();
+            acc.record_step(out.loss, out.mae_e, out.mae_f);
+
+            // Multi-task parallelism: encoder grads allreduce GLOBALLY
+            // (P_s payload); branch grads only within the head sub-group
+            // (P_h payload) — Figure 3's two-level DDP.
+            let t2 = Instant::now();
+            out.grads.flatten_prefix_into("encoder.", &mut enc_flat);
+            out.grads.flatten_prefix_into("branch.", &mut br_flat);
+            mr.global.allreduce_mean(&mut enc_flat);
+            mr.head_group.allreduce_mean(&mut br_flat);
+            enc_g.unflatten_from(&enc_flat);
+            br_g.unflatten_from(&br_flat);
+            acc.comm += t2.elapsed();
+
+            let t3 = Instant::now();
+            opt_enc.step(&mut encoder, &enc_g);
+            opt_br.step(&mut branch, &br_g);
+            acc.opt += t3.elapsed();
+        }
+
+        assemble_full(&mut full, &encoder, &branch);
+        let val_loss = distributed_val_loss(engine, &mr, &full, &val_batches)?;
+        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss));
+        if stopper.update(val_loss) {
+            break;
+        }
+    }
+
+    let (cg, _) = mr.global.stats();
+    let (ch, _) = mr.head_group.stats();
+    Ok(RankResult {
+        rank: mr.rank,
+        head: mr.head,
+        replica: mr.replica,
+        encoder,
+        branches: vec![(dataset, branch)],
+        log,
+        comm_global: cg,
+        comm_head: ch,
+    })
+}
+
+/// Validation-batch shuffle seed tag.
+const VAL_SEED: u64 = 0x5EED_FACE;
+
+// ---------------------------------------------------------------------------
+// finalization
+// ---------------------------------------------------------------------------
+
+/// Collapse rank results for single-branch modes: the shared branch from
+/// rank 0 (all replicas are in sync), log from rank 0.
+fn finalize_shared(
+    name: String,
+    mut results: Vec<RankResult>,
+    _datasets: Vec<DatasetId>,
+) -> anyhow::Result<TrainOutcome> {
+    results.sort_by_key(|r| r.rank);
+    check_encoder_sync(&results)?;
+    let comm_elems = (
+        results.iter().map(|r| r.comm_global).max().unwrap_or(0),
+        results.iter().map(|r| r.comm_head).max().unwrap_or(0),
+    );
+    let r0 = results
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("no rank results"))?;
+    let branch = r0
+        .branches
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("rank 0 returned no branch"))?
+        .1;
+    Ok(TrainOutcome {
+        model: TrainedModel { name: r0.log.model_name.clone(), encoder: r0.encoder, heads: Heads::Shared(branch) }
+            .with_name(name),
+        log: r0.log,
+        comm_elems,
+    })
+}
+
+/// Collapse rank results for per-dataset-head modes: encoder from rank 0,
+/// each dataset's branch from replica 0 of its head sub-group.
+/// DDP invariant: every rank's encoder must end bit-identically in sync
+/// (same init, exact collectives, deterministic optimizer).
+fn check_encoder_sync(results: &[RankResult]) -> anyhow::Result<()> {
+    let r0 = &results[0];
+    for r in &results[1..] {
+        for ((name, a), (_, b)) in r0.encoder.iter().zip(r.encoder.iter()) {
+            let (av, bv) = (a.as_f32(), b.as_f32());
+            for i in 0..av.len() {
+                anyhow::ensure!(
+                    (av[i] - bv[i]).abs() <= 1e-5 * (1.0 + av[i].abs()),
+                    "encoder desync: rank {} vs 0 at {name}[{i}]: {} vs {}",
+                    r.rank,
+                    bv[i],
+                    av[i]
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn finalize_per_dataset(
+    name: String,
+    mut results: Vec<RankResult>,
+    datasets: &[DatasetId],
+) -> anyhow::Result<TrainOutcome> {
+    results.sort_by_key(|r| r.rank);
+    check_encoder_sync(&results)?;
+    let comm_elems = (
+        results.iter().map(|r| r.comm_global).max().unwrap_or(0),
+        results.iter().map(|r| r.comm_head).max().unwrap_or(0),
+    );
+    let mut heads: BTreeMap<DatasetId, ParamSet> = BTreeMap::new();
+    for r in &results {
+        if r.replica == 0 {
+            for (d, b) in &r.branches {
+                heads.insert(*d, b.clone());
+            }
+        }
+    }
+    for d in datasets {
+        anyhow::ensure!(heads.contains_key(d), "missing trained branch for {}", d.name());
+    }
+    let r0 = results
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("no rank results"))?;
+    Ok(TrainOutcome {
+        model: TrainedModel { name, encoder: r0.encoder, heads: Heads::PerDataset(heads) },
+        log: r0.log,
+        comm_elems,
+    })
+}
+
+impl TrainedModel {
+    fn with_name(mut self, name: String) -> TrainedModel {
+        self.name = name;
+        self
+    }
+}

@@ -1,0 +1,344 @@
+//! Padded static-shape graph batching.
+//!
+//! The AOT artifacts have fixed input shapes (max_nodes / max_edges /
+//! max_graphs); this module packs a list of structures into one padded
+//! batch whose field set matches `manifest.json["batch"]` exactly, and a
+//! greedy planner that splits a stream of structures into batches without
+//! overflowing any budget. This is the L3 side of the data hot path.
+
+use crate::data::graph::{radius_graph, Edge};
+use crate::data::structures::AtomicStructure;
+use crate::tensor::Tensor;
+
+/// Static batch geometry (mirrors python ModelConfig / manifest "config").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchDims {
+    pub max_nodes: usize,
+    pub max_edges: usize,
+    pub max_graphs: usize,
+}
+
+/// One padded batch, laid out exactly as the artifacts expect.
+#[derive(Debug, Clone)]
+pub struct GraphBatch {
+    pub dims: BatchDims,
+    pub species: Vec<i32>,      // [N]
+    pub edge_src: Vec<i32>,     // [E]
+    pub edge_dst: Vec<i32>,     // [E]
+    pub rel_hat: Vec<f32>,      // [E*3]
+    pub dist: Vec<f32>,         // [E]
+    pub node_mask: Vec<f32>,    // [N]
+    pub edge_mask: Vec<f32>,    // [E]
+    pub node_graph: Vec<i32>,   // [N]
+    pub graph_mask: Vec<f32>,   // [G]
+    pub inv_atoms: Vec<f32>,    // [G]
+    pub y_energy: Vec<f32>,     // [G] energy per atom
+    pub y_forces: Vec<f32>,     // [N*3]
+    /// Real (unpadded) counts.
+    pub n_nodes: usize,
+    pub n_edges: usize,
+    pub n_graphs: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum BatchError {
+    #[error("structure does not fit: {natoms} atoms / {nedges} edges vs budget {dims:?}")]
+    TooLarge { natoms: usize, nedges: usize, dims: BatchDims },
+    #[error("batch is full")]
+    Full,
+}
+
+impl GraphBatch {
+    pub fn empty(dims: BatchDims) -> GraphBatch {
+        GraphBatch {
+            dims,
+            species: vec![0; dims.max_nodes],
+            edge_src: vec![0; dims.max_edges],
+            edge_dst: vec![0; dims.max_edges],
+            rel_hat: vec![0.0; dims.max_edges * 3],
+            dist: vec![0.0; dims.max_edges],
+            node_mask: vec![0.0; dims.max_nodes],
+            edge_mask: vec![0.0; dims.max_edges],
+            // Padding nodes point at the last (always padded-if-any-padding)
+            // graph slot; masked out everywhere.
+            node_graph: vec![(dims.max_graphs - 1) as i32; dims.max_nodes],
+            graph_mask: vec![0.0; dims.max_graphs],
+            inv_atoms: vec![0.0; dims.max_graphs],
+            y_energy: vec![0.0; dims.max_graphs],
+            y_forces: vec![0.0; dims.max_nodes * 3],
+            n_nodes: 0,
+            n_edges: 0,
+            n_graphs: 0,
+        }
+    }
+
+    /// Reset to empty without reallocating (hot-loop reuse).
+    pub fn clear(&mut self) {
+        self.species[..self.n_nodes].fill(0);
+        self.node_mask[..self.n_nodes].fill(0.0);
+        self.node_graph[..self.n_nodes].fill((self.dims.max_graphs - 1) as i32);
+        self.y_forces[..self.n_nodes * 3].fill(0.0);
+        self.edge_src[..self.n_edges].fill(0);
+        self.edge_dst[..self.n_edges].fill(0);
+        self.rel_hat[..self.n_edges * 3].fill(0.0);
+        self.dist[..self.n_edges].fill(0.0);
+        self.edge_mask[..self.n_edges].fill(0.0);
+        self.graph_mask[..self.n_graphs].fill(0.0);
+        self.inv_atoms[..self.n_graphs].fill(0.0);
+        self.y_energy[..self.n_graphs].fill(0.0);
+        self.n_nodes = 0;
+        self.n_edges = 0;
+        self.n_graphs = 0;
+    }
+
+    /// Whether a structure with `natoms`/`nedges` fits in the remaining room.
+    pub fn fits(&self, natoms: usize, nedges: usize) -> bool {
+        self.n_nodes + natoms <= self.dims.max_nodes
+            && self.n_edges + nedges <= self.dims.max_edges
+            && self.n_graphs + 1 <= self.dims.max_graphs
+    }
+
+    /// Append one structure (with its precomputed edges).
+    pub fn push(
+        &mut self,
+        s: &AtomicStructure,
+        edges: &[Edge],
+    ) -> Result<(), BatchError> {
+        let natoms = s.natoms();
+        if natoms > self.dims.max_nodes || edges.len() > self.dims.max_edges {
+            return Err(BatchError::TooLarge {
+                natoms,
+                nedges: edges.len(),
+                dims: self.dims,
+            });
+        }
+        if !self.fits(natoms, edges.len()) {
+            return Err(BatchError::Full);
+        }
+        let base = self.n_nodes;
+        let g = self.n_graphs;
+        for (i, (&z, f)) in s.species.iter().zip(&s.forces).enumerate() {
+            let n = base + i;
+            self.species[n] = z as i32;
+            self.node_mask[n] = 1.0;
+            self.node_graph[n] = g as i32;
+            self.y_forces[n * 3] = f[0] as f32;
+            self.y_forces[n * 3 + 1] = f[1] as f32;
+            self.y_forces[n * 3 + 2] = f[2] as f32;
+        }
+        for (k, e) in edges.iter().enumerate() {
+            let idx = self.n_edges + k;
+            self.edge_src[idx] = (base + e.src as usize) as i32;
+            self.edge_dst[idx] = (base + e.dst as usize) as i32;
+            self.rel_hat[idx * 3] = e.rel_hat[0];
+            self.rel_hat[idx * 3 + 1] = e.rel_hat[1];
+            self.rel_hat[idx * 3 + 2] = e.rel_hat[2];
+            self.dist[idx] = e.dist;
+            self.edge_mask[idx] = 1.0;
+        }
+        self.graph_mask[g] = 1.0;
+        self.inv_atoms[g] = 1.0 / natoms as f32;
+        self.y_energy[g] = s.energy_per_atom() as f32;
+        self.n_nodes += natoms;
+        self.n_edges += edges.len();
+        self.n_graphs += 1;
+        Ok(())
+    }
+
+    /// Tensor for a batch field by its manifest name.
+    pub fn field(&self, name: &str) -> Tensor {
+        let d = self.dims;
+        match name {
+            "species" => Tensor::from_i32(&[d.max_nodes], self.species.clone()),
+            "edge_src" => Tensor::from_i32(&[d.max_edges], self.edge_src.clone()),
+            "edge_dst" => Tensor::from_i32(&[d.max_edges], self.edge_dst.clone()),
+            "rel_hat" => Tensor::from_f32(&[d.max_edges, 3], self.rel_hat.clone()),
+            "dist" => Tensor::from_f32(&[d.max_edges], self.dist.clone()),
+            "node_mask" => Tensor::from_f32(&[d.max_nodes], self.node_mask.clone()),
+            "edge_mask" => Tensor::from_f32(&[d.max_edges], self.edge_mask.clone()),
+            "node_graph" => Tensor::from_i32(&[d.max_nodes], self.node_graph.clone()),
+            "graph_mask" => Tensor::from_f32(&[d.max_graphs], self.graph_mask.clone()),
+            "inv_atoms" => Tensor::from_f32(&[d.max_graphs], self.inv_atoms.clone()),
+            "y_energy" => Tensor::from_f32(&[d.max_graphs], self.y_energy.clone()),
+            "y_forces" => Tensor::from_f32(&[d.max_nodes, 3], self.y_forces.clone()),
+            other => panic!("unknown batch field '{other}'"),
+        }
+    }
+}
+
+/// Greedy batch planner: converts a stream of structures into padded batches.
+/// Structures that would never fit (bigger than the whole budget) are
+/// reported in `skipped` rather than silently dropped.
+pub struct BatchBuilder {
+    pub dims: BatchDims,
+    pub cutoff: f64,
+    pub skipped: usize,
+    current: GraphBatch,
+}
+
+impl BatchBuilder {
+    pub fn new(dims: BatchDims, cutoff: f64) -> BatchBuilder {
+        BatchBuilder { dims, cutoff, skipped: 0, current: GraphBatch::empty(dims) }
+    }
+
+    /// Add a structure; returns a completed batch when the current one
+    /// overflows and a fresh one was started.
+    pub fn push(&mut self, s: &AtomicStructure) -> Option<GraphBatch> {
+        let edges = radius_graph(s, self.cutoff);
+        if s.natoms() > self.dims.max_nodes || edges.len() > self.dims.max_edges {
+            self.skipped += 1;
+            return None;
+        }
+        if self.current.fits(s.natoms(), edges.len()) {
+            self.current.push(s, &edges).expect("fits() checked");
+            None
+        } else {
+            let full = std::mem::replace(&mut self.current, GraphBatch::empty(self.dims));
+            self.current.push(s, &edges).expect("fresh batch must fit");
+            Some(full)
+        }
+    }
+
+    /// Flush the in-progress batch if it contains anything.
+    pub fn finish(&mut self) -> Option<GraphBatch> {
+        if self.current.n_graphs == 0 {
+            return None;
+        }
+        Some(std::mem::replace(&mut self.current, GraphBatch::empty(self.dims)))
+    }
+
+    /// Batch an entire slice of structures.
+    pub fn build_all(dims: BatchDims, cutoff: f64, structures: &[AtomicStructure]) -> Vec<GraphBatch> {
+        let mut b = BatchBuilder::new(dims, cutoff);
+        let mut out = Vec::new();
+        for s in structures {
+            if let Some(batch) = b.push(s) {
+                out.push(batch);
+            }
+        }
+        out.extend(b.finish());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{DatasetGenerator, GeneratorConfig};
+    use crate::data::structures::DatasetId;
+
+    fn dims() -> BatchDims {
+        BatchDims { max_nodes: 64, max_edges: 512, max_graphs: 8 }
+    }
+
+    fn structures(n: usize) -> Vec<AtomicStructure> {
+        let mut g = DatasetGenerator::new(
+            DatasetId::Ani1x,
+            1,
+            GeneratorConfig { max_atoms: 12, ..Default::default() },
+        );
+        g.take(n)
+    }
+
+    #[test]
+    fn batches_respect_budgets() {
+        let batches = BatchBuilder::build_all(dims(), 6.0, &structures(30));
+        assert!(!batches.is_empty());
+        for b in &batches {
+            assert!(b.n_nodes <= b.dims.max_nodes);
+            assert!(b.n_edges <= b.dims.max_edges);
+            assert!(b.n_graphs <= b.dims.max_graphs);
+            assert!(b.n_graphs > 0);
+        }
+    }
+
+    #[test]
+    fn all_structures_accounted_for() {
+        let ss = structures(25);
+        let batches = BatchBuilder::build_all(dims(), 6.0, &ss);
+        let total: usize = batches.iter().map(|b| b.n_graphs).sum();
+        assert_eq!(total, ss.len());
+        let total_atoms: usize = batches.iter().map(|b| b.n_nodes).sum();
+        assert_eq!(total_atoms, ss.iter().map(|s| s.natoms()).sum::<usize>());
+    }
+
+    #[test]
+    fn masks_are_consistent() {
+        let batches = BatchBuilder::build_all(dims(), 6.0, &structures(10));
+        for b in &batches {
+            let nm: f32 = b.node_mask.iter().sum();
+            assert_eq!(nm as usize, b.n_nodes);
+            let em: f32 = b.edge_mask.iter().sum();
+            assert_eq!(em as usize, b.n_edges);
+            let gm: f32 = b.graph_mask.iter().sum();
+            assert_eq!(gm as usize, b.n_graphs);
+            // Every real node's graph id must be a real graph.
+            for n in 0..b.n_nodes {
+                assert!((b.node_graph[n] as usize) < b.n_graphs);
+            }
+            // Edge endpoints must be real nodes of the same graph.
+            for e in 0..b.n_edges {
+                let (s, d) = (b.edge_src[e] as usize, b.edge_dst[e] as usize);
+                assert!(s < b.n_nodes && d < b.n_nodes);
+                assert_eq!(b.node_graph[s], b.node_graph[d]);
+            }
+        }
+    }
+
+    #[test]
+    fn energy_targets_are_per_atom() {
+        let ss = structures(3);
+        let mut batch = GraphBatch::empty(dims());
+        for s in &ss {
+            let edges = radius_graph(s, 6.0);
+            batch.push(s, &edges).unwrap();
+        }
+        for (g, s) in ss.iter().enumerate() {
+            assert!((batch.y_energy[g] as f64 - s.energy_per_atom()).abs() < 1e-4);
+            assert!((batch.inv_atoms[g] as f64 - 1.0 / s.natoms() as f64).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn clear_resets_for_reuse() {
+        let ss = structures(5);
+        let mut batch = GraphBatch::empty(dims());
+        for s in &ss {
+            let edges = radius_graph(s, 6.0);
+            if batch.fits(s.natoms(), edges.len()) {
+                batch.push(s, &edges).unwrap();
+            }
+        }
+        batch.clear();
+        let empty = GraphBatch::empty(dims());
+        assert_eq!(batch.species, empty.species);
+        assert_eq!(batch.node_mask, empty.node_mask);
+        assert_eq!(batch.edge_mask, empty.edge_mask);
+        assert_eq!(batch.n_nodes, 0);
+    }
+
+    #[test]
+    fn oversized_structure_is_skipped_not_dropped_silently() {
+        let mut g =
+            DatasetGenerator::new(DatasetId::MpTrj, 2, GeneratorConfig { max_atoms: 40, ..Default::default() });
+        let small_dims = BatchDims { max_nodes: 8, max_edges: 64, max_graphs: 4 };
+        let mut builder = BatchBuilder::new(small_dims, 6.0);
+        let mut pushed = 0;
+        for s in g.take(10) {
+            builder.push(&s);
+            pushed += 1;
+        }
+        assert_eq!(pushed, 10);
+        assert!(builder.skipped > 0, "oversized structures must be counted");
+    }
+
+    #[test]
+    fn field_tensors_have_manifest_shapes() {
+        let batches = BatchBuilder::build_all(dims(), 6.0, &structures(5));
+        let b = &batches[0];
+        assert_eq!(b.field("species").shape, vec![64]);
+        assert_eq!(b.field("rel_hat").shape, vec![512, 3]);
+        assert_eq!(b.field("y_forces").shape, vec![64, 3]);
+        assert_eq!(b.field("graph_mask").shape, vec![8]);
+    }
+}

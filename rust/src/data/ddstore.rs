@@ -1,0 +1,152 @@
+//! DDStore: the distributed in-memory sample store (paper Section 3).
+//!
+//! In HydraGNN, DDStore keeps every sample resident in the aggregate memory
+//! of all MPI processes and serves remote batches with one-sided MPI gets so
+//! epochs never touch the filesystem. Here the "processes" are the trainer's
+//! rank threads; ownership is round-robin by global index, local reads are
+//! free, and remote reads clone the sample from the owner's shard through a
+//! shared `Arc` (the in-process analogue of an RMA get) while counting
+//! local/remote traffic so the scaling model and tests can observe the
+//! access pattern.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::data::structures::AtomicStructure;
+
+/// Immutable, shareable store built once before training.
+pub struct DDStore {
+    /// shards[rank] = samples owned by that rank (global index % world == rank).
+    shards: Vec<Arc<Vec<AtomicStructure>>>,
+    total: usize,
+    local_gets: AtomicU64,
+    remote_gets: AtomicU64,
+}
+
+impl DDStore {
+    /// Distribute `samples` across `world` ranks round-robin (matches
+    /// DDStore's block-cyclic default).
+    pub fn new(samples: Vec<AtomicStructure>, world: usize) -> Arc<DDStore> {
+        assert!(world > 0);
+        let total = samples.len();
+        let mut shards: Vec<Vec<AtomicStructure>> = (0..world).map(|_| Vec::new()).collect();
+        for (i, s) in samples.into_iter().enumerate() {
+            shards[i % world].push(s);
+        }
+        Arc::new(DDStore {
+            shards: shards.into_iter().map(Arc::new).collect(),
+            total,
+            local_gets: AtomicU64::new(0),
+            remote_gets: AtomicU64::new(0),
+        })
+    }
+
+    pub fn world(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Owner rank of a global index.
+    pub fn owner(&self, global: usize) -> usize {
+        global % self.shards.len()
+    }
+
+    /// Number of samples owned by `rank`.
+    pub fn local_len(&self, rank: usize) -> usize {
+        self.shards[rank].len()
+    }
+
+    /// Fetch a sample by global index from the perspective of `rank`.
+    /// Local hits borrow the owner's shard directly; remote hits count as
+    /// one-sided gets (and clone, like an RMA transfer would).
+    pub fn get(&self, rank: usize, global: usize) -> Option<AtomicStructure> {
+        let owner = self.owner(global);
+        let slot = global / self.shards.len();
+        let sample = self.shards[owner].get(slot)?;
+        if owner == rank {
+            self.local_gets.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.remote_gets.fetch_add(1, Ordering::Relaxed);
+        }
+        Some(sample.clone())
+    }
+
+    /// Zero-copy access to a rank's own shard (epoch iteration fast path).
+    pub fn local_shard(&self, rank: usize) -> Arc<Vec<AtomicStructure>> {
+        Arc::clone(&self.shards[rank])
+    }
+
+    /// (local, remote) one-sided get counters since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.local_gets.load(Ordering::Relaxed), self.remote_gets.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{DatasetGenerator, GeneratorConfig};
+    use crate::data::structures::DatasetId;
+
+    fn samples(n: usize) -> Vec<AtomicStructure> {
+        let mut g = DatasetGenerator::new(DatasetId::Ani1x, 9, GeneratorConfig::default());
+        g.take(n)
+    }
+
+    #[test]
+    fn round_robin_ownership() {
+        let store = DDStore::new(samples(10), 3);
+        assert_eq!(store.local_len(0), 4); // 0,3,6,9
+        assert_eq!(store.local_len(1), 3); // 1,4,7
+        assert_eq!(store.local_len(2), 3); // 2,5,8
+        for g in 0..10 {
+            assert_eq!(store.owner(g), g % 3);
+        }
+    }
+
+    #[test]
+    fn get_returns_the_right_sample() {
+        let ss = samples(8);
+        let store = DDStore::new(ss.clone(), 4);
+        for (g, expected) in ss.iter().enumerate() {
+            let got = store.get(0, g).unwrap();
+            assert_eq!(&got, expected, "global index {g}");
+        }
+    }
+
+    #[test]
+    fn counts_local_vs_remote() {
+        let store = DDStore::new(samples(12), 4);
+        // Rank 1 reads everything: 3 locals (1,5,9), 9 remotes.
+        for g in 0..12 {
+            store.get(1, g).unwrap();
+        }
+        let (local, remote) = store.stats();
+        assert_eq!(local, 3);
+        assert_eq!(remote, 9);
+    }
+
+    #[test]
+    fn out_of_range_returns_none() {
+        let store = DDStore::new(samples(5), 2);
+        assert!(store.get(0, 5).is_none());
+        assert!(store.get(0, 4).is_some());
+    }
+
+    #[test]
+    fn single_rank_world_is_all_local() {
+        let store = DDStore::new(samples(6), 1);
+        for g in 0..6 {
+            store.get(0, g).unwrap();
+        }
+        let (local, remote) = store.stats();
+        assert_eq!((local, remote), (6, 0));
+    }
+}

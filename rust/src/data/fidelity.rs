@@ -1,0 +1,188 @@
+//! Per-dataset fidelity transforms: the multi-source, multi-fidelity
+//! inconsistency the paper's MTL approach exists to absorb.
+//!
+//! Real datasets disagree because they use different approximation theories
+//! (DFT vs CCSD) and parameterizations (exchange-correlation functional,
+//! basis set). The dominant, well-documented effect is a **per-element
+//! atomic reference-energy shift** — precisely what "total-energy alignment"
+//! schemes (Shiota et al.) try to remove, and what per-dataset MTL heads
+//! learn implicitly. We model a labeled energy as
+//!
+//!   E_label = scale_d * E_true + sum_atoms shift_d[z] + noise
+//!   F_label = scale_d * F_true + noise
+//!
+//! with all constants a deterministic function of the dataset id, so the
+//! conflict between datasets is reproducible run-to-run.
+
+use crate::data::structures::DatasetId;
+use crate::elements::MAX_Z;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct FidelityModel {
+    pub dataset: DatasetId,
+    /// Per-element reference energy shift, indexed by Z (0 unused).
+    pub ref_shift: Vec<f64>,
+    /// Multiplicative fidelity scale on the true energy / forces.
+    pub energy_scale: f64,
+    pub force_scale: f64,
+    /// Label noise floors (sigma).
+    pub energy_noise: f64,
+    pub force_noise: f64,
+}
+
+/// Per-dataset magnitudes. Organic datasets (different functionals over the
+/// same CHNO chemistry) get *large, conflicting* reference shifts — that is
+/// the instability source the paper highlights; the two inorganic datasets
+/// use nearly identical settings (PBE-family), so their shifts are close,
+/// mirroring how the paper's Model-MPTrj and Model-Alexandria transfer to
+/// each other far better than the organic models do to either.
+fn profile(dataset: DatasetId) -> (u64, f64, f64, f64, f64, f64) {
+    // (seed_tag, shift_sigma, scale_jitter, force_scale_jitter, e_noise, f_noise)
+    match dataset {
+        DatasetId::Ani1x => (11, 0.90, 0.02, 0.01, 0.002, 0.004),
+        DatasetId::Qm7x => (23, 1.40, 0.05, 0.02, 0.002, 0.004),
+        DatasetId::Transition1x => (37, 0.70, 0.03, 0.015, 0.003, 0.006),
+        // MPTrj / Alexandria: deliberately the *same* seed tag with small
+        // sigma, so inorganic labels nearly agree (see doc comment).
+        DatasetId::MpTrj => (53, 0.25, 0.01, 0.005, 0.002, 0.003),
+        DatasetId::Alexandria => (53, 0.25, 0.01, 0.005, 0.002, 0.003),
+    }
+}
+
+impl FidelityModel {
+    /// Deterministically build the fidelity model for a dataset.
+    pub fn for_dataset(dataset: DatasetId) -> FidelityModel {
+        let (tag, shift_sigma, scale_j, fscale_j, e_noise, f_noise) = profile(dataset);
+        let mut rng = Rng::new(fidelity_seed(tag));
+        let mut ref_shift = vec![0.0; MAX_Z + 1];
+        for z in 1..=MAX_Z {
+            ref_shift[z] = rng.normal_scaled(0.0, shift_sigma);
+        }
+        // Alexandria differs from MPTrj by a small constant offset on top of
+        // the shared shifts (same functional family, different code/settings).
+        if dataset == DatasetId::Alexandria {
+            for z in 1..=MAX_Z {
+                ref_shift[z] += 0.05;
+            }
+        }
+        let energy_scale = 1.0 + rng.normal_scaled(0.0, scale_j);
+        let force_scale = 1.0 + rng.normal_scaled(0.0, fscale_j);
+        FidelityModel {
+            dataset,
+            ref_shift,
+            energy_scale,
+            force_scale,
+            energy_noise: e_noise,
+            force_noise: f_noise,
+        }
+    }
+
+    /// Transform ground-truth labels into this dataset's labeled values.
+    pub fn apply(
+        &self,
+        species: &[u8],
+        true_energy: f64,
+        true_forces: &[[f64; 3]],
+        rng: &mut Rng,
+    ) -> (f64, Vec<[f64; 3]>) {
+        let shift: f64 = species.iter().map(|&z| self.ref_shift[z as usize]).sum();
+        let energy = self.energy_scale * true_energy
+            + shift
+            + rng.normal_scaled(0.0, self.energy_noise) * species.len() as f64;
+        let forces = true_forces
+            .iter()
+            .map(|f| {
+                [
+                    self.force_scale * f[0] + rng.normal_scaled(0.0, self.force_noise),
+                    self.force_scale * f[1] + rng.normal_scaled(0.0, self.force_noise),
+                    self.force_scale * f[2] + rng.normal_scaled(0.0, self.force_noise),
+                ]
+            })
+            .collect();
+        (energy, forces)
+    }
+
+    /// Mean absolute per-atom label disagreement with another fidelity model
+    /// over a given species composition — used by the multi_fidelity_inspect
+    /// example and the data tests to quantify the cross-dataset conflict.
+    pub fn disagreement(&self, other: &FidelityModel, species: &[u8]) -> f64 {
+        let a: f64 = species.iter().map(|&z| self.ref_shift[z as usize]).sum();
+        let b: f64 = species.iter().map(|&z| other.ref_shift[z as usize]).sum();
+        (a - b).abs() / species.len() as f64
+    }
+}
+
+/// Seed helper kept separate so the constant reads as intent, not magic.
+#[inline]
+fn fidelity_seed(tag: u64) -> u64 {
+    0xF1DE_1171u64 ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::structures::ALL_DATASETS;
+
+    #[test]
+    fn deterministic_per_dataset() {
+        for d in ALL_DATASETS {
+            let a = FidelityModel::for_dataset(d);
+            let b = FidelityModel::for_dataset(d);
+            assert_eq!(a.ref_shift, b.ref_shift, "{d:?}");
+            assert_eq!(a.energy_scale, b.energy_scale);
+        }
+    }
+
+    #[test]
+    fn organic_datasets_conflict_on_chno() {
+        let ani = FidelityModel::for_dataset(DatasetId::Ani1x);
+        let qm7 = FidelityModel::for_dataset(DatasetId::Qm7x);
+        // CH4-like composition: per-atom disagreement should be substantial.
+        let species = [6u8, 1, 1, 1, 1];
+        assert!(
+            ani.disagreement(&qm7, &species) > 0.05,
+            "organic sources must disagree: {}",
+            ani.disagreement(&qm7, &species)
+        );
+    }
+
+    #[test]
+    fn inorganic_datasets_nearly_agree() {
+        let mp = FidelityModel::for_dataset(DatasetId::MpTrj);
+        let alex = FidelityModel::for_dataset(DatasetId::Alexandria);
+        let species = [26u8, 8, 8, 22]; // FeTiO2-ish
+        // Same seed tag -> shifts differ only by the constant 0.05 offset.
+        assert!(
+            (alex.disagreement(&mp, &species) - 0.05).abs() < 1e-9,
+            "got {}",
+            alex.disagreement(&mp, &species)
+        );
+    }
+
+    #[test]
+    fn apply_shifts_energy_by_composition() {
+        let m = FidelityModel::for_dataset(DatasetId::Ani1x);
+        let species = [6u8, 1, 1];
+        let forces = vec![[0.1, -0.2, 0.3]; 3];
+        let mut rng = Rng::new(1);
+        let (e, f) = m.apply(&species, -3.0, &forces, &mut rng);
+        let expected_shift: f64 =
+            species.iter().map(|&z| m.ref_shift[z as usize]).sum();
+        // Noise sigma is small; check we are near scale*E + shift.
+        assert!((e - (m.energy_scale * -3.0 + expected_shift)).abs() < 0.1);
+        assert_eq!(f.len(), 3);
+    }
+
+    #[test]
+    fn forces_unaffected_by_ref_shift() {
+        // Reference shifts move energies, not forces: the paper's Table 2
+        // shows inorganic models agreeing on forces even across datasets.
+        let m = FidelityModel::for_dataset(DatasetId::Qm7x);
+        let species = [6u8];
+        let forces = vec![[1.0, 0.0, 0.0]];
+        let mut rng = Rng::new(2);
+        let (_, f) = m.apply(&species, 0.0, &forces, &mut rng);
+        assert!((f[0][0] - m.force_scale).abs() < 0.05);
+    }
+}

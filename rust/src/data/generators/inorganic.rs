@@ -1,0 +1,130 @@
+//! Crystalline fragment builder for the inorganic datasets (MPTrj,
+//! Alexandria): carves a finite cluster out of a jittered rock-salt-like
+//! lattice populated by 1-4 element species — the "periodic crystal"
+//! geometry class, approximated as clusters since the model (like HydraGNN
+//! on these datasets) sees a radius graph either way.
+
+use crate::data::potential::pair_params;
+use crate::util::rng::Rng;
+
+/// Build a crystal fragment of `natoms` atoms over up to 4 species drawn
+/// from `palette`. Returns (species, positions).
+pub fn build_crystal(
+    rng: &mut Rng,
+    palette: &[usize],
+    natoms: usize,
+) -> (Vec<u8>, Vec<[f64; 3]>) {
+    assert!(natoms >= 2);
+    // Composition: 1-4 distinct elements, like typical MP entries.
+    let n_species = rng.int_range(1, 4.min(natoms));
+    let chosen: Vec<usize> =
+        rng.choose_k(palette.len(), n_species).into_iter().map(|i| palette[i]).collect();
+
+    // Lattice constant from the mean pair equilibrium distance of the
+    // chosen composition, so the relaxed fragment is near equilibrium.
+    let mut r0_sum = 0.0;
+    let mut count = 0.0;
+    for &a in &chosen {
+        for &b in &chosen {
+            r0_sum += pair_params(a, b).r0;
+            count += 1.0;
+        }
+    }
+    let spacing = (r0_sum / count) * rng.range(0.98, 1.06);
+
+    // Fill a cube of lattice sites large enough for natoms, alternating
+    // species rock-salt style (checkerboard by site parity).
+    let side = (natoms as f64).cbrt().ceil() as usize + 1;
+    let mut sites: Vec<([f64; 3], usize)> = Vec::new();
+    for ix in 0..side {
+        for iy in 0..side {
+            for iz in 0..side {
+                let parity = (ix + iy + iz) % chosen.len().max(1);
+                sites.push((
+                    [ix as f64 * spacing, iy as f64 * spacing, iz as f64 * spacing],
+                    parity,
+                ));
+            }
+        }
+    }
+    // Keep the natoms sites closest to the cube center: a compact cluster.
+    let c = (side - 1) as f64 * spacing / 2.0;
+    sites.sort_by(|a, b| {
+        let da = (a.0[0] - c).powi(2) + (a.0[1] - c).powi(2) + (a.0[2] - c).powi(2);
+        let db = (b.0[0] - c).powi(2) + (b.0[1] - c).powi(2) + (b.0[2] - c).powi(2);
+        da.partial_cmp(&db).unwrap()
+    });
+    sites.truncate(natoms);
+
+    let mut species = Vec::with_capacity(natoms);
+    let mut positions = Vec::with_capacity(natoms);
+    for (pos, parity) in sites {
+        species.push(chosen[parity % chosen.len()] as u8);
+        // Thermal jitter.
+        positions.push([
+            pos[0] + rng.normal_scaled(0.0, 0.03 * spacing),
+            pos[1] + rng.normal_scaled(0.0, 0.03 * spacing),
+            pos[2] + rng.normal_scaled(0.0, 0.03 * spacing),
+        ]);
+    }
+    (species, positions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elements::mptrj_palette;
+
+    #[test]
+    fn builds_requested_size() {
+        let mut rng = Rng::new(1);
+        for natoms in [2, 5, 12, 30] {
+            let (s, p) = build_crystal(&mut rng, &mptrj_palette(), natoms);
+            assert_eq!(s.len(), natoms);
+            assert_eq!(p.len(), natoms);
+        }
+    }
+
+    #[test]
+    fn at_most_four_species() {
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let (s, _) = build_crystal(&mut rng, &mptrj_palette(), 16);
+            let mut uniq: Vec<u8> = s.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert!(uniq.len() <= 4);
+        }
+    }
+
+    #[test]
+    fn cluster_is_compact() {
+        // Max pairwise distance should be bounded by a few lattice spacings.
+        let mut rng = Rng::new(3);
+        let (_, p) = build_crystal(&mut rng, &mptrj_palette(), 27);
+        let mut max_d2: f64 = 0.0;
+        for i in 0..p.len() {
+            for j in (i + 1)..p.len() {
+                let d2 = (p[i][0] - p[j][0]).powi(2)
+                    + (p[i][1] - p[j][1]).powi(2)
+                    + (p[i][2] - p[j][2]).powi(2);
+                max_d2 = max_d2.max(d2);
+            }
+        }
+        assert!(max_d2.sqrt() < 30.0, "cluster too spread: {}", max_d2.sqrt());
+    }
+
+    #[test]
+    fn no_overlapping_sites() {
+        let mut rng = Rng::new(4);
+        let (_, p) = build_crystal(&mut rng, &mptrj_palette(), 20);
+        for i in 0..p.len() {
+            for j in (i + 1)..p.len() {
+                let d2 = (p[i][0] - p[j][0]).powi(2)
+                    + (p[i][1] - p[j][1]).powi(2)
+                    + (p[i][2] - p[j][2]).powi(2);
+                assert!(d2 > 0.25, "sites {i},{j} overlap");
+            }
+        }
+    }
+}

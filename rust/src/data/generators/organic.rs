@@ -1,0 +1,199 @@
+//! Molecular structure builder for the organic datasets (ANI1x, QM7-X,
+//! Transition1x): grows a random bonded tree with element-pair equilibrium
+//! bond lengths, then decorates with hydrogens — producing the "many small
+//! molecules" geometry class that dominates those sources.
+
+use crate::data::potential::pair_params;
+use crate::util::rng::Rng;
+
+/// Minimum allowed distance between non-bonded atoms (Angstrom) during
+/// placement; prevents pathological overlaps that would blow up the
+/// ground-truth potential.
+const MIN_SEP: f64 = 0.75;
+
+/// Build a molecule with exactly `natoms` atoms drawn from `palette`
+/// (hydrogen-biased like real organic chemistry).
+pub fn build_molecule(
+    rng: &mut Rng,
+    palette: &[usize],
+    natoms: usize,
+) -> (Vec<u8>, Vec<[f64; 3]>) {
+    assert!(natoms >= 2);
+    // Weight hydrogen ~2x the heavy elements combined, like typical organics.
+    let weights: Vec<f64> =
+        palette.iter().map(|&z| if z == 1 { 2.0 * palette.len() as f64 } else { 1.0 }).collect();
+
+    let mut species: Vec<u8> = Vec::with_capacity(natoms);
+    // First atom must be heavy so the tree has a backbone.
+    let heavy: Vec<usize> = palette.iter().copied().filter(|&z| z != 1).collect();
+    species.push(heavy[rng.below(heavy.len())] as u8);
+    for _ in 1..natoms {
+        species.push(palette[rng.weighted(&weights)] as u8);
+    }
+    // Hydrogens bond to heavy atoms only; put them at the end so every H
+    // can attach to an already-placed heavy atom.
+    species.sort_by_key(|&z| if z == 1 { 1 } else { 0 });
+
+    let positions = grow_tree(rng, &species);
+    (species, positions)
+}
+
+/// QM7-X style: limit the number of *non-hydrogen* atoms to `max_heavy`,
+/// then saturate with hydrogens up to `max_atoms`.
+pub fn build_molecule_heavy_limited(
+    rng: &mut Rng,
+    palette: &[usize],
+    max_heavy: usize,
+    max_atoms: usize,
+) -> (Vec<u8>, Vec<[f64; 3]>) {
+    let heavy_palette: Vec<usize> = palette.iter().copied().filter(|&z| z != 1).collect();
+    let n_heavy = rng.int_range(1, max_heavy).max(1);
+    let n_h = rng.int_range(1, (2 * n_heavy + 2).min(max_atoms.saturating_sub(n_heavy)).max(1));
+
+    let mut species: Vec<u8> = Vec::new();
+    for _ in 0..n_heavy {
+        species.push(heavy_palette[rng.below(heavy_palette.len())] as u8);
+    }
+    for _ in 0..n_h {
+        species.push(1);
+    }
+    let positions = grow_tree(rng, &species);
+    (species, positions)
+}
+
+/// Place atoms one at a time: each new atom bonds to a random previously
+/// placed non-hydrogen atom at the pair's Morse equilibrium distance, in a
+/// random direction, with overlap rejection.
+fn grow_tree(rng: &mut Rng, species: &[u8]) -> Vec<[f64; 3]> {
+    let n = species.len();
+    let mut positions: Vec<[f64; 3]> = Vec::with_capacity(n);
+    positions.push([0.0, 0.0, 0.0]);
+
+    for i in 1..n {
+        // Candidate anchors: heavy atoms already placed (or any if none).
+        let anchors: Vec<usize> = (0..i).filter(|&j| species[j] != 1).collect();
+        let anchor = if anchors.is_empty() { rng.below(i) } else { anchors[rng.below(anchors.len())] };
+        let r0 = pair_params(species[anchor] as usize, species[i] as usize).r0;
+
+        let mut placed = None;
+        for attempt in 0..64 {
+            let dir = rng.unit3();
+            // Allow slight bond-length variation; relax later anyway.
+            let bond = r0 * rng.range(0.95, 1.10);
+            let cand = [
+                positions[anchor][0] + bond * dir[0],
+                positions[anchor][1] + bond * dir[1],
+                positions[anchor][2] + bond * dir[2],
+            ];
+            let min_sep = if attempt < 48 { MIN_SEP } else { MIN_SEP * 0.8 };
+            let ok = positions.iter().enumerate().all(|(j, p)| {
+                if j == anchor {
+                    return true;
+                }
+                let d2 = (p[0] - cand[0]).powi(2)
+                    + (p[1] - cand[1]).powi(2)
+                    + (p[2] - cand[2]).powi(2);
+                d2 > min_sep * min_sep
+            });
+            if ok {
+                placed = Some(cand);
+                break;
+            }
+        }
+        // Fall back to a slightly longer bond if crowded.
+        positions.push(placed.unwrap_or_else(|| {
+            let dir = rng.unit3();
+            [
+                positions[anchor][0] + 1.6 * r0 * dir[0],
+                positions[anchor][1] + 1.6 * r0 * dir[1],
+                positions[anchor][2] + 1.6 * r0 * dir[2],
+            ]
+        }));
+    }
+    positions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elements::ani1x_palette;
+
+    #[test]
+    fn builds_requested_size() {
+        let mut rng = Rng::new(1);
+        let (s, p) = build_molecule(&mut rng, &ani1x_palette(), 10);
+        assert_eq!(s.len(), 10);
+        assert_eq!(p.len(), 10);
+    }
+
+    #[test]
+    fn first_atom_is_heavy() {
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let (s, _) = build_molecule(&mut rng, &ani1x_palette(), 6);
+            assert_ne!(s[0], 1, "backbone must start with a heavy atom");
+        }
+    }
+
+    #[test]
+    fn atoms_not_on_top_of_each_other() {
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let (_, p) = build_molecule(&mut rng, &ani1x_palette(), 12);
+            for i in 0..p.len() {
+                for j in (i + 1)..p.len() {
+                    let d2 = (p[i][0] - p[j][0]).powi(2)
+                        + (p[i][1] - p[j][1]).powi(2)
+                        + (p[i][2] - p[j][2]).powi(2);
+                    assert!(d2 > 0.2, "atoms {i},{j} overlap: d^2={d2}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn molecule_is_connected_within_cutoff() {
+        // Union-find over pairs within the potential cutoff: one component.
+        let mut rng = Rng::new(4);
+        let (s, p) = build_molecule(&mut rng, &ani1x_palette(), 12);
+        let n = s.len();
+        let mut parent: Vec<usize> = (0..n).collect();
+        fn find(parent: &mut Vec<usize>, i: usize) -> usize {
+            if parent[i] != i {
+                let r = find(parent, parent[i]);
+                parent[i] = r;
+            }
+            parent[i]
+        }
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let d2 = (p[i][0] - p[j][0]).powi(2)
+                    + (p[i][1] - p[j][1]).powi(2)
+                    + (p[i][2] - p[j][2]).powi(2);
+                if d2 < 36.0 {
+                    let (ri, rj) = (find(&mut parent, i), find(&mut parent, j));
+                    parent[ri] = rj;
+                }
+            }
+        }
+        let root = find(&mut parent, 0);
+        for i in 1..n {
+            assert_eq!(find(&mut parent, i), root, "atom {i} disconnected");
+        }
+    }
+
+    #[test]
+    fn heavy_limited_respects_limit() {
+        let mut rng = Rng::new(5);
+        for _ in 0..30 {
+            let (s, _) = build_molecule_heavy_limited(
+                &mut rng,
+                &crate::elements::qm7x_palette(),
+                7,
+                24,
+            );
+            assert!(s.iter().filter(|&&z| z != 1).count() <= 7);
+            assert!(s.iter().any(|&z| z == 1), "must contain hydrogens");
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Radius-graph construction: turns an `AtomicStructure` into the directed
+//! edge list the EGNN encoder consumes (both directions of every pair within
+//! the cutoff). Uses a cell-list spatial hash so batch assembly stays O(n)
+//! per structure — this sits on the data hot path of every training step.
+
+use crate::data::structures::AtomicStructure;
+
+/// One directed edge with precomputed geometry (the L2 model takes geometry
+/// as inputs rather than raw positions; see python/compile/model.py).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Edge {
+    pub src: u32,
+    pub dst: u32,
+    /// Unit vector x_src - x_dst.
+    pub rel_hat: [f32; 3],
+    /// Edge length, Angstrom.
+    pub dist: f32,
+}
+
+/// Radius graph over a structure. Edges are emitted in both directions.
+pub fn radius_graph(structure: &AtomicStructure, cutoff: f64) -> Vec<Edge> {
+    radius_graph_positions(&structure.positions, cutoff)
+}
+
+/// Radius graph over raw positions.
+pub fn radius_graph_positions(positions: &[[f64; 3]], cutoff: f64) -> Vec<Edge> {
+    let n = positions.len();
+    if n < 2 {
+        return Vec::new();
+    }
+    // Cell list with cell size = cutoff: each atom only checks 27 cells.
+    let mut lo = [f64::INFINITY; 3];
+    for p in positions {
+        for k in 0..3 {
+            lo[k] = lo[k].min(p[k]);
+        }
+    }
+    let cell_of = |p: &[f64; 3]| -> (i64, i64, i64) {
+        (
+            ((p[0] - lo[0]) / cutoff) as i64,
+            ((p[1] - lo[1]) / cutoff) as i64,
+            ((p[2] - lo[2]) / cutoff) as i64,
+        )
+    };
+    let mut cells: std::collections::HashMap<(i64, i64, i64), Vec<usize>> =
+        std::collections::HashMap::new();
+    for (i, p) in positions.iter().enumerate() {
+        cells.entry(cell_of(p)).or_default().push(i);
+    }
+
+    let c2 = cutoff * cutoff;
+    let mut edges = Vec::new();
+    for (i, pi) in positions.iter().enumerate() {
+        let (cx, cy, cz) = cell_of(pi);
+        for dx in -1..=1 {
+            for dy in -1..=1 {
+                for dz in -1..=1 {
+                    let Some(neighbors) = cells.get(&(cx + dx, cy + dy, cz + dz)) else {
+                        continue;
+                    };
+                    for &j in neighbors {
+                        if j == i {
+                            continue;
+                        }
+                        let pj = &positions[j];
+                        let rx = pi[0] - pj[0];
+                        let ry = pi[1] - pj[1];
+                        let rz = pi[2] - pj[2];
+                        let d2 = rx * rx + ry * ry + rz * rz;
+                        if d2 > c2 || d2 < 1e-12 {
+                            continue;
+                        }
+                        let d = d2.sqrt();
+                        edges.push(Edge {
+                            src: i as u32,
+                            dst: j as u32,
+                            rel_hat: [(rx / d) as f32, (ry / d) as f32, (rz / d) as f32],
+                            dist: d as f32,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    // Deterministic order regardless of hash iteration: sort by (src, dst).
+    edges.sort_unstable_by_key(|e| (e.src, e.dst));
+    edges
+}
+
+/// Brute-force O(n^2) reference used by tests to validate the cell list.
+pub fn radius_graph_brute(positions: &[[f64; 3]], cutoff: f64) -> Vec<Edge> {
+    let c2 = cutoff * cutoff;
+    let mut edges = Vec::new();
+    for i in 0..positions.len() {
+        for j in 0..positions.len() {
+            if i == j {
+                continue;
+            }
+            let rx = positions[i][0] - positions[j][0];
+            let ry = positions[i][1] - positions[j][1];
+            let rz = positions[i][2] - positions[j][2];
+            let d2 = rx * rx + ry * ry + rz * rz;
+            if d2 > c2 || d2 < 1e-12 {
+                continue;
+            }
+            let d = d2.sqrt();
+            edges.push(Edge {
+                src: i as u32,
+                dst: j as u32,
+                rel_hat: [(rx / d) as f32, (ry / d) as f32, (rz / d) as f32],
+                dist: d as f32,
+            });
+        }
+    }
+    edges.sort_unstable_by_key(|e| (e.src, e.dst));
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_positions(rng: &mut Rng, n: usize, span: f64) -> Vec<[f64; 3]> {
+        (0..n)
+            .map(|_| [rng.range(0.0, span), rng.range(0.0, span), rng.range(0.0, span)])
+            .collect()
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        let mut rng = Rng::new(1);
+        for trial in 0..20 {
+            let n = rng.int_range(2, 40);
+            let span = rng.range(3.0, 15.0);
+            let pos = random_positions(&mut rng, n, span);
+            let fast = radius_graph_positions(&pos, 4.5);
+            let brute = radius_graph_brute(&pos, 4.5);
+            assert_eq!(fast, brute, "trial {trial} n={n} span={span}");
+        }
+    }
+
+    #[test]
+    fn edges_are_bidirectional() {
+        let mut rng = Rng::new(2);
+        let pos = random_positions(&mut rng, 20, 6.0);
+        let edges = radius_graph_positions(&pos, 5.0);
+        for e in &edges {
+            assert!(
+                edges.iter().any(|r| r.src == e.dst && r.dst == e.src),
+                "missing reverse of {e:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn rel_hat_is_unit_and_antisymmetric() {
+        let mut rng = Rng::new(3);
+        let pos = random_positions(&mut rng, 15, 5.0);
+        let edges = radius_graph_positions(&pos, 6.0);
+        for e in &edges {
+            let n = (e.rel_hat[0].powi(2) + e.rel_hat[1].powi(2) + e.rel_hat[2].powi(2)).sqrt();
+            assert!((n - 1.0).abs() < 1e-5);
+            let rev = edges.iter().find(|r| r.src == e.dst && r.dst == e.src).unwrap();
+            for k in 0..3 {
+                assert!((e.rel_hat[k] + rev.rel_hat[k]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn no_self_edges_and_within_cutoff() {
+        let mut rng = Rng::new(4);
+        let pos = random_positions(&mut rng, 30, 8.0);
+        for e in radius_graph_positions(&pos, 4.0) {
+            assert_ne!(e.src, e.dst);
+            assert!(e.dist <= 4.0 + 1e-6);
+            assert!(e.dist > 0.0);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_atom() {
+        assert!(radius_graph_positions(&[], 5.0).is_empty());
+        assert!(radius_graph_positions(&[[0.0; 3]], 5.0).is_empty());
+    }
+}

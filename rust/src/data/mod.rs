@@ -1,0 +1,18 @@
+//! Data substrate: structures, ground-truth potential, fidelity transforms,
+//! the five synthetic dataset generators, radius graphs, padded batching,
+//! the GPack packed file format (ADIOS substitute), the DDStore distributed
+//! sample store, and deterministic splits.
+
+pub mod batch;
+pub mod ddstore;
+pub mod fidelity;
+pub mod generators;
+pub mod graph;
+pub mod pack;
+pub mod potential;
+pub mod split;
+pub mod structures;
+
+pub use batch::{BatchBuilder, BatchDims, GraphBatch};
+pub use ddstore::DDStore;
+pub use structures::{AtomicStructure, DatasetId, ALL_DATASETS};

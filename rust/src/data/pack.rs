@@ -1,0 +1,312 @@
+//! GPack: the packed binary dataset format (the repo's ADIOS substitute).
+//!
+//! Role in the system (paper Section 3): serialize millions of variable-size
+//! graph samples once during data preparation, then give training processes
+//! O(1) random access to any sample without touching a Python stack. Layout:
+//!
+//! ```text
+//! "GPAK" | u32 version
+//! repeated sample records:
+//!     u32 natoms | u8 dataset | species u8*natoms
+//!     positions f64*3*natoms | energy f64 | forces f64*3*natoms
+//! footer:
+//!     u64 offsets[count]                (byte offset of each record)
+//!     u64 count | u64 index_offset | u32 crc32(index bytes) | "KAPG"
+//! ```
+//!
+//! Everything is little-endian. The trailing index makes the writer purely
+//! append-only (streamable) while readers can mmap-style seek per sample.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::data::structures::{AtomicStructure, DatasetId};
+
+const MAGIC: &[u8; 4] = b"GPAK";
+const MAGIC_END: &[u8; 4] = b"KAPG";
+const VERSION: u32 = 1;
+
+#[derive(Debug, thiserror::Error)]
+pub enum PackError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("not a GPack file (bad magic)")]
+    BadMagic,
+    #[error("unsupported version {0}")]
+    BadVersion(u32),
+    #[error("index checksum mismatch")]
+    BadChecksum,
+    #[error("corrupt record at offset {0}")]
+    Corrupt(u64),
+    #[error("sample index {0} out of range ({1} samples)")]
+    OutOfRange(usize, usize),
+}
+
+// ---------------------------------------------------------------------------
+// writer
+// ---------------------------------------------------------------------------
+
+pub struct GPackWriter {
+    out: BufWriter<File>,
+    offsets: Vec<u64>,
+    pos: u64,
+}
+
+impl GPackWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<GPackWriter, PackError> {
+        let mut out = BufWriter::new(File::create(path)?);
+        out.write_all(MAGIC)?;
+        out.write_all(&VERSION.to_le_bytes())?;
+        Ok(GPackWriter { out, offsets: Vec::new(), pos: 8 })
+    }
+
+    pub fn write(&mut self, s: &AtomicStructure) -> Result<(), PackError> {
+        self.offsets.push(self.pos);
+        let mut buf = Vec::with_capacity(16 + s.natoms() * 49);
+        buf.extend_from_slice(&(s.natoms() as u32).to_le_bytes());
+        buf.push(s.dataset.index() as u8);
+        buf.extend_from_slice(&s.species);
+        for p in &s.positions {
+            for &x in p {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        buf.extend_from_slice(&s.energy.to_le_bytes());
+        for f in &s.forces {
+            for &x in f {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        self.out.write_all(&buf)?;
+        self.pos += buf.len() as u64;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offsets.is_empty()
+    }
+
+    /// Write the footer index and flush. Consumes the writer.
+    pub fn finish(mut self) -> Result<usize, PackError> {
+        let index_offset = self.pos;
+        let mut index = Vec::with_capacity(self.offsets.len() * 8);
+        for off in &self.offsets {
+            index.extend_from_slice(&off.to_le_bytes());
+        }
+        let crc = crc32fast::hash(&index);
+        self.out.write_all(&index)?;
+        self.out.write_all(&(self.offsets.len() as u64).to_le_bytes())?;
+        self.out.write_all(&index_offset.to_le_bytes())?;
+        self.out.write_all(&crc.to_le_bytes())?;
+        self.out.write_all(MAGIC_END)?;
+        self.out.flush()?;
+        Ok(self.offsets.len())
+    }
+}
+
+/// Convenience: pack a slice of structures into `path`.
+pub fn write_all(path: impl AsRef<Path>, structures: &[AtomicStructure]) -> Result<usize, PackError> {
+    let mut w = GPackWriter::create(path)?;
+    for s in structures {
+        w.write(s)?;
+    }
+    w.finish()
+}
+
+// ---------------------------------------------------------------------------
+// reader
+// ---------------------------------------------------------------------------
+
+pub struct GPackReader {
+    file: BufReader<File>,
+    offsets: Vec<u64>,
+}
+
+impl GPackReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<GPackReader, PackError> {
+        let mut file = BufReader::new(File::open(path)?);
+        let mut head = [0u8; 8];
+        file.read_exact(&mut head)?;
+        if &head[..4] != MAGIC {
+            return Err(PackError::BadMagic);
+        }
+        let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(PackError::BadVersion(version));
+        }
+
+        // Tail: count u64 | index_offset u64 | crc u32 | magic 4 = 24 bytes.
+        let end = file.seek(SeekFrom::End(0))?;
+        if end < 32 {
+            return Err(PackError::BadMagic);
+        }
+        file.seek(SeekFrom::End(-24))?;
+        let mut tail = [0u8; 24];
+        file.read_exact(&mut tail)?;
+        if &tail[20..24] != MAGIC_END {
+            return Err(PackError::BadMagic);
+        }
+        let count = u64::from_le_bytes(tail[0..8].try_into().unwrap()) as usize;
+        let index_offset = u64::from_le_bytes(tail[8..16].try_into().unwrap());
+        let crc_stored = u32::from_le_bytes(tail[16..20].try_into().unwrap());
+
+        file.seek(SeekFrom::Start(index_offset))?;
+        let mut index = vec![0u8; count * 8];
+        file.read_exact(&mut index)?;
+        if crc32fast::hash(&index) != crc_stored {
+            return Err(PackError::BadChecksum);
+        }
+        let offsets = index
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(GPackReader { file, offsets })
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offsets.is_empty()
+    }
+
+    /// Random-access read of sample `i`.
+    pub fn read(&mut self, i: usize) -> Result<AtomicStructure, PackError> {
+        let off = *self
+            .offsets
+            .get(i)
+            .ok_or(PackError::OutOfRange(i, self.offsets.len()))?;
+        self.file.seek(SeekFrom::Start(off))?;
+        let mut head = [0u8; 5];
+        self.file.read_exact(&mut head)?;
+        let natoms = u32::from_le_bytes(head[0..4].try_into().unwrap()) as usize;
+        if natoms == 0 || natoms > 1_000_000 {
+            return Err(PackError::Corrupt(off));
+        }
+        let dataset_idx = head[4] as usize;
+        if dataset_idx >= crate::data::structures::ALL_DATASETS.len() {
+            return Err(PackError::Corrupt(off));
+        }
+
+        let mut species = vec![0u8; natoms];
+        self.file.read_exact(&mut species)?;
+        let mut body = vec![0u8; natoms * 24 + 8 + natoms * 24];
+        self.file.read_exact(&mut body)?;
+
+        let mut pos_iter = body.chunks_exact(8);
+        let mut next_f64 =
+            || f64::from_le_bytes(pos_iter.next().unwrap().try_into().unwrap());
+        let positions: Vec<[f64; 3]> =
+            (0..natoms).map(|_| [next_f64(), next_f64(), next_f64()]).collect();
+        let energy = next_f64();
+        let forces: Vec<[f64; 3]> =
+            (0..natoms).map(|_| [next_f64(), next_f64(), next_f64()]).collect();
+
+        Ok(AtomicStructure {
+            species,
+            positions,
+            energy,
+            forces,
+            dataset: DatasetId::from_index(dataset_idx),
+        })
+    }
+
+    /// Read every sample (tests / small files).
+    pub fn read_all(&mut self) -> Result<Vec<AtomicStructure>, PackError> {
+        (0..self.len()).map(|i| self.read(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{DatasetGenerator, GeneratorConfig};
+
+    fn samples(n: usize) -> Vec<AtomicStructure> {
+        let mut g =
+            DatasetGenerator::new(DatasetId::Transition1x, 5, GeneratorConfig::default());
+        g.take(n)
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("hydra_mtp_pack_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}_{}.gpack", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tmp("roundtrip");
+        let ss = samples(20);
+        let n = write_all(&path, &ss).unwrap();
+        assert_eq!(n, 20);
+        let mut r = GPackReader::open(&path).unwrap();
+        assert_eq!(r.len(), 20);
+        let back = r.read_all().unwrap();
+        assert_eq!(ss, back);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn random_access_matches_sequential() {
+        let path = tmp("random_access");
+        let ss = samples(10);
+        write_all(&path, &ss).unwrap();
+        let mut r = GPackReader::open(&path).unwrap();
+        // Read out of order.
+        for &i in &[7usize, 0, 9, 3, 3, 1] {
+            assert_eq!(r.read(i).unwrap(), ss[i], "sample {i}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn out_of_range_is_error() {
+        let path = tmp("oob");
+        write_all(&path, &samples(3)).unwrap();
+        let mut r = GPackReader::open(&path).unwrap();
+        assert!(matches!(r.read(3), Err(PackError::OutOfRange(3, 3))));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn detects_corrupted_index() {
+        let path = tmp("corrupt");
+        write_all(&path, &samples(5)).unwrap();
+        // Flip a byte inside the index region (near the end, before tail).
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 30] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        match GPackReader::open(&path) {
+            Err(PackError::BadChecksum) | Err(PackError::BadMagic) => {}
+            Err(other) => panic!("expected checksum error, got {other:?}"),
+            Ok(_) => panic!("expected checksum error, got Ok"),
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_non_gpack_files() {
+        let path = tmp("notgpack");
+        std::fs::write(&path, b"definitely not a gpack file, but long enough to have a tail........").unwrap();
+        assert!(matches!(GPackReader::open(&path), Err(PackError::BadMagic)));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_file_roundtrip() {
+        let path = tmp("empty");
+        let w = GPackWriter::create(&path).unwrap();
+        w.finish().unwrap();
+        let r = GPackReader::open(&path).unwrap();
+        assert_eq!(r.len(), 0);
+        std::fs::remove_file(path).ok();
+    }
+}

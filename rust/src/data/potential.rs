@@ -1,0 +1,199 @@
+//! Ground-truth classical potential used to label the synthetic datasets.
+//!
+//! The paper trains on DFT/CCSD labels we cannot regenerate; the substitution
+//! (DESIGN.md Section 3) is a smooth element-pair Morse potential whose pair
+//! parameters derive from covalent radii and electronegativities. What
+//! matters for reproducing the paper's *learning* behaviour is that labels
+//! are (a) a smooth function of geometry, (b) element-specific, and
+//! (c) shared across datasets **before** the per-dataset fidelity transform —
+//! so the multi-fidelity inconsistency is purely the transform, exactly like
+//! differing DFT settings on the same physical system.
+
+use crate::elements::element;
+
+/// Pairwise interaction cutoff (Angstrom). Matches the model's graph cutoff
+/// so the GNN sees every interacting pair.
+pub const CUTOFF: f64 = 6.0;
+
+/// Morse parameters for an element pair.
+#[derive(Debug, Clone, Copy)]
+pub struct PairParams {
+    /// Well depth (eV-ish scale).
+    pub d_e: f64,
+    /// Width parameter (1/Angstrom).
+    pub a: f64,
+    /// Equilibrium distance (Angstrom).
+    pub r0: f64,
+}
+
+/// Derive pair parameters from element data. Deterministic and smooth in the
+/// element properties, so chemically similar pairs get similar labels.
+pub fn pair_params(zi: usize, zj: usize) -> PairParams {
+    let ei = element(zi);
+    let ej = element(zj);
+    let r0 = ei.radius + ej.radius;
+    // Stronger wells for electronegativity contrast (ionic character) plus a
+    // covalent base that grows with the geometric mean of chi.
+    let chi_gm = (ei.chi.max(0.5) * ej.chi.max(0.5)).sqrt();
+    let d_e = 0.35 + 0.18 * chi_gm + 0.10 * (ei.chi - ej.chi).abs();
+    let a = 1.8 / r0.max(0.5);
+    PairParams { d_e, a, r0 }
+}
+
+/// Morse pair energy at distance `d` (shifted so u(CUTOFF-ish) ~ 0 tail).
+#[inline]
+pub fn pair_energy(p: PairParams, d: f64) -> f64 {
+    let x = (-p.a * (d - p.r0)).exp();
+    p.d_e * (x * x - 2.0 * x)
+}
+
+/// d(pair_energy)/dd (used by tests; the force loop inlines this).
+#[inline]
+pub fn pair_energy_deriv(p: PairParams, d: f64) -> f64 {
+    let x = (-p.a * (d - p.r0)).exp();
+    // d/dd [ d_e*(x^2 - 2x) ] with dx/dd = -a*x.
+    p.d_e * (-2.0 * p.a * x * x + 2.0 * p.a * x)
+}
+
+/// Total energy + analytic forces for a set of atoms (open boundary).
+///
+/// O(n^2) pair loop — fine for the <= few-hundred-atom structures the
+/// paper's datasets contain (atomistic data is many *small* graphs).
+pub fn energy_and_forces(
+    species: &[u8],
+    positions: &[[f64; 3]],
+) -> (f64, Vec<[f64; 3]>) {
+    let n = species.len();
+    assert_eq!(positions.len(), n);
+    let mut energy = 0.0;
+    let mut forces = vec![[0.0f64; 3]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dx = [
+                positions[i][0] - positions[j][0],
+                positions[i][1] - positions[j][1],
+                positions[i][2] - positions[j][2],
+            ];
+            let d2 = dx[0] * dx[0] + dx[1] * dx[1] + dx[2] * dx[2];
+            if d2 > CUTOFF * CUTOFF || d2 < 1e-12 {
+                continue;
+            }
+            let d = d2.sqrt();
+            let p = pair_params(species[i] as usize, species[j] as usize);
+            let x = (-p.a * (d - p.r0)).exp();
+            energy += p.d_e * (x * x - 2.0 * x);
+            // du/dd; force on i is -du/dd * dhat, on j the opposite.
+            let dudd = p.d_e * (-2.0 * p.a * x * x + 2.0 * p.a * x);
+            let f = -dudd / d;
+            for k in 0..3 {
+                forces[i][k] += f * dx[k];
+                forces[j][k] -= f * dx[k];
+            }
+        }
+    }
+    (energy, forces)
+}
+
+/// Equilibrium-ish relaxation: a few damped steepest-descent steps. Used by
+/// the generators to produce near-equilibrium structures (MPTrj/Alexandria
+/// style) from random initial placements.
+pub fn relax(species: &[u8], positions: &mut [[f64; 3]], steps: usize, step_size: f64) {
+    for _ in 0..steps {
+        let (_, forces) = energy_and_forces(species, positions);
+        let max_f = forces
+            .iter()
+            .flat_map(|f| f.iter().map(|x| x.abs()))
+            .fold(0.0f64, f64::max);
+        if max_f < 1e-3 {
+            break;
+        }
+        let scale = step_size / max_f.max(1.0);
+        for (pos, f) in positions.iter_mut().zip(&forces) {
+            for k in 0..3 {
+                pos[k] += scale * f[k];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_params_symmetric() {
+        let a = pair_params(6, 8);
+        let b = pair_params(8, 6);
+        assert!((a.d_e - b.d_e).abs() < 1e-12);
+        assert!((a.r0 - b.r0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn minimum_is_at_r0() {
+        let p = pair_params(6, 6);
+        let at_r0 = pair_energy(p, p.r0);
+        assert!(at_r0 < pair_energy(p, p.r0 * 0.9));
+        assert!(at_r0 < pair_energy(p, p.r0 * 1.1));
+        assert!((at_r0 + p.d_e).abs() < 1e-9, "well depth at r0");
+    }
+
+    #[test]
+    fn forces_are_negative_gradient() {
+        // Finite-difference check of the analytic forces.
+        let species = [6u8, 8, 1];
+        let positions = [[0.0, 0.0, 0.0], [1.3, 0.1, -0.2], [-0.4, 0.9, 0.3]];
+        let (_, forces) = energy_and_forces(&species, &positions);
+        let h = 1e-6;
+        for atom in 0..3 {
+            for k in 0..3 {
+                let mut plus = positions;
+                plus[atom][k] += h;
+                let mut minus = positions;
+                minus[atom][k] -= h;
+                let (ep, _) = energy_and_forces(&species, &plus);
+                let (em, _) = energy_and_forces(&species, &minus);
+                let fd = -(ep - em) / (2.0 * h);
+                assert!(
+                    (fd - forces[atom][k]).abs() < 1e-5,
+                    "atom {atom} comp {k}: fd={fd} analytic={}",
+                    forces[atom][k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forces_sum_to_zero() {
+        let species = [26u8, 8, 8, 1];
+        let positions =
+            [[0.0, 0.0, 0.0], [1.8, 0.0, 0.0], [0.0, 1.9, 0.0], [0.5, 0.5, 1.2]];
+        let (_, forces) = energy_and_forces(&species, &positions);
+        for k in 0..3 {
+            let total: f64 = forces.iter().map(|f| f[k]).sum();
+            assert!(total.abs() < 1e-10, "momentum conservation, axis {k}");
+        }
+    }
+
+    #[test]
+    fn relax_reduces_energy() {
+        let species = [6u8, 6];
+        let mut positions = [[0.0, 0.0, 0.0], [1.0, 0.0, 0.0]]; // compressed
+        let (e0, _) = energy_and_forces(&species, &positions);
+        relax(&species, &mut positions, 50, 0.05);
+        let (e1, _) = energy_and_forces(&species, &positions);
+        assert!(e1 < e0, "{e1} < {e0}");
+        // Should approach the Morse minimum r0 = 2 * r_C = 1.52.
+        let d = (positions[0][0] - positions[1][0]).abs();
+        let r0 = pair_params(6, 6).r0;
+        assert!((d - r0).abs() < 0.2, "d={d} r0={r0}");
+    }
+
+    #[test]
+    fn beyond_cutoff_no_interaction() {
+        let species = [1u8, 1];
+        let positions = [[0.0, 0.0, 0.0], [CUTOFF + 1.0, 0.0, 0.0]];
+        let (e, forces) = energy_and_forces(&species, &positions);
+        assert_eq!(e, 0.0);
+        assert_eq!(forces[0], [0.0; 3]);
+    }
+}

@@ -1,0 +1,112 @@
+//! Deterministic train/validation/test splitting.
+//!
+//! Splits are a pure function of the sample's global index via a hash, so
+//! every rank derives identical splits without communication, and the split
+//! is stable as files are re-read or shards move between ranks.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+/// Fractions for (train, val); test is the remainder.
+#[derive(Debug, Clone, Copy)]
+pub struct SplitSpec {
+    pub train: f64,
+    pub val: f64,
+}
+
+impl Default for SplitSpec {
+    fn default() -> Self {
+        // Matches the common 0.8 / 0.1 / 0.1 convention used by HydraGNN.
+        SplitSpec { train: 0.8, val: 0.1 }
+    }
+}
+
+impl SplitSpec {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.train > 0.0 && self.val >= 0.0, "bad split fractions");
+        anyhow::ensure!(self.train + self.val < 1.0 + 1e-12, "train+val must be <= 1");
+        Ok(())
+    }
+
+    /// Split assignment for a global sample index.
+    pub fn of(&self, index: usize, seed: u64) -> Split {
+        let h = hash_index(index as u64, seed);
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u < self.train {
+            Split::Train
+        } else if u < self.train + self.val {
+            Split::Val
+        } else {
+            Split::Test
+        }
+    }
+
+    /// Indices of a split among 0..n.
+    pub fn indices(&self, n: usize, seed: u64, which: Split) -> Vec<usize> {
+        (0..n).filter(|&i| self.of(i, seed) == which).collect()
+    }
+}
+
+#[inline]
+fn hash_index(i: u64, seed: u64) -> u64 {
+    let mut z = i.wrapping_add(seed).wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_is_deterministic() {
+        let spec = SplitSpec::default();
+        for i in 0..100 {
+            assert_eq!(spec.of(i, 7), spec.of(i, 7));
+        }
+    }
+
+    #[test]
+    fn partitions_are_disjoint_and_complete() {
+        let spec = SplitSpec::default();
+        let n = 5000;
+        let train = spec.indices(n, 1, Split::Train);
+        let val = spec.indices(n, 1, Split::Val);
+        let test = spec.indices(n, 1, Split::Test);
+        assert_eq!(train.len() + val.len() + test.len(), n);
+        let mut all: Vec<usize> = train.iter().chain(&val).chain(&test).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n);
+    }
+
+    #[test]
+    fn fractions_approximately_respected() {
+        let spec = SplitSpec { train: 0.8, val: 0.1 };
+        let n = 20000;
+        let train = spec.indices(n, 3, Split::Train).len() as f64 / n as f64;
+        let val = spec.indices(n, 3, Split::Val).len() as f64 / n as f64;
+        assert!((train - 0.8).abs() < 0.02, "train={train}");
+        assert!((val - 0.1).abs() < 0.01, "val={val}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let spec = SplitSpec::default();
+        let n = 1000;
+        let a = spec.indices(n, 1, Split::Test);
+        let b = spec.indices(n, 2, Split::Test);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn validates_fractions() {
+        assert!(SplitSpec { train: 0.9, val: 0.2 }.validate().is_err());
+        assert!(SplitSpec { train: 0.7, val: 0.1 }.validate().is_ok());
+    }
+}

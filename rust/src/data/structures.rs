@@ -1,0 +1,187 @@
+//! Core atomistic data types: a structure (one data sample) and the identity
+//! of the five source datasets it may come from.
+
+use crate::elements;
+
+/// The five open-source datasets aggregated in the paper (Section 4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DatasetId {
+    Ani1x,
+    Qm7x,
+    Transition1x,
+    MpTrj,
+    Alexandria,
+}
+
+pub const ALL_DATASETS: [DatasetId; 5] = [
+    DatasetId::Ani1x,
+    DatasetId::Qm7x,
+    DatasetId::Transition1x,
+    DatasetId::MpTrj,
+    DatasetId::Alexandria,
+];
+
+impl DatasetId {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetId::Ani1x => "ANI1x",
+            DatasetId::Qm7x => "QM7-X",
+            DatasetId::Transition1x => "Transition1x",
+            DatasetId::MpTrj => "MPTrj",
+            DatasetId::Alexandria => "Alexandria",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        ALL_DATASETS.iter().position(|d| d == self).unwrap()
+    }
+
+    pub fn from_index(i: usize) -> DatasetId {
+        ALL_DATASETS[i]
+    }
+
+    pub fn from_name(name: &str) -> Option<DatasetId> {
+        let lower = name.to_ascii_lowercase();
+        ALL_DATASETS
+            .iter()
+            .find(|d| d.name().to_ascii_lowercase().replace('-', "") == lower.replace('-', ""))
+            .copied()
+    }
+
+    /// Whether the dataset contains inorganic (periodic crystal) compounds.
+    pub fn is_inorganic(&self) -> bool {
+        matches!(self, DatasetId::MpTrj | DatasetId::Alexandria)
+    }
+
+    /// Element palette of the dataset (paper Section 4.1).
+    pub fn palette(&self) -> Vec<usize> {
+        match self {
+            DatasetId::Ani1x => elements::ani1x_palette(),
+            DatasetId::Qm7x => elements::qm7x_palette(),
+            DatasetId::Transition1x => elements::transition1x_palette(),
+            DatasetId::MpTrj => elements::mptrj_palette(),
+            DatasetId::Alexandria => elements::alexandria_palette(),
+        }
+    }
+}
+
+/// One atomistic structure: the unit data sample for GFM pre-training.
+///
+/// `energy` / `forces` hold the *labeled* values after the dataset's fidelity
+/// transform (what a DFT code with that dataset's settings would report) —
+/// the ground-truth values before the transform are not stored, mirroring
+/// real multi-source data where the "true" functional is unknown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AtomicStructure {
+    /// Atomic numbers (1-based; never 0 — 0 is the padding species).
+    pub species: Vec<u8>,
+    /// Cartesian coordinates, Angstrom.
+    pub positions: Vec<[f64; 3]>,
+    /// Labeled total energy (dataset-fidelity units).
+    pub energy: f64,
+    /// Labeled per-atom forces.
+    pub forces: Vec<[f64; 3]>,
+    /// Source dataset.
+    pub dataset: DatasetId,
+}
+
+impl AtomicStructure {
+    pub fn natoms(&self) -> usize {
+        self.species.len()
+    }
+
+    pub fn energy_per_atom(&self) -> f64 {
+        self.energy / self.natoms() as f64
+    }
+
+    /// Sanity check used by generators, the pack reader and tests.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.species.is_empty(), "empty structure");
+        anyhow::ensure!(
+            self.positions.len() == self.species.len(),
+            "positions/species length mismatch"
+        );
+        anyhow::ensure!(
+            self.forces.len() == self.species.len(),
+            "forces/species length mismatch"
+        );
+        for &z in &self.species {
+            anyhow::ensure!(
+                (1..=elements::MAX_Z as u8).contains(&z),
+                "invalid species {z}"
+            );
+        }
+        anyhow::ensure!(self.energy.is_finite(), "non-finite energy");
+        for f in &self.forces {
+            anyhow::ensure!(
+                f.iter().all(|x| x.is_finite()),
+                "non-finite force component"
+            );
+        }
+        for p in &self.positions {
+            anyhow::ensure!(p.iter().all(|x| x.is_finite()), "non-finite position");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> AtomicStructure {
+        AtomicStructure {
+            species: vec![6, 1, 1, 1, 1],
+            positions: vec![
+                [0.0, 0.0, 0.0],
+                [0.63, 0.63, 0.63],
+                [-0.63, -0.63, 0.63],
+                [-0.63, 0.63, -0.63],
+                [0.63, -0.63, -0.63],
+            ],
+            energy: -5.0,
+            forces: vec![[0.0; 3]; 5],
+            dataset: DatasetId::Ani1x,
+        }
+    }
+
+    #[test]
+    fn validates_good_structure() {
+        sample().validate().unwrap();
+        assert_eq!(sample().natoms(), 5);
+        assert!((sample().energy_per_atom() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_structures() {
+        let mut s = sample();
+        s.species[0] = 0;
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.forces.pop();
+        assert!(s.validate().is_err());
+
+        let mut s = sample();
+        s.energy = f64::NAN;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn dataset_ids_roundtrip() {
+        for d in ALL_DATASETS {
+            assert_eq!(DatasetId::from_index(d.index()), d);
+            assert_eq!(DatasetId::from_name(d.name()), Some(d));
+        }
+        assert_eq!(DatasetId::from_name("qm7x"), Some(DatasetId::Qm7x));
+        assert!(DatasetId::from_name("nope").is_none());
+    }
+
+    #[test]
+    fn inorganic_flags_match_paper() {
+        assert!(!DatasetId::Ani1x.is_inorganic());
+        assert!(!DatasetId::Transition1x.is_inorganic());
+        assert!(DatasetId::MpTrj.is_inorganic());
+        assert!(DatasetId::Alexandria.is_inorganic());
+    }
+}

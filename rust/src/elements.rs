@@ -1,0 +1,226 @@
+//! Periodic-table data used by the synthetic dataset generators, the
+//! ground-truth potential, and the Fig-1 element-frequency heatmap.
+//!
+//! Values are approximate literature numbers (covalent radii in Angstrom,
+//! Pauling electronegativity); they only need to be *physically plausible
+//! and element-distinguishing* — the ground-truth potential derives its
+//! pair parameters from them, so chemically similar elements get similar
+//! labels, which is exactly the structure multi-fidelity learning exploits.
+
+/// Highest atomic number we model (Pu). The paper's aggregated data covers
+/// roughly two thirds of the natural elements.
+pub const MAX_Z: usize = 94;
+
+pub struct ElementInfo {
+    pub symbol: &'static str,
+    /// Covalent radius, Angstrom.
+    pub radius: f64,
+    /// Pauling electronegativity (0 where undefined).
+    pub chi: f64,
+    /// Period (row) in the periodic table, 1-based.
+    pub period: u8,
+    /// Group (column) in the periodic table, 1-based (0 for f-block).
+    pub group: u8,
+}
+
+macro_rules! elems {
+    ($(($z:expr, $sym:expr, $r:expr, $chi:expr, $p:expr, $g:expr)),* $(,)?) => {
+        &[ $( ElementInfo { symbol: $sym, radius: $r, chi: $chi, period: $p, group: $g } ),* ]
+    };
+}
+
+/// Indexed by Z-1 (element 0 is a padding species, not listed here).
+pub static ELEMENTS: &[ElementInfo] = elems![
+    (1, "H", 0.31, 2.20, 1, 1),
+    (2, "He", 0.28, 0.00, 1, 18),
+    (3, "Li", 1.28, 0.98, 2, 1),
+    (4, "Be", 0.96, 1.57, 2, 2),
+    (5, "B", 0.84, 2.04, 2, 13),
+    (6, "C", 0.76, 2.55, 2, 14),
+    (7, "N", 0.71, 3.04, 2, 15),
+    (8, "O", 0.66, 3.44, 2, 16),
+    (9, "F", 0.57, 3.98, 2, 17),
+    (10, "Ne", 0.58, 0.00, 2, 18),
+    (11, "Na", 1.66, 0.93, 3, 1),
+    (12, "Mg", 1.41, 1.31, 3, 2),
+    (13, "Al", 1.21, 1.61, 3, 13),
+    (14, "Si", 1.11, 1.90, 3, 14),
+    (15, "P", 1.07, 2.19, 3, 15),
+    (16, "S", 1.05, 2.58, 3, 16),
+    (17, "Cl", 1.02, 3.16, 3, 17),
+    (18, "Ar", 1.06, 0.00, 3, 18),
+    (19, "K", 2.03, 0.82, 4, 1),
+    (20, "Ca", 1.76, 1.00, 4, 2),
+    (21, "Sc", 1.70, 1.36, 4, 3),
+    (22, "Ti", 1.60, 1.54, 4, 4),
+    (23, "V", 1.53, 1.63, 4, 5),
+    (24, "Cr", 1.39, 1.66, 4, 6),
+    (25, "Mn", 1.39, 1.55, 4, 7),
+    (26, "Fe", 1.32, 1.83, 4, 8),
+    (27, "Co", 1.26, 1.88, 4, 9),
+    (28, "Ni", 1.24, 1.91, 4, 10),
+    (29, "Cu", 1.32, 1.90, 4, 11),
+    (30, "Zn", 1.22, 1.65, 4, 12),
+    (31, "Ga", 1.22, 1.81, 4, 13),
+    (32, "Ge", 1.20, 2.01, 4, 14),
+    (33, "As", 1.19, 2.18, 4, 15),
+    (34, "Se", 1.20, 2.55, 4, 16),
+    (35, "Br", 1.20, 2.96, 4, 17),
+    (36, "Kr", 1.16, 3.00, 4, 18),
+    (37, "Rb", 2.20, 0.82, 5, 1),
+    (38, "Sr", 1.95, 0.95, 5, 2),
+    (39, "Y", 1.90, 1.22, 5, 3),
+    (40, "Zr", 1.75, 1.33, 5, 4),
+    (41, "Nb", 1.64, 1.60, 5, 5),
+    (42, "Mo", 1.54, 2.16, 5, 6),
+    (43, "Tc", 1.47, 1.90, 5, 7),
+    (44, "Ru", 1.46, 2.20, 5, 8),
+    (45, "Rh", 1.42, 2.28, 5, 9),
+    (46, "Pd", 1.39, 2.20, 5, 10),
+    (47, "Ag", 1.45, 1.93, 5, 11),
+    (48, "Cd", 1.44, 1.69, 5, 12),
+    (49, "In", 1.42, 1.78, 5, 13),
+    (50, "Sn", 1.39, 1.96, 5, 14),
+    (51, "Sb", 1.39, 2.05, 5, 15),
+    (52, "Te", 1.38, 2.10, 5, 16),
+    (53, "I", 1.39, 2.66, 5, 17),
+    (54, "Xe", 1.40, 2.60, 5, 18),
+    (55, "Cs", 2.44, 0.79, 6, 1),
+    (56, "Ba", 2.15, 0.89, 6, 2),
+    (57, "La", 2.07, 1.10, 6, 0),
+    (58, "Ce", 2.04, 1.12, 6, 0),
+    (59, "Pr", 2.03, 1.13, 6, 0),
+    (60, "Nd", 2.01, 1.14, 6, 0),
+    (61, "Pm", 1.99, 1.13, 6, 0),
+    (62, "Sm", 1.98, 1.17, 6, 0),
+    (63, "Eu", 1.98, 1.20, 6, 0),
+    (64, "Gd", 1.96, 1.20, 6, 0),
+    (65, "Tb", 1.94, 1.22, 6, 0),
+    (66, "Dy", 1.92, 1.23, 6, 0),
+    (67, "Ho", 1.92, 1.24, 6, 0),
+    (68, "Er", 1.89, 1.24, 6, 0),
+    (69, "Tm", 1.90, 1.25, 6, 0),
+    (70, "Yb", 1.87, 1.10, 6, 0),
+    (71, "Lu", 1.87, 1.27, 6, 3),
+    (72, "Hf", 1.75, 1.30, 6, 4),
+    (73, "Ta", 1.70, 1.50, 6, 5),
+    (74, "W", 1.62, 2.36, 6, 6),
+    (75, "Re", 1.51, 1.90, 6, 7),
+    (76, "Os", 1.44, 2.20, 6, 8),
+    (77, "Ir", 1.41, 2.20, 6, 9),
+    (78, "Pt", 1.36, 2.28, 6, 10),
+    (79, "Au", 1.36, 2.54, 6, 11),
+    (80, "Hg", 1.32, 2.00, 6, 12),
+    (81, "Tl", 1.45, 1.62, 6, 13),
+    (82, "Pb", 1.46, 2.33, 6, 14),
+    (83, "Bi", 1.48, 2.02, 6, 15),
+    (84, "Po", 1.40, 2.00, 6, 16),
+    (85, "At", 1.50, 2.20, 6, 17),
+    (86, "Rn", 1.50, 0.00, 6, 18),
+    (87, "Fr", 2.60, 0.70, 7, 1),
+    (88, "Ra", 2.21, 0.90, 7, 2),
+    (89, "Ac", 2.15, 1.10, 7, 0),
+    (90, "Th", 2.06, 1.30, 7, 0),
+    (91, "Pa", 2.00, 1.50, 7, 0),
+    (92, "U", 1.96, 1.38, 7, 0),
+    (93, "Np", 1.90, 1.36, 7, 0),
+    (94, "Pu", 1.87, 1.28, 7, 0),
+];
+
+/// Info for atomic number `z` (1-based). Panics on 0 / out of range.
+pub fn element(z: usize) -> &'static ElementInfo {
+    assert!((1..=MAX_Z).contains(&z), "bad atomic number {z}");
+    &ELEMENTS[z - 1]
+}
+
+pub fn symbol(z: usize) -> &'static str {
+    element(z).symbol
+}
+
+/// Atomic number for a symbol, if known.
+pub fn z_of(symbol: &str) -> Option<usize> {
+    ELEMENTS.iter().position(|e| e.symbol == symbol).map(|i| i + 1)
+}
+
+// -- element palettes of the five source datasets (paper Section 4.1) -------
+
+/// ANI1x: organic molecules over C, H, N, O.
+pub fn ani1x_palette() -> Vec<usize> {
+    ["H", "C", "N", "O"].iter().map(|s| z_of(s).unwrap()).collect()
+}
+
+/// QM7-X: small organics with up to 7 heavy atoms over C, N, O, S, Cl (+H).
+pub fn qm7x_palette() -> Vec<usize> {
+    ["H", "C", "N", "O", "S", "Cl"].iter().map(|s| z_of(s).unwrap()).collect()
+}
+
+/// Transition1x: reaction pathways over C,H,N,O,F,S,Cl,P,Br,I,Li,Na,K.
+pub fn transition1x_palette() -> Vec<usize> {
+    ["H", "C", "N", "O", "F", "S", "Cl", "P", "Br", "I", "Li", "Na", "K"]
+        .iter()
+        .map(|s| z_of(s).unwrap())
+        .collect()
+}
+
+/// MPTrj: inorganic crystals covering 60+ elements (we take Z=1..=83 minus
+/// noble gases, a reasonable proxy for the Materials Project coverage).
+pub fn mptrj_palette() -> Vec<usize> {
+    (1..=83).filter(|&z| ![2, 10, 18, 36, 54].contains(&z)).collect()
+}
+
+/// Alexandria: inorganic, slightly broader than MPTrj (up to Pu).
+pub fn alexandria_palette() -> Vec<usize> {
+    (1..=MAX_Z).filter(|&z| ![2, 10, 18, 36, 54, 86].contains(&z)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_complete_and_ordered() {
+        assert_eq!(ELEMENTS.len(), MAX_Z);
+        assert_eq!(symbol(1), "H");
+        assert_eq!(symbol(6), "C");
+        assert_eq!(symbol(26), "Fe");
+        assert_eq!(symbol(94), "Pu");
+    }
+
+    #[test]
+    fn z_of_roundtrips() {
+        for z in 1..=MAX_Z {
+            assert_eq!(z_of(symbol(z)), Some(z), "z={z}");
+        }
+        assert_eq!(z_of("Xx"), None);
+    }
+
+    #[test]
+    fn radii_and_chi_plausible() {
+        for z in 1..=MAX_Z {
+            let e = element(z);
+            assert!(e.radius > 0.2 && e.radius < 3.0, "radius of {}", e.symbol);
+            assert!(e.chi >= 0.0 && e.chi < 4.5, "chi of {}", e.symbol);
+            assert!((1..=7).contains(&e.period));
+        }
+    }
+
+    #[test]
+    fn palettes_match_paper() {
+        assert_eq!(ani1x_palette().len(), 4);
+        assert_eq!(qm7x_palette().len(), 6);
+        assert_eq!(transition1x_palette().len(), 13);
+        assert!(mptrj_palette().len() >= 60);
+        assert!(alexandria_palette().len() > mptrj_palette().len());
+        // Organic palettes are strict subsets of the inorganic coverage.
+        let alex = alexandria_palette();
+        for z in ani1x_palette() {
+            assert!(alex.contains(&z));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bad atomic number")]
+    fn rejects_padding_species() {
+        element(0);
+    }
+}

@@ -1,0 +1,33 @@
+//! # hydra-mtp
+//!
+//! Reproduction of *"Multi-task parallelism for robust pre-training of graph
+//! foundation models on multi-source, multi-fidelity atomistic modeling
+//! data"* as a three-layer rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the paper's system contribution: a 2D-parallel
+//!   (multi-task x data) training coordinator with a device mesh, ring
+//!   collectives, a distributed sample store, packed dataset files, synthetic
+//!   multi-fidelity data generators, an AdamW optimizer, and a calibrated
+//!   supercomputer scaling simulator (Frontier / Perlmutter / Aurora).
+//! - **L2 (python/compile/model.py)** — the HydraGNN-style EGNN encoder +
+//!   two-level MTL branch, AOT-lowered once to HLO text.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels for the message
+//!   passing and branch-trunk hot spots, lowered inside the same HLO.
+//!
+//! Python never runs on the training path: the coordinator loads
+//! `artifacts/*.hlo.txt` through the PJRT CPU client (`xla` crate) and is
+//! self-contained afterwards.
+
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod elements;
+pub mod model;
+pub mod runtime;
+pub mod scalesim;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

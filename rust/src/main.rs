@@ -1,0 +1,254 @@
+//! hydra-mtp launcher: the L3 coordinator CLI.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §5):
+//!
+//!   datagen   generate the five synthetic datasets into GPack files
+//!   train     train one model (any of the seven modes) and log metrics
+//!   table1    regenerate Table 1 (energy MAE matrix, trains 7 models)
+//!   table2    regenerate Table 2 (force MAE matrix, same runs)
+//!   fig1      element-frequency heatmap over the aggregated datasets
+//!   fig4      weak/strong scaling sweeps on Frontier/Perlmutter/Aurora
+//!   info      print manifest / architecture / memory-regime summary
+
+use std::sync::Arc;
+
+use hydra_mtp::config::{RunConfig, TrainMode};
+use hydra_mtp::coordinator::{experiments, DataBundle, Trainer};
+use hydra_mtp::data::structures::ALL_DATASETS;
+use hydra_mtp::data::{generators, pack};
+use hydra_mtp::model::arch;
+use hydra_mtp::runtime::Engine;
+use hydra_mtp::scalesim;
+use hydra_mtp::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "datagen" => cmd_datagen(&args),
+        "train" => cmd_train(&args),
+        "table1" => cmd_tables(&args, true),
+        "table2" => cmd_tables(&args, false),
+        "fig1" => cmd_fig1(&args),
+        "fig4" => cmd_fig4(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "hydra-mtp — multi-task parallelism for GFM pre-training (paper reproduction)
+
+USAGE: hydra-mtp <command> [--flags]
+
+COMMANDS
+  datagen  --out DIR [--per-dataset N] [--seed S] [--max-atoms A]
+  train    --mode MODE [--config FILE] [--epochs N] [--replicas M]
+           [--per-dataset N] [--artifacts DIR] [--csv FILE]
+           MODE: ANI1x|QM7-X|Transition1x|MPTrj|Alexandria|baseline-all|mtl-base|mtl-par
+  table1   [--epochs N] [--per-dataset N] [--replicas M] [--csv FILE]
+  table2   (same flags; same training runs, force metric)
+  fig1     [--per-dataset N] [--seed S]
+  fig4     [--machine all|frontier|perlmutter|aurora] [--csv FILE] [--seed S]
+  info     [--artifacts DIR]"
+    );
+}
+
+fn base_config(args: &Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => RunConfig::load(path)?,
+        None => RunConfig::default(),
+    };
+    cfg.artifacts_dir = args.str("artifacts", &cfg.artifacts_dir);
+    if let Some(e) = args.opt_str("epochs") {
+        cfg.train.epochs = e.parse()?;
+    }
+    if let Some(r) = args.opt_str("replicas") {
+        cfg.parallel.replicas = r.parse()?;
+    }
+    if let Some(n) = args.opt_str("per-dataset") {
+        cfg.data.per_dataset = n.parse()?;
+    }
+    if let Some(s) = args.opt_str("seed") {
+        cfg.data.seed = s.parse()?;
+    }
+    if let Some(lr) = args.opt_str("lr") {
+        cfg.train.lr = lr.parse()?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_datagen(args: &Args) -> anyhow::Result<()> {
+    let out = args.str("out", "data");
+    let per = args.usize("per-dataset", 1000);
+    let seed = args.u64("seed", 2025);
+    let max_atoms = args.usize("max-atoms", 24);
+    std::fs::create_dir_all(&out)?;
+    let cfg = generators::GeneratorConfig { max_atoms, ..Default::default() };
+    for (d, samples) in generators::generate_all(seed, per, &cfg) {
+        let path = format!("{out}/{}.gpack", d.name().to_lowercase().replace('-', ""));
+        let n = pack::write_all(&path, &samples)?;
+        let hist = generators::element_histogram(&samples);
+        let coverage = hist.iter().filter(|&&c| c > 0).count();
+        println!(
+            "{:<14} {n:>7} structures -> {path}  ({} elements, {} atoms total)",
+            d.name(),
+            coverage,
+            hist.iter().sum::<u64>()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = base_config(args)?;
+    cfg.mode = TrainMode::parse(&args.str("mode", "mtl-par"))?;
+    println!("loading artifacts from {} ...", cfg.artifacts_dir);
+    let engine = Arc::new(Engine::load(&cfg.artifacts_dir)?);
+    println!("platform: {}; generating data ...", engine.platform());
+    let data = DataBundle::generate(&cfg.data, &datasets_for(&cfg.mode));
+    let trainer = Trainer::new(Arc::clone(&engine), cfg.clone());
+    let t0 = std::time::Instant::now();
+    let outcome = trainer.train(&data)?;
+    println!("\n=== {} ===", outcome.model.name);
+    for e in &outcome.log.epochs {
+        println!("{}", e.summary());
+    }
+    println!(
+        "trained in {:?}; global allreduce traffic {:.1} Mf32, head-group {:.1} Mf32",
+        t0.elapsed(),
+        outcome.comm_elems.0 as f64 / 1e6,
+        outcome.comm_elems.1 as f64 / 1e6
+    );
+    if let Some(path) = args.opt_str("csv") {
+        std::fs::write(path, outcome.log.to_csv())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn datasets_for(mode: &TrainMode) -> Vec<hydra_mtp::data::structures::DatasetId> {
+    match mode {
+        TrainMode::Single(d) => vec![*d],
+        _ => ALL_DATASETS.to_vec(),
+    }
+}
+
+fn cmd_tables(args: &Args, energy: bool) -> anyhow::Result<()> {
+    let cfg = base_config(args)?;
+    let engine = Arc::new(Engine::load(&cfg.artifacts_dir)?);
+    let data = DataBundle::generate(&cfg.data, &ALL_DATASETS);
+    println!(
+        "training the 7 models of Section 5.1 ({} samples/dataset, {} epochs max) ...",
+        cfg.data.per_dataset, cfg.train.epochs
+    );
+    let matrix =
+        experiments::run_tables(&engine, &cfg, &data, |line| println!("  {line}"))?;
+    println!("\n{}", matrix.render(energy));
+    if let Some(path) = args.opt_str("csv") {
+        std::fs::write(path, matrix.to_csv(energy))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> anyhow::Result<()> {
+    let per = args.usize("per-dataset", 500);
+    let seed = args.u64("seed", 2025);
+    let counts = experiments::fig1_histogram(seed, per, args.usize("max-atoms", 24));
+    println!("{}", experiments::fig1_render(&counts));
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
+    let seed = args.u64("seed", 2025);
+    let w = scalesim::Workload::paper(5);
+    let which = args.str("machine", "all");
+    let rows = if which == "all" {
+        scalesim::fig4_all(&w, seed)
+    } else {
+        let m = scalesim::machine_by_name(&which)
+            .ok_or_else(|| anyhow::anyhow!("unknown machine '{which}'"))?;
+        let mut rows = scalesim::weak_scaling(&m, &w, &[160, 320, 640], 100, seed);
+        rows.extend(scalesim::strong_scaling(&m, &w, &[10240, 20480], 1_000_000, seed));
+        rows
+    };
+    let machines: Vec<&str> = if which == "all" {
+        vec!["Frontier", "Perlmutter", "Aurora"]
+    } else {
+        vec![scalesim::machine_by_name(&which).unwrap().name]
+    };
+    for m in machines {
+        println!("{}", scalesim::render_panel(&rows, m, "weak"));
+        println!("{}", scalesim::render_panel(&rows, m, "strong"));
+    }
+    if let Some(path) = args.opt_str("csv") {
+        std::fs::write(path, scalesim::to_csv(&rows))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = args.str("artifacts", "artifacts");
+    let manifest = hydra_mtp::runtime::Manifest::load(&dir)?;
+    manifest.validate()?;
+    let c = manifest.config;
+    println!("artifacts: {dir}");
+    println!(
+        "model: {} EGNN layers, hidden {}, head 3x{}, cutoff {}",
+        c.num_layers, c.hidden, c.head_hidden, c.cutoff
+    );
+    println!(
+        "batch: {} nodes / {} edges / {} graphs",
+        c.max_nodes, c.max_edges, c.max_graphs
+    );
+    let dims = c.arch_dims();
+    println!(
+        "P_s = {} params, P_h = {} params",
+        dims.shared_params(),
+        dims.head_params()
+    );
+    for n_heads in [1usize, 5, 20] {
+        let regime = arch::classify_regime(&dims, n_heads, 4.0);
+        println!(
+            "  {} heads: total {:>9}, mem/GPU {:>6.1} MiB (DDP) vs {:>6.1} MiB (MTP) -> {:?}",
+            n_heads,
+            dims.total_params(n_heads),
+            arch::memory_without_mtp(&dims, n_heads) as f64 / (1 << 20) as f64,
+            arch::memory_with_mtp(&dims) as f64 / (1 << 20) as f64,
+            regime
+        );
+    }
+    let paper = arch::ArchDims::paper();
+    println!(
+        "paper config: P_s = {:.1}M, P_h = {:.1}M, 5 heads total {:.1}M params",
+        paper.shared_params() as f64 / 1e6,
+        paper.head_params() as f64 / 1e6,
+        paper.total_params(5) as f64 / 1e6
+    );
+    for (name, art) in &manifest.artifacts {
+        println!(
+            "artifact {:<13} {} inputs, {} outputs, sha256 {}",
+            name,
+            art.inputs.len(),
+            art.outputs.len(),
+            &art.sha256[..12.min(art.sha256.len())]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,169 @@
+//! Architecture accounting: exact parameter-count formulas for the
+//! HydraGNN-style EGNN encoder and MTL branches, the per-GPU memory model,
+//! and the paper's three parallelization regimes (Section 4.3):
+//!
+//!   Case 1: P_s >> N_h * P_h  -> pipeline/tensor parallelism preferred
+//!   Case 2: P_s << N_h * P_h  -> multi-task parallelism optimal
+//!   Case 3: P_s ~  N_h * P_h  -> hybrid schemes
+//!
+//! These formulas drive the scaling simulator's communication volumes and
+//! are validated against the actual manifest parameter counts in tests.
+
+/// Model dimensions (mirrors python ModelConfig; defaults = artifact config).
+#[derive(Debug, Clone, Copy)]
+pub struct ArchDims {
+    pub num_species: usize,
+    pub hidden: usize,
+    pub num_layers: usize,
+    pub num_rbf: usize,
+    pub head_hidden: usize,
+}
+
+impl ArchDims {
+    /// The paper's published configuration (Section 5): 4-layer EGNN with
+    /// 866 hidden units, heads of three 889-unit FC layers.
+    pub fn paper() -> ArchDims {
+        ArchDims {
+            num_species: 96,
+            hidden: 866,
+            num_layers: 4,
+            num_rbf: 16,
+            head_hidden: 889,
+        }
+    }
+
+    /// Shared (encoder) parameter count P_s.
+    pub fn shared_params(&self) -> usize {
+        let h = self.hidden;
+        let r = self.num_rbf;
+        let embed = self.num_species * h;
+        // Per EGNN layer: edge MLP (2H+R -> H -> H), gate (H -> 1),
+        // node MLP (2H -> H -> H); weights + biases.
+        let edge = (2 * h + r) * h + h + h * h + h;
+        let gate = h + 1;
+        let node = (2 * h) * h + h + h * h + h;
+        embed + self.num_layers * (edge + gate + node)
+    }
+
+    /// Per-branch (head) parameter count P_h: 3 FC layers + two sub-heads.
+    pub fn head_params(&self) -> usize {
+        let h = self.hidden;
+        let d = self.head_hidden;
+        let trunk = h * d + d + d * d + d + d * d + d;
+        let energy = d + 1;
+        let force = d + 1;
+        trunk + energy + force
+    }
+
+    /// Total parameters for an `n_heads`-branch model on one process.
+    pub fn total_params(&self, n_heads: usize) -> usize {
+        self.shared_params() + n_heads * self.head_params()
+    }
+}
+
+/// Bytes per parameter during training: weight + gradient + AdamW m and v,
+/// all f32 (activation memory is batch-dependent and excluded, as in the
+/// paper's P_s/P_h discussion).
+pub const TRAIN_BYTES_PER_PARAM: usize = 16;
+
+/// Per-GPU parameter memory without multi-task parallelism:
+/// the full model `P_s + N_h * P_h` is replicated on every rank.
+pub fn memory_without_mtp(dims: &ArchDims, n_heads: usize) -> usize {
+    dims.total_params(n_heads) * TRAIN_BYTES_PER_PARAM
+}
+
+/// Per-GPU parameter memory with multi-task parallelism:
+/// each rank holds `P_s + P_h` (one head).
+pub fn memory_with_mtp(dims: &ArchDims) -> usize {
+    (dims.shared_params() + dims.head_params()) * TRAIN_BYTES_PER_PARAM
+}
+
+/// The paper's three regimes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParallelismRegime {
+    /// Case 1: shared layers dominate -> pipeline/tensor parallelism.
+    PipelineTensor,
+    /// Case 2: heads dominate -> multi-task parallelism.
+    MultiTask,
+    /// Case 3: comparable -> hybrid.
+    Hybrid,
+}
+
+/// Classify with a factor-of-`threshold` band around parity (paper uses
+/// ">>" / "<<" informally; 4x is a reasonable reading).
+pub fn classify_regime(dims: &ArchDims, n_heads: usize, threshold: f64) -> ParallelismRegime {
+    let ps = dims.shared_params() as f64;
+    let ph_total = (n_heads * dims.head_params()) as f64;
+    if ps > threshold * ph_total {
+        ParallelismRegime::PipelineTensor
+    } else if ph_total > threshold * ps {
+        ParallelismRegime::MultiTask
+    } else {
+        ParallelismRegime::Hybrid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dims() -> ArchDims {
+        // Matches python ModelConfig defaults lowered into artifacts/.
+        ArchDims { num_species: 96, hidden: 64, num_layers: 4, num_rbf: 16, head_hidden: 64 }
+    }
+
+    #[test]
+    fn shared_params_formula() {
+        let d = artifact_dims();
+        // embed 96*64=6144; per layer: edge (144*64 + 64 + 64*64 + 64),
+        // gate (64+1), node (128*64 + 64 + 64*64 + 64).
+        let per_layer = 144 * 64 + 64 + 64 * 64 + 64 + 65 + 128 * 64 + 64 + 64 * 64 + 64;
+        assert_eq!(d.shared_params(), 6144 + 4 * per_layer);
+    }
+
+    #[test]
+    fn head_params_formula() {
+        let d = artifact_dims();
+        let expected = 64 * 64 + 64 + 64 * 64 + 64 + 64 * 64 + 64 + 65 + 65;
+        assert_eq!(d.head_params(), expected);
+    }
+
+    #[test]
+    fn mtp_memory_saves_for_many_heads() {
+        let d = ArchDims::paper();
+        let without = memory_without_mtp(&d, 5);
+        let with = memory_with_mtp(&d);
+        assert!(with < without);
+        // Savings ratio approaches (P_s + P_h) / (P_s + 5 P_h).
+        let ratio = with as f64 / without as f64;
+        assert!(ratio < 0.75, "ratio={ratio}");
+    }
+
+    #[test]
+    fn paper_config_param_scale() {
+        // Sanity: paper-scale model is tens of millions of parameters.
+        let d = ArchDims::paper();
+        let total = d.total_params(5);
+        assert!(total > 10_000_000, "{total}");
+        assert!(total < 100_000_000, "{total}");
+    }
+
+    #[test]
+    fn regimes_classify_as_paper_argues() {
+        // GNNs with many heads fall in Case 2 (paper Section 4.3): scale the
+        // head count up and the classification must flip to MultiTask.
+        let d = ArchDims::paper();
+        assert_eq!(classify_regime(&d, 50, 4.0), ParallelismRegime::MultiTask);
+        // A single modest head on a huge encoder is Case 1.
+        let wide = ArchDims { hidden: 4096, head_hidden: 64, ..ArchDims::paper() };
+        assert_eq!(classify_regime(&wide, 1, 4.0), ParallelismRegime::PipelineTensor);
+        // Comparable sizes -> hybrid.
+        let mid = ArchDims { hidden: 256, head_hidden: 256, ..ArchDims::paper() };
+        let n = {
+            // pick n_heads so n*P_h is within 4x of P_s
+            let ps = mid.shared_params() as f64;
+            (ps / mid.head_params() as f64).round() as usize
+        };
+        assert_eq!(classify_regime(&mid, n.max(1), 4.0), ParallelismRegime::Hybrid);
+    }
+}

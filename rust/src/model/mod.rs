@@ -1,0 +1,11 @@
+//! Model-side L3 state: named parameter sets matching the AOT manifest,
+//! the AdamW optimizer, and architecture accounting (P_s / P_h formulas,
+//! memory model, parallelization regimes).
+
+pub mod arch;
+pub mod optimizer;
+pub mod params;
+
+pub use arch::{ArchDims, ParallelismRegime};
+pub use optimizer::{AdamW, AdamWConfig, Sgd};
+pub use params::{Init, LeafMeta, ParamSet};

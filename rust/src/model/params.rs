@@ -1,0 +1,339 @@
+//! Parameter storage: named, ordered tensors matching the AOT manifest.
+//!
+//! The manifest records the flattened pytree order of the jax parameters
+//! (`branch.*` then `encoder.*`, dict-key sorted); the rust side initializes
+//! tensors of the same shapes with the initializer hints the manifest
+//! carries, so no jax is needed at run time.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Initializer hint from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Init {
+    Lecun { fan_in: usize },
+    Normal { scale: f64 },
+    Zeros,
+}
+
+/// Metadata for one parameter / batch-field / output leaf.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeafMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: crate::tensor::DType,
+    pub init: Option<Init>,
+}
+
+impl LeafMeta {
+    pub fn from_json(j: &Json) -> anyhow::Result<LeafMeta> {
+        let name = j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("leaf missing name"))?
+            .to_string();
+        let shape: Vec<usize> = j
+            .get("shape")
+            .as_array()
+            .ok_or_else(|| anyhow::anyhow!("leaf {name} missing shape"))?
+            .iter()
+            .map(|v| v.as_i64().unwrap_or(0) as usize)
+            .collect();
+        let dtype = crate::tensor::DType::parse(
+            j.get("dtype").as_str().unwrap_or("float32"),
+        )?;
+        let init = match j.get("init").get("kind").as_str() {
+            Some("lecun") => Some(Init::Lecun {
+                fan_in: j.get("init").get("fan_in").as_i64().unwrap_or(1) as usize,
+            }),
+            Some("normal") => Some(Init::Normal {
+                scale: j.get("init").get("scale").as_f64().unwrap_or(1.0),
+            }),
+            Some("zeros") => Some(Init::Zeros),
+            _ => None,
+        };
+        Ok(LeafMeta { name, shape, dtype, init })
+    }
+
+    pub fn numel(&self) -> usize {
+        crate::tensor::numel(&self.shape)
+    }
+}
+
+/// An ordered set of named f32 tensors (parameters, gradients, or moments).
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    metas: Arc<Vec<LeafMeta>>,
+    index: Arc<HashMap<String, usize>>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamSet {
+    /// Initialize parameters per the manifest's initializer hints.
+    pub fn init(metas: &Arc<Vec<LeafMeta>>, seed: u64) -> ParamSet {
+        let mut rng = Rng::new(seed ^ 0x9a7a_a31);
+        let tensors = metas
+            .iter()
+            .map(|m| {
+                let n = m.numel();
+                let data: Vec<f32> = match &m.init {
+                    Some(Init::Lecun { fan_in }) => {
+                        let std = 1.0 / (*fan_in as f64).sqrt();
+                        (0..n).map(|_| rng.normal_scaled(0.0, std) as f32).collect()
+                    }
+                    Some(Init::Normal { scale }) => {
+                        (0..n).map(|_| rng.normal_scaled(0.0, *scale) as f32).collect()
+                    }
+                    Some(Init::Zeros) | None => vec![0.0; n],
+                };
+                Tensor::from_f32(&m.shape, data)
+            })
+            .collect();
+        ParamSet { metas: Arc::clone(metas), index: Self::build_index(metas), tensors }
+    }
+
+    /// All-zero set with the same structure (gradient / moment buffers).
+    pub fn zeros_like(metas: &Arc<Vec<LeafMeta>>) -> ParamSet {
+        let tensors = metas.iter().map(|m| Tensor::zeros(&m.shape)).collect();
+        ParamSet { metas: Arc::clone(metas), index: Self::build_index(metas), tensors }
+    }
+
+    fn build_index(metas: &Arc<Vec<LeafMeta>>) -> Arc<HashMap<String, usize>> {
+        Arc::new(
+            metas
+                .iter()
+                .enumerate()
+                .map(|(i, m)| (m.name.clone(), i))
+                .collect(),
+        )
+    }
+
+    pub fn metas(&self) -> &[LeafMeta] {
+        &self.metas
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.metas.iter().map(|m| m.numel()).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        let i = *self.index.get(name)?;
+        Some(&mut self.tensors[i])
+    }
+
+    /// Iterate (name, tensor).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.metas.iter().zip(&self.tensors).map(|(m, t)| (m.name.as_str(), t))
+    }
+
+    /// Flatten all values into one contiguous f32 vec (collective payload).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.total_params());
+        for t in &self.tensors {
+            out.extend_from_slice(t.as_f32());
+        }
+        out
+    }
+
+    /// Load values back from a flat vec produced by `flatten()`.
+    pub fn unflatten_from(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        for t in &mut self.tensors {
+            let n = t.numel();
+            t.as_f32_mut().copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        assert_eq!(off, flat.len(), "flat buffer size mismatch");
+    }
+
+    /// Flatten only leaves whose name starts with `prefix` into `out`
+    /// (cleared first). Allocation-free on the steady state — the trainer's
+    /// per-step gradient-sync path uses this instead of `subset().flatten()`
+    /// which would clone every tensor.
+    pub fn flatten_prefix_into(&self, prefix: &str, out: &mut Vec<f32>) {
+        out.clear();
+        for (m, t) in self.metas.iter().zip(&self.tensors) {
+            if m.name.starts_with(prefix) {
+                out.extend_from_slice(t.as_f32());
+            }
+        }
+    }
+
+    /// Scatter a flat buffer produced by `flatten_prefix_into` back into the
+    /// matching leaves.
+    pub fn unflatten_prefix_from(&mut self, prefix: &str, flat: &[f32]) {
+        let mut off = 0;
+        for (m, t) in self.metas.iter().zip(self.tensors.iter_mut()) {
+            if m.name.starts_with(prefix) {
+                let n = t.numel();
+                t.as_f32_mut().copy_from_slice(&flat[off..off + n]);
+                off += n;
+            }
+        }
+        assert_eq!(off, flat.len(), "flat buffer size mismatch for '{prefix}'");
+    }
+
+    /// Global L2 norm over every tensor.
+    pub fn global_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .map(|t| t.as_f32().iter().map(|&x| (x as f64).powi(2)).sum::<f64>())
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Sub-set of leaves whose name starts with `prefix` (e.g. "encoder.").
+    /// Metas keep their full names so engine marshalling stays name-driven.
+    pub fn subset(&self, prefix: &str) -> ParamSet {
+        let pairs: Vec<(LeafMeta, Tensor)> = self
+            .metas
+            .iter()
+            .zip(&self.tensors)
+            .filter(|(m, _)| m.name.starts_with(prefix))
+            .map(|(m, t)| (m.clone(), t.clone()))
+            .collect();
+        let metas = Arc::new(pairs.iter().map(|(m, _)| m.clone()).collect::<Vec<_>>());
+        let tensors = pairs.into_iter().map(|(_, t)| t).collect();
+        ParamSet { index: Self::build_index(&metas), metas, tensors }
+    }
+
+    /// Copy values for shared names from `other` into self.
+    pub fn copy_matching_from(&mut self, other: &ParamSet) {
+        for (name, src) in other.iter() {
+            if let Some(dst) = self.get_mut(name) {
+                dst.as_f32_mut().copy_from_slice(src.as_f32());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metas() -> Arc<Vec<LeafMeta>> {
+        Arc::new(vec![
+            LeafMeta {
+                name: "branch.trunk.w1".into(),
+                shape: vec![4, 8],
+                dtype: crate::tensor::DType::F32,
+                init: Some(Init::Lecun { fan_in: 4 }),
+            },
+            LeafMeta {
+                name: "branch.trunk.b1".into(),
+                shape: vec![8],
+                dtype: crate::tensor::DType::F32,
+                init: Some(Init::Zeros),
+            },
+            LeafMeta {
+                name: "encoder.embed".into(),
+                shape: vec![10, 8],
+                dtype: crate::tensor::DType::F32,
+                init: Some(Init::Normal { scale: 0.5 }),
+            },
+        ])
+    }
+
+    #[test]
+    fn init_respects_hints() {
+        let p = ParamSet::init(&metas(), 1);
+        assert_eq!(p.total_params(), 4 * 8 + 8 + 80);
+        assert!(p.get("branch.trunk.b1").unwrap().as_f32().iter().all(|&x| x == 0.0));
+        assert!(p.get("branch.trunk.w1").unwrap().norm() > 0.0);
+        // Lecun std ~ 0.5 for fan_in 4; embed scale 0.5: both nonzero.
+        assert!(p.get("encoder.embed").unwrap().norm() > 0.0);
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed() {
+        let a = ParamSet::init(&metas(), 42);
+        let b = ParamSet::init(&metas(), 42);
+        let c = ParamSet::init(&metas(), 43);
+        assert_eq!(a.tensors, b.tensors);
+        assert_ne!(a.tensors, c.tensors);
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let p = ParamSet::init(&metas(), 3);
+        let flat = p.flatten();
+        assert_eq!(flat.len(), p.total_params());
+        let mut q = ParamSet::zeros_like(&Arc::new(p.metas().to_vec()));
+        q.unflatten_from(&flat);
+        assert_eq!(p.tensors, q.tensors);
+    }
+
+    #[test]
+    fn subset_by_prefix() {
+        let p = ParamSet::init(&metas(), 5);
+        let enc = p.subset("encoder.");
+        assert_eq!(enc.len(), 1);
+        assert_eq!(enc.metas()[0].name, "encoder.embed");
+        let br = p.subset("branch.");
+        assert_eq!(br.len(), 2);
+    }
+
+    #[test]
+    fn copy_matching() {
+        let a = ParamSet::init(&metas(), 1);
+        let mut b = ParamSet::init(&metas(), 2);
+        b.copy_matching_from(&a.subset("encoder."));
+        assert_eq!(
+            b.get("encoder.embed").unwrap().as_f32(),
+            a.get("encoder.embed").unwrap().as_f32()
+        );
+        assert_ne!(
+            b.get("branch.trunk.w1").unwrap().as_f32(),
+            a.get("branch.trunk.w1").unwrap().as_f32()
+        );
+    }
+
+    #[test]
+    fn flatten_prefix_matches_subset_flatten() {
+        let p = ParamSet::init(&metas(), 8);
+        let mut buf = Vec::new();
+        p.flatten_prefix_into("branch.", &mut buf);
+        assert_eq!(buf, p.subset("branch.").flatten());
+        // Roundtrip back into a zeroed set.
+        let mut q = ParamSet::zeros_like(&Arc::new(p.metas().to_vec()));
+        q.unflatten_prefix_from("branch.", &buf);
+        assert_eq!(
+            q.get("branch.trunk.w1").unwrap().as_f32(),
+            p.get("branch.trunk.w1").unwrap().as_f32()
+        );
+        assert!(q.get("encoder.embed").unwrap().as_f32().iter().all(|&x| x == 0.0));
+        // Reuse without reallocation.
+        let cap = buf.capacity();
+        p.flatten_prefix_into("branch.", &mut buf);
+        assert_eq!(buf.capacity(), cap);
+    }
+
+    #[test]
+    fn leaf_meta_parses_manifest_json() {
+        let j = Json::parse(
+            r#"{"name": "encoder.embed", "shape": [96, 64], "dtype": "float32",
+                "init": {"kind": "normal", "scale": 0.5}}"#,
+        )
+        .unwrap();
+        let m = LeafMeta::from_json(&j).unwrap();
+        assert_eq!(m.name, "encoder.embed");
+        assert_eq!(m.shape, vec![96, 64]);
+        assert_eq!(m.init, Some(Init::Normal { scale: 0.5 }));
+    }
+}

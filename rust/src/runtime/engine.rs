@@ -1,0 +1,275 @@
+//! PJRT execution engine: loads the HLO-text artifacts, compiles them once
+//! on the CPU PJRT client, and exposes typed entry points for the training
+//! hot path. This is the only place the `xla` crate is touched.
+//!
+//! Marshalling is name-driven: each artifact's manifest entry lists its
+//! flattened inputs/outputs; parameters are looked up in the `ParamSet`,
+//! everything else is a batch field. One compiled executable serves every
+//! MTL head — under multi-task parallelism each rank feeds its own branch
+//! parameter values (the head identity is data, not code).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::data::batch::GraphBatch;
+use crate::model::params::ParamSet;
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use crate::tensor::Tensor;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: BTreeMap<String, Mutex<xla::PjRtLoadedExecutable>>,
+    exec_count: std::sync::atomic::AtomicU64,
+}
+
+// The PJRT CPU client is internally synchronized; executions are further
+// serialized per-executable by the Mutex above. The raw pointers inside the
+// xla wrappers are what block the auto-impl.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+/// Outputs of one train_step execution.
+pub struct StepOut {
+    pub loss: f64,
+    pub mae_e: f64,
+    pub mae_f: f64,
+    pub grads: ParamSet,
+}
+
+/// Outputs of one eval_step execution.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOut {
+    pub loss: f64,
+    pub mae_e: f64,
+    pub mae_f: f64,
+}
+
+impl Engine {
+    /// Load + compile every artifact in the manifest.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Engine> {
+        Self::load_subset(dir, None)
+    }
+
+    /// Load + compile only the named artifacts (faster for focused tests).
+    pub fn load_only(
+        dir: impl AsRef<std::path::Path>,
+        names: &[&str],
+    ) -> anyhow::Result<Engine> {
+        Self::load_subset(dir, Some(names))
+    }
+
+    fn load_subset(
+        dir: impl AsRef<std::path::Path>,
+        names: Option<&[&str]>,
+    ) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        manifest.validate()?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = BTreeMap::new();
+        for (name, art) in &manifest.artifacts {
+            if let Some(filter) = names {
+                if !filter.contains(&name.as_str()) {
+                    continue;
+                }
+            }
+            let proto = xla::HloModuleProto::from_text_file(&art.file)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.insert(name.clone(), Mutex::new(exe));
+        }
+        Ok(Engine {
+            client,
+            manifest,
+            executables,
+            exec_count: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of executions performed (metrics).
+    pub fn executions(&self) -> u64 {
+        self.exec_count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.manifest.artifact(name)
+    }
+
+    /// Execute an artifact on pre-marshalled literals; returns output
+    /// tensors in manifest output order.
+    pub fn run_raw(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        let art = self.artifact(name)?;
+        anyhow::ensure!(
+            inputs.len() == art.inputs.len(),
+            "artifact {name}: {} inputs supplied, {} expected",
+            inputs.len(),
+            art.inputs.len()
+        );
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not compiled"))?
+            .lock()
+            .unwrap();
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // Artifacts are lowered with return_tuple=True: one tuple output.
+        let root = result[0][0].to_literal_sync()?;
+        let parts = root.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == art.outputs.len(),
+            "artifact {name}: {} outputs, {} expected",
+            parts.len(),
+            art.outputs.len()
+        );
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Assemble the input literal list for an artifact from a parameter set
+    /// plus a padded batch (name-driven; order from the manifest).
+    pub fn marshal(
+        &self,
+        name: &str,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let art = self.artifact(name)?;
+        let mut out = Vec::with_capacity(art.inputs.len());
+        for meta in &art.inputs {
+            let lit = if let Some(t) = params.get(&meta.name) {
+                debug_assert_eq!(t.shape, meta.shape, "{}", meta.name);
+                t.to_literal()?
+            } else {
+                batch.field(&meta.name).to_literal()?
+            };
+            out.push(lit);
+        }
+        Ok(out)
+    }
+
+    /// One forward+backward pass: returns loss, MAEs, and named gradients.
+    pub fn train_step(
+        &self,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<StepOut> {
+        let inputs = self.marshal("train_step", params, batch)?;
+        let outputs = self.run_raw("train_step", &inputs)?;
+        let art = self.artifact("train_step")?;
+
+        let mut loss = f64::NAN;
+        let mut mae_e = f64::NAN;
+        let mut mae_f = f64::NAN;
+        let mut grads = ParamSet::zeros_like(&self.manifest.params);
+        for (meta, tensor) in art.outputs.iter().zip(outputs) {
+            match meta.name.as_str() {
+                "loss" => loss = tensor.item(),
+                "mae_e" => mae_e = tensor.item(),
+                "mae_f" => mae_f = tensor.item(),
+                name => {
+                    let pname = name
+                        .strip_prefix("grads.")
+                        .ok_or_else(|| anyhow::anyhow!("unexpected output {name}"))?;
+                    let slot = grads
+                        .get_mut(pname)
+                        .ok_or_else(|| anyhow::anyhow!("gradient for unknown param {pname}"))?;
+                    *slot = tensor;
+                }
+            }
+        }
+        anyhow::ensure!(loss.is_finite(), "train_step produced non-finite loss");
+        Ok(StepOut { loss, mae_e, mae_f, grads })
+    }
+
+    /// Metrics-only evaluation pass.
+    pub fn eval_step(
+        &self,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<EvalOut> {
+        let inputs = self.marshal("eval_step", params, batch)?;
+        let outputs = self.run_raw("eval_step", &inputs)?;
+        let art = self.artifact("eval_step")?;
+        let mut out = EvalOut { loss: f64::NAN, mae_e: f64::NAN, mae_f: f64::NAN };
+        for (meta, tensor) in art.outputs.iter().zip(outputs) {
+            match meta.name.as_str() {
+                "loss" => out.loss = tensor.item(),
+                "mae_e" => out.mae_e = tensor.item(),
+                "mae_f" => out.mae_f = tensor.item(),
+                other => anyhow::bail!("unexpected eval output {other}"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Inference: (energy_per_atom [G], forces [N,3]).
+    pub fn forward(
+        &self,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<(Tensor, Tensor)> {
+        let inputs = self.marshal("fwd", params, batch)?;
+        let outputs = self.run_raw("fwd", &inputs)?;
+        let art = self.artifact("fwd")?;
+        let mut energy = None;
+        let mut forces = None;
+        for (meta, tensor) in art.outputs.iter().zip(outputs) {
+            match meta.name.as_str() {
+                "energy" => energy = Some(tensor),
+                "forces" => forces = Some(tensor),
+                other => anyhow::bail!("unexpected fwd output {other}"),
+            }
+        }
+        Ok((
+            energy.ok_or_else(|| anyhow::anyhow!("fwd missing energy"))?,
+            forces.ok_or_else(|| anyhow::anyhow!("fwd missing forces"))?,
+        ))
+    }
+
+    /// Encoder-only forward: (h [N,H], v [N,3]). Takes encoder params only.
+    pub fn encoder_forward(
+        &self,
+        encoder_params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<(Tensor, Tensor)> {
+        let art = self.artifact("encoder_fwd")?;
+        let mut inputs = Vec::with_capacity(art.inputs.len());
+        for meta in &art.inputs {
+            // encoder_fwd inputs use encoder-local names (no "encoder."
+            // prefix); fall back through both spellings, else batch.
+            let lit = if let Some(t) = encoder_params.get(&meta.name) {
+                t.to_literal()?
+            } else if let Some(t) =
+                encoder_params.get(&format!("encoder.{}", meta.name))
+            {
+                t.to_literal()?
+            } else {
+                batch.field(&meta.name).to_literal()?
+            };
+            inputs.push(lit);
+        }
+        let outputs = self.run_raw("encoder_fwd", &inputs)?;
+        let art = self.artifact("encoder_fwd")?;
+        let mut h = None;
+        let mut v = None;
+        for (meta, tensor) in art.outputs.iter().zip(outputs) {
+            match meta.name.as_str() {
+                "h" => h = Some(tensor),
+                "v" => v = Some(tensor),
+                other => anyhow::bail!("unexpected encoder output {other}"),
+            }
+        }
+        Ok((
+            h.ok_or_else(|| anyhow::anyhow!("missing h"))?,
+            v.ok_or_else(|| anyhow::anyhow!("missing v"))?,
+        ))
+    }
+}

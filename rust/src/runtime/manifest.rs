@@ -1,0 +1,189 @@
+//! Typed view of `artifacts/manifest.json`: the contract between the AOT
+//! compile path (python) and the rust runtime. Records every artifact's
+//! flattened input/output order with shapes and dtypes, the model config it
+//! was lowered with, and initializer hints for the parameter leaves.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::data::batch::BatchDims;
+use crate::model::params::LeafMeta;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<LeafMeta>,
+    pub outputs: Vec<LeafMeta>,
+    pub sha256: String,
+}
+
+/// Model config echoed by the manifest (subset the rust side needs).
+#[derive(Debug, Clone, Copy)]
+pub struct ManifestConfig {
+    pub max_nodes: usize,
+    pub max_edges: usize,
+    pub max_graphs: usize,
+    pub num_species: usize,
+    pub hidden: usize,
+    pub num_layers: usize,
+    pub num_rbf: usize,
+    pub head_hidden: usize,
+    pub cutoff: f64,
+    pub energy_weight: f64,
+    pub force_weight: f64,
+}
+
+impl ManifestConfig {
+    pub fn batch_dims(&self) -> BatchDims {
+        BatchDims {
+            max_nodes: self.max_nodes,
+            max_edges: self.max_edges,
+            max_graphs: self.max_graphs,
+        }
+    }
+
+    pub fn arch_dims(&self) -> crate::model::arch::ArchDims {
+        crate::model::arch::ArchDims {
+            num_species: self.num_species,
+            hidden: self.hidden,
+            num_layers: self.num_layers,
+            num_rbf: self.num_rbf,
+            head_hidden: self.head_hidden,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ManifestConfig,
+    /// Full parameter leaf list (branch.* then encoder.*, manifest order).
+    pub params: Arc<Vec<LeafMeta>>,
+    pub encoder_params: Arc<Vec<LeafMeta>>,
+    pub branch_params: Arc<Vec<LeafMeta>>,
+    pub batch_fields: Arc<Vec<LeafMeta>>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn leaf_list(j: &Json, key: &str) -> anyhow::Result<Vec<LeafMeta>> {
+    j.get(key)
+        .as_array()
+        .ok_or_else(|| anyhow::anyhow!("manifest missing '{key}'"))?
+        .iter()
+        .map(LeafMeta::from_json)
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?} (run `make artifacts`): {e}"))?;
+        let j = Json::parse(&text)?;
+
+        let c = j.get("config");
+        let need_i = |key: &str| -> anyhow::Result<usize> {
+            c.get(key)
+                .as_i64()
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow::anyhow!("manifest config missing '{key}'"))
+        };
+        let need_f = |key: &str| -> anyhow::Result<f64> {
+            c.get(key)
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("manifest config missing '{key}'"))
+        };
+        let config = ManifestConfig {
+            max_nodes: need_i("max_nodes")?,
+            max_edges: need_i("max_edges")?,
+            max_graphs: need_i("max_graphs")?,
+            num_species: need_i("num_species")?,
+            hidden: need_i("hidden")?,
+            num_layers: need_i("num_layers")?,
+            num_rbf: need_i("num_rbf")?,
+            head_hidden: need_i("head_hidden")?,
+            cutoff: need_f("cutoff")?,
+            energy_weight: need_f("energy_weight")?,
+            force_weight: need_f("force_weight")?,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .as_object()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?;
+        for (name, entry) in arts {
+            let file = entry
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("artifact {name} missing file"))?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs: leaf_list(entry, "inputs")?,
+                    outputs: leaf_list(entry, "outputs")?,
+                    sha256: entry.get("sha256").as_str().unwrap_or("").to_string(),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            config,
+            params: Arc::new(leaf_list(&j, "params")?),
+            encoder_params: Arc::new(leaf_list(&j, "encoder_params")?),
+            branch_params: Arc::new(leaf_list(&j, "branch_params")?),
+            batch_fields: Arc::new(leaf_list(&j, "batch")?),
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Consistency checks tying the manifest together (used at load time by
+    /// the engine and directly by integration tests).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let ts = self.artifact("train_step")?;
+        anyhow::ensure!(
+            ts.inputs.len() == self.params.len() + self.batch_fields.len(),
+            "train_step inputs ({}) != params ({}) + batch ({})",
+            ts.inputs.len(),
+            self.params.len(),
+            self.batch_fields.len()
+        );
+        // Every grads.<param> output must mirror a param leaf.
+        for p in self.params.iter() {
+            let gname = format!("grads.{}", p.name);
+            let g = ts
+                .outputs
+                .iter()
+                .find(|o| o.name == gname)
+                .ok_or_else(|| anyhow::anyhow!("missing gradient output {gname}"))?;
+            anyhow::ensure!(g.shape == p.shape, "grad shape mismatch for {}", p.name);
+        }
+        for name in ["loss", "mae_e", "mae_f"] {
+            anyhow::ensure!(
+                ts.outputs.iter().any(|o| o.name == name),
+                "train_step missing output {name}"
+            );
+        }
+        for art in self.artifacts.values() {
+            anyhow::ensure!(
+                art.file.exists(),
+                "artifact file {:?} missing (run `make artifacts`)",
+                art.file
+            );
+        }
+        Ok(())
+    }
+}

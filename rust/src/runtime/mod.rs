@@ -1,0 +1,9 @@
+//! AOT runtime: the manifest contract and the PJRT execution engine.
+//! (`PjRtClient::cpu()` -> `HloModuleProto::from_text_file` -> compile ->
+//! execute, per /opt/xla-example/load_hlo.)
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EvalOut, StepOut};
+pub use manifest::{ArtifactMeta, Manifest, ManifestConfig};

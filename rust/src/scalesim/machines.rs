@@ -1,0 +1,99 @@
+//! Machine profiles of the three DOE systems the paper evaluates on
+//! (Section 5): NERSC-Perlmutter, OLCF-Frontier, ALCF-Aurora.
+//!
+//! Numbers are public architecture figures (per-"GPU" = the scheduling unit
+//! the paper maps one rank to: an A100, an MI250X *GCD*, a PVC *tile*).
+//! They parameterize the analytic performance model in `perfmodel`; only
+//! ratios matter for reproducing Figure 4's shape.
+
+/// One supercomputer's per-rank and fabric characteristics.
+#[derive(Debug, Clone, Copy)]
+pub struct MachineProfile {
+    pub name: &'static str,
+    /// Ranks (GPUs/GCDs/tiles) per node.
+    pub ranks_per_node: usize,
+    /// Dense f32-equivalent throughput per rank, TFLOP/s (sustained for
+    /// GNN-style mixed dense/sparse work — a fraction of peak).
+    pub tflops: f64,
+    /// HBM capacity per rank, GiB.
+    pub hbm_gib: f64,
+    /// Injection bandwidth per rank onto the fabric, GiB/s.
+    pub link_gib_s: f64,
+    /// Per-message fabric latency, microseconds.
+    pub latency_us: f64,
+    /// Run-to-run performance noise (relative sigma). The paper observes
+    /// "higher variability on Aurora"; we model it explicitly.
+    pub noise_sigma: f64,
+    /// Largest GPU count used in the paper's plots for this machine.
+    pub max_gpus: usize,
+}
+
+/// OLCF-Frontier: AMD MI250X, 8 GCDs/node, Slingshot-11.
+pub const FRONTIER: MachineProfile = MachineProfile {
+    name: "Frontier",
+    ranks_per_node: 8,
+    tflops: 12.0,
+    hbm_gib: 64.0,
+    link_gib_s: 25.0,
+    latency_us: 2.0,
+    noise_sigma: 0.02,
+    max_gpus: 640,
+};
+
+/// NERSC-Perlmutter: NVIDIA A100, 4 GPUs/node, Slingshot-11.
+pub const PERLMUTTER: MachineProfile = MachineProfile {
+    name: "Perlmutter",
+    ranks_per_node: 4,
+    tflops: 10.0,
+    hbm_gib: 40.0,
+    link_gib_s: 25.0,
+    latency_us: 2.0,
+    noise_sigma: 0.02,
+    max_gpus: 640,
+};
+
+/// ALCF-Aurora: Intel Data Center GPU Max (PVC), 12 tiles/node, Slingshot.
+pub const AURORA: MachineProfile = MachineProfile {
+    name: "Aurora",
+    ranks_per_node: 12,
+    tflops: 9.0,
+    hbm_gib: 64.0,
+    link_gib_s: 19.0,
+    latency_us: 3.0,
+    noise_sigma: 0.08,
+    max_gpus: 1920,
+};
+
+pub const ALL_MACHINES: [MachineProfile; 3] = [FRONTIER, PERLMUTTER, AURORA];
+
+pub fn machine_by_name(name: &str) -> Option<MachineProfile> {
+    ALL_MACHINES
+        .iter()
+        .find(|m| m.name.eq_ignore_ascii_case(name))
+        .copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(machine_by_name("frontier").unwrap().name, "Frontier");
+        assert_eq!(machine_by_name("AURORA").unwrap().max_gpus, 1920);
+        assert!(machine_by_name("summit").is_none());
+    }
+
+    #[test]
+    fn paper_scale_limits() {
+        assert_eq!(FRONTIER.max_gpus, 640);
+        assert_eq!(PERLMUTTER.max_gpus, 640);
+        assert_eq!(AURORA.max_gpus, 1920);
+    }
+
+    #[test]
+    fn aurora_is_noisiest() {
+        assert!(AURORA.noise_sigma > FRONTIER.noise_sigma);
+        assert!(AURORA.noise_sigma > PERLMUTTER.noise_sigma);
+    }
+}

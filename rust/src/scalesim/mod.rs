@@ -1,0 +1,97 @@
+//! Scaling simulator: calibrated machine profiles of Frontier / Perlmutter /
+//! Aurora, an analytic step-time model with the paper's exact collective
+//! payloads, and the Figure-4 weak/strong sweep driver.
+
+pub mod machines;
+pub mod perfmodel;
+pub mod sweep;
+
+pub use machines::{machine_by_name, MachineProfile, ALL_MACHINES, AURORA, FRONTIER, PERLMUTTER};
+pub use perfmodel::{SimMode, Workload};
+pub use sweep::{fig4_all, render_panel, strong_scaling, to_csv, weak_scaling, SweepRow};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fig4_covers_six_panels() {
+        let rows = fig4_all(&Workload::paper(5), 1);
+        for m in ["Frontier", "Perlmutter", "Aurora"] {
+            for regime in ["weak", "strong"] {
+                assert!(
+                    rows.iter().any(|r| r.machine == m && r.regime == regime),
+                    "missing panel {m}/{regime}"
+                );
+            }
+        }
+        // Aurora reaches 1920 GPUs, the others stop at 640.
+        assert!(rows.iter().any(|r| r.machine == "Aurora" && r.n_gpus == 1920));
+        assert!(rows.iter().all(|r| r.machine == "Aurora" || r.n_gpus <= 640));
+    }
+
+    #[test]
+    fn strong_scaling_mtl_par_wins_at_scale() {
+        // Fig 4's headline shape: at the largest GPU count MTL-par's epoch
+        // time is lower than MTL-base's for the same effective batch.
+        let w = Workload::paper(5);
+        let rows = strong_scaling(&FRONTIER, &w, &[10240], 1_000_000, 3);
+        let at = |mode: &str, gpus: usize| {
+            rows.iter()
+                .find(|r| r.mode == mode && r.n_gpus == gpus)
+                .unwrap()
+                .epoch_time_s
+        };
+        assert!(at("MTL-par", 640) < at("MTL-base", 640));
+    }
+
+    #[test]
+    fn weak_scaling_grows_slowly() {
+        // Weak scaling epoch time should rise with GPU count (comm overhead)
+        // but far less than proportionally.
+        let w = Workload::paper(5);
+        let rows = weak_scaling(&PERLMUTTER, &w, &[320], 100, 5);
+        let series: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.mode == "MTL-par")
+            .map(|r| r.epoch_time_s)
+            .collect();
+        let first = series.first().unwrap();
+        let last = series.last().unwrap();
+        assert!(last >= &(first * 0.8), "should not collapse");
+        assert!(last < &(first * 3.0), "should not explode: {first} -> {last}");
+    }
+
+    #[test]
+    fn csv_and_panels_render() {
+        let w = Workload::paper(5);
+        let rows = weak_scaling(&FRONTIER, &w, &[160], 10, 1);
+        let csv = to_csv(&rows);
+        assert!(csv.lines().count() > rows.len());
+        let panel = render_panel(&rows, "Frontier", "weak");
+        assert!(panel.contains("MTL-par b=160"));
+        assert!(panel.contains("MTL-base b=160"));
+    }
+
+    #[test]
+    fn ideal_line_reference() {
+        // Strong-scaling ideal: time ~ 1/n. Verify our model approaches the
+        // ideal at small scale where comm is negligible on Frontier.
+        let w = Workload::paper(5);
+        let mut rng = Rng::new(0);
+        let mut t = |g: usize| {
+            perfmodel::epoch_time(
+                &FRONTIER,
+                &w,
+                SimMode::MtlPar,
+                perfmodel::ScalePoint { n_gpus: g, local_batch: 20480 / g, steps: 10 },
+                &mut rng,
+            )
+        };
+        let t40 = t(40);
+        let t80 = t(80);
+        let speedup = t40 / t80;
+        assert!(speedup > 1.5 && speedup < 2.5, "speedup 40->80 = {speedup}");
+    }
+}

@@ -1,0 +1,248 @@
+//! Analytic performance model reproducing Figure 4 (weak + strong scaling
+//! of MTL-base vs MTL-par on Frontier / Perlmutter / Aurora).
+//!
+//! Epoch time = steps * (compute + gradient-sync) + per-epoch data cost.
+//!
+//! * compute: per-sample FLOPs from the exact architecture formulas times
+//!   the local batch, over the rank's sustained throughput. MTL-base runs
+//!   every head on every rank, MTL-par one head per rank — with the same
+//!   *per-dataset* sample budget, both do the same per-sample encoder work;
+//!   MTL-base additionally pays all-heads head work per rank.
+//! * gradient sync: ring-allreduce cost  2*(n-1)/n * bytes / bw +
+//!   2*(n-1)*latency, with the paper's payloads —
+//!     MTL-base: one global allreduce of (P_s + N_h*P_h);
+//!     MTL-par : global P_s over n ranks + per-subgroup P_h over n/N_h.
+//! * noise: multiplicative lognormal-ish jitter per machine (Aurora high).
+//!
+//! The same collective payload accounting is validated against the real
+//! trainer's comm counters in the integration tests, so the simulated and
+//! executed systems share their communication structure.
+
+use crate::model::arch::ArchDims;
+use crate::scalesim::machines::MachineProfile;
+use crate::util::rng::Rng;
+
+/// Scaling-run description (one point of a Fig-4 panel).
+#[derive(Debug, Clone, Copy)]
+pub struct ScalePoint {
+    pub n_gpus: usize,
+    /// Samples per GPU per step.
+    pub local_batch: usize,
+    /// Steps per epoch (derived from the scaling regime).
+    pub steps: usize,
+}
+
+/// Parallelization mode of Figure 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimMode {
+    MtlBase,
+    MtlPar,
+}
+
+impl SimMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimMode::MtlBase => "MTL-base",
+            SimMode::MtlPar => "MTL-par",
+        }
+    }
+}
+
+/// Workload constants shared by a sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub dims: ArchDims,
+    pub n_heads: usize,
+    /// Mean atoms / edges per structure (from the generators' statistics).
+    pub avg_nodes: f64,
+    pub avg_edges: f64,
+    /// Fraction of peak the GNN sustains (sparse gathers hurt).
+    pub efficiency: f64,
+}
+
+impl Workload {
+    pub fn paper(n_heads: usize) -> Workload {
+        Workload {
+            dims: ArchDims::paper(),
+            n_heads,
+            avg_nodes: 16.0,
+            avg_edges: 120.0,
+            efficiency: 0.25,
+        }
+    }
+
+    /// FLOPs for one structure through encoder (+backward ~ 2x forward).
+    pub fn flops_encoder_per_sample(&self) -> f64 {
+        let h = self.dims.hidden as f64;
+        let r = self.dims.num_rbf as f64;
+        let l = self.dims.num_layers as f64;
+        // Edge MLP: E * ((2H+R)*H + H*H + H), node MLP: N * (2H*H + H*H),
+        // message scatter ~ E*H; x2 mults, x3 fwd+bwd.
+        let edge = self.avg_edges * ((2.0 * h + r) * h + h * h + h);
+        let node = self.avg_nodes * (2.0 * h * h + h * h);
+        let scatter = self.avg_edges * h;
+        6.0 * l * (edge + node + scatter)
+    }
+
+    /// FLOPs for one structure through ONE branch head.
+    pub fn flops_head_per_sample(&self) -> f64 {
+        let h = self.dims.hidden as f64;
+        let d = self.dims.head_hidden as f64;
+        let trunk = self.avg_nodes * (h * d + 2.0 * d * d);
+        6.0 * trunk
+    }
+}
+
+/// Ring allreduce time (seconds) for `bytes` over `n` ranks.
+pub fn ring_allreduce_time(m: &MachineProfile, n: usize, bytes: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let steps = 2 * (n - 1);
+    let volume = 2.0 * (n as f64 - 1.0) / n as f64 * bytes;
+    volume / (m.link_gib_s * 1024.0 * 1024.0 * 1024.0) + steps as f64 * m.latency_us * 1e-6
+}
+
+/// Per-step compute time (seconds) on one rank.
+pub fn step_compute_time(m: &MachineProfile, w: &Workload, mode: SimMode, local_batch: usize) -> f64 {
+    let enc = w.flops_encoder_per_sample();
+    let head = w.flops_head_per_sample();
+    // MTL-base: each rank runs all N_h heads on N_h per-dataset batches per
+    // step (encoder too). MTL-par: one head, one batch.
+    let per_sample = match mode {
+        SimMode::MtlBase => (enc + head) * w.n_heads as f64,
+        SimMode::MtlPar => enc + head,
+    };
+    per_sample * local_batch as f64 / (m.tflops * 1e12 * w.efficiency)
+}
+
+/// Per-step gradient synchronization time (seconds).
+pub fn step_comm_time(m: &MachineProfile, w: &Workload, mode: SimMode, n_gpus: usize) -> f64 {
+    let ps_bytes = w.dims.shared_params() as f64 * 4.0;
+    let ph_bytes = w.dims.head_params() as f64 * 4.0;
+    match mode {
+        SimMode::MtlBase => {
+            ring_allreduce_time(m, n_gpus, ps_bytes + w.n_heads as f64 * ph_bytes)
+        }
+        SimMode::MtlPar => {
+            let sub = (n_gpus / w.n_heads).max(1);
+            ring_allreduce_time(m, n_gpus, ps_bytes) + ring_allreduce_time(m, sub, ph_bytes)
+        }
+    }
+}
+
+/// Per-epoch data-pipeline time: DDStore batch fetch + padding, overlapped
+/// except for a small per-step residue; grows slowly with scale (metadata).
+pub fn step_data_time(w: &Workload, local_batch: usize) -> f64 {
+    // ~1.5 us per structure of batch assembly left on the critical path.
+    1.5e-6 * local_batch as f64 * (w.avg_nodes / 16.0)
+}
+
+/// Average epoch time for one scaling point.
+pub fn epoch_time(
+    m: &MachineProfile,
+    w: &Workload,
+    mode: SimMode,
+    p: ScalePoint,
+    rng: &mut Rng,
+) -> f64 {
+    let per_step = step_compute_time(m, w, mode, p.local_batch)
+        + step_comm_time(m, w, mode, p.n_gpus)
+        + step_data_time(w, p.local_batch);
+    let base = per_step * p.steps as f64;
+    // Multiplicative noise, clamped positive.
+    let noisy = base * (1.0 + rng.normal_scaled(0.0, m.noise_sigma)).max(0.2);
+    noisy
+}
+
+/// Check the per-GPU parameter memory fits the machine's HBM (the paper's
+/// motivation for MTP: MTL-base replicates every head).
+pub fn fits_memory(m: &MachineProfile, w: &Workload, mode: SimMode) -> bool {
+    let params = match mode {
+        SimMode::MtlBase => w.dims.total_params(w.n_heads),
+        SimMode::MtlPar => w.dims.shared_params() + w.dims.head_params(),
+    };
+    let bytes = params * crate::model::arch::TRAIN_BYTES_PER_PARAM;
+    (bytes as f64) < m.hbm_gib * 0.9 * 1024.0 * 1024.0 * 1024.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scalesim::machines::{AURORA, FRONTIER, PERLMUTTER};
+
+    fn w() -> Workload {
+        Workload::paper(5)
+    }
+
+    #[test]
+    fn ring_allreduce_scales_with_bytes_and_ranks() {
+        let t1 = ring_allreduce_time(&FRONTIER, 8, 1e6);
+        let t2 = ring_allreduce_time(&FRONTIER, 8, 1e8);
+        assert!(t2 > t1 * 10.0);
+        let t3 = ring_allreduce_time(&FRONTIER, 640, 1e6);
+        assert!(t3 > t1, "latency term grows with ranks");
+        assert_eq!(ring_allreduce_time(&FRONTIER, 1, 1e9), 0.0);
+    }
+
+    #[test]
+    fn mtl_par_reduces_comm_at_scale() {
+        // The paper's core scaling claim: the MTL-par payload (P_s global +
+        // P_h subgroup) beats MTL-base (P_s + N_h*P_h global) at scale.
+        for m in [&FRONTIER, &PERLMUTTER, &AURORA] {
+            let base = step_comm_time(m, &w(), SimMode::MtlBase, 640);
+            let par = step_comm_time(m, &w(), SimMode::MtlPar, 640);
+            assert!(par < base, "{}: par={par} base={base}", m.name);
+        }
+    }
+
+    #[test]
+    fn mtl_base_computes_more_per_rank() {
+        let base = step_compute_time(&FRONTIER, &w(), SimMode::MtlBase, 128);
+        let par = step_compute_time(&FRONTIER, &w(), SimMode::MtlPar, 128);
+        assert!(base > par * 3.0, "base runs all 5 heads per rank");
+    }
+
+    #[test]
+    fn memory_model_prefers_mtp_for_many_heads() {
+        // With enough heads, MTL-base no longer fits but MTL-par does.
+        let mut big = w();
+        big.n_heads = 120;
+        big.dims.head_hidden = 4096;
+        assert!(!fits_memory(&PERLMUTTER, &big, SimMode::MtlBase));
+        assert!(fits_memory(&PERLMUTTER, &big, SimMode::MtlPar));
+    }
+
+    #[test]
+    fn epoch_time_is_positive_and_noisy() {
+        let mut rng = Rng::new(1);
+        let p = ScalePoint { n_gpus: 40, local_batch: 160, steps: 100 };
+        let a = epoch_time(&AURORA, &w(), SimMode::MtlPar, p, &mut rng);
+        let b = epoch_time(&AURORA, &w(), SimMode::MtlPar, p, &mut rng);
+        assert!(a > 0.0 && b > 0.0);
+        assert!((a - b).abs() > 0.0, "noise should differ draw to draw");
+    }
+
+    #[test]
+    fn strong_scaling_decreases_epoch_time() {
+        // Fixed effective batch: more GPUs -> fewer samples per GPU.
+        let mut rng = Rng::new(2);
+        let effective = 10240;
+        let steps = 50;
+        let t40 = epoch_time(
+            &FRONTIER,
+            &w(),
+            SimMode::MtlPar,
+            ScalePoint { n_gpus: 40, local_batch: effective / 40, steps },
+            &mut rng,
+        );
+        let t640 = epoch_time(
+            &FRONTIER,
+            &w(),
+            SimMode::MtlPar,
+            ScalePoint { n_gpus: 640, local_batch: effective / 640, steps },
+            &mut rng,
+        );
+        assert!(t640 < t40 / 4.0, "t40={t40} t640={t640}");
+    }
+}

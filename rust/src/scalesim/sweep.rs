@@ -1,0 +1,149 @@
+//! Figure 4 sweep driver: weak + strong scaling series for MTL-base vs
+//! MTL-par on each machine, emitted as CSV rows matching the paper's six
+//! panels (2 regimes x 3 machines, several batch sizes each).
+
+use crate::scalesim::machines::{MachineProfile, ALL_MACHINES};
+use crate::scalesim::perfmodel::{epoch_time, ScalePoint, SimMode, Workload};
+use crate::util::rng::Rng;
+
+/// Seed tags separating the weak / strong noise streams.
+const WEAK_TAG: u64 = 0x0EA4;
+const STRONG_TAG: u64 = 0x57_0126;
+
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub machine: &'static str,
+    pub regime: &'static str, // "weak" | "strong"
+    pub mode: &'static str,   // "MTL-base" | "MTL-par"
+    pub batch: usize,         // local batch (weak) or effective batch (strong)
+    pub n_gpus: usize,
+    pub epoch_time_s: f64,
+}
+
+/// GPU counts for a machine's panel (paper: 40..640 on Frontier/Perlmutter,
+/// 120..1920 on Aurora; both sweeps double each step).
+pub fn gpu_counts(m: &MachineProfile) -> Vec<usize> {
+    let start = match m.name {
+        "Aurora" => 120,
+        _ => 40,
+    };
+    let mut out = Vec::new();
+    let mut g = start;
+    while g <= m.max_gpus {
+        out.push(g);
+        g *= 2;
+    }
+    out
+}
+
+/// Weak-scaling panel: fixed local batch per GPU.
+pub fn weak_scaling(
+    m: &MachineProfile,
+    w: &Workload,
+    local_batches: &[usize],
+    steps: usize,
+    seed: u64,
+) -> Vec<SweepRow> {
+    let mut rng = Rng::new(seed ^ WEAK_TAG);
+    let mut rows = Vec::new();
+    for &lb in local_batches {
+        for mode in [SimMode::MtlBase, SimMode::MtlPar] {
+            for &g in &gpu_counts(m) {
+                let p = ScalePoint { n_gpus: g, local_batch: lb, steps };
+                rows.push(SweepRow {
+                    machine: m.name,
+                    regime: "weak",
+                    mode: mode.label(),
+                    batch: lb,
+                    n_gpus: g,
+                    epoch_time_s: epoch_time(m, w, mode, p, &mut rng),
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Strong-scaling panel: fixed effective batch across all GPUs.
+pub fn strong_scaling(
+    m: &MachineProfile,
+    w: &Workload,
+    effective_batches: &[usize],
+    total_samples: usize,
+    seed: u64,
+) -> Vec<SweepRow> {
+    let mut rng = Rng::new(seed ^ STRONG_TAG);
+    let mut rows = Vec::new();
+    for &eb in effective_batches {
+        for mode in [SimMode::MtlBase, SimMode::MtlPar] {
+            for &g in &gpu_counts(m) {
+                let local = (eb / g).max(1);
+                let steps = (total_samples / eb).max(1);
+                let p = ScalePoint { n_gpus: g, local_batch: local, steps };
+                rows.push(SweepRow {
+                    machine: m.name,
+                    regime: "strong",
+                    mode: mode.label(),
+                    batch: eb,
+                    n_gpus: g,
+                    epoch_time_s: epoch_time(m, w, mode, p, &mut rng),
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// All six panels of Figure 4 with the paper's batch settings.
+pub fn fig4_all(w: &Workload, seed: u64) -> Vec<SweepRow> {
+    let mut rows = Vec::new();
+    for m in &ALL_MACHINES {
+        rows.extend(weak_scaling(m, w, &[160, 320, 640], 100, seed));
+        rows.extend(strong_scaling(m, w, &[10240, 20480], 1_000_000, seed));
+    }
+    rows
+}
+
+pub fn to_csv(rows: &[SweepRow]) -> String {
+    let mut out = String::from("machine,regime,mode,batch,n_gpus,epoch_time_s\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{},{},{},{:.6}\n",
+            r.machine, r.regime, r.mode, r.batch, r.n_gpus, r.epoch_time_s
+        ));
+    }
+    out
+}
+
+/// Render one panel as an aligned text table (series per (mode, batch)).
+pub fn render_panel(rows: &[SweepRow], machine: &str, regime: &str) -> String {
+    let panel: Vec<&SweepRow> =
+        rows.iter().filter(|r| r.machine == machine && r.regime == regime).collect();
+    let mut gpus: Vec<usize> = panel.iter().map(|r| r.n_gpus).collect();
+    gpus.sort_unstable();
+    gpus.dedup();
+    let mut series: Vec<(&str, usize)> =
+        panel.iter().map(|r| (r.mode, r.batch)).collect();
+    series.sort();
+    series.dedup();
+
+    let mut out = format!("-- {machine} / {regime} scaling: epoch time (s) --\n");
+    out.push_str(&format!("{:<22}", "series \\ gpus"));
+    for g in &gpus {
+        out.push_str(&format!("{g:>10}"));
+    }
+    out.push('\n');
+    for (mode, batch) in series {
+        out.push_str(&format!("{:<22}", format!("{mode} b={batch}")));
+        for g in &gpus {
+            let v = panel
+                .iter()
+                .find(|r| r.mode == mode && r.batch == batch && r.n_gpus == *g)
+                .map(|r| r.epoch_time_s)
+                .unwrap_or(f64::NAN);
+            out.push_str(&format!("{v:>10.3}"));
+        }
+        out.push('\n');
+    }
+    out
+}

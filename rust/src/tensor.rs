@@ -1,0 +1,217 @@
+//! Host-side tensor type used for marshalling between the coordinator and
+//! the PJRT runtime, and for all L3-side numeric state (parameters,
+//! gradients, optimizer moments).
+//!
+//! Only the two dtypes that appear in the AOT artifacts exist: f32 and i32.
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(name: &str) -> anyhow::Result<DType> {
+        match name {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => anyhow::bail!("unsupported dtype: {other}"),
+        }
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(vec![0.0; numel(shape)]) }
+    }
+
+    pub fn zeros_i32(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: TensorData::I32(vec![0; numel(shape)]) }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            TensorData::F32(_) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn as_i32_mut(&mut self) -> &mut [i32] {
+        match &mut self.data {
+            TensorData::I32(v) => v,
+            TensorData::F32(_) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// First element as f64 (for scalar outputs like loss / mae).
+    pub fn item(&self) -> f64 {
+        match &self.data {
+            TensorData::F32(v) => v[0] as f64,
+            TensorData::I32(v) => v[0] as f64,
+        }
+    }
+
+    /// L2 norm (f32 tensors).
+    pub fn norm(&self) -> f64 {
+        self.as_f32().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Convert to an xla literal for PJRT execution.
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Build from an xla literal (f32 or i32 arrays).
+    pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::from_f32(&dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Tensor::from_i32(&dims, lit.to_vec::<i32>()?)),
+            other => anyhow::bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Serialize to JSON (used by checkpoints' small tensors and configs).
+    pub fn to_json(&self) -> Json {
+        let shape: Vec<Json> = self.shape.iter().map(|&d| Json::Int(d as i64)).collect();
+        match &self.data {
+            TensorData::F32(v) => Json::obj(vec![
+                ("shape", Json::Array(shape)),
+                ("dtype", Json::str("f32")),
+                ("data", Json::Array(v.iter().map(|&x| Json::Float(x as f64)).collect())),
+            ]),
+            TensorData::I32(v) => Json::obj(vec![
+                ("shape", Json::Array(shape)),
+                ("dtype", Json::str("i32")),
+                ("data", Json::Array(v.iter().map(|&x| Json::Int(x as i64)).collect())),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Tensor> {
+        let shape: Vec<usize> = j
+            .get("shape")
+            .as_array()
+            .ok_or_else(|| anyhow::anyhow!("tensor json missing shape"))?
+            .iter()
+            .map(|v| v.as_i64().unwrap_or(0) as usize)
+            .collect();
+        let data = j.get("data").as_array().ok_or_else(|| anyhow::anyhow!("missing data"))?;
+        match j.get("dtype").as_str() {
+            Some("f32") => Ok(Tensor::from_f32(
+                &shape,
+                data.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect(),
+            )),
+            Some("i32") => Ok(Tensor::from_i32(
+                &shape,
+                data.iter().map(|v| v.as_i64().unwrap_or(0) as i32).collect(),
+            )),
+            other => anyhow::bail!("bad dtype {other:?}"),
+        }
+    }
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>().max(if shape.is_empty() { 1 } else { 0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_handles_scalar() {
+        assert_eq!(numel(&[]), 1);
+        assert_eq!(numel(&[2, 3]), 6);
+        assert_eq!(numel(&[0, 3]), 0);
+    }
+
+    #[test]
+    fn construction_checks_shape() {
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.numel(), 4);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn construction_rejects_bad_len() {
+        Tensor::from_f32(&[3], vec![1.0]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Tensor::from_f32(&[2], vec![1.5, -2.5]);
+        let back = Tensor::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+        let ti = Tensor::from_i32(&[2, 1], vec![7, -9]);
+        let backi = Tensor::from_json(&ti.to_json()).unwrap();
+        assert_eq!(ti, backi);
+    }
+
+    #[test]
+    fn item_and_norm() {
+        let t = Tensor::from_f32(&[2], vec![3.0, 4.0]);
+        assert_eq!(t.item(), 3.0);
+        assert!((t.norm() - 5.0).abs() < 1e-12);
+    }
+}

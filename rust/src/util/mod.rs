@@ -1,0 +1,10 @@
+//! Self-contained utility layer: JSON, RNG, CLI parsing, property testing,
+//! and a micro-benchmark timer. The offline crate registry lacks serde /
+//! rand / clap / criterion, so these are first-class modules with their own
+//! test suites instead of external dependencies.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,127 @@
+//! Micro-benchmark timing helpers (criterion is unavailable offline).
+//!
+//! `bench()` warms up, runs timed iterations until a wall-clock budget is
+//! spent, and reports mean / p50 / p95 / min in a stable text format that the
+//! bench binaries print and EXPERIMENTS.md quotes.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} iters={:<6} mean={:>12?} p50={:>12?} p95={:>12?} min={:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        )
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark `f`, spending roughly `budget` of wall clock after `warmup`
+/// untimed iterations. Returns per-iteration statistics.
+pub fn bench(name: &str, warmup: usize, budget: Duration, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    stats_from(name, samples)
+}
+
+/// Benchmark with a fixed iteration count (for expensive end-to-end cases).
+pub fn bench_n(name: &str, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    stats_from(name, samples)
+}
+
+fn stats_from(name: &str, mut samples: Vec<Duration>) -> BenchStats {
+    assert!(!samples.is_empty());
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    let n = samples.len();
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean: total / n as u32,
+        p50: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+        min: samples[0],
+    }
+}
+
+/// Simple scoped phase timer used by the trainer's metrics.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    pub total: Duration,
+    pub count: usize,
+}
+
+impl PhaseTimer {
+    pub fn record(&mut self, d: Duration) {
+        self.total += d;
+        self.count += 1;
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.count as u32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_n_counts_iters() {
+        let s = bench_n("noop", 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn bench_respects_minimum_samples() {
+        let s = bench("tiny", 1, Duration::from_millis(1), || {
+            std::hint::black_box(2 * 2);
+        });
+        assert!(s.iters >= 5);
+    }
+
+    #[test]
+    fn phase_timer_mean() {
+        let mut t = PhaseTimer::default();
+        t.record(Duration::from_millis(2));
+        t.record(Duration::from_millis(4));
+        assert_eq!(t.mean(), Duration::from_millis(3));
+    }
+}

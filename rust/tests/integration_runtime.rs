@@ -1,0 +1,186 @@
+//! Integration: the AOT bridge. Loads the real artifacts produced by
+//! `make artifacts`, executes them through the PJRT CPU client, and checks
+//! numerics, marshalling, and optimizer integration end to end.
+
+use std::sync::Arc;
+
+use hydra_mtp::data::batch::BatchBuilder;
+use hydra_mtp::data::generators::{DatasetGenerator, GeneratorConfig};
+use hydra_mtp::data::structures::DatasetId;
+use hydra_mtp::model::optimizer::{AdamW, AdamWConfig};
+use hydra_mtp::model::params::ParamSet;
+use hydra_mtp::runtime::Engine;
+
+fn engine() -> Arc<Engine> {
+    // One engine per test binary: compiling artifacts is the slow part.
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            Arc::new(Engine::load("artifacts").expect("run `make artifacts` first"))
+        })
+        .clone()
+}
+
+fn small_batch(engine: &Engine, seed: u64) -> hydra_mtp::data::batch::GraphBatch {
+    let mut g = DatasetGenerator::new(
+        DatasetId::Ani1x,
+        seed,
+        GeneratorConfig { max_atoms: 12, ..Default::default() },
+    );
+    let samples = g.take(8);
+    let batches = BatchBuilder::build_all(
+        engine.manifest.config.batch_dims(),
+        engine.manifest.config.cutoff,
+        &samples,
+    );
+    batches.into_iter().next().expect("at least one batch")
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let e = engine();
+    assert!(e.manifest.params.len() > 40);
+    assert_eq!(e.manifest.batch_fields.len(), 12);
+    e.manifest.validate().unwrap();
+    assert!(e.platform().to_lowercase().contains("cpu") || !e.platform().is_empty());
+}
+
+#[test]
+fn arch_formulas_match_manifest_counts() {
+    // The closed-form P_s / P_h formulas must agree with the real artifact.
+    let e = engine();
+    let dims = e.manifest.config.arch_dims();
+    let params = ParamSet::init(&e.manifest.params, 0);
+    let enc = params.subset("encoder.").total_params();
+    let br = params.subset("branch.").total_params();
+    assert_eq!(enc, dims.shared_params(), "P_s formula");
+    assert_eq!(br, dims.head_params(), "P_h formula");
+    assert_eq!(enc + br, params.total_params());
+}
+
+#[test]
+fn train_step_runs_and_is_deterministic() {
+    let e = engine();
+    let params = ParamSet::init(&e.manifest.params, 1);
+    let batch = small_batch(&e, 2);
+    let a = e.train_step(&params, &batch).unwrap();
+    let b = e.train_step(&params, &batch).unwrap();
+    assert!(a.loss.is_finite() && a.loss > 0.0);
+    assert_eq!(a.loss, b.loss, "same inputs -> same loss");
+    assert_eq!(a.mae_e, b.mae_e);
+    // Gradients exist and are not all zero.
+    assert!(a.grads.global_norm() > 0.0);
+    assert_eq!(a.grads.len(), params.len());
+}
+
+#[test]
+fn eval_step_matches_train_step_metrics() {
+    let e = engine();
+    let params = ParamSet::init(&e.manifest.params, 3);
+    let batch = small_batch(&e, 4);
+    let tr = e.train_step(&params, &batch).unwrap();
+    let ev = e.eval_step(&params, &batch).unwrap();
+    assert!((tr.loss - ev.loss).abs() < 1e-5 * (1.0 + tr.loss.abs()));
+    assert!((tr.mae_e - ev.mae_e).abs() < 1e-5);
+    assert!((tr.mae_f - ev.mae_f).abs() < 1e-5);
+}
+
+#[test]
+fn forward_shapes_and_masking() {
+    let e = engine();
+    let params = ParamSet::init(&e.manifest.params, 5);
+    let batch = small_batch(&e, 6);
+    let (energy, forces) = e.forward(&params, &batch).unwrap();
+    let dims = e.manifest.config.batch_dims();
+    assert_eq!(energy.shape, vec![dims.max_graphs]);
+    assert_eq!(forces.shape, vec![dims.max_nodes, 3]);
+    // Padded graphs/nodes must predict exactly zero (masking).
+    let ev = energy.as_f32();
+    for g in batch.n_graphs..dims.max_graphs {
+        assert_eq!(ev[g], 0.0, "padded graph {g}");
+    }
+    let fv = forces.as_f32();
+    for n in batch.n_nodes..dims.max_nodes {
+        assert_eq!(&fv[n * 3..n * 3 + 3], &[0.0, 0.0, 0.0], "padded node {n}");
+    }
+}
+
+#[test]
+fn gradients_point_downhill_with_adamw() {
+    // Full L3 stack sanity: repeated engine steps + rust AdamW reduce loss.
+    let e = engine();
+    let mut params = ParamSet::init(&e.manifest.params, 7);
+    let batch = small_batch(&e, 8);
+    let mut opt = AdamW::new(
+        AdamWConfig { lr: 3e-3, ..Default::default() },
+        &params,
+    );
+    let first = e.train_step(&params, &batch).unwrap().loss;
+    let mut last = first;
+    for _ in 0..10 {
+        let out = e.train_step(&params, &batch).unwrap();
+        last = out.loss;
+        opt.step(&mut params, &out.grads);
+    }
+    assert!(
+        last < first,
+        "loss should decrease under AdamW: {first} -> {last}"
+    );
+}
+
+#[test]
+fn branch_swap_changes_predictions_encoder_forward_does_not() {
+    // The MTL split point: same encoder + different branch => different
+    // predictions; encoder-only forward ignores branch values entirely.
+    let e = engine();
+    let p1 = ParamSet::init(&e.manifest.params, 11);
+    let mut p2 = p1.clone();
+    let other = ParamSet::init(&e.manifest.params, 99).subset("branch.");
+    p2.copy_matching_from(&other);
+    let batch = small_batch(&e, 12);
+
+    let (e1, _) = e.forward(&p1, &batch).unwrap();
+    let (e2, _) = e.forward(&p2, &batch).unwrap();
+    let diff: f32 = e1
+        .as_f32()
+        .iter()
+        .zip(e2.as_f32())
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(diff > 1e-6, "branch change must alter head predictions");
+
+    let enc1 = p1.subset("encoder.");
+    let enc2 = p2.subset("encoder.");
+    let (h1, v1) = e.encoder_forward(&enc1, &batch).unwrap();
+    let (h2, v2) = e.encoder_forward(&enc2, &batch).unwrap();
+    assert_eq!(h1.as_f32(), h2.as_f32(), "encoder output must not depend on branch");
+    assert_eq!(v1.as_f32(), v2.as_f32());
+}
+
+#[test]
+fn marshalling_rejects_wrong_input_count() {
+    let e = engine();
+    let err = e.run_raw("train_step", &[]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn one_artifact_serves_all_heads() {
+    // Same executable, different branch values = different heads (the core
+    // mechanism multi-task parallelism relies on).
+    let e = engine();
+    let batch = small_batch(&e, 20);
+    let encoder = ParamSet::init(&e.manifest.params, 30).subset("encoder.");
+    let mut losses = Vec::new();
+    for head_seed in 0..3u64 {
+        let mut full = ParamSet::init(&e.manifest.params, 40 + head_seed);
+        full.copy_matching_from(&encoder);
+        losses.push(e.train_step(&full, &batch).unwrap().loss);
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(
+        (losses[0] - losses[1]).abs() > 1e-9 || (losses[1] - losses[2]).abs() > 1e-9,
+        "different heads should produce different losses: {losses:?}"
+    );
+}

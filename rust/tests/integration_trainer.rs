@@ -1,0 +1,176 @@
+//! Integration: the 2D-parallel trainer. Exercises all four training modes
+//! end to end on real artifacts with multi-rank meshes, and verifies the
+//! paper's communication-pattern claims against the comm counters.
+
+use std::sync::Arc;
+
+use hydra_mtp::config::{RunConfig, TrainMode};
+use hydra_mtp::coordinator::{evaluate_model, DataBundle, Heads, Trainer};
+use hydra_mtp::data::structures::{DatasetId, ALL_DATASETS};
+use hydra_mtp::runtime::Engine;
+
+fn engine() -> Arc<Engine> {
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            Arc::new(Engine::load("artifacts").expect("run `make artifacts` first"))
+        })
+        .clone()
+}
+
+fn tiny_config(mode: TrainMode, replicas: usize, epochs: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.mode = mode;
+    cfg.parallel.replicas = replicas;
+    cfg.train.epochs = epochs;
+    cfg.train.patience = 0;
+    cfg.data.per_dataset = 48;
+    cfg.data.max_atoms = 10;
+    cfg
+}
+
+fn bundle(cfg: &RunConfig, datasets: &[DatasetId]) -> DataBundle {
+    DataBundle::generate(&cfg.data, datasets)
+}
+
+#[test]
+fn single_dataset_training_reduces_loss() {
+    let e = engine();
+    let cfg = tiny_config(TrainMode::Single(DatasetId::Ani1x), 1, 4);
+    let data = bundle(&cfg, &[DatasetId::Ani1x]);
+    let out = Trainer::new(e, cfg).train(&data).unwrap();
+    let first = out.log.epochs.first().unwrap().train_loss;
+    let last = out.log.epochs.last().unwrap().train_loss;
+    assert!(last < first, "loss should fall: {first} -> {last}");
+    assert!(matches!(out.model.heads, Heads::Shared(_)));
+}
+
+#[test]
+fn ddp_replicas_match_single_rank_loss_trajectory() {
+    // DDP invariant: with the same *global* sample pool, two replicas
+    // averaging gradients behave like a larger-batch single rank — and the
+    // encoder stays bit-synced (checked inside finalize).
+    let e = engine();
+    let cfg1 = tiny_config(TrainMode::Single(DatasetId::Qm7x), 2, 2);
+    let data = bundle(&cfg1, &[DatasetId::Qm7x]);
+    let out = Trainer::new(e, cfg1).train(&data).unwrap();
+    assert!(out.log.epochs.iter().all(|e| e.train_loss.is_finite()));
+    assert!(out.comm_elems.0 > 0, "DDP must communicate");
+}
+
+#[test]
+fn mtl_par_trains_all_heads_on_mesh() {
+    let e = engine();
+    let cfg = tiny_config(TrainMode::MtlPar, 1, 2);
+    let data = bundle(&cfg, &ALL_DATASETS);
+    let out = Trainer::new(Arc::clone(&e), cfg).train(&data).unwrap();
+    match &out.model.heads {
+        Heads::PerDataset(m) => assert_eq!(m.len(), 5, "one branch per dataset"),
+        _ => panic!("MTL-par must produce per-dataset heads"),
+    }
+    // Evaluate the trained model across every dataset: all finite.
+    let scores = evaluate_model(&e, &out.model, &data.test).unwrap();
+    assert_eq!(scores.len(), 5);
+    for (d, (mae_e, mae_f)) in scores {
+        assert!(mae_e.is_finite() && mae_f.is_finite(), "{}", d.name());
+    }
+}
+
+#[test]
+fn mtl_par_with_replicas_keeps_encoder_synced() {
+    // 5 heads x 2 replicas = 10 rank threads; finalize asserts encoder sync.
+    let e = engine();
+    let cfg = tiny_config(TrainMode::MtlPar, 2, 1);
+    let data = bundle(&cfg, &ALL_DATASETS);
+    let out = Trainer::new(e, cfg).train(&data).unwrap();
+    assert!(out.comm_elems.0 > 0 && out.comm_elems.1 > 0);
+}
+
+#[test]
+fn mtl_base_trains_and_carries_all_heads_per_rank() {
+    let e = engine();
+    let cfg = tiny_config(TrainMode::MtlBase, 1, 2);
+    let data = bundle(&cfg, &ALL_DATASETS);
+    let out = Trainer::new(e, cfg).train(&data).unwrap();
+    match &out.model.heads {
+        Heads::PerDataset(m) => assert_eq!(m.len(), 5),
+        _ => panic!("MTL-base must produce per-dataset heads"),
+    }
+    let first = out.log.epochs.first().unwrap().train_loss;
+    let last = out.log.epochs.last().unwrap().train_loss;
+    assert!(last < first * 1.5, "MTL-base should not diverge: {first} -> {last}");
+}
+
+#[test]
+fn baseline_all_trains_one_head_on_mixed_stream() {
+    let e = engine();
+    let cfg = tiny_config(TrainMode::BaselineAll, 1, 2);
+    let data = bundle(&cfg, &ALL_DATASETS);
+    let out = Trainer::new(e, cfg).train(&data).unwrap();
+    assert!(matches!(out.model.heads, Heads::Shared(_)));
+    assert!(out.log.epochs.iter().all(|e| e.train_loss.is_finite()));
+}
+
+#[test]
+fn comm_payloads_match_paper_claims() {
+    // Paper Section 4.3 / 6: MTL-par replaces the global (P_s + N_h*P_h)
+    // allreduce with a global P_s + per-subgroup P_h. Verify with counters.
+    let e = engine();
+    let dims = e.manifest.config.arch_dims();
+    let ps = dims.shared_params() as u64;
+    let ph = dims.head_params() as u64;
+
+    let cfg_par = tiny_config(TrainMode::MtlPar, 1, 1);
+    let data = bundle(&cfg_par, &ALL_DATASETS);
+    let out_par = Trainer::new(Arc::clone(&e), cfg_par).train(&data).unwrap();
+
+    let cfg_base = tiny_config(TrainMode::MtlBase, 1, 1);
+    let out_base = Trainer::new(Arc::clone(&e), cfg_base).train(&data).unwrap();
+
+    let steps_par = out_par.log.epochs.iter().map(|e| e.steps as u64).sum::<u64>();
+    let steps_base = out_base.log.epochs.iter().map(|e| e.steps as u64).sum::<u64>();
+    assert!(steps_par > 0 && steps_base > 0);
+
+    // MTL-par global traffic = steps * P_s (+ small metric allgathers).
+    let par_global_grad = steps_par * ps;
+    assert!(
+        out_par.comm_elems.0 >= par_global_grad
+            && out_par.comm_elems.0 < par_global_grad + steps_par * ph / 4 + 10_000,
+        "par global {} vs expected ~{par_global_grad}",
+        out_par.comm_elems.0
+    );
+    // Head-group traffic = steps * P_h (exactly: no allgathers there).
+    assert_eq!(out_par.comm_elems.1, steps_par * ph, "head-group payload");
+
+    // MTL-base global traffic = steps * (P_s + 5*P_h) (+ allgathers).
+    let base_global_grad = steps_base * (ps + 5 * ph);
+    assert!(
+        out_base.comm_elems.0 >= base_global_grad
+            && out_base.comm_elems.0 < base_global_grad + steps_base * ph + 10_000,
+        "base global {} vs expected ~{base_global_grad}",
+        out_base.comm_elems.0
+    );
+    assert_eq!(out_base.comm_elems.1, 0, "MTL-base has no sub-groups");
+
+    // Per step, MTL-par moves strictly less data through the global group.
+    assert!(
+        out_par.comm_elems.0 / steps_par < out_base.comm_elems.0 / steps_base,
+        "MTL-par must shrink the global payload"
+    );
+}
+
+#[test]
+fn early_stopping_halts_before_epoch_budget() {
+    let e = engine();
+    let mut cfg = tiny_config(TrainMode::Single(DatasetId::MpTrj), 1, 30);
+    cfg.train.patience = 2;
+    cfg.train.lr = 1e-12; // effectively frozen: val loss cannot improve
+    let data = bundle(&cfg, &[DatasetId::MpTrj]);
+    let out = Trainer::new(e, cfg).train(&data).unwrap();
+    assert!(
+        out.log.epochs.len() <= 5,
+        "frozen lr must trigger early stopping, ran {} epochs",
+        out.log.epochs.len()
+    );
+}

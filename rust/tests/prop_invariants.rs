@@ -1,0 +1,336 @@
+//! Property-based tests over the coordinator's substrates (seeded-case
+//! harness in `util::prop` — the offline registry has no proptest).
+//!
+//! Each property runs over dozens of seeded random cases; a failure prints
+//! the seed so the exact case replays deterministically.
+
+use hydra_mtp::comm::{build_mesh, Comm, MeshShape};
+use hydra_mtp::data::batch::{BatchBuilder, BatchDims};
+use hydra_mtp::data::generators::{DatasetGenerator, GeneratorConfig};
+use hydra_mtp::data::graph::{radius_graph_brute, radius_graph_positions};
+use hydra_mtp::data::split::{Split, SplitSpec};
+use hydra_mtp::data::structures::{AtomicStructure, ALL_DATASETS};
+use hydra_mtp::data::DDStore;
+use hydra_mtp::util::json::Json;
+use hydra_mtp::util::prop::{check, forall};
+use hydra_mtp::util::rng::Rng;
+
+fn random_structures(rng: &mut Rng, n: usize) -> Vec<AtomicStructure> {
+    let d = ALL_DATASETS[rng.below(5)];
+    let mut g = DatasetGenerator::new(
+        d,
+        rng.next_u64(),
+        GeneratorConfig { max_atoms: rng.int_range(4, 20), ..Default::default() },
+    );
+    g.take(n)
+}
+
+#[test]
+fn prop_batching_conserves_everything() {
+    forall(
+        "batching conserves atoms/graphs and keeps masks consistent",
+        25,
+        |rng| {
+            let n = rng.int_range(1, 30);
+            let dims = BatchDims {
+                max_nodes: rng.int_range(32, 128),
+                max_edges: rng.int_range(256, 1024),
+                max_graphs: rng.int_range(2, 12),
+            };
+            (random_structures(rng, n), dims)
+        },
+        |(structures, dims)| {
+            let batches = BatchBuilder::build_all(*dims, 6.0, structures);
+            let mut builder = BatchBuilder::new(*dims, 6.0);
+            let mut skipped = 0usize;
+            for s in structures {
+                builder.push(s);
+                skipped = builder.skipped;
+            }
+            let total_graphs: usize = batches.iter().map(|b| b.n_graphs).sum();
+            check(
+                total_graphs + skipped == structures.len(),
+                format!("graphs {total_graphs} + skipped {skipped} != {}", structures.len()),
+            )?;
+            for b in &batches {
+                check(b.n_nodes <= dims.max_nodes, "node budget")?;
+                check(b.n_edges <= dims.max_edges, "edge budget")?;
+                check(
+                    b.node_mask.iter().sum::<f32>() as usize == b.n_nodes,
+                    "node mask sum",
+                )?;
+                for e in 0..b.n_edges {
+                    let (s, d) = (b.edge_src[e] as usize, b.edge_dst[e] as usize);
+                    check(s < b.n_nodes && d < b.n_nodes, "edge endpoints real")?;
+                    check(b.node_graph[s] == b.node_graph[d], "edges intra-graph")?;
+                }
+                // Padding slots must be inert.
+                for n in b.n_nodes..dims.max_nodes {
+                    check(b.species[n] == 0, "padding species zero")?;
+                    check(b.node_mask[n] == 0.0, "padding node mask")?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cell_list_matches_brute_force() {
+    forall(
+        "cell-list radius graph == O(n^2) reference",
+        30,
+        |rng| {
+            let n = rng.int_range(2, 60);
+            let span = rng.range(2.0, 20.0);
+            let cutoff = rng.range(1.5, 7.0);
+            let pos: Vec<[f64; 3]> = (0..n)
+                .map(|_| [rng.range(0.0, span), rng.range(0.0, span), rng.range(0.0, span)])
+                .collect();
+            (pos, cutoff)
+        },
+        |(pos, cutoff)| {
+            let fast = radius_graph_positions(pos, *cutoff);
+            let brute = radius_graph_brute(pos, *cutoff);
+            check(fast == brute, format!("{} vs {} edges", fast.len(), brute.len()))
+        },
+    );
+}
+
+#[test]
+fn prop_allreduce_mean_is_exact_average() {
+    forall(
+        "allreduce_mean == per-element average over any group size",
+        12,
+        |rng| {
+            let group = rng.int_range(1, 6);
+            let len = rng.int_range(1, 200);
+            let data: Vec<Vec<f32>> = (0..group)
+                .map(|_| (0..len).map(|_| rng.range(-5.0, 5.0) as f32).collect())
+                .collect();
+            data
+        },
+        |data| {
+            let group = data.len();
+            let comms = Comm::group(group);
+            let data2 = data.clone();
+            let results: Vec<Vec<f32>> = std::thread::scope(|s| {
+                comms
+                    .into_iter()
+                    .zip(data2)
+                    .map(|(c, mut d)| {
+                        s.spawn(move || {
+                            c.allreduce_mean(&mut d);
+                            d
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            let len = data[0].len();
+            for i in 0..len {
+                let expect: f64 =
+                    data.iter().map(|d| d[i] as f64).sum::<f64>() / group as f64;
+                for r in &results {
+                    check(
+                        (r[i] as f64 - expect).abs() < 1e-5,
+                        format!("elem {i}: {} vs {expect}", r[i]),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mesh_coords_bijective() {
+    forall(
+        "mesh rank <-> (head, replica) is a bijection",
+        50,
+        |rng| MeshShape {
+            num_heads: rng.int_range(1, 8),
+            replicas: rng.int_range(1, 8),
+        },
+        |shape| {
+            let mut seen = std::collections::HashSet::new();
+            for rank in 0..shape.world_size() {
+                let (h, r) = shape.coords(rank);
+                check(h < shape.num_heads && r < shape.replicas, "coords in range")?;
+                check(shape.rank_of(h, r) == rank, "roundtrip")?;
+                check(seen.insert((h, r)), "distinct coords")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mesh_subgroup_reductions_are_isolated() {
+    forall(
+        "head sub-groups average independently of each other",
+        6,
+        |rng| MeshShape {
+            num_heads: rng.int_range(2, 4),
+            replicas: rng.int_range(1, 3),
+        },
+        |shape| {
+            let ranks = build_mesh(*shape);
+            let shape = *shape;
+            let results: Vec<(usize, f32)> = std::thread::scope(|s| {
+                ranks
+                    .into_iter()
+                    .map(|mr| {
+                        s.spawn(move || {
+                            let mut v = vec![(mr.head * 100 + mr.replica) as f32];
+                            mr.head_group.allreduce_mean(&mut v);
+                            (mr.head, v[0])
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            for (head, mean) in results {
+                let expect = (head * 100) as f32
+                    + (0..shape.replicas).sum::<usize>() as f32 / shape.replicas as f32;
+                check(
+                    (mean - expect).abs() < 1e-4,
+                    format!("head {head}: {mean} vs {expect}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_split_partitions() {
+    forall(
+        "split is a deterministic partition with right fractions",
+        20,
+        |rng| (rng.int_range(100, 4000), rng.next_u64()),
+        |&(n, seed)| {
+            let spec = SplitSpec::default();
+            let tr = spec.indices(n, seed, Split::Train).len();
+            let va = spec.indices(n, seed, Split::Val).len();
+            let te = spec.indices(n, seed, Split::Test).len();
+            check(tr + va + te == n, "partition complete")?;
+            check(
+                (tr as f64 / n as f64 - 0.8).abs() < 0.08,
+                format!("train fraction {}", tr as f64 / n as f64),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_ddstore_get_matches_source() {
+    forall(
+        "ddstore round-robin get returns the original sample",
+        10,
+        |rng| {
+            let world = rng.int_range(1, 6);
+            let n = rng.int_range(1, 40);
+            (random_structures(rng, n), world)
+        },
+        |(samples, world)| {
+            let store = DDStore::new(samples.clone(), *world);
+            for (g, expect) in samples.iter().enumerate() {
+                let got = store
+                    .get(g % *world, g)
+                    .ok_or_else(|| format!("missing sample {g}"))?;
+                check(&got == expect, format!("sample {g} mismatch"))?;
+            }
+            check(store.get(0, samples.len()).is_none(), "oob is none")
+        },
+    );
+}
+
+#[test]
+fn prop_gpack_roundtrip() {
+    forall(
+        "gpack write/read roundtrips arbitrary generated structures",
+        8,
+        |rng| {
+            let n = rng.int_range(1, 25);
+            (random_structures(rng, n), rng.next_u64())
+        },
+        |(samples, tag)| {
+            let path = std::env::temp_dir()
+                .join(format!("hydra_prop_{}_{tag}.gpack", std::process::id()));
+            hydra_mtp::data::pack::write_all(&path, samples).map_err(|e| e.to_string())?;
+            let mut r =
+                hydra_mtp::data::pack::GPackReader::open(&path).map_err(|e| e.to_string())?;
+            let back = r.read_all().map_err(|e| e.to_string())?;
+            std::fs::remove_file(&path).ok();
+            check(&back == samples, "roundtrip mismatch")
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Int(rng.next_u64() as i64 / 1024),
+            1 => Json::Float((rng.range(-1e6, 1e6) * 1e3).round() / 1e3),
+            2 => Json::Bool(rng.bool_with(0.5)),
+            3 => {
+                let n = rng.int_range(0, 12);
+                Json::Str((0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect())
+            }
+            4 => Json::Array(
+                (0..rng.int_range(0, 5)).map(|_| random_json(rng, depth - 1)).collect(),
+            ),
+            _ => Json::Object(
+                (0..rng.int_range(0, 5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(
+        "json serialize/parse roundtrips",
+        60,
+        |rng| random_json(rng, 3),
+        |j| {
+            let text = j.to_string();
+            let back = Json::parse(&text).map_err(|e| e.to_string())?;
+            check(&back == j, format!("roundtrip mismatch: {text}"))
+        },
+    );
+}
+
+#[test]
+fn prop_generated_structures_always_valid_and_curated() {
+    forall(
+        "every generated structure is valid and within curation bounds",
+        10,
+        |rng| {
+            let d = ALL_DATASETS[rng.below(5)];
+            let seed = rng.next_u64();
+            (d, seed)
+        },
+        |&(d, seed)| {
+            let cfg = GeneratorConfig::default();
+            let mut g = DatasetGenerator::new(d, seed, cfg.clone());
+            for s in g.take(15) {
+                s.validate().map_err(|e| e.to_string())?;
+                check(
+                    s.energy_per_atom().abs() <= cfg.max_energy_per_atom,
+                    format!("energy outlier {}", s.energy_per_atom()),
+                )?;
+                for f in &s.forces {
+                    for x in f {
+                        check(x.abs() <= cfg.max_force, format!("force outlier {x}"))?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
