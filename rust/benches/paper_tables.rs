@@ -27,6 +27,11 @@ use hydra_mtp::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    // `bench` is what cargo passes to harness=false bench binaries.
+    args.ensure_known(
+        "paper_tables",
+        &["quick", "per-dataset", "max-atoms", "epochs", "lr", "bench"],
+    )?;
     let quick = args.bool("quick");
     let mut cfg = RunConfig::default();
     cfg.data.per_dataset = args.usize("per-dataset", if quick { 96 } else { 600 });
@@ -48,7 +53,16 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- Tables 1 & 2 -------------------------------------------------------
-    let engine = Arc::new(Engine::load(&cfg.artifacts_dir)?);
+    let engine = match Engine::load(&cfg.artifacts_dir) {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            eprintln!(
+                "SKIP: AOT artifacts unavailable ({e:#}); run `make artifacts` and \
+                 enable the `pjrt` feature (uncomment `xla` in Cargo.toml) to regenerate Tables 1-2 / Fig 4"
+            );
+            return Ok(());
+        }
+    };
     let data = DataBundle::generate(&cfg.data, &ALL_DATASETS);
     let t1 = std::time::Instant::now();
     let matrix = experiments::run_tables(&engine, &cfg, &data, |line| {

@@ -150,7 +150,7 @@ impl RunConfig {
 
     pub fn to_json(&self) -> Json {
         let mode = match self.mode {
-            TrainMode::Single(d) => d.name().to_string(),
+            TrainMode::Single(d) => d.name(),
             TrainMode::BaselineAll => "baseline-all".to_string(),
             TrainMode::MtlBase => "mtl-base".to_string(),
             TrainMode::MtlPar => "mtl-par".to_string(),

@@ -13,14 +13,16 @@ use std::sync::Arc;
 
 use crate::config::{RunConfig, TrainMode};
 use crate::coordinator::evaluate::{evaluate_model, EvalMatrix};
-use crate::coordinator::trainer::{DataBundle, TrainOutcome, Trainer};
+use crate::coordinator::trainer::{DataBundle, TrainOutcome};
 use crate::data::generators::{element_histogram, DatasetGenerator, GeneratorConfig};
 use crate::data::structures::ALL_DATASETS;
 use crate::elements;
 use crate::runtime::Engine;
+use crate::session::Session;
 
 /// Train one model in the given mode (shared data bundle) and return it
-/// along with its metrics log.
+/// along with its metrics log. Routed through the [`Session`] facade, so
+/// every paper mode exercises the public API.
 pub fn train_mode(
     engine: &Arc<Engine>,
     base: &RunConfig,
@@ -29,9 +31,8 @@ pub fn train_mode(
 ) -> anyhow::Result<TrainOutcome> {
     let mut cfg = base.clone();
     cfg.mode = mode;
-    cfg.validate()?;
-    let trainer = Trainer::new(Arc::clone(engine), cfg);
-    trainer.train(data)
+    let session = Session::builder().config(cfg).engine(Arc::clone(engine)).build()?;
+    session.train_on(data)
 }
 
 /// The seven models of Section 5.1, in paper order.

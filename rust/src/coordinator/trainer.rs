@@ -87,6 +87,7 @@ impl DataBundle {
 // ---------------------------------------------------------------------------
 
 /// Final parameters of a training run.
+#[derive(Clone)]
 pub struct TrainedModel {
     pub name: String,
     /// Encoder leaves ("encoder.*").
@@ -95,20 +96,25 @@ pub struct TrainedModel {
     pub heads: Heads,
 }
 
+#[derive(Clone)]
 pub enum Heads {
     Shared(ParamSet),
     PerDataset(BTreeMap<DatasetId, ParamSet>),
 }
 
 impl TrainedModel {
+    /// The branch used to predict data from `d`, if the model has one.
+    pub fn try_branch_for(&self, d: DatasetId) -> Option<&ParamSet> {
+        match &self.heads {
+            Heads::Shared(b) => Some(b),
+            Heads::PerDataset(m) => m.get(&d),
+        }
+    }
+
     /// The branch used to predict data from `d`.
     pub fn branch_for(&self, d: DatasetId) -> &ParamSet {
-        match &self.heads {
-            Heads::Shared(b) => b,
-            Heads::PerDataset(m) => m
-                .get(&d)
-                .unwrap_or_else(|| panic!("{}: no branch for {}", self.name, d.name())),
-        }
+        self.try_branch_for(d)
+            .unwrap_or_else(|| panic!("{}: no branch for {}", self.name, d.name()))
     }
 
     /// Full engine-callable parameter set for dataset `d`.
@@ -321,7 +327,9 @@ fn init_rank_params(
     let branches = datasets
         .iter()
         .map(|&d| {
-            let seed = cfg.train.seed ^ (0xB4A9 + d.index() as u64 * 7919);
+            // Salt comes from the task spec (presets resolve to the seed
+            // repo's exact constants, so trajectories are unchanged).
+            let seed = cfg.train.seed ^ d.branch_init_salt();
             let b = ParamSet::init(&engine.manifest.params, seed).subset("branch.");
             (d, b)
         })

@@ -40,13 +40,25 @@ pub struct GraphBatch {
     pub n_graphs: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum BatchError {
-    #[error("structure does not fit: {natoms} atoms / {nedges} edges vs budget {dims:?}")]
     TooLarge { natoms: usize, nedges: usize, dims: BatchDims },
-    #[error("batch is full")]
     Full,
 }
+
+impl std::fmt::Display for BatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BatchError::TooLarge { natoms, nedges, dims } => write!(
+                f,
+                "structure does not fit: {natoms} atoms / {nedges} edges vs budget {dims:?}"
+            ),
+            BatchError::Full => write!(f, "batch is full"),
+        }
+    }
+}
+
+impl std::error::Error for BatchError {}
 
 impl GraphBatch {
     pub fn empty(dims: BatchDims) -> GraphBatch {

@@ -1,4 +1,4 @@
-//! Per-dataset fidelity transforms: the multi-source, multi-fidelity
+//! Per-task fidelity transforms: the multi-source, multi-fidelity
 //! inconsistency the paper's MTL approach exists to absorb.
 //!
 //! Real datasets disagree because they use different approximation theories
@@ -11,11 +11,16 @@
 //!   E_label = scale_d * E_true + sum_atoms shift_d[z] + noise
 //!   F_label = scale_d * F_true + noise
 //!
-//! with all constants a deterministic function of the dataset id, so the
-//! conflict between datasets is reproducible run-to-run.
+//! with all constants coming from the task's [`FidelityProfile`] in the
+//! registry (deterministic per seed tag), so the conflict between datasets
+//! is reproducible run-to-run. The five presets carry the seed repo's exact
+//! constants: organic sources get large, conflicting shifts; the two
+//! inorganic sources share a seed tag (same PBE family) and nearly agree,
+//! mirroring the paper's Tables 1-2 transfer structure.
 
 use crate::data::structures::DatasetId;
 use crate::elements::MAX_Z;
+use crate::tasks::FidelityProfile;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -31,50 +36,36 @@ pub struct FidelityModel {
     pub force_noise: f64,
 }
 
-/// Per-dataset magnitudes. Organic datasets (different functionals over the
-/// same CHNO chemistry) get *large, conflicting* reference shifts — that is
-/// the instability source the paper highlights; the two inorganic datasets
-/// use nearly identical settings (PBE-family), so their shifts are close,
-/// mirroring how the paper's Model-MPTrj and Model-Alexandria transfer to
-/// each other far better than the organic models do to either.
-fn profile(dataset: DatasetId) -> (u64, f64, f64, f64, f64, f64) {
-    // (seed_tag, shift_sigma, scale_jitter, force_scale_jitter, e_noise, f_noise)
-    match dataset {
-        DatasetId::Ani1x => (11, 0.90, 0.02, 0.01, 0.002, 0.004),
-        DatasetId::Qm7x => (23, 1.40, 0.05, 0.02, 0.002, 0.004),
-        DatasetId::Transition1x => (37, 0.70, 0.03, 0.015, 0.003, 0.006),
-        // MPTrj / Alexandria: deliberately the *same* seed tag with small
-        // sigma, so inorganic labels nearly agree (see doc comment).
-        DatasetId::MpTrj => (53, 0.25, 0.01, 0.005, 0.002, 0.003),
-        DatasetId::Alexandria => (53, 0.25, 0.01, 0.005, 0.002, 0.003),
-    }
-}
-
 impl FidelityModel {
-    /// Deterministically build the fidelity model for a dataset.
+    /// Deterministically build the fidelity model for a registered task.
     pub fn for_dataset(dataset: DatasetId) -> FidelityModel {
-        let (tag, shift_sigma, scale_j, fscale_j, e_noise, f_noise) = profile(dataset);
-        let mut rng = Rng::new(fidelity_seed(tag));
+        FidelityModel::from_profile(dataset, &dataset.spec().fidelity)
+    }
+
+    /// Deterministically expand a [`FidelityProfile`] into per-element
+    /// shifts and scales. The RNG stream depends only on the seed tag, so
+    /// two tasks sharing a tag (MPTrj/Alexandria) produce the same base
+    /// shifts, differing only by `shift_offset`.
+    pub fn from_profile(dataset: DatasetId, p: &FidelityProfile) -> FidelityModel {
+        let mut rng = Rng::new(fidelity_seed(p.seed_tag));
         let mut ref_shift = vec![0.0; MAX_Z + 1];
         for z in 1..=MAX_Z {
-            ref_shift[z] = rng.normal_scaled(0.0, shift_sigma);
+            ref_shift[z] = rng.normal_scaled(0.0, p.shift_sigma);
         }
-        // Alexandria differs from MPTrj by a small constant offset on top of
-        // the shared shifts (same functional family, different code/settings).
-        if dataset == DatasetId::Alexandria {
+        if p.shift_offset != 0.0 {
             for z in 1..=MAX_Z {
-                ref_shift[z] += 0.05;
+                ref_shift[z] += p.shift_offset;
             }
         }
-        let energy_scale = 1.0 + rng.normal_scaled(0.0, scale_j);
-        let force_scale = 1.0 + rng.normal_scaled(0.0, fscale_j);
+        let energy_scale = 1.0 + rng.normal_scaled(0.0, p.scale_jitter);
+        let force_scale = 1.0 + rng.normal_scaled(0.0, p.force_scale_jitter);
         FidelityModel {
             dataset,
             ref_shift,
             energy_scale,
             force_scale,
-            energy_noise: e_noise,
-            force_noise: f_noise,
+            energy_noise: p.energy_noise,
+            force_noise: p.force_noise,
         }
     }
 
@@ -184,5 +175,29 @@ mod tests {
         let mut rng = Rng::new(2);
         let (_, f) = m.apply(&species, 0.0, &forces, &mut rng);
         assert!((f[0][0] - m.force_scale).abs() < 0.05);
+    }
+
+    #[test]
+    fn custom_profile_expands_deterministically() {
+        let p = FidelityProfile {
+            seed_tag: 77,
+            shift_sigma: 0.4,
+            scale_jitter: 0.02,
+            force_scale_jitter: 0.01,
+            energy_noise: 0.001,
+            force_noise: 0.002,
+            shift_offset: 0.1,
+        };
+        let a = FidelityModel::from_profile(DatasetId::Ani1x, &p);
+        let b = FidelityModel::from_profile(DatasetId::Ani1x, &p);
+        assert_eq!(a.ref_shift, b.ref_shift);
+        // Offset shifts every element by the same constant relative to the
+        // zero-offset expansion of the same tag.
+        let mut p0 = p.clone();
+        p0.shift_offset = 0.0;
+        let base = FidelityModel::from_profile(DatasetId::Ani1x, &p0);
+        for z in 1..=crate::elements::MAX_Z {
+            assert!((a.ref_shift[z] - base.ref_shift[z] - 0.1).abs() < 1e-12);
+        }
     }
 }

@@ -16,6 +16,15 @@
 //!
 //! Everything is little-endian. The trailing index makes the writer purely
 //! append-only (streamable) while readers can mmap-style seek per sample.
+//!
+//! The one-byte `dataset` field is a *task registry index*: the five paper
+//! presets (0..=4) are stable, but custom tasks are numbered in
+//! registration order, so a reader process must register the same custom
+//! tasks in the same order the writer did — otherwise samples would be
+//! attributed to whichever task occupies that index (the reader can only
+//! reject indices with no registered task at all). The v1 record format
+//! stores no task names; treat cross-process GPack files with custom tasks
+//! as valid only alongside their registration recipe.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
@@ -27,20 +36,49 @@ const MAGIC: &[u8; 4] = b"GPAK";
 const MAGIC_END: &[u8; 4] = b"KAPG";
 const VERSION: u32 = 1;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PackError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("not a GPack file (bad magic)")]
+    Io(std::io::Error),
     BadMagic,
-    #[error("unsupported version {0}")]
     BadVersion(u32),
-    #[error("index checksum mismatch")]
     BadChecksum,
-    #[error("corrupt record at offset {0}")]
     Corrupt(u64),
-    #[error("sample index {0} out of range ({1} samples)")]
     OutOfRange(usize, usize),
+    /// Task registry index does not fit the v1 one-byte record field.
+    TaskIndexOverflow(usize),
+}
+
+impl std::fmt::Display for PackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PackError::Io(e) => write!(f, "io: {e}"),
+            PackError::BadMagic => write!(f, "not a GPack file (bad magic)"),
+            PackError::BadVersion(v) => write!(f, "unsupported version {v}"),
+            PackError::BadChecksum => write!(f, "index checksum mismatch"),
+            PackError::Corrupt(off) => write!(f, "corrupt record at offset {off}"),
+            PackError::OutOfRange(i, n) => {
+                write!(f, "sample index {i} out of range ({n} samples)")
+            }
+            PackError::TaskIndexOverflow(i) => {
+                write!(f, "task index {i} exceeds the GPack v1 one-byte limit (255)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PackError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PackError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for PackError {
+    fn from(e: std::io::Error) -> PackError {
+        PackError::Io(e)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -62,6 +100,10 @@ impl GPackWriter {
     }
 
     pub fn write(&mut self, s: &AtomicStructure) -> Result<(), PackError> {
+        // The v1 record format stores the task handle as one byte.
+        if s.dataset.index() > u8::MAX as usize {
+            return Err(PackError::TaskIndexOverflow(s.dataset.index()));
+        }
         self.offsets.push(self.pos);
         let mut buf = Vec::with_capacity(16 + s.natoms() * 49);
         buf.extend_from_slice(&(s.natoms() as u32).to_le_bytes());
@@ -98,7 +140,7 @@ impl GPackWriter {
         for off in &self.offsets {
             index.extend_from_slice(&off.to_le_bytes());
         }
-        let crc = crc32fast::hash(&index);
+        let crc = crate::util::crc32::hash(&index);
         self.out.write_all(&index)?;
         self.out.write_all(&(self.offsets.len() as u64).to_le_bytes())?;
         self.out.write_all(&index_offset.to_le_bytes())?;
@@ -158,7 +200,7 @@ impl GPackReader {
         file.seek(SeekFrom::Start(index_offset))?;
         let mut index = vec![0u8; count * 8];
         file.read_exact(&mut index)?;
-        if crc32fast::hash(&index) != crc_stored {
+        if crate::util::crc32::hash(&index) != crc_stored {
             return Err(PackError::BadChecksum);
         }
         let offsets = index
@@ -190,7 +232,9 @@ impl GPackReader {
             return Err(PackError::Corrupt(off));
         }
         let dataset_idx = head[4] as usize;
-        if dataset_idx >= crate::data::structures::ALL_DATASETS.len() {
+        // Valid iff a task is registered at that index (readers must
+        // register the same custom tasks the writer used).
+        if dataset_idx >= crate::tasks::TaskRegistry::global().len() {
             return Err(PackError::Corrupt(off));
         }
 

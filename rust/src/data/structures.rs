@@ -1,69 +1,13 @@
-//! Core atomistic data types: a structure (one data sample) and the identity
-//! of the five source datasets it may come from.
+//! Core atomistic data type: a structure (one data sample).
+//!
+//! The identity of the source dataset used to live here as a closed
+//! five-variant enum; it is now a lightweight handle into the runtime
+//! [`crate::tasks::TaskRegistry`] (re-exported below for compatibility), so
+//! the set of tasks is data, not code.
 
 use crate::elements;
 
-/// The five open-source datasets aggregated in the paper (Section 4.1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub enum DatasetId {
-    Ani1x,
-    Qm7x,
-    Transition1x,
-    MpTrj,
-    Alexandria,
-}
-
-pub const ALL_DATASETS: [DatasetId; 5] = [
-    DatasetId::Ani1x,
-    DatasetId::Qm7x,
-    DatasetId::Transition1x,
-    DatasetId::MpTrj,
-    DatasetId::Alexandria,
-];
-
-impl DatasetId {
-    pub fn name(&self) -> &'static str {
-        match self {
-            DatasetId::Ani1x => "ANI1x",
-            DatasetId::Qm7x => "QM7-X",
-            DatasetId::Transition1x => "Transition1x",
-            DatasetId::MpTrj => "MPTrj",
-            DatasetId::Alexandria => "Alexandria",
-        }
-    }
-
-    pub fn index(&self) -> usize {
-        ALL_DATASETS.iter().position(|d| d == self).unwrap()
-    }
-
-    pub fn from_index(i: usize) -> DatasetId {
-        ALL_DATASETS[i]
-    }
-
-    pub fn from_name(name: &str) -> Option<DatasetId> {
-        let lower = name.to_ascii_lowercase();
-        ALL_DATASETS
-            .iter()
-            .find(|d| d.name().to_ascii_lowercase().replace('-', "") == lower.replace('-', ""))
-            .copied()
-    }
-
-    /// Whether the dataset contains inorganic (periodic crystal) compounds.
-    pub fn is_inorganic(&self) -> bool {
-        matches!(self, DatasetId::MpTrj | DatasetId::Alexandria)
-    }
-
-    /// Element palette of the dataset (paper Section 4.1).
-    pub fn palette(&self) -> Vec<usize> {
-        match self {
-            DatasetId::Ani1x => elements::ani1x_palette(),
-            DatasetId::Qm7x => elements::qm7x_palette(),
-            DatasetId::Transition1x => elements::transition1x_palette(),
-            DatasetId::MpTrj => elements::mptrj_palette(),
-            DatasetId::Alexandria => elements::alexandria_palette(),
-        }
-    }
-}
+pub use crate::tasks::{DatasetId, ALL_DATASETS};
 
 /// One atomistic structure: the unit data sample for GFM pre-training.
 ///
@@ -81,7 +25,7 @@ pub struct AtomicStructure {
     pub energy: f64,
     /// Labeled per-atom forces.
     pub forces: Vec<[f64; 3]>,
-    /// Source dataset.
+    /// Source task handle.
     pub dataset: DatasetId,
 }
 
@@ -171,17 +115,9 @@ mod tests {
     fn dataset_ids_roundtrip() {
         for d in ALL_DATASETS {
             assert_eq!(DatasetId::from_index(d.index()), d);
-            assert_eq!(DatasetId::from_name(d.name()), Some(d));
+            assert_eq!(DatasetId::from_name(&d.name()), Some(d));
         }
         assert_eq!(DatasetId::from_name("qm7x"), Some(DatasetId::Qm7x));
         assert!(DatasetId::from_name("nope").is_none());
-    }
-
-    #[test]
-    fn inorganic_flags_match_paper() {
-        assert!(!DatasetId::Ani1x.is_inorganic());
-        assert!(!DatasetId::Transition1x.is_inorganic());
-        assert!(DatasetId::MpTrj.is_inorganic());
-        assert!(DatasetId::Alexandria.is_inorganic());
     }
 }

@@ -15,8 +15,63 @@
 //!   passing and branch-trunk hot spots, lowered inside the same HLO.
 //!
 //! Python never runs on the training path: the coordinator loads
-//! `artifacts/*.hlo.txt` through the PJRT CPU client (`xla` crate) and is
+//! `artifacts/*.hlo.txt` through the PJRT CPU client (`pjrt` feature) and is
 //! self-contained afterwards.
+//!
+//! ## The Session API
+//!
+//! The full lifecycle — load artifacts, generate multi-source data, train
+//! with multi-task parallelism, evaluate, predict — is one facade:
+//!
+//! ```no_run
+//! use hydra_mtp::{Session, TrainMode};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut session = Session::builder()
+//!     .artifacts("artifacts")
+//!     .mode(TrainMode::MtlPar)
+//!     .replicas(2)
+//!     .epochs(3)
+//!     .build()?;
+//! let outcome = session.train()?;                       // generates data lazily
+//! let scores = session.evaluate(&outcome.model)?;       // per-task test MAE
+//! let mut predictor = session.predictor(&outcome.model);
+//! let preds = predictor.predict(session.test_samples(5)?.as_slice())?;
+//! # let _ = (scores, preds); Ok(())
+//! # }
+//! ```
+//!
+//! ## The task registry
+//!
+//! The set of pre-training tasks is **data, not code**: [`tasks::TaskSpec`]
+//! bundles a dataset's identity, element palette, fidelity transform,
+//! generator family and head configuration; the paper's five datasets are
+//! presets in the process-global [`tasks::TaskRegistry`], and arbitrary
+//! additional tasks register at runtime:
+//!
+//! ```
+//! use hydra_mtp::tasks::*;
+//!
+//! let sixth = TaskRegistry::global().register(TaskSpec::new(
+//!     "MySixthSource",
+//!     vec![1, 6, 7, 8, 16],
+//!     GeneratorProfile {
+//!         kind: StructureKind::Molecule { min_atoms: 4, atoms_cap: 14 },
+//!         relax_steps: 10,
+//!         relax_step_size: 0.05,
+//!         perturb_factor: 1.0,
+//!     },
+//!     FidelityProfile {
+//!         seed_tag: 101, shift_sigma: 0.8, scale_jitter: 0.02,
+//!         force_scale_jitter: 0.01, energy_noise: 0.002, force_noise: 0.004,
+//!         shift_offset: 0.0,
+//!     },
+//! )).unwrap();
+//! assert_eq!(sixth.name(), "MySixthSource");
+//! ```
+//!
+//! Training `mtl-par` over six tasks simply builds a 6 x M mesh — head
+//! count follows the task list.
 
 pub mod comm;
 pub mod config;
@@ -26,8 +81,14 @@ pub mod elements;
 pub mod model;
 pub mod runtime;
 pub mod scalesim;
+pub mod session;
+pub mod tasks;
 pub mod tensor;
 pub mod util;
+
+pub use config::{RunConfig, TrainMode};
+pub use session::{Prediction, Predictor, Session, SessionBuilder};
+pub use tasks::{DatasetId, TaskRegistry, TaskSpec, ALL_DATASETS};
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -2,23 +2,28 @@
 //!
 //! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §5):
 //!
-//!   datagen   generate the five synthetic datasets into GPack files
-//!   train     train one model (any of the seven modes) and log metrics
+//!   datagen   generate the registered synthetic datasets into GPack files
+//!   train     train one model (any of the seven modes) through `Session`
 //!   table1    regenerate Table 1 (energy MAE matrix, trains 7 models)
 //!   table2    regenerate Table 2 (force MAE matrix, same runs)
 //!   fig1      element-frequency heatmap over the aggregated datasets
 //!   fig4      weak/strong scaling sweeps on Frontier/Perlmutter/Aurora
+//!   tasks     print the task registry (the five presets + custom tasks)
 //!   info      print manifest / architecture / memory-regime summary
+//!
+//! Unknown/misspelled `--flags` are rejected with the valid flag list for
+//! the subcommand (a typo like `--replica 4` used to silently win defaults).
 
 use std::sync::Arc;
 
 use hydra_mtp::config::{RunConfig, TrainMode};
-use hydra_mtp::coordinator::{experiments, DataBundle, Trainer};
+use hydra_mtp::coordinator::experiments;
 use hydra_mtp::data::structures::ALL_DATASETS;
 use hydra_mtp::data::{generators, pack};
 use hydra_mtp::model::arch;
-use hydra_mtp::runtime::Engine;
 use hydra_mtp::scalesim;
+use hydra_mtp::session::Session;
+use hydra_mtp::tasks::TaskRegistry;
 use hydra_mtp::util::cli::Args;
 
 fn main() {
@@ -31,6 +36,7 @@ fn main() {
         "table2" => cmd_tables(&args, false),
         "fig1" => cmd_fig1(&args),
         "fig4" => cmd_fig4(&args),
+        "tasks" => cmd_tasks(&args),
         "info" => cmd_info(&args),
         "help" | "--help" => {
             print_help();
@@ -57,15 +63,22 @@ USAGE: hydra-mtp <command> [--flags]
 COMMANDS
   datagen  --out DIR [--per-dataset N] [--seed S] [--max-atoms A]
   train    --mode MODE [--config FILE] [--epochs N] [--replicas M]
-           [--per-dataset N] [--artifacts DIR] [--csv FILE]
+           [--per-dataset N] [--seed S] [--lr LR] [--artifacts DIR] [--csv FILE]
            MODE: ANI1x|QM7-X|Transition1x|MPTrj|Alexandria|baseline-all|mtl-base|mtl-par
   table1   [--epochs N] [--per-dataset N] [--replicas M] [--csv FILE]
   table2   (same flags; same training runs, force metric)
-  fig1     [--per-dataset N] [--seed S]
+  fig1     [--per-dataset N] [--seed S] [--max-atoms A]
   fig4     [--machine all|frontier|perlmutter|aurora] [--csv FILE] [--seed S]
-  info     [--artifacts DIR]"
+  tasks    (print the task registry: palettes, generator families, fidelity)
+  info     [--artifacts DIR]
+
+Misspelled flags are rejected with the valid list for the subcommand."
     );
 }
+
+/// Flags shared by the config-driven subcommands.
+const CONFIG_FLAGS: [&str; 7] =
+    ["config", "artifacts", "epochs", "replicas", "per-dataset", "seed", "lr"];
 
 fn base_config(args: &Args) -> anyhow::Result<RunConfig> {
     let mut cfg = match args.opt_str("config") {
@@ -93,12 +106,15 @@ fn base_config(args: &Args) -> anyhow::Result<RunConfig> {
 }
 
 fn cmd_datagen(args: &Args) -> anyhow::Result<()> {
+    args.ensure_known("datagen", &["out", "per-dataset", "seed", "max-atoms"])?;
     let out = args.str("out", "data");
     let per = args.usize("per-dataset", 1000);
     let seed = args.u64("seed", 2025);
     let max_atoms = args.usize("max-atoms", 24);
     std::fs::create_dir_all(&out)?;
     let cfg = generators::GeneratorConfig { max_atoms, ..Default::default() };
+    // Every registered task (the five presets plus runtime registrations),
+    // one GPack file each.
     for (d, samples) in generators::generate_all(seed, per, &cfg) {
         let path = format!("{out}/{}.gpack", d.name().to_lowercase().replace('-', ""));
         let n = pack::write_all(&path, &samples)?;
@@ -115,15 +131,20 @@ fn cmd_datagen(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let mut allowed = vec!["mode", "csv"];
+    allowed.extend(CONFIG_FLAGS);
+    args.ensure_known("train", &allowed)?;
+
     let mut cfg = base_config(args)?;
     cfg.mode = TrainMode::parse(&args.str("mode", "mtl-par"))?;
     println!("loading artifacts from {} ...", cfg.artifacts_dir);
-    let engine = Arc::new(Engine::load(&cfg.artifacts_dir)?);
-    println!("platform: {}; generating data ...", engine.platform());
-    let data = DataBundle::generate(&cfg.data, &datasets_for(&cfg.mode));
-    let trainer = Trainer::new(Arc::clone(&engine), cfg.clone());
+    let mut session = Session::builder().config(cfg).build()?;
+    println!("platform: {}; generating data ...", session.engine().platform());
+    // Generate outside the timer so "trained in" stays comparable with
+    // seed-era logs (training only, no data generation).
+    session.generate_data();
     let t0 = std::time::Instant::now();
-    let outcome = trainer.train(&data)?;
+    let outcome = session.train()?;
     println!("\n=== {} ===", outcome.model.name);
     for e in &outcome.log.epochs {
         println!("{}", e.summary());
@@ -141,23 +162,29 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn datasets_for(mode: &TrainMode) -> Vec<hydra_mtp::data::structures::DatasetId> {
-    match mode {
-        TrainMode::Single(d) => vec![*d],
-        _ => ALL_DATASETS.to_vec(),
-    }
-}
-
 fn cmd_tables(args: &Args, energy: bool) -> anyhow::Result<()> {
+    let mut allowed = vec!["csv"];
+    allowed.extend(CONFIG_FLAGS);
+    args.ensure_known(if energy { "table1" } else { "table2" }, &allowed)?;
+
     let cfg = base_config(args)?;
-    let engine = Arc::new(Engine::load(&cfg.artifacts_dir)?);
-    let data = DataBundle::generate(&cfg.data, &ALL_DATASETS);
+    // One session supplies the engine + shared data bundle; run_tables
+    // trains each of the seven modes through its own Session on top. The
+    // bundle must always cover all five datasets regardless of cfg.mode
+    // (a config file saved from a single-dataset run would otherwise
+    // shrink it), so pin the task list explicitly.
+    let mut session = Session::builder()
+        .config(cfg.clone())
+        .tasks(&ALL_DATASETS)
+        .build()?;
+    session.generate_data();
     println!(
         "training the 7 models of Section 5.1 ({} samples/dataset, {} epochs max) ...",
         cfg.data.per_dataset, cfg.train.epochs
     );
-    let matrix =
-        experiments::run_tables(&engine, &cfg, &data, |line| println!("  {line}"))?;
+    let engine = Arc::clone(session.engine());
+    let data = session.data().expect("generated above");
+    let matrix = experiments::run_tables(&engine, &cfg, data, |line| println!("  {line}"))?;
     println!("\n{}", matrix.render(energy));
     if let Some(path) = args.opt_str("csv") {
         std::fs::write(path, matrix.to_csv(energy))?;
@@ -167,6 +194,7 @@ fn cmd_tables(args: &Args, energy: bool) -> anyhow::Result<()> {
 }
 
 fn cmd_fig1(args: &Args) -> anyhow::Result<()> {
+    args.ensure_known("fig1", &["per-dataset", "seed", "max-atoms"])?;
     let per = args.usize("per-dataset", 500);
     let seed = args.u64("seed", 2025);
     let counts = experiments::fig1_histogram(seed, per, args.usize("max-atoms", 24));
@@ -175,6 +203,7 @@ fn cmd_fig1(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
+    args.ensure_known("fig4", &["machine", "csv", "seed"])?;
     let seed = args.u64("seed", 2025);
     let w = scalesim::Workload::paper(5);
     let which = args.str("machine", "all");
@@ -203,7 +232,40 @@ fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_tasks(args: &Args) -> anyhow::Result<()> {
+    args.ensure_known("tasks", &[])?;
+    let reg = TaskRegistry::global();
+    println!(
+        "{} registered tasks ({} built-in presets):\n",
+        reg.len(),
+        ALL_DATASETS.len()
+    );
+    println!(
+        "{:<3} {:<16} {:<10} {:>7} {:>6} {:>8} {:>7}",
+        "#", "name", "family", "elems", "relax", "perturb", "tag"
+    );
+    for d in reg.all() {
+        let s = reg.spec(d);
+        let family = if d.is_inorganic() { "crystal" } else { "molecule" };
+        println!(
+            "{:<3} {:<16} {:<10} {:>7} {:>6} {:>8.2} {:>7}",
+            d.index(),
+            s.name,
+            family,
+            s.palette.len(),
+            s.generator.relax_steps,
+            s.generator.perturb_factor,
+            s.fidelity.seed_tag
+        );
+    }
+    println!(
+        "\nRegister more tasks at runtime via TaskRegistry::global().register(TaskSpec::new(..))."
+    );
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    args.ensure_known("info", &["artifacts"])?;
     let dir = args.str("artifacts", "artifacts");
     let manifest = hydra_mtp::runtime::Manifest::load(&dir)?;
     manifest.validate()?;

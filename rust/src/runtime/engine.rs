@@ -11,6 +11,8 @@
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
+use crate::runtime::pjrt as xla;
+
 use crate::data::batch::GraphBatch;
 use crate::model::params::ParamSet;
 use crate::runtime::manifest::{ArtifactMeta, Manifest};

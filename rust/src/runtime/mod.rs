@@ -4,6 +4,7 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod pjrt;
 
 pub use engine::{Engine, EvalOut, StepOut};
 pub use manifest::{ArtifactMeta, Manifest, ManifestConfig};

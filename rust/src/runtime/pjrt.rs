@@ -1,0 +1,224 @@
+//! PJRT backend selection: the real `xla` crate when built with
+//! `--features pjrt`, otherwise an offline stub with the same API surface.
+//!
+//! The stub keeps the whole crate (data substrate, task registry, trainer
+//! plumbing, comm, scalesim, CLI) compiling and testable on machines where
+//! the XLA/PJRT native libraries are unavailable: `Literal` marshalling is
+//! fully functional, while client construction fails with a clear message —
+//! which `Engine::load` surfaces and artifact-dependent tests/examples
+//! treat as "skip gracefully".
+
+// With `--features pjrt`, re-export the real crate (the `xla` dependency
+// must be uncommented in Cargo.toml — see the note there).
+#[cfg(feature = "pjrt")]
+pub use xla::*;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::fmt;
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: hydra_mtp was built without the \
+         `pjrt` feature (the `xla` crate). Uncomment the `xla` dependency in \
+         Cargo.toml, rebuild with `--features pjrt`, and run `make artifacts` \
+         to execute AOT artifacts";
+
+    /// Error type mirroring `xla::Error` closely enough for `?` into anyhow.
+    #[derive(Debug, Clone)]
+    pub struct XlaError(pub String);
+
+    impl fmt::Display for XlaError {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "{}", self.0)
+        }
+    }
+
+    impl std::error::Error for XlaError {}
+
+    pub type Result<T> = std::result::Result<T, XlaError>;
+
+    fn unavailable<T>() -> Result<T> {
+        Err(XlaError(UNAVAILABLE.to_string()))
+    }
+
+    /// Element dtypes (subset of the real crate's enum; the extra variants
+    /// keep downstream wildcard match arms meaningful).
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum ElementType {
+        Pred,
+        S32,
+        S64,
+        F32,
+        F64,
+    }
+
+    /// Host literal: dims + typed buffer. Fully functional in the stub so
+    /// marshalling code paths stay exercised by unit tests.
+    #[derive(Debug, Clone)]
+    pub struct Literal {
+        dims: Vec<i64>,
+        data: LitData,
+    }
+
+    #[derive(Debug, Clone)]
+    enum LitData {
+        F32(Vec<f32>),
+        I32(Vec<i32>),
+    }
+
+    /// Types storable in a [`Literal`].
+    pub trait NativeType: Copy {
+        fn wrap(v: Vec<Self>) -> LitDataOpaque;
+        fn unwrap(l: &Literal) -> Result<Vec<Self>>;
+    }
+
+    /// Opaque constructor payload (keeps `LitData` private).
+    pub struct LitDataOpaque(LitData);
+
+    impl NativeType for f32 {
+        fn wrap(v: Vec<f32>) -> LitDataOpaque {
+            LitDataOpaque(LitData::F32(v))
+        }
+        fn unwrap(l: &Literal) -> Result<Vec<f32>> {
+            match &l.data {
+                LitData::F32(v) => Ok(v.clone()),
+                LitData::I32(_) => Err(XlaError("literal is i32, expected f32".into())),
+            }
+        }
+    }
+
+    impl NativeType for i32 {
+        fn wrap(v: Vec<i32>) -> LitDataOpaque {
+            LitDataOpaque(LitData::I32(v))
+        }
+        fn unwrap(l: &Literal) -> Result<Vec<i32>> {
+            match &l.data {
+                LitData::I32(v) => Ok(v.clone()),
+                LitData::F32(_) => Err(XlaError("literal is f32, expected i32".into())),
+            }
+        }
+    }
+
+    /// Shape descriptor of an array literal.
+    pub struct ArrayShape {
+        dims: Vec<i64>,
+        ty: ElementType,
+    }
+
+    impl ArrayShape {
+        pub fn dims(&self) -> &[i64] {
+            &self.dims
+        }
+        pub fn ty(&self) -> ElementType {
+            self.ty
+        }
+    }
+
+    impl Literal {
+        pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+            let LitDataOpaque(data) = T::wrap(v.to_vec());
+            Literal { dims: vec![v.len() as i64], data }
+        }
+
+        pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+            let numel: i64 = dims.iter().product();
+            let len = match &self.data {
+                LitData::F32(v) => v.len() as i64,
+                LitData::I32(v) => v.len() as i64,
+            };
+            if numel != len {
+                return Err(XlaError(format!("cannot reshape {len} elements to {dims:?}")));
+            }
+            Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+        }
+
+        pub fn array_shape(&self) -> Result<ArrayShape> {
+            let ty = match &self.data {
+                LitData::F32(_) => ElementType::F32,
+                LitData::I32(_) => ElementType::S32,
+            };
+            Ok(ArrayShape { dims: self.dims.clone(), ty })
+        }
+
+        pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+            T::unwrap(self)
+        }
+
+        pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+            unavailable()
+        }
+    }
+
+    /// Stub of the PJRT CPU client: construction fails with a clear message.
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<PjRtClient> {
+            unavailable()
+        }
+
+        pub fn platform_name(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+            unavailable()
+        }
+    }
+
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: impl AsRef<std::path::Path>) -> Result<HloModuleProto> {
+            unavailable()
+        }
+    }
+
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+
+    pub struct PjRtLoadedExecutable;
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+            unavailable()
+        }
+    }
+
+    pub struct PjRtBuffer;
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal> {
+            unavailable()
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn literal_roundtrip_and_reshape() {
+            let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+            let shape = l.array_shape().unwrap();
+            assert_eq!(shape.dims(), &[2, 2]);
+            assert_eq!(shape.ty(), ElementType::F32);
+            assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+            assert!(l.to_vec::<i32>().is_err());
+            assert!(Literal::vec1(&[1i32]).reshape(&[7]).is_err());
+        }
+
+        #[test]
+        fn client_reports_unavailable() {
+            let err = PjRtClient::cpu().err().unwrap();
+            assert!(err.to_string().contains("pjrt"), "{err}");
+        }
+    }
+}

@@ -1,0 +1,435 @@
+//! The `Session` facade: one entry point for the full lifecycle.
+//!
+//! The seed's public API forced callers through a six-step manual dance
+//! (`Engine::load` -> `RunConfig` -> `DataBundle::generate` ->
+//! `Trainer::new(..).train(..)` -> `evaluate_model` -> hand-rolled
+//! `BatchBuilder` / `full_params` / `engine.forward` for inference). A
+//! [`Session`] owns `Engine + TaskRegistry + RunConfig` and exposes that
+//! lifecycle as `generate_data()` / `train()` / `evaluate()` /
+//! `predictor()`; [`Predictor`] is the batched-inference entry point that
+//! routes each structure to the correct MTL head, packs/pads into the
+//! compiled batch dims, and returns typed [`Prediction`] values — the crate's
+//! serving story.
+//!
+//! Every method is deterministic given the config: `Session` reproduces the
+//! manual call-chain bit-for-bit (see `rust/tests/integration_session.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::config::{RunConfig, TrainMode};
+use crate::coordinator::evaluate::evaluate_model;
+use crate::coordinator::trainer::{DataBundle, TrainOutcome, TrainedModel, Trainer};
+use crate::data::batch::{BatchDims, GraphBatch};
+use crate::data::graph::radius_graph;
+use crate::data::structures::{AtomicStructure, DatasetId};
+use crate::model::params::ParamSet;
+use crate::runtime::Engine;
+use crate::tasks::TaskRegistry;
+
+// ---------------------------------------------------------------------------
+// builder
+// ---------------------------------------------------------------------------
+
+/// Builder for [`Session`]. Field setters mirror the `RunConfig` knobs the
+/// CLI exposes; `config()` replaces the whole config for full control.
+#[derive(Default)]
+pub struct SessionBuilder {
+    config: RunConfig,
+    engine: Option<Arc<Engine>>,
+    tasks: Option<Vec<DatasetId>>,
+}
+
+impl SessionBuilder {
+    /// Directory holding the AOT artifacts (`manifest.json`, `*.hlo.txt`).
+    pub fn artifacts(mut self, dir: impl Into<String>) -> Self {
+        self.config.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Training mode (one of the paper's seven models / modes).
+    pub fn mode(mut self, mode: TrainMode) -> Self {
+        self.config.mode = mode;
+        self
+    }
+
+    /// Replicas per head sub-group (M in the paper's Figure 3).
+    pub fn replicas(mut self, replicas: usize) -> Self {
+        self.config.parallel.replicas = replicas;
+        self
+    }
+
+    pub fn epochs(mut self, epochs: usize) -> Self {
+        self.config.train.epochs = epochs;
+        self
+    }
+
+    pub fn patience(mut self, patience: usize) -> Self {
+        self.config.train.patience = patience;
+        self
+    }
+
+    pub fn lr(mut self, lr: f64) -> Self {
+        self.config.train.lr = lr;
+        self
+    }
+
+    /// Samples generated per task.
+    pub fn per_dataset(mut self, n: usize) -> Self {
+        self.config.data.per_dataset = n;
+        self
+    }
+
+    pub fn max_atoms(mut self, n: usize) -> Self {
+        self.config.data.max_atoms = n;
+        self
+    }
+
+    /// Data-generation seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.config.data.seed = seed;
+        self
+    }
+
+    /// Replace the entire run config (setters applied afterwards still win).
+    pub fn config(mut self, config: RunConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Reuse an already-loaded engine instead of loading
+    /// `config.artifacts_dir` (artifact compilation is the slow part; tests
+    /// and multi-run experiments share one engine this way).
+    pub fn engine(mut self, engine: Arc<Engine>) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Explicit task list. Defaults to the mode's dataset for
+    /// `TrainMode::Single` and the registry's five built-ins otherwise;
+    /// pass more handles (e.g. a registered sixth task) to widen the run —
+    /// under `mtl-par` the mesh grows one head sub-group per task.
+    pub fn tasks(mut self, tasks: &[DatasetId]) -> Self {
+        self.tasks = Some(tasks.to_vec());
+        self
+    }
+
+    /// Validate the config, load (or adopt) the engine and resolve the task
+    /// list.
+    pub fn build(self) -> anyhow::Result<Session> {
+        let SessionBuilder { config, engine, tasks } = self;
+        config.validate()?;
+        let registry = TaskRegistry::global();
+        let tasks = match tasks {
+            Some(t) => {
+                anyhow::ensure!(!t.is_empty(), "session task list must be non-empty");
+                for &d in &t {
+                    anyhow::ensure!(
+                        registry.try_spec(d).is_some(),
+                        "task index {} is not registered",
+                        d.index()
+                    );
+                }
+                if let TrainMode::Single(d) = config.mode {
+                    anyhow::ensure!(
+                        t.contains(&d),
+                        "mode Model-{} but task list omits it",
+                        d.name()
+                    );
+                }
+                t
+            }
+            None => match config.mode {
+                TrainMode::Single(d) => vec![d],
+                _ => registry.builtin().to_vec(),
+            },
+        };
+        let engine = match engine {
+            Some(e) => e,
+            None => Arc::new(Engine::load(&config.artifacts_dir)?),
+        };
+        Ok(Session { engine, registry, config, tasks, data: None })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// session
+// ---------------------------------------------------------------------------
+
+/// Owns `Engine + TaskRegistry + RunConfig` and exposes the full
+/// generate / train / evaluate / predict lifecycle. See the crate docs and
+/// `examples/quickstart.rs`.
+pub struct Session {
+    engine: Arc<Engine>,
+    registry: TaskRegistry,
+    config: RunConfig,
+    tasks: Vec<DatasetId>,
+    data: Option<DataBundle>,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    pub fn config(&self) -> &RunConfig {
+        &self.config
+    }
+
+    pub fn registry(&self) -> &TaskRegistry {
+        &self.registry
+    }
+
+    /// Tasks this session generates/trains over, in head order.
+    pub fn tasks(&self) -> &[DatasetId] {
+        &self.tasks
+    }
+
+    /// Generate (once) and return the session's data bundle. Deterministic
+    /// in `config.data` and the task list.
+    pub fn generate_data(&mut self) -> &DataBundle {
+        if self.data.is_none() {
+            self.data = Some(DataBundle::generate(&self.config.data, &self.tasks));
+        }
+        self.data.as_ref().unwrap()
+    }
+
+    /// The bundle, if already generated.
+    pub fn data(&self) -> Option<&DataBundle> {
+        self.data.as_ref()
+    }
+
+    /// Train the configured mode on the session's data (generated lazily).
+    pub fn train(&mut self) -> anyhow::Result<TrainOutcome> {
+        self.generate_data();
+        let data = self.data.as_ref().unwrap();
+        Trainer::new(Arc::clone(&self.engine), self.config.clone()).train(data)
+    }
+
+    /// Train on an external bundle (multi-run experiments share one bundle
+    /// across modes this way; `experiments::run_tables` uses it).
+    pub fn train_on(&self, data: &DataBundle) -> anyhow::Result<TrainOutcome> {
+        Trainer::new(Arc::clone(&self.engine), self.config.clone()).train(data)
+    }
+
+    /// Per-task (energy MAE, force MAE) on the held-out test split.
+    pub fn evaluate(
+        &mut self,
+        model: &TrainedModel,
+    ) -> anyhow::Result<BTreeMap<DatasetId, (f64, f64)>> {
+        self.generate_data();
+        evaluate_model(&self.engine, model, &self.data.as_ref().unwrap().test)
+    }
+
+    /// Batched-inference entry point over the trained model.
+    pub fn predictor(&self, model: &TrainedModel) -> Predictor {
+        Predictor::new(Arc::clone(&self.engine), model.clone())
+    }
+
+    /// Up to `n` held-out test structures per task, concatenated in head
+    /// order — handy fresh inputs for [`Predictor`].
+    pub fn test_samples(&mut self, n: usize) -> anyhow::Result<Vec<AtomicStructure>> {
+        self.generate_data();
+        let data = self.data.as_ref().unwrap();
+        let mut out = Vec::new();
+        for d in &self.tasks {
+            let split = data
+                .test
+                .get(d)
+                .ok_or_else(|| anyhow::anyhow!("no test split for {}", d.name()))?;
+            out.extend(split.iter().take(n).cloned());
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// predictor
+// ---------------------------------------------------------------------------
+
+/// Typed output of [`Predictor`]: labeled-scale energies and forces for one
+/// structure, produced by the head of the structure's source task.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    /// Task whose head produced the prediction.
+    pub dataset: DatasetId,
+    /// Predicted total energy (energy-per-atom x natoms).
+    pub energy: f64,
+    /// Predicted energy per atom (the model's native target).
+    pub energy_per_atom: f64,
+    /// Predicted per-atom forces.
+    pub forces: Vec<[f64; 3]>,
+}
+
+/// Batched inference over a [`TrainedModel`]: routes each structure to the
+/// correct MTL head, auto-packs/pads groups into the compiled batch dims,
+/// and unpads the outputs back into per-structure [`Prediction`]s. Replaces
+/// the seed's manual `BatchBuilder` + `full_params` + `engine.forward`
+/// plumbing.
+pub struct Predictor {
+    engine: Arc<Engine>,
+    model: TrainedModel,
+    dims: BatchDims,
+    cutoff: f64,
+    /// Assembled full parameter sets, one per head actually used.
+    full_cache: BTreeMap<DatasetId, ParamSet>,
+}
+
+impl Predictor {
+    pub fn new(engine: Arc<Engine>, model: TrainedModel) -> Predictor {
+        let dims = engine.manifest.config.batch_dims();
+        let cutoff = engine.manifest.config.cutoff;
+        Predictor { engine, model, dims, cutoff, full_cache: BTreeMap::new() }
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.model.name
+    }
+
+    /// Predict energies and forces for every structure, each through the
+    /// head of its source task, preserving input order. Structures from the
+    /// same task are packed together into as few padded batches as fit the
+    /// compiled dims.
+    pub fn predict(
+        &mut self,
+        structures: &[AtomicStructure],
+    ) -> anyhow::Result<Vec<Prediction>> {
+        let mut by_task: BTreeMap<DatasetId, Vec<usize>> = BTreeMap::new();
+        for (i, s) in structures.iter().enumerate() {
+            by_task.entry(s.dataset).or_default().push(i);
+        }
+        let mut out: Vec<Option<Prediction>> =
+            structures.iter().map(|_| None).collect();
+        for (d, idxs) in by_task {
+            self.predict_group(d, &idxs, structures, &mut out)?;
+        }
+        Ok(out
+            .into_iter()
+            .map(|p| p.expect("every structure receives a prediction"))
+            .collect())
+    }
+
+    /// Convenience for a single structure.
+    pub fn predict_one(&mut self, s: &AtomicStructure) -> anyhow::Result<Prediction> {
+        let mut v = self.predict(std::slice::from_ref(s))?;
+        Ok(v.remove(0))
+    }
+
+    fn predict_group(
+        &mut self,
+        d: DatasetId,
+        idxs: &[usize],
+        structures: &[AtomicStructure],
+        out: &mut [Option<Prediction>],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.model.try_branch_for(d).is_some(),
+            "model '{}' has no head for task {}",
+            self.model.name,
+            d.name()
+        );
+        let mut batch = GraphBatch::empty(self.dims);
+        let mut slots: Vec<usize> = Vec::new();
+        for &i in idxs {
+            let s = &structures[i];
+            let edges = radius_graph(s, self.cutoff);
+            anyhow::ensure!(
+                s.natoms() <= self.dims.max_nodes && edges.len() <= self.dims.max_edges,
+                "structure {i} ({} atoms / {} edges) exceeds the compiled batch \
+                 budget {:?}",
+                s.natoms(),
+                edges.len(),
+                self.dims
+            );
+            if !batch.fits(s.natoms(), edges.len()) {
+                self.flush(d, &batch, &slots, structures, out)?;
+                batch.clear();
+                slots.clear();
+            }
+            batch
+                .push(s, &edges)
+                .map_err(|e| anyhow::anyhow!("batch pack failed: {e}"))?;
+            slots.push(i);
+        }
+        if !slots.is_empty() {
+            self.flush(d, &batch, &slots, structures, out)?;
+        }
+        Ok(())
+    }
+
+    /// Run one padded batch through the engine and scatter the unpadded
+    /// outputs back to their structures.
+    fn flush(
+        &mut self,
+        d: DatasetId,
+        batch: &GraphBatch,
+        slots: &[usize],
+        structures: &[AtomicStructure],
+        out: &mut [Option<Prediction>],
+    ) -> anyhow::Result<()> {
+        let engine = Arc::clone(&self.engine);
+        let full = match self.full_cache.entry(d) {
+            std::collections::btree_map::Entry::Occupied(o) => o.into_mut(),
+            std::collections::btree_map::Entry::Vacant(v) => {
+                v.insert(self.model.full_params(&engine, d))
+            }
+        };
+        let (energy, forces) = engine.forward(full, batch)?;
+        let ev = energy.as_f32();
+        let fv = forces.as_f32();
+        let mut node_base = 0usize;
+        for (g, &i) in slots.iter().enumerate() {
+            let s = &structures[i];
+            let n = s.natoms();
+            let epa = ev[g] as f64;
+            let mut fs = Vec::with_capacity(n);
+            for k in 0..n {
+                let row = (node_base + k) * 3;
+                fs.push([fv[row] as f64, fv[row + 1] as f64, fv[row + 2] as f64]);
+            }
+            node_base += n;
+            out[i] = Some(Prediction {
+                dataset: d,
+                energy: epa * n as f64,
+                energy_per_atom: epa,
+                forces: fs,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_resolves_default_tasks_per_mode() {
+        // No engine available in unit tests; exercise the task resolution by
+        // checking the validation errors fire before engine loading.
+        let err = Session::builder()
+            .mode(TrainMode::MtlPar)
+            .tasks(&[])
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("non-empty"), "{err}");
+
+        let err = Session::builder()
+            .mode(TrainMode::Single(DatasetId::Qm7x))
+            .tasks(&[DatasetId::Ani1x])
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("omits"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_invalid_config_before_loading_engine() {
+        let mut cfg = crate::config::RunConfig::default();
+        cfg.train.epochs = 0;
+        assert!(Session::builder().config(cfg).build().is_err());
+    }
+}

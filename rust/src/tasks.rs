@@ -1,0 +1,628 @@
+//! Runtime task registry: the paper's five datasets as *data*, not code.
+//!
+//! The seed hard-wired a closed five-variant `DatasetId` enum that every
+//! layer matched on — palette in `elements`, fidelity constants in
+//! `fidelity`, geometry class in `generators`, head-init salt in the
+//! trainer. This module inverts that: a [`TaskSpec`] bundles dataset
+//! identity, element palette, fidelity transform, generator family and head
+//! configuration as runtime values, and [`DatasetId`] becomes a lightweight
+//! handle (an index) into the process-global [`TaskRegistry`].
+//!
+//! The paper's five datasets (Section 4.1) are registered as built-in
+//! presets at indices 0..=4, so all seed behaviour — RNG streams, split
+//! seeds, head-init salts, `BTreeMap` orderings — is bit-for-bit preserved.
+//! Arbitrary additional tasks (e.g. a sixth synthetic dataset) register at
+//! runtime and flow through generation, training (`mtl-par` grows a sixth
+//! head sub-group), evaluation and serving without code changes.
+//!
+//! Registration is process-global and append-only: handles stored inside
+//! `AtomicStructure`s or GPack files stay valid for the process lifetime.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::elements;
+
+// ---------------------------------------------------------------------------
+// handle
+// ---------------------------------------------------------------------------
+
+/// Lightweight handle to a registered task (index into the registry).
+///
+/// Replaces the seed's closed enum; the five paper datasets are the
+/// associated constants below. `Ord` is registration order, which for the
+/// presets equals the old enum-variant order, so `BTreeMap` iteration and
+/// the mesh head assignment are unchanged.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DatasetId(u16);
+
+#[allow(non_upper_case_globals)]
+impl DatasetId {
+    pub const Ani1x: DatasetId = DatasetId(0);
+    pub const Qm7x: DatasetId = DatasetId(1);
+    pub const Transition1x: DatasetId = DatasetId(2);
+    pub const MpTrj: DatasetId = DatasetId(3);
+    pub const Alexandria: DatasetId = DatasetId(4);
+}
+
+/// The five built-in datasets the paper aggregates (Section 4.1), in paper
+/// order. Custom tasks are *not* listed here; use `TaskRegistry::all()`.
+pub const ALL_DATASETS: [DatasetId; 5] = [
+    DatasetId::Ani1x,
+    DatasetId::Qm7x,
+    DatasetId::Transition1x,
+    DatasetId::MpTrj,
+    DatasetId::Alexandria,
+];
+
+impl DatasetId {
+    /// O(1) registry index (the seed's linear `position()` scan is gone).
+    #[inline]
+    pub fn index(&self) -> usize {
+        self.0 as usize
+    }
+
+    /// Handle for a registry index; panics if no task is registered there.
+    pub fn from_index(i: usize) -> DatasetId {
+        let n = TaskRegistry::global().len();
+        assert!(i < n, "task index {i} out of range ({n} registered)");
+        DatasetId(i as u16)
+    }
+
+    /// Case/hyphen-insensitive name lookup across every registered task.
+    pub fn from_name(name: &str) -> Option<DatasetId> {
+        TaskRegistry::global().find(name)
+    }
+
+    /// Display name from the task spec.
+    pub fn name(&self) -> String {
+        match TaskRegistry::global().try_spec(*self) {
+            Some(spec) => spec.name.clone(),
+            None => format!("task#{}", self.0),
+        }
+    }
+
+    /// Full spec of this task.
+    pub fn spec(&self) -> Arc<TaskSpec> {
+        TaskRegistry::global().spec(*self)
+    }
+
+    /// Whether the task generates inorganic (crystalline) structures.
+    pub fn is_inorganic(&self) -> bool {
+        matches!(self.spec().generator.kind, StructureKind::Crystal { .. })
+    }
+
+    /// Element palette of the task (atomic numbers).
+    pub fn palette(&self) -> Vec<usize> {
+        self.spec().palette.clone()
+    }
+
+    /// Salt mixed into the branch-parameter init seed for this task's head.
+    /// Presets resolve to the seed repo's exact constants so checkpoints and
+    /// training trajectories are unchanged.
+    pub fn branch_init_salt(&self) -> u64 {
+        self.spec()
+            .head
+            .init_salt
+            .unwrap_or(0xB4A9 + self.index() as u64 * 7919)
+    }
+}
+
+impl fmt::Debug for DatasetId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "DatasetId({})", self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// spec
+// ---------------------------------------------------------------------------
+
+/// Geometry class a task's generator produces.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StructureKind {
+    /// Organic molecule with `min_atoms..min(config.max_atoms, atoms_cap)`
+    /// atoms (bonded-tree builder).
+    Molecule { min_atoms: usize, atoms_cap: usize },
+    /// QM7-X style: `min_heavy..max_heavy` non-hydrogen atoms, hydrogen
+    /// saturated up to the config atom budget.
+    MoleculeHeavyLimited { min_heavy: usize, max_heavy: usize },
+    /// Crystalline cluster with `min_atoms..config.max_atoms` atoms.
+    Crystal { min_atoms: usize },
+}
+
+/// How a task's structures are generated (geometry + equilibrium character).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GeneratorProfile {
+    pub kind: StructureKind,
+    /// Steepest-descent relaxation iterations before perturbation (0 = none,
+    /// i.e. reaction-pathway data stays off-equilibrium).
+    pub relax_steps: usize,
+    /// Relaxation step size (Angstrom).
+    pub relax_step_size: f64,
+    /// Multiplier on `GeneratorConfig::perturbation` for the final jitter:
+    /// near-equilibrium datasets use < 1, reaction pathways > 1.
+    pub perturb_factor: f64,
+}
+
+/// Constants of a task's label fidelity transform (see `data::fidelity` for
+/// the model: `E_label = scale * E_true + sum_z shift[z] + noise`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FidelityProfile {
+    /// Seed tag for the deterministic per-element shift stream. Two tasks
+    /// sharing a tag model the same theory level (MPTrj/Alexandria).
+    pub seed_tag: u64,
+    /// Std-dev of the per-element reference-energy shifts.
+    pub shift_sigma: f64,
+    /// Jitter of the multiplicative energy scale around 1.
+    pub scale_jitter: f64,
+    /// Jitter of the multiplicative force scale around 1.
+    pub force_scale_jitter: f64,
+    /// Label noise floors (sigma).
+    pub energy_noise: f64,
+    pub force_noise: f64,
+    /// Constant added to every element's shift on top of the seeded stream
+    /// (how Alexandria differs from MPTrj within the same PBE family).
+    pub shift_offset: f64,
+}
+
+/// Head / loss configuration of a task's MTL branch.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HeadConfig {
+    /// Override for the branch-parameter init-seed salt. `None` resolves to
+    /// the registry-index-derived default (`DatasetId::branch_init_salt`).
+    pub init_salt: Option<u64>,
+}
+
+/// Everything that defines one pre-training task, as runtime values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    /// Display name (e.g. "ANI1x"). Lookup is case/hyphen-insensitive.
+    pub name: String,
+    /// Element palette: atomic numbers the generator may draw.
+    pub palette: Vec<usize>,
+    pub generator: GeneratorProfile,
+    pub fidelity: FidelityProfile,
+    pub head: HeadConfig,
+}
+
+impl TaskSpec {
+    pub fn new(
+        name: impl Into<String>,
+        palette: Vec<usize>,
+        generator: GeneratorProfile,
+        fidelity: FidelityProfile,
+    ) -> TaskSpec {
+        TaskSpec {
+            name: name.into(),
+            palette,
+            generator,
+            fidelity,
+            head: HeadConfig::default(),
+        }
+    }
+
+    pub fn with_head(mut self, head: HeadConfig) -> TaskSpec {
+        self.head = head;
+        self
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.name.trim().is_empty(), "task name must be non-empty");
+        anyhow::ensure!(!self.palette.is_empty(), "task '{}': empty palette", self.name);
+        for &z in &self.palette {
+            anyhow::ensure!(
+                (1..=elements::MAX_Z).contains(&z),
+                "task '{}': palette element Z={z} outside 1..={}",
+                self.name,
+                elements::MAX_Z
+            );
+        }
+        match self.generator.kind {
+            StructureKind::Molecule { min_atoms, atoms_cap } => {
+                anyhow::ensure!(
+                    min_atoms >= 2 && atoms_cap >= min_atoms,
+                    "task '{}': bad molecule size range",
+                    self.name
+                );
+                anyhow::ensure!(
+                    self.palette.iter().any(|&z| z != 1),
+                    "task '{}': molecular palette needs a heavy element",
+                    self.name
+                );
+            }
+            StructureKind::MoleculeHeavyLimited { min_heavy, max_heavy } => {
+                anyhow::ensure!(
+                    min_heavy >= 1 && max_heavy >= min_heavy,
+                    "task '{}': bad heavy-atom range",
+                    self.name
+                );
+                anyhow::ensure!(
+                    self.palette.iter().any(|&z| z != 1),
+                    "task '{}': molecular palette needs a heavy element",
+                    self.name
+                );
+            }
+            StructureKind::Crystal { min_atoms } => {
+                anyhow::ensure!(
+                    min_atoms >= 2,
+                    "task '{}': crystals need at least 2 atoms",
+                    self.name
+                );
+            }
+        }
+        // All sigmas finite and non-negative (a NaN here would silently
+        // poison every label the task generates), offset finite.
+        for (field, v) in [
+            ("shift_sigma", self.fidelity.shift_sigma),
+            ("scale_jitter", self.fidelity.scale_jitter),
+            ("force_scale_jitter", self.fidelity.force_scale_jitter),
+            ("energy_noise", self.fidelity.energy_noise),
+            ("force_noise", self.fidelity.force_noise),
+        ] {
+            anyhow::ensure!(
+                v.is_finite() && v >= 0.0,
+                "task '{}': fidelity {field} must be finite and non-negative, got {v}",
+                self.name
+            );
+        }
+        anyhow::ensure!(
+            self.fidelity.shift_offset.is_finite(),
+            "task '{}': shift_offset must be finite",
+            self.name
+        );
+        anyhow::ensure!(
+            self.generator.perturb_factor.is_finite() && self.generator.perturb_factor >= 0.0,
+            "task '{}': perturb_factor must be finite and non-negative",
+            self.name
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------------
+
+/// Name normalization shared by registration and lookup: lowercase with
+/// hyphens removed, so "qm7x" finds "QM7-X" (seed `from_name` behaviour).
+fn normalize(name: &str) -> String {
+    name.to_ascii_lowercase().replace('-', "")
+}
+
+struct Table {
+    specs: Vec<Arc<TaskSpec>>,
+    by_name: BTreeMap<String, u16>,
+}
+
+static TABLE: OnceLock<RwLock<Table>> = OnceLock::new();
+
+fn table() -> &'static RwLock<Table> {
+    TABLE.get_or_init(|| {
+        let specs: Vec<Arc<TaskSpec>> =
+            builtin_specs().into_iter().map(Arc::new).collect();
+        let by_name = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (normalize(&s.name), i as u16))
+            .collect();
+        RwLock::new(Table { specs, by_name })
+    })
+}
+
+/// Handle to the process-global task table. Cheap to copy around; `Session`
+/// owns one so the facade's dependencies are explicit.
+#[derive(Clone, Copy, Default)]
+pub struct TaskRegistry {
+    _priv: (),
+}
+
+impl TaskRegistry {
+    /// The process-global registry (five paper presets pre-registered).
+    pub fn global() -> TaskRegistry {
+        TaskRegistry { _priv: () }
+    }
+
+    /// Number of registered tasks (>= 5).
+    pub fn len(&self) -> usize {
+        table().read().unwrap().specs.len()
+    }
+
+    /// Never true — the five presets are always registered.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Handles of every registered task, in registration order.
+    pub fn all(&self) -> Vec<DatasetId> {
+        (0..self.len()).map(|i| DatasetId(i as u16)).collect()
+    }
+
+    /// The five paper presets.
+    pub fn builtin(&self) -> [DatasetId; 5] {
+        ALL_DATASETS
+    }
+
+    /// Spec for a handle; panics on a dangling handle (only possible by
+    /// fabricating an index).
+    pub fn spec(&self, id: DatasetId) -> Arc<TaskSpec> {
+        self.try_spec(id)
+            .unwrap_or_else(|| panic!("no task registered at index {}", id.0))
+    }
+
+    pub fn try_spec(&self, id: DatasetId) -> Option<Arc<TaskSpec>> {
+        table().read().unwrap().specs.get(id.index()).cloned()
+    }
+
+    /// Case/hyphen-insensitive lookup by name.
+    pub fn find(&self, name: &str) -> Option<DatasetId> {
+        table().read().unwrap().by_name.get(&normalize(name)).map(|&i| DatasetId(i))
+    }
+
+    /// Register a task and return its handle. Re-registering an identical
+    /// spec is idempotent (returns the existing handle, so test binaries
+    /// and long-lived services can re-register safely); re-registering a
+    /// name with a *different* spec is an error rather than a silent
+    /// discard — specs are append-only and immutable once registered.
+    pub fn register(&self, spec: TaskSpec) -> anyhow::Result<DatasetId> {
+        spec.validate()?;
+        let key = normalize(&spec.name);
+        let mut t = table().write().unwrap();
+        if let Some(&i) = t.by_name.get(&key) {
+            anyhow::ensure!(
+                *t.specs[i as usize] == spec,
+                "task '{}' is already registered with a different spec \
+                 (specs are immutable; pick a new name)",
+                spec.name
+            );
+            return Ok(DatasetId(i));
+        }
+        anyhow::ensure!(
+            t.specs.len() < u16::MAX as usize,
+            "task registry full ({} tasks)",
+            t.specs.len()
+        );
+        let id = t.specs.len() as u16;
+        t.specs.push(Arc::new(spec));
+        t.by_name.insert(key, id);
+        Ok(DatasetId(id))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// built-in presets (paper Section 4.1; constants identical to the seed)
+// ---------------------------------------------------------------------------
+
+fn organic_profile(min_atoms: usize, atoms_cap: usize, relax_steps: usize, perturb: f64) -> GeneratorProfile {
+    GeneratorProfile {
+        kind: StructureKind::Molecule { min_atoms, atoms_cap },
+        relax_steps,
+        relax_step_size: 0.05,
+        perturb_factor: perturb,
+    }
+}
+
+fn builtin_specs() -> Vec<TaskSpec> {
+    vec![
+        // ANI1x: small CHNO organics, equilibrium + perturbed.
+        TaskSpec::new(
+            "ANI1x",
+            elements::ani1x_palette(),
+            organic_profile(4, 14, 10, 1.0),
+            FidelityProfile {
+                seed_tag: 11,
+                shift_sigma: 0.90,
+                scale_jitter: 0.02,
+                force_scale_jitter: 0.01,
+                energy_noise: 0.002,
+                force_noise: 0.004,
+                shift_offset: 0.0,
+            },
+        ),
+        // QM7-X: up to 7 heavy atoms — the smallest structures.
+        TaskSpec::new(
+            "QM7-X",
+            elements::qm7x_palette(),
+            GeneratorProfile {
+                kind: StructureKind::MoleculeHeavyLimited { min_heavy: 2, max_heavy: 7 },
+                relax_steps: 10,
+                relax_step_size: 0.05,
+                perturb_factor: 1.0,
+            },
+            FidelityProfile {
+                seed_tag: 23,
+                shift_sigma: 1.40,
+                scale_jitter: 0.05,
+                force_scale_jitter: 0.02,
+                energy_noise: 0.002,
+                force_noise: 0.004,
+                shift_offset: 0.0,
+            },
+        ),
+        // Transition1x: reaction pathways — no relaxation, large jitter.
+        TaskSpec::new(
+            "Transition1x",
+            elements::transition1x_palette(),
+            organic_profile(4, 16, 0, 2.0),
+            FidelityProfile {
+                seed_tag: 37,
+                shift_sigma: 0.70,
+                scale_jitter: 0.03,
+                force_scale_jitter: 0.015,
+                energy_noise: 0.003,
+                force_noise: 0.006,
+                shift_offset: 0.0,
+            },
+        ),
+        // MPTrj / Alexandria: near-equilibrium crystals; deliberately the
+        // SAME fidelity seed tag with small sigma so the two PBE-family
+        // inorganic sources nearly agree (paper Tables 1-2 block structure).
+        TaskSpec::new(
+            "MPTrj",
+            elements::mptrj_palette(),
+            GeneratorProfile {
+                kind: StructureKind::Crystal { min_atoms: 4 },
+                relax_steps: 20,
+                relax_step_size: 0.05,
+                perturb_factor: 0.3,
+            },
+            FidelityProfile {
+                seed_tag: 53,
+                shift_sigma: 0.25,
+                scale_jitter: 0.01,
+                force_scale_jitter: 0.005,
+                energy_noise: 0.002,
+                force_noise: 0.003,
+                shift_offset: 0.0,
+            },
+        ),
+        TaskSpec::new(
+            "Alexandria",
+            elements::alexandria_palette(),
+            GeneratorProfile {
+                kind: StructureKind::Crystal { min_atoms: 4 },
+                relax_steps: 20,
+                relax_step_size: 0.05,
+                perturb_factor: 0.3,
+            },
+            FidelityProfile {
+                seed_tag: 53,
+                shift_sigma: 0.25,
+                scale_jitter: 0.01,
+                force_scale_jitter: 0.005,
+                energy_noise: 0.002,
+                force_noise: 0.003,
+                shift_offset: 0.05,
+            },
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_registered_in_paper_order() {
+        let reg = TaskRegistry::global();
+        assert!(reg.len() >= 5);
+        let names: Vec<String> = ALL_DATASETS.iter().map(|d| d.name()).collect();
+        assert_eq!(
+            names,
+            vec!["ANI1x", "QM7-X", "Transition1x", "MPTrj", "Alexandria"]
+        );
+        for (i, d) in ALL_DATASETS.iter().enumerate() {
+            assert_eq!(d.index(), i);
+            assert_eq!(DatasetId::from_index(i), *d);
+        }
+    }
+
+    #[test]
+    fn name_lookup_is_fuzzy_like_the_seed() {
+        for d in ALL_DATASETS {
+            assert_eq!(DatasetId::from_name(&d.name()), Some(d));
+        }
+        assert_eq!(DatasetId::from_name("qm7x"), Some(DatasetId::Qm7x));
+        assert_eq!(DatasetId::from_name("MPTRJ"), Some(DatasetId::MpTrj));
+        assert!(DatasetId::from_name("nope").is_none());
+    }
+
+    #[test]
+    fn inorganic_flags_match_paper() {
+        assert!(!DatasetId::Ani1x.is_inorganic());
+        assert!(!DatasetId::Qm7x.is_inorganic());
+        assert!(!DatasetId::Transition1x.is_inorganic());
+        assert!(DatasetId::MpTrj.is_inorganic());
+        assert!(DatasetId::Alexandria.is_inorganic());
+    }
+
+    #[test]
+    fn branch_init_salt_matches_seed_formula() {
+        for d in ALL_DATASETS {
+            assert_eq!(d.branch_init_salt(), 0xB4A9 + d.index() as u64 * 7919);
+        }
+    }
+
+    #[test]
+    fn register_custom_task_and_find_it() {
+        let reg = TaskRegistry::global();
+        let spec = TaskSpec::new(
+            "RegTest-A",
+            vec![1, 6, 14],
+            GeneratorProfile {
+                kind: StructureKind::Molecule { min_atoms: 4, atoms_cap: 12 },
+                relax_steps: 5,
+                relax_step_size: 0.05,
+                perturb_factor: 1.0,
+            },
+            FidelityProfile {
+                seed_tag: 99,
+                shift_sigma: 0.5,
+                scale_jitter: 0.02,
+                force_scale_jitter: 0.01,
+                energy_noise: 0.002,
+                force_noise: 0.004,
+                shift_offset: 0.0,
+            },
+        );
+        let id = reg.register(spec.clone()).unwrap();
+        assert!(id.index() >= 5, "custom tasks append after the presets");
+        assert_eq!(DatasetId::from_name("regtest-a"), Some(id));
+        assert_eq!(id.name(), "RegTest-A");
+        assert!(!id.is_inorganic());
+        assert_eq!(id.palette(), vec![1, 6, 14]);
+        // Idempotent: identical spec returns the same handle.
+        assert_eq!(reg.register(spec.clone()).unwrap(), id);
+        assert!(reg.all().contains(&id));
+
+        // A *different* spec under the same name is rejected loudly, not
+        // silently discarded.
+        let mut conflicting = spec;
+        conflicting.fidelity.shift_sigma = 2.0;
+        let err = reg.register(conflicting).unwrap_err();
+        assert!(
+            format!("{err}").contains("different spec"),
+            "expected immutability error, got: {err}"
+        );
+    }
+
+    #[test]
+    fn register_rejects_bad_specs() {
+        let reg = TaskRegistry::global();
+        let base = |name: &str| {
+            TaskSpec::new(
+                name,
+                vec![1, 8],
+                GeneratorProfile {
+                    kind: StructureKind::Crystal { min_atoms: 4 },
+                    relax_steps: 0,
+                    relax_step_size: 0.05,
+                    perturb_factor: 1.0,
+                },
+                FidelityProfile {
+                    seed_tag: 1,
+                    shift_sigma: 0.1,
+                    scale_jitter: 0.0,
+                    force_scale_jitter: 0.0,
+                    energy_noise: 0.0,
+                    force_noise: 0.0,
+                    shift_offset: 0.0,
+                },
+            )
+        };
+        assert!(reg.register(base("")).is_err(), "empty name");
+        let mut s = base("BadPalette");
+        s.palette = vec![0];
+        assert!(reg.register(s).is_err(), "Z=0 palette");
+        let mut s = base("HOnly");
+        s.palette = vec![1];
+        s.generator.kind = StructureKind::Molecule { min_atoms: 4, atoms_cap: 8 };
+        assert!(reg.register(s).is_err(), "molecule needs a heavy element");
+    }
+
+    #[test]
+    fn debug_prints_task_name() {
+        assert_eq!(format!("{:?}", DatasetId::Ani1x), "DatasetId(ANI1x)");
+    }
+}

@@ -4,6 +4,7 @@
 //!
 //! Only the two dtypes that appear in the AOT artifacts exist: f32 and i32.
 
+use crate::runtime::pjrt as xla;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone, PartialEq)]

@@ -98,6 +98,30 @@ impl Args {
             Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
         }
     }
+
+    /// Reject unknown / misspelled `--flags`: error listing the valid flags
+    /// for `context` (a subcommand name) when any parsed flag is not in
+    /// `allowed`. Without this, typos like `--replica 4` were silently
+    /// ignored and defaults won.
+    pub fn ensure_known(&self, context: &str, allowed: &[&str]) -> anyhow::Result<()> {
+        let unknown: Vec<String> = self
+            .flags
+            .keys()
+            .filter(|k| !allowed.contains(&k.as_str()))
+            .map(|k| format!("--{k}"))
+            .collect();
+        if unknown.is_empty() {
+            return Ok(());
+        }
+        let mut valid: Vec<String> = allowed.iter().map(|f| format!("--{f}")).collect();
+        valid.sort();
+        anyhow::bail!(
+            "unknown flag{} {} for `{context}`; valid flags: {}",
+            if unknown.len() == 1 { "" } else { "s" },
+            unknown.join(", "),
+            if valid.is_empty() { "(none)".to_string() } else { valid.join(", ") }
+        )
+    }
 }
 
 #[cfg(test)]
@@ -137,5 +161,34 @@ mod tests {
         let a = parse(&["--a", "--b", "x"]);
         assert!(a.bool("a"));
         assert_eq!(a.str("b", ""), "x");
+    }
+
+    #[test]
+    fn ensure_known_accepts_allowed_flags() {
+        let a = parse(&["train", "--epochs", "5", "--replicas=2"]);
+        a.ensure_known("train", &["epochs", "replicas", "mode"]).unwrap();
+        a.ensure_known("train", &["epochs", "replicas"]).unwrap();
+    }
+
+    #[test]
+    fn ensure_known_rejects_typos_listing_valid_flags() {
+        // The motivating bug: `--replica 4` (singular) used to be silently
+        // ignored, so the run proceeded with the default replica count.
+        let a = parse(&["train", "--replica", "4"]);
+        let err = a.ensure_known("train", &["epochs", "replicas"]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--replica"), "{msg}");
+        assert!(msg.contains("`train`"), "{msg}");
+        assert!(msg.contains("--replicas"), "{msg}");
+        assert!(msg.contains("--epochs"), "{msg}");
+    }
+
+    #[test]
+    fn ensure_known_lists_every_unknown_flag() {
+        let a = parse(&["--foo", "1", "--bar=2", "--ok"]);
+        let err = a.ensure_known("cmd", &["ok"]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--foo") && msg.contains("--bar"), "{msg}");
+        assert!(msg.contains("flags"), "plural form: {msg}");
     }
 }

@@ -1,9 +1,10 @@
-//! Self-contained utility layer: JSON, RNG, CLI parsing, property testing,
-//! and a micro-benchmark timer. The offline crate registry lacks serde /
-//! rand / clap / criterion, so these are first-class modules with their own
-//! test suites instead of external dependencies.
+//! Self-contained utility layer: JSON, RNG, CLI parsing, CRC32, property
+//! testing, and a micro-benchmark timer. The offline crate registry lacks
+//! serde / rand / clap / criterion / crc32fast, so these are first-class
+//! modules with their own test suites instead of external dependencies.
 
 pub mod cli;
+pub mod crc32;
 pub mod json;
 pub mod prop;
 pub mod rng;

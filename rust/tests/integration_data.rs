@@ -4,7 +4,7 @@
 
 use hydra_mtp::data::batch::{BatchBuilder, BatchDims};
 use hydra_mtp::data::fidelity::FidelityModel;
-use hydra_mtp::data::generators::{generate_all, DatasetGenerator, GeneratorConfig};
+use hydra_mtp::data::generators::{generate_for, DatasetGenerator, GeneratorConfig};
 use hydra_mtp::data::pack::{write_all, GPackReader};
 use hydra_mtp::data::structures::{DatasetId, ALL_DATASETS};
 use hydra_mtp::data::DDStore;
@@ -20,7 +20,7 @@ fn tmp(name: &str) -> std::path::PathBuf {
 fn full_pipeline_generate_pack_load_batch() {
     // The path a real pre-training run takes, per dataset.
     let cfg = GeneratorConfig { max_atoms: 14, ..Default::default() };
-    for (d, samples) in generate_all(77, 40, &cfg) {
+    for (d, samples) in generate_for(&ALL_DATASETS, 77, 40, &cfg) {
         let path = tmp(&format!("pipeline_{}", d.index()));
         let n = write_all(&path, &samples).unwrap();
         assert_eq!(n, 40);
@@ -101,7 +101,7 @@ fn multi_fidelity_conflict_has_the_papers_structure() {
 #[test]
 fn dataset_statistics_match_paper_profiles() {
     let cfg = GeneratorConfig::default();
-    let all = generate_all(123, 60, &cfg);
+    let all = generate_for(&ALL_DATASETS, 123, 60, &cfg);
     let stats: std::collections::BTreeMap<_, _> = all
         .iter()
         .map(|(d, ss)| {

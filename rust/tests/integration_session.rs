@@ -1,0 +1,214 @@
+//! Integration: the Session/Predictor facade and the runtime task registry.
+//!
+//! Two pillars of the API redesign:
+//!  1. `Session` + `Predictor` reproduce the seed's manual call-chain
+//!     (`DataBundle::generate` -> `Trainer` -> `evaluate_model` ->
+//!     hand-rolled `BatchBuilder`/`full_params`/`engine.forward`)
+//!     bit-for-bit at the same seed.
+//!  2. Head count is data, not code: a registry-defined sixth task trains
+//!     end-to-end under `mtl-par` with six head sub-groups.
+
+use std::sync::Arc;
+
+use hydra_mtp::config::{RunConfig, TrainMode};
+use hydra_mtp::coordinator::{evaluate_model, DataBundle, Heads, Trainer};
+use hydra_mtp::data::batch::BatchBuilder;
+use hydra_mtp::data::structures::ALL_DATASETS;
+use hydra_mtp::runtime::Engine;
+use hydra_mtp::session::Session;
+use hydra_mtp::tasks::{
+    FidelityProfile, GeneratorProfile, StructureKind, TaskRegistry, TaskSpec,
+};
+
+/// Shared engine, or `None` (test skips with a clear message) when the AOT
+/// artifacts are absent / the binary was built without `pjrt`.
+fn engine() -> Option<Arc<Engine>> {
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Option<Arc<Engine>>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| match Engine::load("artifacts") {
+            Ok(e) => Some(Arc::new(e)),
+            Err(e) => {
+                eprintln!(
+                    "SKIP: AOT artifacts unavailable ({e:#}); run `make artifacts` \
+                     and enable the `pjrt` feature (uncomment `xla` in Cargo.toml) to run session tests"
+                );
+                None
+            }
+        })
+        .clone()
+}
+
+fn tiny_config(mode: TrainMode) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.mode = mode;
+    cfg.train.epochs = 2;
+    cfg.train.patience = 0;
+    cfg.data.per_dataset = 40;
+    cfg.data.max_atoms = 10;
+    cfg
+}
+
+#[test]
+fn session_reproduces_manual_path_bit_for_bit() {
+    let Some(e) = engine() else { return };
+    let cfg = tiny_config(TrainMode::MtlPar);
+
+    // --- the seed's manual five-step dance ---
+    let data = DataBundle::generate(&cfg.data, &ALL_DATASETS);
+    let manual =
+        Trainer::new(Arc::clone(&e), cfg.clone()).train(&data).unwrap();
+    let manual_scores = evaluate_model(&e, &manual.model, &data.test).unwrap();
+
+    // --- the same lifecycle through the facade ---
+    let mut session = Session::builder()
+        .engine(Arc::clone(&e))
+        .config(cfg.clone())
+        .build()
+        .unwrap();
+    let out = session.train().unwrap();
+    let scores = session.evaluate(&out.model).unwrap();
+
+    // Training trajectories identical to the last bit.
+    assert_eq!(out.log.epochs.len(), manual.log.epochs.len());
+    for (a, b) in out.log.epochs.iter().zip(&manual.log.epochs) {
+        assert_eq!(a.train_loss, b.train_loss, "epoch train loss");
+        assert_eq!(a.val_loss, b.val_loss, "epoch val loss");
+        assert_eq!(a.steps, b.steps);
+    }
+    assert_eq!(out.comm_elems, manual.comm_elems, "comm traffic");
+
+    // Evaluation matrices identical.
+    assert_eq!(scores.len(), manual_scores.len());
+    for (d, (mae_e, mae_f)) in &scores {
+        let (me, mf) = manual_scores[d];
+        assert_eq!(*mae_e, me, "{} energy MAE", d.name());
+        assert_eq!(*mae_f, mf, "{} force MAE", d.name());
+    }
+
+    // Predictor output == the manual forward-pass plumbing on the same
+    // samples (the old quickstart step 5).
+    let d = ALL_DATASETS[0];
+    let samples: Vec<_> = data.test[&d].iter().take(4).cloned().collect();
+    let batch = BatchBuilder::build_all(
+        e.manifest.config.batch_dims(),
+        e.manifest.config.cutoff,
+        &samples,
+    )
+    .remove(0);
+    let full = manual.model.full_params(&e, d);
+    let (energy, forces) = e.forward(&full, &batch).unwrap();
+
+    let mut predictor = session.predictor(&out.model);
+    let preds = predictor.predict(&samples).unwrap();
+    assert_eq!(preds.len(), samples.len());
+    let ev = energy.as_f32();
+    let fv = forces.as_f32();
+    let mut node_base = 0;
+    for (g, (p, s)) in preds.iter().zip(&samples).enumerate() {
+        assert_eq!(p.dataset, d);
+        assert_eq!(p.energy_per_atom, ev[g] as f64, "structure {g} energy");
+        assert_eq!(p.energy, ev[g] as f64 * s.natoms() as f64);
+        assert_eq!(p.forces.len(), s.natoms());
+        for (k, f) in p.forces.iter().enumerate() {
+            let row = (node_base + k) * 3;
+            assert_eq!(f[0], fv[row] as f64, "structure {g} atom {k} fx");
+            assert_eq!(f[1], fv[row + 1] as f64);
+            assert_eq!(f[2], fv[row + 2] as f64);
+        }
+        node_base += s.natoms();
+    }
+}
+
+/// Register the sixth synthetic source used by the tests below. Idempotent.
+fn sixth_task() -> hydra_mtp::DatasetId {
+    TaskRegistry::global()
+        .register(TaskSpec::new(
+            "Synth6",
+            vec![1, 6, 7, 8, 16],
+            GeneratorProfile {
+                kind: StructureKind::Molecule { min_atoms: 4, atoms_cap: 12 },
+                relax_steps: 10,
+                relax_step_size: 0.05,
+                perturb_factor: 1.2,
+            },
+            FidelityProfile {
+                seed_tag: 97,
+                shift_sigma: 1.0,
+                scale_jitter: 0.03,
+                force_scale_jitter: 0.015,
+                energy_noise: 0.002,
+                force_noise: 0.004,
+                shift_offset: 0.0,
+            },
+        ))
+        .expect("valid sixth-task spec")
+}
+
+#[test]
+fn registry_sixth_task_trains_mtl_par_with_six_heads() {
+    let Some(e) = engine() else { return };
+    let six = sixth_task();
+    let tasks: Vec<_> = ALL_DATASETS.iter().copied().chain([six]).collect();
+
+    let mut session = Session::builder()
+        .engine(Arc::clone(&e))
+        .config(tiny_config(TrainMode::MtlPar))
+        .tasks(&tasks)
+        .build()
+        .unwrap();
+    assert_eq!(session.tasks().len(), 6);
+
+    let out = session.train().unwrap();
+    match &out.model.heads {
+        Heads::PerDataset(m) => {
+            assert_eq!(m.len(), 6, "one branch per task — head count is data");
+            assert!(m.contains_key(&six), "sixth head trained");
+        }
+        _ => panic!("mtl-par must produce per-task heads"),
+    }
+    assert!(out.log.epochs.iter().all(|e| e.train_loss.is_finite()));
+
+    // The sixth task evaluates and serves like any preset.
+    let scores = session.evaluate(&out.model).unwrap();
+    assert_eq!(scores.len(), 6);
+    let (mae_e, mae_f) = scores[&six];
+    assert!(mae_e.is_finite() && mae_f.is_finite());
+
+    let samples = session.test_samples(2).unwrap();
+    assert!(samples.iter().any(|s| s.dataset == six));
+    let mut predictor = session.predictor(&out.model);
+    for p in predictor.predict(&samples).unwrap() {
+        assert!(p.energy.is_finite());
+        assert!(p.forces.iter().flatten().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn predictor_rejects_headless_task() {
+    let Some(e) = engine() else { return };
+    let six = sixth_task();
+    // Train only on the five presets...
+    let mut session = Session::builder()
+        .engine(Arc::clone(&e))
+        .config(tiny_config(TrainMode::MtlPar))
+        .build()
+        .unwrap();
+    let out = session.train().unwrap();
+    // ...then ask for a prediction on the unknown sixth task.
+    let mut generator = hydra_mtp::data::generators::DatasetGenerator::new(
+        six,
+        1,
+        hydra_mtp::data::generators::GeneratorConfig {
+            max_atoms: 8,
+            ..Default::default()
+        },
+    );
+    let alien = generator.take(1);
+    let mut predictor = session.predictor(&out.model);
+    let err = predictor.predict(&alien).unwrap_err();
+    assert!(
+        format!("{err}").contains("no head"),
+        "clear routing error, got: {err}"
+    );
+}
