@@ -1,19 +1,39 @@
 //! Micro-benchmarks of every L3 hot path (harness = util::timer; criterion
 //! is unavailable offline). Run with `cargo bench --bench hot_paths`.
-//! These numbers feed EXPERIMENTS.md §Perf.
+//!
+//! Besides the stdout report, the run writes `BENCH_hot_paths.json`
+//! (op name, ns/iter, throughput) — the machine-readable trajectory that
+//! EXPERIMENTS.md §Perf tracks and CI uploads as an artifact. The data-path
+//! section needs no AOT artifacts, so the perf harness cannot rot even in
+//! engine-less environments; `*_seed` ops are the retained seed
+//! implementations, benchmarked next to their replacements so every entry
+//! carries its own before/after.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use hydra_mtp::comm::Comm;
-use hydra_mtp::data::batch::{BatchBuilder, GraphBatch};
+use hydra_mtp::coordinator::trainer::plan_epoch_batches_reference;
+use hydra_mtp::data::batch::{BatchBuilder, BatchDims, BatchPool, GraphBatch};
+use hydra_mtp::data::featurized::FeaturizedStore;
 use hydra_mtp::data::generators::{DatasetGenerator, GeneratorConfig};
-use hydra_mtp::data::graph::radius_graph;
+use hydra_mtp::data::graph::{
+    radius_graph, radius_graph_positions, radius_graph_positions_reference,
+};
 use hydra_mtp::data::structures::{AtomicStructure, DatasetId};
+use hydra_mtp::data::DDStore;
 use hydra_mtp::model::optimizer::{AdamW, AdamWConfig};
 use hydra_mtp::model::params::ParamSet;
 use hydra_mtp::runtime::Engine;
-use hydra_mtp::util::timer::{bench, bench_n};
+use hydra_mtp::util::rng::Rng;
+use hydra_mtp::util::timer::{bench, bench_n, write_bench_json, BenchStats};
+
+const BENCH_JSON: &str = "BENCH_hot_paths.json";
+
+/// Batch geometry for the engine-free data-path benches (the compiled
+/// manifest dims are used automatically for the engine section).
+const DIMS: BatchDims = BatchDims { max_nodes: 256, max_edges: 4096, max_graphs: 16 };
+const CUTOFF: f64 = 6.0;
 
 fn samples(n: usize, max_atoms: usize) -> Vec<AtomicStructure> {
     let mut g = DatasetGenerator::new(
@@ -24,80 +44,90 @@ fn samples(n: usize, max_atoms: usize) -> Vec<AtomicStructure> {
     g.take(n)
 }
 
+fn record(results: &mut Vec<BenchStats>, s: BenchStats) {
+    println!("{}", s.report());
+    results.push(s);
+}
+
+fn finish(results: &[BenchStats]) -> anyhow::Result<()> {
+    write_bench_json(BENCH_JSON, "hot_paths", results)?;
+    println!("\nwrote {BENCH_JSON} ({} ops)", results.len());
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     println!("== hydra-mtp hot-path benchmarks ==\n");
     let budget = Duration::from_millis(600);
+    let mut results: Vec<BenchStats> = Vec::new();
 
-    // --- data path ---
+    // --- radius graph: seed hashmap-cell-list vs dense/flat-grid paths ---
     let ss = samples(64, 16);
-    println!("{}", bench("radius_graph (16-atom molecule)", 3, budget, || {
-        std::hint::black_box(radius_graph(&ss[0], 6.0));
-    }).report());
+    record(&mut results, bench("radius_graph_seed (16-atom molecule)", 3, budget, || {
+        std::hint::black_box(radius_graph_positions_reference(&ss[0].positions, CUTOFF));
+    }));
+    record(&mut results, bench("radius_graph (16-atom molecule)", 3, budget, || {
+        std::hint::black_box(radius_graph(&ss[0], CUTOFF));
+    }));
+    let mut rng = Rng::new(7);
+    let big: Vec<[f64; 3]> = (0..512)
+        .map(|_| [rng.range(0.0, 14.0), rng.range(0.0, 14.0), rng.range(0.0, 14.0)])
+        .collect();
+    record(&mut results, bench("radius_graph_seed (512-atom box)", 3, budget, || {
+        std::hint::black_box(radius_graph_positions_reference(&big, 4.5));
+    }));
+    record(&mut results, bench("radius_graph (512-atom box)", 3, budget, || {
+        std::hint::black_box(radius_graph_positions(&big, 4.5));
+    }));
 
-    let engine = match Engine::load("artifacts") {
-        Ok(e) => Arc::new(e),
-        Err(e) => {
-            eprintln!(
-                "SKIP: AOT artifacts unavailable ({e:#}); run `make artifacts` and \
-                 enable the `pjrt` feature (uncomment `xla` in Cargo.toml) for the engine benchmarks"
-            );
-            return Ok(());
-        }
-    };
-    let dims = engine.manifest.config.batch_dims();
-    let cutoff = engine.manifest.config.cutoff;
-    println!("{}", bench("batch assembly (64 structures)", 2, budget, || {
-        std::hint::black_box(BatchBuilder::build_all(dims, cutoff, &ss));
-    }).report());
+    // --- batch assembly ---
+    record(&mut results, bench("batch assembly (64 structures)", 2, budget, || {
+        std::hint::black_box(BatchBuilder::build_all(DIMS, CUTOFF, &ss));
+    }));
 
-    let batches = BatchBuilder::build_all(dims, cutoff, &ss);
+    // --- featurize-once epoch planning: seed refeaturize vs warm cache ---
+    let store = DDStore::new(ss.clone(), 1);
+    record(&mut results, bench("featurized store build (64 structures)", 2, budget, || {
+        std::hint::black_box(FeaturizedStore::build(Arc::clone(&store), CUTOFF));
+    }));
+    let fstore = FeaturizedStore::build(Arc::clone(&store), CUTOFF);
+    record(&mut results, bench("epoch planning seed (refeaturize)", 2, budget, || {
+        std::hint::black_box(plan_epoch_batches_reference(&store, 0, 1, DIMS, CUTOFF, 42));
+    }));
+    let mut pool = BatchPool::new();
+    record(&mut results, bench("epoch planning warm (cached edges, pooled)", 2, budget, || {
+        let batches = fstore.plan_epoch_batches(0, 1, DIMS, 42, &mut pool);
+        std::hint::black_box(&batches);
+        pool.recycle(batches);
+    }));
+
+    // --- per-step batch-field marshalling: clone-to-Tensor vs in-place ---
+    let batches = BatchBuilder::build_all(DIMS, CUTOFF, &ss);
     let batch: &GraphBatch = &batches[0];
+    const FIELDS: [&str; 12] = [
+        "species", "edge_src", "edge_dst", "rel_hat", "dist", "node_mask",
+        "edge_mask", "node_graph", "graph_mask", "inv_atoms", "y_energy", "y_forces",
+    ];
+    record(&mut results, bench("marshal 12 fields seed (clone->Tensor->literal)", 3, budget, || {
+        for f in FIELDS {
+            std::hint::black_box(batch.field(f).to_literal().unwrap());
+        }
+    }));
+    record(&mut results, bench("marshal 12 fields (field_literal, in place)", 3, budget, || {
+        for f in FIELDS {
+            std::hint::black_box(batch.field_literal(f).unwrap());
+        }
+    }));
 
     // --- gpack io ---
     let path = std::env::temp_dir().join(format!("hydra_bench_{}.gpack", std::process::id()));
     hydra_mtp::data::pack::write_all(&path, &ss)?;
     let mut reader = hydra_mtp::data::pack::GPackReader::open(&path)?;
     let mut i = 0usize;
-    println!("{}", bench("gpack random read", 5, budget, || {
+    record(&mut results, bench("gpack random read", 5, budget, || {
         i = (i * 7 + 1) % reader.len();
         std::hint::black_box(reader.read(i).unwrap());
-    }).report());
+    }));
     std::fs::remove_file(&path).ok();
-
-    // --- runtime path ---
-    let params = ParamSet::init(&engine.manifest.params, 1);
-    println!("{}", bench_n("marshal train_step inputs", 200, || {
-        std::hint::black_box(engine.marshal("train_step", &params, batch).unwrap());
-    }).report());
-
-    println!("{}", bench_n("train_step (fwd+bwd, full batch)", 20, || {
-        std::hint::black_box(engine.train_step(&params, batch).unwrap());
-    }).report());
-
-    println!("{}", bench_n("eval_step (fwd only)", 30, || {
-        std::hint::black_box(engine.eval_step(&params, batch).unwrap());
-    }).report());
-
-    // --- optimizer ---
-    let grads = {
-        let out = engine.train_step(&params, batch)?;
-        out.grads
-    };
-    let mut opt_params = ParamSet::init(&engine.manifest.params, 2);
-    let mut opt = AdamW::new(AdamWConfig::default(), &opt_params);
-    println!("{}", bench("adamw step (full model)", 3, budget, || {
-        opt.step(&mut opt_params, &grads);
-    }).report());
-
-    // --- gradient sync prep: before/after the §Perf L3 iteration ---
-    println!("{}", bench("grad sync prep OLD subset+flatten", 3, budget, || {
-        std::hint::black_box(grads.subset("encoder.").flatten());
-    }).report());
-    let mut flat_buf: Vec<f32> = Vec::new();
-    println!("{}", bench("grad sync prep NEW flatten_prefix", 3, budget, || {
-        grads.flatten_prefix_into("encoder.", &mut flat_buf);
-        std::hint::black_box(&flat_buf);
-    }).report());
 
     // --- collectives across group sizes and payloads ---
     for group in [2usize, 4, 8] {
@@ -115,10 +145,61 @@ fn main() -> anyhow::Result<()> {
                     }
                 });
             });
-            println!("{}", stats.report());
+            record(&mut results, stats);
         }
     }
 
+    // --- runtime path (needs compiled AOT artifacts) ---
+    let engine = match Engine::load("artifacts") {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            eprintln!(
+                "SKIP engine section: AOT artifacts unavailable ({e:#}); run \
+                 `make artifacts` and enable the `pjrt` feature (uncomment `xla` \
+                 in Cargo.toml) for the engine benchmarks"
+            );
+            return finish(&results);
+        }
+    };
+    let dims = engine.manifest.config.batch_dims();
+    let cutoff = engine.manifest.config.cutoff;
+    let ebatches = BatchBuilder::build_all(dims, cutoff, &ss);
+    let ebatch: &GraphBatch = &ebatches[0];
+
+    let params = ParamSet::init(&engine.manifest.params, 1);
+    record(&mut results, bench_n("marshal train_step inputs", 200, || {
+        std::hint::black_box(engine.marshal("train_step", &params, ebatch).unwrap());
+    }));
+
+    record(&mut results, bench_n("train_step (fwd+bwd, full batch)", 20, || {
+        std::hint::black_box(engine.train_step(&params, ebatch).unwrap());
+    }));
+
+    record(&mut results, bench_n("eval_step (fwd only)", 30, || {
+        std::hint::black_box(engine.eval_step(&params, ebatch).unwrap());
+    }));
+
+    // --- optimizer ---
+    let grads = {
+        let out = engine.train_step(&params, ebatch)?;
+        out.grads
+    };
+    let mut opt_params = ParamSet::init(&engine.manifest.params, 2);
+    let mut opt = AdamW::new(AdamWConfig::default(), &opt_params);
+    record(&mut results, bench("adamw step (full model)", 3, budget, || {
+        opt.step(&mut opt_params, &grads);
+    }));
+
+    // --- gradient sync prep: before/after the §Perf L3 iteration ---
+    record(&mut results, bench("grad sync prep OLD subset+flatten", 3, budget, || {
+        std::hint::black_box(grads.subset("encoder.").flatten());
+    }));
+    let mut flat_buf: Vec<f32> = Vec::new();
+    record(&mut results, bench("grad sync prep NEW flatten_prefix", 3, budget, || {
+        grads.flatten_prefix_into("encoder.", &mut flat_buf);
+        std::hint::black_box(&flat_buf);
+    }));
+
     println!("\ntotal executions against PJRT: {}", engine.executions());
-    Ok(())
+    finish(&results)
 }

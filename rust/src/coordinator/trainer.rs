@@ -25,7 +25,8 @@ use crate::comm::{build_mesh, MeshRank, MeshShape};
 use crate::config::{RunConfig, TrainMode};
 use crate::coordinator::metrics::{RunLog, StepAccum};
 use crate::coordinator::scheduler::EarlyStopper;
-use crate::data::batch::{BatchBuilder, GraphBatch};
+use crate::data::batch::{BatchBuilder, BatchPool, GraphBatch};
+use crate::data::featurized::FeaturizedStore;
 use crate::data::split::{Split, SplitSpec};
 use crate::data::structures::{AtomicStructure, DatasetId};
 use crate::data::DDStore;
@@ -46,30 +47,40 @@ pub struct DataBundle {
 }
 
 impl DataBundle {
-    /// Generate synthetic data for `datasets` per the run config.
+    /// Generate synthetic data for `datasets` per the run config, one scoped
+    /// thread per dataset. Generation is embarrassingly parallel: every
+    /// dataset's RNG stream is seeded only by `(cfg.seed, dataset)`, so the
+    /// output is bit-identical to [`DataBundle::generate_serial`] (proven in
+    /// `rust/tests/integration_featurized.rs`).
     pub fn generate(cfg: &crate::config::DataConfig, datasets: &[DatasetId]) -> DataBundle {
-        use crate::data::generators::{DatasetGenerator, GeneratorConfig};
-        let spec = SplitSpec { train: cfg.train_frac, val: cfg.val_frac };
+        let parts: Vec<_> = std::thread::scope(|scope| {
+            let handles: Vec<_> = datasets
+                .iter()
+                .map(|&d| scope.spawn(move || generate_one(cfg, d)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("dataset generation thread panicked"))
+                .collect()
+        });
+        Self::assemble(datasets, parts)
+    }
+
+    /// Serial reference generator (the seed code path), kept as the
+    /// bit-identity oracle for the parallel [`DataBundle::generate`].
+    pub fn generate_serial(
+        cfg: &crate::config::DataConfig,
+        datasets: &[DatasetId],
+    ) -> DataBundle {
+        let parts = datasets.iter().map(|&d| generate_one(cfg, d)).collect();
+        Self::assemble(datasets, parts)
+    }
+
+    fn assemble(datasets: &[DatasetId], parts: Vec<DatasetSplits>) -> DataBundle {
         let mut train = BTreeMap::new();
         let mut val = BTreeMap::new();
         let mut test = BTreeMap::new();
-        for &d in datasets {
-            let mut g = DatasetGenerator::new(
-                d,
-                cfg.seed,
-                GeneratorConfig { max_atoms: cfg.max_atoms, ..Default::default() },
-            );
-            let samples = g.take(cfg.per_dataset);
-            let mut tr = Vec::new();
-            let mut va = Vec::new();
-            let mut te = Vec::new();
-            for (i, s) in samples.into_iter().enumerate() {
-                match spec.of(i, cfg.seed ^ d.index() as u64) {
-                    Split::Train => tr.push(s),
-                    Split::Val => va.push(s),
-                    Split::Test => te.push(s),
-                }
-            }
+        for (&d, (tr, va, te)) in datasets.iter().zip(parts) {
             train.insert(d, Arc::new(tr));
             val.insert(d, Arc::new(va));
             test.insert(d, Arc::new(te));
@@ -80,6 +91,32 @@ impl DataBundle {
     pub fn datasets(&self) -> Vec<DatasetId> {
         self.train.keys().copied().collect()
     }
+}
+
+/// (train, val, test) structure lists for one dataset.
+type DatasetSplits = (Vec<AtomicStructure>, Vec<AtomicStructure>, Vec<AtomicStructure>);
+
+/// Generate and split one dataset (deterministic in `(cfg, d)` alone).
+fn generate_one(cfg: &crate::config::DataConfig, d: DatasetId) -> DatasetSplits {
+    use crate::data::generators::{DatasetGenerator, GeneratorConfig};
+    let spec = SplitSpec { train: cfg.train_frac, val: cfg.val_frac };
+    let mut g = DatasetGenerator::new(
+        d,
+        cfg.seed,
+        GeneratorConfig { max_atoms: cfg.max_atoms, ..Default::default() },
+    );
+    let samples = g.take(cfg.per_dataset);
+    let mut tr = Vec::new();
+    let mut va = Vec::new();
+    let mut te = Vec::new();
+    for (i, s) in samples.into_iter().enumerate() {
+        match spec.of(i, cfg.seed ^ d.index() as u64) {
+            Split::Train => tr.push(s),
+            Split::Val => va.push(s),
+            Split::Test => te.push(s),
+        }
+    }
+    (tr, va, te)
 }
 
 // ---------------------------------------------------------------------------
@@ -177,16 +214,18 @@ impl Trainer {
         let cfg = &self.cfg;
 
         // Mixed stream: concatenate (dataset-tagged) training samples.
+        // Featurize once, up front: warm epochs only shuffle and pack.
+        let cutoff = engine.manifest.config.cutoff;
         let mixed: Vec<AtomicStructure> = datasets
             .iter()
             .flat_map(|d| data.train[d].iter().cloned())
             .collect();
-        let store = DDStore::new(mixed, replicas);
+        let store = FeaturizedStore::build(DDStore::new(mixed, replicas), cutoff);
         let val_mixed: Vec<AtomicStructure> = datasets
             .iter()
             .flat_map(|d| data.val[d].iter().cloned())
             .collect();
-        let val_store = DDStore::new(val_mixed, replicas);
+        let val_store = FeaturizedStore::build(DDStore::new(val_mixed, replicas), cutoff);
 
         let results = std::thread::scope(|scope| {
             let mut handles = Vec::new();
@@ -218,13 +257,18 @@ impl Trainer {
         let cfg = &self.cfg;
         let datasets = data.datasets();
 
-        let stores: BTreeMap<DatasetId, Arc<DDStore>> = datasets
+        let cutoff = engine.manifest.config.cutoff;
+        let stores: BTreeMap<DatasetId, Arc<FeaturizedStore>> = datasets
             .iter()
-            .map(|&d| (d, DDStore::new(data.train[&d].to_vec(), replicas)))
+            .map(|&d| {
+                (d, FeaturizedStore::build(DDStore::new(data.train[&d].to_vec(), replicas), cutoff))
+            })
             .collect();
-        let val_stores: BTreeMap<DatasetId, Arc<DDStore>> = datasets
+        let val_stores: BTreeMap<DatasetId, Arc<FeaturizedStore>> = datasets
             .iter()
-            .map(|&d| (d, DDStore::new(data.val[&d].to_vec(), replicas)))
+            .map(|&d| {
+                (d, FeaturizedStore::build(DDStore::new(data.val[&d].to_vec(), replicas), cutoff))
+            })
             .collect();
 
         let results = std::thread::scope(|scope| {
@@ -257,13 +301,14 @@ impl Trainer {
         let cfg = &self.cfg;
 
         // One store per head sub-group: world = replicas.
-        let stores: Vec<Arc<DDStore>> = datasets
+        let cutoff = engine.manifest.config.cutoff;
+        let stores: Vec<Arc<FeaturizedStore>> = datasets
             .iter()
-            .map(|d| DDStore::new(data.train[d].to_vec(), replicas))
+            .map(|d| FeaturizedStore::build(DDStore::new(data.train[d].to_vec(), replicas), cutoff))
             .collect();
-        let val_stores: Vec<Arc<DDStore>> = datasets
+        let val_stores: Vec<Arc<FeaturizedStore>> = datasets
             .iter()
-            .map(|d| DDStore::new(data.val[d].to_vec(), replicas))
+            .map(|d| FeaturizedStore::build(DDStore::new(data.val[d].to_vec(), replicas), cutoff))
             .collect();
 
         let results = std::thread::scope(|scope| {
@@ -337,9 +382,12 @@ fn init_rank_params(
     (encoder, branches)
 }
 
-/// Plan this rank's padded batches for one epoch from its slice of the
-/// shuffled global index list (identical shuffle on every rank).
-fn plan_epoch_batches(
+/// The seed epoch planner: clones every sample out of the `DDStore` and
+/// re-runs `radius_graph` on it, every epoch, every rank. The production
+/// path is `FeaturizedStore::plan_epoch_batches` (shuffle + pack cached
+/// edges); this snapshot is kept as the bit-identity oracle for tests and
+/// the "before" baseline in `BENCH_hot_paths.json`.
+pub fn plan_epoch_batches_reference(
     store: &DDStore,
     rank_in_group: usize,
     group_size: usize,
@@ -406,12 +454,11 @@ fn rank_loop_single_branch(
     engine: &Engine,
     cfg: &RunConfig,
     mr: MeshRank,
-    store: Arc<DDStore>,
-    val_store: Arc<DDStore>,
+    store: Arc<FeaturizedStore>,
+    val_store: Arc<FeaturizedStore>,
     datasets: &[DatasetId],
 ) -> anyhow::Result<RankResult> {
     let dims = engine.manifest.config.batch_dims();
-    let cutoff = engine.manifest.config.cutoff;
     let (encoder, mut branches) = init_rank_params(engine, cfg, &datasets[..1]);
     let mut encoder = encoder;
     let branch_dataset = branches[0].0;
@@ -427,14 +474,15 @@ fn rank_loop_single_branch(
     let mut br_g = ParamSet::zeros_like(&engine.manifest.params).subset("branch.");
     let mut enc_flat: Vec<f32> = Vec::new();
     let mut br_flat: Vec<f32> = Vec::new();
+    // Per-rank batch pool: epoch N+1 reuses epoch N's buffers.
+    let mut pool = BatchPool::default();
 
-    let val_batches = plan_epoch_batches(
-        &val_store,
+    let val_batches = val_store.plan_epoch_batches(
         mr.replica,
         mr.shape.replicas,
         dims,
-        cutoff,
         cfg.train.seed ^ VAL_SEED,
+        &mut pool,
     );
 
     for epoch in 0..cfg.train.epochs {
@@ -442,13 +490,12 @@ fn rank_loop_single_branch(
         let mut acc = StepAccum::default();
 
         let t0 = Instant::now();
-        let batches = plan_epoch_batches(
-            &store,
+        let batches = store.plan_epoch_batches(
             mr.replica,
             mr.shape.replicas,
             dims,
-            cutoff,
             cfg.train.seed.wrapping_add(epoch as u64 * 7_777_777),
+            &mut pool,
         );
         acc.data += t0.elapsed();
         let steps = agree_steps(&mr, batches.len());
@@ -477,6 +524,7 @@ fn rank_loop_single_branch(
             opt_br.step(&mut branch, &br_g);
             acc.opt += t3.elapsed();
         }
+        pool.recycle(batches);
 
         assemble_full(&mut full, &encoder, &branch);
         let val_loss = distributed_val_loss(engine, &mr, &full, &val_batches)?;
@@ -505,12 +553,11 @@ fn rank_loop_mtl_base(
     engine: &Engine,
     cfg: &RunConfig,
     mr: MeshRank,
-    stores: BTreeMap<DatasetId, Arc<DDStore>>,
-    val_stores: BTreeMap<DatasetId, Arc<DDStore>>,
+    stores: BTreeMap<DatasetId, Arc<FeaturizedStore>>,
+    val_stores: BTreeMap<DatasetId, Arc<FeaturizedStore>>,
     datasets: &[DatasetId],
 ) -> anyhow::Result<RankResult> {
     let dims = engine.manifest.config.batch_dims();
-    let cutoff = engine.manifest.config.cutoff;
     let (mut encoder, mut branches) = init_rank_params(engine, cfg, datasets);
     let mut full = ParamSet::zeros_like(&engine.manifest.params);
     let mut opt_enc = AdamW::new(adamw_cfg(cfg), &encoder);
@@ -518,6 +565,8 @@ fn rank_loop_mtl_base(
         branches.iter().map(|(_, b)| AdamW::new(adamw_cfg(cfg), b)).collect();
     let mut log = RunLog::new("GFM-MTL-All (MTL-base)");
     let mut stopper = EarlyStopper::new(cfg.train.patience);
+    // Per-rank batch pool shared across datasets and epochs.
+    let mut pool = BatchPool::default();
 
     // Validation: every dataset's shard through its own branch.
     let val_batches: Vec<(usize, Vec<GraphBatch>)> = datasets
@@ -526,13 +575,12 @@ fn rank_loop_mtl_base(
         .map(|(k, d)| {
             (
                 k,
-                plan_epoch_batches(
-                    &val_stores[d],
+                val_stores[d].plan_epoch_batches(
                     mr.replica,
                     mr.shape.replicas,
                     dims,
-                    cutoff,
                     cfg.train.seed ^ VAL_SEED,
+                    &mut pool,
                 ),
             )
         })
@@ -546,14 +594,13 @@ fn rank_loop_mtl_base(
         let per_ds_batches: Vec<Vec<GraphBatch>> = datasets
             .iter()
             .map(|d| {
-                plan_epoch_batches(
-                    &stores[d],
+                stores[d].plan_epoch_batches(
                     mr.replica,
                     mr.shape.replicas,
                     dims,
-                    cutoff,
                     cfg.train.seed.wrapping_add(epoch as u64 * 7_777_777)
                         ^ d.index() as u64,
+                    &mut pool,
                 )
             })
             .collect();
@@ -621,6 +668,9 @@ fn rank_loop_mtl_base(
             }
             acc.opt += t3.elapsed();
         }
+        for b in per_ds_batches {
+            pool.recycle(b);
+        }
 
         // Validation across every head.
         let mut val_local = 0.0;
@@ -666,12 +716,11 @@ fn rank_loop_mtl_par(
     engine: &Engine,
     cfg: &RunConfig,
     mr: MeshRank,
-    store: Arc<DDStore>,
-    val_store: Arc<DDStore>,
+    store: Arc<FeaturizedStore>,
+    val_store: Arc<FeaturizedStore>,
     dataset: DatasetId,
 ) -> anyhow::Result<RankResult> {
     let dims = engine.manifest.config.batch_dims();
-    let cutoff = engine.manifest.config.cutoff;
     let (mut encoder, mut branches) = init_rank_params(engine, cfg, &[dataset]);
     let mut branch = branches.remove(0).1;
     let mut full = ParamSet::zeros_like(&engine.manifest.params);
@@ -684,14 +733,15 @@ fn rank_loop_mtl_par(
     let mut br_g = ParamSet::zeros_like(&engine.manifest.params).subset("branch.");
     let mut enc_flat: Vec<f32> = Vec::new();
     let mut br_flat: Vec<f32> = Vec::new();
+    // Per-rank batch pool: epoch N+1 reuses epoch N's buffers.
+    let mut pool = BatchPool::default();
 
-    let val_batches = plan_epoch_batches(
-        &val_store,
+    let val_batches = val_store.plan_epoch_batches(
         mr.replica,
         mr.shape.replicas,
         dims,
-        cutoff,
         cfg.train.seed ^ VAL_SEED,
+        &mut pool,
     );
 
     for epoch in 0..cfg.train.epochs {
@@ -699,13 +749,12 @@ fn rank_loop_mtl_par(
         let mut acc = StepAccum::default();
 
         let t0 = Instant::now();
-        let batches = plan_epoch_batches(
-            &store,
+        let batches = store.plan_epoch_batches(
             mr.replica,
             mr.shape.replicas,
             dims,
-            cutoff,
             cfg.train.seed.wrapping_add(epoch as u64 * 7_777_777) ^ dataset.index() as u64,
+            &mut pool,
         );
         acc.data += t0.elapsed();
         let steps = agree_steps(&mr, batches.len());
@@ -736,6 +785,7 @@ fn rank_loop_mtl_par(
             opt_br.step(&mut branch, &br_g);
             acc.opt += t3.elapsed();
         }
+        pool.recycle(batches);
 
         assemble_full(&mut full, &encoder, &branch);
         let val_loss = distributed_val_loss(engine, &mr, &full, &val_batches)?;

@@ -4,10 +4,15 @@
 //! max_graphs); this module packs a list of structures into one padded
 //! batch whose field set matches `manifest.json["batch"]` exactly, and a
 //! greedy planner that splits a stream of structures into batches without
-//! overflowing any budget. This is the L3 side of the data hot path.
+//! overflowing any budget. This is the L3 side of the data hot path:
+//! batches come out of a [`BatchPool`] (buffer reuse via
+//! [`GraphBatch::clear`], no per-batch reallocation) and are marshalled to
+//! the runtime through [`GraphBatch::field_literal`], which reads the batch
+//! buffers in place instead of cloning them into intermediate tensors.
 
 use crate::data::graph::{radius_graph, Edge};
 use crate::data::structures::AtomicStructure;
+use crate::runtime::pjrt as xla;
 use crate::tensor::Tensor;
 
 /// Static batch geometry (mirrors python ModelConfig / manifest "config").
@@ -19,7 +24,7 @@ pub struct BatchDims {
 }
 
 /// One padded batch, laid out exactly as the artifacts expect.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GraphBatch {
     pub dims: BatchDims,
     pub species: Vec<i32>,      // [N]
@@ -116,7 +121,20 @@ impl GraphBatch {
         s: &AtomicStructure,
         edges: &[Edge],
     ) -> Result<(), BatchError> {
-        let natoms = s.natoms();
+        self.push_raw(&s.species, &s.forces, s.energy_per_atom(), edges)
+    }
+
+    /// Append one structure from raw field slices — the featurized-store
+    /// path, which packs cached flat arrays without materializing an
+    /// `AtomicStructure`. Float conversions are identical to [`Self::push`].
+    pub fn push_raw(
+        &mut self,
+        species: &[u8],
+        forces: &[[f64; 3]],
+        energy_per_atom: f64,
+        edges: &[Edge],
+    ) -> Result<(), BatchError> {
+        let natoms = species.len();
         if natoms > self.dims.max_nodes || edges.len() > self.dims.max_edges {
             return Err(BatchError::TooLarge {
                 natoms,
@@ -129,7 +147,7 @@ impl GraphBatch {
         }
         let base = self.n_nodes;
         let g = self.n_graphs;
-        for (i, (&z, f)) in s.species.iter().zip(&s.forces).enumerate() {
+        for (i, (&z, f)) in species.iter().zip(forces).enumerate() {
             let n = base + i;
             self.species[n] = z as i32;
             self.node_mask[n] = 1.0;
@@ -150,14 +168,15 @@ impl GraphBatch {
         }
         self.graph_mask[g] = 1.0;
         self.inv_atoms[g] = 1.0 / natoms as f32;
-        self.y_energy[g] = s.energy_per_atom() as f32;
+        self.y_energy[g] = energy_per_atom as f32;
         self.n_nodes += natoms;
         self.n_edges += edges.len();
         self.n_graphs += 1;
         Ok(())
     }
 
-    /// Tensor for a batch field by its manifest name.
+    /// Tensor for a batch field by its manifest name (owning copy; tests and
+    /// cold paths). The marshalling hot path uses [`Self::field_literal`].
     pub fn field(&self, name: &str) -> Tensor {
         let d = self.dims;
         match name {
@@ -176,21 +195,96 @@ impl GraphBatch {
             other => panic!("unknown batch field '{other}'"),
         }
     }
+
+    /// PJRT literal for a batch field by its manifest name, built straight
+    /// from the batch buffer — no intermediate `Tensor` clone. This is the
+    /// per-step marshal path (`Engine::marshal`).
+    pub fn field_literal(&self, name: &str) -> anyhow::Result<xla::Literal> {
+        let d = self.dims;
+        match name {
+            "species" => Tensor::literal_i32(&[d.max_nodes], &self.species),
+            "edge_src" => Tensor::literal_i32(&[d.max_edges], &self.edge_src),
+            "edge_dst" => Tensor::literal_i32(&[d.max_edges], &self.edge_dst),
+            "rel_hat" => Tensor::literal_f32(&[d.max_edges, 3], &self.rel_hat),
+            "dist" => Tensor::literal_f32(&[d.max_edges], &self.dist),
+            "node_mask" => Tensor::literal_f32(&[d.max_nodes], &self.node_mask),
+            "edge_mask" => Tensor::literal_f32(&[d.max_edges], &self.edge_mask),
+            "node_graph" => Tensor::literal_i32(&[d.max_nodes], &self.node_graph),
+            "graph_mask" => Tensor::literal_f32(&[d.max_graphs], &self.graph_mask),
+            "inv_atoms" => Tensor::literal_f32(&[d.max_graphs], &self.inv_atoms),
+            "y_energy" => Tensor::literal_f32(&[d.max_graphs], &self.y_energy),
+            "y_forces" => Tensor::literal_f32(&[d.max_nodes, 3], &self.y_forces),
+            other => anyhow::bail!("unknown batch field '{other}'"),
+        }
+    }
+}
+
+/// Recycles [`GraphBatch`] allocations through [`GraphBatch::clear`] so hot
+/// loops reuse batch buffers instead of paying `GraphBatch::empty`'s twelve
+/// allocations per batch. Batches are cleared on acquire (recycling is a
+/// plain move); acquiring from an empty pool falls back to a fresh batch,
+/// so pooled and unpooled paths produce identical contents.
+#[derive(Debug, Default)]
+pub struct BatchPool {
+    free: Vec<GraphBatch>,
+}
+
+impl BatchPool {
+    pub fn new() -> BatchPool {
+        BatchPool::default()
+    }
+
+    /// A cleared batch with the requested dims: recycled when available,
+    /// freshly allocated otherwise.
+    pub fn acquire(&mut self, dims: BatchDims) -> GraphBatch {
+        match self.free.iter().position(|b| b.dims == dims) {
+            Some(i) => {
+                let mut b = self.free.swap_remove(i);
+                b.clear();
+                b
+            }
+            None => GraphBatch::empty(dims),
+        }
+    }
+
+    /// Return batches to the pool for later reuse.
+    pub fn recycle(&mut self, batches: impl IntoIterator<Item = GraphBatch>) {
+        self.free.extend(batches);
+    }
+
+    /// Number of idle batches held.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
 }
 
 /// Greedy batch planner: converts a stream of structures into padded batches.
 /// Structures that would never fit (bigger than the whole budget) are
-/// reported in `skipped` rather than silently dropped.
+/// reported in `skipped` rather than silently dropped. Completed batches the
+/// caller is done with can be fed back via [`BatchBuilder::recycle`].
 pub struct BatchBuilder {
     pub dims: BatchDims,
     pub cutoff: f64,
     pub skipped: usize,
     current: GraphBatch,
+    pool: BatchPool,
 }
 
 impl BatchBuilder {
     pub fn new(dims: BatchDims, cutoff: f64) -> BatchBuilder {
-        BatchBuilder { dims, cutoff, skipped: 0, current: GraphBatch::empty(dims) }
+        BatchBuilder::with_pool(dims, cutoff, BatchPool::default())
+    }
+
+    /// Build with a pre-seeded pool of recycled batches (hot-loop reuse
+    /// across epochs / datasets).
+    pub fn with_pool(dims: BatchDims, cutoff: f64, mut pool: BatchPool) -> BatchBuilder {
+        let current = pool.acquire(dims);
+        BatchBuilder { dims, cutoff, skipped: 0, current, pool }
+    }
+
+    /// Feed finished batches back for buffer reuse.
+    pub fn recycle(&mut self, batches: impl IntoIterator<Item = GraphBatch>) {
+        self.pool.recycle(batches);
     }
 
     /// Add a structure; returns a completed batch when the current one
@@ -205,7 +299,7 @@ impl BatchBuilder {
             self.current.push(s, &edges).expect("fits() checked");
             None
         } else {
-            let full = std::mem::replace(&mut self.current, GraphBatch::empty(self.dims));
+            let full = std::mem::replace(&mut self.current, self.pool.acquire(self.dims));
             self.current.push(s, &edges).expect("fresh batch must fit");
             Some(full)
         }
@@ -216,7 +310,7 @@ impl BatchBuilder {
         if self.current.n_graphs == 0 {
             return None;
         }
-        Some(std::mem::replace(&mut self.current, GraphBatch::empty(self.dims)))
+        Some(std::mem::replace(&mut self.current, self.pool.acquire(self.dims)))
     }
 
     /// Batch an entire slice of structures.
@@ -323,10 +417,41 @@ mod tests {
         }
         batch.clear();
         let empty = GraphBatch::empty(dims());
-        assert_eq!(batch.species, empty.species);
-        assert_eq!(batch.node_mask, empty.node_mask);
-        assert_eq!(batch.edge_mask, empty.edge_mask);
-        assert_eq!(batch.n_nodes, 0);
+        assert_eq!(batch, empty, "clear() must fully restore the empty state");
+    }
+
+    #[test]
+    fn pooled_builder_matches_fresh_allocation() {
+        let ss = structures(30);
+        let fresh = BatchBuilder::build_all(dims(), 6.0, &ss);
+
+        // Dirty pool: recycle a first pass's batches, then rebuild through
+        // the pooled path — contents must be bit-identical.
+        let mut pool = BatchPool::new();
+        pool.recycle(BatchBuilder::build_all(dims(), 6.0, &ss));
+        assert!(pool.pooled() > 0);
+        let mut builder = BatchBuilder::with_pool(dims(), 6.0, pool);
+        let mut pooled = Vec::new();
+        for s in &ss {
+            if let Some(b) = builder.push(s) {
+                pooled.push(b);
+            }
+        }
+        pooled.extend(builder.finish());
+        assert_eq!(pooled, fresh);
+    }
+
+    #[test]
+    fn pool_reuses_matching_dims_only() {
+        let mut pool = BatchPool::new();
+        pool.recycle([GraphBatch::empty(dims())]);
+        let other = BatchDims { max_nodes: 16, max_edges: 64, max_graphs: 2 };
+        let b = pool.acquire(other);
+        assert_eq!(b.dims, other);
+        assert_eq!(pool.pooled(), 1, "mismatched dims stay pooled");
+        let b2 = pool.acquire(dims());
+        assert_eq!(b2.dims, dims());
+        assert_eq!(pool.pooled(), 0);
     }
 
     #[test]
@@ -352,5 +477,34 @@ mod tests {
         assert_eq!(b.field("rel_hat").shape, vec![512, 3]);
         assert_eq!(b.field("y_forces").shape, vec![64, 3]);
         assert_eq!(b.field("graph_mask").shape, vec![8]);
+    }
+
+    #[test]
+    fn field_literal_matches_field_tensor_route() {
+        let batches = BatchBuilder::build_all(dims(), 6.0, &structures(5));
+        let b = &batches[0];
+        for name in [
+            "species", "edge_src", "edge_dst", "rel_hat", "dist", "node_mask",
+            "edge_mask", "node_graph", "graph_mask", "inv_atoms", "y_energy", "y_forces",
+        ] {
+            let via_tensor = b.field(name).to_literal().unwrap();
+            let direct = b.field_literal(name).unwrap();
+            let (sa, sb) = (via_tensor.array_shape().unwrap(), direct.array_shape().unwrap());
+            assert_eq!(sa.dims(), sb.dims(), "{name}: dims");
+            assert_eq!(sa.ty(), sb.ty(), "{name}: dtype");
+            match sa.ty() {
+                xla::ElementType::F32 => assert_eq!(
+                    via_tensor.to_vec::<f32>().unwrap(),
+                    direct.to_vec::<f32>().unwrap(),
+                    "{name}: payload"
+                ),
+                _ => assert_eq!(
+                    via_tensor.to_vec::<i32>().unwrap(),
+                    direct.to_vec::<i32>().unwrap(),
+                    "{name}: payload"
+                ),
+            }
+        }
+        assert!(b.field_literal("nope").is_err());
     }
 }

@@ -3,11 +3,11 @@
 //! In HydraGNN, DDStore keeps every sample resident in the aggregate memory
 //! of all MPI processes and serves remote batches with one-sided MPI gets so
 //! epochs never touch the filesystem. Here the "processes" are the trainer's
-//! rank threads; ownership is round-robin by global index, local reads are
-//! free, and remote reads clone the sample from the owner's shard through a
-//! shared `Arc` (the in-process analogue of an RMA get) while counting
-//! local/remote traffic so the scaling model and tests can observe the
-//! access pattern.
+//! rank threads; ownership is round-robin by global index. [`DDStore::with`]
+//! borrows the owner's shard directly on local hits (truly free) and pays
+//! the RMA-style clone only on remote hits; [`DDStore::get`] is the
+//! clone-always compatibility path. Both count local/remote traffic so the
+//! scaling model and tests can observe the access pattern.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -63,19 +63,54 @@ impl DDStore {
         self.shards[rank].len()
     }
 
-    /// Fetch a sample by global index from the perspective of `rank`.
-    /// Local hits borrow the owner's shard directly; remote hits count as
-    /// one-sided gets (and clone, like an RMA transfer would).
+    /// Fetch a sample by global index from the perspective of `rank`,
+    /// always returning an owned clone. The training hot path avoids
+    /// per-sample access entirely (`FeaturizedStore` serves epoch planning
+    /// from flat caches); callers that do need samples without paying the
+    /// local-hit clone should use [`DDStore::with`] instead.
     pub fn get(&self, rank: usize, global: usize) -> Option<AtomicStructure> {
         let owner = self.owner(global);
         let slot = global / self.shards.len();
         let sample = self.shards[owner].get(slot)?;
+        self.note_access(rank, global);
+        Some(sample.clone())
+    }
+
+    /// Visit a sample by global index from the perspective of `rank`
+    /// without paying the RMA-style clone on local hits: the owner's shard
+    /// is borrowed directly. Remote hits still clone first (the in-process
+    /// analogue of a one-sided MPI get), so only remote traffic pays.
+    pub fn with<R>(
+        &self,
+        rank: usize,
+        global: usize,
+        f: impl FnOnce(&AtomicStructure) -> R,
+    ) -> Option<R> {
+        let owner = self.owner(global);
+        let sample = self.shards[owner].get(global / self.shards.len())?;
         if owner == rank {
+            self.local_gets.fetch_add(1, Ordering::Relaxed);
+            Some(f(sample))
+        } else {
+            self.remote_gets.fetch_add(1, Ordering::Relaxed);
+            let transferred = sample.clone();
+            Some(f(&transferred))
+        }
+    }
+
+    /// Uncounted borrow by global index: the build-time featurization pass
+    /// (`FeaturizedStore::build`), which is not epoch traffic.
+    pub fn peek(&self, global: usize) -> Option<&AtomicStructure> {
+        self.shards[self.owner(global)].get(global / self.shards.len())
+    }
+
+    /// Count one access without materializing the sample.
+    fn note_access(&self, rank: usize, global: usize) {
+        if self.owner(global) == rank {
             self.local_gets.fetch_add(1, Ordering::Relaxed);
         } else {
             self.remote_gets.fetch_add(1, Ordering::Relaxed);
         }
-        Some(sample.clone())
     }
 
     /// Zero-copy access to a rank's own shard (epoch iteration fast path).
@@ -138,6 +173,47 @@ mod tests {
         let store = DDStore::new(samples(5), 2);
         assert!(store.get(0, 5).is_none());
         assert!(store.get(0, 4).is_some());
+    }
+
+    #[test]
+    fn with_borrows_local_hits_and_clones_remote() {
+        let ss = samples(9);
+        let store = DDStore::new(ss.clone(), 3);
+        for (g, expect) in ss.iter().enumerate() {
+            let owner = store.owner(g);
+            // Local access: the closure sees the shard's sample in place.
+            let shard_ptr = store.peek(g).unwrap() as *const AtomicStructure as usize;
+            let seen_ptr = store
+                .with(owner, g, |s| {
+                    assert_eq!(s, expect);
+                    s as *const AtomicStructure as usize
+                })
+                .unwrap();
+            assert_eq!(seen_ptr, shard_ptr, "local hit must borrow, not clone");
+            // Remote access: a transferred copy, same contents.
+            let remote_rank = (owner + 1) % 3;
+            let remote_ptr = store
+                .with(remote_rank, g, |s| {
+                    assert_eq!(s, expect);
+                    s as *const AtomicStructure as usize
+                })
+                .unwrap();
+            assert_ne!(remote_ptr, shard_ptr, "remote hit pays the RMA-style clone");
+        }
+        let (local, remote) = store.stats();
+        assert_eq!(local, 9);
+        assert_eq!(remote, 9);
+        assert!(store.with(0, ss.len(), |_| ()).is_none());
+    }
+
+    #[test]
+    fn peek_is_uncounted() {
+        let store = DDStore::new(samples(5), 2);
+        for g in 0..5 {
+            assert!(store.peek(g).is_some());
+        }
+        assert!(store.peek(5).is_none());
+        assert_eq!(store.stats(), (0, 0), "peek must not count as traffic");
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Featurize-once data pipeline (the HydraGNN-at-exascale lesson: keep every
+//! rank's data path cheap enough that the accelerator heads stay busy).
+//!
+//! The seed training loop re-ran `radius_graph` for every structure on every
+//! rank in every epoch. A [`FeaturizedStore`] runs it exactly once per
+//! structure at bundle-build time — in parallel across shards with scoped
+//! threads — and caches `(edges, species, forces, energy)` in flat
+//! contiguous arrays. Warm-epoch planning then only shuffles indices and
+//! packs cached slices into pooled batches ([`crate::data::batch::BatchPool`]),
+//! performing **zero** graph constructions (asserted against
+//! [`crate::data::graph::radius_graph_call_count`] in tests).
+//!
+//! Output parity: epoch batches are bit-identical to the seed
+//! re-featurize-every-epoch path (kept as
+//! `coordinator::trainer::plan_epoch_batches_reference`), proven in
+//! `rust/tests/integration_featurized.rs`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::data::batch::{BatchDims, BatchPool, GraphBatch};
+use crate::data::ddstore::DDStore;
+use crate::data::graph::{radius_graph, Edge};
+use crate::util::rng::Rng;
+
+/// Immutable edge/field cache built from a [`DDStore`] once per training
+/// run and shared by every rank thread. The source store is NOT retained:
+/// only the round-robin world size (ownership arithmetic) and the flat
+/// caches survive, so the caller can drop the `DDStore` — and the sample
+/// copy inside it — as soon as `build` returns.
+pub struct FeaturizedStore {
+    /// Round-robin world size of the source store (owner = index % world).
+    world: usize,
+    cutoff: f64,
+    /// Edges of structure `i` live at `edges[edge_off[i]..edge_off[i+1]]`.
+    edge_off: Vec<usize>,
+    edges: Vec<Edge>,
+    /// Nodes of structure `i` live at `node_off[i]..node_off[i+1]` in
+    /// `species` / `forces`.
+    node_off: Vec<usize>,
+    species: Vec<u8>,
+    forces: Vec<[f64; 3]>,
+    /// Labeled total energy per structure.
+    energy: Vec<f64>,
+    /// Planned-access locality counters — the in-process analogue of
+    /// DDStore's one-sided-get stats, kept here because the cache serves
+    /// epoch reads without touching the samples.
+    local_gets: AtomicU64,
+    remote_gets: AtomicU64,
+}
+
+impl FeaturizedStore {
+    /// Featurize every sample of `store` exactly once, fanning the
+    /// `radius_graph` work out over scoped worker threads. Workers produce
+    /// per-structure edge lists in index order, so the flat layout (and
+    /// everything downstream) is deterministic regardless of thread count.
+    pub fn build(store: Arc<DDStore>, cutoff: f64) -> Arc<FeaturizedStore> {
+        let n = store.len();
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .clamp(1, n.max(1));
+        let chunk = n.div_ceil(workers);
+        let per: Vec<Vec<Edge>> = std::thread::scope(|scope| {
+            let store = &store;
+            let mut handles = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let start = w * chunk;
+                let end = (start + chunk).min(n);
+                handles.push(scope.spawn(move || {
+                    (start..end)
+                        .map(|g| {
+                            let s = store.peek(g).expect("global index in range");
+                            radius_graph(s, cutoff)
+                        })
+                        .collect::<Vec<_>>()
+                }));
+            }
+            let mut all = Vec::with_capacity(n);
+            for h in handles {
+                all.extend(h.join().expect("featurize worker panicked"));
+            }
+            all
+        });
+
+        let total_edges: usize = per.iter().map(|e| e.len()).sum();
+        let mut edge_off = Vec::with_capacity(n + 1);
+        let mut node_off = Vec::with_capacity(n + 1);
+        let mut edges = Vec::with_capacity(total_edges);
+        let mut species = Vec::new();
+        let mut forces = Vec::new();
+        let mut energy = Vec::with_capacity(n);
+        edge_off.push(0);
+        node_off.push(0);
+        for (g, es) in per.into_iter().enumerate() {
+            let s = store.peek(g).expect("global index in range");
+            edges.extend(es);
+            edge_off.push(edges.len());
+            species.extend_from_slice(&s.species);
+            forces.extend_from_slice(&s.forces);
+            node_off.push(species.len());
+            energy.push(s.energy);
+        }
+        Arc::new(FeaturizedStore {
+            world: store.world(),
+            cutoff,
+            edge_off,
+            edges,
+            node_off,
+            species,
+            forces,
+            energy,
+            local_gets: AtomicU64::new(0),
+            remote_gets: AtomicU64::new(0),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.energy.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.energy.is_empty()
+    }
+
+    /// The cutoff the cached graphs were built with.
+    pub fn cutoff(&self) -> f64 {
+        self.cutoff
+    }
+
+    /// (local, remote) planned-access counters since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.local_gets.load(Ordering::Relaxed), self.remote_gets.load(Ordering::Relaxed))
+    }
+
+    pub fn natoms(&self, i: usize) -> usize {
+        self.node_off[i + 1] - self.node_off[i]
+    }
+
+    pub fn nedges(&self, i: usize) -> usize {
+        self.edge_off[i + 1] - self.edge_off[i]
+    }
+
+    pub fn edges(&self, i: usize) -> &[Edge] {
+        &self.edges[self.edge_off[i]..self.edge_off[i + 1]]
+    }
+
+    pub fn species(&self, i: usize) -> &[u8] {
+        &self.species[self.node_off[i]..self.node_off[i + 1]]
+    }
+
+    pub fn forces(&self, i: usize) -> &[[f64; 3]] {
+        &self.forces[self.node_off[i]..self.node_off[i + 1]]
+    }
+
+    /// Same value the seed path computed via
+    /// [`crate::data::structures::AtomicStructure::energy_per_atom`].
+    pub fn energy_per_atom(&self, i: usize) -> f64 {
+        self.energy[i] / self.natoms(i) as f64
+    }
+
+    /// Plan one rank's padded batches for an epoch from its slice of the
+    /// shuffled global index list (identical shuffle on every rank, same as
+    /// the seed planner) — but packing cached edge/field slices into pooled
+    /// batches instead of re-featurizing every structure. Zero
+    /// `radius_graph` calls; locality is still recorded on [`Self::stats`]
+    /// so the access pattern stays observable to the scaling model.
+    pub fn plan_epoch_batches(
+        &self,
+        rank_in_group: usize,
+        group_size: usize,
+        dims: BatchDims,
+        epoch_seed: u64,
+        pool: &mut BatchPool,
+    ) -> Vec<GraphBatch> {
+        let n = self.len();
+        let mut indices: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(epoch_seed);
+        rng.shuffle(&mut indices);
+        let mut batches = Vec::new();
+        let mut current = pool.acquire(dims);
+        for idx in indices.into_iter().skip(rank_in_group).step_by(group_size) {
+            if idx % self.world == rank_in_group {
+                self.local_gets.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.remote_gets.fetch_add(1, Ordering::Relaxed);
+            }
+            let natoms = self.natoms(idx);
+            let nedges = self.nedges(idx);
+            if natoms > dims.max_nodes || nedges > dims.max_edges {
+                // Same skip rule as the seed BatchBuilder: structures that
+                // can never fit are dropped from the epoch.
+                continue;
+            }
+            if !current.fits(natoms, nedges) {
+                batches.push(std::mem::replace(&mut current, pool.acquire(dims)));
+            }
+            current
+                .push_raw(
+                    self.species(idx),
+                    self.forces(idx),
+                    self.energy_per_atom(idx),
+                    self.edges(idx),
+                )
+                .expect("fits() checked");
+        }
+        if current.n_graphs > 0 {
+            batches.push(current);
+        } else {
+            pool.recycle([current]);
+        }
+        batches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{DatasetGenerator, GeneratorConfig};
+    use crate::data::structures::{AtomicStructure, DatasetId};
+
+    fn samples(n: usize) -> Vec<AtomicStructure> {
+        let mut g = DatasetGenerator::new(
+            DatasetId::Qm7x,
+            21,
+            GeneratorConfig { max_atoms: 12, ..Default::default() },
+        );
+        g.take(n)
+    }
+
+    #[test]
+    fn cached_fields_match_the_source_samples() {
+        let ss = samples(17);
+        let store = DDStore::new(ss.clone(), 3);
+        let fs = FeaturizedStore::build(store, 6.0);
+        assert_eq!(fs.len(), ss.len());
+        for (i, s) in ss.iter().enumerate() {
+            assert_eq!(fs.natoms(i), s.natoms(), "sample {i}");
+            assert_eq!(fs.species(i), &s.species[..], "sample {i}");
+            assert_eq!(fs.forces(i), &s.forces[..], "sample {i}");
+            assert_eq!(fs.energy_per_atom(i), s.energy_per_atom(), "sample {i}");
+            assert_eq!(fs.edges(i), &radius_graph(s, 6.0)[..], "sample {i}");
+        }
+    }
+
+    #[test]
+    fn empty_store_plans_no_batches() {
+        let fs = FeaturizedStore::build(DDStore::new(Vec::new(), 2), 6.0);
+        assert!(fs.is_empty());
+        let dims = BatchDims { max_nodes: 16, max_edges: 128, max_graphs: 4 };
+        let mut pool = BatchPool::new();
+        assert!(fs.plan_epoch_batches(0, 2, dims, 1, &mut pool).is_empty());
+        assert_eq!(pool.pooled(), 1, "the unused scratch batch is recycled");
+    }
+
+    #[test]
+    fn oversized_structures_are_skipped_like_the_seed_builder() {
+        let ss = samples(12);
+        let fs = FeaturizedStore::build(DDStore::new(ss.clone(), 1), 6.0);
+        let tiny = BatchDims { max_nodes: 4, max_edges: 8, max_graphs: 2 };
+        let mut pool = BatchPool::new();
+        let batches = fs.plan_epoch_batches(0, 1, tiny, 5, &mut pool);
+        let packed: usize = batches.iter().map(|b| b.n_graphs).sum();
+        let fitting = ss
+            .iter()
+            .filter(|s| s.natoms() <= 4 && radius_graph(s, 6.0).len() <= 8)
+            .count();
+        assert_eq!(packed, fitting);
+    }
+}

@@ -1,10 +1,12 @@
 //! Data substrate: structures, ground-truth potential, fidelity transforms,
 //! the five synthetic dataset generators, radius graphs, padded batching,
 //! the GPack packed file format (ADIOS substitute), the DDStore distributed
-//! sample store, and deterministic splits.
+//! sample store, the featurize-once `FeaturizedStore` cache that warm
+//! epochs plan from, and deterministic splits.
 
 pub mod batch;
 pub mod ddstore;
+pub mod featurized;
 pub mod fidelity;
 pub mod generators;
 pub mod graph;
@@ -13,6 +15,7 @@ pub mod potential;
 pub mod split;
 pub mod structures;
 
-pub use batch::{BatchBuilder, BatchDims, GraphBatch};
+pub use batch::{BatchBuilder, BatchDims, BatchPool, GraphBatch};
 pub use ddstore::DDStore;
+pub use featurized::FeaturizedStore;
 pub use structures::{AtomicStructure, DatasetId, ALL_DATASETS};

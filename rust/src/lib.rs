@@ -18,6 +18,28 @@
 //! `artifacts/*.hlo.txt` through the PJRT CPU client (`pjrt` feature) and is
 //! self-contained afterwards.
 //!
+//! ## The featurize-once data path
+//!
+//! Training data flows generate -> featurize -> plan -> marshal, and each
+//! stage pays its cost exactly once:
+//!
+//! - [`coordinator::trainer::DataBundle::generate`] fans dataset generation
+//!   out over scoped threads (independent RNG streams per task, bit-identical
+//!   to the serial path).
+//! - [`data::FeaturizedStore`] runs `radius_graph` once per structure at
+//!   bundle-build time (in parallel across shards) and caches edges + node
+//!   fields in flat arrays; warm-epoch planning only shuffles indices and
+//!   packs cached slices — zero graph constructions after epoch one.
+//! - [`data::BatchPool`] recycles `GraphBatch` buffers across epochs instead
+//!   of reallocating per batch.
+//! - `GraphBatch::field_literal` marshals batch fields to the runtime in
+//!   place — no per-step clones into intermediate tensors.
+//!
+//! Every stage is bit-identical to the seed pipeline (same batches, same
+//! order, same losses), proven by the parity tests in
+//! `rust/tests/integration_featurized.rs`; `cargo bench --bench hot_paths`
+//! tracks the speedups in `BENCH_hot_paths.json` (see EXPERIMENTS.md §Perf).
+//!
 //! ## The Session API
 //!
 //! The full lifecycle — load artifacts, generate multi-source data, train

@@ -136,7 +136,9 @@ impl Engine {
     }
 
     /// Assemble the input literal list for an artifact from a parameter set
-    /// plus a padded batch (name-driven; order from the manifest).
+    /// plus a padded batch (name-driven; order from the manifest). Batch
+    /// fields are marshalled in place via `GraphBatch::field_literal` — no
+    /// per-step buffer clones into intermediate tensors.
     pub fn marshal(
         &self,
         name: &str,
@@ -150,7 +152,7 @@ impl Engine {
                 debug_assert_eq!(t.shape, meta.shape, "{}", meta.name);
                 t.to_literal()?
             } else {
-                batch.field(&meta.name).to_literal()?
+                batch.field_literal(&meta.name)?
             };
             out.push(lit);
         }
@@ -254,7 +256,7 @@ impl Engine {
             {
                 t.to_literal()?
             } else {
-                batch.field(&meta.name).to_literal()?
+                batch.field_literal(&meta.name)?
             };
             inputs.push(lit);
         }

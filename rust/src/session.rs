@@ -269,7 +269,9 @@ pub struct Prediction {
 /// correct MTL head, auto-packs/pads groups into the compiled batch dims,
 /// and unpads the outputs back into per-structure [`Prediction`]s. Replaces
 /// the seed's manual `BatchBuilder` + `full_params` + `engine.forward`
-/// plumbing.
+/// plumbing. The single packing batch is recycled via `GraphBatch::clear`
+/// and marshalled in place (`GraphBatch::field_literal`), so serving pays
+/// no per-call buffer clones.
 pub struct Predictor {
     engine: Arc<Engine>,
     model: TrainedModel,

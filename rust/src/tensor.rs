@@ -112,12 +112,27 @@ impl Tensor {
 
     /// Convert to an xla literal for PJRT execution.
     pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        let lit = match &self.data {
-            TensorData::F32(v) => xla::Literal::vec1(v),
-            TensorData::I32(v) => xla::Literal::vec1(v),
-        };
-        Ok(lit.reshape(&dims)?)
+        match &self.data {
+            TensorData::F32(v) => Self::literal_f32(&self.shape, v),
+            TensorData::I32(v) => Self::literal_i32(&self.shape, v),
+        }
+    }
+
+    /// Literal built directly from a borrowed f32 slice: the zero-clone
+    /// marshal path. Callers (e.g. `GraphBatch::field_literal`) hand their
+    /// buffers in place instead of cloning them into an owning `Tensor`
+    /// first; the only copy left is the one into the literal itself.
+    pub fn literal_f32(shape: &[usize], data: &[f32]) -> anyhow::Result<xla::Literal> {
+        anyhow::ensure!(numel(shape) == data.len(), "shape/data mismatch");
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    /// i32 counterpart of [`Self::literal_f32`].
+    pub fn literal_i32(shape: &[usize], data: &[i32]) -> anyhow::Result<xla::Literal> {
+        anyhow::ensure!(numel(shape) == data.len(), "shape/data mismatch");
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
     }
 
     /// Build from an xla literal (f32 or i32 arrays).
@@ -207,6 +222,24 @@ mod tests {
         let ti = Tensor::from_i32(&[2, 1], vec![7, -9]);
         let backi = Tensor::from_json(&ti.to_json()).unwrap();
         assert_eq!(ti, backi);
+    }
+
+    #[test]
+    fn literal_from_slice_matches_owned_route() {
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let owned = t.to_literal().unwrap();
+        let borrowed = Tensor::literal_f32(&[2, 2], t.as_f32()).unwrap();
+        assert_eq!(
+            owned.array_shape().unwrap().dims(),
+            borrowed.array_shape().unwrap().dims()
+        );
+        assert_eq!(owned.to_vec::<f32>().unwrap(), borrowed.to_vec::<f32>().unwrap());
+
+        let i = Tensor::literal_i32(&[3], &[7, 8, 9]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+
+        assert!(Tensor::literal_f32(&[3], &[1.0]).is_err());
+        assert!(Tensor::literal_i32(&[2, 2], &[1]).is_err());
     }
 
     #[test]

@@ -6,6 +6,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
+
 #[derive(Debug, Clone)]
 pub struct BenchStats {
     pub name: String,
@@ -27,6 +29,36 @@ impl BenchStats {
     pub fn mean_secs(&self) -> f64 {
         self.mean.as_secs_f64()
     }
+
+    /// Machine-readable form for `BENCH_*.json` artifacts (EXPERIMENTS.md
+    /// §Perf): op name, ns/iter, throughput.
+    pub fn to_json(&self) -> Json {
+        let ns = self.mean.as_secs_f64() * 1e9;
+        Json::obj(vec![
+            ("op", Json::str(self.name.clone())),
+            ("iters", Json::Int(self.iters as i64)),
+            ("ns_per_iter", Json::Float(ns)),
+            ("p50_ns", Json::Float(self.p50.as_secs_f64() * 1e9)),
+            ("p95_ns", Json::Float(self.p95.as_secs_f64() * 1e9)),
+            ("min_ns", Json::Float(self.min.as_secs_f64() * 1e9)),
+            ("throughput_per_sec", Json::Float(if ns > 0.0 { 1e9 / ns } else { 0.0 })),
+        ])
+    }
+}
+
+/// Write a bench suite's stats as a machine-readable JSON artifact (e.g.
+/// `BENCH_hot_paths.json`). CI uploads the file; EXPERIMENTS.md §Perf
+/// tracks the trajectory across PRs.
+pub fn write_bench_json(
+    path: impl AsRef<std::path::Path>,
+    suite: &str,
+    stats: &[BenchStats],
+) -> std::io::Result<()> {
+    let doc = Json::obj(vec![
+        ("suite", Json::str(suite)),
+        ("results", Json::Array(stats.iter().map(BenchStats::to_json).collect())),
+    ]);
+    std::fs::write(path, format!("{doc}\n"))
 }
 
 /// Benchmark `f`, spending roughly `budget` of wall clock after `warmup`
@@ -115,6 +147,25 @@ mod tests {
             std::hint::black_box(2 * 2);
         });
         assert!(s.iters >= 5);
+    }
+
+    #[test]
+    fn bench_json_roundtrips_and_has_the_schema() {
+        let s = bench_n("op_a", 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        let path = std::env::temp_dir()
+            .join(format!("hydra_bench_json_{}.json", std::process::id()));
+        write_bench_json(&path, "unit", &[s]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("suite").as_str(), Some("unit"));
+        let r = j.get("results").idx(0);
+        assert_eq!(r.get("op").as_str(), Some("op_a"));
+        assert_eq!(r.get("iters").as_i64(), Some(5));
+        assert!(r.get("ns_per_iter").as_f64().unwrap() >= 0.0);
+        assert!(r.get("throughput_per_sec").as_f64().is_some());
     }
 
     #[test]

@@ -1,0 +1,52 @@
+//! Featurize-once accounting, isolated in its own test binary: the
+//! radius-graph call counter is process-global, and any other test running
+//! concurrently in the same process would bump it. Keep this file to this
+//! single test.
+
+use hydra_mtp::data::batch::{BatchDims, BatchPool};
+use hydra_mtp::data::featurized::FeaturizedStore;
+use hydra_mtp::data::generators::{DatasetGenerator, GeneratorConfig};
+use hydra_mtp::data::graph::radius_graph_call_count;
+use hydra_mtp::data::structures::DatasetId;
+use hydra_mtp::data::DDStore;
+
+#[test]
+fn warm_epoch_planning_performs_zero_radius_graph_calls() {
+    let mut g = DatasetGenerator::new(
+        DatasetId::Ani1x,
+        11,
+        GeneratorConfig { max_atoms: 12, ..Default::default() },
+    );
+    let ss = g.take(40);
+    let n = ss.len() as u64;
+    let store = DDStore::new(ss, 2);
+
+    // Build featurizes every structure exactly once (across worker threads).
+    let c0 = radius_graph_call_count();
+    let fstore = FeaturizedStore::build(store, 6.0);
+    let c1 = radius_graph_call_count();
+    assert_eq!(c1 - c0, n, "featurize-once: exactly one graph per structure");
+
+    // Every later epoch, on every rank, is pure shuffle + pack: the counter
+    // must not move.
+    let dims = BatchDims { max_nodes: 64, max_edges: 512, max_graphs: 8 };
+    let mut pool = BatchPool::new();
+    let mut planned = 0usize;
+    for rank in 0..2 {
+        for epoch in 0..3u64 {
+            let batches =
+                fstore.plan_epoch_batches(rank, 2, dims, 1_000 + epoch, &mut pool);
+            planned += batches.iter().map(|b| b.n_graphs).sum::<usize>();
+            pool.recycle(batches);
+        }
+    }
+    assert_eq!(planned as u64, 3 * n, "every sample reaches a batch each epoch");
+    assert_eq!(
+        radius_graph_call_count(),
+        c1,
+        "warm epoch planning must never re-featurize"
+    );
+    assert!(pool.pooled() > 0, "epoch batches are recycled through the pool");
+    let (local, remote) = fstore.stats();
+    assert_eq!(local + remote, 3 * n, "every planned access is counted");
+}

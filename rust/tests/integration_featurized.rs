@@ -1,0 +1,170 @@
+//! Integration: the featurize-once, zero-copy data pipeline must be
+//! bit-identical to the seed path — same edges, same batches, same order —
+//! across the grid/dense radius-graph rewrite, the cached epoch planner,
+//! pooled batch reuse, and parallel data generation.
+
+use hydra_mtp::config::RunConfig;
+use hydra_mtp::coordinator::trainer::{plan_epoch_batches_reference, DataBundle};
+use hydra_mtp::data::batch::{BatchDims, BatchPool};
+use hydra_mtp::data::featurized::FeaturizedStore;
+use hydra_mtp::data::generators::{DatasetGenerator, GeneratorConfig};
+use hydra_mtp::data::graph::{
+    radius_graph_brute, radius_graph_positions, radius_graph_positions_reference,
+};
+use hydra_mtp::data::structures::{AtomicStructure, DatasetId, ALL_DATASETS};
+use hydra_mtp::data::DDStore;
+use hydra_mtp::util::rng::Rng;
+
+fn mixed_samples(n_per: usize, max_atoms: usize) -> Vec<AtomicStructure> {
+    let mut out = Vec::new();
+    for d in [DatasetId::Ani1x, DatasetId::MpTrj, DatasetId::Qm7x] {
+        let mut g = DatasetGenerator::new(
+            d,
+            13,
+            GeneratorConfig { max_atoms, ..Default::default() },
+        );
+        out.extend(g.take(n_per));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// radius graph: dense / flat-grid / hashed-fallback vs the oracles
+// ---------------------------------------------------------------------------
+
+#[test]
+fn radius_graph_matches_brute_and_seed_on_random_clouds() {
+    let mut rng = Rng::new(101);
+    for trial in 0..25 {
+        let n = rng.int_range(2, 180);
+        let span = rng.range(2.0, 30.0);
+        let cutoff = rng.range(1.5, 7.0);
+        // Include negative coordinates: centre the cloud away from zero.
+        let shift = rng.range(-50.0, 10.0);
+        let pos: Vec<[f64; 3]> = (0..n)
+            .map(|_| {
+                [
+                    shift + rng.range(0.0, span),
+                    shift + rng.range(0.0, span),
+                    shift + rng.range(0.0, span),
+                ]
+            })
+            .collect();
+        let fast = radius_graph_positions(&pos, cutoff);
+        assert_eq!(fast, radius_graph_brute(&pos, cutoff), "brute, trial {trial} n={n}");
+        assert_eq!(
+            fast,
+            radius_graph_positions_reference(&pos, cutoff),
+            "seed reference, trial {trial} n={n}"
+        );
+    }
+}
+
+#[test]
+fn radius_graph_handles_degenerate_geometry() {
+    // All atoms coincident: every pair is under the self-overlap guard.
+    for n in [2usize, 3, 49, 120] {
+        let dup = vec![[-3.5, 0.25, 7.0]; n];
+        assert!(radius_graph_positions(&dup, 4.0).is_empty(), "n={n}");
+    }
+    // Pairs at exactly the cutoff boundary and slightly inside/outside.
+    let pos = vec![[0.0, 0.0, 0.0], [4.0, 0.0, 0.0], [8.1, 0.0, 0.0]];
+    let edges = radius_graph_positions(&pos, 4.0);
+    assert_eq!(edges, radius_graph_brute(&pos, 4.0));
+    // Planar and collinear degenerate grids, above the dense cutover.
+    let plane: Vec<[f64; 3]> = (0..120)
+        .map(|i| [(i % 12) as f64 * 1.1, (i / 12) as f64 * 1.1, 0.0])
+        .collect();
+    assert_eq!(radius_graph_positions(&plane, 2.5), radius_graph_brute(&plane, 2.5));
+    let line: Vec<[f64; 3]> = (0..90).map(|i| [0.0, 0.0, i as f64 * 0.8]).collect();
+    assert_eq!(radius_graph_positions(&line, 2.0), radius_graph_brute(&line, 2.0));
+}
+
+#[test]
+fn radius_graph_sparse_fallback_matches() {
+    // Enormous bounding box vs tiny cutoff: the flat grid would need far
+    // more cells than the cap allows, forcing the hashed fallback.
+    let mut rng = Rng::new(55);
+    let pos: Vec<[f64; 3]> = (0..120)
+        .map(|_| {
+            [
+                rng.range(-4000.0, 4000.0),
+                rng.range(-4000.0, 4000.0),
+                rng.range(-4000.0, 4000.0),
+            ]
+        })
+        .collect();
+    let fast = radius_graph_positions(&pos, 1.8);
+    assert_eq!(fast, radius_graph_brute(&pos, 1.8));
+    assert_eq!(fast, radius_graph_positions_reference(&pos, 1.8));
+}
+
+// ---------------------------------------------------------------------------
+// epoch planning: cached path vs seed refeaturize path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn featurized_epoch_batches_are_bit_identical_to_the_seed_planner() {
+    let ss = mixed_samples(20, 12);
+    let world = 3;
+    let dims = BatchDims { max_nodes: 96, max_edges: 768, max_graphs: 6 };
+    let cutoff = 6.0;
+    let store = DDStore::new(ss, world);
+    let fstore = FeaturizedStore::build(std::sync::Arc::clone(&store), cutoff);
+
+    let mut pool = BatchPool::new();
+    for rank in 0..world {
+        for epoch_seed in [9u64, 777, 0xDEAD_BEEF] {
+            let reference =
+                plan_epoch_batches_reference(&store, rank, world, dims, cutoff, epoch_seed);
+            let cached =
+                fstore.plan_epoch_batches(rank, world, dims, epoch_seed, &mut pool);
+            assert_eq!(
+                cached, reference,
+                "rank {rank} seed {epoch_seed}: cached planner must be bit-identical"
+            );
+            // Second pass through a now-dirty pool: reuse must not leak
+            // state from the previous epoch into the next one's batches.
+            let pooled_again =
+                fstore.plan_epoch_batches(rank, world, dims, epoch_seed, &mut pool);
+            assert_eq!(pooled_again, reference, "pooled reuse changed the batches");
+            pool.recycle(cached);
+            pool.recycle(pooled_again);
+        }
+    }
+}
+
+#[test]
+fn featurized_planner_skips_oversized_structures_like_the_seed() {
+    let ss = mixed_samples(15, 20);
+    let store = DDStore::new(ss, 2);
+    let fstore = FeaturizedStore::build(std::sync::Arc::clone(&store), 6.0);
+    // Budget small enough that some crystals cannot fit at all.
+    let dims = BatchDims { max_nodes: 10, max_edges: 80, max_graphs: 4 };
+    let mut pool = BatchPool::new();
+    for rank in 0..2 {
+        let reference = plan_epoch_batches_reference(&store, rank, 2, dims, 6.0, 31);
+        let cached = fstore.plan_epoch_batches(rank, 2, dims, 31, &mut pool);
+        assert_eq!(cached, reference, "rank {rank}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parallel data generation vs the serial seed path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parallel_databundle_generation_is_bit_identical_to_serial() {
+    let mut cfg = RunConfig::default().data;
+    cfg.per_dataset = 40;
+    cfg.max_atoms = 10;
+    let parallel = DataBundle::generate(&cfg, &ALL_DATASETS);
+    let serial = DataBundle::generate_serial(&cfg, &ALL_DATASETS);
+    assert_eq!(parallel.train, serial.train, "train split diverged");
+    assert_eq!(parallel.val, serial.val, "val split diverged");
+    assert_eq!(parallel.test, serial.test, "test split diverged");
+    // And the split actually contains data for every task.
+    for d in ALL_DATASETS {
+        assert!(!parallel.train[&d].is_empty(), "{}", d.name());
+    }
+}

@@ -170,6 +170,30 @@ fn comm_payloads_match_paper_claims() {
 }
 
 #[test]
+fn training_loss_and_mae_sequences_are_reproducible() {
+    // The featurized pipeline's batch-level bit-identity to the seed planner
+    // is proven engine-free in integration_featurized.rs; this closes the
+    // loop end to end: identical config => bit-identical loss/MAE/val
+    // sequences through real train/eval steps. Single-rank is the exactly
+    // deterministic case (multi-rank reductions accumulate in thread-arrival
+    // order, which the seed already only bounds to 1e-5 in encoder sync).
+    let Some(e) = engine() else { return };
+    let cfg = tiny_config(TrainMode::Single(DatasetId::Ani1x), 1, 3);
+    let data = bundle(&cfg, &[DatasetId::Ani1x]);
+    let a = Trainer::new(Arc::clone(&e), cfg.clone()).train(&data).unwrap();
+    let b = Trainer::new(e, cfg).train(&data).unwrap();
+    assert_eq!(a.log.epochs.len(), b.log.epochs.len());
+    for (ea, eb) in a.log.epochs.iter().zip(&b.log.epochs) {
+        assert_eq!(ea.steps, eb.steps, "epoch {}", ea.epoch);
+        assert_eq!(ea.train_loss, eb.train_loss, "epoch {}", ea.epoch);
+        assert_eq!(ea.mae_e, eb.mae_e, "epoch {}", ea.epoch);
+        assert_eq!(ea.mae_f, eb.mae_f, "epoch {}", ea.epoch);
+        assert_eq!(ea.val_loss, eb.val_loss, "epoch {}", ea.epoch);
+    }
+    assert_eq!(a.comm_elems, b.comm_elems, "communication pattern diverged");
+}
+
+#[test]
 fn early_stopping_halts_before_epoch_budget() {
     let Some(e) = engine() else { return };
     let mut cfg = tiny_config(TrainMode::Single(DatasetId::MpTrj), 1, 30);
