@@ -8,6 +8,11 @@
 //! the communication traffic against MTL-base — the Section 5.1 convergence
 //! story end to end. Results are recorded in EXPERIMENTS.md.
 //!
+//! The run writes CRC-guarded checkpoints every epoch; afterwards it
+//! simulates an interruption by resuming from the mid-run checkpoint and
+//! verifies the resumed tail reproduces the original trajectory
+//! bit-for-bit (the fault-tolerance story the exascale runs depend on).
+//!
 //! Run: cargo run --release --features pjrt --example pretrain_e2e -- \
 //!          [--per-dataset 400] [--epochs 12] [--replicas 1] [--out DIR]
 
@@ -33,6 +38,8 @@ fn main() -> anyhow::Result<()> {
     cfg.parallel.replicas = args.usize("replicas", 1);
     let out_dir = args.str("out", "e2e_results");
     std::fs::create_dir_all(&out_dir)?;
+    let ckpt_dir = format!("{out_dir}/checkpoints");
+    cfg.checkpoint.dir = Some(ckpt_dir.clone());
 
     println!("== hydra-mtp end-to-end pre-training ==");
     println!(
@@ -99,6 +106,9 @@ fn main() -> anyhow::Result<()> {
     let mut base_cfg = cfg.clone();
     base_cfg.mode = TrainMode::MtlBase;
     base_cfg.train.epochs = 1;
+    // Never into the MTL-par run's checkpoint directory: a foreign-mode
+    // epoch_0001.ckpt would both pollute it and break the resume demo below.
+    base_cfg.checkpoint.dir = None;
     let base = Session::builder()
         .config(base_cfg)
         .engine(Arc::clone(&engine))
@@ -115,6 +125,38 @@ fn main() -> anyhow::Result<()> {
             / (outcome.comm_elems.0 as f64 / par_steps.max(1) as f64))
             .round()
     );
+
+    // --- interrupt-and-resume: restart from the mid-run checkpoint and
+    // verify the resumed tail lands on the exact same trajectory ---
+    let epochs_run = outcome.log.epochs.len();
+    let k = epochs_run / 2;
+    if k >= 1 {
+        println!(
+            "\nsimulating a mid-run kill: resuming from {ckpt_dir}/epoch_{k:04}.ckpt \
+             and replaying epochs {k}..{epochs_run}"
+        );
+        let mut resume_cfg = cfg.clone();
+        resume_cfg.checkpoint.dir = None; // don't overwrite the originals
+        let mut resumed_session = Session::builder()
+            .config(resume_cfg)
+            .engine(Arc::clone(&engine))
+            .build()?;
+        let resumed = resumed_session
+            .resume(format!("{ckpt_dir}/epoch_{k:04}.ckpt"))?;
+        // Bit-pattern comparison: a NaN val_loss (empty val shard) is
+        // "equal" across runs too, where `==` would report a false diverge.
+        let mut identical = resumed.log.epochs.len() == epochs_run;
+        for (a, b) in resumed.log.epochs.iter().zip(&outcome.log.epochs) {
+            identical &= a.train_loss.to_bits() == b.train_loss.to_bits()
+                && a.val_loss.to_bits() == b.val_loss.to_bits()
+                && a.steps == b.steps;
+        }
+        if identical {
+            println!("resume parity OK: all {epochs_run} epochs bit-identical");
+        } else {
+            anyhow::bail!("resumed run diverged from the uninterrupted trajectory");
+        }
+    }
 
     // --- persist artifacts of the run ---
     let curve_path = format!("{out_dir}/loss_curve.csv");

@@ -1,0 +1,980 @@
+//! Checkpoint / serialization subsystem: fault-tolerant persistence for
+//! training runs and trained models.
+//!
+//! Multi-day pre-training jobs on shared clusters are only viable when a
+//! killed run can restart from its last epoch boundary and land on the
+//! *exact same* trajectory (paper Section 5; the HydraGNN case study
+//! likewise trains from persisted artifacts). This module is the storage
+//! half of that story; `coordinator::trainer` wires it into the three
+//! training modes and proves bit-identical resume in
+//! `rust/tests/integration_checkpoint.rs`.
+//!
+//! ## Container format
+//!
+//! One file, little-endian throughout, CRC32-guarded (same `util::crc32`
+//! the GPack footer index uses — no new dependencies):
+//!
+//! ```text
+//! "HMCK" | u32 version | u8 kind | u64 payload_len
+//! payload bytes (kind-specific, see below)
+//! u32 crc32(payload) | "KCMH"
+//! ```
+//!
+//! `kind` 1 is a full training checkpoint ([`TrainCheckpoint`]: model +
+//! optimizer moments + metrics log + epoch/stopper cursor + traffic
+//! baselines); `kind` 2 is a model-only file ([`save_model`] /
+//! [`load_model`]) for inference and warm-start fine-tuning. Any bit flip
+//! in the payload is rejected at load time via the CRC; header/trailer
+//! damage is rejected via the magics and the length field. Writes go
+//! through a temp file + rename so an interrupted save can never leave a
+//! torn file under the final name.
+//!
+//! ## What makes resume bit-identical
+//!
+//! Every value that feeds the training trajectory is either persisted here
+//! or a pure function of `(config, epoch)`:
+//!
+//! * parameters (encoder + every head) — persisted exactly (f32 bit
+//!   patterns, not decimal round-trips),
+//! * AdamW first/second moments and step counts — persisted,
+//! * the early-stopper cursor (best val loss, consecutive bad epochs) —
+//!   persisted,
+//! * epoch shuffles — *derived*: the trainer seeds each epoch's RNG as
+//!   `seed.wrapping_add(epoch * 7_777_777) ^ tag`, so the "RNG cursor" is
+//!   just `epochs_done`,
+//! * collectives — rank-order deterministic (see `comm::collectives`).
+//!
+//! Heads are keyed by **task name**, not registry index: custom-task
+//! indices depend on registration order, so a reader must register the
+//! same custom tasks the writer used (the same caveat GPack documents) and
+//! gets a clear error naming the missing task otherwise.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::coordinator::metrics::{Coverage, EpochMetrics, RunLog};
+use crate::coordinator::trainer::{Heads, TrainedModel};
+use crate::data::structures::DatasetId;
+use crate::model::optimizer::AdamWState;
+use crate::model::params::{Init, LeafMeta, ParamSet};
+use crate::tensor::{DType, Tensor};
+use crate::util::crc32;
+
+const MAGIC: &[u8; 4] = b"HMCK";
+const MAGIC_END: &[u8; 4] = b"KCMH";
+const VERSION: u32 = 1;
+/// Header: magic 4 + version 4 + kind 1 + payload_len 8.
+const HEADER_LEN: usize = 17;
+/// Trailer: crc 4 + end magic 4.
+const TRAILER_LEN: usize = 8;
+
+const KIND_TRAIN: u8 = 1;
+const KIND_MODEL: u8 = 2;
+
+// ---------------------------------------------------------------------------
+// checkpoint types
+// ---------------------------------------------------------------------------
+
+/// Branch-side optimizer state, mirroring [`Heads`]: one shared-branch
+/// optimizer, or one per task (keyed by task name — see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum OptHeads {
+    Shared(AdamWState),
+    PerDataset(Vec<(String, AdamWState)>),
+}
+
+/// Everything needed to restart a training run at an epoch boundary and
+/// land on the exact same trajectory as an uninterrupted run.
+#[derive(Clone)]
+pub struct TrainCheckpoint {
+    /// `TrainMode::name()` of the run that wrote the file.
+    pub mode: String,
+    /// `cfg.train.seed` of the run (epoch shuffles derive from it).
+    pub train_seed: u64,
+    /// `RunConfig::trajectory_fingerprint()` of the run that wrote the
+    /// file — resume refuses a config whose trajectory-determining knobs
+    /// (replicas, lr, data sizes, ...) differ, not just mode/seed.
+    pub config_fingerprint: String,
+    /// Epochs fully completed; resume starts at this epoch index.
+    pub epochs_done: usize,
+    /// Whether early stopping had already fired when this was written.
+    pub stopped: bool,
+    /// Early-stopper cursor: best val loss seen, consecutive bad epochs.
+    pub stopper_best: f64,
+    pub stopper_bad_epochs: usize,
+    /// Model parameters at the epoch boundary.
+    pub model: TrainedModel,
+    /// AdamW moments + step count for the shared encoder.
+    pub opt_encoder: AdamWState,
+    /// AdamW moments + step counts for the branch side.
+    pub opt_heads: OptHeads,
+    /// Rank-0 metrics log covering epochs `0..epochs_done`.
+    pub log: RunLog,
+    /// Collective-traffic baselines at save time (global, head-group), so a
+    /// resumed run reports cumulative totals.
+    pub comm_global: u64,
+    pub comm_head: u64,
+}
+
+impl TrainCheckpoint {
+    /// Pre-flight compatibility check before resuming: same mode, same
+    /// training seed (a different seed would produce a different
+    /// trajectory — refusing beats silently diverging), a head for every
+    /// dataset the run trains on, and an internally consistent file.
+    pub fn validate_for(
+        &self,
+        mode_name: &str,
+        train_seed: u64,
+        fingerprint: &str,
+        datasets: &[DatasetId],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.mode == mode_name,
+            "checkpoint was written by mode '{}' but this run is '{}'",
+            self.mode,
+            mode_name
+        );
+        anyhow::ensure!(
+            self.train_seed == train_seed,
+            "checkpoint training seed {} != configured seed {train_seed}; \
+             resuming would silently change the trajectory",
+            self.train_seed
+        );
+        anyhow::ensure!(
+            self.config_fingerprint == fingerprint,
+            "checkpoint was written under a different trajectory config; \
+             resuming would silently change the trajectory.\n  saved:      {}\n  \
+             configured: {fingerprint}",
+            self.config_fingerprint
+        );
+        anyhow::ensure!(
+            self.epochs_done == self.log.epochs.len(),
+            "checkpoint is inconsistent: {} epochs done but {} logged",
+            self.epochs_done,
+            self.log.epochs.len()
+        );
+        match (&self.model.heads, &self.opt_heads) {
+            (Heads::Shared(_), OptHeads::Shared(_)) => {}
+            (Heads::PerDataset(heads), OptHeads::PerDataset(opts)) => {
+                anyhow::ensure!(
+                    heads.len() == opts.len(),
+                    "checkpoint has {} heads but {} head optimizer states",
+                    heads.len(),
+                    opts.len()
+                );
+                for d in datasets {
+                    anyhow::ensure!(
+                        heads.contains_key(d),
+                        "checkpoint has no head for task {} (trained tasks: {})",
+                        d.name(),
+                        heads.keys().map(|k| k.name()).collect::<Vec<_>>().join(", ")
+                    );
+                    anyhow::ensure!(
+                        opts.iter().any(|(n, _)| *n == d.name()),
+                        "checkpoint has no head optimizer state for task {}",
+                        d.name()
+                    );
+                }
+            }
+            _ => anyhow::bail!(
+                "checkpoint heads/optimizer structure mismatch (shared vs per-dataset)"
+            ),
+        }
+        Ok(())
+    }
+
+    /// Branch optimizer state for `d` (PerDataset lookup by task name).
+    pub fn opt_for(&self, d: DatasetId) -> anyhow::Result<&AdamWState> {
+        match &self.opt_heads {
+            OptHeads::Shared(s) => Ok(s),
+            OptHeads::PerDataset(v) => {
+                let name = d.name();
+                v.iter()
+                    .find(|(n, _)| *n == name)
+                    .map(|(_, s)| s)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("no head optimizer state for task {name}")
+                    })
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// public API
+// ---------------------------------------------------------------------------
+
+/// Write a full training checkpoint (atomically: temp file + rename).
+pub fn save_train(ckpt: &TrainCheckpoint, path: impl AsRef<Path>) -> anyhow::Result<()> {
+    let mut e = Enc::default();
+    e.str(&ckpt.mode);
+    e.u64(ckpt.train_seed);
+    e.str(&ckpt.config_fingerprint);
+    e.u64(ckpt.epochs_done as u64);
+    e.u8(ckpt.stopped as u8);
+    e.f64(ckpt.stopper_best);
+    e.u64(ckpt.stopper_bad_epochs as u64);
+    enc_model(&mut e, &ckpt.model);
+    enc_opt(&mut e, &ckpt.opt_encoder);
+    match &ckpt.opt_heads {
+        OptHeads::Shared(s) => {
+            e.u8(0);
+            enc_opt(&mut e, s);
+        }
+        OptHeads::PerDataset(v) => {
+            e.u8(1);
+            e.u64(v.len() as u64);
+            for (name, s) in v {
+                e.str(name);
+                enc_opt(&mut e, s);
+            }
+        }
+    }
+    enc_log(&mut e, &ckpt.log);
+    e.u64(ckpt.comm_global);
+    e.u64(ckpt.comm_head);
+    write_container(KIND_TRAIN, &e.buf, path.as_ref())
+}
+
+/// Load a full training checkpoint, verifying magic, version, and CRC.
+pub fn load_train(path: impl AsRef<Path>) -> anyhow::Result<TrainCheckpoint> {
+    let payload = read_container(KIND_TRAIN, path.as_ref())?;
+    let mut d = Dec { buf: &payload, pos: 0 };
+    let mode = d.str()?;
+    let train_seed = d.u64()?;
+    let config_fingerprint = d.str()?;
+    let epochs_done = d.usize()?;
+    let stopped = d.u8()? != 0;
+    let stopper_best = d.f64()?;
+    let stopper_bad_epochs = d.usize()?;
+    let model = dec_model(&mut d)?;
+    let opt_encoder = dec_opt(&mut d)?;
+    let opt_heads = match d.u8()? {
+        0 => OptHeads::Shared(dec_opt(&mut d)?),
+        1 => {
+            let n = d.usize()?;
+            anyhow::ensure!(n <= 100_000, "implausible head optimizer count {n}");
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                let name = d.str()?;
+                v.push((name, dec_opt(&mut d)?));
+            }
+            OptHeads::PerDataset(v)
+        }
+        other => anyhow::bail!("unknown opt-heads tag {other}"),
+    };
+    let log = dec_log(&mut d)?;
+    let comm_global = d.u64()?;
+    let comm_head = d.u64()?;
+    d.finish()?;
+    Ok(TrainCheckpoint {
+        mode,
+        train_seed,
+        config_fingerprint,
+        epochs_done,
+        stopped,
+        stopper_best,
+        stopper_bad_epochs,
+        model,
+        opt_encoder,
+        opt_heads,
+        log,
+        comm_global,
+        comm_head,
+    })
+}
+
+/// Write a trained model alone (inference / warm-start artifact).
+pub fn save_model(model: &TrainedModel, path: impl AsRef<Path>) -> anyhow::Result<()> {
+    let mut e = Enc::default();
+    enc_model(&mut e, model);
+    write_container(KIND_MODEL, &e.buf, path.as_ref())
+}
+
+/// Load a model saved with [`save_model`].
+pub fn load_model(path: impl AsRef<Path>) -> anyhow::Result<TrainedModel> {
+    let payload = read_container(KIND_MODEL, path.as_ref())?;
+    let mut d = Dec { buf: &payload, pos: 0 };
+    let model = dec_model(&mut d)?;
+    d.finish()?;
+    Ok(model)
+}
+
+/// Canonical per-epoch checkpoint path: `dir/epoch_0007.ckpt` after 7
+/// completed epochs.
+pub fn epoch_path(dir: impl AsRef<Path>, epochs_done: usize) -> PathBuf {
+    dir.as_ref().join(format!("epoch_{epochs_done:04}.ckpt"))
+}
+
+/// Highest-epoch `epoch_*.ckpt` file in `dir`, if any.
+pub fn latest_in_dir(dir: impl AsRef<Path>) -> anyhow::Result<Option<PathBuf>> {
+    let mut best: Option<(usize, PathBuf)> = None;
+    for entry in std::fs::read_dir(dir.as_ref())? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let parsed = name
+            .strip_prefix("epoch_")
+            .and_then(|s| s.strip_suffix(".ckpt"))
+            .and_then(|s| s.parse::<usize>().ok());
+        if let Some(n) = parsed {
+            let better = match &best {
+                None => true,
+                Some((b, _)) => n > *b,
+            };
+            if better {
+                best = Some((n, entry.path()));
+            }
+        }
+    }
+    Ok(best.map(|(_, p)| p))
+}
+
+/// Resolve a `--resume` argument: a file is used as-is; a directory is
+/// scanned for its highest-epoch `epoch_*.ckpt`.
+pub fn resolve_resume_path(path: impl AsRef<Path>) -> anyhow::Result<PathBuf> {
+    let p = path.as_ref();
+    if p.is_dir() {
+        latest_in_dir(p)?.ok_or_else(|| {
+            anyhow::anyhow!("{}: no epoch_*.ckpt checkpoints found", p.display())
+        })
+    } else if p.is_file() {
+        Ok(p.to_path_buf())
+    } else {
+        anyhow::bail!("{}: resume path does not exist", p.display())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// container
+// ---------------------------------------------------------------------------
+
+fn kind_name(kind: u8) -> &'static str {
+    match kind {
+        KIND_TRAIN => "training checkpoint",
+        KIND_MODEL => "model",
+        _ => "unknown",
+    }
+}
+
+fn write_container(kind: u8, payload: &[u8], path: &Path) -> anyhow::Result<()> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&crc32::hash(payload).to_le_bytes());
+    out.extend_from_slice(MAGIC_END);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    // Temp-write + fsync + rename: a crash mid-save can never leave a torn
+    // file under the final name, and the data blocks are durable BEFORE the
+    // rename becomes visible (rename alone may be reordered ahead of the
+    // data writes on a power loss, which would leave a corrupt file under
+    // the final name — the exact failure checkpointing exists to survive).
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&out)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+fn read_container(kind: u8, path: &Path) -> anyhow::Result<Vec<u8>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("{}: cannot read checkpoint: {e}", path.display()))?;
+    anyhow::ensure!(
+        bytes.len() >= HEADER_LEN + TRAILER_LEN,
+        "{}: too short to be a checkpoint ({} bytes)",
+        path.display(),
+        bytes.len()
+    );
+    anyhow::ensure!(
+        &bytes[..4] == MAGIC,
+        "{}: not a hydra-mtp checkpoint (bad magic)",
+        path.display()
+    );
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    anyhow::ensure!(
+        version == VERSION,
+        "{}: unsupported checkpoint version {version} (this build reads v{VERSION})",
+        path.display()
+    );
+    let got_kind = bytes[8];
+    anyhow::ensure!(
+        got_kind == kind,
+        "{}: file is a {} (kind {got_kind}), expected a {} (kind {kind})",
+        path.display(),
+        kind_name(got_kind),
+        kind_name(kind)
+    );
+    let plen = u64::from_le_bytes(bytes[9..17].try_into().unwrap());
+    anyhow::ensure!(
+        plen == (bytes.len() - HEADER_LEN - TRAILER_LEN) as u64,
+        "{}: truncated or oversized checkpoint ({} payload bytes recorded, {} present)",
+        path.display(),
+        plen,
+        bytes.len() - HEADER_LEN - TRAILER_LEN
+    );
+    let plen = plen as usize;
+    let payload = &bytes[HEADER_LEN..HEADER_LEN + plen];
+    let crc_stored =
+        u32::from_le_bytes(bytes[HEADER_LEN + plen..HEADER_LEN + plen + 4].try_into().unwrap());
+    anyhow::ensure!(
+        &bytes[HEADER_LEN + plen + 4..] == MAGIC_END,
+        "{}: bad trailing magic",
+        path.display()
+    );
+    let crc = crc32::hash(payload);
+    anyhow::ensure!(
+        crc == crc_stored,
+        "{}: checkpoint checksum mismatch (stored {crc_stored:#010x}, computed \
+         {crc:#010x}) — the file is corrupt, refusing to load",
+        path.display()
+    );
+    // Return the payload in place (drop trailer, shift off the header)
+    // instead of copying it: checkpoints hold full model + optimizer state,
+    // and a second transient copy doubles peak memory during restore.
+    let mut bytes = bytes;
+    bytes.truncate(HEADER_LEN + plen);
+    bytes.drain(..HEADER_LEN);
+    Ok(bytes)
+}
+
+// ---------------------------------------------------------------------------
+// byte-level primitives
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    /// f64 by bit pattern: NaN / infinity round-trip exactly.
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn i32s(&mut self, v: &[i32]) {
+        self.u64(v.len() as u64);
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.buf.len() - self.pos,
+            "checkpoint payload truncated: need {n} bytes at offset {}, {} remain",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    /// Length/count field: bounded so a corrupt length cannot trigger a
+    /// huge allocation before the next bounds check.
+    fn usize(&mut self) -> anyhow::Result<usize> {
+        let v = self.u64()?;
+        anyhow::ensure!(
+            v <= (1 << 40),
+            "checkpoint length field {v} is implausibly large (corrupt file?)"
+        );
+        Ok(v as usize)
+    }
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn str(&mut self) -> anyhow::Result<String> {
+        let n = self.usize()?;
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+    fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.usize()?;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("overflow"))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn i32s(&mut self) -> anyhow::Result<Vec<i32>> {
+        let n = self.usize()?;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("overflow"))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    /// Every byte must be consumed; trailing garbage means a reader/writer
+    /// mismatch even when the CRC is intact (e.g. a hand-edited file).
+    fn finish(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.pos == self.buf.len(),
+            "checkpoint payload has {} trailing bytes after decoding",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// typed sections
+// ---------------------------------------------------------------------------
+
+fn enc_meta(e: &mut Enc, m: &LeafMeta) {
+    e.str(&m.name);
+    e.u64(m.shape.len() as u64);
+    for &d in &m.shape {
+        e.u64(d as u64);
+    }
+    e.u8(match m.dtype {
+        DType::F32 => 0,
+        DType::I32 => 1,
+    });
+    match &m.init {
+        None => e.u8(0),
+        Some(Init::Zeros) => e.u8(1),
+        Some(Init::Lecun { fan_in }) => {
+            e.u8(2);
+            e.u64(*fan_in as u64);
+        }
+        Some(Init::Normal { scale }) => {
+            e.u8(3);
+            e.f64(*scale);
+        }
+    }
+}
+
+fn dec_meta(d: &mut Dec) -> anyhow::Result<LeafMeta> {
+    let name = d.str()?;
+    let ndim = d.usize()?;
+    anyhow::ensure!(ndim <= 8, "leaf {name}: implausible rank {ndim}");
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(d.usize()?);
+    }
+    let dtype = match d.u8()? {
+        0 => DType::F32,
+        1 => DType::I32,
+        other => anyhow::bail!("leaf {name}: unknown dtype tag {other}"),
+    };
+    let init = match d.u8()? {
+        0 => None,
+        1 => Some(Init::Zeros),
+        2 => Some(Init::Lecun { fan_in: d.usize()? }),
+        3 => Some(Init::Normal { scale: d.f64()? }),
+        other => anyhow::bail!("leaf {name}: unknown init tag {other}"),
+    };
+    Ok(LeafMeta { name, shape, dtype, init })
+}
+
+fn enc_tensor(e: &mut Enc, t: &Tensor) {
+    e.u64(t.shape.len() as u64);
+    for &d in &t.shape {
+        e.u64(d as u64);
+    }
+    match t.dtype() {
+        DType::F32 => {
+            e.u8(0);
+            e.f32s(t.as_f32());
+        }
+        DType::I32 => {
+            e.u8(1);
+            e.i32s(t.as_i32());
+        }
+    }
+}
+
+fn dec_tensor(d: &mut Dec) -> anyhow::Result<Tensor> {
+    let ndim = d.usize()?;
+    anyhow::ensure!(ndim <= 8, "tensor: implausible rank {ndim}");
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(d.usize()?);
+    }
+    let expected = crate::tensor::numel(&shape);
+    match d.u8()? {
+        0 => {
+            let data = d.f32s()?;
+            anyhow::ensure!(
+                data.len() == expected,
+                "tensor shape {shape:?} expects {expected} elements, payload has {}",
+                data.len()
+            );
+            Ok(Tensor::from_f32(&shape, data))
+        }
+        1 => {
+            let data = d.i32s()?;
+            anyhow::ensure!(
+                data.len() == expected,
+                "tensor shape {shape:?} expects {expected} elements, payload has {}",
+                data.len()
+            );
+            Ok(Tensor::from_i32(&shape, data))
+        }
+        other => anyhow::bail!("unknown tensor dtype tag {other}"),
+    }
+}
+
+fn enc_params(e: &mut Enc, p: &ParamSet) {
+    e.u64(p.len() as u64);
+    for (m, t) in p.metas().iter().zip(&p.tensors) {
+        enc_meta(e, m);
+        enc_tensor(e, t);
+    }
+}
+
+fn dec_params(d: &mut Dec) -> anyhow::Result<ParamSet> {
+    let n = d.usize()?;
+    anyhow::ensure!(n <= 100_000, "implausible parameter leaf count {n}");
+    let mut metas = Vec::with_capacity(n);
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        metas.push(dec_meta(d)?);
+        tensors.push(dec_tensor(d)?);
+    }
+    ParamSet::from_parts(metas, tensors)
+}
+
+fn enc_opt(e: &mut Enc, s: &AdamWState) {
+    e.u64(s.step);
+    e.u64(s.m.len() as u64);
+    for m in &s.m {
+        e.f32s(m);
+    }
+    e.u64(s.v.len() as u64);
+    for v in &s.v {
+        e.f32s(v);
+    }
+}
+
+fn dec_opt(d: &mut Dec) -> anyhow::Result<AdamWState> {
+    let step = d.u64()?;
+    let nm = d.usize()?;
+    anyhow::ensure!(nm <= 100_000, "implausible moment leaf count {nm}");
+    let mut m = Vec::with_capacity(nm);
+    for _ in 0..nm {
+        m.push(d.f32s()?);
+    }
+    let nv = d.usize()?;
+    anyhow::ensure!(nv == nm, "optimizer state has {nm} first moments but {nv} second");
+    let mut v = Vec::with_capacity(nv);
+    for _ in 0..nv {
+        v.push(d.f32s()?);
+    }
+    Ok(AdamWState { m, v, step })
+}
+
+fn enc_heads(e: &mut Enc, h: &Heads) {
+    match h {
+        Heads::Shared(b) => {
+            e.u8(0);
+            enc_params(e, b);
+        }
+        Heads::PerDataset(m) => {
+            e.u8(1);
+            e.u64(m.len() as u64);
+            for (d, b) in m {
+                e.str(&d.name());
+                enc_params(e, b);
+            }
+        }
+    }
+}
+
+fn dec_heads(d: &mut Dec) -> anyhow::Result<Heads> {
+    match d.u8()? {
+        0 => Ok(Heads::Shared(dec_params(d)?)),
+        1 => {
+            let n = d.usize()?;
+            anyhow::ensure!(n <= 100_000, "implausible head count {n}");
+            let mut map = BTreeMap::new();
+            for _ in 0..n {
+                let name = d.str()?;
+                let branch = dec_params(d)?;
+                let id = DatasetId::from_name(&name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "checkpoint head '{name}' refers to a task not registered in \
+                         this process; register the same custom tasks the writer used \
+                         (TaskRegistry::global().register) before loading"
+                    )
+                })?;
+                map.insert(id, branch);
+            }
+            Ok(Heads::PerDataset(map))
+        }
+        other => anyhow::bail!("unknown heads tag {other}"),
+    }
+}
+
+fn enc_model(e: &mut Enc, m: &TrainedModel) {
+    e.str(&m.name);
+    enc_params(e, &m.encoder);
+    enc_heads(e, &m.heads);
+}
+
+fn dec_model(d: &mut Dec) -> anyhow::Result<TrainedModel> {
+    let name = d.str()?;
+    let encoder = dec_params(d)?;
+    let heads = dec_heads(d)?;
+    Ok(TrainedModel { name, encoder, heads })
+}
+
+fn enc_duration(e: &mut Enc, d: Duration) {
+    e.u64(d.as_secs());
+    e.u32(d.subsec_nanos());
+}
+
+fn dec_duration(d: &mut Dec) -> anyhow::Result<Duration> {
+    let secs = d.u64()?;
+    let nanos = d.u32()?;
+    anyhow::ensure!(nanos < 1_000_000_000, "bad duration nanos {nanos}");
+    Ok(Duration::new(secs, nanos))
+}
+
+fn enc_log(e: &mut Enc, log: &RunLog) {
+    e.str(&log.model_name);
+    e.u64(log.epochs.len() as u64);
+    for ep in &log.epochs {
+        e.u64(ep.epoch as u64);
+        e.u64(ep.steps as u64);
+        e.f64(ep.train_loss);
+        e.f64(ep.mae_e);
+        e.f64(ep.mae_f);
+        e.f64(ep.val_loss);
+        enc_duration(e, ep.time_total);
+        enc_duration(e, ep.time_data);
+        enc_duration(e, ep.time_exec);
+        enc_duration(e, ep.time_comm);
+        enc_duration(e, ep.time_opt);
+        e.u64(ep.coverage.len() as u64);
+        for c in &ep.coverage {
+            e.str(&c.dataset);
+            e.u64(c.planned as u64);
+            e.u64(c.used as u64);
+        }
+    }
+}
+
+fn dec_log(d: &mut Dec) -> anyhow::Result<RunLog> {
+    let model_name = d.str()?;
+    let n = d.usize()?;
+    anyhow::ensure!(n <= 10_000_000, "implausible epoch count {n}");
+    let mut epochs = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        let epoch = d.usize()?;
+        let steps = d.usize()?;
+        let train_loss = d.f64()?;
+        let mae_e = d.f64()?;
+        let mae_f = d.f64()?;
+        let val_loss = d.f64()?;
+        let time_total = dec_duration(d)?;
+        let time_data = dec_duration(d)?;
+        let time_exec = dec_duration(d)?;
+        let time_comm = dec_duration(d)?;
+        let time_opt = dec_duration(d)?;
+        let nc = d.usize()?;
+        anyhow::ensure!(nc <= 100_000, "implausible coverage count {nc}");
+        let mut coverage = Vec::with_capacity(nc.min(64));
+        for _ in 0..nc {
+            coverage.push(Coverage {
+                dataset: d.str()?,
+                planned: d.usize()?,
+                used: d.usize()?,
+            });
+        }
+        epochs.push(EpochMetrics {
+            epoch,
+            steps,
+            train_loss,
+            mae_e,
+            mae_f,
+            val_loss,
+            time_total,
+            time_data,
+            time_exec,
+            time_comm,
+            time_opt,
+            coverage,
+        });
+    }
+    Ok(RunLog { model_name, epochs })
+}
+
+// ---------------------------------------------------------------------------
+// tests (engine-free; the end-to-end resume tests live in
+// rust/tests/integration_checkpoint.rs)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::{Init, LeafMeta};
+    use std::sync::Arc;
+
+    fn metas() -> Arc<Vec<LeafMeta>> {
+        Arc::new(vec![
+            LeafMeta {
+                name: "branch.trunk.w1".into(),
+                shape: vec![4, 8],
+                dtype: DType::F32,
+                init: Some(Init::Lecun { fan_in: 4 }),
+            },
+            LeafMeta {
+                name: "encoder.embed".into(),
+                shape: vec![10, 8],
+                dtype: DType::F32,
+                init: Some(Init::Normal { scale: 0.5 }),
+            },
+        ])
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("hydra_mtp_ckpt_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}_{}.ckpt", std::process::id()))
+    }
+
+    #[test]
+    fn model_roundtrips_every_leaf_bit_for_bit() {
+        let p = ParamSet::init(&metas(), 42);
+        let model = TrainedModel {
+            name: "unit".into(),
+            encoder: p.subset("encoder."),
+            heads: Heads::Shared(p.subset("branch.")),
+        };
+        let path = tmp("model_rt");
+        save_model(&model, &path).unwrap();
+        let back = load_model(&path).unwrap();
+        assert_eq!(back.name, "unit");
+        assert_eq!(back.encoder.tensors, model.encoder.tensors);
+        match (&back.heads, &model.heads) {
+            (Heads::Shared(a), Heads::Shared(b)) => assert_eq!(a.tensors, b.tensors),
+            _ => panic!("heads kind changed in roundtrip"),
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn crc_rejects_any_payload_bit_flip() {
+        let p = ParamSet::init(&metas(), 7);
+        let model = TrainedModel {
+            name: "crc".into(),
+            encoder: p.subset("encoder."),
+            heads: Heads::Shared(p.subset("branch.")),
+        };
+        let path = tmp("crc");
+        save_model(&model, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_model(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("checksum") || msg.contains("truncated") || msg.contains("implausible"),
+            "corruption must be loudly rejected, got: {msg}"
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn wrong_kind_magic_and_version_are_rejected() {
+        let p = ParamSet::init(&metas(), 3);
+        let model = TrainedModel {
+            name: "kind".into(),
+            encoder: p.subset("encoder."),
+            heads: Heads::Shared(p.subset("branch.")),
+        };
+        let path = tmp("kind");
+        save_model(&model, &path).unwrap();
+        // A model file is not a training checkpoint.
+        let err = load_train(&path).unwrap_err();
+        assert!(format!("{err}").contains("kind"), "{err}");
+        // Bad magic.
+        std::fs::write(&path, b"not a checkpoint at all, just some bytes padding").unwrap();
+        let err = load_model(&path).unwrap_err();
+        assert!(format!("{err}").contains("magic"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn truncated_file_is_rejected() {
+        let p = ParamSet::init(&metas(), 9);
+        let model = TrainedModel {
+            name: "trunc".into(),
+            encoder: p.subset("encoder."),
+            heads: Heads::Shared(p.subset("branch.")),
+        };
+        let path = tmp("trunc");
+        save_model(&model, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(load_model(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn epoch_path_and_latest_in_dir() {
+        let dir = std::env::temp_dir()
+            .join(format!("hydra_mtp_ckpt_dir_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(latest_in_dir(&dir).unwrap().is_none());
+        for n in [1usize, 3, 2] {
+            std::fs::write(epoch_path(&dir, n), b"x").unwrap();
+        }
+        std::fs::write(dir.join("not_a_ckpt.txt"), b"x").unwrap();
+        let latest = latest_in_dir(&dir).unwrap().unwrap();
+        assert_eq!(latest, epoch_path(&dir, 3));
+        assert_eq!(resolve_resume_path(&dir).unwrap(), epoch_path(&dir, 3));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -19,6 +19,14 @@ use std::sync::{Arc, Condvar, Mutex};
 
 #[derive(Default)]
 struct RoundState {
+    /// Per-rank contributions of the in-flight round (rank-indexed). The
+    /// last arrival folds them together in RANK order, which makes the
+    /// reduction a pure function of the inputs — independent of thread
+    /// arrival order. (The seed accumulated in arrival order, so multi-rank
+    /// runs were reproducible only to ~1e-5; checkpoint resume needs
+    /// bit-identity across whole reruns.)
+    parts: Vec<Vec<f64>>,
+    /// Finalized round result every member copies out.
     accum: Vec<f64>,
     arrived: usize,
     departing: usize,
@@ -28,7 +36,10 @@ struct Shared {
     size: usize,
     state: Mutex<RoundState>,
     cv: Condvar,
-    /// Total f32 elements pushed through allreduce on this communicator.
+    /// Total f32 elements moved through collectives (allreduce AND
+    /// broadcast) on this communicator. Broadcast was not counted by the
+    /// seed, which undercounted the traffic behind the paper's P_s-vs-P_h
+    /// communication-volume claim once checkpoint restores entered the mix.
     reduced_elems: AtomicU64,
     /// Number of collective rounds completed.
     rounds: AtomicU64,
@@ -47,7 +58,10 @@ impl Comm {
         assert!(n > 0);
         let shared = Arc::new(Shared {
             size: n,
-            state: Mutex::new(RoundState::default()),
+            state: Mutex::new(RoundState {
+                parts: vec![Vec::new(); n],
+                ..RoundState::default()
+            }),
             cv: Condvar::new(),
             reduced_elems: AtomicU64::new(0),
             rounds: AtomicU64::new(0),
@@ -81,23 +95,30 @@ impl Comm {
         while st.departing > 0 {
             st = sh.cv.wait(st).unwrap();
         }
-        // Accumulate in f64: the deterministic, order-insensitive part of
-        // this rendezvous matters less than numeric parity across group
-        // sizes, and f64 accumulation keeps DDP means stable.
-        if st.arrived == 0 {
-            st.accum.clear();
-            st.accum.extend(data.iter().map(|&x| x as f64));
-        } else {
-            for (a, &x) in st.accum.iter_mut().zip(data.iter()) {
-                *a += x as f64;
-            }
+        // Deposit this rank's contribution (widened to f64, which keeps DDP
+        // means stable) in its own slot; the final sum happens in rank
+        // order so the result is arrival-order independent.
+        {
+            let slot = &mut st.parts[self.rank_in_group];
+            slot.clear();
+            slot.extend(data.iter().map(|&x| x as f64));
         }
         st.arrived += 1;
         if st.arrived == sh.size {
-            if mean {
-                let inv = 1.0 / sh.size as f64;
-                for a in st.accum.iter_mut() {
-                    *a *= inv;
+            {
+                let RoundState { parts, accum, .. } = &mut *st;
+                accum.clear();
+                accum.resize(data.len(), 0.0);
+                for part in parts.iter() {
+                    for (a, &x) in accum.iter_mut().zip(part.iter()) {
+                        *a += x;
+                    }
+                }
+                if mean {
+                    let inv = 1.0 / sh.size as f64;
+                    for a in accum.iter_mut() {
+                        *a *= inv;
+                    }
                 }
             }
             st.arrived = 0;
@@ -119,10 +140,16 @@ impl Comm {
         }
     }
 
-    /// Broadcast `data` from `root` to every member, in place.
+    /// Broadcast `data` from `root` to every member, in place. The payload
+    /// counts toward [`Comm::stats`] like any other collective (the seed
+    /// moved the bytes but never incremented the traffic counter, so
+    /// broadcast-heavy paths — checkpoint restore in particular — were
+    /// invisible to the communication-volume accounting).
     pub fn broadcast(&self, root: usize, data: &mut [f32]) {
         let sh = &self.shared;
         if sh.size == 1 {
+            sh.rounds.fetch_add(1, Ordering::Relaxed);
+            sh.reduced_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
             return;
         }
         let mut st = sh.state.lock().unwrap();
@@ -138,6 +165,7 @@ impl Comm {
             st.arrived = 0;
             st.departing = sh.size;
             sh.rounds.fetch_add(1, Ordering::Relaxed);
+            sh.reduced_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
             sh.cv.notify_all();
         } else {
             while st.departing == 0 {
@@ -175,7 +203,7 @@ impl Comm {
         (0..n).map(|i| slots[2 * i] as f64 + slots[2 * i + 1] as f64).collect()
     }
 
-    /// (total f32 elements allreduced, completed rounds).
+    /// (total f32 elements moved through collectives, completed rounds).
     pub fn stats(&self) -> (u64, u64) {
         (
             self.shared.reduced_elems.load(Ordering::Relaxed),
@@ -294,6 +322,55 @@ mod tests {
         for (elems, rounds) in results {
             assert_eq!(elems, 10);
             assert_eq!(rounds, 1);
+        }
+    }
+
+    #[test]
+    fn broadcast_counts_toward_stats() {
+        // Regression: the seed moved broadcast payloads but never bumped
+        // the traffic counter, undercounting comm volume.
+        let results = run_group(3, |c| {
+            let mut d = vec![c.rank_in_group as f32; 7];
+            c.broadcast(1, &mut d);
+            c.stats()
+        });
+        for (elems, rounds) in results {
+            assert_eq!(elems, 7, "broadcast payload must be counted");
+            assert_eq!(rounds, 1);
+        }
+        // Size-1 groups count too (degenerate but consistent with reduce).
+        let comms = Comm::group(1);
+        let mut d = vec![0f32; 5];
+        comms[0].broadcast(0, &mut d);
+        assert_eq!(comms[0].stats().0, 5);
+    }
+
+    #[test]
+    fn reduction_is_bit_deterministic_across_arrival_orders() {
+        // Rank contributions chosen so f64 summation order changes the
+        // result: (1e16 + 1.0) - 1e16 == 0.0 but (1e16 - 1e16) + 1.0 == 1.0.
+        // Thread scheduling varies arrival order across rounds; rank-order
+        // folding must still produce the identical bit pattern every time.
+        let contributions = [1e16f32, 1.0, -1e16, 3.5];
+        let results = run_group(4, move |c| {
+            let mut out = Vec::new();
+            for _ in 0..200 {
+                let mut d = vec![contributions[c.rank_in_group]];
+                c.allreduce_sum(&mut d);
+                out.push(d[0].to_bits());
+            }
+            out
+        });
+        let expected = results[0][0];
+        for r in &results {
+            for (round, &bits) in r.iter().enumerate() {
+                assert_eq!(
+                    bits, expected,
+                    "round {round}: nondeterministic reduction ({} vs {})",
+                    f32::from_bits(bits),
+                    f32::from_bits(expected)
+                );
+            }
         }
     }
 }

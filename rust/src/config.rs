@@ -114,6 +114,25 @@ impl Default for ParallelConfig {
     }
 }
 
+/// Fault tolerance: periodic checkpointing + resume (see `crate::checkpoint`).
+#[derive(Debug, Clone)]
+pub struct CheckpointConfig {
+    /// Directory for per-epoch `epoch_*.ckpt` files (None disables saving).
+    pub dir: Option<String>,
+    /// Save every N epochs (>= 1). The final epoch and an early-stop epoch
+    /// are always saved when `dir` is set, regardless of cadence.
+    pub every: usize,
+    /// Checkpoint file — or directory holding `epoch_*.ckpt` files, in
+    /// which case the highest epoch wins — to resume training from.
+    pub resume: Option<String>,
+}
+
+impl Default for CheckpointConfig {
+    fn default() -> Self {
+        CheckpointConfig { dir: None, every: 1, resume: None }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub artifacts_dir: String,
@@ -121,6 +140,7 @@ pub struct RunConfig {
     pub data: DataConfig,
     pub train: TrainConfig,
     pub parallel: ParallelConfig,
+    pub checkpoint: CheckpointConfig,
 }
 
 impl Default for RunConfig {
@@ -131,6 +151,7 @@ impl Default for RunConfig {
             data: DataConfig::default(),
             train: TrainConfig::default(),
             parallel: ParallelConfig::default(),
+            checkpoint: CheckpointConfig::default(),
         }
     }
 }
@@ -144,6 +165,11 @@ impl RunConfig {
         anyhow::ensure!(
             self.data.train_frac + self.data.val_frac < 1.0 + 1e-12,
             "train+val fractions exceed 1"
+        );
+        anyhow::ensure!(
+            self.checkpoint.every >= 1,
+            "checkpoint.every must be >= 1 (got {})",
+            self.checkpoint.every
         );
         Ok(())
     }
@@ -186,6 +212,26 @@ impl RunConfig {
             (
                 "parallel",
                 Json::obj(vec![("replicas", Json::from(self.parallel.replicas))]),
+            ),
+            (
+                "checkpoint",
+                Json::obj(vec![
+                    (
+                        "dir",
+                        match &self.checkpoint.dir {
+                            Some(d) => Json::str(d.clone()),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("every", Json::from(self.checkpoint.every)),
+                    (
+                        "resume",
+                        match &self.checkpoint.resume {
+                            Some(r) => Json::str(r.clone()),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
             ),
         ])
     }
@@ -248,8 +294,53 @@ impl RunConfig {
         if let Some(v) = j.get("parallel").get("replicas").as_i64() {
             cfg.parallel.replicas = v as usize;
         }
+        let c = j.get("checkpoint");
+        if let Some(s) = c.get("dir").as_str() {
+            cfg.checkpoint.dir = Some(s.to_string());
+        }
+        if let Some(v) = c.get("every").as_i64() {
+            cfg.checkpoint.every = v as usize;
+        }
+        if let Some(s) = c.get("resume").as_str() {
+            cfg.checkpoint.resume = Some(s.to_string());
+        }
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Canonical string over every trajectory-determining knob (mode, both
+    /// seeds, data sizes/splits, optimizer hyper-parameters, patience,
+    /// replicas). Two runs with equal fingerprints replay the same
+    /// trajectory epoch-for-epoch; the checkpoint subsystem refuses to
+    /// resume across differing fingerprints, because mode + seed alone
+    /// would let e.g. a changed `--replicas` or `--lr` silently diverge
+    /// from the run that wrote the file. `epochs` is deliberately
+    /// excluded — extending a finished run IS the resume use case — as are
+    /// the artifacts dir and the checkpoint paths themselves. Floats are
+    /// rendered by bit pattern so the comparison is exact.
+    pub fn trajectory_fingerprint(&self) -> String {
+        let f = |x: f64| format!("{:016x}", x.to_bits());
+        format!(
+            "mode={};train_seed={};data_seed={};per_dataset={};max_atoms={};\
+             cutoff={};train_frac={};val_frac={};lr={};weight_decay={};beta1={};\
+             beta2={};eps={};grad_clip={};patience={};replicas={}",
+            self.mode.name(),
+            self.train.seed,
+            self.data.seed,
+            self.data.per_dataset,
+            self.data.max_atoms,
+            f(self.data.cutoff),
+            f(self.data.train_frac),
+            f(self.data.val_frac),
+            f(self.train.lr),
+            f(self.train.weight_decay),
+            f(self.train.beta1),
+            f(self.train.beta2),
+            f(self.train.eps),
+            f(self.train.grad_clip),
+            self.train.patience,
+            self.parallel.replicas,
+        )
     }
 
     pub fn load(path: impl AsRef<Path>) -> anyhow::Result<RunConfig> {
@@ -273,10 +364,50 @@ mod tests {
         cfg.mode = TrainMode::Single(DatasetId::MpTrj);
         cfg.train.lr = 0.005;
         cfg.parallel.replicas = 4;
+        cfg.checkpoint.dir = Some("ckpts".to_string());
+        cfg.checkpoint.every = 3;
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.mode, cfg.mode);
         assert_eq!(back.train.lr, 0.005);
         assert_eq!(back.parallel.replicas, 4);
+        assert_eq!(back.checkpoint.dir.as_deref(), Some("ckpts"));
+        assert_eq!(back.checkpoint.every, 3);
+        assert!(back.checkpoint.resume.is_none());
+    }
+
+    #[test]
+    fn trajectory_fingerprint_tracks_trajectory_knobs_only() {
+        let a = RunConfig::default();
+        let mut b = RunConfig::default();
+        // Non-trajectory knobs: fingerprint unchanged.
+        b.train.epochs += 5;
+        b.artifacts_dir = "elsewhere".into();
+        b.checkpoint.dir = Some("ckpts".into());
+        assert_eq!(a.trajectory_fingerprint(), b.trajectory_fingerprint());
+        // Every trajectory knob changes it.
+        for mutate in [
+            (|c: &mut RunConfig| c.parallel.replicas = 4) as fn(&mut RunConfig),
+            |c| c.train.lr = 2e-3,
+            |c| c.train.seed = 8,
+            |c| c.data.per_dataset = 13,
+            |c| c.mode = TrainMode::MtlBase,
+            |c| c.train.patience = 9,
+        ] {
+            let mut c = RunConfig::default();
+            mutate(&mut c);
+            assert_ne!(
+                a.trajectory_fingerprint(),
+                c.trajectory_fingerprint(),
+                "trajectory knob change must change the fingerprint"
+            );
+        }
+    }
+
+    #[test]
+    fn checkpoint_every_zero_is_rejected() {
+        let mut cfg = RunConfig::default();
+        cfg.checkpoint.every = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -7,7 +7,31 @@ use std::time::Duration;
 
 use crate::util::json::Json;
 
-#[derive(Debug, Clone, Default)]
+/// Per-dataset batch coverage of one epoch on one rank: how many batches
+/// the dataset's shard planned and how many batch-slots the epoch actually
+/// consumed. `used > planned` means the dataset wrapped modulo its length
+/// (smaller source cycled to keep up with a larger one); `used < planned`
+/// means batches were dropped. The MTL-base loop used to silently truncate
+/// every epoch to the *smallest* dataset — recording coverage in the run
+/// log makes any such truncation visible forever.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Coverage {
+    pub dataset: String,
+    pub planned: usize,
+    pub used: usize,
+}
+
+impl Coverage {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(self.dataset.clone())),
+            ("planned", Json::from(self.planned)),
+            ("used", Json::from(self.used)),
+        ])
+    }
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct EpochMetrics {
     pub epoch: usize,
     pub steps: usize,
@@ -20,9 +44,18 @@ pub struct EpochMetrics {
     pub time_exec: Duration,
     pub time_comm: Duration,
     pub time_opt: Duration,
+    /// Per-dataset batch coverage (see [`Coverage`]).
+    pub coverage: Vec<Coverage>,
 }
 
 impl EpochMetrics {
+    /// Attach per-dataset coverage (builder-style, used right after
+    /// [`StepAccum::into_epoch`]).
+    pub fn with_coverage(mut self, coverage: Vec<Coverage>) -> EpochMetrics {
+        self.coverage = coverage;
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("epoch", Json::from(self.epoch)),
@@ -36,6 +69,10 @@ impl EpochMetrics {
             ("time_exec_s", Json::from(self.time_exec.as_secs_f64())),
             ("time_comm_s", Json::from(self.time_comm.as_secs_f64())),
             ("time_opt_s", Json::from(self.time_opt.as_secs_f64())),
+            (
+                "coverage",
+                Json::Array(self.coverage.iter().map(|c| c.to_json()).collect()),
+            ),
         ])
     }
 
@@ -100,12 +137,13 @@ impl StepAccum {
             time_exec: self.exec,
             time_comm: self.comm,
             time_opt: self.opt,
+            coverage: Vec::new(),
         }
     }
 }
 
 /// Full run log with CSV/JSON export (EXPERIMENTS.md quotes these).
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct RunLog {
     pub model_name: String,
     pub epochs: Vec<EpochMetrics>,
@@ -181,6 +219,22 @@ mod tests {
         let csv = log.to_csv();
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.starts_with("epoch,"));
+    }
+
+    #[test]
+    fn coverage_rides_along_into_json() {
+        let mut a = StepAccum::default();
+        a.record_step(1.0, 0.0, 0.0);
+        let e = a.into_epoch(0, Duration::ZERO, 1.0).with_coverage(vec![
+            Coverage { dataset: "big".into(), planned: 10, used: 10 },
+            Coverage { dataset: "small".into(), planned: 2, used: 10 },
+        ]);
+        assert_eq!(e.coverage.len(), 2);
+        let j = e.to_json();
+        let cov = j.get("coverage");
+        assert_eq!(cov.idx(1).get("dataset").as_str(), Some("small"));
+        assert_eq!(cov.idx(1).get("used").as_i64(), Some(10));
+        assert_eq!(cov.idx(1).get("planned").as_i64(), Some(2));
     }
 
     #[test]

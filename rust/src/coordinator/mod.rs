@@ -9,6 +9,6 @@ pub mod scheduler;
 pub mod trainer;
 
 pub use evaluate::{evaluate_model, EvalMatrix};
-pub use metrics::{EpochMetrics, RunLog, StepAccum};
+pub use metrics::{Coverage, EpochMetrics, RunLog, StepAccum};
 pub use scheduler::{EarlyStopper, LrSchedule};
 pub use trainer::{DataBundle, Heads, TrainOutcome, TrainedModel, Trainer};

@@ -18,11 +18,20 @@ impl EarlyStopper {
     }
 
     /// Record a validation loss; returns true if training should stop.
+    ///
+    /// NaN losses (the trainer's sentinel for "no validation batches this
+    /// epoch") are skipped entirely: they neither update `best` nor count
+    /// against patience. Previously a NaN poisoned `best` —
+    /// `!best.is_finite()` then held forever, so the bad-epoch counter was
+    /// reset on every update and early stopping was silently disabled for
+    /// the rest of the run. Infinite losses are NOT skipped: +inf is a
+    /// real, measured divergence and counts as a bad epoch like any other
+    /// non-improving value.
     pub fn update(&mut self, val_loss: f64) -> bool {
-        if self.patience == 0 {
+        if self.patience == 0 || val_loss.is_nan() {
             return false;
         }
-        if val_loss < self.best * (1.0 - self.min_delta) || !self.best.is_finite() {
+        if val_loss < self.best * (1.0 - self.min_delta) {
             self.best = val_loss;
             self.bad_epochs = 0;
             false
@@ -34,6 +43,19 @@ impl EarlyStopper {
 
     pub fn best(&self) -> f64 {
         self.best
+    }
+
+    /// `(best, bad_epochs)` — persisted by the checkpoint subsystem.
+    pub fn state(&self) -> (f64, usize) {
+        (self.best, self.bad_epochs)
+    }
+
+    /// Rebuild a stopper mid-run (checkpoint resume): a resumed run makes
+    /// the exact same stop decisions an uninterrupted one would. Built via
+    /// [`EarlyStopper::new`] so the two construction paths share one
+    /// `min_delta` and cannot drift.
+    pub fn restore(patience: usize, best: f64, bad_epochs: usize) -> EarlyStopper {
+        EarlyStopper { best, bad_epochs, ..EarlyStopper::new(patience) }
     }
 }
 
@@ -87,6 +109,43 @@ mod tests {
         assert!(!es.update(0.8)); // improvement resets
         assert!(!es.update(0.9)); // bad 1
         assert!(es.update(0.9)); // bad 2
+    }
+
+    #[test]
+    fn nan_updates_are_skipped_not_poisonous() {
+        let mut es = EarlyStopper::new(2);
+        assert!(!es.update(1.0));
+        // NaN neither improves, counts as bad, nor becomes the new best.
+        assert!(!es.update(f64::NAN));
+        assert_eq!(es.best(), 1.0, "NaN must not replace best");
+        // The seed's bug: after a NaN, best stayed NaN and bad_epochs was
+        // reset on every later update, so this sequence never stopped.
+        assert!(!es.update(2.0)); // bad 1
+        assert!(es.update(2.0), "must still stop after patience bad epochs");
+    }
+
+    #[test]
+    fn infinite_loss_counts_as_bad_epoch() {
+        // A diverged run (val_loss -> +inf) must still stop after patience:
+        // inf is a real measured value, unlike the NaN no-val sentinel.
+        let mut es = EarlyStopper::new(2);
+        assert!(!es.update(1.0));
+        assert!(!es.update(f64::INFINITY)); // bad 1
+        assert!(es.update(f64::INFINITY), "divergence must trigger the stop");
+        assert_eq!(es.best(), 1.0);
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_mid_window() {
+        let mut es = EarlyStopper::new(3);
+        es.update(1.0);
+        es.update(1.5); // bad 1
+        let (best, bad) = es.state();
+        let mut resumed = EarlyStopper::restore(3, best, bad);
+        // Both continue identically.
+        assert_eq!(es.update(1.4), resumed.update(1.4)); // bad 2
+        assert_eq!(es.update(1.4), resumed.update(1.4)); // bad 3 -> stop
+        assert_eq!(es.best(), resumed.best());
     }
 
     #[test]

@@ -21,16 +21,17 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::comm::{build_mesh, MeshRank, MeshShape};
+use crate::checkpoint::{self, OptHeads, TrainCheckpoint};
+use crate::comm::{build_mesh, Comm, MeshRank, MeshShape};
 use crate::config::{RunConfig, TrainMode};
-use crate::coordinator::metrics::{RunLog, StepAccum};
+use crate::coordinator::metrics::{Coverage, RunLog, StepAccum};
 use crate::coordinator::scheduler::EarlyStopper;
 use crate::data::batch::{BatchBuilder, BatchPool, GraphBatch};
 use crate::data::featurized::FeaturizedStore;
 use crate::data::split::{Split, SplitSpec};
 use crate::data::structures::{AtomicStructure, DatasetId};
 use crate::data::DDStore;
-use crate::model::optimizer::{AdamW, AdamWConfig};
+use crate::model::optimizer::{AdamW, AdamWConfig, AdamWState};
 use crate::model::params::ParamSet;
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
@@ -186,15 +187,74 @@ impl Trainer {
     }
 
     /// Run the configured training mode on `data`.
+    ///
+    /// When `cfg.checkpoint.dir` is set, rank 0 writes a CRC-guarded
+    /// checkpoint (`crate::checkpoint`) at every `cfg.checkpoint.every`-th
+    /// epoch boundary (plus the final / early-stop epoch). When
+    /// `cfg.checkpoint.resume` is set, training restarts from that file and
+    /// the resumed run is bit-identical to an uninterrupted one (proven in
+    /// `rust/tests/integration_checkpoint.rs`).
     pub fn train(&self, data: &DataBundle) -> anyhow::Result<TrainOutcome> {
+        validate_bundle(self.cfg.mode, data)?;
+        let resume = self.load_resume(data)?;
         match self.cfg.mode {
-            TrainMode::Single(d) => self.train_ddp(data, vec![d], false),
+            TrainMode::Single(d) => self.train_ddp(data, vec![d], resume),
             TrainMode::BaselineAll => {
-                self.train_ddp(data, data.datasets(), false)
+                let datasets = data.datasets();
+                self.train_ddp(data, datasets, resume)
             }
-            TrainMode::MtlBase => self.train_mtl_base(data),
-            TrainMode::MtlPar => self.train_mtl_par(data),
+            TrainMode::MtlBase => self.train_mtl_base(data, resume),
+            TrainMode::MtlPar => self.train_mtl_par(data, resume),
         }
+    }
+
+    /// Load + validate the checkpoint named by `cfg.checkpoint.resume`.
+    fn load_resume(
+        &self,
+        data: &DataBundle,
+    ) -> anyhow::Result<Option<Arc<TrainCheckpoint>>> {
+        let Some(spec) = &self.cfg.checkpoint.resume else {
+            return Ok(None);
+        };
+        let path = checkpoint::resolve_resume_path(spec)?;
+        let ckpt = checkpoint::load_train(&path)?;
+        let datasets = match self.cfg.mode {
+            TrainMode::Single(d) => vec![d],
+            _ => data.datasets(),
+        };
+        ckpt.validate_for(
+            &self.cfg.mode.name(),
+            self.cfg.train.seed,
+            &self.cfg.trajectory_fingerprint(),
+            &datasets,
+        )?;
+        // Structural compatibility with the engine this run is about to use
+        // (a clear error here beats an unflatten panic inside a rank loop).
+        let template = ParamSet::zeros_like(&self.engine.manifest.params);
+        anyhow::ensure!(
+            ckpt.model.encoder.same_structure(&template.subset("encoder.")),
+            "{}: checkpoint encoder structure does not match the loaded artifacts",
+            path.display()
+        );
+        let branch_template = template.subset("branch.");
+        let branches: Vec<&ParamSet> = match &ckpt.model.heads {
+            Heads::Shared(b) => vec![b],
+            Heads::PerDataset(m) => m.values().collect(),
+        };
+        for b in branches {
+            anyhow::ensure!(
+                b.same_structure(&branch_template),
+                "{}: checkpoint branch structure does not match the loaded artifacts",
+                path.display()
+            );
+        }
+        eprintln!(
+            "resuming {} from {} ({} epochs done)",
+            self.cfg.mode.name(),
+            path.display(),
+            ckpt.epochs_done
+        );
+        Ok(Some(Arc::new(ckpt)))
     }
 
     // -- mode: single-branch DDP (Single / BaselineAll) ---------------------
@@ -205,7 +265,7 @@ impl Trainer {
         &self,
         data: &DataBundle,
         datasets: Vec<DatasetId>,
-        _reserved: bool,
+        resume: Option<Arc<TrainCheckpoint>>,
     ) -> anyhow::Result<TrainOutcome> {
         let replicas = self.cfg.parallel.replicas;
         let shape = MeshShape { num_heads: 1, replicas };
@@ -233,8 +293,11 @@ impl Trainer {
                 let store = Arc::clone(&store);
                 let val_store = Arc::clone(&val_store);
                 let datasets = datasets.clone();
+                let resume = resume.clone();
                 handles.push(scope.spawn(move || {
-                    rank_loop_single_branch(engine, cfg, mr, store, val_store, &datasets)
+                    rank_loop_single_branch(
+                        engine, cfg, mr, store, val_store, &datasets, resume,
+                    )
                 }));
             }
             handles
@@ -249,7 +312,11 @@ impl Trainer {
 
     // -- mode: MTL-base (all heads everywhere, DDP only) ---------------------
 
-    fn train_mtl_base(&self, data: &DataBundle) -> anyhow::Result<TrainOutcome> {
+    fn train_mtl_base(
+        &self,
+        data: &DataBundle,
+        resume: Option<Arc<TrainCheckpoint>>,
+    ) -> anyhow::Result<TrainOutcome> {
         let replicas = self.cfg.parallel.replicas;
         let shape = MeshShape { num_heads: 1, replicas };
         let mesh = build_mesh(shape);
@@ -277,8 +344,11 @@ impl Trainer {
                 let stores = stores.clone();
                 let val_stores = val_stores.clone();
                 let datasets = datasets.clone();
+                let resume = resume.clone();
                 handles.push(scope.spawn(move || {
-                    rank_loop_mtl_base(engine, cfg, mr, stores, val_stores, &datasets)
+                    rank_loop_mtl_base(
+                        engine, cfg, mr, stores, val_stores, &datasets, resume,
+                    )
                 }));
             }
             handles
@@ -292,7 +362,11 @@ impl Trainer {
 
     // -- mode: MTL-par (multi-task parallelism x DDP) ------------------------
 
-    fn train_mtl_par(&self, data: &DataBundle) -> anyhow::Result<TrainOutcome> {
+    fn train_mtl_par(
+        &self,
+        data: &DataBundle,
+        resume: Option<Arc<TrainCheckpoint>>,
+    ) -> anyhow::Result<TrainOutcome> {
         let datasets = data.datasets();
         let replicas = self.cfg.parallel.replicas;
         let shape = MeshShape { num_heads: datasets.len(), replicas };
@@ -313,12 +387,13 @@ impl Trainer {
 
         let results = std::thread::scope(|scope| {
             let mut handles = Vec::new();
+            let datasets = &datasets;
             for mr in mesh {
                 let store = Arc::clone(&stores[mr.head]);
                 let val_store = Arc::clone(&val_stores[mr.head]);
-                let dataset = datasets[mr.head];
+                let resume = resume.clone();
                 handles.push(scope.spawn(move || {
-                    rank_loop_mtl_par(engine, cfg, mr, store, val_store, dataset)
+                    rank_loop_mtl_par(engine, cfg, mr, store, val_store, datasets, resume)
                 }));
             }
             handles
@@ -328,6 +403,68 @@ impl Trainer {
         })?;
 
         finalize_per_dataset("GFM-MTL-All (MTL-par)".to_string(), results, &datasets)
+    }
+
+    // -- warm-start fine-tuning ---------------------------------------------
+
+    /// Warm-start fine-tuning: adopt a pre-trained `encoder`, freeze it,
+    /// and train ONLY the branch of `dataset` on that dataset's data (DDP
+    /// over `cfg.parallel.replicas` ranks, branch gradients only). This is
+    /// how a new task registered at runtime via `TaskRegistry` rides on a
+    /// checkpointed foundation model without re-running pre-training.
+    pub fn fine_tune_head(
+        &self,
+        data: &DataBundle,
+        encoder: &ParamSet,
+        dataset: DatasetId,
+    ) -> anyhow::Result<TrainOutcome> {
+        anyhow::ensure!(
+            data.train.contains_key(&dataset)
+                && data.val.contains_key(&dataset)
+                && data.test.contains_key(&dataset),
+            "fine-tune bundle has no splits for {}",
+            dataset.name()
+        );
+        let template =
+            ParamSet::zeros_like(&self.engine.manifest.params).subset("encoder.");
+        anyhow::ensure!(
+            encoder.same_structure(&template),
+            "pre-trained encoder structure does not match the loaded artifacts \
+             ({} leaves vs {})",
+            encoder.len(),
+            template.len()
+        );
+        let replicas = self.cfg.parallel.replicas;
+        let shape = MeshShape { num_heads: 1, replicas };
+        let mesh = build_mesh(shape);
+        let engine = &self.engine;
+        let cfg = &self.cfg;
+        let cutoff = engine.manifest.config.cutoff;
+        let store =
+            FeaturizedStore::build(DDStore::new(data.train[&dataset].to_vec(), replicas), cutoff);
+        let val_store =
+            FeaturizedStore::build(DDStore::new(data.val[&dataset].to_vec(), replicas), cutoff);
+
+        let results = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for mr in mesh {
+                let store = Arc::clone(&store);
+                let val_store = Arc::clone(&val_store);
+                handles.push(scope.spawn(move || {
+                    rank_loop_fine_tune(engine, cfg, mr, store, val_store, encoder, dataset)
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rank thread panicked"))
+                .collect::<anyhow::Result<Vec<_>>>()
+        })?;
+
+        finalize_per_dataset(
+            format!("WarmStart-{}", dataset.name()),
+            results,
+            &[dataset],
+        )
     }
 }
 
@@ -438,7 +575,22 @@ fn distributed_val_loss(
     let counts = mr.global.allgather_f64(count);
     let total: f64 = sums.iter().sum();
     let n: f64 = counts.iter().sum();
-    Ok(if n > 0.0 { total / n } else { f64::NAN })
+    if n > 0.0 {
+        Ok(total / n)
+    } else {
+        // Zero val batches across the whole group: say so instead of
+        // silently handing the early stopper a NaN to choke on (the
+        // stopper itself is NaN-safe now, but the condition deserves a
+        // visible warning — it usually means the val split is too small
+        // for the replica count).
+        if mr.global.rank_in_group == 0 {
+            eprintln!(
+                "warning: validation split produced zero batches across the whole \
+                 group; val_loss is NaN and early stopping skips this epoch"
+            );
+        }
+        Ok(f64::NAN)
+    }
 }
 
 /// Shared epoch-count agreement: every rank must run the same number of
@@ -446,6 +598,163 @@ fn distributed_val_loss(
 fn agree_steps(mr: &MeshRank, planned: usize) -> usize {
     let counts = mr.global.allgather_f64(planned as f64);
     counts.into_iter().fold(f64::INFINITY, f64::min) as usize
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint / resume plumbing shared by the rank loops
+// ---------------------------------------------------------------------------
+
+/// Pre-flight check that `data` can serve `mode`: a non-empty dataset list
+/// with every split present. The seed panicked deep inside a rank loop
+/// (`&datasets[..1]` on an empty list) instead of returning a config error.
+pub fn validate_bundle(mode: TrainMode, data: &DataBundle) -> anyhow::Result<()> {
+    let datasets = data.datasets();
+    anyhow::ensure!(
+        !datasets.is_empty(),
+        "training bundle contains no datasets; generate data for at least one task \
+         before calling train"
+    );
+    for d in &datasets {
+        anyhow::ensure!(
+            data.val.contains_key(d) && data.test.contains_key(d),
+            "training bundle is missing the val/test split for {}",
+            d.name()
+        );
+    }
+    if let TrainMode::Single(d) = mode {
+        anyhow::ensure!(
+            data.train.contains_key(&d),
+            "mode {} but the bundle has no data for {}",
+            mode.name(),
+            d.name()
+        );
+    }
+    Ok(())
+}
+
+/// `(start_epoch, end_epoch)` for this run. A checkpoint that had already
+/// early-stopped runs zero further epochs (the stop decision was final).
+fn epoch_range(cfg: &RunConfig, resume: Option<&TrainCheckpoint>) -> (usize, usize) {
+    match resume {
+        Some(c) if c.stopped => (c.epochs_done, c.epochs_done),
+        Some(c) => (c.epochs_done, cfg.train.epochs.max(c.epochs_done)),
+        None => (0, cfg.train.epochs),
+    }
+}
+
+/// The stopper a rank starts with: fresh, or the persisted mid-run cursor
+/// so a resumed run makes the same stop decisions an uninterrupted one
+/// would.
+fn restore_stopper(cfg: &RunConfig, resume: Option<&TrainCheckpoint>) -> EarlyStopper {
+    match resume {
+        Some(c) => {
+            EarlyStopper::restore(cfg.train.patience, c.stopper_best, c.stopper_bad_epochs)
+        }
+        None => EarlyStopper::new(cfg.train.patience),
+    }
+}
+
+/// Whether ranks checkpoint after completing `epoch`. Must be a pure
+/// function of group-uniform values: the MTL-par save path includes a
+/// gather collective that every rank joins.
+fn save_after_epoch(cfg: &RunConfig, epoch: usize, end_epoch: usize, stop: bool) -> bool {
+    cfg.checkpoint.dir.is_some()
+        && (stop || epoch + 1 == end_epoch || (epoch + 1) % cfg.checkpoint.every == 0)
+}
+
+/// Restore a parameter set at a rank with the payload broadcast from group
+/// rank 0 — the traffic pattern of a real restore (one rank reads the
+/// file, the rest receive over the interconnect), and what makes
+/// `Comm::broadcast` traffic observable in the comm counters. Only the
+/// root's `saved` values are read; every other rank genuinely receives the
+/// broadcast bytes (the f32 -> f64 -> f32 relay is exact).
+fn restore_params_broadcast(comm: &Comm, params: &mut ParamSet, saved: &ParamSet) {
+    let mut flat = if comm.rank_in_group == 0 {
+        params.copy_matching_from(saved);
+        params.flatten()
+    } else {
+        vec![0.0f32; params.total_params()]
+    };
+    comm.broadcast(0, &mut flat);
+    params.unflatten_from(&flat);
+}
+
+/// Build + write a checkpoint after `epochs_done` completed epochs (called
+/// on rank 0 only; `cfg.checkpoint.dir` must be set).
+///
+/// Callers must NOT propagate a save error out of the rank loop with `?`:
+/// on a multi-rank mesh only rank 0 writes, so an early return from rank 0
+/// alone would leave its peers blocked forever in the next epoch's
+/// collectives. Use [`warn_save_failure`] and keep training.
+#[allow(clippy::too_many_arguments)]
+fn save_checkpoint_rank0(
+    cfg: &RunConfig,
+    epochs_done: usize,
+    stopped: bool,
+    stopper: &EarlyStopper,
+    model: TrainedModel,
+    opt_encoder: AdamWState,
+    opt_heads: OptHeads,
+    log: &RunLog,
+    comm_global: u64,
+    comm_head: u64,
+) -> anyhow::Result<()> {
+    let dir = cfg.checkpoint.dir.as_ref().expect("save_after_epoch checked dir");
+    let (stopper_best, stopper_bad_epochs) = stopper.state();
+    let ckpt = TrainCheckpoint {
+        mode: cfg.mode.name(),
+        train_seed: cfg.train.seed,
+        config_fingerprint: cfg.trajectory_fingerprint(),
+        epochs_done,
+        stopped,
+        stopper_best,
+        stopper_bad_epochs,
+        model,
+        opt_encoder,
+        opt_heads,
+        log: log.clone(),
+        comm_global,
+        comm_head,
+    };
+    checkpoint::save_train(&ckpt, checkpoint::epoch_path(dir, epochs_done))
+}
+
+/// A failed checkpoint write is a loud warning, never a training failure:
+/// losing fault tolerance beats deadlocking the mesh (rank 0 erroring out
+/// of its loop while peers wait in collectives) or killing a multi-day run
+/// over a transient disk condition.
+fn warn_save_failure(epochs_done: usize, result: anyhow::Result<()>) {
+    if let Err(e) = result {
+        eprintln!(
+            "warning: failed to write checkpoint after epoch {epochs_done}: {e:#}; \
+             training continues WITHOUT this checkpoint"
+        );
+    }
+}
+
+/// Pack per-leaf moment vectors into one contiguous slice (same leaf order
+/// as the parameter set they belong to).
+fn write_moments(mv: &[Vec<f32>], out: &mut [f32]) {
+    let mut off = 0;
+    for m in mv {
+        out[off..off + m.len()].copy_from_slice(m);
+        off += m.len();
+    }
+    debug_assert_eq!(off, out.len());
+}
+
+/// Inverse of [`write_moments`]: split a flat slice along `template`'s
+/// leaf boundaries.
+fn split_moments(template: &ParamSet, flat: &[f32]) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(template.len());
+    let mut off = 0;
+    for t in &template.tensors {
+        let n = t.numel();
+        out.push(flat[off..off + n].to_vec());
+        off += n;
+    }
+    debug_assert_eq!(off, flat.len());
+    out
 }
 
 // -- single-branch DDP loop (Single / BaselineAll) ---------------------------
@@ -457,6 +766,7 @@ fn rank_loop_single_branch(
     store: Arc<FeaturizedStore>,
     val_store: Arc<FeaturizedStore>,
     datasets: &[DatasetId],
+    resume: Option<Arc<TrainCheckpoint>>,
 ) -> anyhow::Result<RankResult> {
     let dims = engine.manifest.config.batch_dims();
     let (encoder, mut branches) = init_rank_params(engine, cfg, &datasets[..1]);
@@ -468,7 +778,7 @@ fn rank_loop_single_branch(
     let mut opt_enc = AdamW::new(adamw_cfg(cfg), &encoder);
     let mut opt_br = AdamW::new(adamw_cfg(cfg), &branch);
     let mut log = RunLog::new(cfg.mode.name());
-    let mut stopper = EarlyStopper::new(cfg.train.patience);
+    let mut stopper = restore_stopper(cfg, resume.as_deref());
     // Reused gradient-sync scratch (no per-step allocation).
     let mut enc_g = ParamSet::zeros_like(&engine.manifest.params).subset("encoder.");
     let mut br_g = ParamSet::zeros_like(&engine.manifest.params).subset("branch.");
@@ -476,6 +786,41 @@ fn rank_loop_single_branch(
     let mut br_flat: Vec<f32> = Vec::new();
     // Per-rank batch pool: epoch N+1 reuses epoch N's buffers.
     let mut pool = BatchPool::default();
+
+    let (start_epoch, end_epoch) = epoch_range(cfg, resume.as_deref());
+    let mut base_cg = 0u64;
+    if let Some(ckpt) = &resume {
+        // Rank 0 holds the checkpoint values; everyone else receives them
+        // over a broadcast (the real restore traffic pattern).
+        restore_params_broadcast(&mr.global, &mut encoder, &ckpt.model.encoder);
+        let saved_branch = match &ckpt.model.heads {
+            Heads::Shared(b) => b,
+            Heads::PerDataset(_) => anyhow::bail!(
+                "checkpoint is per-dataset but mode {} uses a shared head",
+                cfg.mode.name()
+            ),
+        };
+        restore_params_broadcast(&mr.global, &mut branch, saved_branch);
+        opt_enc.load_state(&ckpt.opt_encoder)?;
+        let saved_opt = match &ckpt.opt_heads {
+            OptHeads::Shared(s) => s,
+            OptHeads::PerDataset(_) => anyhow::bail!(
+                "checkpoint optimizer state is per-dataset but mode {} is shared",
+                cfg.mode.name()
+            ),
+        };
+        opt_br.load_state(saved_opt)?;
+        if mr.rank == 0 {
+            log = ckpt.log.clone();
+        }
+        base_cg = ckpt.comm_global;
+    }
+
+    let stream_label = if datasets.len() == 1 {
+        datasets[0].name()
+    } else {
+        format!("mixed({} tasks)", datasets.len())
+    };
 
     let val_batches = val_store.plan_epoch_batches(
         mr.replica,
@@ -485,7 +830,7 @@ fn rank_loop_single_branch(
         &mut pool,
     );
 
-    for epoch in 0..cfg.train.epochs {
+    for epoch in start_epoch..end_epoch {
         let t_epoch = Instant::now();
         let mut acc = StepAccum::default();
 
@@ -498,6 +843,7 @@ fn rank_loop_single_branch(
             &mut pool,
         );
         acc.data += t0.elapsed();
+        let planned = batches.len();
         let steps = agree_steps(&mr, batches.len());
 
         for step in 0..steps {
@@ -528,8 +874,30 @@ fn rank_loop_single_branch(
 
         assemble_full(&mut full, &encoder, &branch);
         let val_loss = distributed_val_loss(engine, &mr, &full, &val_batches)?;
-        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss));
-        if stopper.update(val_loss) {
+        let coverage =
+            vec![Coverage { dataset: stream_label.clone(), planned, used: steps }];
+        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss).with_coverage(coverage));
+        let stop = stopper.update(val_loss);
+        if save_after_epoch(cfg, epoch, end_epoch, stop) && mr.rank == 0 {
+            let saved = save_checkpoint_rank0(
+                cfg,
+                epoch + 1,
+                stop,
+                &stopper,
+                TrainedModel {
+                    name: cfg.mode.name(),
+                    encoder: encoder.clone(),
+                    heads: Heads::Shared(branch.clone()),
+                },
+                opt_enc.export_state(),
+                OptHeads::Shared(opt_br.export_state()),
+                &log,
+                base_cg + mr.global.stats().0,
+                0,
+            );
+            warn_save_failure(epoch + 1, saved);
+        }
+        if stop {
             break;
         }
     }
@@ -542,13 +910,14 @@ fn rank_loop_single_branch(
         encoder,
         branches: vec![(branch_dataset, branch)],
         log,
-        comm_global: cg,
+        comm_global: base_cg + cg,
         comm_head: 0,
     })
 }
 
 // -- MTL-base loop ------------------------------------------------------------
 
+#[allow(clippy::too_many_arguments)]
 fn rank_loop_mtl_base(
     engine: &Engine,
     cfg: &RunConfig,
@@ -556,6 +925,7 @@ fn rank_loop_mtl_base(
     stores: BTreeMap<DatasetId, Arc<FeaturizedStore>>,
     val_stores: BTreeMap<DatasetId, Arc<FeaturizedStore>>,
     datasets: &[DatasetId],
+    resume: Option<Arc<TrainCheckpoint>>,
 ) -> anyhow::Result<RankResult> {
     let dims = engine.manifest.config.batch_dims();
     let (mut encoder, mut branches) = init_rank_params(engine, cfg, datasets);
@@ -564,9 +934,52 @@ fn rank_loop_mtl_base(
     let mut opt_brs: Vec<AdamW> =
         branches.iter().map(|(_, b)| AdamW::new(adamw_cfg(cfg), b)).collect();
     let mut log = RunLog::new("GFM-MTL-All (MTL-base)");
-    let mut stopper = EarlyStopper::new(cfg.train.patience);
+    let mut stopper = restore_stopper(cfg, resume.as_deref());
     // Per-rank batch pool shared across datasets and epochs.
     let mut pool = BatchPool::default();
+
+    let (start_epoch, end_epoch) = epoch_range(cfg, resume.as_deref());
+    let mut base_cg = 0u64;
+    if let Some(ckpt) = &resume {
+        restore_params_broadcast(&mr.global, &mut encoder, &ckpt.model.encoder);
+        let saved_heads = match &ckpt.model.heads {
+            Heads::PerDataset(m) => m,
+            Heads::Shared(_) => anyhow::bail!(
+                "checkpoint is shared-head but mode mtl-base is per-dataset"
+            ),
+        };
+        for (k, (d, b)) in branches.iter_mut().enumerate() {
+            let d = *d;
+            let saved = saved_heads
+                .get(&d)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint has no head for {}", d.name()))?;
+            restore_params_broadcast(&mr.global, b, saved);
+            opt_brs[k].load_state(ckpt.opt_for(d)?)?;
+        }
+        opt_enc.load_state(&ckpt.opt_encoder)?;
+        if mr.rank == 0 {
+            log = ckpt.log.clone();
+        }
+        base_cg = ckpt.comm_global;
+    }
+
+    // Group-uniform active-dataset count: a dataset is active iff it has
+    // any samples at all. The featurized stores are shared by every rank,
+    // so this is identical on every rank with zero communication, and it is
+    // epoch-invariant (shard emptiness depends on store size, not on the
+    // epoch shuffle). Every rank must use the SAME normalizer — a per-rank
+    // count would make ranks with and without a tiny dataset's shard divide
+    // their encoder-grad sums differently before the cross-rank mean,
+    // silently reweighting the shared encoder update.
+    let active =
+        datasets.iter().filter(|&&d| !stores[&d].is_empty()).count().max(1) as f64;
+    // A dataset with no samples at all never produces a gradient on any
+    // rank. Its optimizer step must be skipped too (uniformly — store
+    // emptiness is identical on every rank): AdamW's decoupled weight
+    // decay moves parameters even under all-zero gradients, which would
+    // silently decay a head that was never trained.
+    let globally_empty: Vec<bool> =
+        datasets.iter().map(|d| stores[d].is_empty()).collect();
 
     // Validation: every dataset's shard through its own branch.
     let val_batches: Vec<(usize, Vec<GraphBatch>)> = datasets
@@ -586,7 +999,7 @@ fn rank_loop_mtl_base(
         })
         .collect();
 
-    for epoch in 0..cfg.train.epochs {
+    for epoch in start_epoch..end_epoch {
         let t_epoch = Instant::now();
         let mut acc = StepAccum::default();
 
@@ -605,8 +1018,14 @@ fn rank_loop_mtl_base(
             })
             .collect();
         acc.data += t0.elapsed();
-        let min_batches = per_ds_batches.iter().map(|b| b.len()).min().unwrap_or(0);
-        let steps = agree_steps(&mr, min_batches);
+        // Run up to the LARGEST dataset's batch count; smaller datasets
+        // cycle modulo their length (the `step % len` wrap below). The seed
+        // truncated every epoch to the SMALLEST dataset's count, silently
+        // discarding most of every larger source — exactly the imbalance
+        // failure mode the multi-fidelity setting is about. Coverage is
+        // recorded in the run log so truncation can never be silent again.
+        let max_batches = per_ds_batches.iter().map(|b| b.len()).max().unwrap_or(0);
+        let steps = agree_steps(&mr, max_batches);
 
         for step in 0..steps {
             // One batch per dataset through its branch; encoder grads mean.
@@ -616,7 +1035,13 @@ fn rank_loop_mtl_base(
             let mut mae_e_sum = 0.0;
             let mut mae_f_sum = 0.0;
             for (k, _) in datasets.iter().enumerate() {
-                let batch = &per_ds_batches[k][step % per_ds_batches[k].len().max(1)];
+                if per_ds_batches[k].is_empty() {
+                    // No local shard: contribute zero branch grads so the
+                    // global collective payload stays structurally uniform.
+                    br_grads.push(branches_scratch_branch(engine));
+                    continue;
+                }
+                let batch = &per_ds_batches[k][step % per_ds_batches[k].len()];
                 assemble_full(&mut full, &encoder, &branches[k].1);
                 let t1 = Instant::now();
                 let out = engine.train_step(&full, batch)?;
@@ -635,7 +1060,7 @@ fn rank_loop_mtl_base(
                 }
                 br_grads.push(out.grads.subset("branch."));
             }
-            let nh = datasets.len() as f64;
+            let nh = active;
             acc.record_step(loss_sum / nh, mae_e_sum / nh, mae_f_sum / nh);
 
             // ONE global allreduce over P_s + N_h * P_h (the paper's
@@ -664,10 +1089,21 @@ fn rank_loop_mtl_base(
             for (k, bg) in br_grads.iter_mut().enumerate() {
                 bg.unflatten_from(&payload[off..off + br_lens[k]]);
                 off += br_lens[k];
-                opt_brs[k].step(&mut branches[k].1, bg);
+                if !globally_empty[k] {
+                    opt_brs[k].step(&mut branches[k].1, bg);
+                }
             }
             acc.opt += t3.elapsed();
         }
+        let coverage: Vec<Coverage> = datasets
+            .iter()
+            .enumerate()
+            .map(|(k, d)| Coverage {
+                dataset: d.name(),
+                planned: per_ds_batches[k].len(),
+                used: if per_ds_batches[k].is_empty() { 0 } else { steps },
+            })
+            .collect();
         for b in per_ds_batches {
             pool.recycle(b);
         }
@@ -685,9 +1121,50 @@ fn rank_loop_mtl_base(
         }
         let sums = mr.global.allgather_f64(val_local);
         let counts = mr.global.allgather_f64(val_count);
-        let val_loss = sums.iter().sum::<f64>() / counts.iter().sum::<f64>().max(1.0);
-        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss));
-        if stopper.update(val_loss) {
+        let n: f64 = counts.iter().sum();
+        let val_loss = if n > 0.0 {
+            sums.iter().sum::<f64>() / n
+        } else {
+            // The seed divided by max(1.0), reporting a fake 0.0 val loss
+            // that immediately became the early stopper's "best".
+            if mr.rank == 0 {
+                eprintln!(
+                    "warning: epoch {epoch}: no validation batches on any rank; \
+                     val_loss is NaN and early stopping skips this epoch"
+                );
+            }
+            f64::NAN
+        };
+        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss).with_coverage(coverage));
+        let stop = stopper.update(val_loss);
+        if save_after_epoch(cfg, epoch, end_epoch, stop) && mr.rank == 0 {
+            let saved = save_checkpoint_rank0(
+                cfg,
+                epoch + 1,
+                stop,
+                &stopper,
+                TrainedModel {
+                    name: cfg.mode.name(),
+                    encoder: encoder.clone(),
+                    heads: Heads::PerDataset(
+                        branches.iter().map(|(d, b)| (*d, b.clone())).collect(),
+                    ),
+                },
+                opt_enc.export_state(),
+                OptHeads::PerDataset(
+                    branches
+                        .iter()
+                        .zip(&opt_brs)
+                        .map(|((d, _), o)| (d.name(), o.export_state()))
+                        .collect(),
+                ),
+                &log,
+                base_cg + mr.global.stats().0,
+                0,
+            );
+            warn_save_failure(epoch + 1, saved);
+        }
+        if stop {
             break;
         }
     }
@@ -700,7 +1177,7 @@ fn rank_loop_mtl_base(
         encoder,
         branches,
         log,
-        comm_global: cg,
+        comm_global: base_cg + cg,
         comm_head: 0,
     })
 }
@@ -710,16 +1187,26 @@ fn branches_scratch_encoder(engine: &Engine) -> ParamSet {
     ParamSet::zeros_like(&engine.manifest.params).subset("encoder.")
 }
 
+/// Branch scratch with full names ("branch.*"): zero gradients for a
+/// dataset with no local shard, and the decode template for the MTL-par
+/// checkpoint gather.
+fn branches_scratch_branch(engine: &Engine) -> ParamSet {
+    ParamSet::zeros_like(&engine.manifest.params).subset("branch.")
+}
+
 // -- MTL-par loop --------------------------------------------------------------
 
+#[allow(clippy::too_many_arguments)]
 fn rank_loop_mtl_par(
     engine: &Engine,
     cfg: &RunConfig,
     mr: MeshRank,
     store: Arc<FeaturizedStore>,
     val_store: Arc<FeaturizedStore>,
-    dataset: DatasetId,
+    datasets: &[DatasetId],
+    resume: Option<Arc<TrainCheckpoint>>,
 ) -> anyhow::Result<RankResult> {
+    let dataset = datasets[mr.head];
     let dims = engine.manifest.config.batch_dims();
     let (mut encoder, mut branches) = init_rank_params(engine, cfg, &[dataset]);
     let mut branch = branches.remove(0).1;
@@ -727,7 +1214,7 @@ fn rank_loop_mtl_par(
     let mut opt_enc = AdamW::new(adamw_cfg(cfg), &encoder);
     let mut opt_br = AdamW::new(adamw_cfg(cfg), &branch);
     let mut log = RunLog::new(format!("MTL-par head {}", dataset.name()));
-    let mut stopper = EarlyStopper::new(cfg.train.patience);
+    let mut stopper = restore_stopper(cfg, resume.as_deref());
     // Reused gradient-sync scratch (no per-step allocation).
     let mut enc_g = ParamSet::zeros_like(&engine.manifest.params).subset("encoder.");
     let mut br_g = ParamSet::zeros_like(&engine.manifest.params).subset("branch.");
@@ -735,6 +1222,32 @@ fn rank_loop_mtl_par(
     let mut br_flat: Vec<f32> = Vec::new();
     // Per-rank batch pool: epoch N+1 reuses epoch N's buffers.
     let mut pool = BatchPool::default();
+
+    let (start_epoch, end_epoch) = epoch_range(cfg, resume.as_deref());
+    let mut base_cg = 0u64;
+    let mut base_ch = 0u64;
+    if let Some(ckpt) = &resume {
+        // Encoder arrives over the global broadcast from rank 0; each
+        // head's branch over its sub-group broadcast from replica 0 —
+        // Figure 3's two-level pattern, applied to restore traffic.
+        restore_params_broadcast(&mr.global, &mut encoder, &ckpt.model.encoder);
+        let saved_branch = match &ckpt.model.heads {
+            Heads::PerDataset(m) => m.get(&dataset).ok_or_else(|| {
+                anyhow::anyhow!("checkpoint has no head for {}", dataset.name())
+            })?,
+            Heads::Shared(_) => anyhow::bail!(
+                "checkpoint is shared-head but mode mtl-par is per-dataset"
+            ),
+        };
+        restore_params_broadcast(&mr.head_group, &mut branch, saved_branch);
+        opt_enc.load_state(&ckpt.opt_encoder)?;
+        opt_br.load_state(ckpt.opt_for(dataset)?)?;
+        if mr.rank == 0 {
+            log = ckpt.log.clone();
+        }
+        base_cg = ckpt.comm_global;
+        base_ch = ckpt.comm_head;
+    }
 
     let val_batches = val_store.plan_epoch_batches(
         mr.replica,
@@ -744,7 +1257,7 @@ fn rank_loop_mtl_par(
         &mut pool,
     );
 
-    for epoch in 0..cfg.train.epochs {
+    for epoch in start_epoch..end_epoch {
         let t_epoch = Instant::now();
         let mut acc = StepAccum::default();
 
@@ -757,6 +1270,7 @@ fn rank_loop_mtl_par(
             &mut pool,
         );
         acc.data += t0.elapsed();
+        let planned = batches.len();
         let steps = agree_steps(&mr, batches.len());
 
         for step in 0..steps {
@@ -789,8 +1303,68 @@ fn rank_loop_mtl_par(
 
         assemble_full(&mut full, &encoder, &branch);
         let val_loss = distributed_val_loss(engine, &mr, &full, &val_batches)?;
-        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss));
-        if stopper.update(val_loss) {
+        let coverage =
+            vec![Coverage { dataset: dataset.name(), planned, used: steps }];
+        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss).with_coverage(coverage));
+        let stop = stopper.update(val_loss);
+        if save_after_epoch(cfg, epoch, end_epoch, stop) {
+            // Under multi-task parallelism no single rank holds every head,
+            // so rank 0 cannot write the checkpoint alone. Each head's
+            // replica-0 rank broadcasts its (branch, m, v) block over the
+            // global group — bit-exact relay (f32 -> f64 -> f32 preserves
+            // every value including -0.0, which a zero-padded sum would
+            // flip to +0.0 and break the bit-identity guarantee), and the
+            // checkpoint-gather traffic shows up in the comm counters the
+            // way it would on a real fabric.
+            let ph = branch.total_params();
+            let mut head_blocks: Vec<Vec<f32>> = Vec::with_capacity(datasets.len());
+            for h in 0..datasets.len() {
+                let root = mr.shape.rank_of(h, 0);
+                let mut block = vec![0.0f32; ph * 3];
+                if mr.rank == root {
+                    block[..ph].copy_from_slice(&branch.flatten());
+                    let st = opt_br.export_state();
+                    write_moments(&st.m, &mut block[ph..2 * ph]);
+                    write_moments(&st.v, &mut block[2 * ph..]);
+                }
+                mr.global.broadcast(root, &mut block);
+                head_blocks.push(block);
+            }
+            if mr.rank == 0 {
+                let mut heads = BTreeMap::new();
+                let mut opts = Vec::with_capacity(datasets.len());
+                // Step counts are group-uniform: every rank runs the same
+                // agreed step count each epoch.
+                let step_count = opt_br.step_count();
+                for (h, &d) in datasets.iter().enumerate() {
+                    let block = &head_blocks[h];
+                    let mut b = branches_scratch_branch(engine);
+                    b.unflatten_from(&block[..ph]);
+                    let m = split_moments(&b, &block[ph..2 * ph]);
+                    let v = split_moments(&b, &block[2 * ph..]);
+                    heads.insert(d, b);
+                    opts.push((d.name(), AdamWState { m, v, step: step_count }));
+                }
+                let saved = save_checkpoint_rank0(
+                    cfg,
+                    epoch + 1,
+                    stop,
+                    &stopper,
+                    TrainedModel {
+                        name: cfg.mode.name(),
+                        encoder: encoder.clone(),
+                        heads: Heads::PerDataset(heads),
+                    },
+                    opt_enc.export_state(),
+                    OptHeads::PerDataset(opts),
+                    &log,
+                    base_cg + mr.global.stats().0,
+                    base_ch + mr.head_group.stats().0,
+                );
+                warn_save_failure(epoch + 1, saved);
+            }
+        }
+        if stop {
             break;
         }
     }
@@ -804,8 +1378,102 @@ fn rank_loop_mtl_par(
         encoder,
         branches: vec![(dataset, branch)],
         log,
+        comm_global: base_cg + cg,
+        comm_head: base_ch + ch,
+    })
+}
+
+// -- warm-start fine-tune loop ------------------------------------------------
+
+/// Branch-only training against a frozen, pre-trained encoder. DDP over
+/// the global group (one head), branch gradients only — the encoder is
+/// used exactly as given and never updated.
+fn rank_loop_fine_tune(
+    engine: &Engine,
+    cfg: &RunConfig,
+    mr: MeshRank,
+    store: Arc<FeaturizedStore>,
+    val_store: Arc<FeaturizedStore>,
+    encoder: &ParamSet,
+    dataset: DatasetId,
+) -> anyhow::Result<RankResult> {
+    let dims = engine.manifest.config.batch_dims();
+    let (_, mut branches) = init_rank_params(engine, cfg, &[dataset]);
+    let mut branch = branches.remove(0).1;
+    let mut full = ParamSet::zeros_like(&engine.manifest.params);
+    let mut opt_br = AdamW::new(adamw_cfg(cfg), &branch);
+    let mut log = RunLog::new(format!("WarmStart-{}", dataset.name()));
+    let mut stopper = EarlyStopper::new(cfg.train.patience);
+    let mut br_g = ParamSet::zeros_like(&engine.manifest.params).subset("branch.");
+    let mut br_flat: Vec<f32> = Vec::new();
+    let mut pool = BatchPool::default();
+
+    let val_batches = val_store.plan_epoch_batches(
+        mr.replica,
+        mr.shape.replicas,
+        dims,
+        cfg.train.seed ^ VAL_SEED,
+        &mut pool,
+    );
+
+    for epoch in 0..cfg.train.epochs {
+        let t_epoch = Instant::now();
+        let mut acc = StepAccum::default();
+
+        let t0 = Instant::now();
+        let batches = store.plan_epoch_batches(
+            mr.replica,
+            mr.shape.replicas,
+            dims,
+            cfg.train.seed.wrapping_add(epoch as u64 * 7_777_777) ^ dataset.index() as u64,
+            &mut pool,
+        );
+        acc.data += t0.elapsed();
+        let planned = batches.len();
+        let steps = agree_steps(&mr, batches.len());
+
+        for step in 0..steps {
+            let batch = &batches[step % batches.len().max(1)];
+            assemble_full(&mut full, encoder, &branch);
+
+            let t1 = Instant::now();
+            let out = engine.train_step(&full, batch)?;
+            acc.exec += t1.elapsed();
+            acc.record_step(out.loss, out.mae_e, out.mae_f);
+
+            // Branch gradients only; the frozen encoder's grads are dropped.
+            let t2 = Instant::now();
+            out.grads.flatten_prefix_into("branch.", &mut br_flat);
+            mr.global.allreduce_mean(&mut br_flat);
+            br_g.unflatten_from(&br_flat);
+            acc.comm += t2.elapsed();
+
+            let t3 = Instant::now();
+            opt_br.step(&mut branch, &br_g);
+            acc.opt += t3.elapsed();
+        }
+        pool.recycle(batches);
+
+        assemble_full(&mut full, encoder, &branch);
+        let val_loss = distributed_val_loss(engine, &mr, &full, &val_batches)?;
+        let coverage =
+            vec![Coverage { dataset: dataset.name(), planned, used: steps }];
+        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss).with_coverage(coverage));
+        if stopper.update(val_loss) {
+            break;
+        }
+    }
+
+    let (cg, _) = mr.global.stats();
+    Ok(RankResult {
+        rank: mr.rank,
+        head: mr.head,
+        replica: mr.replica,
+        encoder: encoder.clone(),
+        branches: vec![(dataset, branch)],
+        log,
         comm_global: cg,
-        comm_head: ch,
+        comm_head: 0,
     })
 }
 

@@ -94,7 +94,52 @@
 //!
 //! Training `mtl-par` over six tasks simply builds a 6 x M mesh — head
 //! count follows the task list.
+//!
+//! ## Checkpoint / resume / warm start
+//!
+//! Multi-day pre-training is only viable with fault tolerance. The
+//! [`checkpoint`] module persists everything a run needs to restart at an
+//! epoch boundary — parameters, AdamW moments, the metrics log, the
+//! early-stopper cursor — in a versioned, CRC32-guarded binary file, and a
+//! resumed run is **bit-identical** to an uninterrupted one (collectives
+//! reduce in rank order, so even multi-rank meshes replay exactly; proven
+//! in `rust/tests/integration_checkpoint.rs`):
+//!
+//! ```no_run
+//! use hydra_mtp::{Session, TrainMode};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut session = Session::builder()
+//!     .artifacts("artifacts")
+//!     .mode(TrainMode::MtlPar)
+//!     .epochs(12)
+//!     .checkpoint_dir("ckpts")        // rank 0 writes ckpts/epoch_NNNN.ckpt
+//!     .build()?;
+//! let outcome = session.train()?;
+//!
+//! // ... the job is killed; a later process picks the run back up:
+//! let mut session = Session::builder()
+//!     .artifacts("artifacts")
+//!     .mode(TrainMode::MtlPar)
+//!     .epochs(12)
+//!     .build()?;
+//! let resumed = session.resume("ckpts")?;   // latest epoch_*.ckpt wins
+//!
+//! // Persist just the model for serving / warm starts:
+//! session.save_model(&resumed.model, "gfm.ckpt")?;
+//! let model = hydra_mtp::Session::load_model("gfm.ckpt")?;
+//! # let _ = (outcome, model); Ok(())
+//! # }
+//! ```
+//!
+//! Warm-start fine-tuning loads a pre-trained encoder, freezes it, and
+//! trains only a new task's head — `Session::fine_tune(&model, new_task)`
+//! — so tasks registered at runtime ride on an existing foundation model
+//! without re-running pre-training. The CLI exposes the same knobs as
+//! `hydra-mtp train --checkpoint-dir DIR [--resume PATH]`, and
+//! `examples/pretrain_e2e.rs` demonstrates interrupt-and-resume end to end.
 
+pub mod checkpoint;
 pub mod comm;
 pub mod config;
 pub mod coordinator;

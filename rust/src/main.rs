@@ -64,7 +64,10 @@ COMMANDS
   datagen  --out DIR [--per-dataset N] [--seed S] [--max-atoms A]
   train    --mode MODE [--config FILE] [--epochs N] [--replicas M]
            [--per-dataset N] [--seed S] [--lr LR] [--artifacts DIR] [--csv FILE]
+           [--checkpoint-dir DIR] [--checkpoint-every N] [--resume PATH]
            MODE: ANI1x|QM7-X|Transition1x|MPTrj|Alexandria|baseline-all|mtl-base|mtl-par
+           --checkpoint-dir writes CRC-guarded epoch_NNNN.ckpt files; --resume
+           restarts bit-identically from a checkpoint file (or the newest in a dir)
   table1   [--epochs N] [--per-dataset N] [--replicas M] [--csv FILE]
   table2   (same flags; same training runs, force metric)
   fig1     [--per-dataset N] [--seed S] [--max-atoms A]
@@ -131,12 +134,22 @@ fn cmd_datagen(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let mut allowed = vec!["mode", "csv"];
+    let mut allowed = vec!["mode", "csv", "checkpoint-dir", "checkpoint-every", "resume"];
     allowed.extend(CONFIG_FLAGS);
     args.ensure_known("train", &allowed)?;
 
     let mut cfg = base_config(args)?;
     cfg.mode = TrainMode::parse(&args.str("mode", "mtl-par"))?;
+    if let Some(dir) = args.opt_str("checkpoint-dir") {
+        cfg.checkpoint.dir = Some(dir.to_string());
+    }
+    if let Some(every) = args.opt_str("checkpoint-every") {
+        cfg.checkpoint.every = every.parse()?;
+    }
+    if let Some(path) = args.opt_str("resume") {
+        cfg.checkpoint.resume = Some(path.to_string());
+    }
+    cfg.validate()?;
     println!("loading artifacts from {} ...", cfg.artifacts_dir);
     let mut session = Session::builder().config(cfg).build()?;
     println!("platform: {}; generating data ...", session.engine().platform());

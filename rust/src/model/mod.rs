@@ -7,5 +7,5 @@ pub mod optimizer;
 pub mod params;
 
 pub use arch::{ArchDims, ParallelismRegime};
-pub use optimizer::{AdamW, AdamWConfig, Sgd};
+pub use optimizer::{AdamW, AdamWConfig, AdamWState, Sgd};
 pub use params::{Init, LeafMeta, ParamSet};

@@ -30,6 +30,16 @@ impl Default for AdamWConfig {
     }
 }
 
+/// Serializable snapshot of an [`AdamW`] optimizer's mutable state, used
+/// by the checkpoint subsystem (`crate::checkpoint`). Moments are stored in
+/// the same leaf order as the parameter set the optimizer was built for.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdamWState {
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub step: u64,
+}
+
 /// AdamW state for one parameter set (first/second moments + step count).
 pub struct AdamW {
     pub cfg: AdamWConfig,
@@ -50,6 +60,34 @@ impl AdamW {
 
     pub fn step_count(&self) -> u64 {
         self.step
+    }
+
+    /// Snapshot the moments + step count (checkpoint save path).
+    pub fn export_state(&self) -> AdamWState {
+        AdamWState { m: self.m.clone(), v: self.v.clone(), step: self.step }
+    }
+
+    /// Restore moments + step count from a checkpoint snapshot. The state
+    /// must match this optimizer's parameter structure exactly.
+    pub fn load_state(&mut self, st: &AdamWState) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            st.m.len() == self.m.len() && st.v.len() == self.v.len(),
+            "optimizer state: {} moment leaves saved, {} expected",
+            st.m.len(),
+            self.m.len()
+        );
+        for (i, (m, v)) in st.m.iter().zip(&st.v).enumerate() {
+            anyhow::ensure!(
+                m.len() == self.m[i].len() && v.len() == self.v[i].len(),
+                "optimizer state leaf {i}: {} elements saved, {} expected",
+                m.len(),
+                self.m[i].len()
+            );
+        }
+        self.m = st.m.clone();
+        self.v = st.v.clone();
+        self.step = st.step;
+        Ok(())
     }
 
     /// Apply one decoupled-weight-decay Adam update in place.

@@ -221,6 +221,41 @@ impl ParamSet {
             }
         }
     }
+
+    /// Rebuild a set from explicit metas + tensors (the checkpoint load
+    /// path). Every tensor must match its meta's shape and dtype.
+    pub fn from_parts(metas: Vec<LeafMeta>, tensors: Vec<Tensor>) -> anyhow::Result<ParamSet> {
+        anyhow::ensure!(
+            metas.len() == tensors.len(),
+            "param set: {} metas vs {} tensors",
+            metas.len(),
+            tensors.len()
+        );
+        for (m, t) in metas.iter().zip(&tensors) {
+            anyhow::ensure!(
+                t.shape == m.shape,
+                "leaf {}: tensor shape {:?} does not match meta shape {:?}",
+                m.name,
+                t.shape,
+                m.shape
+            );
+            anyhow::ensure!(t.dtype() == m.dtype, "leaf {}: dtype mismatch", m.name);
+        }
+        let metas = Arc::new(metas);
+        Ok(ParamSet { index: Self::build_index(&metas), metas, tensors })
+    }
+
+    /// True when `other` has identical leaf names and shapes, in the same
+    /// order (checkpoint/engine compatibility check before values are
+    /// copied across).
+    pub fn same_structure(&self, other: &ParamSet) -> bool {
+        self.metas.len() == other.metas.len()
+            && self
+                .metas
+                .iter()
+                .zip(other.metas.iter())
+                .all(|(a, b)| a.name == b.name && a.shape == b.shape)
+    }
 }
 
 #[cfg(test)]

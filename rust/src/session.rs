@@ -91,6 +91,27 @@ impl SessionBuilder {
         self
     }
 
+    /// Directory for per-epoch checkpoints (rank 0 writes
+    /// `DIR/epoch_NNNN.ckpt`; see `crate::checkpoint`).
+    pub fn checkpoint_dir(mut self, dir: impl Into<String>) -> Self {
+        self.config.checkpoint.dir = Some(dir.into());
+        self
+    }
+
+    /// Checkpoint cadence in epochs (the final / early-stop epoch is
+    /// always saved).
+    pub fn checkpoint_every(mut self, every: usize) -> Self {
+        self.config.checkpoint.every = every;
+        self
+    }
+
+    /// Resume training from a checkpoint file or directory (see
+    /// [`Session::resume`] for the one-shot equivalent).
+    pub fn resume_from(mut self, path: impl Into<String>) -> Self {
+        self.config.checkpoint.resume = Some(path.into());
+        self
+    }
+
     /// Replace the entire run config (setters applied afterwards still win).
     pub fn config(mut self, config: RunConfig) -> Self {
         self.config = config;
@@ -214,6 +235,57 @@ impl Session {
     /// across modes this way; `experiments::run_tables` uses it).
     pub fn train_on(&self, data: &DataBundle) -> anyhow::Result<TrainOutcome> {
         Trainer::new(Arc::clone(&self.engine), self.config.clone()).train(data)
+    }
+
+    /// Resume an interrupted run from `path` — a checkpoint file, or a
+    /// directory of `epoch_*.ckpt` files (highest epoch wins). Restores
+    /// parameters, optimizer moments, the metrics log, and the
+    /// early-stopper cursor; the resumed run is bit-identical to an
+    /// uninterrupted one (see `rust/tests/integration_checkpoint.rs`).
+    pub fn resume(&mut self, path: impl Into<String>) -> anyhow::Result<TrainOutcome> {
+        let prev = self.config.checkpoint.resume.replace(path.into());
+        let out = self.train();
+        self.config.checkpoint.resume = prev;
+        out
+    }
+
+    /// Persist a trained model (encoder + heads) as a CRC-guarded
+    /// checkpoint file; load it back with [`Session::load_model`].
+    pub fn save_model(
+        &self,
+        model: &TrainedModel,
+        path: impl AsRef<std::path::Path>,
+    ) -> anyhow::Result<()> {
+        crate::checkpoint::save_model(model, path)
+    }
+
+    /// Load a model saved with [`Session::save_model`] (an associated
+    /// function: no engine or session needed — useful for offline
+    /// inspection; pair with an engine-holding session for serving).
+    pub fn load_model(path: impl AsRef<std::path::Path>) -> anyhow::Result<TrainedModel> {
+        crate::checkpoint::load_model(path)
+    }
+
+    /// Warm-start fine-tuning: adopt `base`'s pre-trained encoder, freeze
+    /// it, and train ONLY a new head for `task` on that task's generated
+    /// data (config-driven: epochs/lr/replicas come from this session).
+    /// `task` must be registered — typically a custom task added via
+    /// `TaskRegistry::global().register(..)` after pre-training on the
+    /// presets. Returns a model whose single per-dataset head serves
+    /// `task` through [`Session::predictor`].
+    pub fn fine_tune(
+        &self,
+        base: &TrainedModel,
+        task: DatasetId,
+    ) -> anyhow::Result<TrainOutcome> {
+        anyhow::ensure!(
+            self.registry.try_spec(task).is_some(),
+            "task index {} is not registered",
+            task.index()
+        );
+        let data = DataBundle::generate(&self.config.data, &[task]);
+        Trainer::new(Arc::clone(&self.engine), self.config.clone())
+            .fine_tune_head(&data, &base.encoder, task)
     }
 
     /// Per-task (energy MAE, force MAE) on the held-out test split.

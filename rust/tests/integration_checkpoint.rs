@@ -1,0 +1,595 @@
+//! Integration: the checkpoint/serialization subsystem and the
+//! imbalanced-dataset training fixes.
+//!
+//! Engine-free tests cover the binary format (round-trip bit-identity, CRC
+//! corruption rejection, bundle validation) and run everywhere, including
+//! artifact-less CI. Engine-gated tests prove the headline property:
+//! **resume-at-epoch-k is bit-identical to an uninterrupted run** across
+//! all three training modes — same style as the featurized-pipeline
+//! oracles of PR 2.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use hydra_mtp::checkpoint::{self, OptHeads, TrainCheckpoint};
+use hydra_mtp::config::{RunConfig, TrainMode};
+use hydra_mtp::coordinator::trainer::validate_bundle;
+use hydra_mtp::coordinator::{DataBundle, Heads, RunLog, StepAccum, TrainedModel, Trainer};
+use hydra_mtp::data::structures::{DatasetId, ALL_DATASETS};
+use hydra_mtp::model::optimizer::AdamWState;
+use hydra_mtp::model::params::{Init, LeafMeta, ParamSet};
+use hydra_mtp::runtime::Engine;
+use hydra_mtp::session::Session;
+use hydra_mtp::tensor::{DType, Tensor};
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+/// Shared engine, or `None` (test skips with a clear message) when the AOT
+/// artifacts are absent / the binary was built without `pjrt`.
+fn engine() -> Option<Arc<Engine>> {
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Option<Arc<Engine>>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| match Engine::load("artifacts") {
+            Ok(e) => Some(Arc::new(e)),
+            Err(e) => {
+                eprintln!(
+                    "SKIP: AOT artifacts unavailable ({e:#}); run `make artifacts` \
+                     and enable the `pjrt` feature to run checkpoint resume tests"
+                );
+                None
+            }
+        })
+        .clone()
+}
+
+fn tiny_config(mode: TrainMode, epochs: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.mode = mode;
+    cfg.parallel.replicas = 1;
+    cfg.train.epochs = epochs;
+    cfg.train.patience = 0;
+    cfg.data.per_dataset = 40;
+    cfg.data.max_atoms = 10;
+    cfg
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("hydra_mtp_ckpt_it_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_params_bits_eq(a: &ParamSet, b: &ParamSet, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: leaf count");
+    for ((na, ta), (nb, tb)) in a.iter().zip(b.iter()) {
+        assert_eq!(na, nb, "{what}: leaf name");
+        assert_eq!(ta.dtype(), tb.dtype(), "{what}: {na} dtype");
+        assert_eq!(ta.shape, tb.shape, "{what}: {na} shape");
+        match ta.dtype() {
+            DType::F32 => {
+                let (xa, xb) = (ta.as_f32(), tb.as_f32());
+                assert_eq!(xa.len(), xb.len(), "{what}: {na} numel");
+                for (i, (x, y)) in xa.iter().zip(xb).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{what}: {na}[{i}]: {x} vs {y} (bitwise)"
+                    );
+                }
+            }
+            DType::I32 => assert_eq!(ta.as_i32(), tb.as_i32(), "{what}: {na}"),
+        }
+    }
+}
+
+fn assert_models_bits_eq(a: &TrainedModel, b: &TrainedModel) {
+    assert_params_bits_eq(&a.encoder, &b.encoder, "encoder");
+    match (&a.heads, &b.heads) {
+        (Heads::Shared(x), Heads::Shared(y)) => assert_params_bits_eq(x, y, "shared head"),
+        (Heads::PerDataset(x), Heads::PerDataset(y)) => {
+            assert_eq!(x.len(), y.len(), "head count");
+            for (d, bx) in x {
+                assert_params_bits_eq(bx, &y[d], &format!("head {}", d.name()));
+            }
+        }
+        _ => panic!("heads kind mismatch"),
+    }
+}
+
+/// Trajectory equality ignoring wall-clock timings (those legitimately
+/// differ between runs; everything numeric must match to the last bit).
+fn assert_logs_bits_eq(a: &RunLog, b: &RunLog) {
+    assert_eq!(a.epochs.len(), b.epochs.len(), "epoch count");
+    for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(ea.epoch, eb.epoch);
+        assert_eq!(ea.steps, eb.steps, "epoch {}", ea.epoch);
+        assert_eq!(
+            ea.train_loss.to_bits(),
+            eb.train_loss.to_bits(),
+            "epoch {} train_loss {} vs {}",
+            ea.epoch,
+            ea.train_loss,
+            eb.train_loss
+        );
+        assert_eq!(ea.mae_e.to_bits(), eb.mae_e.to_bits(), "epoch {}", ea.epoch);
+        assert_eq!(ea.mae_f.to_bits(), eb.mae_f.to_bits(), "epoch {}", ea.epoch);
+        assert_eq!(
+            ea.val_loss.to_bits(),
+            eb.val_loss.to_bits(),
+            "epoch {} val_loss",
+            ea.epoch
+        );
+        assert_eq!(ea.coverage, eb.coverage, "epoch {} coverage", ea.epoch);
+    }
+}
+
+/// Synthetic parameter set with awkward bit patterns (-0.0, NaN, inf,
+/// denormals) that only an exact binary encoding survives.
+fn gnarly_params() -> ParamSet {
+    let metas = vec![
+        LeafMeta {
+            name: "branch.trunk.w".into(),
+            shape: vec![2, 3],
+            dtype: DType::F32,
+            init: Some(Init::Lecun { fan_in: 2 }),
+        },
+        LeafMeta {
+            name: "encoder.embed".into(),
+            shape: vec![4],
+            dtype: DType::F32,
+            init: Some(Init::Normal { scale: 0.5 }),
+        },
+        LeafMeta { name: "encoder.ids".into(), shape: vec![3], dtype: DType::I32, init: None },
+    ];
+    let tensors = vec![
+        Tensor::from_f32(&[2, 3], vec![1.5, -0.0, f32::NAN, f32::INFINITY, 1e-42, -7.25]),
+        Tensor::from_f32(&[4], vec![0.1, 0.2, 0.3, f32::NEG_INFINITY]),
+        Tensor::from_i32(&[3], vec![-1, 0, i32::MAX]),
+    ];
+    ParamSet::from_parts(metas, tensors).unwrap()
+}
+
+fn synthetic_train_checkpoint() -> TrainCheckpoint {
+    let p = gnarly_params();
+    let mut log = RunLog::new("GFM-MTL-All (MTL-base)");
+    let mut acc = StepAccum::default();
+    acc.record_step(1.25, 0.5, 0.25);
+    acc.data = std::time::Duration::new(3, 141_592_653);
+    log.push(acc.into_epoch(0, std::time::Duration::new(7, 999_999_999), 2.5));
+    let heads: BTreeMap<DatasetId, ParamSet> = [
+        (DatasetId::Ani1x, p.subset("branch.")),
+        (DatasetId::MpTrj, p.subset("branch.")),
+    ]
+    .into_iter()
+    .collect();
+    let opt = AdamWState {
+        m: vec![vec![0.5, -0.0, 2.0e-40, 1.0, -1.0, 0.0]],
+        v: vec![vec![0.25; 6]],
+        step: 17,
+    };
+    TrainCheckpoint {
+        mode: "GFM-MTL-All (MTL-base)".into(),
+        train_seed: 7,
+        config_fingerprint: "unit-test-fingerprint".into(),
+        epochs_done: 1,
+        stopped: false,
+        stopper_best: 2.5,
+        stopper_bad_epochs: 0,
+        model: TrainedModel {
+            name: "GFM-MTL-All (MTL-base)".into(),
+            encoder: p.subset("encoder."),
+            heads: Heads::PerDataset(heads),
+        },
+        opt_encoder: AdamWState {
+            m: vec![vec![0.0, f32::NAN, 3.5, -0.0], vec![1.0, 2.0, 3.0]],
+            v: vec![vec![0.5; 4], vec![0.25; 3]],
+            step: 17,
+        },
+        opt_heads: OptHeads::PerDataset(vec![
+            ("ANI1x".into(), opt.clone()),
+            ("MPTrj".into(), opt),
+        ]),
+        log,
+        comm_global: 123_456_789,
+        comm_head: 42,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine-free: format round-trip + corruption + validation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn train_checkpoint_roundtrips_every_field_bit_for_bit() {
+    let ckpt = synthetic_train_checkpoint();
+    let dir = tmp_dir("roundtrip");
+    let path = dir.join("ck.ckpt");
+    checkpoint::save_train(&ckpt, &path).unwrap();
+    let back = checkpoint::load_train(&path).unwrap();
+
+    assert_eq!(back.mode, ckpt.mode);
+    assert_eq!(back.train_seed, ckpt.train_seed);
+    assert_eq!(back.config_fingerprint, ckpt.config_fingerprint);
+    assert_eq!(back.epochs_done, ckpt.epochs_done);
+    assert_eq!(back.stopped, ckpt.stopped);
+    assert_eq!(back.stopper_best.to_bits(), ckpt.stopper_best.to_bits());
+    assert_eq!(back.stopper_bad_epochs, ckpt.stopper_bad_epochs);
+    assert_models_bits_eq(&back.model, &ckpt.model);
+    assert_eq!(back.opt_encoder.step, ckpt.opt_encoder.step);
+    // Moment vectors bit-for-bit (NaN-bearing, so compare bit patterns).
+    for (a, b) in back.opt_encoder.m.iter().zip(&ckpt.opt_encoder.m) {
+        let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ab, bb, "encoder first moments");
+    }
+    assert_eq!(back.opt_heads, ckpt.opt_heads);
+    // Durations round-trip exactly (stored as secs + nanos, not float).
+    assert_eq!(back.log.model_name, ckpt.log.model_name);
+    assert_eq!(back.log.epochs[0].time_data, ckpt.log.epochs[0].time_data);
+    assert_eq!(back.log.epochs[0].time_total, ckpt.log.epochs[0].time_total);
+    assert_eq!(back.log.epochs[0].steps, ckpt.log.epochs[0].steps);
+    assert_eq!(back.comm_global, ckpt.comm_global);
+    assert_eq!(back.comm_head, ckpt.comm_head);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn corrupted_checkpoint_is_rejected_via_crc() {
+    let ckpt = synthetic_train_checkpoint();
+    let dir = tmp_dir("corrupt");
+    let path = dir.join("ck.ckpt");
+    checkpoint::save_train(&ckpt, &path).unwrap();
+    let clean = std::fs::read(&path).unwrap();
+
+    // Flip a single bit at several positions inside the payload; every one
+    // must be rejected loudly, never silently loaded.
+    for frac in [0.2, 0.5, 0.8] {
+        let mut bytes = clean.clone();
+        let pos = 17 + ((bytes.len() - 25) as f64 * frac) as usize;
+        bytes[pos] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = checkpoint::load_train(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("checksum") || msg.contains("corrupt"),
+            "flip at {pos}: expected a CRC error, got: {msg}"
+        );
+    }
+
+    // Truncation is caught before the CRC even runs.
+    std::fs::write(&path, &clean[..clean.len() / 2]).unwrap();
+    assert!(checkpoint::load_train(&path).is_err());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn validate_for_catches_mode_seed_config_and_head_mismatches() {
+    let ckpt = synthetic_train_checkpoint();
+    let fp = "unit-test-fingerprint";
+    ckpt.validate_for(
+        "GFM-MTL-All (MTL-base)",
+        7,
+        fp,
+        &[DatasetId::Ani1x, DatasetId::MpTrj],
+    )
+    .unwrap();
+    let err = ckpt
+        .validate_for("GFM-MTL-All (MTL-par)", 7, fp, &[DatasetId::Ani1x])
+        .unwrap_err();
+    assert!(format!("{err}").contains("mode"), "{err}");
+    let err = ckpt
+        .validate_for("GFM-MTL-All (MTL-base)", 8, fp, &[DatasetId::Ani1x])
+        .unwrap_err();
+    assert!(format!("{err}").contains("seed"), "{err}");
+    // A changed trajectory knob (e.g. --replicas or --lr) changes the
+    // fingerprint and must be refused, not silently diverge.
+    let err = ckpt
+        .validate_for("GFM-MTL-All (MTL-base)", 7, "other-config", &[DatasetId::Ani1x])
+        .unwrap_err();
+    assert!(format!("{err}").contains("trajectory config"), "{err}");
+    let err = ckpt
+        .validate_for("GFM-MTL-All (MTL-base)", 7, fp, &[DatasetId::Qm7x])
+        .unwrap_err();
+    assert!(format!("{err}").contains("no head"), "{err}");
+}
+
+#[test]
+fn empty_bundle_is_a_config_error_not_a_panic() {
+    // Regression: `train_ddp` used to panic via `&datasets[..1]` deep in a
+    // rank thread when the bundle had no datasets.
+    let empty = DataBundle {
+        train: BTreeMap::new(),
+        val: BTreeMap::new(),
+        test: BTreeMap::new(),
+    };
+    let err = validate_bundle(TrainMode::BaselineAll, &empty).unwrap_err();
+    assert!(format!("{err}").contains("no datasets"), "{err}");
+    let err = validate_bundle(TrainMode::MtlPar, &empty).unwrap_err();
+    assert!(format!("{err}").contains("no datasets"), "{err}");
+
+    // A bundle that lacks the requested single dataset is also an error.
+    let cfg = tiny_config(TrainMode::Single(DatasetId::Ani1x), 1);
+    let data = DataBundle::generate(&cfg.data, &[DatasetId::Qm7x]);
+    let err = validate_bundle(TrainMode::Single(DatasetId::Ani1x), &data).unwrap_err();
+    assert!(format!("{err}").contains("ANI1x"), "{err}");
+    validate_bundle(TrainMode::Single(DatasetId::Qm7x), &data).unwrap();
+}
+
+#[test]
+fn writes_sample_checkpoint_artifact_for_ci() {
+    // CI runs this test in release and uploads target/ckpt_ci/ as the
+    // `sample_checkpoint` build artifact (see .github/workflows/ci.yml).
+    let dir = std::path::Path::new("target/ckpt_ci");
+    std::fs::create_dir_all(dir).unwrap();
+    let ckpt = synthetic_train_checkpoint();
+    let train_path = dir.join("sample_train.ckpt");
+    checkpoint::save_train(&ckpt, &train_path).unwrap();
+    let model_path = dir.join("sample_model.ckpt");
+    checkpoint::save_model(&ckpt.model, &model_path).unwrap();
+
+    let back = checkpoint::load_model(&model_path).unwrap();
+    assert_models_bits_eq(&back, &ckpt.model);
+    let back = checkpoint::load_train(&train_path).unwrap();
+    assert_eq!(back.epochs_done, ckpt.epochs_done);
+}
+
+// ---------------------------------------------------------------------------
+// engine-gated: resume parity across all three modes
+// ---------------------------------------------------------------------------
+
+/// Uninterrupted run of `epochs` vs "killed at epoch k": train k epochs
+/// with checkpointing, then resume to `epochs` from the written file. The
+/// final model and the full metrics trajectory must match to the last bit.
+fn resume_parity_case(e: Arc<Engine>, mode: TrainMode, datasets: &[DatasetId], name: &str) {
+    let epochs = 4;
+    let k = 2;
+    let cfg_full = tiny_config(mode, epochs);
+    let data = DataBundle::generate(&cfg_full.data, datasets);
+
+    let full = Trainer::new(Arc::clone(&e), cfg_full.clone()).train(&data).unwrap();
+
+    let dir = tmp_dir(name);
+    let mut cfg_phase1 = tiny_config(mode, k);
+    cfg_phase1.checkpoint.dir = Some(dir.to_string_lossy().into_owned());
+    Trainer::new(Arc::clone(&e), cfg_phase1).train(&data).unwrap();
+    assert!(
+        checkpoint::epoch_path(&dir, k).is_file(),
+        "phase 1 must write epoch_{k:04}.ckpt"
+    );
+
+    let mut cfg_phase2 = tiny_config(mode, epochs);
+    // Resume from the DIRECTORY: the newest epoch_*.ckpt (k) is picked up.
+    cfg_phase2.checkpoint.resume = Some(dir.to_string_lossy().into_owned());
+    let resumed = Trainer::new(Arc::clone(&e), cfg_phase2).train(&data).unwrap();
+
+    assert_models_bits_eq(&resumed.model, &full.model);
+    assert_logs_bits_eq(&resumed.log, &full.log);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn resume_parity_single_mode() {
+    let Some(e) = engine() else { return };
+    resume_parity_case(e, TrainMode::Single(DatasetId::Ani1x), &[DatasetId::Ani1x], "single");
+}
+
+#[test]
+fn resume_parity_mtl_base() {
+    let Some(e) = engine() else { return };
+    resume_parity_case(
+        e,
+        TrainMode::MtlBase,
+        &[DatasetId::Ani1x, DatasetId::Qm7x, DatasetId::MpTrj],
+        "mtlbase",
+    );
+}
+
+#[test]
+fn resume_parity_mtl_par() {
+    // The hard case: a 3-head mesh. Bit-parity here relies on the
+    // rank-order-deterministic collectives (see comm::collectives).
+    let Some(e) = engine() else { return };
+    resume_parity_case(
+        e,
+        TrainMode::MtlPar,
+        &[DatasetId::Ani1x, DatasetId::Qm7x, DatasetId::MpTrj],
+        "mtlpar",
+    );
+}
+
+#[test]
+fn resume_refuses_a_corrupted_checkpoint() {
+    let Some(e) = engine() else { return };
+    let cfg = tiny_config(TrainMode::Single(DatasetId::Qm7x), 1);
+    let data = DataBundle::generate(&cfg.data, &[DatasetId::Qm7x]);
+    let dir = tmp_dir("refuse");
+    let mut cfg1 = cfg.clone();
+    cfg1.checkpoint.dir = Some(dir.to_string_lossy().into_owned());
+    Trainer::new(Arc::clone(&e), cfg1).train(&data).unwrap();
+
+    let path = checkpoint::epoch_path(&dir, 1);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let mut cfg2 = tiny_config(TrainMode::Single(DatasetId::Qm7x), 2);
+    cfg2.checkpoint.resume = Some(path.to_string_lossy().into_owned());
+    let err = Trainer::new(e, cfg2).train(&data).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("checksum") || msg.contains("corrupt"),
+        "corrupted resume must fail via CRC, got: {msg}"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// engine-gated: imbalanced MTL-base coverage regression
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mtl_base_covers_the_largest_dataset_and_cycles_the_smallest() {
+    // Regression for the min-batches truncation bug: a 240-vs-8 sample
+    // imbalance used to cut every epoch to the SMALL dataset's batch
+    // count, discarding most of the large source. Now the epoch runs to
+    // the LARGEST count, the small dataset cycles modulo its length, and
+    // the run log records per-dataset coverage.
+    let Some(e) = engine() else { return };
+    let mut big_cfg = tiny_config(TrainMode::MtlBase, 1);
+    big_cfg.data.per_dataset = 240;
+    let big = DataBundle::generate(&big_cfg.data, &[DatasetId::Ani1x]);
+    let mut small_cfg = tiny_config(TrainMode::MtlBase, 1);
+    small_cfg.data.per_dataset = 8;
+    let small = DataBundle::generate(&small_cfg.data, &[DatasetId::Qm7x]);
+
+    let mut train = big.train;
+    train.extend(small.train);
+    let mut val = big.val;
+    val.extend(small.val);
+    let mut test = big.test;
+    test.extend(small.test);
+    let data = DataBundle { train, val, test };
+
+    let out = Trainer::new(e, big_cfg).train(&data).unwrap();
+    let epoch = &out.log.epochs[0];
+    let cov_big = epoch
+        .coverage
+        .iter()
+        .find(|c| c.dataset == "ANI1x")
+        .expect("coverage recorded for the big dataset");
+    let cov_small = epoch
+        .coverage
+        .iter()
+        .find(|c| c.dataset == "QM7-X")
+        .expect("coverage recorded for the small dataset");
+
+    assert!(
+        cov_big.planned > cov_small.planned,
+        "test needs real imbalance: {} vs {} batches",
+        cov_big.planned,
+        cov_small.planned
+    );
+    assert_eq!(
+        cov_big.used, cov_big.planned,
+        "the large dataset must be fully covered (seed truncated it to {})",
+        cov_small.planned
+    );
+    assert!(
+        cov_small.used > cov_small.planned,
+        "the small dataset must cycle modulo its length"
+    );
+    assert_eq!(epoch.steps, cov_big.planned, "epoch runs to the max batch count");
+}
+
+// ---------------------------------------------------------------------------
+// engine-gated: model save/load + warm-start fine-tuning
+// ---------------------------------------------------------------------------
+
+#[test]
+fn saved_model_predicts_identically_after_reload() {
+    let Some(e) = engine() else { return };
+    let cfg = tiny_config(TrainMode::MtlPar, 2);
+    let mut session = Session::builder()
+        .engine(Arc::clone(&e))
+        .config(cfg)
+        .tasks(&ALL_DATASETS)
+        .build()
+        .unwrap();
+    let out = session.train().unwrap();
+
+    let dir = tmp_dir("model_io");
+    let path = dir.join("model.ckpt");
+    session.save_model(&out.model, &path).unwrap();
+    let loaded = Session::load_model(&path).unwrap();
+    assert_models_bits_eq(&loaded, &out.model);
+
+    let samples = session.test_samples(3).unwrap();
+    let mut pred_a = session.predictor(&out.model);
+    let a = pred_a.predict(&samples).unwrap();
+    let mut pred_b = session.predictor(&loaded);
+    let b = pred_b.predict(&samples).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (pa, pb) in a.iter().zip(&b) {
+        assert_eq!(pa.energy.to_bits(), pb.energy.to_bits());
+        assert_eq!(pa.energy_per_atom.to_bits(), pb.energy_per_atom.to_bits());
+        assert_eq!(pa.forces.len(), pb.forces.len());
+        for (fa, fb) in pa.forces.iter().zip(&pb.forces) {
+            for i in 0..3 {
+                assert_eq!(fa[i].to_bits(), fb[i].to_bits());
+            }
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn warm_start_fine_tunes_a_new_head_on_a_frozen_encoder() {
+    use hydra_mtp::tasks::{
+        FidelityProfile, GeneratorProfile, StructureKind, TaskRegistry, TaskSpec,
+    };
+    let Some(e) = engine() else { return };
+
+    // Pre-train on the five presets...
+    let cfg = tiny_config(TrainMode::MtlPar, 2);
+    let mut session = Session::builder()
+        .engine(Arc::clone(&e))
+        .config(cfg)
+        .build()
+        .unwrap();
+    let base = session.train().unwrap();
+
+    // ...then register a brand-new task and fine-tune only its head.
+    let seventh = TaskRegistry::global()
+        .register(TaskSpec::new(
+            "CkptWarmStart",
+            vec![1, 6, 8],
+            GeneratorProfile {
+                kind: StructureKind::Molecule { min_atoms: 4, atoms_cap: 10 },
+                relax_steps: 5,
+                relax_step_size: 0.05,
+                perturb_factor: 1.0,
+            },
+            FidelityProfile {
+                seed_tag: 131,
+                shift_sigma: 0.6,
+                scale_jitter: 0.02,
+                force_scale_jitter: 0.01,
+                energy_noise: 0.002,
+                force_noise: 0.004,
+                shift_offset: 0.0,
+            },
+        ))
+        .unwrap();
+
+    let tuned = session.fine_tune(&base.model, seventh).unwrap();
+
+    // The encoder is frozen: bit-identical to the pre-trained one.
+    assert_params_bits_eq(&tuned.model.encoder, &base.model.encoder, "frozen encoder");
+    match &tuned.model.heads {
+        Heads::PerDataset(m) => {
+            assert_eq!(m.len(), 1, "exactly the new head");
+            assert!(m.contains_key(&seventh));
+        }
+        _ => panic!("fine-tune must produce a per-dataset head"),
+    }
+    assert!(tuned.log.epochs.iter().all(|ep| ep.train_loss.is_finite()));
+
+    // The tuned model serves the new task end to end.
+    let mut generator = hydra_mtp::data::generators::DatasetGenerator::new(
+        seventh,
+        3,
+        hydra_mtp::data::generators::GeneratorConfig { max_atoms: 8, ..Default::default() },
+    );
+    let fresh = generator.take(2);
+    let mut predictor = session.predictor(&tuned.model);
+    for p in predictor.predict(&fresh).unwrap() {
+        assert!(p.energy.is_finite());
+        assert!(p.forces.iter().flatten().all(|x| x.is_finite()));
+    }
+}
