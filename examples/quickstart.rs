@@ -1,36 +1,30 @@
 //! Quickstart: the smallest end-to-end use of the public API.
 //!
-//! One `Session` owns the whole lifecycle: load + compile the AOT artifacts,
-//! generate a small multi-source dataset for every registered task, train a
-//! two-level MTL model with multi-task parallelism, score it per dataset,
-//! and serve predictions through the `Predictor`.
+//! One `Session` owns the whole lifecycle: pick an execution backend
+//! (native by default — no artifacts, no PJRT, runs anywhere), generate a
+//! small multi-source dataset for every registered task, train a two-level
+//! MTL model with multi-task parallelism, score it per dataset, and serve
+//! predictions through the `Predictor`.
 //!
-//! Run: `make artifacts && cargo run --release --features pjrt --example quickstart`
+//! Run: `cargo run --release --example quickstart`
+//! (optionally `make artifacts` + `--features pjrt` for the accelerated
+//! PJRT backend — the code is identical).
 
-use std::sync::Arc;
-
-use hydra_mtp::runtime::Engine;
 use hydra_mtp::{Session, TrainMode};
 
 fn main() -> anyhow::Result<()> {
-    // Graceful skip ONLY when the AOT artifacts are unavailable (a checkout
-    // without `make artifacts`, or a build without PJRT); any other error
-    // below propagates as a real failure.
-    let engine = match Engine::load("artifacts") {
-        Ok(e) => Arc::new(e),
-        Err(e) => {
-            eprintln!("skipping quickstart: artifacts unavailable ({e:#})");
-            return Ok(());
-        }
-    };
     let mut session = Session::builder()
-        .engine(engine)
+        .artifacts("artifacts") // used only if the pjrt backend resolves
         .mode(TrainMode::MtlPar)
         .per_dataset(96)
         .max_atoms(12)
         .epochs(3)
         .build()?;
-    println!("PJRT platform: {}", session.engine().platform());
+    println!(
+        "backend: {} ({})",
+        session.engine().backend_name(),
+        session.engine().platform()
+    );
 
     // Train (data is generated lazily from the task registry).
     let outcome = session.train()?;

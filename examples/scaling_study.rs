@@ -1,8 +1,8 @@
 //! Scaling study (Figure 4 analogue) with local calibration.
 //!
-//! Measures the *real* per-step execution time of the AOT train_step on
-//! this machine, uses it to sanity-check the analytic performance model's
-//! compute term, then sweeps weak and strong scaling of MTL-base vs
+//! Measures the *real* per-step execution time of train_step on this
+//! machine (native backend anywhere, PJRT when artifacts are compiled),
+//! uses it to sanity-check the analytic performance model's compute term, then sweeps weak and strong scaling of MTL-base vs
 //! MTL-par across the Frontier / Perlmutter / Aurora profiles and prints
 //! the six panels plus the memory-regime analysis (Cases 1-3).
 //!
@@ -25,13 +25,17 @@ fn main() -> anyhow::Result<()> {
     let seed = args.u64("seed", 2025);
 
     // --- local calibration: real train_step latency on this host ---
-    // Skips gracefully (analytic sweeps below still run) when the AOT
-    // artifacts are absent or the binary was built without `pjrt`.
-    println!("== local calibration (real PJRT execution) ==");
+    // Runs on every machine: the native backend is the universal fallback,
+    // PJRT takes over when artifacts + the feature are available. The Err
+    // arm only fires when the environment pins an unavailable backend
+    // (HYDRA_MTP_BACKEND=pjrt without artifacts); the analytic sweeps
+    // below still run in that case.
+    println!("== local calibration (real train_step execution) ==");
     match Engine::load("artifacts") {
-        Err(e) => eprintln!("calibration skipped: artifacts unavailable ({e:#})\n"),
+        Err(e) => eprintln!("calibration skipped: engine unavailable ({e:#})\n"),
         Ok(engine) => {
             let engine = Arc::new(engine);
+            println!("backend: {} ({})", engine.backend_name(), engine.platform());
             let mut g = DatasetGenerator::new(
                 DatasetId::Ani1x,
                 seed,

@@ -4,8 +4,9 @@
 //! Besides the stdout report, the run writes `BENCH_hot_paths.json`
 //! (op name, ns/iter, throughput) — the machine-readable trajectory that
 //! EXPERIMENTS.md §Perf tracks and CI uploads as an artifact. The data-path
-//! section needs no AOT artifacts, so the perf harness cannot rot even in
-//! engine-less environments; `*_seed` ops are the retained seed
+//! AND native-backend sections need no AOT artifacts, so every CI run now
+//! carries real train/eval step timings; only the PJRT section still wants
+//! `make artifacts` + `--features pjrt`. `*_seed` ops are the retained seed
 //! implementations, benchmarked next to their replacements so every entry
 //! carries its own before/after.
 
@@ -24,7 +25,7 @@ use hydra_mtp::data::structures::{AtomicStructure, DatasetId};
 use hydra_mtp::data::DDStore;
 use hydra_mtp::model::optimizer::{AdamW, AdamWConfig};
 use hydra_mtp::model::params::ParamSet;
-use hydra_mtp::runtime::Engine;
+use hydra_mtp::runtime::{BackendKind, Engine};
 use hydra_mtp::util::rng::Rng;
 use hydra_mtp::util::timer::{bench, bench_n, write_bench_json, BenchStats};
 
@@ -149,14 +150,36 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // --- runtime path (needs compiled AOT artifacts) ---
-    let engine = match Engine::load("artifacts") {
+    // --- native backend: the zero-artifact train/eval step hot path ---
+    // Runs everywhere (pure rust), so the step-time perf trajectory finally
+    // has real numbers in every CI run, not only on artifact-full machines.
+    {
+        let native = Engine::load_with("artifacts", BackendKind::Native)?;
+        let ndims = native.manifest.config.batch_dims();
+        let ncut = native.manifest.config.cutoff;
+        let nbatches = BatchBuilder::build_all(ndims, ncut, &ss);
+        let nbatch: &GraphBatch = &nbatches[0];
+        let nparams = ParamSet::init(&native.manifest.params, 1);
+        record(&mut results, bench_n("native train_step (fwd+bwd, full batch)", 12, || {
+            std::hint::black_box(native.train_step(&nparams, nbatch).unwrap());
+        }));
+        record(&mut results, bench_n("native eval_step (fwd only)", 20, || {
+            std::hint::black_box(native.eval_step(&nparams, nbatch).unwrap());
+        }));
+        record(&mut results, bench_n("native forward (serving)", 20, || {
+            std::hint::black_box(native.forward(&nparams, nbatch).unwrap());
+        }));
+        println!("\nnative executions: {}", native.executions());
+    }
+
+    // --- PJRT path (needs compiled AOT artifacts + --features pjrt) ---
+    let engine = match Engine::load_with("artifacts", BackendKind::Pjrt) {
         Ok(e) => Arc::new(e),
         Err(e) => {
             eprintln!(
-                "SKIP engine section: AOT artifacts unavailable ({e:#}); run \
+                "SKIP pjrt section: AOT artifacts unavailable ({e:#}); run \
                  `make artifacts` and enable the `pjrt` feature (uncomment `xla` \
-                 in Cargo.toml) for the engine benchmarks"
+                 in Cargo.toml) for the PJRT engine benchmarks"
             );
             return finish(&results);
         }

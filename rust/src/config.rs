@@ -4,6 +4,7 @@
 use std::path::Path;
 
 use crate::data::structures::DatasetId;
+use crate::runtime::backend::BackendKind;
 use crate::util::json::Json;
 
 /// How the model is trained (the seven models of Tables 1-2 plus modes).
@@ -136,6 +137,9 @@ impl Default for CheckpointConfig {
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub artifacts_dir: String,
+    /// Execution backend: native (default everywhere), pjrt (AOT artifacts
+    /// + `--features pjrt`), or auto (pjrt when available, else native).
+    pub backend: BackendKind,
     pub mode: TrainMode,
     pub data: DataConfig,
     pub train: TrainConfig,
@@ -147,6 +151,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             artifacts_dir: "artifacts".to_string(),
+            backend: BackendKind::Auto,
             mode: TrainMode::MtlPar,
             data: DataConfig::default(),
             train: TrainConfig::default(),
@@ -183,6 +188,7 @@ impl RunConfig {
         };
         Json::obj(vec![
             ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+            ("backend", Json::str(self.backend.name())),
             ("mode", Json::str(mode)),
             (
                 "data",
@@ -240,6 +246,9 @@ impl RunConfig {
         let mut cfg = RunConfig::default();
         if let Some(s) = j.get("artifacts_dir").as_str() {
             cfg.artifacts_dir = s.to_string();
+        }
+        if let Some(s) = j.get("backend").as_str() {
+            cfg.backend = BackendKind::parse(s)?;
         }
         if let Some(s) = j.get("mode").as_str() {
             cfg.mode = TrainMode::parse(s)?;
@@ -317,13 +326,27 @@ impl RunConfig {
     /// from the run that wrote the file. `epochs` is deliberately
     /// excluded — extending a finished run IS the resume use case — as are
     /// the artifacts dir and the checkpoint paths themselves. Floats are
-    /// rendered by bit pattern so the comparison is exact.
+    /// rendered by bit pattern so the comparison is exact. The backend is
+    /// included: native and PJRT numerics differ, so resuming a PJRT run on
+    /// the native engine (or vice versa) must be refused, not silently
+    /// diverge. This variant records the *configured* kind; the trainer
+    /// fingerprints checkpoints with [`Self::trajectory_fingerprint_resolved`]
+    /// and the engine's actual backend, so `auto` resolving differently on
+    /// the writing and resuming machines is still caught.
     pub fn trajectory_fingerprint(&self) -> String {
+        self.trajectory_fingerprint_resolved(self.backend.name())
+    }
+
+    /// [`Self::trajectory_fingerprint`] with an explicit backend token —
+    /// pass the RESOLVED backend (`engine.backend_name()`) when writing or
+    /// validating checkpoints.
+    pub fn trajectory_fingerprint_resolved(&self, backend: &str) -> String {
         let f = |x: f64| format!("{:016x}", x.to_bits());
         format!(
-            "mode={};train_seed={};data_seed={};per_dataset={};max_atoms={};\
+            "backend={};mode={};train_seed={};data_seed={};per_dataset={};max_atoms={};\
              cutoff={};train_frac={};val_frac={};lr={};weight_decay={};beta1={};\
              beta2={};eps={};grad_clip={};patience={};replicas={}",
+            backend,
             self.mode.name(),
             self.train.seed,
             self.data.seed,
@@ -362,12 +385,14 @@ mod tests {
     fn json_roundtrip() {
         let mut cfg = RunConfig::default();
         cfg.mode = TrainMode::Single(DatasetId::MpTrj);
+        cfg.backend = BackendKind::Native;
         cfg.train.lr = 0.005;
         cfg.parallel.replicas = 4;
         cfg.checkpoint.dir = Some("ckpts".to_string());
         cfg.checkpoint.every = 3;
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.mode, cfg.mode);
+        assert_eq!(back.backend, BackendKind::Native);
         assert_eq!(back.train.lr, 0.005);
         assert_eq!(back.parallel.replicas, 4);
         assert_eq!(back.checkpoint.dir.as_deref(), Some("ckpts"));
@@ -392,6 +417,7 @@ mod tests {
             |c| c.data.per_dataset = 13,
             |c| c.mode = TrainMode::MtlBase,
             |c| c.train.patience = 9,
+            |c| c.backend = BackendKind::Native,
         ] {
             let mut c = RunConfig::default();
             mutate(&mut c);

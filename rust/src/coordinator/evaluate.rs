@@ -23,7 +23,9 @@ pub fn evaluate_model(
     let cutoff = engine.manifest.config.cutoff;
     let mut out = BTreeMap::new();
     for (&d, samples) in test {
-        let full = model.full_params(engine, d);
+        // Errors (naming the task) instead of the seed's branch_for panic
+        // when a model is scored on a dataset it has no head for.
+        let full = model.full_params(engine, d)?;
         let batches = BatchBuilder::build_all(dims, cutoff, samples);
         let mut e_sum = 0.0;
         let mut e_w = 0.0;

@@ -149,18 +149,22 @@ impl TrainedModel {
         }
     }
 
-    /// The branch used to predict data from `d`.
-    pub fn branch_for(&self, d: DatasetId) -> &ParamSet {
-        self.try_branch_for(d)
-            .unwrap_or_else(|| panic!("{}: no branch for {}", self.name, d.name()))
-    }
-
-    /// Full engine-callable parameter set for dataset `d`.
-    pub fn full_params(&self, engine: &Engine, d: DatasetId) -> ParamSet {
+    /// Full engine-callable parameter set for dataset `d`. Errors (naming
+    /// the task) when the model carries no head for it — the seed panicked
+    /// here via `branch_for`, which took down serving threads on a routing
+    /// mistake instead of surfacing a typed error.
+    pub fn full_params(&self, engine: &Engine, d: DatasetId) -> anyhow::Result<ParamSet> {
+        let branch = self.try_branch_for(d).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model '{}' has no trained head for task {}",
+                self.name,
+                d.name()
+            )
+        })?;
         let mut full = ParamSet::zeros_like(&engine.manifest.params);
         full.copy_matching_from(&self.encoder);
-        full.copy_matching_from(self.branch_for(d));
-        full
+        full.copy_matching_from(branch);
+        Ok(full)
     }
 }
 
@@ -222,10 +226,15 @@ impl Trainer {
             TrainMode::Single(d) => vec![d],
             _ => data.datasets(),
         };
+        // Fingerprint with the RESOLVED backend: `auto` can resolve to
+        // different backends on the writing and resuming machines, and
+        // native/PJRT numerics must never be silently mixed mid-run.
         ckpt.validate_for(
             &self.cfg.mode.name(),
             self.cfg.train.seed,
-            &self.cfg.trajectory_fingerprint(),
+            &self
+                .cfg
+                .trajectory_fingerprint_resolved(self.engine.backend_name()),
             &datasets,
         )?;
         // Structural compatibility with the engine this run is about to use
@@ -688,6 +697,7 @@ fn restore_params_broadcast(comm: &Comm, params: &mut ParamSet, saved: &ParamSet
 /// collectives. Use [`warn_save_failure`] and keep training.
 #[allow(clippy::too_many_arguments)]
 fn save_checkpoint_rank0(
+    engine: &Engine,
     cfg: &RunConfig,
     epochs_done: usize,
     stopped: bool,
@@ -704,7 +714,9 @@ fn save_checkpoint_rank0(
     let ckpt = TrainCheckpoint {
         mode: cfg.mode.name(),
         train_seed: cfg.train.seed,
-        config_fingerprint: cfg.trajectory_fingerprint(),
+        // The RESOLVED backend: `auto` must not fingerprint-match across
+        // machines whose auto resolution differs (native vs PJRT numerics).
+        config_fingerprint: cfg.trajectory_fingerprint_resolved(engine.backend_name()),
         epochs_done,
         stopped,
         stopper_best,
@@ -880,6 +892,7 @@ fn rank_loop_single_branch(
         let stop = stopper.update(val_loss);
         if save_after_epoch(cfg, epoch, end_epoch, stop) && mr.rank == 0 {
             let saved = save_checkpoint_rank0(
+                engine,
                 cfg,
                 epoch + 1,
                 stop,
@@ -1139,6 +1152,7 @@ fn rank_loop_mtl_base(
         let stop = stopper.update(val_loss);
         if save_after_epoch(cfg, epoch, end_epoch, stop) && mr.rank == 0 {
             let saved = save_checkpoint_rank0(
+                engine,
                 cfg,
                 epoch + 1,
                 stop,
@@ -1346,6 +1360,7 @@ fn rank_loop_mtl_par(
                     opts.push((d.name(), AdamWState { m, v, step: step_count }));
                 }
                 let saved = save_checkpoint_rank0(
+                    engine,
                     cfg,
                     epoch + 1,
                     stop,

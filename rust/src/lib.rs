@@ -14,9 +14,27 @@
 //! - **L1 (python/compile/kernels/)** — Pallas kernels for the message
 //!   passing and branch-trunk hot spots, lowered inside the same HLO.
 //!
-//! Python never runs on the training path: the coordinator loads
-//! `artifacts/*.hlo.txt` through the PJRT CPU client (`pjrt` feature) and is
-//! self-contained afterwards.
+//! ## Execution backends
+//!
+//! The compute core is pluggable ([`runtime::Backend`]). Two backends share
+//! one manifest contract (leaf names, shapes, batch fields):
+//!
+//! - **native** (the default) — [`runtime::NativeBackend`]: the EGNN
+//!   encoder + MTL branch re-implemented in pure rust ([`model::egnn`])
+//!   with a hand-written analytic backward pass, f64 accumulation, and
+//!   scoped-thread parallelism over the batch. It needs **zero artifacts**:
+//!   when no `artifacts/` directory exists the manifest is synthesized from
+//!   the model config, so training, evaluation, checkpointing and serving
+//!   run end-to-end on any machine — `cargo run --release --example
+//!   pretrain_e2e` works on a clean checkout. Gradients are validated
+//!   against central finite differences in `rust/tests/gradcheck.rs`.
+//! - **pjrt** (the accelerated option) — compiles `artifacts/*.hlo.txt`
+//!   through the PJRT CPU client; requires `make artifacts` plus
+//!   `--features pjrt`. Python never runs on the training path either way.
+//!
+//! Select with `Session::builder().backend(..)`, CLI `--backend
+//! auto|native|pjrt`, or the `HYDRA_MTP_BACKEND` env var; `auto` prefers
+//! PJRT when available and falls back to native.
 //!
 //! ## The featurize-once data path
 //!
@@ -42,19 +60,19 @@
 //!
 //! ## The Session API
 //!
-//! The full lifecycle — load artifacts, generate multi-source data, train
-//! with multi-task parallelism, evaluate, predict — is one facade:
+//! The full lifecycle — pick a backend, generate multi-source data, train
+//! with multi-task parallelism, evaluate, predict — is one facade. No
+//! artifacts are required; this runs on a clean checkout:
 //!
 //! ```no_run
 //! use hydra_mtp::{Session, TrainMode};
 //!
 //! # fn main() -> anyhow::Result<()> {
 //! let mut session = Session::builder()
-//!     .artifacts("artifacts")
 //!     .mode(TrainMode::MtlPar)
 //!     .replicas(2)
 //!     .epochs(3)
-//!     .build()?;
+//!     .build()?;                  // auto backend: native unless PJRT exists
 //! let outcome = session.train()?;                       // generates data lazily
 //! let scores = session.evaluate(&outcome.model)?;       // per-task test MAE
 //! let mut predictor = session.predictor(&outcome.model);
@@ -154,6 +172,7 @@ pub mod tensor;
 pub mod util;
 
 pub use config::{RunConfig, TrainMode};
+pub use runtime::{BackendKind, Engine};
 pub use session::{Prediction, Predictor, Session, SessionBuilder};
 pub use tasks::{DatasetId, TaskRegistry, TaskSpec, ALL_DATASETS};
 

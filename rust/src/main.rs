@@ -63,12 +63,16 @@ USAGE: hydra-mtp <command> [--flags]
 COMMANDS
   datagen  --out DIR [--per-dataset N] [--seed S] [--max-atoms A]
   train    --mode MODE [--config FILE] [--epochs N] [--replicas M]
-           [--per-dataset N] [--seed S] [--lr LR] [--artifacts DIR] [--csv FILE]
+           [--per-dataset N] [--seed S] [--lr LR] [--backend auto|native|pjrt]
+           [--artifacts DIR] [--csv FILE]
            [--checkpoint-dir DIR] [--checkpoint-every N] [--resume PATH]
            MODE: ANI1x|QM7-X|Transition1x|MPTrj|Alexandria|baseline-all|mtl-base|mtl-par
+           --backend native (the default resolution on artifact-less machines)
+           trains with the pure-rust EGNN engine: no artifacts, no PJRT;
+           --backend pjrt requires `make artifacts` + `--features pjrt`
            --checkpoint-dir writes CRC-guarded epoch_NNNN.ckpt files; --resume
            restarts bit-identically from a checkpoint file (or the newest in a dir)
-  table1   [--epochs N] [--per-dataset N] [--replicas M] [--csv FILE]
+  table1   [--epochs N] [--per-dataset N] [--replicas M] [--backend B] [--csv FILE]
   table2   (same flags; same training runs, force metric)
   fig1     [--per-dataset N] [--seed S] [--max-atoms A]
   fig4     [--machine all|frontier|perlmutter|aurora] [--csv FILE] [--seed S]
@@ -80,8 +84,8 @@ Misspelled flags are rejected with the valid list for the subcommand."
 }
 
 /// Flags shared by the config-driven subcommands.
-const CONFIG_FLAGS: [&str; 7] =
-    ["config", "artifacts", "epochs", "replicas", "per-dataset", "seed", "lr"];
+const CONFIG_FLAGS: [&str; 8] =
+    ["config", "artifacts", "backend", "epochs", "replicas", "per-dataset", "seed", "lr"];
 
 fn base_config(args: &Args) -> anyhow::Result<RunConfig> {
     let mut cfg = match args.opt_str("config") {
@@ -89,6 +93,9 @@ fn base_config(args: &Args) -> anyhow::Result<RunConfig> {
         None => RunConfig::default(),
     };
     cfg.artifacts_dir = args.str("artifacts", &cfg.artifacts_dir);
+    if let Some(b) = args.opt_str("backend") {
+        cfg.backend = hydra_mtp::runtime::BackendKind::parse(b)?;
+    }
     if let Some(e) = args.opt_str("epochs") {
         cfg.train.epochs = e.parse()?;
     }
@@ -150,9 +157,13 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.checkpoint.resume = Some(path.to_string());
     }
     cfg.validate()?;
-    println!("loading artifacts from {} ...", cfg.artifacts_dir);
+    println!("loading engine ({} backend requested) ...", cfg.backend.name());
     let mut session = Session::builder().config(cfg).build()?;
-    println!("platform: {}; generating data ...", session.engine().platform());
+    println!(
+        "backend: {} ({}); generating data ...",
+        session.engine().backend_name(),
+        session.engine().platform()
+    );
     // Generate outside the timer so "trained in" stays comparable with
     // seed-era logs (training only, no data generation).
     session.generate_data();
@@ -280,10 +291,21 @@ fn cmd_tasks(args: &Args) -> anyhow::Result<()> {
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     args.ensure_known("info", &["artifacts"])?;
     let dir = args.str("artifacts", "artifacts");
-    let manifest = hydra_mtp::runtime::Manifest::load(&dir)?;
+    let manifest = match hydra_mtp::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {dir} (PJRT-capable with --features pjrt)");
+            m
+        }
+        Err(e) => {
+            println!("no compiled artifacts at '{dir}' ({e:#})");
+            println!("showing the native backend's synthesized manifest instead:");
+            hydra_mtp::runtime::Manifest::synthesize(
+                hydra_mtp::runtime::ManifestConfig::default_native(),
+            )
+        }
+    };
     manifest.validate()?;
     let c = manifest.config;
-    println!("artifacts: {dir}");
     println!(
         "model: {} EGNN layers, hidden {}, head 3x{}, cutoff {}",
         c.num_layers, c.hidden, c.head_hidden, c.cutoff
@@ -316,6 +338,9 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
         paper.head_params() as f64 / 1e6,
         paper.total_params(5) as f64 / 1e6
     );
+    if manifest.is_synthesized() {
+        println!("backend: native (pure-rust EGNN engine; no artifact files needed)");
+    }
     for (name, art) in &manifest.artifacts {
         println!(
             "artifact {:<13} {} inputs, {} outputs, sha256 {}",

@@ -3,6 +3,7 @@
 //! memory model, parallelization regimes).
 
 pub mod arch;
+pub mod egnn;
 pub mod optimizer;
 pub mod params;
 

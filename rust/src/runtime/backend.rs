@@ -1,0 +1,130 @@
+//! The pluggable execution-backend contract.
+//!
+//! `Engine` is a thin dispatcher over a [`Backend`]: anything that can run
+//! the four entry points of the training hot path — `train_step` (loss,
+//! MAEs, named gradients keyed by the manifest's `LeafMeta` leaves),
+//! `eval_step`, `forward`, and `encoder_forward` — against a `ParamSet` and
+//! a padded `GraphBatch`. Two implementations exist:
+//!
+//! * [`crate::runtime::native::NativeBackend`] — the pure-rust EGNN engine
+//!   (`model::egnn`); needs no artifacts, works on every machine, and is
+//!   the default.
+//! * `PjrtBackend` (in `runtime::engine`) — compiles the AOT HLO artifacts
+//!   through the PJRT CPU client; requires `--features pjrt` plus
+//!   `make artifacts`, and is the accelerated option.
+//!
+//! Which one runs is a [`BackendKind`] decision: `RunConfig`/CLI
+//! `--backend`, the `HYDRA_MTP_BACKEND` environment variable (useful for CI
+//! matrix legs), or auto-detection (PJRT when available, native otherwise).
+
+use crate::data::batch::GraphBatch;
+use crate::model::params::ParamSet;
+use crate::runtime::engine::{EvalOut, StepOut};
+use crate::runtime::manifest::Manifest;
+use crate::tensor::Tensor;
+
+/// One execution backend for the train/eval/predict hot path. All methods
+/// take the engine's manifest so a backend carries no duplicate state; they
+/// must be callable concurrently from many rank threads (`Send + Sync`).
+pub trait Backend: Send + Sync {
+    /// Stable identifier ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Human-readable platform string (PJRT reports the client platform).
+    fn platform(&self) -> String;
+
+    /// One forward+backward pass: loss, MAEs, and gradients named after the
+    /// manifest's parameter leaves.
+    fn train_step(
+        &self,
+        manifest: &Manifest,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<StepOut>;
+
+    /// Metrics-only evaluation pass.
+    fn eval_step(
+        &self,
+        manifest: &Manifest,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<EvalOut>;
+
+    /// Inference: (energy_per_atom `[G]`, forces `[N,3]`).
+    fn forward(
+        &self,
+        manifest: &Manifest,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<(Tensor, Tensor)>;
+
+    /// Encoder-only forward: (`h [N,H]`, `v [N,3]`). Accepts encoder leaves
+    /// under `encoder.*` or bare names.
+    fn encoder_forward(
+        &self,
+        manifest: &Manifest,
+        encoder_params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<(Tensor, Tensor)>;
+}
+
+/// Which backend an `Engine` should run (`RunConfig.backend`, CLI
+/// `--backend`, env `HYDRA_MTP_BACKEND`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// PJRT when the feature is compiled in and artifacts load; native
+    /// otherwise. Honors `HYDRA_MTP_BACKEND` as an override.
+    #[default]
+    Auto,
+    /// The pure-rust EGNN engine; never needs artifacts.
+    Native,
+    /// The PJRT AOT-artifact engine; errors when unavailable.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> anyhow::Result<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(BackendKind::Auto),
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => anyhow::bail!("unknown backend '{other}' (expected auto|native|pjrt)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// The `HYDRA_MTP_BACKEND` environment override, or `Auto`. An invalid
+    /// value warns and falls back to `Auto` rather than poisoning every
+    /// engine load.
+    pub fn from_env() -> BackendKind {
+        match std::env::var("HYDRA_MTP_BACKEND") {
+            Ok(v) if !v.is_empty() => BackendKind::parse(&v).unwrap_or_else(|e| {
+                eprintln!("warning: HYDRA_MTP_BACKEND ignored: {e}");
+                BackendKind::Auto
+            }),
+            _ => BackendKind::Auto,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_and_names_roundtrip() {
+        for kind in [BackendKind::Auto, BackendKind::Native, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(BackendKind::parse("NATIVE").unwrap(), BackendKind::Native);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Auto);
+    }
+}

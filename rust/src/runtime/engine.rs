@@ -1,35 +1,36 @@
-//! PJRT execution engine: loads the HLO-text artifacts, compiles them once
-//! on the CPU PJRT client, and exposes typed entry points for the training
-//! hot path. This is the only place the `xla` crate is touched.
+//! The execution engine: a thin dispatcher over pluggable [`Backend`]s.
 //!
-//! Marshalling is name-driven: each artifact's manifest entry lists its
-//! flattened inputs/outputs; parameters are looked up in the `ParamSet`,
-//! everything else is a batch field. One compiled executable serves every
-//! MTL head — under multi-task parallelism each rank feeds its own branch
-//! parameter values (the head identity is data, not code).
+//! `Engine` owns the [`Manifest`] (the single source of truth for model
+//! dims, parameter leaves and batch fields) and routes the four hot-path
+//! entry points — `train_step`, `eval_step`, `forward`, `encoder_forward` —
+//! to one of two backends:
+//!
+//! * **native** ([`crate::runtime::native::NativeBackend`]) — the pure-rust
+//!   EGNN engine. Needs no artifacts and no PJRT: when no artifact
+//!   directory exists, the manifest is synthesized from `ArchDims` +
+//!   `BatchDims` defaults, so `ParamSet` init, checkpointing, the trainer
+//!   and serving all run end-to-end on any machine. This is the default.
+//! * **pjrt** ([`PjrtBackend`]) — loads the HLO-text artifacts, compiles
+//!   them once on the CPU PJRT client, and marshals name-driven literals.
+//!   Requires `--features pjrt` plus `make artifacts`; this is the
+//!   accelerated option, not a prerequisite.
+//!
+//! Selection: `Engine::load` honors the `HYDRA_MTP_BACKEND` env var, then
+//! auto-detects (PJRT if it loads, else native); `Engine::load_with` takes
+//! an explicit [`BackendKind`] from `RunConfig`/CLI `--backend`.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::runtime::pjrt as xla;
 
 use crate::data::batch::GraphBatch;
 use crate::model::params::ParamSet;
-use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use crate::runtime::backend::{Backend, BackendKind};
+use crate::runtime::manifest::{Manifest, ManifestConfig};
+use crate::runtime::native::NativeBackend;
 use crate::tensor::Tensor;
-
-pub struct Engine {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    executables: BTreeMap<String, Mutex<xla::PjRtLoadedExecutable>>,
-    exec_count: std::sync::atomic::AtomicU64,
-}
-
-// The PJRT CPU client is internally synchronized; executions are further
-// serialized per-executable by the Mutex above. The raw pointers inside the
-// xla wrappers are what block the auto-impl.
-unsafe impl Send for Engine {}
-unsafe impl Sync for Engine {}
 
 /// Outputs of one train_step execution.
 pub struct StepOut {
@@ -47,26 +48,252 @@ pub struct EvalOut {
     pub mae_f: f64,
 }
 
+enum BackendImpl {
+    Native(NativeBackend),
+    Pjrt(PjrtBackend),
+}
+
+pub struct Engine {
+    pub manifest: Manifest,
+    backend: BackendImpl,
+    exec_count: AtomicU64,
+}
+
 impl Engine {
-    /// Load + compile every artifact in the manifest.
+    /// Load an engine for `dir` with auto backend selection (see
+    /// [`Engine::load_with`]); never fails on a machine without artifacts —
+    /// the native backend is the universal fallback.
     pub fn load(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Engine> {
-        Self::load_subset(dir, None)
+        Self::load_with(dir, BackendKind::Auto)
     }
 
-    /// Load + compile only the named artifacts (faster for focused tests).
-    pub fn load_only(
+    /// Load an engine with an explicit backend choice. `Auto` resolves the
+    /// `HYDRA_MTP_BACKEND` env override first, then prefers PJRT when the
+    /// feature + artifacts are available and falls back to native.
+    pub fn load_with(
         dir: impl AsRef<std::path::Path>,
-        names: &[&str],
+        kind: BackendKind,
     ) -> anyhow::Result<Engine> {
-        Self::load_subset(dir, Some(names))
+        let dir = dir.as_ref();
+        let kind = if kind == BackendKind::Auto { BackendKind::from_env() } else { kind };
+        match kind {
+            BackendKind::Pjrt => Self::load_pjrt(dir, None),
+            BackendKind::Native => Ok(Self::load_native(dir)),
+            BackendKind::Auto => match Self::load_pjrt(dir, None) {
+                Ok(e) => Ok(e),
+                Err(err) => {
+                    // Fall back to native — but never silently when an
+                    // artifact directory is PRESENT: broken artifacts would
+                    // otherwise degrade to a (possibly different-dims)
+                    // native model with zero indication.
+                    if dir.join("manifest.json").exists() {
+                        eprintln!(
+                            "warning: PJRT backend unavailable for {dir:?} ({err:#}); \
+                             falling back to the native backend"
+                        );
+                    }
+                    Ok(Self::load_native(dir))
+                }
+            },
+        }
     }
 
-    fn load_subset(
+    /// PJRT engine: load + compile every artifact in `dir`'s manifest.
+    pub fn load_pjrt(
         dir: impl AsRef<std::path::Path>,
         names: Option<&[&str]>,
     ) -> anyhow::Result<Engine> {
         let manifest = Manifest::load(dir)?;
         manifest.validate()?;
+        anyhow::ensure!(
+            !manifest.is_synthesized(),
+            "manifest lists no artifacts; the PJRT backend needs compiled HLO (run `make artifacts`)"
+        );
+        let backend = PjrtBackend::compile(&manifest, names)?;
+        Ok(Engine {
+            manifest,
+            backend: BackendImpl::Pjrt(backend),
+            exec_count: AtomicU64::new(0),
+        })
+    }
+
+    /// PJRT engine compiling only the named artifacts (focused tests).
+    pub fn load_only(
+        dir: impl AsRef<std::path::Path>,
+        names: &[&str],
+    ) -> anyhow::Result<Engine> {
+        Self::load_pjrt(dir, Some(names))
+    }
+
+    /// Native engine for `dir`: adopt the artifact manifest's config when
+    /// one is present (so dims match any compiled artifacts), otherwise
+    /// synthesize the default configuration. Infallible by design — but an
+    /// unreadable manifest that EXISTS is warned about, since the engine
+    /// will run different (default) dims than the user compiled.
+    fn load_native(dir: &std::path::Path) -> Engine {
+        let config = match Manifest::load(dir) {
+            Ok(m) => m.config,
+            Err(err) => {
+                if dir.join("manifest.json").exists() {
+                    eprintln!(
+                        "warning: ignoring unreadable manifest in {dir:?} ({err:#}); \
+                         the native backend uses the default model dims"
+                    );
+                }
+                ManifestConfig::default_native()
+            }
+        };
+        Self::native(config)
+    }
+
+    /// Native engine with an explicit model configuration (gradcheck and
+    /// custom-dims experiments build tiny engines this way).
+    pub fn native(config: ManifestConfig) -> Engine {
+        Engine {
+            manifest: Manifest::synthesize(config),
+            backend: BackendImpl::Native(NativeBackend),
+            exec_count: AtomicU64::new(0),
+        }
+    }
+
+    fn backend(&self) -> &dyn Backend {
+        match &self.backend {
+            BackendImpl::Native(b) => b,
+            BackendImpl::Pjrt(b) => b,
+        }
+    }
+
+    /// Stable backend identifier ("native" or "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend().name()
+    }
+
+    pub fn is_native(&self) -> bool {
+        matches!(self.backend, BackendImpl::Native(_))
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend().platform()
+    }
+
+    /// Number of executions performed (metrics).
+    pub fn executions(&self) -> u64 {
+        self.exec_count.load(Ordering::Relaxed)
+    }
+
+    fn count(&self) {
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One forward+backward pass: returns loss, MAEs, and named gradients.
+    pub fn train_step(
+        &self,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<StepOut> {
+        let out = self.backend().train_step(&self.manifest, params, batch)?;
+        self.count();
+        anyhow::ensure!(out.loss.is_finite(), "train_step produced non-finite loss");
+        Ok(out)
+    }
+
+    /// Metrics-only evaluation pass.
+    pub fn eval_step(
+        &self,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<EvalOut> {
+        let out = self.backend().eval_step(&self.manifest, params, batch)?;
+        self.count();
+        Ok(out)
+    }
+
+    /// Inference: (energy_per_atom [G], forces [N,3]).
+    pub fn forward(
+        &self,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<(Tensor, Tensor)> {
+        let out = self.backend().forward(&self.manifest, params, batch)?;
+        self.count();
+        Ok(out)
+    }
+
+    /// Encoder-only forward: (h [N,H], v [N,3]). Takes encoder params only
+    /// (either `encoder.*` or bare leaf names).
+    pub fn encoder_forward(
+        &self,
+        encoder_params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<(Tensor, Tensor)> {
+        let out = self
+            .backend()
+            .encoder_forward(&self.manifest, encoder_params, batch)?;
+        self.count();
+        Ok(out)
+    }
+
+    // -- PJRT-specific surface (artifact marshalling) ------------------------
+
+    fn pjrt(&self) -> anyhow::Result<&PjrtBackend> {
+        match &self.backend {
+            BackendImpl::Pjrt(b) => Ok(b),
+            BackendImpl::Native(_) => anyhow::bail!(
+                "the '{}' backend has no PJRT artifact surface; run_raw/marshal need \
+                 `--features pjrt` plus compiled artifacts",
+                self.backend_name()
+            ),
+        }
+    }
+
+    /// Execute an artifact on pre-marshalled literals; returns output
+    /// tensors in manifest output order. PJRT backend only.
+    pub fn run_raw(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        let out = self.pjrt()?.run_raw(&self.manifest, name, inputs)?;
+        self.count();
+        Ok(out)
+    }
+
+    /// Assemble the input literal list for an artifact from a parameter set
+    /// plus a padded batch (name-driven; order from the manifest). PJRT
+    /// backend only.
+    pub fn marshal(
+        &self,
+        name: &str,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        self.pjrt()?.marshal(&self.manifest, name, params, batch)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+/// The AOT-artifact backend: compiled PJRT executables, one per artifact.
+/// Marshalling is name-driven: each artifact's manifest entry lists its
+/// flattened inputs/outputs; parameters are looked up in the `ParamSet`,
+/// everything else is a batch field. One compiled executable serves every
+/// MTL head — under multi-task parallelism each rank feeds its own branch
+/// parameter values (the head identity is data, not code).
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, Mutex<xla::PjRtLoadedExecutable>>,
+}
+
+// The PJRT CPU client is internally synchronized; executions are further
+// serialized per-executable by the Mutex above. The raw pointers inside the
+// xla wrappers are what block the auto-impl.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    fn compile(manifest: &Manifest, names: Option<&[&str]>) -> anyhow::Result<PjrtBackend> {
         let client = xla::PjRtClient::cpu()?;
         let mut executables = BTreeMap::new();
         for (name, art) in &manifest.artifacts {
@@ -80,35 +307,16 @@ impl Engine {
             let exe = client.compile(&comp)?;
             executables.insert(name.clone(), Mutex::new(exe));
         }
-        Ok(Engine {
-            client,
-            manifest,
-            executables,
-            exec_count: std::sync::atomic::AtomicU64::new(0),
-        })
+        Ok(PjrtBackend { client, executables })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Number of executions performed (metrics).
-    pub fn executions(&self) -> u64 {
-        self.exec_count.load(std::sync::atomic::Ordering::Relaxed)
-    }
-
-    fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
-        self.manifest.artifact(name)
-    }
-
-    /// Execute an artifact on pre-marshalled literals; returns output
-    /// tensors in manifest output order.
-    pub fn run_raw(
+    fn run_raw(
         &self,
+        manifest: &Manifest,
         name: &str,
         inputs: &[xla::Literal],
     ) -> anyhow::Result<Vec<Tensor>> {
-        let art = self.artifact(name)?;
+        let art = manifest.artifact(name)?;
         anyhow::ensure!(
             inputs.len() == art.inputs.len(),
             "artifact {name}: {} inputs supplied, {} expected",
@@ -122,7 +330,6 @@ impl Engine {
             .lock()
             .unwrap();
         let result = exe.execute::<xla::Literal>(inputs)?;
-        self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         // Artifacts are lowered with return_tuple=True: one tuple output.
         let root = result[0][0].to_literal_sync()?;
         let parts = root.to_tuple()?;
@@ -135,17 +342,16 @@ impl Engine {
         parts.iter().map(Tensor::from_literal).collect()
     }
 
-    /// Assemble the input literal list for an artifact from a parameter set
-    /// plus a padded batch (name-driven; order from the manifest). Batch
-    /// fields are marshalled in place via `GraphBatch::field_literal` — no
-    /// per-step buffer clones into intermediate tensors.
-    pub fn marshal(
+    /// Batch fields are marshalled in place via `GraphBatch::field_literal`
+    /// — no per-step buffer clones into intermediate tensors.
+    fn marshal(
         &self,
+        manifest: &Manifest,
         name: &str,
         params: &ParamSet,
         batch: &GraphBatch,
     ) -> anyhow::Result<Vec<xla::Literal>> {
-        let art = self.artifact(name)?;
+        let art = manifest.artifact(name)?;
         let mut out = Vec::with_capacity(art.inputs.len());
         for meta in &art.inputs {
             let lit = if let Some(t) = params.get(&meta.name) {
@@ -158,21 +364,31 @@ impl Engine {
         }
         Ok(out)
     }
+}
 
-    /// One forward+backward pass: returns loss, MAEs, and named gradients.
-    pub fn train_step(
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn train_step(
         &self,
+        manifest: &Manifest,
         params: &ParamSet,
         batch: &GraphBatch,
     ) -> anyhow::Result<StepOut> {
-        let inputs = self.marshal("train_step", params, batch)?;
-        let outputs = self.run_raw("train_step", &inputs)?;
-        let art = self.artifact("train_step")?;
+        let inputs = self.marshal(manifest, "train_step", params, batch)?;
+        let outputs = self.run_raw(manifest, "train_step", &inputs)?;
+        let art = manifest.artifact("train_step")?;
 
         let mut loss = f64::NAN;
         let mut mae_e = f64::NAN;
         let mut mae_f = f64::NAN;
-        let mut grads = ParamSet::zeros_like(&self.manifest.params);
+        let mut grads = ParamSet::zeros_like(&manifest.params);
         for (meta, tensor) in art.outputs.iter().zip(outputs) {
             match meta.name.as_str() {
                 "loss" => loss = tensor.item(),
@@ -189,19 +405,18 @@ impl Engine {
                 }
             }
         }
-        anyhow::ensure!(loss.is_finite(), "train_step produced non-finite loss");
         Ok(StepOut { loss, mae_e, mae_f, grads })
     }
 
-    /// Metrics-only evaluation pass.
-    pub fn eval_step(
+    fn eval_step(
         &self,
+        manifest: &Manifest,
         params: &ParamSet,
         batch: &GraphBatch,
     ) -> anyhow::Result<EvalOut> {
-        let inputs = self.marshal("eval_step", params, batch)?;
-        let outputs = self.run_raw("eval_step", &inputs)?;
-        let art = self.artifact("eval_step")?;
+        let inputs = self.marshal(manifest, "eval_step", params, batch)?;
+        let outputs = self.run_raw(manifest, "eval_step", &inputs)?;
+        let art = manifest.artifact("eval_step")?;
         let mut out = EvalOut { loss: f64::NAN, mae_e: f64::NAN, mae_f: f64::NAN };
         for (meta, tensor) in art.outputs.iter().zip(outputs) {
             match meta.name.as_str() {
@@ -214,15 +429,15 @@ impl Engine {
         Ok(out)
     }
 
-    /// Inference: (energy_per_atom [G], forces [N,3]).
-    pub fn forward(
+    fn forward(
         &self,
+        manifest: &Manifest,
         params: &ParamSet,
         batch: &GraphBatch,
     ) -> anyhow::Result<(Tensor, Tensor)> {
-        let inputs = self.marshal("fwd", params, batch)?;
-        let outputs = self.run_raw("fwd", &inputs)?;
-        let art = self.artifact("fwd")?;
+        let inputs = self.marshal(manifest, "fwd", params, batch)?;
+        let outputs = self.run_raw(manifest, "fwd", &inputs)?;
+        let art = manifest.artifact("fwd")?;
         let mut energy = None;
         let mut forces = None;
         for (meta, tensor) in art.outputs.iter().zip(outputs) {
@@ -238,13 +453,13 @@ impl Engine {
         ))
     }
 
-    /// Encoder-only forward: (h [N,H], v [N,3]). Takes encoder params only.
-    pub fn encoder_forward(
+    fn encoder_forward(
         &self,
+        manifest: &Manifest,
         encoder_params: &ParamSet,
         batch: &GraphBatch,
     ) -> anyhow::Result<(Tensor, Tensor)> {
-        let art = self.artifact("encoder_fwd")?;
+        let art = manifest.artifact("encoder_fwd")?;
         let mut inputs = Vec::with_capacity(art.inputs.len());
         for meta in &art.inputs {
             // encoder_fwd inputs use encoder-local names (no "encoder."
@@ -260,8 +475,7 @@ impl Engine {
             };
             inputs.push(lit);
         }
-        let outputs = self.run_raw("encoder_fwd", &inputs)?;
-        let art = self.artifact("encoder_fwd")?;
+        let outputs = self.run_raw(manifest, "encoder_fwd", &inputs)?;
         let mut h = None;
         let mut v = None;
         for (meta, tensor) in art.outputs.iter().zip(outputs) {

@@ -1,14 +1,21 @@
-//! Typed view of `artifacts/manifest.json`: the contract between the AOT
-//! compile path (python) and the rust runtime. Records every artifact's
-//! flattened input/output order with shapes and dtypes, the model config it
-//! was lowered with, and initializer hints for the parameter leaves.
+//! Typed view of the model manifest: the single contract every execution
+//! backend shares. Loaded from `artifacts/manifest.json` (the AOT compile
+//! path) it records every artifact's flattened input/output order with
+//! shapes and dtypes, the model config it was lowered with, and initializer
+//! hints for the parameter leaves. [`Manifest::synthesize`] builds the same
+//! structure from a [`ManifestConfig`] alone — identical leaf names, order
+//! (pytree flatten order: dict keys sorted, `branch.*` then `encoder.*`),
+//! shapes and initializer hints, but an empty artifact table — so the
+//! native backend, `ParamSet` init, checkpointing and the trainer work with
+//! zero artifacts on disk.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::data::batch::BatchDims;
-use crate::model::params::LeafMeta;
+use crate::model::params::{Init, LeafMeta};
+use crate::tensor::DType;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
@@ -52,6 +59,25 @@ impl ManifestConfig {
             num_layers: self.num_layers,
             num_rbf: self.num_rbf,
             head_hidden: self.head_hidden,
+        }
+    }
+
+    /// The dimensions the native backend runs with when no artifact
+    /// manifest exists on disk (mirrors python `ModelConfig` defaults, so a
+    /// later `make artifacts` produces a byte-compatible parameter layout).
+    pub fn default_native() -> ManifestConfig {
+        ManifestConfig {
+            max_nodes: 256,
+            max_edges: 2048,
+            max_graphs: 16,
+            num_species: 96,
+            hidden: 64,
+            num_layers: 4,
+            num_rbf: 16,
+            head_hidden: 64,
+            cutoff: 6.0,
+            energy_weight: 10.0,
+            force_weight: 1.0,
         }
     }
 }
@@ -144,6 +170,102 @@ impl Manifest {
         })
     }
 
+    /// Build a manifest from a config alone — the zero-artifact path. Leaf
+    /// names, flatten order, shapes and initializer hints match exactly what
+    /// `python -m compile.aot` records for the same config; the artifact
+    /// table is empty, which is how backends and `validate` recognize a
+    /// synthesized manifest.
+    pub fn synthesize(config: ManifestConfig) -> Manifest {
+        let (s, h, r, d) = (config.num_species, config.hidden, config.num_rbf, config.head_hidden);
+        let w = |name: String, shape: Vec<usize>| LeafMeta {
+            init: Some(Init::Lecun { fan_in: shape[0] }),
+            name,
+            shape,
+            dtype: DType::F32,
+        };
+        let b = |name: String, shape: Vec<usize>| LeafMeta {
+            name,
+            shape,
+            dtype: DType::F32,
+            init: Some(Init::Zeros),
+        };
+
+        // Branch leaves, dict-key sorted: energy < force < trunk.
+        let branch = vec![
+            b("branch.energy.b".into(), vec![1]),
+            w("branch.energy.w".into(), vec![d, 1]),
+            b("branch.force.b".into(), vec![1]),
+            w("branch.force.w".into(), vec![d, 1]),
+            b("branch.trunk.b1".into(), vec![d]),
+            b("branch.trunk.b2".into(), vec![d]),
+            b("branch.trunk.b3".into(), vec![d]),
+            w("branch.trunk.w1".into(), vec![h, d]),
+            w("branch.trunk.w2".into(), vec![d, d]),
+            w("branch.trunk.w3".into(), vec![d, d]),
+        ];
+
+        // Encoder leaves: embed < layers; per layer edge < node, keys sorted.
+        let mut encoder = vec![LeafMeta {
+            name: "encoder.embed".into(),
+            shape: vec![s, h],
+            dtype: DType::F32,
+            init: Some(Init::Normal { scale: 0.5 }),
+        }];
+        for li in 0..config.num_layers {
+            let name = |part: &str| format!("encoder.layers.{li}.{part}");
+            encoder.push(b(name("edge.b1"), vec![h]));
+            encoder.push(b(name("edge.b2"), vec![h]));
+            encoder.push(b(name("edge.bg"), vec![1]));
+            encoder.push(w(name("edge.w1"), vec![2 * h + r, h]));
+            encoder.push(w(name("edge.w2"), vec![h, h]));
+            encoder.push(w(name("edge.wg"), vec![h, 1]));
+            encoder.push(b(name("node.b1"), vec![h]));
+            encoder.push(b(name("node.b2"), vec![h]));
+            encoder.push(w(name("node.w1"), vec![2 * h, h]));
+            encoder.push(w(name("node.w2"), vec![h, h]));
+        }
+
+        let params: Vec<LeafMeta> =
+            branch.iter().cloned().chain(encoder.iter().cloned()).collect();
+
+        let field = |name: &str, shape: Vec<usize>, dtype: DType| LeafMeta {
+            name: name.into(),
+            shape,
+            dtype,
+            init: None,
+        };
+        let (n, e, g) = (config.max_nodes, config.max_edges, config.max_graphs);
+        let batch_fields = vec![
+            field("dist", vec![e], DType::F32),
+            field("edge_dst", vec![e], DType::I32),
+            field("edge_mask", vec![e], DType::F32),
+            field("edge_src", vec![e], DType::I32),
+            field("graph_mask", vec![g], DType::F32),
+            field("inv_atoms", vec![g], DType::F32),
+            field("node_graph", vec![n], DType::I32),
+            field("node_mask", vec![n], DType::F32),
+            field("rel_hat", vec![e, 3], DType::F32),
+            field("species", vec![n], DType::I32),
+            field("y_energy", vec![g], DType::F32),
+            field("y_forces", vec![n, 3], DType::F32),
+        ];
+
+        Manifest {
+            dir: PathBuf::new(),
+            config,
+            params: Arc::new(params),
+            encoder_params: Arc::new(encoder),
+            branch_params: Arc::new(branch),
+            batch_fields: Arc::new(batch_fields),
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    /// Whether this manifest was synthesized (no compiled artifacts).
+    pub fn is_synthesized(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
     pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
         self.artifacts
             .get(name)
@@ -153,6 +275,37 @@ impl Manifest {
     /// Consistency checks tying the manifest together (used at load time by
     /// the engine and directly by integration tests).
     pub fn validate(&self) -> anyhow::Result<()> {
+        // Structural checks shared by loaded and synthesized manifests.
+        anyhow::ensure!(
+            self.params.len() == self.encoder_params.len() + self.branch_params.len(),
+            "param leaf count ({}) != encoder ({}) + branch ({})",
+            self.params.len(),
+            self.encoder_params.len(),
+            self.branch_params.len()
+        );
+        anyhow::ensure!(
+            self.batch_fields.len() == 12,
+            "expected 12 batch fields, manifest lists {}",
+            self.batch_fields.len()
+        );
+        if self.is_synthesized() {
+            // Native path: the closed-form P_s/P_h formulas are the ground
+            // truth the synthesized leaves must reproduce exactly.
+            let dims = self.config.arch_dims();
+            let enc: usize = self.encoder_params.iter().map(|m| m.numel()).sum();
+            let br: usize = self.branch_params.iter().map(|m| m.numel()).sum();
+            anyhow::ensure!(
+                enc == dims.shared_params(),
+                "synthesized encoder leaves hold {enc} params, formula says {}",
+                dims.shared_params()
+            );
+            anyhow::ensure!(
+                br == dims.head_params(),
+                "synthesized branch leaves hold {br} params, formula says {}",
+                dims.head_params()
+            );
+            return Ok(());
+        }
         let ts = self.artifact("train_step")?;
         anyhow::ensure!(
             ts.inputs.len() == self.params.len() + self.batch_fields.len(),
@@ -185,5 +338,49 @@ impl Manifest {
             );
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesized_manifest_validates_and_matches_formulas() {
+        let m = Manifest::synthesize(ManifestConfig::default_native());
+        assert!(m.is_synthesized());
+        m.validate().unwrap();
+        // branch.* leaves strictly before encoder.* leaves, each sorted.
+        let names: Vec<&str> = m.params.iter().map(|l| l.name.as_str()).collect();
+        let split = names.iter().position(|n| n.starts_with("encoder.")).unwrap();
+        assert!(names[..split].iter().all(|n| n.starts_with("branch.")));
+        assert!(names[split..].iter().all(|n| n.starts_with("encoder.")));
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted, "leaves must come out in flatten (sorted) order");
+        assert_eq!(m.batch_fields.len(), 12);
+        // Initializer hints follow the AOT rules.
+        let embed = m.params.iter().find(|l| l.name == "encoder.embed").unwrap();
+        assert_eq!(embed.init, Some(Init::Normal { scale: 0.5 }));
+        let w1 = m
+            .params
+            .iter()
+            .find(|l| l.name == "encoder.layers.0.edge.w1")
+            .unwrap();
+        assert_eq!(w1.shape, vec![2 * 64 + 16, 64]);
+        assert_eq!(w1.init, Some(Init::Lecun { fan_in: 2 * 64 + 16 }));
+    }
+
+    #[test]
+    fn synthesized_manifest_respects_custom_dims() {
+        let mut cfg = ManifestConfig::default_native();
+        cfg.hidden = 16;
+        cfg.num_layers = 2;
+        cfg.num_rbf = 8;
+        cfg.head_hidden = 16;
+        let m = Manifest::synthesize(cfg);
+        m.validate().unwrap();
+        assert_eq!(m.encoder_params.len(), 1 + 2 * 10);
+        assert_eq!(m.branch_params.len(), 10);
     }
 }

@@ -1,10 +1,15 @@
-//! AOT runtime: the manifest contract and the PJRT execution engine.
-//! (`PjRtClient::cpu()` -> `HloModuleProto::from_text_file` -> compile ->
-//! execute, per /opt/xla-example/load_hlo.)
+//! Execution runtime: the manifest contract, the pluggable [`Backend`]
+//! trait, the native pure-rust EGNN backend (default, zero artifacts), and
+//! the PJRT AOT engine (`--features pjrt` + `make artifacts`, per
+//! /opt/xla-example/load_hlo).
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
+pub mod native;
 pub mod pjrt;
 
-pub use engine::{Engine, EvalOut, StepOut};
+pub use backend::{Backend, BackendKind};
+pub use engine::{Engine, EvalOut, PjrtBackend, StepOut};
 pub use manifest::{ArtifactMeta, Manifest, ManifestConfig};
+pub use native::NativeBackend;

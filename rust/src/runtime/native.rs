@@ -1,0 +1,161 @@
+//! The native pure-rust execution backend: `model::egnn` behind the
+//! [`Backend`] contract.
+//!
+//! No artifacts, no PJRT, no python — the model dimensions come from the
+//! manifest config (loaded from `artifacts/manifest.json` when present,
+//! synthesized from defaults otherwise), parameters are looked up by their
+//! manifest leaf names, and batches are consumed straight from the
+//! `GraphBatch` flat buffers with zero marshalling. Gradients come back as
+//! a `ParamSet` with the exact leaf structure the trainer's collectives and
+//! the AdamW optimizer expect, so the whole coordinator stack runs
+//! unchanged on top.
+
+use crate::data::batch::GraphBatch;
+use crate::model::egnn::{
+    backward, branch_forward, encoder_forward, loss_metrics, Batch64, BranchParams, EgnnDims,
+    EncoderParams, EncoderState,
+};
+use crate::model::params::ParamSet;
+use crate::runtime::backend::Backend;
+use crate::runtime::engine::{EvalOut, StepOut};
+use crate::runtime::manifest::Manifest;
+use crate::tensor::Tensor;
+
+/// Stateless native backend (all state lives in the manifest + arguments,
+/// so concurrent rank threads share it without synchronization).
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    fn run_forward(
+        &self,
+        manifest: &Manifest,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<(EgnnDims, Batch64, EncoderParams, BranchParams, EncoderState)> {
+        let dims = EgnnDims::from_config(&manifest.config);
+        let b = Batch64::new(&dims, batch)?;
+        let enc = EncoderParams::from_set(&dims, params)?;
+        let br = BranchParams::from_set(&dims, params)?;
+        let es = encoder_forward(&dims, &enc, &b);
+        Ok((dims, b, enc, br, es))
+    }
+}
+
+/// Downcast an f64 buffer into an f32 tensor of `shape`.
+fn tensor_f32(shape: &[usize], data: &[f64]) -> Tensor {
+    Tensor::from_f32(shape, data.iter().map(|&x| x as f32).collect())
+}
+
+/// Copy an f64 gradient buffer into the named leaf of `grads`.
+fn write_leaf(grads: &mut ParamSet, name: &str, data: &[f64]) -> anyhow::Result<()> {
+    let t = grads
+        .get_mut(name)
+        .ok_or_else(|| anyhow::anyhow!("gradient for unknown leaf '{name}'"))?;
+    let dst = t.as_f32_mut();
+    anyhow::ensure!(
+        dst.len() == data.len(),
+        "gradient leaf '{name}': {} values, expected {}",
+        data.len(),
+        dst.len()
+    );
+    for (o, &v) in dst.iter_mut().zip(data) {
+        *o = v as f32;
+    }
+    Ok(())
+}
+
+fn write_scalar(grads: &mut ParamSet, name: &str, v: f64) -> anyhow::Result<()> {
+    write_leaf(grads, name, &[v])
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn platform(&self) -> String {
+        "native".to_string()
+    }
+
+    fn train_step(
+        &self,
+        manifest: &Manifest,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<StepOut> {
+        let (dims, b, enc, br, es) = self.run_forward(manifest, params, batch)?;
+        let bs = branch_forward(&dims, &br, &es, &b);
+        let metrics = loss_metrics(&dims, &b, &bs);
+        let (ge, gb) = backward(&dims, &enc, &br, &es, &bs, &b);
+
+        let mut grads = ParamSet::zeros_like(&manifest.params);
+        write_leaf(&mut grads, "branch.trunk.w1", &gb.tw1)?;
+        write_leaf(&mut grads, "branch.trunk.b1", &gb.tb1)?;
+        write_leaf(&mut grads, "branch.trunk.w2", &gb.tw2)?;
+        write_leaf(&mut grads, "branch.trunk.b2", &gb.tb2)?;
+        write_leaf(&mut grads, "branch.trunk.w3", &gb.tw3)?;
+        write_leaf(&mut grads, "branch.trunk.b3", &gb.tb3)?;
+        write_leaf(&mut grads, "branch.energy.w", &gb.ew)?;
+        write_scalar(&mut grads, "branch.energy.b", gb.eb)?;
+        write_leaf(&mut grads, "branch.force.w", &gb.fw)?;
+        write_scalar(&mut grads, "branch.force.b", gb.fb)?;
+        write_leaf(&mut grads, "encoder.embed", &ge.embed)?;
+        for (li, gl) in ge.layers.iter().enumerate() {
+            let name = |part: &str| format!("encoder.layers.{li}.{part}");
+            write_leaf(&mut grads, &name("edge.w1"), &gl.ew1)?;
+            write_leaf(&mut grads, &name("edge.b1"), &gl.eb1)?;
+            write_leaf(&mut grads, &name("edge.w2"), &gl.ew2)?;
+            write_leaf(&mut grads, &name("edge.b2"), &gl.eb2)?;
+            write_leaf(&mut grads, &name("edge.wg"), &gl.wg)?;
+            write_scalar(&mut grads, &name("edge.bg"), gl.bg)?;
+            write_leaf(&mut grads, &name("node.w1"), &gl.nw1)?;
+            write_leaf(&mut grads, &name("node.b1"), &gl.nb1)?;
+            write_leaf(&mut grads, &name("node.w2"), &gl.nw2)?;
+            write_leaf(&mut grads, &name("node.b2"), &gl.nb2)?;
+        }
+        Ok(StepOut { loss: metrics.loss, mae_e: metrics.mae_e, mae_f: metrics.mae_f, grads })
+    }
+
+    fn eval_step(
+        &self,
+        manifest: &Manifest,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<EvalOut> {
+        let (dims, b, _enc, br, es) = self.run_forward(manifest, params, batch)?;
+        let bs = branch_forward(&dims, &br, &es, &b);
+        let metrics = loss_metrics(&dims, &b, &bs);
+        Ok(EvalOut { loss: metrics.loss, mae_e: metrics.mae_e, mae_f: metrics.mae_f })
+    }
+
+    fn forward(
+        &self,
+        manifest: &Manifest,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<(Tensor, Tensor)> {
+        let (dims, b, _enc, br, es) = self.run_forward(manifest, params, batch)?;
+        let bs = branch_forward(&dims, &br, &es, &b);
+        Ok((
+            tensor_f32(&[dims.g], &bs.e_pa),
+            tensor_f32(&[dims.n, 3], &bs.forces),
+        ))
+    }
+
+    fn encoder_forward(
+        &self,
+        manifest: &Manifest,
+        encoder_params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<(Tensor, Tensor)> {
+        let dims = EgnnDims::from_config(&manifest.config);
+        let b = Batch64::new(&dims, batch)?;
+        let enc = EncoderParams::from_set(&dims, encoder_params)?;
+        let es = encoder_forward(&dims, &enc, &b);
+        Ok((
+            tensor_f32(&[dims.n, dims.h], &es.h),
+            tensor_f32(&[dims.n, 3], &es.v),
+        ))
+    }
+}

@@ -42,8 +42,18 @@ pub struct SessionBuilder {
 
 impl SessionBuilder {
     /// Directory holding the AOT artifacts (`manifest.json`, `*.hlo.txt`).
+    /// Only consulted by the pjrt/auto backends; the native backend runs
+    /// without it (it synthesizes the manifest when the directory is
+    /// absent, or adopts its dims when present).
     pub fn artifacts(mut self, dir: impl Into<String>) -> Self {
         self.config.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Execution backend (native / pjrt / auto). Default: auto — PJRT when
+    /// compiled + artifacts exist, the native pure-rust engine otherwise.
+    pub fn backend(mut self, kind: crate::runtime::BackendKind) -> Self {
+        self.config.backend = kind;
         self
     }
 
@@ -167,7 +177,7 @@ impl SessionBuilder {
         };
         let engine = match engine {
             Some(e) => e,
-            None => Arc::new(Engine::load(&config.artifacts_dir)?),
+            None => Arc::new(Engine::load_with(&config.artifacts_dir, config.backend)?),
         };
         Ok(Session { engine, registry, config, tasks, data: None })
     }
@@ -446,12 +456,11 @@ impl Predictor {
         out: &mut [Option<Prediction>],
     ) -> anyhow::Result<()> {
         let engine = Arc::clone(&self.engine);
-        let full = match self.full_cache.entry(d) {
-            std::collections::btree_map::Entry::Occupied(o) => o.into_mut(),
-            std::collections::btree_map::Entry::Vacant(v) => {
-                v.insert(self.model.full_params(&engine, d))
-            }
-        };
+        if !self.full_cache.contains_key(&d) {
+            let assembled = self.model.full_params(&engine, d)?;
+            self.full_cache.insert(d, assembled);
+        }
+        let full = self.full_cache.get(&d).expect("inserted above");
         let (energy, forces) = engine.forward(full, batch)?;
         let ev = energy.as_f32();
         let fv = forces.as_f32();

@@ -27,21 +27,17 @@ use hydra_mtp::tensor::{DType, Tensor};
 // helpers
 // ---------------------------------------------------------------------------
 
-/// Shared engine, or `None` (test skips with a clear message) when the AOT
-/// artifacts are absent / the binary was built without `pjrt`.
-fn engine() -> Option<Arc<Engine>> {
+/// Shared engine: PJRT when artifacts + the feature are available, the
+/// native pure-rust backend otherwise — the resume-parity tests run (for
+/// real, training included) on every machine.
+fn engine() -> Arc<Engine> {
     use std::sync::OnceLock;
-    static ENGINE: OnceLock<Option<Arc<Engine>>> = OnceLock::new();
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
     ENGINE
-        .get_or_init(|| match Engine::load("artifacts") {
-            Ok(e) => Some(Arc::new(e)),
-            Err(e) => {
-                eprintln!(
-                    "SKIP: AOT artifacts unavailable ({e:#}); run `make artifacts` \
-                     and enable the `pjrt` feature to run checkpoint resume tests"
-                );
-                None
-            }
+        .get_or_init(|| {
+            let e = Engine::load("artifacts").expect("engine loads on every machine");
+            eprintln!("checkpoint tests run on the '{}' backend", e.backend_name());
+            Arc::new(e)
         })
         .clone()
 }
@@ -374,13 +370,13 @@ fn resume_parity_case(e: Arc<Engine>, mode: TrainMode, datasets: &[DatasetId], n
 
 #[test]
 fn resume_parity_single_mode() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     resume_parity_case(e, TrainMode::Single(DatasetId::Ani1x), &[DatasetId::Ani1x], "single");
 }
 
 #[test]
 fn resume_parity_mtl_base() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     resume_parity_case(
         e,
         TrainMode::MtlBase,
@@ -393,7 +389,7 @@ fn resume_parity_mtl_base() {
 fn resume_parity_mtl_par() {
     // The hard case: a 3-head mesh. Bit-parity here relies on the
     // rank-order-deterministic collectives (see comm::collectives).
-    let Some(e) = engine() else { return };
+    let e = engine();
     resume_parity_case(
         e,
         TrainMode::MtlPar,
@@ -404,7 +400,7 @@ fn resume_parity_mtl_par() {
 
 #[test]
 fn resume_refuses_a_corrupted_checkpoint() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let cfg = tiny_config(TrainMode::Single(DatasetId::Qm7x), 1);
     let data = DataBundle::generate(&cfg.data, &[DatasetId::Qm7x]);
     let dir = tmp_dir("refuse");
@@ -440,7 +436,7 @@ fn mtl_base_covers_the_largest_dataset_and_cycles_the_smallest() {
     // count, discarding most of the large source. Now the epoch runs to
     // the LARGEST count, the small dataset cycles modulo its length, and
     // the run log records per-dataset coverage.
-    let Some(e) = engine() else { return };
+    let e = engine();
     let mut big_cfg = tiny_config(TrainMode::MtlBase, 1);
     big_cfg.data.per_dataset = 240;
     let big = DataBundle::generate(&big_cfg.data, &[DatasetId::Ani1x]);
@@ -493,7 +489,7 @@ fn mtl_base_covers_the_largest_dataset_and_cycles_the_smallest() {
 
 #[test]
 fn saved_model_predicts_identically_after_reload() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let cfg = tiny_config(TrainMode::MtlPar, 2);
     let mut session = Session::builder()
         .engine(Arc::clone(&e))
@@ -533,7 +529,7 @@ fn warm_start_fine_tunes_a_new_head_on_a_frozen_encoder() {
     use hydra_mtp::tasks::{
         FidelityProfile, GeneratorProfile, StructureKind, TaskRegistry, TaskSpec,
     };
-    let Some(e) = engine() else { return };
+    let e = engine();
 
     // Pre-train on the five presets...
     let cfg = tiny_config(TrainMode::MtlPar, 2);

@@ -20,21 +20,16 @@ use hydra_mtp::tasks::{
     FidelityProfile, GeneratorProfile, StructureKind, TaskRegistry, TaskSpec,
 };
 
-/// Shared engine, or `None` (test skips with a clear message) when the AOT
-/// artifacts are absent / the binary was built without `pjrt`.
-fn engine() -> Option<Arc<Engine>> {
+/// Shared engine: PJRT when artifacts + the feature are available, the
+/// native pure-rust backend otherwise — these tests never skip.
+fn engine() -> Arc<Engine> {
     use std::sync::OnceLock;
-    static ENGINE: OnceLock<Option<Arc<Engine>>> = OnceLock::new();
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
     ENGINE
-        .get_or_init(|| match Engine::load("artifacts") {
-            Ok(e) => Some(Arc::new(e)),
-            Err(e) => {
-                eprintln!(
-                    "SKIP: AOT artifacts unavailable ({e:#}); run `make artifacts` \
-                     and enable the `pjrt` feature (uncomment `xla` in Cargo.toml) to run session tests"
-                );
-                None
-            }
+        .get_or_init(|| {
+            let e = Engine::load("artifacts").expect("engine loads on every machine");
+            eprintln!("session tests run on the '{}' backend", e.backend_name());
+            Arc::new(e)
         })
         .clone()
 }
@@ -51,7 +46,7 @@ fn tiny_config(mode: TrainMode) -> RunConfig {
 
 #[test]
 fn session_reproduces_manual_path_bit_for_bit() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let cfg = tiny_config(TrainMode::MtlPar);
 
     // --- the seed's manual five-step dance ---
@@ -96,7 +91,7 @@ fn session_reproduces_manual_path_bit_for_bit() {
         &samples,
     )
     .remove(0);
-    let full = manual.model.full_params(&e, d);
+    let full = manual.model.full_params(&e, d).unwrap();
     let (energy, forces) = e.forward(&full, &batch).unwrap();
 
     let mut predictor = session.predictor(&out.model);
@@ -147,7 +142,7 @@ fn sixth_task() -> hydra_mtp::DatasetId {
 
 #[test]
 fn registry_sixth_task_trains_mtl_par_with_six_heads() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let six = sixth_task();
     let tasks: Vec<_> = ALL_DATASETS.iter().copied().chain([six]).collect();
 
@@ -186,7 +181,7 @@ fn registry_sixth_task_trains_mtl_par_with_six_heads() {
 
 #[test]
 fn predictor_rejects_headless_task() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let six = sixth_task();
     // Train only on the five presets...
     let mut session = Session::builder()

@@ -1,6 +1,10 @@
 //! Integration: the 2D-parallel trainer. Exercises all four training modes
-//! end to end on real artifacts with multi-rank meshes, and verifies the
-//! paper's communication-pattern claims against the comm counters.
+//! end to end with multi-rank meshes, and verifies the paper's
+//! communication-pattern claims against the comm counters.
+//!
+//! These tests run on EVERY machine: `Engine::load` falls back to the
+//! native pure-rust backend when no AOT artifacts / PJRT are available, so
+//! nothing here skips on the default build.
 
 use std::sync::Arc;
 
@@ -9,21 +13,16 @@ use hydra_mtp::coordinator::{evaluate_model, DataBundle, Heads, Trainer};
 use hydra_mtp::data::structures::{DatasetId, ALL_DATASETS};
 use hydra_mtp::runtime::Engine;
 
-/// Shared engine, or `None` (test skips with a clear message) when the AOT
-/// artifacts are absent / the binary was built without `pjrt`.
-fn engine() -> Option<Arc<Engine>> {
+/// Shared engine: PJRT when artifacts + the feature are available, the
+/// native backend otherwise — never a skip.
+fn engine() -> Arc<Engine> {
     use std::sync::OnceLock;
-    static ENGINE: OnceLock<Option<Arc<Engine>>> = OnceLock::new();
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
     ENGINE
-        .get_or_init(|| match Engine::load("artifacts") {
-            Ok(e) => Some(Arc::new(e)),
-            Err(e) => {
-                eprintln!(
-                    "SKIP: AOT artifacts unavailable ({e:#}); run `make artifacts` \
-                     and enable the `pjrt` feature (uncomment `xla` in Cargo.toml) to run trainer tests"
-                );
-                None
-            }
+        .get_or_init(|| {
+            let e = Engine::load("artifacts").expect("engine loads on every machine");
+            eprintln!("trainer tests run on the '{}' backend", e.backend_name());
+            Arc::new(e)
         })
         .clone()
 }
@@ -45,7 +44,7 @@ fn bundle(cfg: &RunConfig, datasets: &[DatasetId]) -> DataBundle {
 
 #[test]
 fn single_dataset_training_reduces_loss() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let cfg = tiny_config(TrainMode::Single(DatasetId::Ani1x), 1, 4);
     let data = bundle(&cfg, &[DatasetId::Ani1x]);
     let out = Trainer::new(e, cfg).train(&data).unwrap();
@@ -60,7 +59,7 @@ fn ddp_replicas_match_single_rank_loss_trajectory() {
     // DDP invariant: with the same *global* sample pool, two replicas
     // averaging gradients behave like a larger-batch single rank — and the
     // encoder stays bit-synced (checked inside finalize).
-    let Some(e) = engine() else { return };
+    let e = engine();
     let cfg1 = tiny_config(TrainMode::Single(DatasetId::Qm7x), 2, 2);
     let data = bundle(&cfg1, &[DatasetId::Qm7x]);
     let out = Trainer::new(e, cfg1).train(&data).unwrap();
@@ -70,7 +69,7 @@ fn ddp_replicas_match_single_rank_loss_trajectory() {
 
 #[test]
 fn mtl_par_trains_all_heads_on_mesh() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let cfg = tiny_config(TrainMode::MtlPar, 1, 2);
     let data = bundle(&cfg, &ALL_DATASETS);
     let out = Trainer::new(Arc::clone(&e), cfg).train(&data).unwrap();
@@ -89,7 +88,7 @@ fn mtl_par_trains_all_heads_on_mesh() {
 #[test]
 fn mtl_par_with_replicas_keeps_encoder_synced() {
     // 5 heads x 2 replicas = 10 rank threads; finalize asserts encoder sync.
-    let Some(e) = engine() else { return };
+    let e = engine();
     let cfg = tiny_config(TrainMode::MtlPar, 2, 1);
     let data = bundle(&cfg, &ALL_DATASETS);
     let out = Trainer::new(e, cfg).train(&data).unwrap();
@@ -98,7 +97,7 @@ fn mtl_par_with_replicas_keeps_encoder_synced() {
 
 #[test]
 fn mtl_base_trains_and_carries_all_heads_per_rank() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let cfg = tiny_config(TrainMode::MtlBase, 1, 2);
     let data = bundle(&cfg, &ALL_DATASETS);
     let out = Trainer::new(e, cfg).train(&data).unwrap();
@@ -113,7 +112,7 @@ fn mtl_base_trains_and_carries_all_heads_per_rank() {
 
 #[test]
 fn baseline_all_trains_one_head_on_mixed_stream() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let cfg = tiny_config(TrainMode::BaselineAll, 1, 2);
     let data = bundle(&cfg, &ALL_DATASETS);
     let out = Trainer::new(e, cfg).train(&data).unwrap();
@@ -125,7 +124,7 @@ fn baseline_all_trains_one_head_on_mixed_stream() {
 fn comm_payloads_match_paper_claims() {
     // Paper Section 4.3 / 6: MTL-par replaces the global (P_s + N_h*P_h)
     // allreduce with a global P_s + per-subgroup P_h. Verify with counters.
-    let Some(e) = engine() else { return };
+    let e = engine();
     let dims = e.manifest.config.arch_dims();
     let ps = dims.shared_params() as u64;
     let ph = dims.head_params() as u64;
@@ -177,7 +176,7 @@ fn training_loss_and_mae_sequences_are_reproducible() {
     // sequences through real train/eval steps. Single-rank is the exactly
     // deterministic case (multi-rank reductions accumulate in thread-arrival
     // order, which the seed already only bounds to 1e-5 in encoder sync).
-    let Some(e) = engine() else { return };
+    let e = engine();
     let cfg = tiny_config(TrainMode::Single(DatasetId::Ani1x), 1, 3);
     let data = bundle(&cfg, &[DatasetId::Ani1x]);
     let a = Trainer::new(Arc::clone(&e), cfg.clone()).train(&data).unwrap();
@@ -195,7 +194,7 @@ fn training_loss_and_mae_sequences_are_reproducible() {
 
 #[test]
 fn early_stopping_halts_before_epoch_budget() {
-    let Some(e) = engine() else { return };
+    let e = engine();
     let mut cfg = tiny_config(TrainMode::Single(DatasetId::MpTrj), 1, 30);
     cfg.train.patience = 2;
     cfg.train.lr = 1e-12; // effectively frozen: val loss cannot improve
