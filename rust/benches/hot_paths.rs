@@ -5,10 +5,13 @@
 //! (op name, ns/iter, throughput) — the machine-readable trajectory that
 //! EXPERIMENTS.md §Perf tracks and CI uploads as an artifact. The data-path
 //! AND native-backend sections need no AOT artifacts, so every CI run now
-//! carries real train/eval step timings; only the PJRT section still wants
-//! `make artifacts` + `--features pjrt`. `*_seed` ops are the retained seed
-//! implementations, benchmarked next to their replacements so every entry
-//! carries its own before/after.
+//! carries real train/eval step timings — at BOTH precisions: the
+//! `native_f64 *` ops are the scalar oracle path, the `native_f32 *` ops
+//! the blocked mixed-precision microkernels, recorded side by side in the
+//! same run. Only the PJRT section still wants `make artifacts` +
+//! `--features pjrt`. `*_seed` ops are the retained seed implementations,
+//! benchmarked next to their replacements so every entry carries its own
+//! before/after.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -25,7 +28,7 @@ use hydra_mtp::data::structures::{AtomicStructure, DatasetId};
 use hydra_mtp::data::DDStore;
 use hydra_mtp::model::optimizer::{AdamW, AdamWConfig};
 use hydra_mtp::model::params::ParamSet;
-use hydra_mtp::runtime::{BackendKind, Engine};
+use hydra_mtp::runtime::{BackendKind, Engine, Precision};
 use hydra_mtp::util::rng::Rng;
 use hydra_mtp::util::timer::{bench, bench_n, write_bench_json, BenchStats};
 
@@ -150,26 +153,33 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // --- native backend: the zero-artifact train/eval step hot path ---
-    // Runs everywhere (pure rust), so the step-time perf trajectory finally
-    // has real numbers in every CI run, not only on artifact-full machines.
+    // --- native backend: the zero-artifact train/eval step hot path, at
+    // BOTH precisions side by side. `native_f64` is the scalar oracle path
+    // (the PR-4 baseline, renamed); `native_f32` the blocked f32-compute /
+    // f64-accumulate microkernels of `model::kernels`. Each engine pins its
+    // precision explicitly (no env dependence), so a single run — and
+    // therefore a single CI `BENCH_hot_paths.json` artifact — carries the
+    // f64-vs-f32 speedup. Runs everywhere (pure rust).
+    for (tag, precision) in
+        [("native_f64", Precision::F64), ("native_f32", Precision::MixedF32)]
     {
-        let native = Engine::load_with("artifacts", BackendKind::Native)?;
+        let native = Engine::load_full("artifacts", BackendKind::Native, precision)?;
         let ndims = native.manifest.config.batch_dims();
         let ncut = native.manifest.config.cutoff;
         let nbatches = BatchBuilder::build_all(ndims, ncut, &ss);
         let nbatch: &GraphBatch = &nbatches[0];
         let nparams = ParamSet::init(&native.manifest.params, 1);
-        record(&mut results, bench_n("native train_step (fwd+bwd, full batch)", 12, || {
+        let name = |op: &str| format!("{tag} {op}");
+        record(&mut results, bench_n(&name("train_step (fwd+bwd, full batch)"), 12, || {
             std::hint::black_box(native.train_step(&nparams, nbatch).unwrap());
         }));
-        record(&mut results, bench_n("native eval_step (fwd only)", 20, || {
+        record(&mut results, bench_n(&name("eval_step (fwd only)"), 20, || {
             std::hint::black_box(native.eval_step(&nparams, nbatch).unwrap());
         }));
-        record(&mut results, bench_n("native forward (serving)", 20, || {
+        record(&mut results, bench_n(&name("forward (serving)"), 20, || {
             std::hint::black_box(native.forward(&nparams, nbatch).unwrap());
         }));
-        println!("\nnative executions: {}", native.executions());
+        println!("\n{tag} executions: {}", native.executions());
     }
 
     // --- PJRT path (needs compiled AOT artifacts + --features pjrt) ---

@@ -4,7 +4,7 @@
 use std::path::Path;
 
 use crate::data::structures::DatasetId;
-use crate::runtime::backend::BackendKind;
+use crate::runtime::backend::{BackendKind, Precision};
 use crate::util::json::Json;
 
 /// How the model is trained (the seven models of Tables 1-2 plus modes).
@@ -140,6 +140,11 @@ pub struct RunConfig {
     /// Execution backend: native (default everywhere), pjrt (AOT artifacts
     /// + `--features pjrt`), or auto (pjrt when available, else native).
     pub backend: BackendKind,
+    /// Native-backend compute precision: `F64` (default, the gradcheck
+    /// oracle) or `MixedF32` (blocked f32 kernels, f64 accumulation). The
+    /// `HYDRA_MTP_PRECISION` env var overrides this at engine load; PJRT
+    /// ignores it.
+    pub precision: Precision,
     pub mode: TrainMode,
     pub data: DataConfig,
     pub train: TrainConfig,
@@ -152,6 +157,7 @@ impl Default for RunConfig {
         RunConfig {
             artifacts_dir: "artifacts".to_string(),
             backend: BackendKind::Auto,
+            precision: Precision::F64,
             mode: TrainMode::MtlPar,
             data: DataConfig::default(),
             train: TrainConfig::default(),
@@ -189,6 +195,7 @@ impl RunConfig {
         Json::obj(vec![
             ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
             ("backend", Json::str(self.backend.name())),
+            ("precision", Json::str(self.precision.name())),
             ("mode", Json::str(mode)),
             (
                 "data",
@@ -249,6 +256,9 @@ impl RunConfig {
         }
         if let Some(s) = j.get("backend").as_str() {
             cfg.backend = BackendKind::parse(s)?;
+        }
+        if let Some(s) = j.get("precision").as_str() {
+            cfg.precision = Precision::parse(s)?;
         }
         if let Some(s) = j.get("mode").as_str() {
             cfg.mode = TrainMode::parse(s)?;
@@ -326,27 +336,30 @@ impl RunConfig {
     /// from the run that wrote the file. `epochs` is deliberately
     /// excluded — extending a finished run IS the resume use case — as are
     /// the artifacts dir and the checkpoint paths themselves. Floats are
-    /// rendered by bit pattern so the comparison is exact. The backend is
-    /// included: native and PJRT numerics differ, so resuming a PJRT run on
-    /// the native engine (or vice versa) must be refused, not silently
-    /// diverge. This variant records the *configured* kind; the trainer
+    /// rendered by bit pattern so the comparison is exact. The backend and
+    /// the compute precision are included: native/PJRT and f64/mixed-f32
+    /// numerics differ, so resuming a run on a different backend OR at a
+    /// different precision must be refused, not silently diverge. This
+    /// variant records the *configured* kind and precision; the trainer
     /// fingerprints checkpoints with [`Self::trajectory_fingerprint_resolved`]
-    /// and the engine's actual backend, so `auto` resolving differently on
-    /// the writing and resuming machines is still caught.
+    /// and the engine's actual backend + precision, so `auto` (or a
+    /// `HYDRA_MTP_PRECISION` override) resolving differently on the
+    /// writing and resuming machines is still caught.
     pub fn trajectory_fingerprint(&self) -> String {
-        self.trajectory_fingerprint_resolved(self.backend.name())
+        self.trajectory_fingerprint_resolved(self.backend.name(), self.precision.name())
     }
 
-    /// [`Self::trajectory_fingerprint`] with an explicit backend token —
-    /// pass the RESOLVED backend (`engine.backend_name()`) when writing or
-    /// validating checkpoints.
-    pub fn trajectory_fingerprint_resolved(&self, backend: &str) -> String {
+    /// [`Self::trajectory_fingerprint`] with explicit backend + precision
+    /// tokens — pass the RESOLVED values (`engine.backend_name()`,
+    /// `engine.precision().name()`) when writing or validating checkpoints.
+    pub fn trajectory_fingerprint_resolved(&self, backend: &str, precision: &str) -> String {
         let f = |x: f64| format!("{:016x}", x.to_bits());
         format!(
-            "backend={};mode={};train_seed={};data_seed={};per_dataset={};max_atoms={};\
+            "backend={};precision={};mode={};train_seed={};data_seed={};per_dataset={};max_atoms={};\
              cutoff={};train_frac={};val_frac={};lr={};weight_decay={};beta1={};\
              beta2={};eps={};grad_clip={};patience={};replicas={}",
             backend,
+            precision,
             self.mode.name(),
             self.train.seed,
             self.data.seed,
@@ -386,6 +399,7 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.mode = TrainMode::Single(DatasetId::MpTrj);
         cfg.backend = BackendKind::Native;
+        cfg.precision = Precision::MixedF32;
         cfg.train.lr = 0.005;
         cfg.parallel.replicas = 4;
         cfg.checkpoint.dir = Some("ckpts".to_string());
@@ -393,6 +407,7 @@ mod tests {
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.mode, cfg.mode);
         assert_eq!(back.backend, BackendKind::Native);
+        assert_eq!(back.precision, Precision::MixedF32);
         assert_eq!(back.train.lr, 0.005);
         assert_eq!(back.parallel.replicas, 4);
         assert_eq!(back.checkpoint.dir.as_deref(), Some("ckpts"));
@@ -418,6 +433,7 @@ mod tests {
             |c| c.mode = TrainMode::MtlBase,
             |c| c.train.patience = 9,
             |c| c.backend = BackendKind::Native,
+            |c| c.precision = Precision::MixedF32,
         ] {
             let mut c = RunConfig::default();
             mutate(&mut c);
@@ -427,6 +443,21 @@ mod tests {
                 "trajectory knob change must change the fingerprint"
             );
         }
+    }
+
+    #[test]
+    fn resolved_fingerprint_names_backend_and_precision() {
+        // The resume-refusal error prints both fingerprints, so these
+        // tokens are what names the writer's and the resumer's precision
+        // (asserted end-to-end in rust/tests/integration_precision.rs).
+        let cfg = RunConfig::default();
+        let fp = cfg.trajectory_fingerprint_resolved("native", "mixed-f32");
+        assert!(fp.starts_with("backend=native;precision=mixed-f32;"), "{fp}");
+        assert_ne!(
+            fp,
+            cfg.trajectory_fingerprint_resolved("native", "f64"),
+            "precision must be a trajectory knob"
+        );
     }
 
     #[test]

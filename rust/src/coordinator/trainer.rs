@@ -226,15 +226,17 @@ impl Trainer {
             TrainMode::Single(d) => vec![d],
             _ => data.datasets(),
         };
-        // Fingerprint with the RESOLVED backend: `auto` can resolve to
-        // different backends on the writing and resuming machines, and
-        // native/PJRT numerics must never be silently mixed mid-run.
+        // Fingerprint with the RESOLVED backend + precision: `auto` (or a
+        // HYDRA_MTP_PRECISION override) can resolve differently on the
+        // writing and resuming machines, and native/PJRT or f64/mixed-f32
+        // numerics must never be silently mixed mid-run.
         ckpt.validate_for(
             &self.cfg.mode.name(),
             self.cfg.train.seed,
-            &self
-                .cfg
-                .trajectory_fingerprint_resolved(self.engine.backend_name()),
+            &self.cfg.trajectory_fingerprint_resolved(
+                self.engine.backend_name(),
+                self.engine.precision().name(),
+            ),
             &datasets,
         )?;
         // Structural compatibility with the engine this run is about to use
@@ -714,9 +716,11 @@ fn save_checkpoint_rank0(
     let ckpt = TrainCheckpoint {
         mode: cfg.mode.name(),
         train_seed: cfg.train.seed,
-        // The RESOLVED backend: `auto` must not fingerprint-match across
-        // machines whose auto resolution differs (native vs PJRT numerics).
-        config_fingerprint: cfg.trajectory_fingerprint_resolved(engine.backend_name()),
+        // The RESOLVED backend + precision: `auto` (or an env precision
+        // override) must not fingerprint-match across machines whose
+        // resolution differs — the numerics differ.
+        config_fingerprint: cfg
+            .trajectory_fingerprint_resolved(engine.backend_name(), engine.precision().name()),
         epochs_done,
         stopped,
         stopper_best,

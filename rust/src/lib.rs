@@ -36,6 +36,37 @@
 //! auto|native|pjrt`, or the `HYDRA_MTP_BACKEND` env var; `auto` prefers
 //! PJRT when available and falls back to native.
 //!
+//! ### Precision
+//!
+//! The native backend computes at one of two precisions
+//! ([`runtime::Precision`]; `RunConfig.precision`,
+//! `Session::builder().precision(..)`, CLI `--precision f64|mixed-f32`,
+//! env `HYDRA_MTP_PRECISION`):
+//!
+//! - **`F64`** (default) — scalar f64 kernels everywhere; the numerical
+//!   oracle. Every analytic gradient is validated against central finite
+//!   differences at this precision, and its results are kept byte-for-byte
+//!   stable across PRs.
+//! - **`MixedF32`** — blocked, register-tiled f32 microkernels with **f64
+//!   accumulators** ([`model::kernels`]) for the matmul and silu/gate hot
+//!   spots (the reduced-precision-compute / full-precision-accumulate
+//!   recipe of the HydraGNN-lineage GFM runs); the loss reduction, scatter
+//!   aggregation, gradient seeds and optimizer stay f64. Gradients are
+//!   bounded leaf-by-leaf against the f64 oracle (documented tolerance in
+//!   `rust/tests/gradcheck.rs`). Chunking preserves every reduction's
+//!   accumulation order, so results remain **bit-deterministic for any
+//!   thread count** and the checkpoint kill-at-k parity guarantees hold at
+//!   either precision (`rust/tests/integration_precision.rs`).
+//!
+//! The *resolved* precision is recorded in each checkpoint's trajectory
+//! fingerprint: resuming a run at a different precision is refused with an
+//! error naming both, exactly like resuming across backends. Kernel
+//! fan-out is capped at `HYDRA_MTP_THREADS` worker threads (default 8,
+//! clamped to `[1, 512]`; `0` means serial). `cargo bench --bench
+//! hot_paths` records `native_f64` vs `native_f32` step timings
+//! side-by-side in `BENCH_hot_paths.json` (see EXPERIMENTS.md §Perf —
+//! quote only CI-artifact numbers).
+//!
 //! ## The featurize-once data path
 //!
 //! Training data flows generate -> featurize -> plan -> marshal, and each
@@ -172,7 +203,7 @@ pub mod tensor;
 pub mod util;
 
 pub use config::{RunConfig, TrainMode};
-pub use runtime::{BackendKind, Engine};
+pub use runtime::{BackendKind, Engine, Precision};
 pub use session::{Prediction, Predictor, Session, SessionBuilder};
 pub use tasks::{DatasetId, TaskRegistry, TaskSpec, ALL_DATASETS};
 

@@ -64,12 +64,15 @@ COMMANDS
   datagen  --out DIR [--per-dataset N] [--seed S] [--max-atoms A]
   train    --mode MODE [--config FILE] [--epochs N] [--replicas M]
            [--per-dataset N] [--seed S] [--lr LR] [--backend auto|native|pjrt]
-           [--artifacts DIR] [--csv FILE]
+           [--precision f64|mixed-f32] [--artifacts DIR] [--csv FILE]
            [--checkpoint-dir DIR] [--checkpoint-every N] [--resume PATH]
            MODE: ANI1x|QM7-X|Transition1x|MPTrj|Alexandria|baseline-all|mtl-base|mtl-par
            --backend native (the default resolution on artifact-less machines)
            trains with the pure-rust EGNN engine: no artifacts, no PJRT;
            --backend pjrt requires `make artifacts` + `--features pjrt`
+           --precision mixed-f32 runs the native engine's blocked f32
+           microkernels (f64 accumulation); f64 is the gradcheck oracle.
+           Checkpoints record the precision: resume across precisions is refused
            --checkpoint-dir writes CRC-guarded epoch_NNNN.ckpt files; --resume
            restarts bit-identically from a checkpoint file (or the newest in a dir)
   table1   [--epochs N] [--per-dataset N] [--replicas M] [--backend B] [--csv FILE]
@@ -84,8 +87,17 @@ Misspelled flags are rejected with the valid list for the subcommand."
 }
 
 /// Flags shared by the config-driven subcommands.
-const CONFIG_FLAGS: [&str; 8] =
-    ["config", "artifacts", "backend", "epochs", "replicas", "per-dataset", "seed", "lr"];
+const CONFIG_FLAGS: [&str; 9] = [
+    "config",
+    "artifacts",
+    "backend",
+    "precision",
+    "epochs",
+    "replicas",
+    "per-dataset",
+    "seed",
+    "lr",
+];
 
 fn base_config(args: &Args) -> anyhow::Result<RunConfig> {
     let mut cfg = match args.opt_str("config") {
@@ -95,6 +107,9 @@ fn base_config(args: &Args) -> anyhow::Result<RunConfig> {
     cfg.artifacts_dir = args.str("artifacts", &cfg.artifacts_dir);
     if let Some(b) = args.opt_str("backend") {
         cfg.backend = hydra_mtp::runtime::BackendKind::parse(b)?;
+    }
+    if let Some(p) = args.opt_str("precision") {
+        cfg.precision = hydra_mtp::runtime::Precision::parse(p)?;
     }
     if let Some(e) = args.opt_str("epochs") {
         cfg.train.epochs = e.parse()?;
@@ -160,9 +175,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     println!("loading engine ({} backend requested) ...", cfg.backend.name());
     let mut session = Session::builder().config(cfg).build()?;
     println!(
-        "backend: {} ({}); generating data ...",
+        "backend: {} ({}, precision {}); generating data ...",
         session.engine().backend_name(),
-        session.engine().platform()
+        session.engine().platform(),
+        session.engine().precision().name()
     );
     // Generate outside the timer so "trained in" stays comparable with
     // seed-era logs (training only, no data generation).

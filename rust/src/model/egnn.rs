@@ -14,16 +14,28 @@
 //!   the vector channel);
 //! * loss — the paper's weighted energy+force MSE with masked MAE metrics.
 //!
-//! Everything computes in f64 on the padded `GraphBatch` flat buffers
-//! directly (no Literal marshalling) and the heavy per-edge / per-node
-//! matmuls fan out over scoped worker threads — the same pattern as
-//! `data::FeaturizedStore::build`. Row/column chunking never changes the
-//! within-row accumulation order, so results are **bit-identical for any
-//! thread count**: the reproducibility and checkpoint-parity guarantees
-//! hold on the native path too. Gradients are validated against central
-//! finite differences for every parameter leaf in `rust/tests/gradcheck.rs`.
+//! Everything runs on the padded `GraphBatch` flat buffers directly (no
+//! Literal marshalling) at one of two precisions (the [`Precision`] knob,
+//! carried in [`EgnnDims`]): the default **f64** path computes everything
+//! in scalar f64 and is the byte-for-byte-stable gradcheck oracle; the
+//! **mixed-f32** path routes the matmul and silu/gate hot spots through
+//! the blocked f32-compute / f64-accumulate microkernels of
+//! [`crate::model::kernels`] while keeping the loss reduction, scatter
+//! aggregation and gradient seeds in f64. On both paths the heavy
+//! per-edge / per-node matmuls fan out over scoped worker threads — the
+//! same pattern as `data::FeaturizedStore::build` — and row/column
+//! chunking never changes the within-row accumulation order, so results
+//! are **bit-identical for any thread count** at a fixed precision: the
+//! reproducibility and checkpoint-parity guarantees hold on the native
+//! path too. Gradients are validated against central finite differences
+//! for every parameter leaf (f64) and bounded against the f64 oracle
+//! (mixed-f32) in `rust/tests/gradcheck.rs`.
 
 use crate::data::batch::GraphBatch;
+use crate::model::kernels::{
+    self, colsum_into, dot, dsilu, grad_w_into, grad_x_into, linear_into, map_silu, mul_dsilu,
+    Precision,
+};
 use crate::model::params::ParamSet;
 use crate::runtime::manifest::ManifestConfig;
 
@@ -47,10 +59,20 @@ pub struct EgnnDims {
     pub cutoff: f64,
     pub w_energy: f64,
     pub w_force: f64,
+    /// Compute precision of the matmul + silu/gate kernels (see
+    /// [`crate::model::kernels`]); the loss and the scatter/gather passes
+    /// stay f64 at either setting.
+    pub precision: Precision,
 }
 
 impl EgnnDims {
+    /// Dims at the default [`Precision::F64`] (the oracle path).
     pub fn from_config(c: &ManifestConfig) -> EgnnDims {
+        Self::from_config_with(c, Precision::F64)
+    }
+
+    /// Dims with an explicit compute precision.
+    pub fn from_config_with(c: &ManifestConfig, precision: Precision) -> EgnnDims {
         EgnnDims {
             n: c.max_nodes,
             e: c.max_edges,
@@ -63,6 +85,7 @@ impl EgnnDims {
             cutoff: c.cutoff,
             w_energy: c.energy_weight,
             w_force: c.force_weight,
+            precision,
         }
     }
 
@@ -270,174 +293,104 @@ impl Batch64 {
 }
 
 // ---------------------------------------------------------------------------
-// activations / threaded matmul primitives
+// precision-dispatched kernel wrappers
 // ---------------------------------------------------------------------------
+//
+// The matmul and elementwise kernels themselves (both the f64 oracle and
+// the blocked mixed-f32 implementations) live in `crate::model::kernels`;
+// everything below selects between them from `EgnnDims::precision`. The
+// F64 arms call exactly the kernels (in exactly the order) the
+// pre-precision engine used, keeping that path byte-for-byte stable.
 
-#[inline]
-fn sigmoid(x: f64) -> f64 {
-    1.0 / (1.0 + (-x).exp())
-}
-
-#[inline]
-fn silu(x: f64) -> f64 {
-    x * sigmoid(x)
-}
-
-/// Derivative of silu wrt its pre-activation.
-#[inline]
-fn dsilu(a: f64) -> f64 {
-    let s = sigmoid(a);
-    s * (1.0 + a * (1.0 - s))
-}
-
-fn map_silu(a: &[f64]) -> Vec<f64> {
-    a.iter().map(|&x| silu(x)).collect()
-}
-
-/// dy * dsilu(a), elementwise.
-fn mul_dsilu(dy: &[f64], a: &[f64]) -> Vec<f64> {
-    dy.iter().zip(a).map(|(&g, &x)| g * dsilu(x)).collect()
-}
-
-#[inline]
-fn dot(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
-}
-
-/// Worker count for a kernel of `work` multiply-adds spread over `rows`
-/// independent rows. Small kernels stay serial (thread spawn would dominate);
-/// large ones fan out like `FeaturizedStore::build`. Chunking never alters
-/// per-row accumulation order, so the result is thread-count independent.
-fn plan_threads(rows: usize, work: usize) -> usize {
-    const WORK_PER_THREAD: usize = 1 << 21; // ~2M multiply-adds
-    if work < 2 * WORK_PER_THREAD || rows < 2 {
-        return 1;
-    }
-    let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-    (work / WORK_PER_THREAD).clamp(1, avail.min(8).min(rows))
-}
-
-fn linear_rows(x: &[f64], w: &[f64], b: &[f64], out: &mut [f64], k: usize, n: usize) {
-    let rows = out.len() / n;
-    for i in 0..rows {
-        let xrow = &x[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        orow.copy_from_slice(b);
-        for (kk, &a) in xrow.iter().enumerate() {
-            if a != 0.0 {
-                let wrow = &w[kk * n..(kk + 1) * n];
-                for (o, &wv) in orow.iter_mut().zip(wrow) {
-                    *o += a * wv;
-                }
-            }
-        }
-    }
-}
-
-/// out[m,n] = x[m,k] @ w[k,n] + b[n], parallel over row chunks.
-fn linear_into(x: &[f64], w: &[f64], b: &[f64], out: &mut [f64], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(x.len(), m * k);
-    debug_assert_eq!(w.len(), k * n);
-    debug_assert_eq!(b.len(), n);
-    debug_assert_eq!(out.len(), m * n);
-    let threads = plan_threads(m, m * k * n);
-    if threads <= 1 {
-        linear_rows(x, w, b, out, k, n);
-        return;
-    }
-    let rows_per = m.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (x_chunk, out_chunk) in x.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n)) {
-            scope.spawn(move || linear_rows(x_chunk, w, b, out_chunk, k, n));
-        }
-    });
-}
-
-/// One column block of gw += x^T @ dy: `gw_chunk` covers columns
-/// `k0..k0+kw` of x. Accumulates over `m` in order for any chunking.
-fn grad_w_block(
+/// out[m,n] = x[m,k] @ w[k,n] + b[n], precision-dispatched.
+#[allow(clippy::too_many_arguments)]
+fn lin(
+    p: Precision,
     x: &[f64],
-    dy: &[f64],
-    gw_chunk: &mut [f64],
+    w: &[f64],
+    b: &[f64],
+    out: &mut [f64],
     m: usize,
     k: usize,
     n: usize,
-    k0: usize,
 ) {
-    let kw = gw_chunk.len() / n;
-    for mi in 0..m {
-        let dyrow = &dy[mi * n..(mi + 1) * n];
-        let xrow = &x[mi * k..(mi + 1) * k];
-        for kk in 0..kw {
-            let a = xrow[k0 + kk];
-            if a != 0.0 {
-                let grow = &mut gw_chunk[kk * n..(kk + 1) * n];
-                for (gv, &dv) in grow.iter_mut().zip(dyrow) {
-                    *gv += a * dv;
-                }
-            }
+    match p {
+        Precision::F64 => linear_into(x, w, b, out, m, k, n),
+        Precision::MixedF32 => kernels::linear_into_mixed(x, w, b, out, m, k, n),
+    }
+}
+
+/// Linear followed by silu: fills the pre-activation `pre` (cached for the
+/// backward pass) and returns the activation. The MixedF32 arm runs the
+/// fused kernel — one memory pass over the output block.
+#[allow(clippy::too_many_arguments)]
+fn lin_silu(
+    p: Precision,
+    x: &[f64],
+    w: &[f64],
+    b: &[f64],
+    pre: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f64> {
+    match p {
+        Precision::F64 => {
+            linear_into(x, w, b, pre, m, k, n);
+            map_silu(pre)
+        }
+        Precision::MixedF32 => {
+            let mut act = vec![0.0; m * n];
+            kernels::linear_silu_into_mixed(x, w, b, pre, &mut act, m, k, n);
+            act
         }
     }
 }
 
-/// gw[k,n] += x[m,k]^T @ dy[m,n], parallel over column chunks of x (= row
-/// chunks of gw).
-fn grad_w_into(x: &[f64], dy: &[f64], gw: &mut [f64], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(x.len(), m * k);
-    debug_assert_eq!(dy.len(), m * n);
-    debug_assert_eq!(gw.len(), k * n);
-    let threads = plan_threads(k, m * k * n);
-    if threads <= 1 {
-        grad_w_block(x, dy, gw, m, k, n, 0);
-        return;
-    }
-    let cols_per = k.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (t, gw_chunk) in gw.chunks_mut(cols_per * n).enumerate() {
-            scope.spawn(move || grad_w_block(x, dy, gw_chunk, m, k, n, t * cols_per));
-        }
-    });
-}
-
-/// Row block of dx += dy @ w^T.
-fn grad_x_rows(dy: &[f64], w: &[f64], dx: &mut [f64], k: usize, n: usize) {
-    let rows = dx.len() / k;
-    for i in 0..rows {
-        let dyrow = &dy[i * n..(i + 1) * n];
-        let dxrow = &mut dx[i * k..(i + 1) * k];
-        for (kk, dv) in dxrow.iter_mut().enumerate() {
-            *dv += dot(dyrow, &w[kk * n..(kk + 1) * n]);
-        }
+/// gw += x^T @ dy, precision-dispatched.
+fn gw_into(p: Precision, x: &[f64], dy: &[f64], gw: &mut [f64], m: usize, k: usize, n: usize) {
+    match p {
+        Precision::F64 => grad_w_into(x, dy, gw, m, k, n),
+        Precision::MixedF32 => kernels::grad_w_into_mixed(x, dy, gw, m, k, n),
     }
 }
 
-/// dx[m,k] += dy[m,n] @ w[k,n]^T, parallel over row chunks.
-fn grad_x_into(dy: &[f64], w: &[f64], dx: &mut [f64], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(dy.len(), m * n);
-    debug_assert_eq!(w.len(), k * n);
-    debug_assert_eq!(dx.len(), m * k);
-    let threads = plan_threads(m, m * k * n);
-    if threads <= 1 {
-        grad_x_rows(dy, w, dx, k, n);
-        return;
+/// dx += dy @ w^T, precision-dispatched.
+fn gx_into(p: Precision, dy: &[f64], w: &[f64], dx: &mut [f64], m: usize, k: usize, n: usize) {
+    match p {
+        Precision::F64 => grad_x_into(dy, w, dx, m, k, n),
+        Precision::MixedF32 => kernels::grad_x_into_mixed(dy, w, dx, m, k, n),
     }
-    let rows_per = m.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (dy_chunk, dx_chunk) in dy.chunks(rows_per * n).zip(dx.chunks_mut(rows_per * k)) {
-            scope.spawn(move || grad_x_rows(dy_chunk, w, dx_chunk, k, n));
-        }
-    });
 }
 
-/// gb[n] += column sums of dy[m,n].
-fn colsum_into(dy: &[f64], gb: &mut [f64], m: usize, n: usize) {
-    debug_assert_eq!(dy.len(), m * n);
-    debug_assert_eq!(gb.len(), n);
-    for mi in 0..m {
-        let row = &dy[mi * n..(mi + 1) * n];
-        for (g, &v) in gb.iter_mut().zip(row) {
-            *g += v;
-        }
+#[inline]
+fn dot_p(p: Precision, a: &[f64], b: &[f64]) -> f64 {
+    match p {
+        Precision::F64 => dot(a, b),
+        Precision::MixedF32 => kernels::dot_mixed(a, b),
+    }
+}
+
+#[inline]
+fn tanh_p(p: Precision, x: f64) -> f64 {
+    match p {
+        Precision::F64 => x.tanh(),
+        Precision::MixedF32 => kernels::tanh_mixed(x),
+    }
+}
+
+#[inline]
+fn dsilu_p(p: Precision, x: f64) -> f64 {
+    match p {
+        Precision::F64 => dsilu(x),
+        Precision::MixedF32 => kernels::dsilu_mixed(x),
+    }
+}
+
+fn mul_dsilu_p(p: Precision, dy: &[f64], a: &[f64]) -> Vec<f64> {
+    match p {
+        Precision::F64 => mul_dsilu(dy, a),
+        Precision::MixedF32 => kernels::mul_dsilu_mixed(dy, a),
     }
 }
 
@@ -509,6 +462,7 @@ fn build_edge_input(x: &mut [f64], hbuf: &[f64], rbf: &[f64], b: &Batch64, dims:
 /// Shared-encoder forward pass with cached intermediates.
 pub fn encoder_forward(dims: &EgnnDims, enc: &EncoderParams, b: &Batch64) -> EncoderState {
     let (n, e, h, r) = (dims.n, dims.e, dims.h, dims.r);
+    let p = dims.precision;
 
     // Gaussian RBF under the cosine cutoff envelope, masked.
     let mut rbf = vec![0.0; e * r];
@@ -556,11 +510,9 @@ pub fn encoder_forward(dims: &EgnnDims, enc: &EncoderParams, b: &Batch64) -> Enc
         build_edge_input(&mut x, &h_in, &rbf, b, dims);
 
         let mut ae1 = vec![0.0; e * h];
-        linear_into(&x, &lp.ew1, &lp.eb1, &mut ae1, e, kx, h);
-        let u = map_silu(&ae1);
+        let u = lin_silu(p, &x, &lp.ew1, &lp.eb1, &mut ae1, e, kx, h);
         let mut ae2 = vec![0.0; e * h];
-        linear_into(&u, &lp.ew2, &lp.eb2, &mut ae2, e, h, h);
-        let mut m = map_silu(&ae2);
+        let mut m = lin_silu(p, &u, &lp.ew2, &lp.eb2, &mut ae2, e, h, h);
         for ei in 0..e {
             if b.emask[ei] == 0.0 {
                 m[ei * h..(ei + 1) * h].fill(0.0);
@@ -568,7 +520,7 @@ pub fn encoder_forward(dims: &EgnnDims, enc: &EncoderParams, b: &Batch64) -> Enc
         }
         let mut gate = vec![0.0; e];
         for ei in 0..e {
-            gate[ei] = (dot(&m[ei * h..(ei + 1) * h], &lp.wg) + lp.bg).tanh();
+            gate[ei] = tanh_p(p, dot_p(p, &m[ei * h..(ei + 1) * h], &lp.wg) + lp.bg);
         }
 
         // Scatter aggregation (serial, edge order: deterministic).
@@ -604,10 +556,9 @@ pub fn encoder_forward(dims: &EgnnDims, enc: &EncoderParams, b: &Batch64) -> Enc
             }
         }
         let mut an1 = vec![0.0; n * h];
-        linear_into(&nin, &lp.nw1, &lp.nb1, &mut an1, n, 2 * h, h);
-        let s1 = map_silu(&an1);
+        let s1 = lin_silu(p, &nin, &lp.nw1, &lp.nb1, &mut an1, n, 2 * h, h);
         let mut upd = vec![0.0; n * h];
-        linear_into(&s1, &lp.nw2, &lp.nb2, &mut upd, n, h, h);
+        lin(p, &s1, &lp.nw2, &lp.nb2, &mut upd, n, h, h);
         for nd in 0..n {
             let nm = b.nmask[nd];
             for j in 0..h {
@@ -628,22 +579,20 @@ pub fn branch_forward(
     b: &Batch64,
 ) -> BranchState {
     let (n, g, h, d) = (dims.n, dims.g, dims.h, dims.d);
+    let p = dims.precision;
     let mut at1 = vec![0.0; n * d];
-    linear_into(&es.h, &br.tw1, &br.tb1, &mut at1, n, h, d);
-    let z1 = map_silu(&at1);
+    let z1 = lin_silu(p, &es.h, &br.tw1, &br.tb1, &mut at1, n, h, d);
     let mut at2 = vec![0.0; n * d];
-    linear_into(&z1, &br.tw2, &br.tb2, &mut at2, n, d, d);
-    let z2 = map_silu(&at2);
+    let z2 = lin_silu(p, &z1, &br.tw2, &br.tb2, &mut at2, n, d, d);
     let mut at3 = vec![0.0; n * d];
-    linear_into(&z2, &br.tw3, &br.tb3, &mut at3, n, d, d);
-    let z3 = map_silu(&at3);
+    let z3 = lin_silu(p, &z2, &br.tw3, &br.tb3, &mut at3, n, d, d);
 
     let mut er = vec![0.0; n];
     let mut fr = vec![0.0; n];
     for nd in 0..n {
         let zrow = &z3[nd * d..(nd + 1) * d];
-        er[nd] = dot(zrow, &br.ew) + br.eb;
-        fr[nd] = dot(zrow, &br.fw) + br.fb;
+        er[nd] = dot_p(p, zrow, &br.ew) + br.eb;
+        fr[nd] = dot_p(p, zrow, &br.fw) + br.fb;
     }
 
     // Masked per-graph segment sum, normalized to energy per atom.
@@ -718,8 +667,10 @@ pub fn backward(
     b: &Batch64,
 ) -> (EncoderParams, BranchParams) {
     let (n, e, g, h, d) = (dims.n, dims.e, dims.g, dims.h, dims.d);
+    let p = dims.precision;
 
-    // Loss seeds.
+    // Loss seeds (always f64: full-precision accumulation of the loss and
+    // its cotangents, per the mixed-precision recipe).
     let n_g = b.gmask.iter().sum::<f64>().max(1.0);
     let n_n = b.nmask.iter().sum::<f64>().max(1.0);
     let mut d_e_pa = vec![0.0; g];
@@ -772,21 +723,21 @@ pub fn backward(
             gb.fw[j] += zrow[j] * c;
         }
     }
-    let d_at3 = mul_dsilu(&d_z3, &bs.at3);
-    grad_w_into(&bs.z2, &d_at3, &mut gb.tw3, n, d, d);
+    let d_at3 = mul_dsilu_p(p, &d_z3, &bs.at3);
+    gw_into(p, &bs.z2, &d_at3, &mut gb.tw3, n, d, d);
     colsum_into(&d_at3, &mut gb.tb3, n, d);
     let mut d_z2 = vec![0.0; n * d];
-    grad_x_into(&d_at3, &br.tw3, &mut d_z2, n, d, d);
-    let d_at2 = mul_dsilu(&d_z2, &bs.at2);
-    grad_w_into(&bs.z1, &d_at2, &mut gb.tw2, n, d, d);
+    gx_into(p, &d_at3, &br.tw3, &mut d_z2, n, d, d);
+    let d_at2 = mul_dsilu_p(p, &d_z2, &bs.at2);
+    gw_into(p, &bs.z1, &d_at2, &mut gb.tw2, n, d, d);
     colsum_into(&d_at2, &mut gb.tb2, n, d);
     let mut d_z1 = vec![0.0; n * d];
-    grad_x_into(&d_at2, &br.tw2, &mut d_z1, n, d, d);
-    let d_at1 = mul_dsilu(&d_z1, &bs.at1);
-    grad_w_into(&es.h, &d_at1, &mut gb.tw1, n, h, d);
+    gx_into(p, &d_at2, &br.tw2, &mut d_z1, n, d, d);
+    let d_at1 = mul_dsilu_p(p, &d_z1, &bs.at1);
+    gw_into(p, &es.h, &d_at1, &mut gb.tw1, n, h, d);
     colsum_into(&d_at1, &mut gb.tb1, n, d);
     let mut d_h = vec![0.0; n * h];
-    grad_x_into(&d_at1, &br.tw1, &mut d_h, n, h, d);
+    gx_into(p, &d_at1, &br.tw1, &mut d_h, n, h, d);
 
     // --- encoder backward (reverse layer order) ---
     // v accumulates additively across layers, so its cotangent is the same
@@ -811,11 +762,11 @@ pub fn backward(
         let mut d_h_in = d_pre.clone();
 
         // upd = silu(an1) @ nw2 + nb2
-        grad_w_into(&lc.s1, &d_pre, &mut gl.nw2, n, h, h);
+        gw_into(p, &lc.s1, &d_pre, &mut gl.nw2, n, h, h);
         colsum_into(&d_pre, &mut gl.nb2, n, h);
         let mut d_s1 = vec![0.0; n * h];
-        grad_x_into(&d_pre, &lp.nw2, &mut d_s1, n, h, h);
-        let d_an1 = mul_dsilu(&d_s1, &lc.an1);
+        gx_into(p, &d_pre, &lp.nw2, &mut d_s1, n, h, h);
+        let d_an1 = mul_dsilu_p(p, &d_s1, &lc.an1);
 
         // an1 = [h_in | hagg * inv_deg] @ nw1 + nb1
         let mut nin = vec![0.0; n * 2 * h];
@@ -826,10 +777,10 @@ pub fn backward(
                 nin[nd * 2 * h + h + j] = lc.hagg[nd * h + j] * id;
             }
         }
-        grad_w_into(&nin, &d_an1, &mut gl.nw1, n, 2 * h, h);
+        gw_into(p, &nin, &d_an1, &mut gl.nw1, n, 2 * h, h);
         colsum_into(&d_an1, &mut gl.nb1, n, h);
         let mut d_nin = vec![0.0; n * 2 * h];
-        grad_x_into(&d_an1, &lp.nw1, &mut d_nin, n, 2 * h, h);
+        gx_into(p, &d_an1, &lp.nw1, &mut d_nin, n, 2 * h, h);
         let mut d_hagg = vec![0.0; n * h];
         for nd in 0..n {
             let id = es.inv_deg[nd];
@@ -881,22 +832,22 @@ pub fn backward(
                 continue;
             }
             for j in 0..h {
-                d_ae2[ei * h + j] = d_m[ei * h + j] * em * dsilu(lc.ae2[ei * h + j]);
+                d_ae2[ei * h + j] = d_m[ei * h + j] * em * dsilu_p(p, lc.ae2[ei * h + j]);
             }
         }
-        grad_w_into(&lc.u, &d_ae2, &mut gl.ew2, e, h, h);
+        gw_into(p, &lc.u, &d_ae2, &mut gl.ew2, e, h, h);
         colsum_into(&d_ae2, &mut gl.eb2, e, h);
         let mut d_u = vec![0.0; e * h];
-        grad_x_into(&d_ae2, &lp.ew2, &mut d_u, e, h, h);
-        let d_ae1 = mul_dsilu(&d_u, &lc.ae1);
+        gx_into(p, &d_ae2, &lp.ew2, &mut d_u, e, h, h);
+        let d_ae1 = mul_dsilu_p(p, &d_u, &lc.ae1);
 
         // ae1 = [h_src | h_dst | rbf] @ ew1 + eb1
         let mut x = vec![0.0; e * kx];
         build_edge_input(&mut x, &lc.h_in, &es.rbf, b, dims);
-        grad_w_into(&x, &d_ae1, &mut gl.ew1, e, kx, h);
+        gw_into(p, &x, &d_ae1, &mut gl.ew1, e, kx, h);
         colsum_into(&d_ae1, &mut gl.eb1, e, h);
         let mut d_x = vec![0.0; e * kx];
-        grad_x_into(&d_ae1, &lp.ew1, &mut d_x, e, kx, h);
+        gx_into(p, &d_ae1, &lp.ew1, &mut d_x, e, kx, h);
         for ei in 0..e {
             if b.emask[ei] == 0.0 {
                 continue; // padded-edge rows of d_x are exactly zero
@@ -928,6 +879,7 @@ pub fn backward(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::kernels::silu;
 
     #[test]
     fn silu_derivative_matches_finite_difference() {
@@ -938,33 +890,21 @@ mod tests {
         }
     }
 
-    #[test]
-    fn threaded_linear_matches_serial() {
-        // Big enough to engage the thread fan-out (work above the
-        // plan_threads threshold); must be bit-identical to serial.
-        let (m, k, n) = (2048, 96, 64);
-        let x: Vec<f64> = (0..m * k).map(|i| ((i * 37 % 101) as f64 - 50.0) / 17.0).collect();
-        let w: Vec<f64> = (0..k * n).map(|i| ((i * 53 % 89) as f64 - 44.0) / 23.0).collect();
-        let b: Vec<f64> = (0..n).map(|i| i as f64 / 7.0).collect();
-        let mut serial = vec![0.0; m * n];
-        linear_rows(&x, &w, &b, &mut serial, k, n);
-        let mut parallel = vec![0.0; m * n];
-        linear_into(&x, &w, &b, &mut parallel, m, k, n);
-        assert_eq!(serial, parallel, "chunking must not change any bit");
-    }
+    // The matmul-kernel unit/property tests (threaded bit-identity, naive
+    // transpose-product oracles, blocked-f32 vs f64 tolerance, thread-count
+    // independence) live with the kernels in `crate::model::kernels`.
 
     #[test]
-    fn grad_w_matches_naive_transpose_product() {
-        let (m, k, n) = (7, 5, 3);
-        let x: Vec<f64> = (0..m * k).map(|i| (i as f64).sin()).collect();
-        let dy: Vec<f64> = (0..m * n).map(|i| (i as f64).cos()).collect();
-        let mut gw = vec![0.0; k * n];
-        grad_w_into(&x, &dy, &mut gw, m, k, n);
-        for kk in 0..k {
-            for nn in 0..n {
-                let want: f64 = (0..m).map(|mi| x[mi * k + kk] * dy[mi * n + nn]).sum();
-                assert!((gw[kk * n + nn] - want).abs() < 1e-12);
-            }
+    fn mixed_dispatch_tracks_f64_activations() {
+        for &a in &[-3.0, -0.5, 0.0, 0.7, 4.2] {
+            assert!(
+                (dsilu_p(Precision::MixedF32, a) - dsilu(a)).abs() < 1e-5,
+                "dsilu({a})"
+            );
+            assert!(
+                (tanh_p(Precision::MixedF32, a) - a.tanh()).abs() < 1e-6,
+                "tanh({a})"
+            );
         }
     }
 }

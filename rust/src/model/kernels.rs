@@ -1,0 +1,932 @@
+//! Compute microkernels for the native EGNN engine, at two precisions.
+//!
+//! The native backend's hot spots are dense row-major matmuls over padded
+//! batch buffers (`out = x @ w + b` in the forward, `x^T @ dy` / `dy @ w^T`
+//! in the analytic backward) plus the silu/tanh elementwise passes between
+//! them. This module holds both compute paths behind the [`Precision`]
+//! knob:
+//!
+//! * **`Precision::F64`** (default) — the scalar f64 kernels, moved here
+//!   verbatim from `model::egnn`. This path is the numerical oracle: its
+//!   results are kept byte-for-byte stable (the gradcheck finite-difference
+//!   harness and the checkpoint bit-parity tests pin it).
+//! * **`Precision::MixedF32`** — blocked, autovectorizable f32 microkernels
+//!   with **f64 accumulators**: inputs and weights are downcast to f32 once
+//!   per call, products are computed in f32 and accumulated in f64 register
+//!   blocks ([`COL_BLOCK`] output columns at a time), mirroring the
+//!   reduced-precision-compute / full-precision-accumulate recipe the
+//!   HydraGNN-lineage GFM training runs use at scale. The fused
+//!   [`linear_silu_into_mixed`] pass additionally applies the silu
+//!   activation while the output block is still in registers.
+//!
+//! **Determinism contract:** for every kernel, the per-output-element
+//! accumulation order is a function of the shapes only — row chunking
+//! (across worker threads) and column blocking never reorder a reduction.
+//! Results are therefore bit-identical for any thread count at a fixed
+//! precision, which is what keeps the reproducibility and checkpoint
+//! kill-at-k parity guarantees intact on both paths (proven in the tests
+//! below and in `rust/tests/integration_precision.rs`).
+//!
+//! Worker fan-out follows `plan_threads`: large kernels split over row (or
+//! gradient-column) chunks, capped at [`thread_cap`] workers — the
+//! `HYDRA_MTP_THREADS` environment variable overrides the default cap of
+//! 8 (clamped to `[1, 512]`; `0` means serial).
+
+// ---------------------------------------------------------------------------
+// precision knob
+// ---------------------------------------------------------------------------
+
+/// Numeric precision of the native backend's compute kernels. Selected via
+/// `RunConfig.precision`, CLI `--precision f64|mixed-f32`, or the
+/// `HYDRA_MTP_PRECISION` environment variable (a CI-matrix override that
+/// wins over the config wherever a precision is resolved from one — see
+/// [`Precision::resolve`]). The PJRT backend ignores it: its numerics are
+/// fixed by the compiled artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Scalar f64 compute everywhere — the gradcheck oracle (default).
+    #[default]
+    F64,
+    /// Blocked f32 compute with f64 accumulation in the matmul and
+    /// silu/gate kernels; f64 everywhere else (loss reduction, scatter
+    /// aggregation, optimizer).
+    MixedF32,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> anyhow::Result<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" | "full" => Ok(Precision::F64),
+            "mixed-f32" | "mixed_f32" | "mixedf32" | "f32" => Ok(Precision::MixedF32),
+            other => anyhow::bail!("unknown precision '{other}' (expected f64|mixed-f32)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::MixedF32 => "mixed-f32",
+        }
+    }
+
+    /// The `HYDRA_MTP_PRECISION` environment override, if set. An invalid
+    /// value warns and is ignored rather than poisoning every engine load.
+    pub fn from_env() -> Option<Precision> {
+        match std::env::var("HYDRA_MTP_PRECISION") {
+            Ok(v) if !v.is_empty() => match Precision::parse(&v) {
+                Ok(p) => Some(p),
+                Err(e) => {
+                    eprintln!("warning: HYDRA_MTP_PRECISION ignored: {e}");
+                    None
+                }
+            },
+            _ => None,
+        }
+    }
+
+    /// Resolve a configured precision against the environment: the
+    /// `HYDRA_MTP_PRECISION` override wins when present (so a CI matrix leg
+    /// can re-run the whole suite at mixed precision without touching any
+    /// config), otherwise `self` is used as-is. Unlike `HYDRA_MTP_BACKEND`
+    /// (which only applies to `BackendKind::Auto`), the two-variant knob
+    /// has no "auto" sentinel, so an override that disagrees with the
+    /// configured value is at least made LOUD rather than silently winning.
+    /// Callers that must pin an exact precision (the gradcheck oracle, the
+    /// per-precision parity tests, the side-by-side bench) bypass this and
+    /// construct engines with an explicit value.
+    pub fn resolve(self) -> Precision {
+        match Precision::from_env() {
+            Some(p) => {
+                if p != self {
+                    eprintln!(
+                        "warning: HYDRA_MTP_PRECISION={} overrides the configured \
+                         precision {}",
+                        p.name(),
+                        self.name()
+                    );
+                }
+                p
+            }
+            None => self,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread planning
+// ---------------------------------------------------------------------------
+
+/// Default worker cap when `HYDRA_MTP_THREADS` is unset or unparseable.
+pub const DEFAULT_THREAD_CAP: usize = 8;
+/// Hard ceiling on the worker cap (a larger env value is clamped here).
+pub const MAX_THREAD_CAP: usize = 512;
+
+/// The kernel worker cap: `HYDRA_MTP_THREADS` when set, else
+/// [`DEFAULT_THREAD_CAP`]. See [`thread_cap_from`] for the clamping rules.
+/// Read from the environment once per process (the hot path calls this on
+/// every above-threshold kernel; nothing mutates the variable mid-run).
+pub fn thread_cap() -> usize {
+    static CAP: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CAP.get_or_init(|| thread_cap_from(std::env::var("HYDRA_MTP_THREADS").ok().as_deref()))
+}
+
+/// Pure core of [`thread_cap`], testable without touching the process
+/// environment: `None`/empty/garbage -> [`DEFAULT_THREAD_CAP`]; `0` -> 1
+/// (serial); anything larger is clamped to [`MAX_THREAD_CAP`].
+pub fn thread_cap_from(raw: Option<&str>) -> usize {
+    match raw.map(str::trim) {
+        Some(s) if !s.is_empty() => match s.parse::<usize>() {
+            Ok(0) => 1,
+            Ok(v) => v.min(MAX_THREAD_CAP),
+            Err(_) => DEFAULT_THREAD_CAP,
+        },
+        _ => DEFAULT_THREAD_CAP,
+    }
+}
+
+/// Worker count for a kernel of `work` multiply-adds spread over `rows`
+/// independent rows. Small kernels stay serial (thread spawn would
+/// dominate); large ones fan out like `FeaturizedStore::build`. Chunking
+/// never alters per-row accumulation order, so the result is
+/// thread-count independent.
+pub fn plan_threads(rows: usize, work: usize) -> usize {
+    if work < 2 * WORK_PER_THREAD || rows < 2 {
+        return 1; // small kernel: stay serial without touching env/sysinfo
+    }
+    let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    plan_threads_with(rows, work, avail, thread_cap())
+}
+
+const WORK_PER_THREAD: usize = 1 << 21; // ~2M multiply-adds
+
+/// Pure core of [`plan_threads`]: `avail` is the machine parallelism,
+/// `cap` the configured worker ceiling (see [`thread_cap`]).
+pub fn plan_threads_with(rows: usize, work: usize, avail: usize, cap: usize) -> usize {
+    if work < 2 * WORK_PER_THREAD || rows < 2 {
+        return 1;
+    }
+    (work / WORK_PER_THREAD).clamp(1, avail.max(1).min(cap.max(1)).min(rows))
+}
+
+// ---------------------------------------------------------------------------
+// f64 reference kernels (the oracle path; byte-for-byte stable)
+// ---------------------------------------------------------------------------
+
+/// Row block of `out[m,n] = x[m,k] @ w[k,n] + b[n]` in scalar f64.
+pub fn linear_rows(x: &[f64], w: &[f64], b: &[f64], out: &mut [f64], k: usize, n: usize) {
+    if n == 0 {
+        return;
+    }
+    let rows = out.len() / n;
+    for i in 0..rows {
+        let xrow = &x[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        orow.copy_from_slice(b);
+        for (kk, &a) in xrow.iter().enumerate() {
+            if a != 0.0 {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += a * wv;
+                }
+            }
+        }
+    }
+}
+
+/// out[m,n] = x[m,k] @ w[k,n] + b[n], parallel over row chunks.
+pub fn linear_into(x: &[f64], w: &[f64], b: &[f64], out: &mut [f64], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    let threads = plan_threads(m, m * k * n);
+    if threads <= 1 || k == 0 || n == 0 {
+        linear_rows(x, w, b, out, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (x_chunk, out_chunk) in x.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n)) {
+            scope.spawn(move || linear_rows(x_chunk, w, b, out_chunk, k, n));
+        }
+    });
+}
+
+/// One column block of gw += x^T @ dy: `gw_chunk` covers columns
+/// `k0..k0+kw` of x. Accumulates over `m` in order for any chunking.
+fn grad_w_block(
+    x: &[f64],
+    dy: &[f64],
+    gw_chunk: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    k0: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    let kw = gw_chunk.len() / n;
+    for mi in 0..m {
+        let dyrow = &dy[mi * n..(mi + 1) * n];
+        let xrow = &x[mi * k..(mi + 1) * k];
+        for kk in 0..kw {
+            let a = xrow[k0 + kk];
+            if a != 0.0 {
+                let grow = &mut gw_chunk[kk * n..(kk + 1) * n];
+                for (gv, &dv) in grow.iter_mut().zip(dyrow) {
+                    *gv += a * dv;
+                }
+            }
+        }
+    }
+}
+
+/// gw[k,n] += x[m,k]^T @ dy[m,n], parallel over column chunks of x (= row
+/// chunks of gw).
+pub fn grad_w_into(x: &[f64], dy: &[f64], gw: &mut [f64], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(gw.len(), k * n);
+    let threads = plan_threads(k, m * k * n);
+    if threads <= 1 || n == 0 {
+        grad_w_block(x, dy, gw, m, k, n, 0);
+        return;
+    }
+    let cols_per = k.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, gw_chunk) in gw.chunks_mut(cols_per * n).enumerate() {
+            scope.spawn(move || grad_w_block(x, dy, gw_chunk, m, k, n, t * cols_per));
+        }
+    });
+}
+
+/// Row block of dx += dy @ w^T.
+fn grad_x_rows(dy: &[f64], w: &[f64], dx: &mut [f64], k: usize, n: usize) {
+    if k == 0 {
+        return;
+    }
+    let rows = dx.len() / k;
+    for i in 0..rows {
+        let dyrow = &dy[i * n..(i + 1) * n];
+        let dxrow = &mut dx[i * k..(i + 1) * k];
+        for (kk, dv) in dxrow.iter_mut().enumerate() {
+            *dv += dot(dyrow, &w[kk * n..(kk + 1) * n]);
+        }
+    }
+}
+
+/// dx[m,k] += dy[m,n] @ w[k,n]^T, parallel over row chunks.
+pub fn grad_x_into(dy: &[f64], w: &[f64], dx: &mut [f64], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(dx.len(), m * k);
+    let threads = plan_threads(m, m * k * n);
+    if threads <= 1 || k == 0 || n == 0 {
+        grad_x_rows(dy, w, dx, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (dy_chunk, dx_chunk) in dy.chunks(rows_per * n).zip(dx.chunks_mut(rows_per * k)) {
+            scope.spawn(move || grad_x_rows(dy_chunk, w, dx_chunk, k, n));
+        }
+    });
+}
+
+/// Dot product in f64 (the oracle twin of [`dot_mixed`]).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+#[inline]
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// silu in f64 (the oracle twin of [`silu_mixed`]).
+#[inline]
+pub fn silu(x: f64) -> f64 {
+    x * sigmoid(x)
+}
+
+/// Derivative of silu wrt its pre-activation, f64 (twin of [`dsilu_mixed`]).
+#[inline]
+pub fn dsilu(a: f64) -> f64 {
+    let s = sigmoid(a);
+    s * (1.0 + a * (1.0 - s))
+}
+
+/// Elementwise silu in f64 (twin of [`map_silu_mixed`]).
+pub fn map_silu(a: &[f64]) -> Vec<f64> {
+    a.iter().map(|&x| silu(x)).collect()
+}
+
+/// dy * dsilu(a) elementwise, f64 (twin of [`mul_dsilu_mixed`]).
+pub fn mul_dsilu(dy: &[f64], a: &[f64]) -> Vec<f64> {
+    dy.iter().zip(a).map(|(&g, &x)| g * dsilu(x)).collect()
+}
+
+/// gb[n] += column sums of dy[m,n] (pure f64 addition at both precisions —
+/// there are no products to quantize).
+pub fn colsum_into(dy: &[f64], gb: &mut [f64], m: usize, n: usize) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(gb.len(), n);
+    for mi in 0..m {
+        let row = &dy[mi * n..(mi + 1) * n];
+        for (g, &v) in gb.iter_mut().zip(row) {
+            *g += v;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// blocked f32 microkernels (f32 products, f64 accumulators)
+// ---------------------------------------------------------------------------
+
+/// Output-column register block width of the f32 microkernels. Eight f64
+/// accumulators fit two AVX2 registers (four AVX-512 / NEON pairs), and the
+/// f32 product row is a single 256-bit load — the inner loop autovectorizes
+/// on every target the paper's machines cover.
+pub const COL_BLOCK: usize = 8;
+
+fn downcast(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+/// Register-blocked row block of `out[m,n] = x[m,k] @ w[k,n] + b[n]`:
+/// f32 inputs/weights, f32 products, f64 accumulation (the bias is added
+/// at f64). Accumulation order over `k` is fixed per output element, so
+/// the result is independent of both the block width and any row chunking.
+pub fn linear_rows_f32(x: &[f32], w: &[f32], b: &[f64], out: &mut [f64], k: usize, n: usize) {
+    if n == 0 {
+        return;
+    }
+    let rows = out.len() / n;
+    for i in 0..rows {
+        let xrow = &x[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut j0 = 0;
+        while j0 < n {
+            let bw = COL_BLOCK.min(n - j0);
+            let mut acc = [0.0f64; COL_BLOCK];
+            acc[..bw].copy_from_slice(&b[j0..j0 + bw]);
+            for (kk, &a) in xrow.iter().enumerate() {
+                if a != 0.0 {
+                    let wrow = &w[kk * n + j0..kk * n + j0 + bw];
+                    for (av, &wv) in acc[..bw].iter_mut().zip(wrow) {
+                        *av += (a * wv) as f64;
+                    }
+                }
+            }
+            orow[j0..j0 + bw].copy_from_slice(&acc[..bw]);
+            j0 += bw;
+        }
+    }
+}
+
+/// Mixed-precision `out[m,n] = x[m,k] @ w[k,n] + b[n]` over f64 buffers:
+/// weights are downcast once, each worker downcasts its own row chunk.
+pub fn linear_into_mixed(
+    x: &[f64],
+    w: &[f64],
+    b: &[f64],
+    out: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    linear_into_mixed_threads(x, w, b, out, m, k, n, plan_threads(m, m * k * n));
+}
+
+/// [`linear_into_mixed`] with an explicit worker count (the thread-count
+/// independence tests drive this directly).
+#[allow(clippy::too_many_arguments)]
+pub fn linear_into_mixed_threads(
+    x: &[f64],
+    w: &[f64],
+    b: &[f64],
+    out: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    let w32 = downcast(w);
+    if threads <= 1 || m == 0 || k == 0 || n == 0 {
+        let x32 = downcast(x);
+        linear_rows_f32(&x32, &w32, b, out, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    let w32 = &w32;
+    std::thread::scope(|scope| {
+        for (x_chunk, out_chunk) in x.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n)) {
+            scope.spawn(move || {
+                let x32 = downcast(x_chunk);
+                linear_rows_f32(&x32, w32, b, out_chunk, k, n);
+            });
+        }
+    });
+}
+
+/// Fused linear + silu row block: fills the f64 pre-activation (kept for
+/// the backward pass) and its silu while the output block is still hot,
+/// one memory pass instead of two. The silu itself is computed in f32
+/// (`silu_mixed` of the accumulated f64 value), identical to running
+/// [`map_silu_mixed`] over `pre` afterwards.
+fn linear_rows_silu_f32(
+    x: &[f32],
+    w: &[f32],
+    b: &[f64],
+    pre: &mut [f64],
+    act: &mut [f64],
+    k: usize,
+    n: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    let rows = pre.len() / n;
+    for i in 0..rows {
+        let xrow = &x[i * k..(i + 1) * k];
+        let prow = &mut pre[i * n..(i + 1) * n];
+        let arow = &mut act[i * n..(i + 1) * n];
+        let mut j0 = 0;
+        while j0 < n {
+            let bw = COL_BLOCK.min(n - j0);
+            let mut acc = [0.0f64; COL_BLOCK];
+            acc[..bw].copy_from_slice(&b[j0..j0 + bw]);
+            for (kk, &a) in xrow.iter().enumerate() {
+                if a != 0.0 {
+                    let wrow = &w[kk * n + j0..kk * n + j0 + bw];
+                    for (av, &wv) in acc[..bw].iter_mut().zip(wrow) {
+                        *av += (a * wv) as f64;
+                    }
+                }
+            }
+            prow[j0..j0 + bw].copy_from_slice(&acc[..bw]);
+            for (o, &v) in arow[j0..j0 + bw].iter_mut().zip(&acc[..bw]) {
+                *o = silu_mixed(v);
+            }
+            j0 += bw;
+        }
+    }
+}
+
+/// Mixed-precision fused linear + silu: `pre = x @ w + b`, `act =
+/// silu(pre)`, one pass. Same chunking (and therefore bit-determinism)
+/// as [`linear_into_mixed`].
+#[allow(clippy::too_many_arguments)]
+pub fn linear_silu_into_mixed(
+    x: &[f64],
+    w: &[f64],
+    b: &[f64],
+    pre: &mut [f64],
+    act: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(pre.len(), m * n);
+    debug_assert_eq!(act.len(), m * n);
+    let threads = plan_threads(m, m * k * n);
+    let w32 = downcast(w);
+    if threads <= 1 || k == 0 || n == 0 {
+        let x32 = downcast(x);
+        linear_rows_silu_f32(&x32, &w32, b, pre, act, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    let w32 = &w32;
+    std::thread::scope(|scope| {
+        for ((x_chunk, pre_chunk), act_chunk) in x
+            .chunks(rows_per * k)
+            .zip(pre.chunks_mut(rows_per * n))
+            .zip(act.chunks_mut(rows_per * n))
+        {
+            scope.spawn(move || {
+                let x32 = downcast(x_chunk);
+                linear_rows_silu_f32(&x32, w32, b, pre_chunk, act_chunk, k, n);
+            });
+        }
+    });
+}
+
+/// Mixed-precision column block of gw += x^T @ dy (f32 products, f64
+/// accumulation over `m` in order).
+fn grad_w_block_f32(
+    x: &[f32],
+    dy: &[f32],
+    gw_chunk: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    k0: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    let kw = gw_chunk.len() / n;
+    for mi in 0..m {
+        let dyrow = &dy[mi * n..(mi + 1) * n];
+        let xrow = &x[mi * k..(mi + 1) * k];
+        for kk in 0..kw {
+            let a = xrow[k0 + kk];
+            if a != 0.0 {
+                let grow = &mut gw_chunk[kk * n..(kk + 1) * n];
+                for (gv, &dv) in grow.iter_mut().zip(dyrow) {
+                    *gv += (a * dv) as f64;
+                }
+            }
+        }
+    }
+}
+
+/// Mixed-precision gw[k,n] += x[m,k]^T @ dy[m,n].
+pub fn grad_w_into_mixed(x: &[f64], dy: &[f64], gw: &mut [f64], m: usize, k: usize, n: usize) {
+    grad_w_into_mixed_threads(x, dy, gw, m, k, n, plan_threads(k, m * k * n));
+}
+
+/// [`grad_w_into_mixed`] with an explicit worker count.
+pub fn grad_w_into_mixed_threads(
+    x: &[f64],
+    dy: &[f64],
+    gw: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(gw.len(), k * n);
+    let x32 = downcast(x);
+    let dy32 = downcast(dy);
+    if threads <= 1 || k == 0 || n == 0 {
+        grad_w_block_f32(&x32, &dy32, gw, m, k, n, 0);
+        return;
+    }
+    let cols_per = k.div_ceil(threads);
+    let (x32, dy32) = (&x32, &dy32);
+    std::thread::scope(|scope| {
+        for (t, gw_chunk) in gw.chunks_mut(cols_per * n).enumerate() {
+            scope.spawn(move || grad_w_block_f32(x32, dy32, gw_chunk, m, k, n, t * cols_per));
+        }
+    });
+}
+
+/// Mixed-precision row block of dx += dy @ w^T (per-element f64 dot
+/// accumulator over f32 products).
+fn grad_x_rows_f32(dy: &[f32], w: &[f32], dx: &mut [f64], k: usize, n: usize) {
+    if k == 0 {
+        return;
+    }
+    let rows = dx.len() / k;
+    for i in 0..rows {
+        let dyrow = &dy[i * n..(i + 1) * n];
+        let dxrow = &mut dx[i * k..(i + 1) * k];
+        for (kk, dv) in dxrow.iter_mut().enumerate() {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f64;
+            for (&d, &wv) in dyrow.iter().zip(wrow) {
+                acc += (d * wv) as f64;
+            }
+            *dv += acc;
+        }
+    }
+}
+
+/// Mixed-precision dx[m,k] += dy[m,n] @ w[k,n]^T.
+pub fn grad_x_into_mixed(dy: &[f64], w: &[f64], dx: &mut [f64], m: usize, k: usize, n: usize) {
+    grad_x_into_mixed_threads(dy, w, dx, m, k, n, plan_threads(m, m * k * n));
+}
+
+/// [`grad_x_into_mixed`] with an explicit worker count.
+pub fn grad_x_into_mixed_threads(
+    dy: &[f64],
+    w: &[f64],
+    dx: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(dx.len(), m * k);
+    let w32 = downcast(w);
+    if threads <= 1 || m == 0 || k == 0 || n == 0 {
+        let dy32 = downcast(dy);
+        grad_x_rows_f32(&dy32, &w32, dx, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    let w32 = &w32;
+    std::thread::scope(|scope| {
+        for (dy_chunk, dx_chunk) in dy.chunks(rows_per * n).zip(dx.chunks_mut(rows_per * k)) {
+            scope.spawn(move || {
+                let dy32 = downcast(dy_chunk);
+                grad_x_rows_f32(&dy32, w32, dx_chunk, k, n);
+            });
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// f32 elementwise / reduction passes (the silu / gate hot spots)
+// ---------------------------------------------------------------------------
+
+/// Dot product with f32 products and an f64 accumulator (the tanh-gate and
+/// sub-head reductions).
+pub fn dot_mixed(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| (x as f32 * y as f32) as f64).sum()
+}
+
+#[inline]
+fn sigmoid_f32(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// silu computed in f32 (input/output carried in f64 buffers).
+#[inline]
+pub fn silu_mixed(x: f64) -> f64 {
+    let a = x as f32;
+    (a * sigmoid_f32(a)) as f64
+}
+
+/// Derivative of silu wrt its pre-activation, computed in f32.
+#[inline]
+pub fn dsilu_mixed(x: f64) -> f64 {
+    let a = x as f32;
+    let s = sigmoid_f32(a);
+    (s * (1.0 + a * (1.0 - s))) as f64
+}
+
+/// tanh computed in f32.
+#[inline]
+pub fn tanh_mixed(x: f64) -> f64 {
+    (x as f32).tanh() as f64
+}
+
+/// Elementwise silu in f32 over an f64 buffer.
+pub fn map_silu_mixed(a: &[f64]) -> Vec<f64> {
+    a.iter().map(|&x| silu_mixed(x)).collect()
+}
+
+/// dy * dsilu(a) elementwise, f32 products.
+pub fn mul_dsilu_mixed(dy: &[f64], a: &[f64]) -> Vec<f64> {
+    dy.iter()
+        .zip(a)
+        .map(|(&g, &x)| (g as f32 * dsilu_mixed(x) as f32) as f64)
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive f64 matmul oracle for the property tests.
+    fn naive_linear(x: &[f64], w: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = b[j];
+                for kk in 0..k {
+                    acc += x[i * k + kk] * w[kk * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn pseudo(vals: usize, scale: f64, phase: u64) -> Vec<f64> {
+        // Deterministic, sign-mixing pseudo-random values in ~[-scale, scale].
+        (0..vals)
+            .map(|i| {
+                let h = (i as u64).wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(phase);
+                let u = ((h >> 11) as f64) / ((1u64 << 53) as f64);
+                (2.0 * u - 1.0) * scale
+            })
+            .collect()
+    }
+
+    #[test]
+    fn precision_parses_and_names_roundtrip() {
+        for p in [Precision::F64, Precision::MixedF32] {
+            assert_eq!(Precision::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(Precision::parse("MIXED-F32").unwrap(), Precision::MixedF32);
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::MixedF32);
+        assert!(Precision::parse("bf16").is_err());
+        assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    #[test]
+    fn thread_cap_clamps_env_values_sanely() {
+        assert_eq!(thread_cap_from(None), DEFAULT_THREAD_CAP);
+        assert_eq!(thread_cap_from(Some("")), DEFAULT_THREAD_CAP);
+        assert_eq!(thread_cap_from(Some("garbage")), DEFAULT_THREAD_CAP);
+        assert_eq!(thread_cap_from(Some("-3")), DEFAULT_THREAD_CAP);
+        assert_eq!(thread_cap_from(Some("0")), 1, "0 means serial, not panic");
+        assert_eq!(thread_cap_from(Some("1")), 1);
+        assert_eq!(thread_cap_from(Some(" 24 ")), 24, "whitespace tolerated");
+        assert_eq!(thread_cap_from(Some("64")), 64, "cap above the old hard-wired 8");
+        assert_eq!(thread_cap_from(Some("1000000")), MAX_THREAD_CAP);
+    }
+
+    #[test]
+    fn plan_threads_respects_cap_rows_and_availability() {
+        let big_work = 1 << 30;
+        // Small work or a single row stays serial regardless of cap.
+        assert_eq!(plan_threads_with(4096, 1 << 10, 64, 64), 1);
+        assert_eq!(plan_threads_with(1, big_work, 64, 64), 1);
+        // Large work is bounded by cap, availability, and row count.
+        assert_eq!(plan_threads_with(4096, big_work, 64, 8), 8);
+        assert_eq!(plan_threads_with(4096, big_work, 4, 64), 4);
+        assert_eq!(plan_threads_with(3, big_work, 64, 64), 3);
+        // The configurable cap actually raises the old hard-wired 8.
+        assert_eq!(plan_threads_with(4096, big_work, 64, 32), 32);
+        // Degenerate cap/availability values cannot panic the clamp.
+        assert_eq!(plan_threads_with(4096, big_work, 0, 0), 1);
+    }
+
+    #[test]
+    fn threaded_linear_matches_serial() {
+        // Big enough to engage the thread fan-out (work above the
+        // plan_threads threshold); must be bit-identical to serial.
+        let (m, k, n) = (2048, 96, 64);
+        let x: Vec<f64> = (0..m * k).map(|i| ((i * 37 % 101) as f64 - 50.0) / 17.0).collect();
+        let w: Vec<f64> = (0..k * n).map(|i| ((i * 53 % 89) as f64 - 44.0) / 23.0).collect();
+        let b: Vec<f64> = (0..n).map(|i| i as f64 / 7.0).collect();
+        let mut serial = vec![0.0; m * n];
+        linear_rows(&x, &w, &b, &mut serial, k, n);
+        let mut parallel = vec![0.0; m * n];
+        linear_into(&x, &w, &b, &mut parallel, m, k, n);
+        assert_eq!(serial, parallel, "chunking must not change any bit");
+    }
+
+    #[test]
+    fn grad_w_matches_naive_transpose_product() {
+        let (m, k, n) = (7, 5, 3);
+        let x: Vec<f64> = (0..m * k).map(|i| (i as f64).sin()).collect();
+        let dy: Vec<f64> = (0..m * n).map(|i| (i as f64).cos()).collect();
+        let mut gw = vec![0.0; k * n];
+        grad_w_into(&x, &dy, &mut gw, m, k, n);
+        for kk in 0..k {
+            for nn in 0..n {
+                let want: f64 = (0..m).map(|mi| x[mi * k + kk] * dy[mi * n + nn]).sum();
+                assert!((gw[kk * n + nn] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_f32_linear_matches_f64_reference_on_adversarial_shapes() {
+        // k=0 (bias-only), n=1 (single column), n below / at / above the
+        // register block, non-multiples of COL_BLOCK everywhere.
+        for &(m, k, n) in &[
+            (1usize, 0usize, 1usize),
+            (4, 0, 5),
+            (1, 1, 1),
+            (7, 5, 1),
+            (3, 9, 7),
+            (13, 9, 11),
+            (5, 17, 8),
+            (33, 17, 24),
+            (11, 40, 19),
+        ] {
+            let x = pseudo(m * k, 2.0, 1);
+            let w = pseudo(k * n, 1.5, 2);
+            let b = pseudo(n, 0.5, 3);
+            let want = naive_linear(&x, &w, &b, m, k, n);
+            let mut got = vec![0.0; m * n];
+            linear_into_mixed(&x, &w, &b, &mut got, m, k, n);
+            for (i, (&g, &r)) in got.iter().zip(&want).enumerate() {
+                let tol = 1e-4 * (1.0 + r.abs());
+                assert!(
+                    (g - r).abs() <= tol,
+                    "({m},{k},{n})[{i}]: mixed {g} vs f64 {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_f32_linear_survives_denormal_adjacent_inputs() {
+        // Inputs straddling the f32 denormal boundary (~1.2e-38): products
+        // underflow to denormals or zero in f32; the kernel must stay
+        // finite and within an absolute floor of the f64 reference rather
+        // than producing NaN/inf or panicking.
+        let (m, k, n) = (3, 7, 5);
+        let x: Vec<f64> = (0..m * k)
+            .map(|i| if i % 3 == 0 { 3e-39 } else { 1e-38 * (i % 5) as f64 })
+            .collect();
+        let w: Vec<f64> = (0..k * n).map(|i| 2e-39 * ((i % 7) as f64 - 3.0)).collect();
+        let b = vec![0.0; n];
+        let want = naive_linear(&x, &w, &b, m, k, n);
+        let mut got = vec![0.0; m * n];
+        linear_into_mixed(&x, &w, &b, &mut got, m, k, n);
+        for (i, (&g, &r)) in got.iter().zip(&want).enumerate() {
+            assert!(g.is_finite(), "[{i}] not finite: {g}");
+            assert!(
+                (g - r).abs() <= 1e-2 * r.abs() + 1e-70,
+                "[{i}]: mixed {g} vs f64 {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_kernels_are_thread_count_independent() {
+        let (m, k, n) = (64, 40, 24);
+        let x = pseudo(m * k, 1.0, 10);
+        let w = pseudo(k * n, 1.0, 11);
+        let b = pseudo(n, 1.0, 12);
+        let dy = pseudo(m * n, 1.0, 13);
+
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+
+        let mut lin1 = vec![0.0; m * n];
+        linear_into_mixed_threads(&x, &w, &b, &mut lin1, m, k, n, 1);
+        let mut gw1 = vec![0.0; k * n];
+        grad_w_into_mixed_threads(&x, &dy, &mut gw1, m, k, n, 1);
+        let mut gx1 = vec![0.0; m * k];
+        grad_x_into_mixed_threads(&dy, &w, &mut gx1, m, k, n, 1);
+
+        for threads in [2usize, 8] {
+            let mut lin = vec![0.0; m * n];
+            linear_into_mixed_threads(&x, &w, &b, &mut lin, m, k, n, threads);
+            assert_eq!(bits(&lin1), bits(&lin), "linear @ {threads} threads");
+            let mut gw = vec![0.0; k * n];
+            grad_w_into_mixed_threads(&x, &dy, &mut gw, m, k, n, threads);
+            assert_eq!(bits(&gw1), bits(&gw), "grad_w @ {threads} threads");
+            let mut gx = vec![0.0; m * k];
+            grad_x_into_mixed_threads(&dy, &w, &mut gx, m, k, n, threads);
+            assert_eq!(bits(&gx1), bits(&gx), "grad_x @ {threads} threads");
+        }
+    }
+
+    #[test]
+    fn fused_linear_silu_matches_unfused_bitwise() {
+        let (m, k, n) = (9, 13, 11);
+        let x = pseudo(m * k, 1.2, 20);
+        let w = pseudo(k * n, 0.8, 21);
+        let b = pseudo(n, 0.3, 22);
+        let mut pre_ref = vec![0.0; m * n];
+        linear_into_mixed(&x, &w, &b, &mut pre_ref, m, k, n);
+        let act_ref = map_silu_mixed(&pre_ref);
+        let mut pre = vec![0.0; m * n];
+        let mut act = vec![0.0; m * n];
+        linear_silu_into_mixed(&x, &w, &b, &mut pre, &mut act, m, k, n);
+        assert_eq!(pre_ref, pre, "fused pre-activation must match unfused");
+        assert_eq!(act_ref, act, "fused silu must match unfused");
+    }
+
+    #[test]
+    fn mixed_grad_kernels_match_f64_references_within_tolerance() {
+        let (m, k, n) = (21, 15, 10);
+        let x = pseudo(m * k, 1.0, 30);
+        let w = pseudo(k * n, 1.0, 31);
+        let dy = pseudo(m * n, 1.0, 32);
+        let mut gw64 = vec![0.0; k * n];
+        grad_w_into(&x, &dy, &mut gw64, m, k, n);
+        let mut gw32 = vec![0.0; k * n];
+        grad_w_into_mixed(&x, &dy, &mut gw32, m, k, n);
+        for (i, (&a, &b_)) in gw64.iter().zip(&gw32).enumerate() {
+            assert!((a - b_).abs() <= 1e-4 * (1.0 + a.abs()), "gw[{i}]: {a} vs {b_}");
+        }
+        let mut gx64 = vec![0.0; m * k];
+        grad_x_into(&dy, &w, &mut gx64, m, k, n);
+        let mut gx32 = vec![0.0; m * k];
+        grad_x_into_mixed(&dy, &w, &mut gx32, m, k, n);
+        for (i, (&a, &b_)) in gx64.iter().zip(&gx32).enumerate() {
+            assert!((a - b_).abs() <= 1e-4 * (1.0 + a.abs()), "gx[{i}]: {a} vs {b_}");
+        }
+    }
+
+    #[test]
+    fn mixed_elementwise_tracks_f64_closely() {
+        for &v in &[-4.0f64, -1.0, -1e-3, 0.0, 0.7, 2.5, 8.0] {
+            let s64 = v * (1.0 / (1.0 + (-v).exp()));
+            assert!((silu_mixed(v) - s64).abs() <= 1e-5 * (1.0 + s64.abs()), "silu({v})");
+            assert!((tanh_mixed(v) - v.tanh()).abs() <= 1e-6, "tanh({v})");
+        }
+        let a = pseudo(33, 1.0, 40);
+        let b = pseudo(33, 1.0, 41);
+        let d64: f64 = a.iter().zip(&b).map(|(&x, &y)| x * y).sum();
+        assert!((dot_mixed(&a, &b) - d64).abs() <= 1e-4 * (1.0 + d64.abs()));
+    }
+}

@@ -1,12 +1,15 @@
 //! Model-side L3 state: named parameter sets matching the AOT manifest,
-//! the AdamW optimizer, and architecture accounting (P_s / P_h formulas,
-//! memory model, parallelization regimes).
+//! the AdamW optimizer, the native compute microkernels (f64 oracle +
+//! blocked mixed-f32 paths), and architecture accounting (P_s / P_h
+//! formulas, memory model, parallelization regimes).
 
 pub mod arch;
 pub mod egnn;
+pub mod kernels;
 pub mod optimizer;
 pub mod params;
 
 pub use arch::{ArchDims, ParallelismRegime};
+pub use kernels::Precision;
 pub use optimizer::{AdamW, AdamWConfig, AdamWState, Sgd};
 pub use params::{Init, LeafMeta, ParamSet};

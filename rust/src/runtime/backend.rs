@@ -16,12 +16,20 @@
 //! Which one runs is a [`BackendKind`] decision: `RunConfig`/CLI
 //! `--backend`, the `HYDRA_MTP_BACKEND` environment variable (useful for CI
 //! matrix legs), or auto-detection (PJRT when available, native otherwise).
+//!
+//! The native backend additionally computes at one of two [`Precision`]s
+//! (`RunConfig.precision`, CLI `--precision`, env `HYDRA_MTP_PRECISION`):
+//! the f64 oracle path, or blocked f32 microkernels with f64 accumulation
+//! (see `crate::model::kernels`). PJRT ignores the knob — its numerics are
+//! fixed by the compiled artifacts.
 
 use crate::data::batch::GraphBatch;
 use crate::model::params::ParamSet;
 use crate::runtime::engine::{EvalOut, StepOut};
 use crate::runtime::manifest::Manifest;
 use crate::tensor::Tensor;
+
+pub use crate::model::kernels::Precision;
 
 /// One execution backend for the train/eval/predict hot path. All methods
 /// take the engine's manifest so a backend carries no duplicate state; they

@@ -26,6 +26,7 @@ use std::sync::Mutex;
 use crate::runtime::pjrt as xla;
 
 use crate::data::batch::GraphBatch;
+use crate::model::kernels::Precision;
 use crate::model::params::ParamSet;
 use crate::runtime::backend::{Backend, BackendKind};
 use crate::runtime::manifest::{Manifest, ManifestConfig};
@@ -53,34 +54,69 @@ enum BackendImpl {
     Pjrt(PjrtBackend),
 }
 
+/// A requested mixed-f32 precision must never be DROPPED silently: the
+/// PJRT backend's numerics are fixed by the compiled artifacts, so when
+/// backend resolution lands on PJRT the knob is ignored — loudly.
+fn warn_pjrt_ignores_precision(precision: Precision) {
+    if precision == Precision::MixedF32 {
+        eprintln!(
+            "warning: the PJRT backend ignores the requested mixed-f32 precision \
+             (artifact numerics are fixed); running — and fingerprinting — as f64"
+        );
+    }
+}
+
 pub struct Engine {
     pub manifest: Manifest,
     backend: BackendImpl,
+    /// Compute precision of the native kernels (PJRT engines always report
+    /// [`Precision::F64`]: their numerics are fixed by the artifacts).
+    precision: Precision,
     exec_count: AtomicU64,
 }
 
 impl Engine {
     /// Load an engine for `dir` with auto backend selection (see
-    /// [`Engine::load_with`]); never fails on a machine without artifacts —
+    /// [`Engine::load_full`]); never fails on a machine without artifacts —
     /// the native backend is the universal fallback.
     pub fn load(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Engine> {
         Self::load_with(dir, BackendKind::Auto)
     }
 
-    /// Load an engine with an explicit backend choice. `Auto` resolves the
-    /// `HYDRA_MTP_BACKEND` env override first, then prefers PJRT when the
-    /// feature + artifacts are available and falls back to native.
+    /// Load an engine with an explicit backend choice and the default
+    /// precision (f64, unless `HYDRA_MTP_PRECISION` overrides it).
     pub fn load_with(
         dir: impl AsRef<std::path::Path>,
         kind: BackendKind,
     ) -> anyhow::Result<Engine> {
+        Self::load_full(dir, kind, Precision::default().resolve())
+    }
+
+    /// Load an engine with explicit backend and precision choices. `Auto`
+    /// resolves the `HYDRA_MTP_BACKEND` env override first, then prefers
+    /// PJRT when the feature + artifacts are available and falls back to
+    /// native. `precision` is used exactly as given and only affects the
+    /// native backend — callers resolving it from a config should apply
+    /// the `HYDRA_MTP_PRECISION` override first via [`Precision::resolve`]
+    /// (the `Session` builder does).
+    pub fn load_full(
+        dir: impl AsRef<std::path::Path>,
+        kind: BackendKind,
+        precision: Precision,
+    ) -> anyhow::Result<Engine> {
         let dir = dir.as_ref();
         let kind = if kind == BackendKind::Auto { BackendKind::from_env() } else { kind };
         match kind {
-            BackendKind::Pjrt => Self::load_pjrt(dir, None),
-            BackendKind::Native => Ok(Self::load_native(dir)),
+            BackendKind::Pjrt => {
+                warn_pjrt_ignores_precision(precision);
+                Self::load_pjrt(dir, None)
+            }
+            BackendKind::Native => Ok(Self::load_native(dir, precision)),
             BackendKind::Auto => match Self::load_pjrt(dir, None) {
-                Ok(e) => Ok(e),
+                Ok(e) => {
+                    warn_pjrt_ignores_precision(precision);
+                    Ok(e)
+                }
                 Err(err) => {
                     // Fall back to native — but never silently when an
                     // artifact directory is PRESENT: broken artifacts would
@@ -92,7 +128,7 @@ impl Engine {
                              falling back to the native backend"
                         );
                     }
-                    Ok(Self::load_native(dir))
+                    Ok(Self::load_native(dir, precision))
                 }
             },
         }
@@ -113,6 +149,7 @@ impl Engine {
         Ok(Engine {
             manifest,
             backend: BackendImpl::Pjrt(backend),
+            precision: Precision::F64,
             exec_count: AtomicU64::new(0),
         })
     }
@@ -130,7 +167,7 @@ impl Engine {
     /// synthesize the default configuration. Infallible by design — but an
     /// unreadable manifest that EXISTS is warned about, since the engine
     /// will run different (default) dims than the user compiled.
-    fn load_native(dir: &std::path::Path) -> Engine {
+    fn load_native(dir: &std::path::Path, precision: Precision) -> Engine {
         let config = match Manifest::load(dir) {
             Ok(m) => m.config,
             Err(err) => {
@@ -143,15 +180,25 @@ impl Engine {
                 ManifestConfig::default_native()
             }
         };
-        Self::native(config)
+        Self::native_with(config, precision)
     }
 
-    /// Native engine with an explicit model configuration (gradcheck and
-    /// custom-dims experiments build tiny engines this way).
+    /// Native engine with an explicit model configuration at the default
+    /// precision (f64, unless `HYDRA_MTP_PRECISION` overrides it).
+    /// Custom-dims experiments build tiny engines this way.
     pub fn native(config: ManifestConfig) -> Engine {
+        Self::native_with(config, Precision::default().resolve())
+    }
+
+    /// Native engine with explicit model configuration AND compute
+    /// precision, ignoring any environment override — the gradcheck
+    /// oracle, the precision harness, and the side-by-side hot-path bench
+    /// pin their engines this way.
+    pub fn native_with(config: ManifestConfig, precision: Precision) -> Engine {
         Engine {
             manifest: Manifest::synthesize(config),
-            backend: BackendImpl::Native(NativeBackend),
+            backend: BackendImpl::Native(NativeBackend::new(precision)),
+            precision,
             exec_count: AtomicU64::new(0),
         }
     }
@@ -166,6 +213,13 @@ impl Engine {
     /// Stable backend identifier ("native" or "pjrt").
     pub fn backend_name(&self) -> &'static str {
         self.backend().name()
+    }
+
+    /// Compute precision this engine runs at. Recorded (resolved) in every
+    /// checkpoint's trajectory fingerprint, so cross-precision resume is
+    /// refused like cross-backend resume.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     pub fn is_native(&self) -> bool {

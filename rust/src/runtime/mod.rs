@@ -9,7 +9,7 @@ pub mod manifest;
 pub mod native;
 pub mod pjrt;
 
-pub use backend::{Backend, BackendKind};
+pub use backend::{Backend, BackendKind, Precision};
 pub use engine::{Engine, EvalOut, PjrtBackend, StepOut};
 pub use manifest::{ArtifactMeta, Manifest, ManifestConfig};
 pub use native::NativeBackend;

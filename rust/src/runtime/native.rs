@@ -15,25 +15,41 @@ use crate::model::egnn::{
     backward, branch_forward, encoder_forward, loss_metrics, Batch64, BranchParams, EgnnDims,
     EncoderParams, EncoderState,
 };
+use crate::model::kernels::Precision;
 use crate::model::params::ParamSet;
 use crate::runtime::backend::Backend;
 use crate::runtime::engine::{EvalOut, StepOut};
 use crate::runtime::manifest::Manifest;
 use crate::tensor::Tensor;
 
-/// Stateless native backend (all state lives in the manifest + arguments,
-/// so concurrent rank threads share it without synchronization).
+/// Stateless native backend (the only state is the immutable compute
+/// [`Precision`]; everything else lives in the manifest + arguments, so
+/// concurrent rank threads share it without synchronization).
 #[derive(Debug, Default)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    precision: Precision,
+}
 
 impl NativeBackend {
+    /// Backend with an explicit compute precision ([`Precision::F64`] is
+    /// the oracle default; [`Precision::MixedF32`] routes the matmul and
+    /// silu/gate hot spots through the blocked f32 microkernels of
+    /// `model::kernels`).
+    pub fn new(precision: Precision) -> NativeBackend {
+        NativeBackend { precision }
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
     fn run_forward(
         &self,
         manifest: &Manifest,
         params: &ParamSet,
         batch: &GraphBatch,
     ) -> anyhow::Result<(EgnnDims, Batch64, EncoderParams, BranchParams, EncoderState)> {
-        let dims = EgnnDims::from_config(&manifest.config);
+        let dims = EgnnDims::from_config_with(&manifest.config, self.precision);
         let b = Batch64::new(&dims, batch)?;
         let enc = EncoderParams::from_set(&dims, params)?;
         let br = BranchParams::from_set(&dims, params)?;
@@ -149,7 +165,7 @@ impl Backend for NativeBackend {
         encoder_params: &ParamSet,
         batch: &GraphBatch,
     ) -> anyhow::Result<(Tensor, Tensor)> {
-        let dims = EgnnDims::from_config(&manifest.config);
+        let dims = EgnnDims::from_config_with(&manifest.config, self.precision);
         let b = Batch64::new(&dims, batch)?;
         let enc = EncoderParams::from_set(&dims, encoder_params)?;
         let es = encoder_forward(&dims, &enc, &b);

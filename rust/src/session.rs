@@ -57,6 +57,18 @@ impl SessionBuilder {
         self
     }
 
+    /// Native-backend compute precision: `F64` (default; the gradcheck
+    /// oracle) or `MixedF32` (blocked f32 microkernels with f64
+    /// accumulation — faster, bounded against the oracle in
+    /// `rust/tests/gradcheck.rs`). Ignored by PJRT. The
+    /// `HYDRA_MTP_PRECISION` env var overrides this at engine load, and
+    /// the resolved value is part of the checkpoint trajectory
+    /// fingerprint, so resuming across precisions is refused.
+    pub fn precision(mut self, precision: crate::runtime::Precision) -> Self {
+        self.config.precision = precision;
+        self
+    }
+
     /// Training mode (one of the paper's seven models / modes).
     pub fn mode(mut self, mode: TrainMode) -> Self {
         self.config.mode = mode;
@@ -177,7 +189,11 @@ impl SessionBuilder {
         };
         let engine = match engine {
             Some(e) => e,
-            None => Arc::new(Engine::load_with(&config.artifacts_dir, config.backend)?),
+            None => Arc::new(Engine::load_full(
+                &config.artifacts_dir,
+                config.backend,
+                config.precision.resolve(),
+            )?),
         };
         Ok(Session { engine, registry, config, tasks, data: None })
     }

@@ -1,0 +1,246 @@
+//! Integration: the mixed-precision compute path of the native backend
+//! (blocked f32 microkernels with f64 accumulation, `model::kernels`).
+//!
+//! Proves the four end-to-end properties of ISSUE 5 on real short training
+//! runs:
+//!
+//! 1. training DESCENDS at `Precision::MixedF32`;
+//! 2. the final MixedF32 loss tracks the f64 oracle within tolerance;
+//! 3. checkpoint kill-at-k resume parity is bit-exact at EACH precision
+//!    (the mixed kernels chunk work over threads but never reorder an
+//!    accumulation, so fixed-precision bit-determinism holds);
+//! 4. resuming across precisions is REFUSED with an error naming both
+//!    (the resolved precision is part of the trajectory fingerprint).
+//!
+//! Engines are pinned per precision via `Engine::native_with`, so these
+//! tests mean the same thing regardless of any `HYDRA_MTP_PRECISION`
+//! override in the environment (CI's mixed-f32 matrix leg).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use hydra_mtp::checkpoint;
+use hydra_mtp::config::{RunConfig, TrainMode};
+use hydra_mtp::coordinator::{DataBundle, Heads, RunLog, TrainedModel, Trainer};
+use hydra_mtp::data::batch::BatchBuilder;
+use hydra_mtp::data::generators::{DatasetGenerator, GeneratorConfig};
+use hydra_mtp::data::structures::DatasetId;
+use hydra_mtp::model::params::ParamSet;
+use hydra_mtp::runtime::{Engine, ManifestConfig, Precision};
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+/// Small model dims: big enough to exercise multi-graph padded batches and
+/// both EGNN layers, small enough that a handful of epochs stays fast in
+/// debug builds.
+fn small_config() -> ManifestConfig {
+    let mut c = ManifestConfig::default_native();
+    c.max_nodes = 64;
+    c.max_edges = 512;
+    c.max_graphs = 8;
+    c.hidden = 32;
+    c.num_layers = 2;
+    c.num_rbf = 8;
+    c.head_hidden = 32;
+    c
+}
+
+fn engine(p: Precision) -> Arc<Engine> {
+    Arc::new(Engine::native_with(small_config(), p))
+}
+
+fn tiny_cfg(mode: TrainMode, epochs: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.mode = mode;
+    cfg.parallel.replicas = 1;
+    cfg.train.epochs = epochs;
+    cfg.train.patience = 0;
+    cfg.data.per_dataset = 24;
+    cfg.data.max_atoms = 8;
+    cfg
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("hydra_mtp_precision_it_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_params_bits_eq(a: &ParamSet, b: &ParamSet, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: leaf count");
+    for ((na, ta), (nb, tb)) in a.iter().zip(b.iter()) {
+        assert_eq!(na, nb, "{what}: leaf name");
+        let (xa, xb) = (ta.as_f32(), tb.as_f32());
+        assert_eq!(xa.len(), xb.len(), "{what}: {na} numel");
+        for (i, (x, y)) in xa.iter().zip(xb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: {na}[{i}]: {x} vs {y} (bitwise)");
+        }
+    }
+}
+
+fn assert_models_bits_eq(a: &TrainedModel, b: &TrainedModel) {
+    assert_params_bits_eq(&a.encoder, &b.encoder, "encoder");
+    match (&a.heads, &b.heads) {
+        (Heads::Shared(x), Heads::Shared(y)) => assert_params_bits_eq(x, y, "shared head"),
+        (Heads::PerDataset(x), Heads::PerDataset(y)) => {
+            assert_eq!(x.len(), y.len(), "head count");
+            for (d, bx) in x {
+                assert_params_bits_eq(bx, &y[d], &format!("head {}", d.name()));
+            }
+        }
+        _ => panic!("heads kind mismatch"),
+    }
+}
+
+fn assert_logs_bits_eq(a: &RunLog, b: &RunLog) {
+    assert_eq!(a.epochs.len(), b.epochs.len(), "epoch count");
+    for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(ea.epoch, eb.epoch);
+        assert_eq!(ea.steps, eb.steps, "epoch {}", ea.epoch);
+        assert_eq!(
+            ea.train_loss.to_bits(),
+            eb.train_loss.to_bits(),
+            "epoch {} train_loss {} vs {}",
+            ea.epoch,
+            ea.train_loss,
+            eb.train_loss
+        );
+        assert_eq!(ea.mae_e.to_bits(), eb.mae_e.to_bits(), "epoch {}", ea.epoch);
+        assert_eq!(ea.mae_f.to_bits(), eb.mae_f.to_bits(), "epoch {}", ea.epoch);
+        assert_eq!(ea.val_loss.to_bits(), eb.val_loss.to_bits(), "epoch {} val", ea.epoch);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (1) + (2): descent and f64 tracking
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mixed_f32_training_descends_and_tracks_the_f64_oracle() {
+    let cfg = tiny_cfg(TrainMode::Single(DatasetId::Ani1x), 3);
+    let data = DataBundle::generate(&cfg.data, &[DatasetId::Ani1x]);
+
+    let o64 = Trainer::new(engine(Precision::F64), cfg.clone()).train(&data).unwrap();
+    let o32 = Trainer::new(engine(Precision::MixedF32), cfg).train(&data).unwrap();
+
+    // (1) the loss decreases under MixedF32 training.
+    let first32 = o32.log.epochs.first().unwrap().train_loss;
+    let last32 = o32.log.epochs.last().unwrap().train_loss;
+    assert!(
+        last32 < first32,
+        "MixedF32 training must reduce the loss: {first32} -> {last32}"
+    );
+
+    // (2) the final loss tracks the f64 oracle. Per-step drift is ~1e-6
+    // relative (gradcheck bounds it per leaf); over a few epochs the
+    // trajectories separate slowly, so 5% is a loose-but-meaningful band —
+    // a broken mixed kernel lands orders of magnitude outside it.
+    let last64 = o64.log.epochs.last().unwrap().train_loss;
+    let rel = (last32 - last64).abs() / last64.abs().max(1e-9);
+    assert!(
+        rel <= 0.05,
+        "final MixedF32 loss {last32} drifts {rel:.4} from the f64 oracle {last64}"
+    );
+    // Same epoch/step structure: precision changes numerics, not schedule.
+    assert_eq!(o32.log.epochs.len(), o64.log.epochs.len());
+    for (e32, e64) in o32.log.epochs.iter().zip(&o64.log.epochs) {
+        assert_eq!(e32.steps, e64.steps, "epoch {}", e32.epoch);
+    }
+}
+
+#[test]
+fn mixed_train_and_eval_forward_agree_bitwise() {
+    // The cached-forward (train) and plain-forward (eval) paths must agree
+    // exactly at MixedF32, same as the f64 guarantee in gradcheck.
+    let e = engine(Precision::MixedF32);
+    let mut g = DatasetGenerator::new(
+        DatasetId::Qm7x,
+        77,
+        GeneratorConfig { max_atoms: 6, ..Default::default() },
+    );
+    let samples = g.take(4);
+    let batches = BatchBuilder::build_all(
+        e.manifest.config.batch_dims(),
+        e.manifest.config.cutoff,
+        &samples,
+    );
+    let batch = batches.into_iter().next().expect("at least one batch");
+    let params = ParamSet::init(&e.manifest.params, 5);
+    let tr = e.train_step(&params, &batch).unwrap();
+    let ev = e.eval_step(&params, &batch).unwrap();
+    assert_eq!(tr.loss.to_bits(), ev.loss.to_bits(), "train/eval forward must agree");
+    assert_eq!(tr.mae_e.to_bits(), ev.mae_e.to_bits());
+    assert_eq!(tr.mae_f.to_bits(), ev.mae_f.to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// (3): kill-at-k checkpoint parity, per precision
+// ---------------------------------------------------------------------------
+
+fn kill_at_k_parity_case(p: Precision, name: &str) {
+    let epochs = 3;
+    let k = 1;
+    let e = engine(p);
+    let cfg_full = tiny_cfg(TrainMode::Single(DatasetId::Ani1x), epochs);
+    let data = DataBundle::generate(&cfg_full.data, &[DatasetId::Ani1x]);
+
+    let full = Trainer::new(Arc::clone(&e), cfg_full).train(&data).unwrap();
+
+    let dir = tmp_dir(name);
+    let mut cfg_phase1 = tiny_cfg(TrainMode::Single(DatasetId::Ani1x), k);
+    cfg_phase1.checkpoint.dir = Some(dir.to_string_lossy().into_owned());
+    Trainer::new(Arc::clone(&e), cfg_phase1).train(&data).unwrap();
+    assert!(
+        checkpoint::epoch_path(&dir, k).is_file(),
+        "phase 1 must write epoch_{k:04}.ckpt"
+    );
+
+    let mut cfg_phase2 = tiny_cfg(TrainMode::Single(DatasetId::Ani1x), epochs);
+    cfg_phase2.checkpoint.resume = Some(dir.to_string_lossy().into_owned());
+    let resumed = Trainer::new(Arc::clone(&e), cfg_phase2).train(&data).unwrap();
+
+    assert_models_bits_eq(&resumed.model, &full.model);
+    assert_logs_bits_eq(&resumed.log, &full.log);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn kill_at_k_checkpoint_parity_holds_at_f64() {
+    kill_at_k_parity_case(Precision::F64, "f64");
+}
+
+#[test]
+fn kill_at_k_checkpoint_parity_holds_at_mixed_f32() {
+    kill_at_k_parity_case(Precision::MixedF32, "mixedf32");
+}
+
+// ---------------------------------------------------------------------------
+// (4): cross-precision resume refusal
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cross_precision_resume_is_refused_naming_both_precisions() {
+    let cfg = tiny_cfg(TrainMode::Single(DatasetId::Ani1x), 1);
+    let data = DataBundle::generate(&cfg.data, &[DatasetId::Ani1x]);
+
+    let dir = tmp_dir("cross");
+    let mut cfg_write = cfg.clone();
+    cfg_write.checkpoint.dir = Some(dir.to_string_lossy().into_owned());
+    Trainer::new(engine(Precision::F64), cfg_write).train(&data).unwrap();
+
+    let mut cfg_resume = tiny_cfg(TrainMode::Single(DatasetId::Ani1x), 2);
+    cfg_resume.checkpoint.resume = Some(dir.to_string_lossy().into_owned());
+    let err = Trainer::new(engine(Precision::MixedF32), cfg_resume)
+        .train(&data)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("precision=f64") && msg.contains("precision=mixed-f32"),
+        "cross-precision refusal must name both the writer's and the \
+         resumer's precision: {msg}"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
