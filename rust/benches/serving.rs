@@ -1,0 +1,161 @@
+//! Serving load-test benchmark (harness = serve::loadtest; criterion is
+//! unavailable offline). Run with `cargo bench --bench serving`.
+//!
+//! One process, both legs, both precisions: the same request stream goes
+//! through sequential `Predictor::predict_one` and through N concurrent
+//! clients against a `Server`, so the coalescing win is measured against a
+//! baseline from the SAME run on the SAME machine. Writes
+//! `BENCH_serving.json` (p50/p95/p99 latency, sustained structures/sec,
+//! avg batch occupancy, speedup) — the machine-readable trajectory that
+//! EXPERIMENTS.md §Serving tracks and CI uploads as an artifact.
+//!
+//! The bench is also an enforcement point: it asserts (a) the server's
+//! outputs are bit-identical to the sequential baseline, (b) sustained
+//! server throughput strictly exceeds the sequential baseline, and (c)
+//! server p99 latency stays inside the explicit budget.
+
+use std::sync::Arc;
+
+use hydra_mtp::config::ServeConfig;
+use hydra_mtp::data::generators::{DatasetGenerator, GeneratorConfig};
+use hydra_mtp::data::structures::{AtomicStructure, DatasetId};
+use hydra_mtp::runtime::{Engine, ManifestConfig, Precision};
+use hydra_mtp::serve::loadtest::{run_loadtest, synthetic_model, LegReport};
+use hydra_mtp::util::json::Json;
+
+const BENCH_JSON: &str = "BENCH_serving.json";
+
+/// Explicit latency budget the server leg is held to (p99, per request).
+const LATENCY_BUDGET_MS: f64 = 250.0;
+
+const REQUESTS: usize = 48;
+const CLIENTS: usize = 8;
+
+/// Small dims (the integration-test geometry): padded batches of up to 7
+/// real structures, so coalescing has headroom while a single forward
+/// stays cheap enough for tight CI boxes.
+fn small_config() -> ManifestConfig {
+    let mut c = ManifestConfig::default_native();
+    c.max_nodes = 64;
+    c.max_edges = 512;
+    c.max_graphs = 8;
+    c.hidden = 32;
+    c.num_layers = 2;
+    c.num_rbf = 8;
+    c.head_hidden = 32;
+    c
+}
+
+/// `REQUESTS` structures over two tasks, interleaved.
+fn request_stream() -> Vec<AtomicStructure> {
+    let cfg = GeneratorConfig { max_atoms: 8, ..Default::default() };
+    let tasks = [DatasetId::Ani1x, DatasetId::Qm7x];
+    let per: Vec<Vec<AtomicStructure>> = tasks
+        .iter()
+        .map(|&d| DatasetGenerator::new(d, 2025, cfg.clone()).take(REQUESTS / 2))
+        .collect();
+    let mut out = Vec::with_capacity(REQUESTS);
+    for i in 0..REQUESTS / 2 {
+        for s in &per {
+            out.push(s[i].clone());
+        }
+    }
+    out
+}
+
+fn leg_json(op: &str, leg: &LegReport) -> Json {
+    Json::obj(vec![
+        ("op", Json::str(op)),
+        ("requests", Json::from(leg.requests)),
+        ("clients", Json::from(leg.clients)),
+        ("wall_secs", Json::from(leg.wall_secs)),
+        ("p50_ns", Json::from(leg.p50_ns as i64)),
+        ("p95_ns", Json::from(leg.p95_ns as i64)),
+        ("p99_ns", Json::from(leg.p99_ns as i64)),
+        ("throughput_per_sec", Json::from(leg.throughput_per_sec)),
+        ("avg_batch", Json::from(leg.avg_batch)),
+    ])
+}
+
+fn report_line(op: &str, leg: &LegReport) {
+    println!(
+        "{op:<24} p50 {:>9.3}ms  p95 {:>9.3}ms  p99 {:>9.3}ms  {:>9.1} structures/s  avg batch {:.2}",
+        leg.p50_ns as f64 / 1e6,
+        leg.p95_ns as f64 / 1e6,
+        leg.p99_ns as f64 / 1e6,
+        leg.throughput_per_sec,
+        leg.avg_batch
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== hydra-mtp serving load test ==\n");
+    let structures = request_stream();
+    let mut results: Vec<Json> = Vec::new();
+
+    for p in [Precision::F64, Precision::MixedF32] {
+        // Pin the precision explicitly so both legs of both precisions run
+        // in one process regardless of HYDRA_MTP_PRECISION.
+        let engine = Arc::new(Engine::native_with(small_config(), p));
+        let model =
+            synthetic_model(&engine, &[DatasetId::Ani1x, DatasetId::Qm7x], 7);
+        // One worker isolates the coalescing effect: the throughput gain
+        // over sequential comes from batch occupancy, not extra compute
+        // threads (kernels at these dims stay serial either way).
+        let cfg = ServeConfig {
+            workers: 1,
+            queue_capacity: 128,
+            enqueue_wait_ms: 10_000,
+            latency_budget_ms: LATENCY_BUDGET_MS,
+        };
+        let report = run_loadtest(&engine, &model, &structures, CLIENTS, cfg)?;
+
+        println!("-- precision {} --", p.name());
+        report_line(&format!("sequential_{}", p.name()), &report.sequential);
+        report_line(&format!("server_{}", p.name()), &report.server);
+        println!(
+            "speedup {:.2}x, bit-identical: {}\n",
+            report.speedup(),
+            report.bit_identical
+        );
+
+        anyhow::ensure!(
+            report.bit_identical,
+            "{}: server outputs diverged from the sequential baseline",
+            p.name()
+        );
+        anyhow::ensure!(
+            report.server.throughput_per_sec > report.sequential.throughput_per_sec,
+            "{}: server throughput ({:.1}/s) did not beat the sequential baseline \
+             ({:.1}/s) measured in the same run",
+            p.name(),
+            report.server.throughput_per_sec,
+            report.sequential.throughput_per_sec
+        );
+        let p99_ms = report.server.p99_ns as f64 / 1e6;
+        anyhow::ensure!(
+            p99_ms <= LATENCY_BUDGET_MS,
+            "{}: server p99 {:.3}ms exceeds the {:.0}ms latency budget",
+            p.name(),
+            p99_ms,
+            LATENCY_BUDGET_MS
+        );
+
+        results.push(leg_json(&format!("sequential_{}", p.name()), &report.sequential));
+        let mut server = leg_json(&format!("server_{}", p.name()), &report.server);
+        if let Json::Object(pairs) = &mut server {
+            pairs.insert("speedup".to_string(), Json::from(report.speedup()));
+            pairs.insert("bit_identical".to_string(), Json::from(report.bit_identical));
+        }
+        results.push(server);
+    }
+
+    let doc = Json::obj(vec![
+        ("suite", Json::str("serving")),
+        ("latency_budget_ms", Json::from(LATENCY_BUDGET_MS)),
+        ("results", Json::Array(results)),
+    ]);
+    std::fs::write(BENCH_JSON, format!("{doc}\n"))?;
+    println!("wrote {BENCH_JSON} (4 ops, budget {LATENCY_BUDGET_MS:.0}ms p99)");
+    Ok(())
+}

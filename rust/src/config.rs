@@ -134,6 +134,34 @@ impl Default for CheckpointConfig {
     }
 }
 
+/// Serving knobs for [`crate::serve::Server`] (`Session::server`). None of
+/// these affect a training trajectory, so they are deliberately excluded
+/// from [`RunConfig::trajectory_fingerprint`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Worker threads in the serving pool; `0` means "use the kernel
+    /// thread cap" (`HYDRA_MTP_THREADS`, default 8).
+    pub workers: usize,
+    /// Maximum queued (not yet batched) requests before backpressure.
+    pub queue_capacity: usize,
+    /// How long a submit waits for queue space before failing with
+    /// `Overloaded` (the bounded-backpressure contract).
+    pub enqueue_wait_ms: u64,
+    /// Latency budget the load-test bench reports against (p99 target).
+    pub latency_budget_ms: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 0,
+            queue_capacity: 256,
+            enqueue_wait_ms: 100,
+            latency_budget_ms: 250.0,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub artifacts_dir: String,
@@ -150,6 +178,7 @@ pub struct RunConfig {
     pub train: TrainConfig,
     pub parallel: ParallelConfig,
     pub checkpoint: CheckpointConfig,
+    pub serve: ServeConfig,
 }
 
 impl Default for RunConfig {
@@ -163,6 +192,7 @@ impl Default for RunConfig {
             train: TrainConfig::default(),
             parallel: ParallelConfig::default(),
             checkpoint: CheckpointConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -181,6 +211,15 @@ impl RunConfig {
             self.checkpoint.every >= 1,
             "checkpoint.every must be >= 1 (got {})",
             self.checkpoint.every
+        );
+        anyhow::ensure!(
+            self.serve.queue_capacity >= 1,
+            "serve.queue_capacity must be >= 1 (got {})",
+            self.serve.queue_capacity
+        );
+        anyhow::ensure!(
+            self.serve.latency_budget_ms > 0.0,
+            "serve.latency_budget_ms must be positive"
         );
         Ok(())
     }
@@ -244,6 +283,15 @@ impl RunConfig {
                             None => Json::Null,
                         },
                     ),
+                ]),
+            ),
+            (
+                "serve",
+                Json::obj(vec![
+                    ("workers", Json::from(self.serve.workers)),
+                    ("queue_capacity", Json::from(self.serve.queue_capacity)),
+                    ("enqueue_wait_ms", Json::from(self.serve.enqueue_wait_ms as i64)),
+                    ("latency_budget_ms", Json::from(self.serve.latency_budget_ms)),
                 ]),
             ),
         ])
@@ -322,6 +370,19 @@ impl RunConfig {
         }
         if let Some(s) = c.get("resume").as_str() {
             cfg.checkpoint.resume = Some(s.to_string());
+        }
+        let s = j.get("serve");
+        if let Some(v) = s.get("workers").as_i64() {
+            cfg.serve.workers = v as usize;
+        }
+        if let Some(v) = s.get("queue_capacity").as_i64() {
+            cfg.serve.queue_capacity = v as usize;
+        }
+        if let Some(v) = s.get("enqueue_wait_ms").as_i64() {
+            cfg.serve.enqueue_wait_ms = v as u64;
+        }
+        if let Some(v) = s.get("latency_budget_ms").as_f64() {
+            cfg.serve.latency_budget_ms = v;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -404,6 +465,10 @@ mod tests {
         cfg.parallel.replicas = 4;
         cfg.checkpoint.dir = Some("ckpts".to_string());
         cfg.checkpoint.every = 3;
+        cfg.serve.workers = 2;
+        cfg.serve.queue_capacity = 32;
+        cfg.serve.enqueue_wait_ms = 17;
+        cfg.serve.latency_budget_ms = 75.0;
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.mode, cfg.mode);
         assert_eq!(back.backend, BackendKind::Native);
@@ -413,6 +478,10 @@ mod tests {
         assert_eq!(back.checkpoint.dir.as_deref(), Some("ckpts"));
         assert_eq!(back.checkpoint.every, 3);
         assert!(back.checkpoint.resume.is_none());
+        assert_eq!(back.serve.workers, 2);
+        assert_eq!(back.serve.queue_capacity, 32);
+        assert_eq!(back.serve.enqueue_wait_ms, 17);
+        assert_eq!(back.serve.latency_budget_ms, 75.0);
     }
 
     #[test]
@@ -423,6 +492,8 @@ mod tests {
         b.train.epochs += 5;
         b.artifacts_dir = "elsewhere".into();
         b.checkpoint.dir = Some("ckpts".into());
+        b.serve.workers = 3;
+        b.serve.queue_capacity = 7;
         assert_eq!(a.trajectory_fingerprint(), b.trajectory_fingerprint());
         // Every trajectory knob changes it.
         for mutate in [
@@ -485,6 +556,12 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = RunConfig::default();
         cfg.parallel.replicas = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.serve.queue_capacity = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.serve.latency_budget_ms = 0.0;
         assert!(cfg.validate().is_err());
     }
 

@@ -23,6 +23,14 @@ pub struct BatchDims {
     pub max_graphs: usize,
 }
 
+impl BatchDims {
+    /// Whether a single structure of `natoms`/`nedges` can ever be packed
+    /// (the serving admission check: budget is nodes/edges, not requests).
+    pub fn admits(&self, natoms: usize, nedges: usize) -> bool {
+        natoms <= self.max_nodes && nedges <= self.max_edges
+    }
+}
+
 /// One padded batch, laid out exactly as the artifacts expect.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GraphBatch {
@@ -169,6 +177,49 @@ impl GraphBatch {
         self.graph_mask[g] = 1.0;
         self.inv_atoms[g] = 1.0 / natoms as f32;
         self.y_energy[g] = energy_per_atom as f32;
+        self.n_nodes += natoms;
+        self.n_edges += edges.len();
+        self.n_graphs += 1;
+        Ok(())
+    }
+
+    /// Append one structure for inference: identical to [`Self::push_raw`]
+    /// except that no labels are written — `y_energy`/`y_forces` keep the
+    /// zeros a cleared batch already holds. The forward pass never reads
+    /// labels, so a batch packed this way produces bit-identical
+    /// predictions to one packed with [`Self::push`].
+    pub fn push_inference(&mut self, species: &[u8], edges: &[Edge]) -> Result<(), BatchError> {
+        let natoms = species.len();
+        if natoms > self.dims.max_nodes || edges.len() > self.dims.max_edges {
+            return Err(BatchError::TooLarge {
+                natoms,
+                nedges: edges.len(),
+                dims: self.dims,
+            });
+        }
+        if !self.fits(natoms, edges.len()) {
+            return Err(BatchError::Full);
+        }
+        let base = self.n_nodes;
+        let g = self.n_graphs;
+        for (i, &z) in species.iter().enumerate() {
+            let n = base + i;
+            self.species[n] = z as i32;
+            self.node_mask[n] = 1.0;
+            self.node_graph[n] = g as i32;
+        }
+        for (k, e) in edges.iter().enumerate() {
+            let idx = self.n_edges + k;
+            self.edge_src[idx] = (base + e.src as usize) as i32;
+            self.edge_dst[idx] = (base + e.dst as usize) as i32;
+            self.rel_hat[idx * 3] = e.rel_hat[0];
+            self.rel_hat[idx * 3 + 1] = e.rel_hat[1];
+            self.rel_hat[idx * 3 + 2] = e.rel_hat[2];
+            self.dist[idx] = e.dist;
+            self.edge_mask[idx] = 1.0;
+        }
+        self.graph_mask[g] = 1.0;
+        self.inv_atoms[g] = 1.0 / natoms as f32;
         self.n_nodes += natoms;
         self.n_edges += edges.len();
         self.n_graphs += 1;
@@ -467,6 +518,41 @@ mod tests {
         }
         assert_eq!(pushed, 10);
         assert!(builder.skipped > 0, "oversized structures must be counted");
+    }
+
+    #[test]
+    fn admits_is_the_single_structure_budget() {
+        let d = dims();
+        assert!(d.admits(64, 512));
+        assert!(!d.admits(65, 0));
+        assert!(!d.admits(0, 513));
+        assert!(d.admits(0, 0));
+    }
+
+    #[test]
+    fn push_inference_matches_push_modulo_labels() {
+        let ss = structures(4);
+        let mut labeled = GraphBatch::empty(dims());
+        let mut inference = GraphBatch::empty(dims());
+        for s in &ss {
+            let edges = radius_graph(s, 6.0);
+            labeled.push(s, &edges).unwrap();
+            inference.push_inference(&s.species, &edges).unwrap();
+        }
+        // Strip labels from the labeled batch: everything else must match
+        // bit-for-bit.
+        let mut stripped = labeled.clone();
+        stripped.y_energy.fill(0.0);
+        stripped.y_forces.fill(0.0);
+        assert_eq!(stripped, inference);
+        assert!(inference.y_energy.iter().all(|&x| x == 0.0));
+        assert!(inference.y_forces.iter().all(|&x| x == 0.0));
+        // And the same errors apply.
+        let big_species = vec![1u8; dims().max_nodes + 1];
+        assert!(matches!(
+            inference.push_inference(&big_species, &[]),
+            Err(BatchError::TooLarge { .. })
+        ));
     }
 
     #[test]

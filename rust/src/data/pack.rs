@@ -160,6 +160,12 @@ pub fn write_all(path: impl AsRef<Path>, structures: &[AtomicStructure]) -> Resu
     w.finish()
 }
 
+/// Convenience: read every structure from `path` (the write_all twin; the
+/// `serve`/`loadtest` CLI's `--data` path).
+pub fn read_all(path: impl AsRef<Path>) -> Result<Vec<AtomicStructure>, PackError> {
+    GPackReader::open(path)?.read_all()
+}
+
 // ---------------------------------------------------------------------------
 // reader
 // ---------------------------------------------------------------------------
@@ -294,6 +300,8 @@ mod tests {
         assert_eq!(r.len(), 20);
         let back = r.read_all().unwrap();
         assert_eq!(ss, back);
+        // The module-level convenience is the same read.
+        assert_eq!(read_all(&path).unwrap(), ss);
         std::fs::remove_file(path).ok();
     }
 

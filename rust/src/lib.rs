@@ -187,6 +187,52 @@
 //! without re-running pre-training. The CLI exposes the same knobs as
 //! `hydra-mtp train --checkpoint-dir DIR [--resume PATH]`, and
 //! `examples/pretrain_e2e.rs` demonstrates interrupt-and-resume end to end.
+//!
+//! ## Serving
+//!
+//! [`Predictor`] is a batch API; a production service sees the opposite
+//! shape — many concurrent clients, one structure each. [`Session::server`]
+//! starts an always-on [`serve::Server`]: a persistent worker pool behind a
+//! bounded **coalescing request queue** that packs concurrent
+//! single-structure requests into shared padded batches. Admission is by
+//! node/edge *budget* (never request count), a full queue applies
+//! backpressure (bounded wait, then a typed
+//! [`serve::ServeError::Overloaded`]), and shutdown drains the queue before
+//! joining the workers. Parameters are marshalled into typed structs — f32
+//! weight views included — once at model load; each worker recycles one
+//! eval-only activation workspace, so the steady state allocates nothing
+//! per request. Coalesced outputs are **bit-identical** to sequential
+//! `Predictor::predict_one` calls at either precision
+//! (`rust/tests/integration_serving.rs`):
+//!
+//! ```no_run
+//! use hydra_mtp::{Session, TrainMode};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let session = Session::builder().mode(TrainMode::MtlPar).build()?;
+//! let model = hydra_mtp::Session::load_model("gfm.ckpt")?;
+//! let server = session.server(&model)?;        // workers spawn here
+//! std::thread::scope(|s| {
+//!     for client in 0..8 {
+//!         let server = &server;
+//!         s.spawn(move || {
+//!             // each client predicts one structure at a time; concurrent
+//!             // requests coalesce into shared padded batches
+//!             # let _ = (client, server);
+//!         });
+//!     }
+//! });
+//! server.shutdown();                           // drains, then joins
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! `hydra-mtp serve --model gfm.ckpt --data in.gpack` runs the same loop
+//! from the CLI, and `hydra-mtp loadtest` measures coalesced-vs-sequential
+//! latency (p50/p95/p99) and sustained throughput in one process —
+//! `cargo bench --bench serving` records the same comparison in
+//! `BENCH_serving.json` (see EXPERIMENTS.md §Serving — quote only
+//! CI-artifact numbers).
 
 pub mod checkpoint;
 pub mod comm;
@@ -197,13 +243,15 @@ pub mod elements;
 pub mod model;
 pub mod runtime;
 pub mod scalesim;
+pub mod serve;
 pub mod session;
 pub mod tasks;
 pub mod tensor;
 pub mod util;
 
-pub use config::{RunConfig, TrainMode};
+pub use config::{RunConfig, ServeConfig, TrainMode};
 pub use runtime::{BackendKind, Engine, Precision};
+pub use serve::{ServeError, ServeStats, Server};
 pub use session::{Prediction, Predictor, Session, SessionBuilder};
 pub use tasks::{DatasetId, TaskRegistry, TaskSpec, ALL_DATASETS};
 

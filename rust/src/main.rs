@@ -8,6 +8,8 @@
 //!   table2    regenerate Table 2 (force MAE matrix, same runs)
 //!   fig1      element-frequency heatmap over the aggregated datasets
 //!   fig4      weak/strong scaling sweeps on Frontier/Perlmutter/Aurora
+//!   serve     run the always-on batched-inference server over a request stream
+//!   loadtest  measure coalesced-vs-sequential serving latency + throughput
 //!   tasks     print the task registry (the five presets + custom tasks)
 //!   info      print manifest / architecture / memory-regime summary
 //!
@@ -18,10 +20,12 @@ use std::sync::Arc;
 
 use hydra_mtp::config::{RunConfig, TrainMode};
 use hydra_mtp::coordinator::experiments;
-use hydra_mtp::data::structures::ALL_DATASETS;
+use hydra_mtp::coordinator::trainer::TrainedModel;
+use hydra_mtp::data::structures::{AtomicStructure, ALL_DATASETS};
 use hydra_mtp::data::{generators, pack};
 use hydra_mtp::model::arch;
 use hydra_mtp::scalesim;
+use hydra_mtp::serve::loadtest;
 use hydra_mtp::session::Session;
 use hydra_mtp::tasks::TaskRegistry;
 use hydra_mtp::util::cli::Args;
@@ -36,6 +40,8 @@ fn main() {
         "table2" => cmd_tables(&args, false),
         "fig1" => cmd_fig1(&args),
         "fig4" => cmd_fig4(&args),
+        "serve" => cmd_serve(&args),
+        "loadtest" => cmd_loadtest(&args),
         "tasks" => cmd_tasks(&args),
         "info" => cmd_info(&args),
         "help" | "--help" => {
@@ -79,6 +85,19 @@ COMMANDS
   table2   (same flags; same training runs, force metric)
   fig1     [--per-dataset N] [--seed S] [--max-atoms A]
   fig4     [--machine all|frontier|perlmutter|aurora] [--csv FILE] [--seed S]
+  serve    [--model CKPT] [--data GPACK] [--requests N] [--clients C]
+           [--workers W] [--queue-capacity Q] [--wait-ms MS]
+           Always-on batched inference: C concurrent clients submit one
+           structure at a time; a persistent worker pool coalesces
+           concurrent requests into shared padded batches (admission by
+           node/edge budget). Without --model a deterministic synthetic
+           model serves every registered task; without --data the held-out
+           test split is replayed. Outputs are bit-identical to sequential
+           Predictor calls
+  loadtest (serve flags + [--budget-ms MS] [--json FILE])
+           Same request stream through sequential predict_one AND the
+           server in one process; prints p50/p95/p99 latency, sustained
+           structures/sec, speedup and the bit-identity verdict
   tasks    (print the task registry: palettes, generator families, fidelity)
   info     [--artifacts DIR]
 
@@ -269,6 +288,172 @@ fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
         std::fs::write(path, scalesim::to_csv(&rows))?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+/// Flags shared by `serve` and `loadtest`.
+const SERVE_FLAGS: [&str; 7] = [
+    "model",
+    "data",
+    "requests",
+    "clients",
+    "workers",
+    "queue-capacity",
+    "wait-ms",
+];
+
+/// Apply the serve CLI overrides onto `cfg.serve`.
+fn serve_overrides(args: &Args, cfg: &mut RunConfig) -> anyhow::Result<()> {
+    cfg.serve.workers = args.usize("workers", cfg.serve.workers);
+    cfg.serve.queue_capacity = args.usize("queue-capacity", cfg.serve.queue_capacity);
+    cfg.serve.enqueue_wait_ms = args.u64("wait-ms", cfg.serve.enqueue_wait_ms);
+    cfg.serve.latency_budget_ms = args.f64("budget-ms", cfg.serve.latency_budget_ms);
+    cfg.validate()
+}
+
+/// Resolve the model (`--model CKPT` or a deterministic synthetic one) and
+/// the request stream (`--data GPACK` or the held-out test split), cycled
+/// to exactly `requests` structures the model can serve.
+fn serving_inputs(
+    args: &Args,
+    session: &mut Session,
+    requests: usize,
+) -> anyhow::Result<(TrainedModel, Vec<AtomicStructure>)> {
+    let model = match args.opt_str("model") {
+        Some(path) => Session::load_model(path)?,
+        None => loadtest::synthetic_model(
+            session.engine(),
+            session.tasks(),
+            session.config().data.seed,
+        ),
+    };
+    let mut structures = match args.opt_str("data") {
+        Some(path) => pack::read_all(path)?,
+        None => session.test_samples(requests)?,
+    };
+    structures.retain(|s| model.try_branch_for(s.dataset).is_some());
+    anyhow::ensure!(
+        !structures.is_empty(),
+        "no structures to serve: none of the inputs match a head of model '{}'",
+        model.name
+    );
+    if structures.len() > requests {
+        structures.truncate(requests);
+    } else {
+        let base = structures.clone();
+        while structures.len() < requests {
+            let take = requests - structures.len();
+            structures.extend(base.iter().take(take).cloned());
+        }
+    }
+    Ok((model, structures))
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let mut allowed = SERVE_FLAGS.to_vec();
+    allowed.extend(CONFIG_FLAGS);
+    args.ensure_known("serve", &allowed)?;
+
+    let mut cfg = base_config(args)?;
+    serve_overrides(args, &mut cfg)?;
+    let requests = args.usize("requests", 64);
+    let clients = args.usize("clients", 4).max(1);
+    let mut session = Session::builder().config(cfg).build()?;
+    let (model, structures) = serving_inputs(args, &mut session, requests)?;
+    println!(
+        "serving model '{}' on the {} backend (precision {}): {} requests, {} clients ...",
+        model.name,
+        session.engine().backend_name(),
+        session.engine().precision().name(),
+        structures.len(),
+        clients
+    );
+    let server = session.server(&model)?;
+    let t0 = std::time::Instant::now();
+    let errors: usize = std::thread::scope(|scope| {
+        let (server, structures) = (&server, structures.as_slice());
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || {
+                    structures
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| i % clients == c)
+                        .filter(|(_, s)| server.predict(s).is_err())
+                        .count()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client panicked")).sum()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    server.shutdown();
+    println!(
+        "served {} / rejected {} in {:.3}s ({:.1} structures/s) over {} batches \
+         (avg {:.2} structures/batch); {} client errors",
+        stats.served,
+        stats.rejected,
+        wall,
+        stats.served as f64 / wall.max(1e-9),
+        stats.batches,
+        stats.avg_batch(),
+        errors
+    );
+    anyhow::ensure!(errors == 0, "{errors} requests failed");
+    Ok(())
+}
+
+fn cmd_loadtest(args: &Args) -> anyhow::Result<()> {
+    let mut allowed = vec!["budget-ms", "json"];
+    allowed.extend(SERVE_FLAGS);
+    allowed.extend(CONFIG_FLAGS);
+    args.ensure_known("loadtest", &allowed)?;
+
+    let mut cfg = base_config(args)?;
+    serve_overrides(args, &mut cfg)?;
+    let requests = args.usize("requests", 64);
+    let clients = args.usize("clients", 4).max(1);
+    let serve_cfg = cfg.serve;
+    let mut session = Session::builder().config(cfg).build()?;
+    let (model, structures) = serving_inputs(args, &mut session, requests)?;
+    println!(
+        "load test: model '{}', {} backend, precision {}, {} requests, {} clients",
+        model.name,
+        session.engine().backend_name(),
+        session.engine().precision().name(),
+        structures.len(),
+        clients
+    );
+    let report =
+        loadtest::run_loadtest(session.engine(), &model, &structures, clients, serve_cfg)?;
+    for (name, leg) in [("sequential", &report.sequential), ("server", &report.server)] {
+        println!(
+            "  {name:<10} p50 {:>8.3}ms  p95 {:>8.3}ms  p99 {:>8.3}ms  {:>8.1} structures/s  \
+             (avg batch {:.2})",
+            leg.p50_ns as f64 / 1e6,
+            leg.p95_ns as f64 / 1e6,
+            leg.p99_ns as f64 / 1e6,
+            leg.throughput_per_sec,
+            leg.avg_batch
+        );
+    }
+    println!(
+        "  speedup {:.2}x, bit-identical: {}, latency budget {:.1}ms ({})",
+        report.speedup(),
+        report.bit_identical,
+        serve_cfg.latency_budget_ms,
+        if report.server.p99_ns as f64 / 1e6 <= serve_cfg.latency_budget_ms {
+            "met"
+        } else {
+            "EXCEEDED"
+        }
+    );
+    if let Some(path) = args.opt_str("json") {
+        std::fs::write(path, format!("{}\n", report.to_json()))?;
+        println!("wrote {path}");
+    }
+    anyhow::ensure!(report.bit_identical, "server outputs diverged from the sequential baseline");
     Ok(())
 }
 

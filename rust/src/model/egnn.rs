@@ -99,6 +99,17 @@ impl EgnnDims {
 // parameters (f64 working copies; the same structs hold gradients)
 // ---------------------------------------------------------------------------
 
+/// Cached f32 views of one layer's matmul / gate weights (the serving fast
+/// path; see [`EncoderParams::cache_f32`]). Biases stay f64 — the mixed
+/// kernels add them at full precision.
+struct LayerW32 {
+    ew1: Vec<f32>,
+    ew2: Vec<f32>,
+    wg: Vec<f32>,
+    nw1: Vec<f32>,
+    nw2: Vec<f32>,
+}
+
 /// One EGNN block's parameters (or their gradients).
 pub struct LayerParams {
     pub ew1: Vec<f64>, // [(2H+R), H]
@@ -111,12 +122,25 @@ pub struct LayerParams {
     pub nb1: Vec<f64>, // [H]
     pub nw2: Vec<f64>, // [H, H]
     pub nb2: Vec<f64>, // [H]
+    /// Cached f32 weight view; `None` until [`EncoderParams::cache_f32`]
+    /// runs (gradient instances never populate it).
+    w32: Option<LayerW32>,
 }
 
 /// Shared-encoder parameters (or their gradients).
 pub struct EncoderParams {
     pub embed: Vec<f64>, // [S, H]
     pub layers: Vec<LayerParams>,
+}
+
+/// Cached f32 views of one branch's matmul / sub-head weights (see
+/// [`BranchParams::cache_f32`]).
+struct BranchW32 {
+    tw1: Vec<f32>,
+    tw2: Vec<f32>,
+    tw3: Vec<f32>,
+    ew: Vec<f32>,
+    fw: Vec<f32>,
 }
 
 /// One branch's parameters (or their gradients).
@@ -131,6 +155,8 @@ pub struct BranchParams {
     pub eb: f64,
     pub fw: Vec<f64>,  // [D]
     pub fb: f64,
+    /// Cached f32 weight view; `None` until [`BranchParams::cache_f32`].
+    w32: Option<BranchW32>,
 }
 
 fn leaf_f64(p: &ParamSet, name: &str, numel: usize) -> anyhow::Result<Vec<f64>> {
@@ -181,9 +207,30 @@ impl EncoderParams {
                 nb1: leaf_f64(p, &name("node.b1"), h)?,
                 nw2: leaf_f64(p, &name("node.w2"), h * h)?,
                 nb2: leaf_f64(p, &name("node.b2"), h)?,
+                w32: None,
             });
         }
         Ok(EncoderParams { embed, layers })
+    }
+
+    /// Downcast the matmul / gate weights to f32 once (the serving fast
+    /// path; per-call mixed kernels would otherwise re-downcast on every
+    /// invocation). The cached view is elementwise identical to what each
+    /// uncached call computes — [`kernels::downcast`] is the single shared
+    /// definition — so results stay bit-identical either way. A no-op
+    /// beyond the first call.
+    pub fn cache_f32(&mut self) {
+        for lp in &mut self.layers {
+            if lp.w32.is_none() {
+                lp.w32 = Some(LayerW32 {
+                    ew1: kernels::downcast(&lp.ew1),
+                    ew2: kernels::downcast(&lp.ew2),
+                    wg: kernels::downcast(&lp.wg),
+                    nw1: kernels::downcast(&lp.nw1),
+                    nw2: kernels::downcast(&lp.nw2),
+                });
+            }
+        }
     }
 
     pub fn zeros(dims: &EgnnDims) -> EncoderParams {
@@ -200,6 +247,7 @@ impl EncoderParams {
                 nb1: vec![0.0; h],
                 nw2: vec![0.0; h * h],
                 nb2: vec![0.0; h],
+                w32: None,
             })
             .collect();
         EncoderParams { embed: vec![0.0; dims.s * h], layers }
@@ -220,7 +268,22 @@ impl BranchParams {
             eb: leaf_scalar(p, "branch.energy.b")?,
             fw: leaf_f64(p, "branch.force.w", d)?,
             fb: leaf_scalar(p, "branch.force.b")?,
+            w32: None,
         })
+    }
+
+    /// Downcast the trunk / sub-head weights to f32 once; see
+    /// [`EncoderParams::cache_f32`] for the bit-identity argument.
+    pub fn cache_f32(&mut self) {
+        if self.w32.is_none() {
+            self.w32 = Some(BranchW32 {
+                tw1: kernels::downcast(&self.tw1),
+                tw2: kernels::downcast(&self.tw2),
+                tw3: kernels::downcast(&self.tw3),
+                ew: kernels::downcast(&self.ew),
+                fw: kernels::downcast(&self.fw),
+            });
+        }
     }
 
     pub fn zeros(dims: &EgnnDims) -> BranchParams {
@@ -236,6 +299,7 @@ impl BranchParams {
             eb: 0.0,
             fw: vec![0.0; d],
             fb: 0.0,
+            w32: None,
         }
     }
 }
@@ -261,7 +325,35 @@ pub struct Batch64 {
 }
 
 impl Batch64 {
+    /// An empty view; [`Batch64::refill`] before use. Serving workspaces
+    /// hold one of these so the twelve upcast buffers are allocated once
+    /// and recycled across requests.
+    pub fn empty() -> Batch64 {
+        Batch64 {
+            species: Vec::new(),
+            src: Vec::new(),
+            dst: Vec::new(),
+            node_graph: Vec::new(),
+            dist: Vec::new(),
+            rel_hat: Vec::new(),
+            nmask: Vec::new(),
+            emask: Vec::new(),
+            gmask: Vec::new(),
+            inv_atoms: Vec::new(),
+            y_e: Vec::new(),
+            y_f: Vec::new(),
+        }
+    }
+
     pub fn new(dims: &EgnnDims, b: &GraphBatch) -> anyhow::Result<Batch64> {
+        let mut out = Batch64::empty();
+        out.refill(dims, b)?;
+        Ok(out)
+    }
+
+    /// Rebuild the upcast view in place, reusing the existing allocations
+    /// (values are identical to a fresh [`Batch64::new`]).
+    pub fn refill(&mut self, dims: &EgnnDims, b: &GraphBatch) -> anyhow::Result<()> {
         anyhow::ensure!(
             b.dims.max_nodes == dims.n
                 && b.dims.max_edges == dims.e
@@ -273,22 +365,33 @@ impl Batch64 {
             dims.g
         );
         let idx = |v: i32, cap: usize| (v.max(0) as usize).min(cap - 1);
-        Ok(Batch64 {
-            // jnp indexing clamps out-of-range ids; mirror that so an exotic
-            // palette can never read out of bounds.
-            species: b.species.iter().map(|&z| idx(z, dims.s)).collect(),
-            src: b.edge_src.iter().map(|&i| idx(i, dims.n)).collect(),
-            dst: b.edge_dst.iter().map(|&i| idx(i, dims.n)).collect(),
-            node_graph: b.node_graph.iter().map(|&i| idx(i, dims.g)).collect(),
-            dist: b.dist.iter().map(|&x| x as f64).collect(),
-            rel_hat: b.rel_hat.iter().map(|&x| x as f64).collect(),
-            nmask: b.node_mask.iter().map(|&x| x as f64).collect(),
-            emask: b.edge_mask.iter().map(|&x| x as f64).collect(),
-            gmask: b.graph_mask.iter().map(|&x| x as f64).collect(),
-            inv_atoms: b.inv_atoms.iter().map(|&x| x as f64).collect(),
-            y_e: b.y_energy.iter().map(|&x| x as f64).collect(),
-            y_f: b.y_forces.iter().map(|&x| x as f64).collect(),
-        })
+        // jnp indexing clamps out-of-range ids; mirror that so an exotic
+        // palette can never read out of bounds.
+        self.species.clear();
+        self.species.extend(b.species.iter().map(|&z| idx(z, dims.s)));
+        self.src.clear();
+        self.src.extend(b.edge_src.iter().map(|&i| idx(i, dims.n)));
+        self.dst.clear();
+        self.dst.extend(b.edge_dst.iter().map(|&i| idx(i, dims.n)));
+        self.node_graph.clear();
+        self.node_graph.extend(b.node_graph.iter().map(|&i| idx(i, dims.g)));
+        self.dist.clear();
+        self.dist.extend(b.dist.iter().map(|&x| x as f64));
+        self.rel_hat.clear();
+        self.rel_hat.extend(b.rel_hat.iter().map(|&x| x as f64));
+        self.nmask.clear();
+        self.nmask.extend(b.node_mask.iter().map(|&x| x as f64));
+        self.emask.clear();
+        self.emask.extend(b.edge_mask.iter().map(|&x| x as f64));
+        self.gmask.clear();
+        self.gmask.extend(b.graph_mask.iter().map(|&x| x as f64));
+        self.inv_atoms.clear();
+        self.inv_atoms.extend(b.inv_atoms.iter().map(|&x| x as f64));
+        self.y_e.clear();
+        self.y_e.extend(b.y_energy.iter().map(|&x| x as f64));
+        self.y_f.clear();
+        self.y_f.extend(b.y_forces.iter().map(|&x| x as f64));
+        Ok(())
     }
 }
 
@@ -391,6 +494,77 @@ fn mul_dsilu_p(p: Precision, dy: &[f64], a: &[f64]) -> Vec<f64> {
     match p {
         Precision::F64 => mul_dsilu(dy, a),
         Precision::MixedF32 => kernels::mul_dsilu_mixed(dy, a),
+    }
+}
+
+// Cached-weight-view twins of `lin` / `lin_silu` / `dot_p` for the
+// eval-only forward: the F64 arm ignores the cache (it computes in f64
+// directly), the MixedF32 arm uses the pre-downcast view when present and
+// falls back to the per-call downcast otherwise. All three are
+// bit-identical to their uncached twins (`kernels::downcast` is the one
+// shared definition of the f64 -> f32 cast).
+
+/// `out = x @ w + b` against an optional cached f32 weight view.
+#[allow(clippy::too_many_arguments)]
+fn lin_w(
+    p: Precision,
+    x: &[f64],
+    w: &[f64],
+    w32: Option<&[f32]>,
+    b: &[f64],
+    out: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match p {
+        Precision::F64 => linear_into(x, w, b, out, m, k, n),
+        Precision::MixedF32 => match w32 {
+            Some(w32) => kernels::linear_into_mixed_w32(x, w32, b, out, m, k, n),
+            None => kernels::linear_into_mixed(x, w, b, out, m, k, n),
+        },
+    }
+}
+
+/// Fused linear + silu into caller-owned `pre`/`act` buffers, against an
+/// optional cached f32 weight view. The F64 arm writes `silu(pre)`
+/// elementwise into `act` — the same values [`lin_silu`] returns.
+#[allow(clippy::too_many_arguments)]
+fn lin_silu_w(
+    p: Precision,
+    x: &[f64],
+    w: &[f64],
+    w32: Option<&[f32]>,
+    b: &[f64],
+    pre: &mut [f64],
+    act: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match p {
+        Precision::F64 => {
+            linear_into(x, w, b, pre, m, k, n);
+            for (o, &v) in act.iter_mut().zip(pre.iter()) {
+                *o = kernels::silu(v);
+            }
+        }
+        Precision::MixedF32 => match w32 {
+            Some(w32) => kernels::linear_silu_into_mixed_w32(x, w32, b, pre, act, m, k, n),
+            None => kernels::linear_silu_into_mixed(x, w, b, pre, act, m, k, n),
+        },
+    }
+}
+
+/// Dot product against an optional cached f32 view of `w`.
+#[inline]
+fn dot_w(p: Precision, a: &[f64], w: &[f64], w32: Option<&[f32]>) -> f64 {
+    match p {
+        Precision::F64 => dot(a, w),
+        Precision::MixedF32 => match w32 {
+            Some(w32) => kernels::dot_mixed_w32(a, w32),
+            None => kernels::dot_mixed(a, w),
+        },
     }
 }
 
@@ -615,6 +789,285 @@ pub fn branch_forward(
         }
     }
     BranchState { at1, z1, at2, z2, at3, z3, fr, e_pa, forces }
+}
+
+// ---------------------------------------------------------------------------
+// eval-only forward (the serving path)
+// ---------------------------------------------------------------------------
+
+/// Recycled activation workspace for the eval-only forward: every buffer
+/// the training forward would allocate (and the `LayerCache`/`BranchState`
+/// intermediates it would *retain* for the backward pass, nine `[E,H]` or
+/// `[N,H]` buffers per layer) collapses into one fixed set, allocated once
+/// per worker and reused across requests — roughly halving peak serving
+/// memory and eliminating per-call allocation entirely.
+///
+/// [`EvalWorkspace::run`] replays the exact operation order of
+/// [`encoder_forward`] + [`branch_forward`] (same kernels, same masking,
+/// same serial scatter in edge order), so its outputs are bit-identical to
+/// the training-path forward at either [`Precision`]; when the parameter
+/// structs carry cached f32 views (`cache_f32`), the mixed path
+/// additionally skips every per-call weight downcast, again without
+/// changing a single bit.
+pub struct EvalWorkspace {
+    b64: Batch64,
+    rbf: Vec<f64>,     // [E,R]
+    deg: Vec<f64>,     // [N]
+    inv_deg: Vec<f64>, // [N]
+    hbuf: Vec<f64>,    // [N,H]
+    h_in: Vec<f64>,    // [N,H]
+    v: Vec<f64>,       // [N,3]
+    x: Vec<f64>,       // [E,2H+R]
+    epre: Vec<f64>,    // [E,H] pre-activation scratch (discarded)
+    u: Vec<f64>,       // [E,H]
+    m: Vec<f64>,       // [E,H]
+    gate: Vec<f64>,    // [E]
+    hagg: Vec<f64>,    // [N,H]
+    nin: Vec<f64>,     // [N,2H]
+    npre: Vec<f64>,    // [N,H] pre-activation scratch (discarded)
+    s1: Vec<f64>,      // [N,H]
+    upd: Vec<f64>,     // [N,H]
+    bpre: Vec<f64>,    // [N,D] pre-activation scratch (discarded)
+    za: Vec<f64>,      // [N,D] trunk ping
+    zb: Vec<f64>,      // [N,D] trunk pong
+    er: Vec<f64>,      // [N]
+    fr: Vec<f64>,      // [N]
+    e_pa: Vec<f64>,    // [G]
+    forces: Vec<f64>,  // [N,3]
+    out_e: Vec<f32>,   // [G] round-tripped output
+    out_f: Vec<f32>,   // [N,3] round-tripped output
+}
+
+impl EvalWorkspace {
+    pub fn new(dims: &EgnnDims) -> EvalWorkspace {
+        let (n, e, g, h, r, d) = (dims.n, dims.e, dims.g, dims.h, dims.r, dims.d);
+        EvalWorkspace {
+            b64: Batch64::empty(),
+            rbf: vec![0.0; e * r],
+            deg: vec![0.0; n],
+            inv_deg: vec![0.0; n],
+            hbuf: vec![0.0; n * h],
+            h_in: vec![0.0; n * h],
+            v: vec![0.0; n * 3],
+            x: vec![0.0; e * dims.kx()],
+            epre: vec![0.0; e * h],
+            u: vec![0.0; e * h],
+            m: vec![0.0; e * h],
+            gate: vec![0.0; e],
+            hagg: vec![0.0; n * h],
+            nin: vec![0.0; n * 2 * h],
+            npre: vec![0.0; n * h],
+            s1: vec![0.0; n * h],
+            upd: vec![0.0; n * h],
+            bpre: vec![0.0; n * d],
+            za: vec![0.0; n * d],
+            zb: vec![0.0; n * d],
+            er: vec![0.0; n],
+            fr: vec![0.0; n],
+            e_pa: vec![0.0; g],
+            forces: vec![0.0; n * 3],
+            out_e: vec![0.0; g],
+            out_f: vec![0.0; n * 3],
+        }
+    }
+
+    /// One full eval forward over `batch`; outputs land in
+    /// [`EvalWorkspace::energy_per_atom`] / [`EvalWorkspace::forces`],
+    /// already round-tripped through f32 exactly like the backend's tensor
+    /// outputs, so downstream f64 reads match the `Engine::forward` path
+    /// bit-for-bit.
+    pub fn run(
+        &mut self,
+        dims: &EgnnDims,
+        enc: &EncoderParams,
+        br: &BranchParams,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<()> {
+        self.b64.refill(dims, batch)?;
+        let EvalWorkspace {
+            b64,
+            rbf,
+            deg,
+            inv_deg,
+            hbuf,
+            h_in,
+            v,
+            x,
+            epre,
+            u,
+            m,
+            gate,
+            hagg,
+            nin,
+            npre,
+            s1,
+            upd,
+            bpre,
+            za,
+            zb,
+            er,
+            fr,
+            e_pa,
+            forces,
+            out_e,
+            out_f,
+        } = self;
+        let b: &Batch64 = b64;
+        let (n, e, g, h, r, d) = (dims.n, dims.e, dims.g, dims.h, dims.r, dims.d);
+        let p = dims.precision;
+        let kx = dims.kx();
+
+        // Gaussian RBF under the cosine cutoff envelope, masked.
+        rbf.fill(0.0);
+        let gamma = (r as f64 / dims.cutoff).powi(2);
+        for ei in 0..e {
+            if b.emask[ei] == 0.0 {
+                continue;
+            }
+            let dist = b.dist[ei];
+            let env =
+                0.5 * ((std::f64::consts::PI * (dist / dims.cutoff).clamp(0.0, 1.0)).cos() + 1.0);
+            for ri in 0..r {
+                let c = if r > 1 { dims.cutoff * ri as f64 / (r - 1) as f64 } else { 0.0 };
+                let dd = dist - c;
+                rbf[ei * r + ri] = (-gamma * dd * dd).exp() * env * b.emask[ei];
+            }
+        }
+
+        // Degree normalization (1 / (1 + in-degree)).
+        deg.fill(0.0);
+        for ei in 0..e {
+            deg[b.dst[ei]] += b.emask[ei];
+        }
+        for (o, &dg) in inv_deg.iter_mut().zip(deg.iter()) {
+            *o = 1.0 / (1.0 + dg);
+        }
+
+        // h0 = embed[species] * node_mask; v starts at zero.
+        hbuf.fill(0.0);
+        for nd in 0..n {
+            let nm = b.nmask[nd];
+            if nm == 0.0 {
+                continue;
+            }
+            let sp = b.species[nd];
+            for j in 0..h {
+                hbuf[nd * h + j] = enc.embed[sp * h + j] * nm;
+            }
+        }
+        v.fill(0.0);
+
+        for lp in &enc.layers {
+            h_in.copy_from_slice(hbuf);
+            build_edge_input(x, h_in, rbf, b, dims);
+            let c = lp.w32.as_ref();
+
+            lin_silu_w(p, x, &lp.ew1, c.map(|c| c.ew1.as_slice()), &lp.eb1, epre, u, e, kx, h);
+            lin_silu_w(p, u, &lp.ew2, c.map(|c| c.ew2.as_slice()), &lp.eb2, epre, m, e, h, h);
+            for ei in 0..e {
+                if b.emask[ei] == 0.0 {
+                    m[ei * h..(ei + 1) * h].fill(0.0);
+                }
+            }
+            for ei in 0..e {
+                let mrow = &m[ei * h..(ei + 1) * h];
+                gate[ei] =
+                    tanh_p(p, dot_w(p, mrow, &lp.wg, c.map(|c| c.wg.as_slice())) + lp.bg);
+            }
+
+            // Scatter aggregation (serial, edge order: deterministic).
+            hagg.fill(0.0);
+            for ei in 0..e {
+                if b.emask[ei] == 0.0 {
+                    continue;
+                }
+                let nd = b.dst[ei];
+                for j in 0..h {
+                    hagg[nd * h + j] += m[ei * h + j];
+                }
+            }
+            for ei in 0..e {
+                let em = b.emask[ei];
+                if em == 0.0 {
+                    continue;
+                }
+                let nd = b.dst[ei];
+                let sc = gate[ei] * em * inv_deg[nd] * b.nmask[nd];
+                for k in 0..3 {
+                    v[nd * 3 + k] += b.rel_hat[ei * 3 + k] * sc;
+                }
+            }
+
+            // Residual node update on [h | hagg * inv_deg].
+            for nd in 0..n {
+                nin[nd * 2 * h..nd * 2 * h + h].copy_from_slice(&h_in[nd * h..(nd + 1) * h]);
+                let id = inv_deg[nd];
+                for j in 0..h {
+                    nin[nd * 2 * h + h + j] = hagg[nd * h + j] * id;
+                }
+            }
+            lin_silu_w(p, nin, &lp.nw1, c.map(|c| c.nw1.as_slice()), &lp.nb1, npre, s1, n, 2 * h, h);
+            lin_w(p, s1, &lp.nw2, c.map(|c| c.nw2.as_slice()), &lp.nb2, upd, n, h, h);
+            for nd in 0..n {
+                let nm = b.nmask[nd];
+                for j in 0..h {
+                    hbuf[nd * h + j] = (h_in[nd * h + j] + upd[nd * h + j]) * nm;
+                }
+            }
+        }
+
+        // Branch: trunk MLP -> energy-per-atom + force sub-heads.
+        let c = br.w32.as_ref();
+        lin_silu_w(p, hbuf, &br.tw1, c.map(|c| c.tw1.as_slice()), &br.tb1, bpre, za, n, h, d);
+        lin_silu_w(p, za, &br.tw2, c.map(|c| c.tw2.as_slice()), &br.tb2, bpre, zb, n, d, d);
+        lin_silu_w(p, zb, &br.tw3, c.map(|c| c.tw3.as_slice()), &br.tb3, bpre, za, n, d, d);
+
+        for nd in 0..n {
+            let zrow = &za[nd * d..(nd + 1) * d];
+            er[nd] = dot_w(p, zrow, &br.ew, c.map(|c| c.ew.as_slice())) + br.eb;
+            fr[nd] = dot_w(p, zrow, &br.fw, c.map(|c| c.fw.as_slice())) + br.fb;
+        }
+
+        // Masked per-graph segment sum, normalized to energy per atom.
+        e_pa.fill(0.0);
+        for nd in 0..n {
+            e_pa[b.node_graph[nd]] += er[nd] * b.nmask[nd];
+        }
+        for gq in 0..g {
+            e_pa[gq] *= b.inv_atoms[gq];
+        }
+
+        // Force = scalar gate x equivariant channel, masked.
+        forces.fill(0.0);
+        for nd in 0..n {
+            let sc = fr[nd] * b.nmask[nd];
+            if sc != 0.0 {
+                for k in 0..3 {
+                    forces[nd * 3 + k] = sc * v[nd * 3 + k];
+                }
+            }
+        }
+
+        // The same f64 -> f32 round trip `NativeBackend::forward` applies
+        // when materializing its output tensors.
+        for (o, &e_) in out_e.iter_mut().zip(e_pa.iter()) {
+            *o = e_ as f32;
+        }
+        for (o, &f_) in out_f.iter_mut().zip(forces.iter()) {
+            *o = f_ as f32;
+        }
+        Ok(())
+    }
+
+    /// Predicted energy per atom `[G]` of the last [`EvalWorkspace::run`].
+    pub fn energy_per_atom(&self) -> &[f32] {
+        &self.out_e
+    }
+
+    /// Predicted forces `[N,3]` of the last [`EvalWorkspace::run`].
+    pub fn forces(&self) -> &[f32] {
+        &self.out_f
+    }
 }
 
 /// The paper's weighted energy+force loss with masked MAE metrics.

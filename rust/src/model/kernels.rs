@@ -351,7 +351,12 @@ pub fn colsum_into(dy: &[f64], gb: &mut [f64], m: usize, n: usize) {
 /// on every target the paper's machines cover.
 pub const COL_BLOCK: usize = 8;
 
-fn downcast(v: &[f64]) -> Vec<f32> {
+/// Elementwise f64 -> f32 downcast. This is the ONE definition the cached
+/// weight views (`EncoderParams::cache_f32` / `BranchParams::cache_f32`)
+/// and the per-call mixed kernels share, so a cached view is elementwise
+/// bit-identical to the downcast every uncached call performs — the
+/// foundation of the serving path's bit-identity guarantee.
+pub fn downcast(v: &[f64]) -> Vec<f32> {
     v.iter().map(|&x| x as f32).collect()
 }
 
@@ -521,6 +526,80 @@ pub fn linear_silu_into_mixed(
     });
 }
 
+/// [`linear_into_mixed`] against a pre-downcast weight view (`w32 =
+/// downcast(w)` computed once at model load). Identical chunking and
+/// accumulation order, so the result is bit-identical to the uncached
+/// call — the per-invocation weight downcast is simply skipped.
+#[allow(clippy::too_many_arguments)]
+pub fn linear_into_mixed_w32(
+    x: &[f64],
+    w32: &[f32],
+    b: &[f64],
+    out: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w32.len(), k * n);
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    let threads = plan_threads(m, m * k * n);
+    if threads <= 1 || m == 0 || k == 0 || n == 0 {
+        let x32 = downcast(x);
+        linear_rows_f32(&x32, w32, b, out, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (x_chunk, out_chunk) in x.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n)) {
+            scope.spawn(move || {
+                let x32 = downcast(x_chunk);
+                linear_rows_f32(&x32, w32, b, out_chunk, k, n);
+            });
+        }
+    });
+}
+
+/// [`linear_silu_into_mixed`] against a pre-downcast weight view. Same
+/// chunking, bit-identical result, no per-call weight downcast.
+#[allow(clippy::too_many_arguments)]
+pub fn linear_silu_into_mixed_w32(
+    x: &[f64],
+    w32: &[f32],
+    b: &[f64],
+    pre: &mut [f64],
+    act: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w32.len(), k * n);
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(pre.len(), m * n);
+    debug_assert_eq!(act.len(), m * n);
+    let threads = plan_threads(m, m * k * n);
+    if threads <= 1 || k == 0 || n == 0 {
+        let x32 = downcast(x);
+        linear_rows_silu_f32(&x32, w32, b, pre, act, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for ((x_chunk, pre_chunk), act_chunk) in x
+            .chunks(rows_per * k)
+            .zip(pre.chunks_mut(rows_per * n))
+            .zip(act.chunks_mut(rows_per * n))
+        {
+            scope.spawn(move || {
+                let x32 = downcast(x_chunk);
+                linear_rows_silu_f32(&x32, w32, b, pre_chunk, act_chunk, k, n);
+            });
+        }
+    });
+}
+
 /// Mixed-precision column block of gw += x^T @ dy (f32 products, f64
 /// accumulation over `m` in order).
 fn grad_w_block_f32(
@@ -649,6 +728,12 @@ pub fn grad_x_into_mixed_threads(
 /// sub-head reductions).
 pub fn dot_mixed(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(&x, &y)| (x as f32 * y as f32) as f64).sum()
+}
+
+/// [`dot_mixed`] against a pre-downcast right-hand side (`b32 =
+/// downcast(b)`); bit-identical, no per-call downcast of the weights.
+pub fn dot_mixed_w32(a: &[f64], b32: &[f32]) -> f64 {
+    a.iter().zip(b32).map(|(&x, &y)| (x as f32 * y) as f64).sum()
 }
 
 #[inline]
@@ -893,6 +978,40 @@ mod tests {
         linear_silu_into_mixed(&x, &w, &b, &mut pre, &mut act, m, k, n);
         assert_eq!(pre_ref, pre, "fused pre-activation must match unfused");
         assert_eq!(act_ref, act, "fused silu must match unfused");
+    }
+
+    #[test]
+    fn cached_w32_kernels_match_uncached_bitwise() {
+        // The serving fast path downcasts weights once at model load and
+        // reuses the f32 view; every result must be bit-identical to the
+        // per-call downcast, including shapes big enough to fan out.
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (9, 13, 11), (33, 17, 24), (256, 72, 64)] {
+            let x = pseudo(m * k, 1.2, 50);
+            let w = pseudo(k * n, 0.8, 51);
+            let b = pseudo(n, 0.3, 52);
+            let w32 = downcast(&w);
+
+            let mut lin_ref = vec![0.0; m * n];
+            linear_into_mixed(&x, &w, &b, &mut lin_ref, m, k, n);
+            let mut lin = vec![0.0; m * n];
+            linear_into_mixed_w32(&x, &w32, &b, &mut lin, m, k, n);
+            assert_eq!(lin_ref, lin, "linear ({m},{k},{n})");
+
+            let mut pre_ref = vec![0.0; m * n];
+            let mut act_ref = vec![0.0; m * n];
+            linear_silu_into_mixed(&x, &w, &b, &mut pre_ref, &mut act_ref, m, k, n);
+            let mut pre = vec![0.0; m * n];
+            let mut act = vec![0.0; m * n];
+            linear_silu_into_mixed_w32(&x, &w32, &b, &mut pre, &mut act, m, k, n);
+            assert_eq!(pre_ref, pre, "fused pre ({m},{k},{n})");
+            assert_eq!(act_ref, act, "fused act ({m},{k},{n})");
+        }
+
+        let a = pseudo(65, 1.0, 53);
+        let v = pseudo(65, 1.0, 54);
+        let d_ref = dot_mixed(&a, &v);
+        let d = dot_mixed_w32(&a, &downcast(&v));
+        assert_eq!(d_ref.to_bits(), d.to_bits(), "dot");
     }
 
     #[test]

@@ -22,6 +22,15 @@
 //! the f64 oracle path, or blocked f32 microkernels with f64 accumulation
 //! (see `crate::model::kernels`). PJRT ignores the knob — its numerics are
 //! fixed by the compiled artifacts.
+//!
+//! The serving subsystem (`crate::serve`) layers a second, eval-only fast
+//! path on top of the native backend: `model::egnn::EvalWorkspace` replays
+//! exactly the `forward` op sequence against pre-marshalled
+//! `EncoderParams`/`BranchParams` (f32 views cached once at model load)
+//! while recycling every activation buffer and skipping the backward
+//! intermediates. Its outputs are bit-identical to `Engine::forward` at
+//! either precision (`rust/tests/integration_serving.rs`); non-native
+//! backends serve through the generic `forward` entry point instead.
 
 use crate::data::batch::GraphBatch;
 use crate::model::params::ParamSet;

@@ -239,6 +239,14 @@ impl Engine {
         self.exec_count.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one execution performed outside the engine's own dispatch —
+    /// the serving fast path runs the native eval forward directly against
+    /// cached parameter views, but its executions must still show up in
+    /// [`Engine::executions`] metrics.
+    pub(crate) fn record_execution(&self) {
+        self.count();
+    }
+
     /// One forward+backward pass: returns loss, MAEs, and named gradients.
     pub fn train_step(
         &self,

@@ -9,6 +9,13 @@
 //! a `ParamSet` with the exact leaf structure the trainer's collectives and
 //! the AdamW optimizer expect, so the whole coordinator stack runs
 //! unchanged on top.
+//!
+//! Serving (`crate::serve`, `Session::predictor`) bypasses the per-call
+//! `EncoderParams::from_set` / `BranchParams::from_set` marshalling done
+//! here: `serve::prepared::PreparedModel` builds the typed params (plus
+//! their cached f32 views) once at model load and reuses a recycled
+//! `model::egnn::EvalWorkspace` per worker, reproducing this backend's
+//! `forward` bit-for-bit without its per-call allocations.
 
 use crate::data::batch::GraphBatch;
 use crate::model::egnn::{

@@ -1,0 +1,212 @@
+//! Multi-client load test for the serving subsystem: the same request
+//! stream through (a) sequential `Predictor::predict_one` calls and (b) N
+//! concurrent clients against a [`Server`], measured in the SAME process
+//! so the two legs share an engine, a model, and a machine state. Records
+//! per-request latency percentiles (p50/p95/p99) and sustained
+//! structures/sec for both legs, and checks the two output streams
+//! bit-for-bit — the load test doubles as an end-to-end identity check.
+//!
+//! Consumed by the `loadtest` CLI mode and by `rust/benches/serving.rs`
+//! (which writes `BENCH_serving.json` in CI).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::ServeConfig;
+use crate::coordinator::trainer::{Heads, TrainedModel};
+use crate::data::structures::{AtomicStructure, DatasetId};
+use crate::model::params::ParamSet;
+use crate::runtime::Engine;
+use crate::serve::Server;
+use crate::session::{Prediction, Predictor};
+use crate::util::json::Json;
+
+/// A deterministic per-dataset model straight from the initializer —
+/// the standard way to exercise serving without a training run (same
+/// seeding scheme as the trainer's rank init, so any session can rebuild
+/// the identical model from `(engine, tasks, seed)`).
+pub fn synthetic_model(engine: &Engine, tasks: &[DatasetId], seed: u64) -> TrainedModel {
+    let encoder = ParamSet::init(&engine.manifest.params, seed).subset("encoder.");
+    let heads: BTreeMap<DatasetId, ParamSet> = tasks
+        .iter()
+        .map(|&d| {
+            let s = seed ^ d.branch_init_salt();
+            (d, ParamSet::init(&engine.manifest.params, s).subset("branch."))
+        })
+        .collect();
+    TrainedModel { name: format!("synthetic-{seed}"), encoder, heads: Heads::PerDataset(heads) }
+}
+
+/// Latency/throughput summary of one leg (sequential or server).
+#[derive(Debug, Clone, Copy)]
+pub struct LegReport {
+    pub requests: usize,
+    pub clients: usize,
+    pub wall_secs: f64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    /// Sustained structures/sec over the leg's wall clock.
+    pub throughput_per_sec: f64,
+    /// Mean structures per executed batch (1.0 for the sequential leg).
+    pub avg_batch: f64,
+}
+
+fn percentile(sorted: &[u64], pct: usize) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let i = (sorted.len() * pct / 100).min(sorted.len() - 1);
+    sorted[i]
+}
+
+fn leg(latencies: &mut [u64], clients: usize, wall_secs: f64, avg_batch: f64) -> LegReport {
+    latencies.sort_unstable();
+    LegReport {
+        requests: latencies.len(),
+        clients,
+        wall_secs,
+        p50_ns: percentile(latencies, 50),
+        p95_ns: percentile(latencies, 95),
+        p99_ns: percentile(latencies, 99),
+        throughput_per_sec: if wall_secs > 0.0 {
+            latencies.len() as f64 / wall_secs
+        } else {
+            0.0
+        },
+        avg_batch,
+    }
+}
+
+impl LegReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::from(self.requests)),
+            ("clients", Json::from(self.clients)),
+            ("wall_secs", Json::from(self.wall_secs)),
+            ("p50_ns", Json::from(self.p50_ns as i64)),
+            ("p95_ns", Json::from(self.p95_ns as i64)),
+            ("p99_ns", Json::from(self.p99_ns as i64)),
+            ("throughput_per_sec", Json::from(self.throughput_per_sec)),
+            ("avg_batch", Json::from(self.avg_batch)),
+        ])
+    }
+}
+
+/// Both legs over one request stream, plus the bit-identity verdict.
+#[derive(Debug, Clone)]
+pub struct LoadTestReport {
+    pub precision: String,
+    pub sequential: LegReport,
+    pub server: LegReport,
+    /// Every server prediction bitwise equal to its sequential twin.
+    pub bit_identical: bool,
+}
+
+impl LoadTestReport {
+    /// Server speedup over the sequential baseline (>1.0 means the
+    /// coalescing path sustained more structures/sec).
+    pub fn speedup(&self) -> f64 {
+        if self.sequential.throughput_per_sec > 0.0 {
+            self.server.throughput_per_sec / self.sequential.throughput_per_sec
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("precision", Json::str(&self.precision)),
+            ("sequential", self.sequential.to_json()),
+            ("server", self.server.to_json()),
+            ("speedup", Json::from(self.speedup())),
+            ("bit_identical", Json::from(self.bit_identical)),
+        ])
+    }
+}
+
+fn same_bits(a: &Prediction, b: &Prediction) -> bool {
+    a.dataset == b.dataset
+        && a.energy.to_bits() == b.energy.to_bits()
+        && a.energy_per_atom.to_bits() == b.energy_per_atom.to_bits()
+        && a.forces.len() == b.forces.len()
+        && a.forces.iter().zip(&b.forces).all(|(x, y)| {
+            x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+/// Run both legs over `structures`: first the sequential
+/// `Predictor::predict_one` baseline, then `clients` concurrent threads
+/// against a fresh [`Server`] started with `cfg` — same process, same
+/// engine. Any failed request is an error; output divergence is not —
+/// it is reported in `bit_identical` so callers (bench, CLI) decide how
+/// loudly to fail.
+pub fn run_loadtest(
+    engine: &Arc<Engine>,
+    model: &TrainedModel,
+    structures: &[AtomicStructure],
+    clients: usize,
+    cfg: ServeConfig,
+) -> anyhow::Result<LoadTestReport> {
+    anyhow::ensure!(!structures.is_empty(), "load test needs at least one structure");
+    let clients = clients.max(1);
+
+    // Leg 1: sequential per-call baseline.
+    let mut predictor = Predictor::new(Arc::clone(engine), model.clone());
+    let mut seq_lat = Vec::with_capacity(structures.len());
+    let mut seq_out = Vec::with_capacity(structures.len());
+    let t0 = Instant::now();
+    for s in structures {
+        let t = Instant::now();
+        seq_out.push(predictor.predict_one(s)?);
+        seq_lat.push(t.elapsed().as_nanos() as u64);
+    }
+    let seq_wall = t0.elapsed().as_secs_f64();
+
+    // Leg 2: concurrent clients against the server, round-robin split.
+    let server = Server::start(Arc::clone(engine), model.clone(), cfg)?;
+    let mut srv_out: Vec<Option<Prediction>> = vec![None; structures.len()];
+    let mut srv_lat = Vec::with_capacity(structures.len());
+    let t0 = Instant::now();
+    let results: Vec<anyhow::Result<Vec<(usize, u64, Prediction)>>> =
+        std::thread::scope(|scope| {
+            let server = &server;
+            let mut handles = Vec::with_capacity(clients);
+            for c in 0..clients {
+                handles.push(scope.spawn(move || {
+                    let mut got = Vec::new();
+                    for (i, s) in structures.iter().enumerate() {
+                        if i % clients != c {
+                            continue;
+                        }
+                        let t = Instant::now();
+                        let p = server.predict(s).map_err(|e| anyhow::anyhow!("client {c}: {e}"))?;
+                        got.push((i, t.elapsed().as_nanos() as u64, p));
+                    }
+                    Ok(got)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("client panicked")).collect()
+        });
+    let srv_wall = t0.elapsed().as_secs_f64();
+    for r in results {
+        for (i, lat, p) in r? {
+            srv_lat.push(lat);
+            srv_out[i] = Some(p);
+        }
+    }
+    let stats = server.stats();
+    server.shutdown();
+
+    let bit_identical = seq_out.iter().zip(&srv_out).all(|(a, b)| {
+        b.as_ref().is_some_and(|b| same_bits(a, b))
+    });
+
+    Ok(LoadTestReport {
+        precision: engine.precision().name().to_string(),
+        sequential: leg(&mut seq_lat, 1, seq_wall, 1.0),
+        server: leg(&mut srv_lat, clients, srv_wall, stats.avg_batch()),
+        bit_identical,
+    })
+}

@@ -1,0 +1,323 @@
+//! Production serving: always-on batched inference with a coalescing
+//! request queue.
+//!
+//! [`Session::predictor`](crate::session::Session::predictor) is a batch
+//! API: callers hand it slices and it packs them. A long-lived service has
+//! the opposite shape — many concurrent clients, one structure each — and
+//! calling `predict_one` per request pays a padded-batch forward per
+//! structure. A [`Server`] amortizes that cost without changing a single
+//! output bit:
+//!
+//! * **Coalescing queue** ([`queue::CoalescingQueue`]): concurrent
+//!   single-structure requests are packed into one padded [`GraphBatch`]
+//!   per forward. Admission is by *node/edge budget*, not request count,
+//!   with at most `max_graphs - 1` structures per batch so the padding
+//!   graph slot never overlaps a real one.
+//! * **Persistent workers**: a pool of threads (sized by
+//!   `serve.workers`, default `HYDRA_MTP_THREADS`) lives for the server
+//!   lifetime; each owns a recycled batch + activation workspace
+//!   ([`prepared::Workspace`]), so steady-state serving allocates nothing
+//!   per request.
+//! * **Prepared parameters** ([`prepared::PreparedModel`]): typed encoder /
+//!   branch params with cached f32 weight views, materialized once at
+//!   startup; heads sit in a small bounded LRU.
+//! * **Backpressure**: the queue is bounded; `predict` waits up to
+//!   `serve.enqueue_wait_ms` for a slot, then returns
+//!   [`ServeError::Overloaded`]. Oversized structures are refused up front
+//!   ([`ServeError::TooLarge`]) — by the same budget the queue admits by.
+//! * **Graceful shutdown**: [`Server::shutdown`] (also on `Drop`) refuses
+//!   new work, drains the queue, and joins the workers; in-flight clients
+//!   get answers, late ones get [`ServeError::ShuttingDown`].
+//!
+//! Bit-identity is the design invariant, not an accident: the eval-only
+//! forward replays the training forward's exact op order, padding slots
+//! never contribute to real outputs, and cached f32 views equal the
+//! per-call downcasts elementwise — so N clients through a server return
+//! exactly what N sequential `predict_one` calls would, at either
+//! [`Precision`](crate::runtime::Precision). The integration suite
+//! (`rust/tests/integration_serving.rs`) asserts this with `to_bits()`.
+
+pub mod loadtest;
+pub mod prepared;
+pub mod queue;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::ServeConfig;
+use crate::coordinator::trainer::TrainedModel;
+use crate::data::batch::{BatchDims, GraphBatch};
+use crate::data::graph::radius_graph;
+use crate::data::structures::{AtomicStructure, DatasetId};
+use crate::model::kernels::thread_cap;
+use crate::runtime::Engine;
+use crate::session::Prediction;
+
+use prepared::PreparedModel;
+use queue::{CoalescingQueue, Job};
+
+// ---------------------------------------------------------------------------
+// errors
+// ---------------------------------------------------------------------------
+
+/// Typed refusals of the serving path. Everything a client can see that is
+/// not a [`Prediction`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// The bounded queue stayed full past the configured enqueue wait.
+    Overloaded { capacity: usize },
+    /// The structure exceeds the compiled batch budget even alone.
+    TooLarge { natoms: usize, nedges: usize, dims: BatchDims },
+    /// The server is draining; no new work is admitted.
+    ShuttingDown,
+    /// The model has no trained head for the request's task.
+    NoHead { model: String, task: DatasetId },
+    /// The engine failed while executing the batch (formatted cause).
+    Engine(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { capacity } => write!(
+                f,
+                "server overloaded: queue stayed at capacity ({capacity}) past the \
+                 enqueue wait"
+            ),
+            ServeError::TooLarge { natoms, nedges, dims } => write!(
+                f,
+                "structure ({natoms} atoms / {nedges} edges) exceeds the compiled \
+                 batch budget {dims:?}"
+            ),
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::NoHead { model, task } => {
+                write!(f, "model '{}' has no head for task {}", model, task.name())
+            }
+            ServeError::Engine(msg) => write!(f, "engine error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+// ---------------------------------------------------------------------------
+// stats
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Counters {
+    served: AtomicU64,
+    batches: AtomicU64,
+    rejected: AtomicU64,
+}
+
+/// Snapshot of a server's lifetime counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Requests answered with a [`Prediction`].
+    pub served: u64,
+    /// Padded-batch forwards executed.
+    pub batches: u64,
+    /// Requests refused before reaching a worker (overload / too large /
+    /// no head / shutting down).
+    pub rejected: u64,
+}
+
+impl ServeStats {
+    /// Mean structures per executed batch — the coalescing win.
+    pub fn avg_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// server
+// ---------------------------------------------------------------------------
+
+struct Shared {
+    queue: CoalescingQueue,
+    prepared: PreparedModel,
+    dims: BatchDims,
+    cutoff: f64,
+    wait: Duration,
+    counters: Counters,
+}
+
+/// An always-on inference server over one [`TrainedModel`]. Construct via
+/// [`Session::server`](crate::session::Session::server); call
+/// [`Server::predict`] from any number of client threads (`&self` — share
+/// behind an `Arc` or `std::thread::scope`).
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Server {
+    /// Prepare the model, spawn the worker pool, and start accepting work.
+    /// `cfg.workers == 0` sizes the pool by [`thread_cap`]
+    /// (`HYDRA_MTP_THREADS`, default 8).
+    pub fn start(
+        engine: Arc<Engine>,
+        model: TrainedModel,
+        cfg: ServeConfig,
+    ) -> anyhow::Result<Server> {
+        let dims = engine.manifest.config.batch_dims();
+        let cutoff = engine.manifest.config.cutoff;
+        let prepared = PreparedModel::new(engine, model);
+        // Downcast weights and build the typed encoder once, at model
+        // load — the per-request path only ever clones `Arc`s.
+        prepared.warm()?;
+        let shared = Arc::new(Shared {
+            queue: CoalescingQueue::new(cfg.queue_capacity),
+            prepared,
+            dims,
+            cutoff,
+            wait: Duration::from_millis(cfg.enqueue_wait_ms),
+            counters: Counters::default(),
+        });
+        let pool = if cfg.workers == 0 { thread_cap() } else { cfg.workers };
+        let mut workers = Vec::with_capacity(pool);
+        for i in 0..pool {
+            let sh = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("hydra-serve-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .map_err(|e| anyhow::anyhow!("failed to spawn serve worker {i}: {e}"))?;
+            workers.push(handle);
+        }
+        Ok(Server { shared, workers: Mutex::new(workers) })
+    }
+
+    /// Model being served.
+    pub fn model_name(&self) -> &str {
+        self.shared.prepared.name()
+    }
+
+    /// Predict one structure through the head of its source task. Blocks
+    /// until a worker answers (requests queued concurrently coalesce into
+    /// shared batches); returns a typed [`ServeError`] on refusal.
+    pub fn predict(&self, s: &AtomicStructure) -> Result<Prediction, ServeError> {
+        let sh = &*self.shared;
+        let refused = |c: &Counters, e: ServeError| {
+            c.rejected.fetch_add(1, Ordering::Relaxed);
+            Err(e)
+        };
+        if !sh.prepared.has_head(s.dataset) {
+            return refused(
+                &sh.counters,
+                ServeError::NoHead { model: sh.prepared.name().to_string(), task: s.dataset },
+            );
+        }
+        // Featurize on the client thread: graph construction parallelizes
+        // across clients instead of serializing on the workers.
+        let edges = radius_graph(s, sh.cutoff);
+        if !sh.dims.admits(s.natoms(), edges.len()) {
+            return refused(
+                &sh.counters,
+                ServeError::TooLarge { natoms: s.natoms(), nedges: edges.len(), dims: sh.dims },
+            );
+        }
+        let (tx, rx) = mpsc::channel();
+        let job = Job { task: s.dataset, species: s.species.clone(), edges, tx };
+        if let Err(e) = sh.queue.submit(job, sh.wait) {
+            return refused(&sh.counters, e);
+        }
+        match rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(ServeError::Engine(
+                "server worker terminated before replying".to_string(),
+            )),
+        }
+    }
+
+    /// Lifetime counters (served / batches / rejected).
+    pub fn stats(&self) -> ServeStats {
+        let c = &self.shared.counters;
+        ServeStats {
+            served: c.served.load(Ordering::Relaxed),
+            batches: c.batches.load(Ordering::Relaxed),
+            rejected: c.rejected.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Graceful shutdown: refuse new submissions, drain the queue, join
+    /// the workers. Idempotent; also runs on `Drop`.
+    pub fn shutdown(&self) {
+        self.shared.queue.shutdown();
+        let mut workers = self.workers.lock().expect("server worker list poisoned");
+        for h in workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One worker: recycled batch + workspace, loop until the queue drains
+/// after shutdown.
+fn worker_loop(sh: &Shared) {
+    let mut batch = GraphBatch::empty(sh.dims);
+    let mut ws = sh.prepared.workspace();
+    while let Some(jobs) = sh.queue.next_batch(&sh.dims) {
+        batch.clear();
+        let mut packed = true;
+        for j in &jobs {
+            // Cannot fail: the queue admits by the same node/edge budget
+            // the batch enforces. Guarded anyway — a packing bug must
+            // surface as an error to the clients, not a wrong answer.
+            if let Err(e) = batch.push_inference(&j.species, &j.edges) {
+                let msg = format!("batch pack failed: {e}");
+                for j in &jobs {
+                    let _ = j.tx.send(Err(ServeError::Engine(msg.clone())));
+                }
+                packed = false;
+                break;
+            }
+        }
+        if !packed {
+            continue;
+        }
+        match sh.prepared.run(jobs[0].task, &batch, &mut ws) {
+            Ok(()) => {
+                sh.counters.batches.fetch_add(1, Ordering::Relaxed);
+                sh.counters.served.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+                let ev = ws.energy_per_atom();
+                let fv = ws.forces();
+                let mut node_base = 0usize;
+                for (g, j) in jobs.iter().enumerate() {
+                    let n = j.species.len();
+                    let epa = ev[g] as f64;
+                    let mut fs = Vec::with_capacity(n);
+                    for k in 0..n {
+                        let row = (node_base + k) * 3;
+                        fs.push([fv[row] as f64, fv[row + 1] as f64, fv[row + 2] as f64]);
+                    }
+                    node_base += n;
+                    let _ = j.tx.send(Ok(Prediction {
+                        dataset: j.task,
+                        energy: epa * n as f64,
+                        energy_per_atom: epa,
+                        forces: fs,
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for j in &jobs {
+                    let _ = j.tx.send(Err(ServeError::Engine(msg.clone())));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! A [`TrainedModel`] made serving-ready: parameters are downcast into
+//! typed [`EncoderParams`] / [`BranchParams`] **once** at preparation time
+//! (with the per-precision f32 weight views cached via `cache_f32`), so the
+//! per-request path never re-marshals a `ParamSet` or re-downcasts a weight
+//! matrix. Head materializations are held in a small bounded LRU cache —
+//! the fix for the old `Predictor::full_cache`, which grew without bound
+//! across tasks.
+//!
+//! The f64 -> f32 -> f64 round trip of `cache_f32` is exact for values that
+//! started life as f32-representable training weights, and more to the
+//! point the cached views feed the *same* `kernels::downcast` products the
+//! uncached kernels would compute per call — so prepared-path outputs are
+//! bit-identical to the per-call path at either [`Precision`]
+//! (`cached_w32_kernels_match_uncached_bitwise` in `model/kernels.rs`
+//! asserts this at the kernel level, `rust/tests/integration_serving.rs`
+//! end to end).
+
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::trainer::TrainedModel;
+use crate::data::batch::GraphBatch;
+use crate::data::structures::DatasetId;
+use crate::model::egnn::{BranchParams, EgnnDims, EncoderParams, EvalWorkspace};
+use crate::model::params::ParamSet;
+use crate::runtime::Engine;
+
+/// Default bound on materialized heads kept warm per prepared model. Five
+/// built-in tasks plus headroom for registered extras; deliberately small —
+/// a head materialization is cheap to rebuild but not to hold in the
+/// hundreds.
+pub const DEFAULT_HEAD_CAP: usize = 8;
+
+/// One cached head: the typed native branch (fast path) or the assembled
+/// full `ParamSet` (pjrt fallback, consumed by `Engine::forward`).
+enum HeadEntry {
+    Native(Arc<BranchParams>),
+    Full(Arc<ParamSet>),
+}
+
+/// Tiny LRU keyed by task: `clock` stamps each hit; eviction drops the
+/// least-recently-used entry. Deterministic — no hashing, no timestamps.
+struct HeadCache {
+    cap: usize,
+    clock: u64,
+    entries: Vec<(DatasetId, u64, HeadEntry)>,
+}
+
+impl HeadCache {
+    fn touch(&mut self, d: DatasetId) -> Option<&HeadEntry> {
+        let i = self.entries.iter().position(|(t, _, _)| *t == d)?;
+        self.clock += 1;
+        self.entries[i].1 = self.clock;
+        Some(&self.entries[i].2)
+    }
+
+    fn insert(&mut self, d: DatasetId, entry: HeadEntry) {
+        if self.entries.len() >= self.cap {
+            let (i, _) = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (_, stamp, _))| *stamp)
+                .expect("cap >= 1 so a full cache is non-empty");
+            self.entries.swap_remove(i);
+        }
+        self.clock += 1;
+        self.entries.push((d, self.clock, entry));
+    }
+}
+
+/// Per-worker output buffers. Native workers carry a full [`EvalWorkspace`]
+/// (recycled activations, eval-only forward); non-native workers carry just
+/// the two output copies of an `Engine::forward` call.
+pub enum Workspace {
+    Native(Box<EvalWorkspace>),
+    Assembled { out_e: Vec<f32>, out_f: Vec<f32> },
+}
+
+impl Workspace {
+    /// Padded energy-per-atom output, `[G]`.
+    pub fn energy_per_atom(&self) -> &[f32] {
+        match self {
+            Workspace::Native(ws) => ws.energy_per_atom(),
+            Workspace::Assembled { out_e, .. } => out_e,
+        }
+    }
+
+    /// Padded forces output, `[N,3]` row-major.
+    pub fn forces(&self) -> &[f32] {
+        match self {
+            Workspace::Native(ws) => ws.forces(),
+            Workspace::Assembled { out_f, .. } => out_f,
+        }
+    }
+}
+
+/// A trained model bound to an engine with every per-request preparation
+/// cost paid up front. Shared (behind `Arc`) by all server workers; the
+/// only lock on the hot path is the head-cache mutex, held just long enough
+/// to clone an `Arc`.
+pub struct PreparedModel {
+    engine: Arc<Engine>,
+    model: TrainedModel,
+    dims: EgnnDims,
+    /// Whether the fast typed path applies (native backend).
+    native: bool,
+    /// Typed encoder, f32 views cached. Built on first use (or eagerly by
+    /// [`PreparedModel::warm`]); stays `None` on non-native backends,
+    /// which marshal from the assembled `ParamSet` instead.
+    encoder: Mutex<Option<Arc<EncoderParams>>>,
+    heads: Mutex<HeadCache>,
+}
+
+impl PreparedModel {
+    pub fn new(engine: Arc<Engine>, model: TrainedModel) -> PreparedModel {
+        Self::with_head_cap(engine, model, DEFAULT_HEAD_CAP)
+    }
+
+    /// As [`PreparedModel::new`] with an explicit head-cache bound
+    /// (tests exercise eviction with tiny caps).
+    pub fn with_head_cap(engine: Arc<Engine>, model: TrainedModel, cap: usize) -> PreparedModel {
+        let dims = EgnnDims::from_config_with(&engine.manifest.config, engine.precision());
+        let native = engine.is_native();
+        PreparedModel {
+            engine,
+            model,
+            dims,
+            native,
+            encoder: Mutex::new(None),
+            heads: Mutex::new(HeadCache { cap: cap.max(1), clock: 0, entries: Vec::new() }),
+        }
+    }
+
+    /// Pay every startup cost now instead of on the first request: build
+    /// the typed encoder and cache its f32 views. No-op on non-native
+    /// backends and on repeat calls. `Server::start` calls this so the
+    /// downcast happens exactly once, at model load.
+    pub fn warm(&self) -> anyhow::Result<()> {
+        if self.native {
+            self.encoder()?;
+        }
+        Ok(())
+    }
+
+    fn encoder(&self) -> anyhow::Result<Arc<EncoderParams>> {
+        let mut slot = self.encoder.lock().expect("encoder cache poisoned");
+        if let Some(enc) = &*slot {
+            return Ok(Arc::clone(enc));
+        }
+        let mut enc = EncoderParams::from_set(&self.dims, &self.model.encoder)?;
+        enc.cache_f32();
+        let enc = Arc::new(enc);
+        *slot = Some(Arc::clone(&enc));
+        Ok(enc)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.model.name
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    pub fn dims(&self) -> &EgnnDims {
+        &self.dims
+    }
+
+    /// Whether the model has a head that serves `d`.
+    pub fn has_head(&self, d: DatasetId) -> bool {
+        self.model.try_branch_for(d).is_some()
+    }
+
+    /// Heads currently materialized (bounded by the cap; for tests/stats).
+    pub fn cached_heads(&self) -> usize {
+        self.heads.lock().expect("head cache poisoned").entries.len()
+    }
+
+    /// A fresh per-worker workspace matching the engine's backend.
+    pub fn workspace(&self) -> Workspace {
+        if self.native {
+            Workspace::Native(Box::new(EvalWorkspace::new(&self.dims)))
+        } else {
+            Workspace::Assembled {
+                out_e: vec![0.0; self.dims.g],
+                out_f: vec![0.0; self.dims.n * 3],
+            }
+        }
+    }
+
+    fn native_head(&self, d: DatasetId) -> anyhow::Result<Arc<BranchParams>> {
+        let mut cache = self.heads.lock().expect("head cache poisoned");
+        if let Some(HeadEntry::Native(br)) = cache.touch(d) {
+            return Ok(Arc::clone(br));
+        }
+        let set = self.model.try_branch_for(d).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model '{}' has no trained head for task {}",
+                self.model.name,
+                d.name()
+            )
+        })?;
+        let mut br = BranchParams::from_set(&self.dims, set)?;
+        br.cache_f32();
+        let br = Arc::new(br);
+        cache.insert(d, HeadEntry::Native(Arc::clone(&br)));
+        Ok(br)
+    }
+
+    fn full_head(&self, d: DatasetId) -> anyhow::Result<Arc<ParamSet>> {
+        let mut cache = self.heads.lock().expect("head cache poisoned");
+        if let Some(HeadEntry::Full(full)) = cache.touch(d) {
+            return Ok(Arc::clone(full));
+        }
+        let full = Arc::new(self.model.full_params(&self.engine, d)?);
+        cache.insert(d, HeadEntry::Full(Arc::clone(&full)));
+        Ok(full)
+    }
+
+    /// Run one padded batch through head `d` into `ws`. Native engines take
+    /// the eval-only forward against the cached typed parameters (and count
+    /// the execution); others fall back to `Engine::forward` on the cached
+    /// assembled set. Outputs land in `ws.energy_per_atom()` / `ws.forces()`
+    /// bit-identical to the `Engine::forward` path.
+    pub fn run(&self, d: DatasetId, batch: &GraphBatch, ws: &mut Workspace) -> anyhow::Result<()> {
+        match ws {
+            Workspace::Native(ews) => {
+                let enc = self.encoder()?;
+                let br = self.native_head(d)?;
+                ews.run(&self.dims, &enc, &br, batch)?;
+                self.engine.record_execution();
+            }
+            Workspace::Assembled { out_e, out_f } => {
+                let full = self.full_head(d)?;
+                let (energy, forces) = self.engine.forward(&full, batch)?;
+                out_e.clear();
+                out_e.extend_from_slice(energy.as_f32());
+                out_f.clear();
+                out_f.extend_from_slice(forces.as_f32());
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,268 @@
+//! The coalescing request queue at the heart of the serving subsystem.
+//!
+//! Clients enqueue one featurized structure each ([`Job`]); workers drain
+//! the queue with [`CoalescingQueue::next_batch`], which greedily packs as
+//! many *same-task* jobs as fit the compiled node/edge budget into one
+//! batch. Admission is by budget, not by request count: a worker wakes up
+//! for one job and leaves with everything queued behind it that shares a
+//! head and still fits. The queue is bounded; a full queue applies
+//! backpressure to `submit` (a bounded wait, then a typed
+//! [`ServeError::Overloaded`](crate::serve::ServeError::Overloaded)).
+//!
+//! Shutdown is drain-then-stop: after [`CoalescingQueue::shutdown`], new
+//! submissions are refused but `next_batch` keeps handing out batches until
+//! the queue is empty, then returns `None` so workers exit.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::data::batch::BatchDims;
+use crate::data::graph::Edge;
+use crate::data::structures::DatasetId;
+use crate::serve::ServeError;
+use crate::session::Prediction;
+
+/// One enqueued inference request: a featurized structure (the client
+/// thread runs `radius_graph` itself, so graph construction happens in
+/// parallel across clients) plus the channel its [`Prediction`] is sent
+/// back on.
+pub struct Job {
+    /// Task whose head serves this request.
+    pub task: DatasetId,
+    pub species: Vec<u8>,
+    pub edges: Vec<Edge>,
+    /// Completion channel; the worker sends exactly one result.
+    pub tx: mpsc::Sender<Result<Prediction, ServeError>>,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// Bounded MPMC queue that coalesces same-task jobs into budget-limited
+/// batches. See the module docs for the protocol.
+pub struct CoalescingQueue {
+    state: Mutex<QueueState>,
+    /// Signalled when a job arrives or shutdown starts (wakes workers).
+    work: Condvar,
+    /// Signalled when queue slots free up (wakes blocked submitters).
+    space: Condvar,
+    capacity: usize,
+}
+
+impl CoalescingQueue {
+    pub fn new(capacity: usize) -> CoalescingQueue {
+        CoalescingQueue {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Enqueue `job`, waiting up to `wait` for a slot when the queue is
+    /// full. Returns [`ServeError::Overloaded`] if no slot frees up in time
+    /// and [`ServeError::ShuttingDown`] once shutdown has begun.
+    pub fn submit(&self, job: Job, wait: Duration) -> Result<(), ServeError> {
+        let deadline = Instant::now() + wait;
+        let mut st = self.state.lock().expect("serve queue poisoned");
+        loop {
+            if st.shutdown {
+                return Err(ServeError::ShuttingDown);
+            }
+            if st.jobs.len() < self.capacity {
+                st.jobs.push_back(job);
+                self.work.notify_one();
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(ServeError::Overloaded { capacity: self.capacity });
+            }
+            let (guard, _timeout) = self
+                .space
+                .wait_timeout(st, deadline - now)
+                .expect("serve queue poisoned");
+            st = guard;
+        }
+    }
+
+    /// Block until work is available, then return one coalesced batch:
+    /// the oldest job plus every queued job behind it with the *same task*
+    /// that still fits the node/edge budget. At most `max_graphs - 1`
+    /// structures are taken (the last graph slot stays reserved for
+    /// padding, so real graphs never absorb padding-node contributions and
+    /// batched outputs stay bit-identical to the one-at-a-time path).
+    /// Returns `None` when the queue has shut down *and* drained.
+    pub fn next_batch(&self, dims: &BatchDims) -> Option<Vec<Job>> {
+        let cap = if dims.max_graphs > 1 { dims.max_graphs - 1 } else { 1 };
+        let mut st = self.state.lock().expect("serve queue poisoned");
+        loop {
+            if let Some(first) = st.jobs.pop_front() {
+                let task = first.task;
+                let mut nodes = first.species.len();
+                let mut edges = first.edges.len();
+                let mut picked = vec![first];
+                let mut i = 0;
+                while i < st.jobs.len() && picked.len() < cap {
+                    let j = &st.jobs[i];
+                    if j.task == task
+                        && nodes + j.species.len() <= dims.max_nodes
+                        && edges + j.edges.len() <= dims.max_edges
+                    {
+                        let j = st.jobs.remove(i).expect("index checked above");
+                        nodes += j.species.len();
+                        edges += j.edges.len();
+                        picked.push(j);
+                    } else {
+                        i += 1;
+                    }
+                }
+                self.space.notify_all();
+                return Some(picked);
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self.work.wait(st).expect("serve queue poisoned");
+        }
+    }
+
+    /// Begin shutdown: refuse new submissions, wake every waiter. Queued
+    /// jobs are still drained by `next_batch`.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().expect("serve queue poisoned");
+        st.shutdown = true;
+        self.work.notify_all();
+        self.space.notify_all();
+        drop(st);
+    }
+
+    /// Jobs currently queued (snapshot; for stats/tests).
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("serve queue poisoned").jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> BatchDims {
+        BatchDims { max_nodes: 10, max_edges: 20, max_graphs: 4 }
+    }
+
+    /// A job with `natoms` dummy nodes and `nedges` dummy edges.
+    fn job(
+        task: DatasetId,
+        natoms: usize,
+        nedges: usize,
+    ) -> (Job, mpsc::Receiver<Result<Prediction, ServeError>>) {
+        let (tx, rx) = mpsc::channel();
+        let edge = Edge { src: 0, dst: 0, rel_hat: [0.0, 0.0, 1.0], dist: 1.0 };
+        let j = Job { task, species: vec![1; natoms], edges: vec![edge; nedges], tx };
+        (j, rx)
+    }
+
+    #[test]
+    fn coalesces_same_task_jobs_within_budget() {
+        let q = CoalescingQueue::new(16);
+        let wait = Duration::from_millis(10);
+        for _ in 0..3 {
+            let (j, _rx) = job(DatasetId::Ani1x, 3, 5);
+            q.submit(j, wait).unwrap();
+        }
+        let batch = q.next_batch(&dims()).unwrap();
+        // 3+3+3 nodes <= 10 and 5+5+5 edges <= 20 and 3 <= max_graphs-1.
+        assert_eq!(batch.len(), 3);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn node_budget_splits_batches() {
+        let q = CoalescingQueue::new(16);
+        let wait = Duration::from_millis(10);
+        for _ in 0..3 {
+            let (j, _rx) = job(DatasetId::Ani1x, 4, 2);
+            q.submit(j, wait).unwrap();
+        }
+        // 4+4 <= 10 but 4+4+4 > 10: two jobs, then one.
+        let d = dims();
+        assert_eq!(q.next_batch(&d).unwrap().len(), 2);
+        assert_eq!(q.next_batch(&d).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn graph_slot_cap_reserves_the_padding_slot() {
+        let q = CoalescingQueue::new(16);
+        let wait = Duration::from_millis(10);
+        for _ in 0..5 {
+            let (j, _rx) = job(DatasetId::Ani1x, 1, 1);
+            q.submit(j, wait).unwrap();
+        }
+        // Everything fits the node/edge budget, but max_graphs = 4 caps a
+        // batch at 3 structures (slot G-1 stays padding).
+        let d = dims();
+        assert_eq!(q.next_batch(&d).unwrap().len(), 3);
+        assert_eq!(q.next_batch(&d).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn mixed_tasks_batch_separately_with_skip_ahead() {
+        let q = CoalescingQueue::new(16);
+        let wait = Duration::from_millis(10);
+        let order = [DatasetId::Ani1x, DatasetId::Qm7x, DatasetId::Ani1x];
+        for &t in &order {
+            let (j, _rx) = job(t, 2, 2);
+            q.submit(j, wait).unwrap();
+        }
+        let d = dims();
+        // The two Ani1x jobs coalesce around the interleaved Qm7x one.
+        let b1 = q.next_batch(&d).unwrap();
+        assert_eq!(b1.len(), 2);
+        assert!(b1.iter().all(|j| j.task == DatasetId::Ani1x));
+        let b2 = q.next_batch(&d).unwrap();
+        assert_eq!(b2.len(), 1);
+        assert_eq!(b2[0].task, DatasetId::Qm7x);
+    }
+
+    #[test]
+    fn full_queue_overloads_after_bounded_wait() {
+        let q = CoalescingQueue::new(2);
+        let wait = Duration::from_millis(5);
+        let (j1, _r1) = job(DatasetId::Ani1x, 1, 1);
+        let (j2, _r2) = job(DatasetId::Ani1x, 1, 1);
+        q.submit(j1, wait).unwrap();
+        q.submit(j2, wait).unwrap();
+        // No workers draining: the third submit must time out.
+        let (j3, _r3) = job(DatasetId::Ani1x, 1, 1);
+        match q.submit(j3, wait) {
+            Err(ServeError::Overloaded { capacity }) => assert_eq!(capacity, 2),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_then_stops() {
+        let q = CoalescingQueue::new(16);
+        let wait = Duration::from_millis(10);
+        let (j, _rx) = job(DatasetId::Ani1x, 1, 1);
+        q.submit(j, wait).unwrap();
+        q.shutdown();
+        // Queued work is still handed out...
+        let d = dims();
+        assert_eq!(q.next_batch(&d).unwrap().len(), 1);
+        // ...then workers are released.
+        assert!(q.next_batch(&d).is_none());
+        // And new submissions are refused.
+        let (j2, _r2) = job(DatasetId::Ani1x, 1, 1);
+        assert!(matches!(q.submit(j2, wait), Err(ServeError::ShuttingDown)));
+    }
+}

@@ -17,14 +17,14 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::config::{RunConfig, TrainMode};
+use crate::config::{RunConfig, ServeConfig, TrainMode};
 use crate::coordinator::evaluate::evaluate_model;
 use crate::coordinator::trainer::{DataBundle, TrainOutcome, TrainedModel, Trainer};
 use crate::data::batch::{BatchDims, GraphBatch};
 use crate::data::graph::radius_graph;
 use crate::data::structures::{AtomicStructure, DatasetId};
-use crate::model::params::ParamSet;
 use crate::runtime::Engine;
+use crate::serve::prepared::{PreparedModel, Workspace, DEFAULT_HEAD_CAP};
 use crate::tasks::TaskRegistry;
 
 // ---------------------------------------------------------------------------
@@ -328,6 +328,25 @@ impl Session {
         Predictor::new(Arc::clone(&self.engine), model.clone())
     }
 
+    /// Start an always-on batched-inference server over `model`: a
+    /// persistent worker pool behind a coalescing request queue, tuned by
+    /// `config.serve` (see [`crate::serve`] for the protocol and
+    /// guarantees). Concurrent single-structure requests coalesce into
+    /// shared padded batches with outputs bit-identical to sequential
+    /// [`Predictor::predict_one`] calls.
+    pub fn server(&self, model: &TrainedModel) -> anyhow::Result<crate::serve::Server> {
+        self.server_with(model, self.config.serve)
+    }
+
+    /// As [`Session::server`] with explicit serving knobs.
+    pub fn server_with(
+        &self,
+        model: &TrainedModel,
+        cfg: ServeConfig,
+    ) -> anyhow::Result<crate::serve::Server> {
+        crate::serve::Server::start(Arc::clone(&self.engine), model.clone(), cfg)
+    }
+
     /// Up to `n` held-out test structures per task, concatenated in head
     /// order — handy fresh inputs for [`Predictor`].
     pub fn test_samples(&mut self, n: usize) -> anyhow::Result<Vec<AtomicStructure>> {
@@ -367,27 +386,49 @@ pub struct Prediction {
 /// correct MTL head, auto-packs/pads groups into the compiled batch dims,
 /// and unpads the outputs back into per-structure [`Prediction`]s. Replaces
 /// the seed's manual `BatchBuilder` + `full_params` + `engine.forward`
-/// plumbing. The single packing batch is recycled via `GraphBatch::clear`
-/// and marshalled in place (`GraphBatch::field_literal`), so serving pays
-/// no per-call buffer clones.
+/// plumbing.
+///
+/// Execution goes through the same [`PreparedModel`] the serving subsystem
+/// uses: parameters are marshalled into typed structs once (f32 weight
+/// views cached at the same time), activations live in one recycled
+/// workspace, and the packing batch is recycled via `GraphBatch::clear` —
+/// so repeated calls pay no per-call parameter marshal, weight downcast,
+/// or buffer allocation. Materialized heads are held in a small bounded
+/// LRU (see [`Predictor::with_head_cap`]), not an ever-growing map.
 pub struct Predictor {
-    engine: Arc<Engine>,
-    model: TrainedModel,
+    prepared: PreparedModel,
     dims: BatchDims,
     cutoff: f64,
-    /// Assembled full parameter sets, one per head actually used.
-    full_cache: BTreeMap<DatasetId, ParamSet>,
+    /// Recycled packing batch (cleared, never reallocated).
+    batch: GraphBatch,
+    /// Recycled activation workspace / output buffers.
+    ws: Workspace,
 }
 
 impl Predictor {
     pub fn new(engine: Arc<Engine>, model: TrainedModel) -> Predictor {
+        Self::with_head_cap(engine, model, DEFAULT_HEAD_CAP)
+    }
+
+    /// As [`Predictor::new`] with an explicit bound on cached head
+    /// materializations (least-recently-used head evicted beyond `cap`).
+    pub fn with_head_cap(engine: Arc<Engine>, model: TrainedModel, cap: usize) -> Predictor {
         let dims = engine.manifest.config.batch_dims();
         let cutoff = engine.manifest.config.cutoff;
-        Predictor { engine, model, dims, cutoff, full_cache: BTreeMap::new() }
+        let prepared = PreparedModel::with_head_cap(engine, model, cap);
+        let batch = GraphBatch::empty(dims);
+        let ws = prepared.workspace();
+        Predictor { prepared, dims, cutoff, batch, ws }
     }
 
     pub fn model_name(&self) -> &str {
-        &self.model.name
+        self.prepared.name()
+    }
+
+    /// Heads currently materialized (bounded; see
+    /// [`Predictor::with_head_cap`]).
+    pub fn cached_heads(&self) -> usize {
+        self.prepared.cached_heads()
     }
 
     /// Predict energies and forces for every structure, each through the
@@ -427,12 +468,12 @@ impl Predictor {
         out: &mut [Option<Prediction>],
     ) -> anyhow::Result<()> {
         anyhow::ensure!(
-            self.model.try_branch_for(d).is_some(),
+            self.prepared.has_head(d),
             "model '{}' has no head for task {}",
-            self.model.name,
+            self.prepared.name(),
             d.name()
         );
-        let mut batch = GraphBatch::empty(self.dims);
+        self.batch.clear();
         let mut slots: Vec<usize> = Vec::new();
         for &i in idxs {
             let s = &structures[i];
@@ -445,41 +486,34 @@ impl Predictor {
                 edges.len(),
                 self.dims
             );
-            if !batch.fits(s.natoms(), edges.len()) {
-                self.flush(d, &batch, &slots, structures, out)?;
-                batch.clear();
+            if !self.batch.fits(s.natoms(), edges.len()) {
+                self.flush(d, &slots, structures, out)?;
+                self.batch.clear();
                 slots.clear();
             }
-            batch
+            self.batch
                 .push(s, &edges)
                 .map_err(|e| anyhow::anyhow!("batch pack failed: {e}"))?;
             slots.push(i);
         }
         if !slots.is_empty() {
-            self.flush(d, &batch, &slots, structures, out)?;
+            self.flush(d, &slots, structures, out)?;
         }
         Ok(())
     }
 
-    /// Run one padded batch through the engine and scatter the unpadded
-    /// outputs back to their structures.
+    /// Run the recycled packed batch through the prepared model and scatter
+    /// the unpadded outputs back to their structures.
     fn flush(
         &mut self,
         d: DatasetId,
-        batch: &GraphBatch,
         slots: &[usize],
         structures: &[AtomicStructure],
         out: &mut [Option<Prediction>],
     ) -> anyhow::Result<()> {
-        let engine = Arc::clone(&self.engine);
-        if !self.full_cache.contains_key(&d) {
-            let assembled = self.model.full_params(&engine, d)?;
-            self.full_cache.insert(d, assembled);
-        }
-        let full = self.full_cache.get(&d).expect("inserted above");
-        let (energy, forces) = engine.forward(full, batch)?;
-        let ev = energy.as_f32();
-        let fv = forces.as_f32();
+        self.prepared.run(d, &self.batch, &mut self.ws)?;
+        let ev = self.ws.energy_per_atom();
+        let fv = self.ws.forces();
         let mut node_base = 0usize;
         for (g, &i) in slots.iter().enumerate() {
             let s = &structures[i];

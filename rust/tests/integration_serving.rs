@@ -1,0 +1,413 @@
+//! Integration: the serving subsystem (`Session::server` / `serve::*`).
+//!
+//! The load-bearing guarantee is bit-identity: N concurrent clients
+//! through the coalescing server must receive exactly — to the last bit —
+//! what N sequential `Predictor::predict_one` calls would return, at
+//! either `Precision`. On top of that: the eval-only forward matches the
+//! training-path forward bitwise (cached and uncached f32 views), the
+//! admission budget refuses oversized structures with typed errors,
+//! mixed task heads share one queue, shutdown refuses late work, and the
+//! head cache stays bounded under eviction.
+//!
+//! Engines are pinned per precision via `Engine::native_with`, so these
+//! tests are env-independent (`HYDRA_MTP_PRECISION` does not reach them).
+
+use std::sync::Arc;
+
+use hydra_mtp::config::ServeConfig;
+use hydra_mtp::data::batch::BatchBuilder;
+use hydra_mtp::data::generators::{DatasetGenerator, GeneratorConfig};
+use hydra_mtp::data::structures::{AtomicStructure, DatasetId};
+use hydra_mtp::model::egnn::{BranchParams, EgnnDims, EncoderParams, EvalWorkspace};
+use hydra_mtp::model::params::ParamSet;
+use hydra_mtp::runtime::{Engine, ManifestConfig, Precision};
+use hydra_mtp::serve::loadtest::synthetic_model;
+use hydra_mtp::serve::{ServeError, Server};
+use hydra_mtp::session::{Prediction, Predictor};
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+/// Small dims: multi-graph batches, both EGNN layers, fast in debug.
+fn small_config() -> ManifestConfig {
+    let mut c = ManifestConfig::default_native();
+    c.max_nodes = 64;
+    c.max_edges = 512;
+    c.max_graphs = 8;
+    c.hidden = 32;
+    c.num_layers = 2;
+    c.num_rbf = 8;
+    c.head_hidden = 32;
+    c
+}
+
+fn engine(p: Precision) -> Arc<Engine> {
+    Arc::new(Engine::native_with(small_config(), p))
+}
+
+fn serve_cfg(workers: usize) -> ServeConfig {
+    ServeConfig {
+        workers,
+        queue_capacity: 64,
+        enqueue_wait_ms: 5_000,
+        latency_budget_ms: 1_000.0,
+    }
+}
+
+/// `n` structures per task, interleaved across tasks in round-robin order
+/// (so consecutive requests mix heads).
+fn structures(tasks: &[DatasetId], n: usize) -> Vec<AtomicStructure> {
+    let cfg = GeneratorConfig { max_atoms: 8, ..Default::default() };
+    let per: Vec<Vec<AtomicStructure>> = tasks
+        .iter()
+        .map(|&d| DatasetGenerator::new(d, 42, cfg.clone()).take(n))
+        .collect();
+    let mut out = Vec::with_capacity(tasks.len() * n);
+    for i in 0..n {
+        for s in &per {
+            out.push(s[i].clone());
+        }
+    }
+    out
+}
+
+fn assert_prediction_bits_eq(a: &Prediction, b: &Prediction, what: &str) {
+    assert_eq!(a.dataset, b.dataset, "{what}: dataset");
+    assert_eq!(
+        a.energy.to_bits(),
+        b.energy.to_bits(),
+        "{what}: energy {} vs {}",
+        a.energy,
+        b.energy
+    );
+    assert_eq!(
+        a.energy_per_atom.to_bits(),
+        b.energy_per_atom.to_bits(),
+        "{what}: energy/atom"
+    );
+    assert_eq!(a.forces.len(), b.forces.len(), "{what}: natoms");
+    for (i, (fa, fb)) in a.forces.iter().zip(&b.forces).enumerate() {
+        for k in 0..3 {
+            assert_eq!(
+                fa[k].to_bits(),
+                fb[k].to_bits(),
+                "{what}: force[{i}][{k}]: {} vs {}",
+                fa[k],
+                fb[k]
+            );
+        }
+    }
+}
+
+/// Run every structure through `clients` concurrent threads against the
+/// server (round-robin split), returning predictions in input order.
+fn predict_concurrently(
+    server: &Server,
+    structures: &[AtomicStructure],
+    clients: usize,
+) -> Vec<Prediction> {
+    let mut out: Vec<Option<Prediction>> = vec![None; structures.len()];
+    let results: Vec<Vec<(usize, Prediction)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || {
+                    structures
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| i % clients == c)
+                        .map(|(i, s)| (i, server.predict(s).expect("request served")))
+                        .collect()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client panicked")).collect()
+    });
+    for r in results {
+        for (i, p) in r {
+            out[i] = Some(p);
+        }
+    }
+    out.into_iter().map(|p| p.expect("every slot answered")).collect()
+}
+
+// ---------------------------------------------------------------------------
+// bit-identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coalesced_server_matches_sequential_predict_one_bitwise() {
+    // The tentpole guarantee, at both precisions: concurrent clients
+    // through the coalescing queue == one-by-one predict_one, every bit.
+    for p in [Precision::F64, Precision::MixedF32] {
+        let e = engine(p);
+        let tasks = [DatasetId::Ani1x, DatasetId::Qm7x];
+        let model = synthetic_model(&e, &tasks, 7);
+        let ss = structures(&tasks, 8); // 16 requests, interleaved tasks
+
+        let mut seq = Predictor::new(Arc::clone(&e), model.clone());
+        let expected: Vec<Prediction> =
+            ss.iter().map(|s| seq.predict_one(s).unwrap()).collect();
+
+        // One worker, one client per request: while the worker executes a
+        // batch the remaining clients pile into the queue, so coalescing
+        // must kick in.
+        let server = Server::start(Arc::clone(&e), model, serve_cfg(1)).unwrap();
+        let got = predict_concurrently(&server, &ss, ss.len());
+        let stats = server.stats();
+        server.shutdown();
+
+        assert_eq!(stats.served, ss.len() as u64, "{}: all served", p.name());
+        assert!(
+            stats.batches < ss.len() as u64,
+            "{}: requests coalesced ({} batches for {} requests)",
+            p.name(),
+            stats.batches,
+            ss.len()
+        );
+        for (i, (a, b)) in expected.iter().zip(&got).enumerate() {
+            assert_prediction_bits_eq(a, b, &format!("{} request {i}", p.name()));
+        }
+    }
+}
+
+#[test]
+fn eval_workspace_matches_engine_forward_bitwise() {
+    // The eval-only forward (serving path) vs the training-path forward
+    // behind Engine::forward — cached f32 views and uncached — all bitwise.
+    for p in [Precision::F64, Precision::MixedF32] {
+        let e = engine(p);
+        let mut g = DatasetGenerator::new(
+            DatasetId::Qm7x,
+            77,
+            GeneratorConfig { max_atoms: 6, ..Default::default() },
+        );
+        let samples = g.take(4);
+        let batch = BatchBuilder::build_all(
+            e.manifest.config.batch_dims(),
+            e.manifest.config.cutoff,
+            &samples,
+        )
+        .into_iter()
+        .next()
+        .expect("at least one batch");
+        let full = ParamSet::init(&e.manifest.params, 5);
+        let (energy, forces) = e.forward(&full, &batch).unwrap();
+        let (ev, fv) = (energy.as_f32(), forces.as_f32());
+
+        let dims = EgnnDims::from_config_with(&e.manifest.config, p);
+        let mut enc = EncoderParams::from_set(&dims, &full.subset("encoder.")).unwrap();
+        let mut br = BranchParams::from_set(&dims, &full.subset("branch.")).unwrap();
+        for cached in [false, true] {
+            if cached {
+                enc.cache_f32();
+                br.cache_f32();
+            }
+            let mut ws = EvalWorkspace::new(&dims);
+            ws.run(&dims, &enc, &br, &batch).unwrap();
+            let tag = if cached { "cached" } else { "uncached" };
+            for (i, (a, b)) in ev.iter().zip(ws.energy_per_atom()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{} {tag}: e_pa[{i}]: {a} vs {b}",
+                    p.name()
+                );
+            }
+            for (i, (a, b)) in fv.iter().zip(ws.forces()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{} {tag}: force[{i}]: {a} vs {b}",
+                    p.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn predictor_cached_views_match_manual_engine_forward() {
+    // The refactored Predictor (prepared params, cached f32 views, recycled
+    // workspace) must reproduce the manual full_params + engine.forward
+    // chain it replaced — per structure, both precisions.
+    for p in [Precision::F64, Precision::MixedF32] {
+        let e = engine(p);
+        let tasks = [DatasetId::Ani1x];
+        let model = synthetic_model(&e, &tasks, 11);
+        let ss = structures(&tasks, 5);
+
+        let full = model.full_params(&e, DatasetId::Ani1x).unwrap();
+        let mut predictor = Predictor::new(Arc::clone(&e), model.clone());
+        for (i, s) in ss.iter().enumerate() {
+            let batch = BatchBuilder::build_all(
+                e.manifest.config.batch_dims(),
+                e.manifest.config.cutoff,
+                std::slice::from_ref(s),
+            )
+            .into_iter()
+            .next()
+            .unwrap();
+            let (energy, forces) = e.forward(&full, &batch).unwrap();
+            let epa = energy.as_f32()[0] as f64;
+            let got = predictor.predict_one(s).unwrap();
+            assert_eq!(
+                got.energy_per_atom.to_bits(),
+                epa.to_bits(),
+                "{} structure {i}: e/atom",
+                p.name()
+            );
+            let fv = forces.as_f32();
+            for (k, f) in got.forces.iter().enumerate() {
+                for x in 0..3 {
+                    assert_eq!(
+                        f[x].to_bits(),
+                        (fv[k * 3 + x] as f64).to_bits(),
+                        "{} structure {i}: force[{k}][{x}]",
+                        p.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// admission budget + typed refusals
+// ---------------------------------------------------------------------------
+
+#[test]
+fn oversized_and_unserved_requests_are_refused_typed() {
+    let e = engine(Precision::F64);
+    let tasks = [DatasetId::Ani1x];
+    let model = synthetic_model(&e, &tasks, 3);
+    let server = Server::start(Arc::clone(&e), model.clone(), serve_cfg(1)).unwrap();
+
+    // A structure over the node budget even alone: typed TooLarge, counted
+    // as a rejection, and the queue/workers never see it. Atoms sit far
+    // apart so the edge list stays empty.
+    let n = small_config().max_nodes + 1;
+    let big = AtomicStructure {
+        species: vec![1; n],
+        positions: (0..n).map(|i| [i as f64 * 100.0, 0.0, 0.0]).collect(),
+        energy: 0.0,
+        forces: vec![[0.0; 3]; n],
+        dataset: DatasetId::Ani1x,
+    };
+    match server.predict(&big) {
+        Err(ServeError::TooLarge { natoms, nedges, .. }) => {
+            assert_eq!(natoms, n);
+            assert_eq!(nedges, 0);
+        }
+        other => panic!("expected TooLarge, got {other:?}"),
+    }
+
+    // No head for the task: typed NoHead, before featurization.
+    let mut g = DatasetGenerator::new(
+        DatasetId::Qm7x,
+        9,
+        GeneratorConfig { max_atoms: 6, ..Default::default() },
+    );
+    let unserved = g.take(1).pop().unwrap();
+    match server.predict(&unserved) {
+        Err(ServeError::NoHead { model: m, task }) => {
+            assert_eq!(m, model.name);
+            assert_eq!(task, DatasetId::Qm7x);
+        }
+        other => panic!("expected NoHead, got {other:?}"),
+    }
+    assert_eq!(server.stats().rejected, 2);
+    assert_eq!(server.stats().served, 0);
+    server.shutdown();
+
+    // The Predictor path refuses the same structure with its (stable)
+    // error string, and an empty predict is an empty vec, not an error.
+    let mut predictor = Predictor::new(Arc::clone(&e), model);
+    let err = predictor.predict_one(&big).unwrap_err();
+    assert!(
+        format!("{err}").contains("exceeds the compiled batch budget"),
+        "unexpected error: {err}"
+    );
+    assert!(predictor.predict(&[]).unwrap().is_empty());
+}
+
+#[test]
+fn mixed_task_heads_share_one_queue_and_coalesce_per_task() {
+    // Interleaved requests for three different heads through one server:
+    // every request routed to its own head, outputs bitwise equal to the
+    // sequential baseline, and coalescing still kicks in (same-task
+    // requests skip ahead past other-task neighbours in the queue).
+    let e = engine(Precision::MixedF32);
+    let tasks = [DatasetId::Ani1x, DatasetId::Qm7x, DatasetId::Transition1x];
+    let model = synthetic_model(&e, &tasks, 19);
+    let ss = structures(&tasks, 6); // 18 requests, strict task interleave
+
+    let mut seq = Predictor::new(Arc::clone(&e), model.clone());
+    let expected: Vec<Prediction> =
+        ss.iter().map(|s| seq.predict_one(s).unwrap()).collect();
+
+    let server = Server::start(Arc::clone(&e), model, serve_cfg(2)).unwrap();
+    let got = predict_concurrently(&server, &ss, 6);
+    let stats = server.stats();
+    server.shutdown();
+
+    assert_eq!(stats.served, ss.len() as u64);
+    for ((s, a), b) in ss.iter().zip(&expected).zip(&got) {
+        assert_eq!(b.dataset, s.dataset, "routed to the structure's own head");
+        assert_prediction_bits_eq(a, b, "mixed-head request");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shutdown + bounded head cache
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shutdown_answers_inflight_then_refuses_new_work() {
+    let e = engine(Precision::F64);
+    let tasks = [DatasetId::Ani1x];
+    let model = synthetic_model(&e, &tasks, 3);
+    let ss = structures(&tasks, 6);
+
+    let server = Server::start(Arc::clone(&e), model, serve_cfg(1)).unwrap();
+    // Every in-flight request is answered...
+    let got = predict_concurrently(&server, &ss, 3);
+    assert_eq!(got.len(), ss.len());
+    server.shutdown();
+    // ...and post-shutdown submissions get the typed refusal. (Drain
+    // semantics — queued jobs answered between shutdown() and worker exit —
+    // are pinned down in serve::queue's unit tests.)
+    match server.predict(&ss[0]) {
+        Err(ServeError::ShuttingDown) => {}
+        other => panic!("expected ShuttingDown, got {other:?}"),
+    }
+    // Idempotent.
+    server.shutdown();
+}
+
+#[test]
+fn head_cache_is_bounded_and_evicts_without_changing_outputs() {
+    // Regression for the unbounded Predictor::full_cache: with a cap of 2
+    // and three live heads, the cache never exceeds 2 entries and every
+    // prediction still matches an uncapped predictor bitwise (eviction
+    // only costs a rebuild, never correctness).
+    let e = engine(Precision::MixedF32);
+    let tasks = [DatasetId::Ani1x, DatasetId::Qm7x, DatasetId::Transition1x];
+    let model = synthetic_model(&e, &tasks, 23);
+    let ss = structures(&tasks, 4); // cycles through all three heads twice+
+
+    let mut unbounded = Predictor::new(Arc::clone(&e), model.clone());
+    let mut capped = Predictor::with_head_cap(Arc::clone(&e), model, 2);
+    for (i, s) in ss.iter().enumerate() {
+        let a = unbounded.predict_one(s).unwrap();
+        let b = capped.predict_one(s).unwrap();
+        assert_prediction_bits_eq(&a, &b, &format!("request {i}"));
+        assert!(
+            capped.cached_heads() <= 2,
+            "head cache exceeded its cap: {}",
+            capped.cached_heads()
+        );
+    }
+    assert_eq!(unbounded.cached_heads(), 3, "uncapped predictor holds all heads");
+    assert_eq!(capped.cached_heads(), 2, "capped predictor evicted down to 2");
+}
