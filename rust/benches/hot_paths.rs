@@ -143,7 +143,7 @@ fn main() -> anyhow::Result<()> {
                     for c in comms {
                         s.spawn(move || {
                             let mut data = vec![1.0f32; len];
-                            c.allreduce_mean(&mut data);
+                            c.allreduce_mean(&mut data).unwrap();
                             std::hint::black_box(&data);
                         });
                     }

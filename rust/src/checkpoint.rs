@@ -331,6 +331,41 @@ pub fn latest_in_dir(dir: impl AsRef<Path>) -> anyhow::Result<Option<PathBuf>> {
     Ok(best.map(|(_, p)| p))
 }
 
+/// Highest-epoch `epoch_*.ckpt` in `dir` that passes full CRC validation
+/// (loads as a training checkpoint). Corrupt or truncated files — a crash
+/// mid-write, a flipped bit on disk — are warned about and skipped, and
+/// the scan falls back to the next-highest epoch. `Ok(None)` when no valid
+/// checkpoint survives. This is the rescan `Trainer::train_with_recovery`
+/// and `--resume latest` share.
+pub fn latest_valid_in_dir(dir: impl AsRef<Path>) -> anyhow::Result<Option<PathBuf>> {
+    let dir = dir.as_ref();
+    let mut found: Vec<(usize, PathBuf)> = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let parsed = name
+            .strip_prefix("epoch_")
+            .and_then(|s| s.strip_suffix(".ckpt"))
+            .and_then(|s| s.parse::<usize>().ok());
+        if let Some(n) = parsed {
+            found.push((n, entry.path()));
+        }
+    }
+    found.sort_by(|a, b| b.0.cmp(&a.0));
+    for (epoch, path) in found {
+        match load_train(&path) {
+            Ok(_) => return Ok(Some(path)),
+            Err(e) => eprintln!(
+                "[checkpoint] skipping corrupt/invalid epoch {epoch} checkpoint \
+                 {}: {e:#}",
+                path.display()
+            ),
+        }
+    }
+    Ok(None)
+}
+
 /// Resolve a `--resume` argument: a file is used as-is; a directory is
 /// scanned for its highest-epoch `epoch_*.ckpt`.
 pub fn resolve_resume_path(path: impl AsRef<Path>) -> anyhow::Result<PathBuf> {
@@ -786,6 +821,7 @@ fn enc_log(e: &mut Enc, log: &RunLog) {
     for ep in &log.epochs {
         e.u64(ep.epoch as u64);
         e.u64(ep.steps as u64);
+        e.u64(ep.skipped_batches as u64);
         e.f64(ep.train_loss);
         e.f64(ep.mae_e);
         e.f64(ep.mae_f);
@@ -812,6 +848,7 @@ fn dec_log(d: &mut Dec) -> anyhow::Result<RunLog> {
     for _ in 0..n {
         let epoch = d.usize()?;
         let steps = d.usize()?;
+        let skipped_batches = d.usize()?;
         let train_loss = d.f64()?;
         let mae_e = d.f64()?;
         let mae_f = d.f64()?;
@@ -834,6 +871,7 @@ fn dec_log(d: &mut Dec) -> anyhow::Result<RunLog> {
         epochs.push(EpochMetrics {
             epoch,
             steps,
+            skipped_batches,
             train_loss,
             mae_e,
             mae_f,
@@ -975,6 +1013,60 @@ mod tests {
         let latest = latest_in_dir(&dir).unwrap().unwrap();
         assert_eq!(latest, epoch_path(&dir, 3));
         assert_eq!(resolve_resume_path(&dir).unwrap(), epoch_path(&dir, 3));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    fn tiny_train_ckpt(epochs_done: usize) -> TrainCheckpoint {
+        let p = ParamSet::init(&metas(), 11);
+        TrainCheckpoint {
+            mode: "mtl-par".into(),
+            train_seed: 1,
+            config_fingerprint: "fp".into(),
+            epochs_done,
+            stopped: false,
+            stopper_best: f64::INFINITY,
+            stopper_bad_epochs: 0,
+            model: TrainedModel {
+                name: "valid-scan".into(),
+                encoder: p.subset("encoder."),
+                heads: Heads::Shared(p.subset("branch.")),
+            },
+            opt_encoder: AdamWState { m: vec![], v: vec![], step: 0 },
+            opt_heads: OptHeads::Shared(AdamWState { m: vec![], v: vec![], step: 0 }),
+            log: RunLog {
+                model_name: "valid-scan".into(),
+                epochs: (0..epochs_done).map(|i| EpochMetrics { epoch: i, ..Default::default() }).collect(),
+            },
+            comm_global: 0,
+            comm_head: 0,
+        }
+    }
+
+    #[test]
+    fn latest_valid_in_dir_skips_corrupt_and_truncated_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("hydra_mtp_ckpt_valid_dir_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(latest_valid_in_dir(&dir).unwrap().is_none());
+
+        // Epochs 1..=3 written; 3 corrupted (bit flip), 2 truncated — the
+        // CRC scan must fall back to epoch 1.
+        for n in 1..=3usize {
+            save_train(&tiny_train_ckpt(n), epoch_path(&dir, n)).unwrap();
+        }
+        crate::fault::corrupt_file(&epoch_path(&dir, 3)).unwrap();
+        let bytes = std::fs::read(epoch_path(&dir, 2)).unwrap();
+        std::fs::write(epoch_path(&dir, 2), &bytes[..bytes.len() / 2]).unwrap();
+
+        // The unvalidated scan still reports epoch 3 (kept that way on
+        // purpose: `latest_in_dir` is the cheap path)...
+        assert_eq!(latest_in_dir(&dir).unwrap().unwrap(), epoch_path(&dir, 3));
+        // ...but the validated scan lands on the intact epoch 1.
+        assert_eq!(latest_valid_in_dir(&dir).unwrap().unwrap(), epoch_path(&dir, 1));
+
+        // Corrupt the survivor too: no valid checkpoint remains.
+        crate::fault::corrupt_file(&epoch_path(&dir, 1)).unwrap();
+        assert!(latest_valid_in_dir(&dir).unwrap().is_none());
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -9,13 +9,63 @@
 //! on a real fabric is priced separately by `scalesim` (same code path, a
 //! virtual clock instead of a wall clock).
 //!
+//! The rendezvous is **failure-aware**: a member that panics or exits
+//! early would otherwise leave its peers parked on the condvar forever.
+//! Instead, every collective returns a typed [`CommError`]:
+//!
+//! * A [`MemberGuard`] dropped while armed (the rank panicked or bailed
+//!   before disarming) **poisons** the group — subsequent and in-flight
+//!   waiters wake immediately with [`CommError::RankFailure`] naming the
+//!   dead rank's label (mesh head groups label members by GLOBAL rank, so
+//!   the error always names the rank an operator would restart).
+//! * Every wait carries the group's configured timeout
+//!   ([`DEFAULT_TIMEOUT`], or [`Comm::group_with`]); a straggler that
+//!   never arrives surfaces as [`CommError::Timeout`] instead of a hang.
+//!
+//! A completed round is never aborted: release waits check the
+//! round-complete condition *before* the poison flag, so members that
+//! already rendezvoused copy their result out even if a failure lands in
+//! the same instant.
+//!
 //! Traffic counters record every payload so tests and the scaling study can
 //! verify the paper's key claim: multi-task parallelism replaces one global
 //! `P_s + N_h*P_h` allreduce with a global `P_s` allreduce plus per-head
 //! local `P_h` allreduces.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Default bound on any single collective wait. Generous for real work;
+/// chaos tests shrink it via [`Comm::group_with`] to keep failures fast.
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Typed failure of a collective. Collectives never hang: a dead member
+/// converts to `RankFailure`, a straggler past the group timeout to
+/// `Timeout`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommError {
+    /// A group member panicked or exited before completing the round. The
+    /// rank is the member's *label* — the global rank for mesh groups.
+    RankFailure { rank: usize },
+    /// The collective did not complete within the group's timeout.
+    Timeout { waited_ms: u64 },
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::RankFailure { rank } => {
+                write!(f, "collective failed: rank {rank} died mid-round")
+            }
+            CommError::Timeout { waited_ms } => {
+                write!(f, "collective timed out after {waited_ms} ms")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
 
 #[derive(Default)]
 struct RoundState {
@@ -30,12 +80,21 @@ struct RoundState {
     accum: Vec<f64>,
     arrived: usize,
     departing: usize,
+    /// Label of the first member known dead; set by [`Comm::poison`] /
+    /// a dropped [`MemberGuard`]. Permanent: the group cannot complete
+    /// another round once a member is gone.
+    failed: Option<usize>,
 }
 
 struct Shared {
     size: usize,
     state: Mutex<RoundState>,
     cv: Condvar,
+    /// Bound on any single collective wait.
+    timeout: Duration,
+    /// Per-member labels reported in [`CommError::RankFailure`]. Defaults
+    /// to `0..n`; mesh head groups pass global ranks.
+    labels: Vec<usize>,
     /// Total f32 elements moved through collectives (allreduce AND
     /// broadcast) on this communicator. Broadcast was not counted by the
     /// seed, which undercounted the traffic behind the paper's P_s-vs-P_h
@@ -43,6 +102,47 @@ struct Shared {
     reduced_elems: AtomicU64,
     /// Number of collective rounds completed.
     rounds: AtomicU64,
+}
+
+/// Recover the guard even if a peer panicked while holding the lock: the
+/// protected state is only ever mutated to a consistent point before any
+/// wait, and a poisoned group is already terminal.
+fn lock(shared: &Shared) -> MutexGuard<'_, RoundState> {
+    shared.state.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn poison_shared(shared: &Shared, label: usize) {
+    let mut st = lock(shared);
+    if st.failed.is_none() {
+        st.failed = Some(label);
+    }
+    drop(st);
+    shared.cv.notify_all();
+}
+
+/// Scope guard registering a thread as a live group member. Drop while
+/// armed (panic unwind, early `?` return) poisons the group so peers get
+/// [`CommError::RankFailure`] instead of hanging; call
+/// [`MemberGuard::disarm`] on clean exit.
+pub struct MemberGuard {
+    shared: Arc<Shared>,
+    label: usize,
+    armed: bool,
+}
+
+impl MemberGuard {
+    /// Mark this member's clean exit: dropping no longer poisons.
+    pub fn disarm(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for MemberGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            poison_shared(&self.shared, self.label);
+        }
+    }
 }
 
 /// One member's handle to a process group.
@@ -53,9 +153,19 @@ pub struct Comm {
 }
 
 impl Comm {
-    /// Create a group of `n` communicator handles (one per member thread).
+    /// Create a group of `n` communicator handles (one per member thread)
+    /// with the [`DEFAULT_TIMEOUT`] and identity labels.
     pub fn group(n: usize) -> Vec<Comm> {
+        Comm::group_with(n, DEFAULT_TIMEOUT, None)
+    }
+
+    /// As [`Comm::group`] with an explicit collective timeout and optional
+    /// member labels (`labels[i]` names member `i` in failure errors —
+    /// mesh head groups pass global ranks). `labels` defaults to `0..n`.
+    pub fn group_with(n: usize, timeout: Duration, labels: Option<Vec<usize>>) -> Vec<Comm> {
         assert!(n > 0);
+        let labels = labels.unwrap_or_else(|| (0..n).collect());
+        assert_eq!(labels.len(), n, "one label per group member");
         let shared = Arc::new(Shared {
             size: n,
             state: Mutex::new(RoundState {
@@ -63,6 +173,8 @@ impl Comm {
                 ..RoundState::default()
             }),
             cv: Condvar::new(),
+            timeout,
+            labels,
             reduced_elems: AtomicU64::new(0),
             rounds: AtomicU64::new(0),
         });
@@ -73,27 +185,72 @@ impl Comm {
         self.shared.size
     }
 
+    /// This member's failure-reporting label (== `rank_in_group` unless
+    /// the group was built with explicit labels).
+    pub fn label(&self) -> usize {
+        self.shared.labels[self.rank_in_group]
+    }
+
+    /// Register this thread as a live member: the returned guard poisons
+    /// the group if dropped before [`MemberGuard::disarm`].
+    pub fn member_guard(&self) -> MemberGuard {
+        MemberGuard { shared: Arc::clone(&self.shared), label: self.label(), armed: true }
+    }
+
+    /// Mark this member dead (first failure wins) and wake every waiter.
+    pub fn poison(&self) {
+        poison_shared(&self.shared, self.label());
+    }
+
+    /// Wait on the group condvar, bounded by `deadline`.
+    fn wait_deadline<'a>(
+        &'a self,
+        st: MutexGuard<'a, RoundState>,
+        deadline: Instant,
+    ) -> Result<MutexGuard<'a, RoundState>, CommError> {
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(CommError::Timeout {
+                waited_ms: self.shared.timeout.as_millis() as u64,
+            });
+        }
+        let (guard, _timed_out) = self
+            .shared
+            .cv
+            .wait_timeout(st, deadline - now)
+            .unwrap_or_else(|p| p.into_inner());
+        Ok(guard)
+    }
+
     /// Elementwise mean across the group, in place. All members must call.
-    pub fn allreduce_mean(&self, data: &mut [f32]) {
-        self.reduce(data, true);
+    pub fn allreduce_mean(&self, data: &mut [f32]) -> Result<(), CommError> {
+        self.reduce(data, true)
     }
 
     /// Elementwise sum across the group, in place.
-    pub fn allreduce_sum(&self, data: &mut [f32]) {
-        self.reduce(data, false);
+    pub fn allreduce_sum(&self, data: &mut [f32]) -> Result<(), CommError> {
+        self.reduce(data, false)
     }
 
-    fn reduce(&self, data: &mut [f32], mean: bool) {
+    fn reduce(&self, data: &mut [f32], mean: bool) -> Result<(), CommError> {
         let sh = &self.shared;
         if sh.size == 1 {
             sh.rounds.fetch_add(1, Ordering::Relaxed);
             sh.reduced_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
-            return;
+            return Ok(());
         }
-        let mut st = sh.state.lock().unwrap();
-        // Gate: previous round must fully drain first.
-        while st.departing > 0 {
-            st = sh.cv.wait(st).unwrap();
+        let deadline = Instant::now() + sh.timeout;
+        let mut st = lock(sh);
+        // Gate: previous round must fully drain first. A poisoned group
+        // can never complete another round — fail fast before depositing.
+        loop {
+            if let Some(rank) = st.failed {
+                return Err(CommError::RankFailure { rank });
+            }
+            if st.departing == 0 {
+                break;
+            }
+            st = self.wait_deadline(st, deadline)?;
         }
         // Deposit this rank's contribution (widened to f64, which keeps DDP
         // means stable) in its own slot; the final sum happens in rank
@@ -127,8 +284,16 @@ impl Comm {
             sh.reduced_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
             sh.cv.notify_all();
         } else {
-            while st.departing == 0 {
-                st = sh.cv.wait(st).unwrap();
+            // Release wait: round-complete is checked BEFORE the poison
+            // flag — a round that rendezvoused is never aborted.
+            loop {
+                if st.departing > 0 {
+                    break;
+                }
+                if let Some(rank) = st.failed {
+                    return Err(CommError::RankFailure { rank });
+                }
+                st = self.wait_deadline(st, deadline)?;
             }
         }
         for (x, &a) in data.iter_mut().zip(st.accum.iter()) {
@@ -138,6 +303,7 @@ impl Comm {
         if st.departing == 0 {
             sh.cv.notify_all();
         }
+        Ok(())
     }
 
     /// Broadcast `data` from `root` to every member, in place. The payload
@@ -145,16 +311,23 @@ impl Comm {
     /// moved the bytes but never incremented the traffic counter, so
     /// broadcast-heavy paths — checkpoint restore in particular — were
     /// invisible to the communication-volume accounting).
-    pub fn broadcast(&self, root: usize, data: &mut [f32]) {
+    pub fn broadcast(&self, root: usize, data: &mut [f32]) -> Result<(), CommError> {
         let sh = &self.shared;
         if sh.size == 1 {
             sh.rounds.fetch_add(1, Ordering::Relaxed);
             sh.reduced_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
-            return;
+            return Ok(());
         }
-        let mut st = sh.state.lock().unwrap();
-        while st.departing > 0 {
-            st = sh.cv.wait(st).unwrap();
+        let deadline = Instant::now() + sh.timeout;
+        let mut st = lock(sh);
+        loop {
+            if let Some(rank) = st.failed {
+                return Err(CommError::RankFailure { rank });
+            }
+            if st.departing == 0 {
+                break;
+            }
+            st = self.wait_deadline(st, deadline)?;
         }
         if self.rank_in_group == root {
             st.accum.clear();
@@ -168,8 +341,14 @@ impl Comm {
             sh.reduced_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
             sh.cv.notify_all();
         } else {
-            while st.departing == 0 {
-                st = sh.cv.wait(st).unwrap();
+            loop {
+                if st.departing > 0 {
+                    break;
+                }
+                if let Some(rank) = st.failed {
+                    return Err(CommError::RankFailure { rank });
+                }
+                st = self.wait_deadline(st, deadline)?;
             }
         }
         // Root may have arrived last; accum is valid in either case because
@@ -181,16 +360,17 @@ impl Comm {
         if st.departing == 0 {
             sh.cv.notify_all();
         }
+        Ok(())
     }
 
     /// Barrier across the group.
-    pub fn barrier(&self) {
+    pub fn barrier(&self) -> Result<(), CommError> {
         let mut unit = [0f32; 0];
-        self.reduce(&mut unit, false);
+        self.reduce(&mut unit, false)
     }
 
     /// Allgather of one f64 per rank (metrics aggregation).
-    pub fn allgather_f64(&self, value: f64) -> Vec<f64> {
+    pub fn allgather_f64(&self, value: f64) -> Result<Vec<f64>, CommError> {
         let n = self.shared.size;
         let mut slots = vec![0f32; 2 * n];
         // Encode f64 as two f32 halves to reuse the f32 reduce path without
@@ -199,8 +379,8 @@ impl Comm {
         let lo = (value - hi as f64) as f32;
         slots[2 * self.rank_in_group] = hi;
         slots[2 * self.rank_in_group + 1] = lo;
-        self.allreduce_sum(&mut slots);
-        (0..n).map(|i| slots[2 * i] as f64 + slots[2 * i + 1] as f64).collect()
+        self.allreduce_sum(&mut slots)?;
+        Ok((0..n).map(|i| slots[2 * i] as f64 + slots[2 * i + 1] as f64).collect())
     }
 
     /// (total f32 elements moved through collectives, completed rounds).
@@ -212,31 +392,60 @@ impl Comm {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use std::thread;
+/// Run `f` once per member of a fresh `n`-member group, one thread each,
+/// with a [`MemberGuard`] installed — a panicking member poisons the group
+/// (peers see [`CommError::RankFailure`]) and surfaces in its own slot as
+/// `Err(RankFailure)` naming its rank. Uses the [`DEFAULT_TIMEOUT`].
+pub fn run_group<T: Send>(
+    n: usize,
+    f: impl Fn(Comm) -> T + Send + Sync,
+) -> Vec<Result<T, CommError>> {
+    run_group_with(n, DEFAULT_TIMEOUT, f)
+}
 
-    fn run_group<T: Send + 'static>(
-        n: usize,
-        f: impl Fn(Comm) -> T + Send + Sync + Clone + 'static,
-    ) -> Vec<T> {
-        let comms = Comm::group(n);
+/// As [`run_group`] with an explicit collective timeout.
+pub fn run_group_with<T: Send>(
+    n: usize,
+    timeout: Duration,
+    f: impl Fn(Comm) -> T + Send + Sync,
+) -> Vec<Result<T, CommError>> {
+    let comms = Comm::group_with(n, timeout, None);
+    let f = &f;
+    std::thread::scope(|s| {
         let handles: Vec<_> = comms
             .into_iter()
             .map(|c| {
-                let f = f.clone();
-                thread::spawn(move || f(c))
+                s.spawn(move || {
+                    let guard = c.member_guard();
+                    let out = f(c);
+                    guard.disarm();
+                    out
+                })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(rank, h)| h.join().map_err(|_| CommError::RankFailure { rank }))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Unwrap both layers: the thread must not panic and the closure's own
+    /// result is returned as-is.
+    fn run_group_ok<T: Send>(n: usize, f: impl Fn(Comm) -> T + Send + Sync) -> Vec<T> {
+        run_group(n, f).into_iter().map(|r| r.unwrap()).collect()
     }
 
     #[test]
     fn allreduce_mean_averages() {
-        let results = run_group(4, |c| {
+        let results = run_group_ok(4, |c| {
             let mut data = vec![c.rank_in_group as f32; 8];
-            c.allreduce_mean(&mut data);
+            c.allreduce_mean(&mut data).unwrap();
             data
         });
         for r in results {
@@ -248,9 +457,9 @@ mod tests {
 
     #[test]
     fn allreduce_sum_sums() {
-        let results = run_group(3, |c| {
+        let results = run_group_ok(3, |c| {
             let mut data = vec![1.0f32, 2.0];
-            c.allreduce_sum(&mut data);
+            c.allreduce_sum(&mut data).unwrap();
             data
         });
         for r in results {
@@ -260,11 +469,11 @@ mod tests {
 
     #[test]
     fn repeated_rounds_do_not_interleave() {
-        let results = run_group(4, |c| {
+        let results = run_group_ok(4, |c| {
             let mut out = Vec::new();
             for round in 0..50 {
                 let mut data = vec![(c.rank_in_group * 100 + round) as f32];
-                c.allreduce_mean(&mut data);
+                c.allreduce_mean(&mut data).unwrap();
                 out.push(data[0]);
             }
             out
@@ -280,13 +489,13 @@ mod tests {
     #[test]
     fn broadcast_from_each_root() {
         for root in 0..3 {
-            let results = run_group(3, move |c| {
+            let results = run_group_ok(3, move |c| {
                 let mut data = if c.rank_in_group == root {
                     vec![42.0f32, 7.0]
                 } else {
                     vec![0.0, 0.0]
                 };
-                c.broadcast(root, &mut data);
+                c.broadcast(root, &mut data).unwrap();
                 data
             });
             for r in results {
@@ -297,7 +506,8 @@ mod tests {
 
     #[test]
     fn allgather_collects_per_rank_values() {
-        let results = run_group(4, |c| c.allgather_f64(c.rank_in_group as f64 * 1.5));
+        let results =
+            run_group_ok(4, |c| c.allgather_f64(c.rank_in_group as f64 * 1.5).unwrap());
         for r in results {
             assert_eq!(r, vec![0.0, 1.5, 3.0, 4.5]);
         }
@@ -307,16 +517,16 @@ mod tests {
     fn single_member_group_is_identity() {
         let comms = Comm::group(1);
         let mut data = vec![3.0f32, 4.0];
-        comms[0].allreduce_mean(&mut data);
+        comms[0].allreduce_mean(&mut data).unwrap();
         assert_eq!(data, vec![3.0, 4.0]);
-        comms[0].barrier();
+        comms[0].barrier().unwrap();
     }
 
     #[test]
     fn stats_count_traffic() {
-        let results = run_group(2, |c| {
+        let results = run_group_ok(2, |c| {
             let mut d = vec![0f32; 10];
-            c.allreduce_mean(&mut d);
+            c.allreduce_mean(&mut d).unwrap();
             c.stats()
         });
         for (elems, rounds) in results {
@@ -329,9 +539,9 @@ mod tests {
     fn broadcast_counts_toward_stats() {
         // Regression: the seed moved broadcast payloads but never bumped
         // the traffic counter, undercounting comm volume.
-        let results = run_group(3, |c| {
+        let results = run_group_ok(3, |c| {
             let mut d = vec![c.rank_in_group as f32; 7];
-            c.broadcast(1, &mut d);
+            c.broadcast(1, &mut d).unwrap();
             c.stats()
         });
         for (elems, rounds) in results {
@@ -341,7 +551,7 @@ mod tests {
         // Size-1 groups count too (degenerate but consistent with reduce).
         let comms = Comm::group(1);
         let mut d = vec![0f32; 5];
-        comms[0].broadcast(0, &mut d);
+        comms[0].broadcast(0, &mut d).unwrap();
         assert_eq!(comms[0].stats().0, 5);
     }
 
@@ -352,11 +562,11 @@ mod tests {
         // Thread scheduling varies arrival order across rounds; rank-order
         // folding must still produce the identical bit pattern every time.
         let contributions = [1e16f32, 1.0, -1e16, 3.5];
-        let results = run_group(4, move |c| {
+        let results = run_group_ok(4, move |c| {
             let mut out = Vec::new();
             for _ in 0..200 {
                 let mut d = vec![contributions[c.rank_in_group]];
-                c.allreduce_sum(&mut d);
+                c.allreduce_sum(&mut d).unwrap();
                 out.push(d[0].to_bits());
             }
             out
@@ -371,6 +581,86 @@ mod tests {
                     f32::from_bits(expected)
                 );
             }
+        }
+    }
+
+    #[test]
+    fn panicked_member_poisons_the_group() {
+        // Rank 0 panics before ever joining the collective; ranks 1 and 2
+        // must get a typed RankFailure naming rank 0 — not a hang.
+        let results = run_group_with(3, Duration::from_secs(10), |c| {
+            if c.rank_in_group == 0 {
+                panic!("injected: rank 0 dies before the collective");
+            }
+            let mut d = vec![1.0f32; 4];
+            c.allreduce_mean(&mut d)
+        });
+        assert_eq!(results[0], Err(CommError::RankFailure { rank: 0 }));
+        for r in &results[1..] {
+            assert_eq!(
+                r.as_ref().unwrap(),
+                &Err(CommError::RankFailure { rank: 0 }),
+                "peers must see the failed rank, not deadlock"
+            );
+        }
+    }
+
+    #[test]
+    fn straggler_past_timeout_yields_typed_timeout() {
+        let results = run_group_with(2, Duration::from_millis(50), |c| {
+            if c.rank_in_group == 1 {
+                // Never calls the collective but exits cleanly (guard
+                // disarmed) — a pure straggler from rank 0's viewpoint.
+                std::thread::sleep(Duration::from_millis(200));
+                return Ok(());
+            }
+            let mut d = vec![0f32; 2];
+            c.allreduce_sum(&mut d)
+        });
+        assert_eq!(
+            results[0].as_ref().unwrap(),
+            &Err(CommError::Timeout { waited_ms: 50 })
+        );
+        assert!(results[1].as_ref().unwrap().is_ok());
+    }
+
+    #[test]
+    fn explicit_labels_name_global_ranks_in_failures() {
+        // A head group labeled with global ranks [4, 5]: member 1's death
+        // must be reported as global rank 5.
+        let comms = Comm::group_with(2, Duration::from_secs(5), Some(vec![4, 5]));
+        assert_eq!(comms[0].label(), 4);
+        assert_eq!(comms[1].label(), 5);
+        comms[1].poison();
+        let mut d = vec![0f32; 1];
+        assert_eq!(
+            comms[0].allreduce_sum(&mut d),
+            Err(CommError::RankFailure { rank: 5 })
+        );
+    }
+
+    #[test]
+    fn disarmed_guard_does_not_poison() {
+        let comms = Comm::group(2);
+        let g = comms[0].member_guard();
+        g.disarm();
+        // Group still healthy: a 2-rank reduce completes.
+        let results: Vec<_> = std::thread::scope(|s| {
+            comms
+                .into_iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut d = vec![2.0f32];
+                        c.allreduce_mean(&mut d).map(|()| d[0])
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for r in results {
+            assert_eq!(r.unwrap(), 2.0);
         }
     }
 }

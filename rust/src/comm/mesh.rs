@@ -9,7 +9,9 @@
 //!
 //! This mirrors `torch.distributed.DeviceMesh` with (head, replica) axes.
 
-use crate::comm::collectives::Comm;
+use std::time::Duration;
+
+use crate::comm::collectives::{Comm, DEFAULT_TIMEOUT};
 
 /// Mesh geometry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,11 +54,23 @@ pub struct MeshRank {
 /// Build every rank's mesh view. The returned vec is indexed by rank and is
 /// meant to be moved into the rank threads.
 pub fn build_mesh(shape: MeshShape) -> Vec<MeshRank> {
+    build_mesh_with_timeout(shape, DEFAULT_TIMEOUT)
+}
+
+/// As [`build_mesh`] with an explicit collective timeout on every group.
+/// Head sub-groups are labeled with GLOBAL ranks, so a
+/// [`CommError::RankFailure`](crate::comm::collectives::CommError) raised
+/// inside a head group still names the rank an operator would restart.
+pub fn build_mesh_with_timeout(shape: MeshShape, timeout: Duration) -> Vec<MeshRank> {
     let world = shape.world_size();
     assert!(world > 0);
-    let global = Comm::group(world);
-    let mut head_groups: Vec<Vec<Comm>> =
-        (0..shape.num_heads).map(|_| Comm::group(shape.replicas)).collect();
+    let global = Comm::group_with(world, timeout, None);
+    let mut head_groups: Vec<Vec<Comm>> = (0..shape.num_heads)
+        .map(|h| {
+            let labels = (0..shape.replicas).map(|r| shape.rank_of(h, r)).collect();
+            Comm::group_with(shape.replicas, timeout, Some(labels))
+        })
+        .collect();
 
     let mut out = Vec::with_capacity(world);
     for (rank, global_comm) in global.into_iter().enumerate() {
@@ -113,10 +127,10 @@ mod tests {
                     // Head-group mean of the rank id: head 0 has ranks {0,1}
                     // -> 0.5; head 1 has ranks {2,3} -> 2.5.
                     let mut head_val = vec![mr.rank as f32];
-                    mr.head_group.allreduce_mean(&mut head_val);
+                    mr.head_group.allreduce_mean(&mut head_val).unwrap();
                     // Global mean of the rank id: 1.5.
                     let mut global_val = vec![mr.rank as f32];
-                    mr.global.allreduce_mean(&mut global_val);
+                    mr.global.allreduce_mean(&mut global_val).unwrap();
                     (mr.head, head_val[0], global_val[0])
                 })
             })
@@ -140,6 +154,12 @@ mod tests {
             assert_eq!(mr.global.size(), 6);
             assert_eq!(mr.head_group.size(), 3);
             assert_eq!(mr.head_group.rank_in_group, mr.replica);
+            assert_eq!(mr.global.label(), i, "global group uses identity labels");
+            assert_eq!(
+                mr.head_group.label(),
+                i,
+                "head groups are labeled by GLOBAL rank for failure reporting"
+            );
         }
     }
 }

@@ -5,5 +5,5 @@
 pub mod collectives;
 pub mod mesh;
 
-pub use collectives::Comm;
-pub use mesh::{build_mesh, MeshRank, MeshShape};
+pub use collectives::{run_group, run_group_with, Comm, CommError, MemberGuard};
+pub use mesh::{build_mesh, build_mesh_with_timeout, MeshRank, MeshShape};

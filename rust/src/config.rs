@@ -162,6 +162,61 @@ impl Default for ServeConfig {
     }
 }
 
+/// Chaos / recovery knobs (see `crate::fault` and
+/// `Trainer::train_with_recovery`). Like [`ServeConfig`], none of these
+/// affect a healthy training trajectory, so they are excluded from
+/// [`RunConfig::trajectory_fingerprint`] — a recovered run must be able to
+/// resume checkpoints written before the faults were configured.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Fault-injection spec (see `fault::FaultPlan::parse` for the
+    /// grammar); `None` or empty means no injected faults. The
+    /// `HYDRA_MTP_FAULTS` env var overrides this at plan build.
+    pub spec: Option<String>,
+    /// Restart attempts `train_with_recovery` makes after a rank failure
+    /// (each rescanning the checkpoint dir for the latest CRC-valid file).
+    pub max_restarts: usize,
+    /// Collective timeout in milliseconds: a rank that stalls past this in
+    /// a collective surfaces as `CommError::Timeout` instead of a hang.
+    pub comm_timeout_ms: u64,
+    /// Non-finite-loss batches a rank may skip per epoch before the run
+    /// aborts anyway (a model that keeps producing NaN is not recoverable
+    /// by skipping).
+    pub skip_batch_budget: usize,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            spec: None,
+            max_restarts: 2,
+            comm_timeout_ms: 60_000,
+            skip_batch_budget: 8,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Build the fault plan: `HYDRA_MTP_FAULTS` (when set non-empty)
+    /// overrides the configured spec; an absent spec yields the no-op plan.
+    pub fn plan(&self) -> anyhow::Result<crate::fault::FaultPlan> {
+        if let Ok(env) = std::env::var("HYDRA_MTP_FAULTS") {
+            if !env.trim().is_empty() {
+                return crate::fault::FaultPlan::parse(&env);
+            }
+        }
+        match &self.spec {
+            Some(s) => crate::fault::FaultPlan::parse(s),
+            None => Ok(crate::fault::FaultPlan::none()),
+        }
+    }
+
+    /// The collective timeout as a `Duration`.
+    pub fn comm_timeout(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.comm_timeout_ms)
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub artifacts_dir: String,
@@ -179,6 +234,7 @@ pub struct RunConfig {
     pub parallel: ParallelConfig,
     pub checkpoint: CheckpointConfig,
     pub serve: ServeConfig,
+    pub fault: FaultConfig,
 }
 
 impl Default for RunConfig {
@@ -193,6 +249,7 @@ impl Default for RunConfig {
             parallel: ParallelConfig::default(),
             checkpoint: CheckpointConfig::default(),
             serve: ServeConfig::default(),
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -221,6 +278,15 @@ impl RunConfig {
             self.serve.latency_budget_ms > 0.0,
             "serve.latency_budget_ms must be positive"
         );
+        anyhow::ensure!(
+            self.fault.comm_timeout_ms >= 1,
+            "fault.comm_timeout_ms must be >= 1 (got {})",
+            self.fault.comm_timeout_ms
+        );
+        if let Some(spec) = &self.fault.spec {
+            // Fail at config time, not mid-run.
+            crate::fault::FaultPlan::parse(spec)?;
+        }
         Ok(())
     }
 
@@ -292,6 +358,21 @@ impl RunConfig {
                     ("queue_capacity", Json::from(self.serve.queue_capacity)),
                     ("enqueue_wait_ms", Json::from(self.serve.enqueue_wait_ms as i64)),
                     ("latency_budget_ms", Json::from(self.serve.latency_budget_ms)),
+                ]),
+            ),
+            (
+                "fault",
+                Json::obj(vec![
+                    (
+                        "spec",
+                        match &self.fault.spec {
+                            Some(s) => Json::str(s.clone()),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("max_restarts", Json::from(self.fault.max_restarts)),
+                    ("comm_timeout_ms", Json::from(self.fault.comm_timeout_ms as i64)),
+                    ("skip_batch_budget", Json::from(self.fault.skip_batch_budget)),
                 ]),
             ),
         ])
@@ -384,6 +465,19 @@ impl RunConfig {
         if let Some(v) = s.get("latency_budget_ms").as_f64() {
             cfg.serve.latency_budget_ms = v;
         }
+        let f = j.get("fault");
+        if let Some(s) = f.get("spec").as_str() {
+            cfg.fault.spec = Some(s.to_string());
+        }
+        if let Some(v) = f.get("max_restarts").as_i64() {
+            cfg.fault.max_restarts = v as usize;
+        }
+        if let Some(v) = f.get("comm_timeout_ms").as_i64() {
+            cfg.fault.comm_timeout_ms = v as u64;
+        }
+        if let Some(v) = f.get("skip_batch_budget").as_i64() {
+            cfg.fault.skip_batch_budget = v as usize;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -469,6 +563,10 @@ mod tests {
         cfg.serve.queue_capacity = 32;
         cfg.serve.enqueue_wait_ms = 17;
         cfg.serve.latency_budget_ms = 75.0;
+        cfg.fault.spec = Some("nonfinite@epoch=1,batch=0".to_string());
+        cfg.fault.max_restarts = 5;
+        cfg.fault.comm_timeout_ms = 2500;
+        cfg.fault.skip_batch_budget = 3;
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.mode, cfg.mode);
         assert_eq!(back.backend, BackendKind::Native);
@@ -482,6 +580,10 @@ mod tests {
         assert_eq!(back.serve.queue_capacity, 32);
         assert_eq!(back.serve.enqueue_wait_ms, 17);
         assert_eq!(back.serve.latency_budget_ms, 75.0);
+        assert_eq!(back.fault.spec.as_deref(), Some("nonfinite@epoch=1,batch=0"));
+        assert_eq!(back.fault.max_restarts, 5);
+        assert_eq!(back.fault.comm_timeout_ms, 2500);
+        assert_eq!(back.fault.skip_batch_budget, 3);
     }
 
     #[test]
@@ -494,6 +596,10 @@ mod tests {
         b.checkpoint.dir = Some("ckpts".into());
         b.serve.workers = 3;
         b.serve.queue_capacity = 7;
+        b.fault.spec = Some("rank-panic@rank=0,epoch=1,step=0".into());
+        b.fault.max_restarts = 9;
+        b.fault.comm_timeout_ms = 123;
+        b.fault.skip_batch_budget = 99;
         assert_eq!(a.trajectory_fingerprint(), b.trajectory_fingerprint());
         // Every trajectory knob changes it.
         for mutate in [
@@ -562,6 +668,12 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = RunConfig::default();
         cfg.serve.latency_budget_ms = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.fault.comm_timeout_ms = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.fault.spec = Some("bogus-fault@x=1".into());
         assert!(cfg.validate().is_err());
     }
 

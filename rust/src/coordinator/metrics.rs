@@ -39,6 +39,11 @@ pub struct EpochMetrics {
     pub mae_e: f64,
     pub mae_f: f64,
     pub val_loss: f64,
+    /// Batches whose loss came back non-finite and were skipped by the
+    /// trainer's supervision (zero gradient contribution, optimizer still
+    /// stepped with the peers' mean) instead of aborting the run. Always 0
+    /// on a healthy run; bounded by the configured skip budget.
+    pub skipped_batches: usize,
     pub time_total: Duration,
     pub time_data: Duration,
     pub time_exec: Duration,
@@ -64,6 +69,7 @@ impl EpochMetrics {
             ("mae_e", Json::from(self.mae_e)),
             ("mae_f", Json::from(self.mae_f)),
             ("val_loss", Json::from(self.val_loss)),
+            ("skipped_batches", Json::from(self.skipped_batches)),
             ("time_total_s", Json::from(self.time_total.as_secs_f64())),
             ("time_data_s", Json::from(self.time_data.as_secs_f64())),
             ("time_exec_s", Json::from(self.time_exec.as_secs_f64())),
@@ -101,6 +107,8 @@ pub struct StepAccum {
     pub loss_sum: f64,
     pub mae_e_sum: f64,
     pub mae_f_sum: f64,
+    /// Non-finite-loss batches skipped this epoch (not counted in `steps`).
+    pub skipped: usize,
     pub data: Duration,
     pub exec: Duration,
     pub comm: Duration,
@@ -132,6 +140,7 @@ impl StepAccum {
             mae_e: self.mae_e_sum / n,
             mae_f: self.mae_f_sum / n,
             val_loss,
+            skipped_batches: self.skipped,
             time_total: total,
             time_data: self.data,
             time_exec: self.exec,
@@ -167,17 +176,19 @@ impl RunLog {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "epoch,steps,train_loss,mae_e,mae_f,val_loss,total_s,data_s,exec_s,comm_s,opt_s\n",
+            "epoch,steps,train_loss,mae_e,mae_f,val_loss,skipped,total_s,data_s,exec_s,\
+             comm_s,opt_s\n",
         );
         for e in &self.epochs {
             out.push_str(&format!(
-                "{},{},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4},{:.4},{:.4},{:.4}\n",
+                "{},{},{:.6},{:.6},{:.6},{:.6},{},{:.4},{:.4},{:.4},{:.4},{:.4}\n",
                 e.epoch,
                 e.steps,
                 e.train_loss,
                 e.mae_e,
                 e.mae_f,
                 e.val_loss,
+                e.skipped_batches,
                 e.time_total.as_secs_f64(),
                 e.time_data.as_secs_f64(),
                 e.time_exec.as_secs_f64(),
@@ -235,6 +246,21 @@ mod tests {
         assert_eq!(cov.idx(1).get("dataset").as_str(), Some("small"));
         assert_eq!(cov.idx(1).get("used").as_i64(), Some(10));
         assert_eq!(cov.idx(1).get("planned").as_i64(), Some(2));
+    }
+
+    #[test]
+    fn skipped_batches_flow_into_epoch_json_and_csv() {
+        let mut a = StepAccum::default();
+        a.record_step(1.0, 0.0, 0.0);
+        a.skipped = 2;
+        let e = a.into_epoch(0, Duration::ZERO, 1.0);
+        assert_eq!(e.skipped_batches, 2);
+        assert_eq!(e.to_json().get("skipped_batches").as_i64(), Some(2));
+        let mut log = RunLog::new("t");
+        log.push(e);
+        let csv = log.to_csv();
+        assert!(csv.lines().next().unwrap().contains(",skipped,"));
+        assert!(csv.lines().nth(1).unwrap().contains(",2,"));
     }
 
     #[test]

@@ -22,8 +22,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::checkpoint::{self, OptHeads, TrainCheckpoint};
-use crate::comm::{build_mesh, Comm, MeshRank, MeshShape};
+use crate::comm::{build_mesh_with_timeout, Comm, CommError, MeshRank, MeshShape};
 use crate::config::{RunConfig, TrainMode};
+use crate::fault::{self, FaultPlan};
 use crate::coordinator::metrics::{Coverage, RunLog, StepAccum};
 use crate::coordinator::scheduler::EarlyStopper;
 use crate::data::batch::{BatchBuilder, BatchPool, GraphBatch};
@@ -199,17 +200,73 @@ impl Trainer {
     /// the resumed run is bit-identical to an uninterrupted one (proven in
     /// `rust/tests/integration_checkpoint.rs`).
     pub fn train(&self, data: &DataBundle) -> anyhow::Result<TrainOutcome> {
+        let plan = Arc::new(self.cfg.fault.plan()?);
+        self.train_with_plan(data, &plan)
+    }
+
+    /// [`Trainer::train`] with an explicit fault-injection plan (the plan's
+    /// fired-once state must be shared across recovery attempts, so
+    /// [`Trainer::train_with_recovery`] builds it once and passes it here).
+    pub fn train_with_plan(
+        &self,
+        data: &DataBundle,
+        plan: &Arc<FaultPlan>,
+    ) -> anyhow::Result<TrainOutcome> {
         validate_bundle(self.cfg.mode, data)?;
         let resume = self.load_resume(data)?;
         match self.cfg.mode {
-            TrainMode::Single(d) => self.train_ddp(data, vec![d], resume),
+            TrainMode::Single(d) => self.train_ddp(data, vec![d], resume, plan),
             TrainMode::BaselineAll => {
                 let datasets = data.datasets();
-                self.train_ddp(data, datasets, resume)
+                self.train_ddp(data, datasets, resume, plan)
             }
-            TrainMode::MtlBase => self.train_mtl_base(data, resume),
-            TrainMode::MtlPar => self.train_mtl_par(data, resume),
+            TrainMode::MtlBase => self.train_mtl_base(data, resume, plan),
+            TrainMode::MtlPar => self.train_mtl_par(data, resume, plan),
         }
+    }
+
+    /// [`Trainer::train`] under rank-failure supervision: a run that dies
+    /// with a typed [`CommError`] anywhere in its error chain (a rank
+    /// panicked, exited early, or a collective timed out) is restarted from
+    /// the latest **CRC-valid** checkpoint in `cfg.checkpoint.dir` (corrupt
+    /// or truncated files are warned about and skipped; none valid means a
+    /// cold restart), up to `cfg.fault.max_restarts` times. Resume is
+    /// bit-identical and injected faults fire at most once, so the
+    /// recovered run's final parameters equal a fault-free run's bit for
+    /// bit (`rust/tests/integration_chaos.rs`). Non-communication errors
+    /// (bad config, exhausted skip budget) are never retried.
+    pub fn train_with_recovery(&self, data: &DataBundle) -> anyhow::Result<TrainOutcome> {
+        let plan = Arc::new(self.cfg.fault.plan()?);
+        let max_restarts = self.cfg.fault.max_restarts;
+        let mut cfg = self.cfg.clone();
+        for attempt in 0..=max_restarts {
+            let t = Trainer { engine: Arc::clone(&self.engine), cfg: cfg.clone() };
+            let err = match t.train_with_plan(data, &plan) {
+                Ok(out) => return Ok(out),
+                Err(e) => e,
+            };
+            let rank_failure =
+                err.chain().any(|c| c.downcast_ref::<CommError>().is_some());
+            if !rank_failure || attempt == max_restarts {
+                return Err(err);
+            }
+            let resume = match &cfg.checkpoint.dir {
+                Some(dir) => checkpoint::latest_valid_in_dir(dir)?
+                    .map(|p| p.display().to_string()),
+                None => None,
+            };
+            eprintln!(
+                "rank failure on attempt {}/{}: {err:#}; restarting {}",
+                attempt + 1,
+                max_restarts + 1,
+                match &resume {
+                    Some(p) => format!("from checkpoint {p}"),
+                    None => "from scratch (no valid checkpoint found)".to_string(),
+                }
+            );
+            cfg.checkpoint.resume = resume;
+        }
+        unreachable!("recovery loop returns on success or on its final error")
     }
 
     /// Load + validate the checkpoint named by `cfg.checkpoint.resume`.
@@ -220,7 +277,21 @@ impl Trainer {
         let Some(spec) = &self.cfg.checkpoint.resume else {
             return Ok(None);
         };
-        let path = checkpoint::resolve_resume_path(spec)?;
+        // `--resume latest`: scan the checkpoint dir for the newest
+        // CRC-valid file, warning about and skipping corrupt or truncated
+        // ones — the same scan rank-failure recovery uses.
+        let path = if spec == "latest" {
+            let dir = self.cfg.checkpoint.dir.as_ref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "resume spec 'latest' requires a checkpoint dir (--checkpoint-dir)"
+                )
+            })?;
+            checkpoint::latest_valid_in_dir(dir)?.ok_or_else(|| {
+                anyhow::anyhow!("resume spec 'latest': no valid checkpoint in {dir}")
+            })?
+        } else {
+            checkpoint::resolve_resume_path(spec)?
+        };
         let ckpt = checkpoint::load_train(&path)?;
         let datasets = match self.cfg.mode {
             TrainMode::Single(d) => vec![d],
@@ -277,12 +348,14 @@ impl Trainer {
         data: &DataBundle,
         datasets: Vec<DatasetId>,
         resume: Option<Arc<TrainCheckpoint>>,
+        plan: &Arc<FaultPlan>,
     ) -> anyhow::Result<TrainOutcome> {
         let replicas = self.cfg.parallel.replicas;
         let shape = MeshShape { num_heads: 1, replicas };
-        let mesh = build_mesh(shape);
+        let mesh = build_mesh_with_timeout(shape, self.cfg.fault.comm_timeout());
         let engine = &self.engine;
         let cfg = &self.cfg;
+        let plan = &**plan;
 
         // Mixed stream: concatenate (dataset-tagged) training samples.
         // Featurize once, up front: warm epochs only shuffle and pack.
@@ -306,15 +379,18 @@ impl Trainer {
                 let datasets = datasets.clone();
                 let resume = resume.clone();
                 handles.push(scope.spawn(move || {
-                    rank_loop_single_branch(
-                        engine, cfg, mr, store, val_store, &datasets, resume,
-                    )
+                    let guards = (mr.global.member_guard(), mr.head_group.member_guard());
+                    let out = rank_loop_single_branch(
+                        engine, cfg, mr, store, val_store, &datasets, resume, plan,
+                    );
+                    if out.is_ok() {
+                        guards.0.disarm();
+                        guards.1.disarm();
+                    }
+                    out
                 }));
             }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("rank thread panicked"))
-                .collect::<anyhow::Result<Vec<_>>>()
+            join_ranks(handles)
         })?;
 
         let name = self.cfg.mode.name();
@@ -327,12 +403,14 @@ impl Trainer {
         &self,
         data: &DataBundle,
         resume: Option<Arc<TrainCheckpoint>>,
+        plan: &Arc<FaultPlan>,
     ) -> anyhow::Result<TrainOutcome> {
         let replicas = self.cfg.parallel.replicas;
         let shape = MeshShape { num_heads: 1, replicas };
-        let mesh = build_mesh(shape);
+        let mesh = build_mesh_with_timeout(shape, self.cfg.fault.comm_timeout());
         let engine = &self.engine;
         let cfg = &self.cfg;
+        let plan = &**plan;
         let datasets = data.datasets();
 
         let cutoff = engine.manifest.config.cutoff;
@@ -357,15 +435,18 @@ impl Trainer {
                 let datasets = datasets.clone();
                 let resume = resume.clone();
                 handles.push(scope.spawn(move || {
-                    rank_loop_mtl_base(
-                        engine, cfg, mr, stores, val_stores, &datasets, resume,
-                    )
+                    let guards = (mr.global.member_guard(), mr.head_group.member_guard());
+                    let out = rank_loop_mtl_base(
+                        engine, cfg, mr, stores, val_stores, &datasets, resume, plan,
+                    );
+                    if out.is_ok() {
+                        guards.0.disarm();
+                        guards.1.disarm();
+                    }
+                    out
                 }));
             }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("rank thread panicked"))
-                .collect::<anyhow::Result<Vec<_>>>()
+            join_ranks(handles)
         })?;
 
         finalize_per_dataset("GFM-MTL-All (MTL-base)".to_string(), results, &datasets)
@@ -377,13 +458,15 @@ impl Trainer {
         &self,
         data: &DataBundle,
         resume: Option<Arc<TrainCheckpoint>>,
+        plan: &Arc<FaultPlan>,
     ) -> anyhow::Result<TrainOutcome> {
         let datasets = data.datasets();
         let replicas = self.cfg.parallel.replicas;
         let shape = MeshShape { num_heads: datasets.len(), replicas };
-        let mesh = build_mesh(shape);
+        let mesh = build_mesh_with_timeout(shape, self.cfg.fault.comm_timeout());
         let engine = &self.engine;
         let cfg = &self.cfg;
+        let plan = &**plan;
 
         // One store per head sub-group: world = replicas.
         let cutoff = engine.manifest.config.cutoff;
@@ -404,13 +487,18 @@ impl Trainer {
                 let val_store = Arc::clone(&val_stores[mr.head]);
                 let resume = resume.clone();
                 handles.push(scope.spawn(move || {
-                    rank_loop_mtl_par(engine, cfg, mr, store, val_store, datasets, resume)
+                    let guards = (mr.global.member_guard(), mr.head_group.member_guard());
+                    let out = rank_loop_mtl_par(
+                        engine, cfg, mr, store, val_store, datasets, resume, plan,
+                    );
+                    if out.is_ok() {
+                        guards.0.disarm();
+                        guards.1.disarm();
+                    }
+                    out
                 }));
             }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("rank thread panicked"))
-                .collect::<anyhow::Result<Vec<_>>>()
+            join_ranks(handles)
         })?;
 
         finalize_per_dataset("GFM-MTL-All (MTL-par)".to_string(), results, &datasets)
@@ -447,9 +535,11 @@ impl Trainer {
         );
         let replicas = self.cfg.parallel.replicas;
         let shape = MeshShape { num_heads: 1, replicas };
-        let mesh = build_mesh(shape);
+        let mesh = build_mesh_with_timeout(shape, self.cfg.fault.comm_timeout());
         let engine = &self.engine;
         let cfg = &self.cfg;
+        let plan_arc = Arc::new(self.cfg.fault.plan()?);
+        let plan = &*plan_arc;
         let cutoff = engine.manifest.config.cutoff;
         let store =
             FeaturizedStore::build(DDStore::new(data.train[&dataset].to_vec(), replicas), cutoff);
@@ -462,13 +552,18 @@ impl Trainer {
                 let store = Arc::clone(&store);
                 let val_store = Arc::clone(&val_store);
                 handles.push(scope.spawn(move || {
-                    rank_loop_fine_tune(engine, cfg, mr, store, val_store, encoder, dataset)
+                    let guards = (mr.global.member_guard(), mr.head_group.member_guard());
+                    let out = rank_loop_fine_tune(
+                        engine, cfg, mr, store, val_store, encoder, dataset, plan,
+                    );
+                    if out.is_ok() {
+                        guards.0.disarm();
+                        guards.1.disarm();
+                    }
+                    out
                 }));
             }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("rank thread panicked"))
-                .collect::<anyhow::Result<Vec<_>>>()
+            join_ranks(handles)
         })?;
 
         finalize_per_dataset(
@@ -495,6 +590,54 @@ struct RankResult {
     log: RunLog,
     comm_global: u64,
     comm_head: u64,
+}
+
+/// Join every rank thread and collapse their outcomes. Handles are in rank
+/// order (the mesh iterates ranks in order). Error priority:
+///
+/// 1. a **panicked** rank — the root cause; its peers' typed
+///    `CommError::RankFailure` results are symptoms. Reported as a
+///    [`CommError::RankFailure`] naming the rank, so
+///    [`Trainer::train_with_recovery`] treats an in-process rank crash
+///    exactly like a failed collective;
+/// 2. a rank's own non-communication error (bad checkpoint, exhausted skip
+///    budget) — again the cause, never retried by recovery;
+/// 3. a communication error (the remaining symptom case).
+fn join_ranks(
+    handles: Vec<std::thread::ScopedJoinHandle<'_, anyhow::Result<RankResult>>>,
+) -> anyhow::Result<Vec<RankResult>> {
+    let joined: Vec<std::thread::Result<anyhow::Result<RankResult>>> =
+        handles.into_iter().map(|h| h.join()).collect();
+    for (rank, j) in joined.iter().enumerate() {
+        if let Err(p) = j {
+            return Err(anyhow::Error::from(CommError::RankFailure { rank }).context(
+                format!("rank {rank} panicked: {}", fault::panic_message(p.as_ref())),
+            ));
+        }
+    }
+    let mut out = Vec::with_capacity(joined.len());
+    let mut comm_err: Option<anyhow::Error> = None;
+    let mut other_err: Option<anyhow::Error> = None;
+    for j in joined {
+        match j.expect("panics handled above") {
+            Ok(r) => out.push(r),
+            Err(e) => {
+                let is_comm =
+                    e.chain().any(|c| c.downcast_ref::<CommError>().is_some());
+                let slot = if is_comm { &mut comm_err } else { &mut other_err };
+                if slot.is_none() {
+                    *slot = Some(e);
+                }
+            }
+        }
+    }
+    if let Some(e) = other_err {
+        return Err(e);
+    }
+    if let Some(e) = comm_err {
+        return Err(e);
+    }
+    Ok(out)
 }
 
 fn adamw_cfg(cfg: &RunConfig) -> AdamWConfig {
@@ -582,8 +725,8 @@ fn distributed_val_loss(
         local += out.loss * b.n_graphs as f64;
         count += b.n_graphs as f64;
     }
-    let sums = mr.global.allgather_f64(local);
-    let counts = mr.global.allgather_f64(count);
+    let sums = mr.global.allgather_f64(local)?;
+    let counts = mr.global.allgather_f64(count)?;
     let total: f64 = sums.iter().sum();
     let n: f64 = counts.iter().sum();
     if n > 0.0 {
@@ -606,9 +749,9 @@ fn distributed_val_loss(
 
 /// Shared epoch-count agreement: every rank must run the same number of
 /// steps or the collectives deadlock; take the global min of planned counts.
-fn agree_steps(mr: &MeshRank, planned: usize) -> usize {
-    let counts = mr.global.allgather_f64(planned as f64);
-    counts.into_iter().fold(f64::INFINITY, f64::min) as usize
+fn agree_steps(mr: &MeshRank, planned: usize) -> Result<usize, CommError> {
+    let counts = mr.global.allgather_f64(planned as f64)?;
+    Ok(counts.into_iter().fold(f64::INFINITY, f64::min) as usize)
 }
 
 // ---------------------------------------------------------------------------
@@ -679,15 +822,20 @@ fn save_after_epoch(cfg: &RunConfig, epoch: usize, end_epoch: usize, stop: bool)
 /// `Comm::broadcast` traffic observable in the comm counters. Only the
 /// root's `saved` values are read; every other rank genuinely receives the
 /// broadcast bytes (the f32 -> f64 -> f32 relay is exact).
-fn restore_params_broadcast(comm: &Comm, params: &mut ParamSet, saved: &ParamSet) {
+fn restore_params_broadcast(
+    comm: &Comm,
+    params: &mut ParamSet,
+    saved: &ParamSet,
+) -> Result<(), CommError> {
     let mut flat = if comm.rank_in_group == 0 {
         params.copy_matching_from(saved);
         params.flatten()
     } else {
         vec![0.0f32; params.total_params()]
     };
-    comm.broadcast(0, &mut flat);
+    comm.broadcast(0, &mut flat)?;
     params.unflatten_from(&flat);
+    Ok(())
 }
 
 /// Build + write a checkpoint after `epochs_done` completed epochs (called
@@ -773,8 +921,75 @@ fn split_moments(template: &ParamSet, flat: &[f32]) -> Vec<Vec<f32>> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// fault-injection hooks shared by the rank loops
+// ---------------------------------------------------------------------------
+
+/// Apply rank-kill / collective-stall faults scheduled for this exact
+/// `(rank, epoch, step)`. A no-op on the empty plan.
+fn inject_rank_faults(plan: &FaultPlan, mr: &MeshRank, epoch: usize, step: usize) {
+    if plan.panic_at(mr.rank, epoch, step) {
+        panic!("injected fault: rank {} panics at epoch {epoch} step {step}", mr.rank);
+    }
+    if let Some(ms) = plan.stall_ms(mr.rank, epoch, step) {
+        eprintln!(
+            "injected fault: rank {} stalls {ms} ms at epoch {epoch} step {step}",
+            mr.rank
+        );
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+    }
+}
+
+/// Account one skipped non-finite-loss batch against the per-epoch budget.
+fn skip_batch(
+    cfg: &RunConfig,
+    acc: &mut StepAccum,
+    rank: usize,
+    epoch: usize,
+    step: usize,
+) -> anyhow::Result<()> {
+    acc.skipped += 1;
+    eprintln!(
+        "warning: rank {rank}: non-finite loss at epoch {epoch} step {step}; \
+         skipping batch ({} of {} budget)",
+        acc.skipped, cfg.fault.skip_batch_budget
+    );
+    anyhow::ensure!(
+        acc.skipped <= cfg.fault.skip_batch_budget,
+        "rank {rank}: {} non-finite-loss batches in epoch {epoch} exceed the skip \
+         budget of {}; the model is diverging, not hitting a transient bad batch",
+        acc.skipped,
+        cfg.fault.skip_batch_budget
+    );
+    Ok(())
+}
+
+/// Size a flat gradient buffer and zero it (the skipped-batch contribution).
+fn zero_flat(flat: &mut Vec<f32>, n: usize) {
+    flat.clear();
+    flat.resize(n, 0.0);
+}
+
+/// Apply a scheduled checkpoint-corruption fault to the file just written
+/// after `epochs_done` epochs (called on the writing rank only).
+fn inject_checkpoint_corruption(plan: &FaultPlan, cfg: &RunConfig, epochs_done: usize) {
+    if !plan.corrupt_after(epochs_done) {
+        return;
+    }
+    let Some(dir) = &cfg.checkpoint.dir else { return };
+    let path = checkpoint::epoch_path(dir, epochs_done);
+    match fault::corrupt_file(&path) {
+        Ok(()) => eprintln!("injected fault: corrupted checkpoint {}", path.display()),
+        Err(e) => eprintln!(
+            "warning: fault injection failed to corrupt {}: {e}",
+            path.display()
+        ),
+    }
+}
+
 // -- single-branch DDP loop (Single / BaselineAll) ---------------------------
 
+#[allow(clippy::too_many_arguments)]
 fn rank_loop_single_branch(
     engine: &Engine,
     cfg: &RunConfig,
@@ -783,6 +998,7 @@ fn rank_loop_single_branch(
     val_store: Arc<FeaturizedStore>,
     datasets: &[DatasetId],
     resume: Option<Arc<TrainCheckpoint>>,
+    plan: &FaultPlan,
 ) -> anyhow::Result<RankResult> {
     let dims = engine.manifest.config.batch_dims();
     let (encoder, mut branches) = init_rank_params(engine, cfg, &datasets[..1]);
@@ -808,7 +1024,7 @@ fn rank_loop_single_branch(
     if let Some(ckpt) = &resume {
         // Rank 0 holds the checkpoint values; everyone else receives them
         // over a broadcast (the real restore traffic pattern).
-        restore_params_broadcast(&mr.global, &mut encoder, &ckpt.model.encoder);
+        restore_params_broadcast(&mr.global, &mut encoder, &ckpt.model.encoder)?;
         let saved_branch = match &ckpt.model.heads {
             Heads::Shared(b) => b,
             Heads::PerDataset(_) => anyhow::bail!(
@@ -816,7 +1032,7 @@ fn rank_loop_single_branch(
                 cfg.mode.name()
             ),
         };
-        restore_params_broadcast(&mr.global, &mut branch, saved_branch);
+        restore_params_broadcast(&mr.global, &mut branch, saved_branch)?;
         opt_enc.load_state(&ckpt.opt_encoder)?;
         let saved_opt = match &ckpt.opt_heads {
             OptHeads::Shared(s) => s,
@@ -860,23 +1076,36 @@ fn rank_loop_single_branch(
         );
         acc.data += t0.elapsed();
         let planned = batches.len();
-        let steps = agree_steps(&mr, batches.len());
+        let steps = agree_steps(&mr, batches.len())?;
 
         for step in 0..steps {
+            inject_rank_faults(plan, &mr, epoch, step);
             let batch = &batches[step % batches.len().max(1)];
             assemble_full(&mut full, &encoder, &branch);
 
             let t1 = Instant::now();
-            let out = engine.train_step(&full, batch)?;
+            let mut out = engine.train_step_unchecked(&full, batch)?;
+            if plan.nonfinite_at(mr.rank, epoch, step) {
+                out.loss = f64::NAN;
+            }
             acc.exec += t1.elapsed();
-            acc.record_step(out.loss, out.mae_e, out.mae_f);
 
             // Plain DDP: allreduce the complete gradient payload globally.
+            // A non-finite loss skips the batch: this rank contributes a
+            // zero gradient but still joins every collective and optimizer
+            // step, so the group stays step-synchronized.
             let t2 = Instant::now();
-            out.grads.flatten_prefix_into("encoder.", &mut enc_flat);
-            out.grads.flatten_prefix_into("branch.", &mut br_flat);
-            mr.global.allreduce_mean(&mut enc_flat);
-            mr.global.allreduce_mean(&mut br_flat);
+            if out.loss.is_finite() {
+                acc.record_step(out.loss, out.mae_e, out.mae_f);
+                out.grads.flatten_prefix_into("encoder.", &mut enc_flat);
+                out.grads.flatten_prefix_into("branch.", &mut br_flat);
+            } else {
+                skip_batch(cfg, &mut acc, mr.rank, epoch, step)?;
+                zero_flat(&mut enc_flat, enc_g.total_params());
+                zero_flat(&mut br_flat, br_g.total_params());
+            }
+            mr.global.allreduce_mean(&mut enc_flat)?;
+            mr.global.allreduce_mean(&mut br_flat)?;
             enc_g.unflatten_from(&enc_flat);
             br_g.unflatten_from(&br_flat);
             acc.comm += t2.elapsed();
@@ -913,6 +1142,7 @@ fn rank_loop_single_branch(
                 0,
             );
             warn_save_failure(epoch + 1, saved);
+            inject_checkpoint_corruption(plan, cfg, epoch + 1);
         }
         if stop {
             break;
@@ -943,6 +1173,7 @@ fn rank_loop_mtl_base(
     val_stores: BTreeMap<DatasetId, Arc<FeaturizedStore>>,
     datasets: &[DatasetId],
     resume: Option<Arc<TrainCheckpoint>>,
+    plan: &FaultPlan,
 ) -> anyhow::Result<RankResult> {
     let dims = engine.manifest.config.batch_dims();
     let (mut encoder, mut branches) = init_rank_params(engine, cfg, datasets);
@@ -958,7 +1189,7 @@ fn rank_loop_mtl_base(
     let (start_epoch, end_epoch) = epoch_range(cfg, resume.as_deref());
     let mut base_cg = 0u64;
     if let Some(ckpt) = &resume {
-        restore_params_broadcast(&mr.global, &mut encoder, &ckpt.model.encoder);
+        restore_params_broadcast(&mr.global, &mut encoder, &ckpt.model.encoder)?;
         let saved_heads = match &ckpt.model.heads {
             Heads::PerDataset(m) => m,
             Heads::Shared(_) => anyhow::bail!(
@@ -970,7 +1201,7 @@ fn rank_loop_mtl_base(
             let saved = saved_heads
                 .get(&d)
                 .ok_or_else(|| anyhow::anyhow!("checkpoint has no head for {}", d.name()))?;
-            restore_params_broadcast(&mr.global, b, saved);
+            restore_params_broadcast(&mr.global, b, saved)?;
             opt_brs[k].load_state(ckpt.opt_for(d)?)?;
         }
         opt_enc.load_state(&ckpt.opt_encoder)?;
@@ -1042,9 +1273,14 @@ fn rank_loop_mtl_base(
         // failure mode the multi-fidelity setting is about. Coverage is
         // recorded in the run log so truncation can never be silent again.
         let max_batches = per_ds_batches.iter().map(|b| b.len()).max().unwrap_or(0);
-        let steps = agree_steps(&mr, max_batches);
+        let steps = agree_steps(&mr, max_batches)?;
 
         for step in 0..steps {
+            inject_rank_faults(plan, &mr, epoch, step);
+            // A non-finite injection at (rank, epoch, step) hits the first
+            // dataset processed this step (deterministic: dataset order is
+            // the BTreeMap's).
+            let mut inject_nan = plan.nonfinite_at(mr.rank, epoch, step);
             // One batch per dataset through its branch; encoder grads mean.
             let mut enc_gsum: Option<Vec<f32>> = None;
             let mut br_grads: Vec<ParamSet> = Vec::with_capacity(datasets.len());
@@ -1061,7 +1297,19 @@ fn rank_loop_mtl_base(
                 let batch = &per_ds_batches[k][step % per_ds_batches[k].len()];
                 assemble_full(&mut full, &encoder, &branches[k].1);
                 let t1 = Instant::now();
-                let out = engine.train_step(&full, batch)?;
+                let mut out = engine.train_step_unchecked(&full, batch)?;
+                if std::mem::take(&mut inject_nan) {
+                    out.loss = f64::NAN;
+                }
+                if !out.loss.is_finite() {
+                    // Skip this dataset's batch: zero branch grads, no
+                    // encoder contribution; the collective payload below
+                    // stays structurally uniform so the group never skews.
+                    acc.exec += t1.elapsed();
+                    skip_batch(cfg, &mut acc, mr.rank, epoch, step)?;
+                    br_grads.push(branches_scratch_branch(engine));
+                    continue;
+                }
                 acc.exec += t1.elapsed();
                 loss_sum += out.loss;
                 mae_e_sum += out.mae_e;
@@ -1083,7 +1331,10 @@ fn rank_loop_mtl_base(
             // ONE global allreduce over P_s + N_h * P_h (the paper's
             // MTL-base payload): concatenate encoder mean + all branches.
             let t2 = Instant::now();
-            let mut enc_flat = enc_gsum.unwrap();
+            // None only when every local batch this step was skipped as
+            // non-finite: contribute a zero encoder gradient.
+            let mut enc_flat =
+                enc_gsum.unwrap_or_else(|| vec![0.0f32; encoder.total_params()]);
             for g in enc_flat.iter_mut() {
                 *g /= nh as f32;
             }
@@ -1095,7 +1346,7 @@ fn rank_loop_mtl_base(
                 br_lens.push(f.len());
                 payload.extend(f);
             }
-            mr.global.allreduce_mean(&mut payload);
+            mr.global.allreduce_mean(&mut payload)?;
             acc.comm += t2.elapsed();
 
             let t3 = Instant::now();
@@ -1136,8 +1387,8 @@ fn rank_loop_mtl_base(
                 val_count += b.n_graphs as f64;
             }
         }
-        let sums = mr.global.allgather_f64(val_local);
-        let counts = mr.global.allgather_f64(val_count);
+        let sums = mr.global.allgather_f64(val_local)?;
+        let counts = mr.global.allgather_f64(val_count)?;
         let n: f64 = counts.iter().sum();
         let val_loss = if n > 0.0 {
             sums.iter().sum::<f64>() / n
@@ -1181,6 +1432,7 @@ fn rank_loop_mtl_base(
                 0,
             );
             warn_save_failure(epoch + 1, saved);
+            inject_checkpoint_corruption(plan, cfg, epoch + 1);
         }
         if stop {
             break;
@@ -1223,6 +1475,7 @@ fn rank_loop_mtl_par(
     val_store: Arc<FeaturizedStore>,
     datasets: &[DatasetId],
     resume: Option<Arc<TrainCheckpoint>>,
+    plan: &FaultPlan,
 ) -> anyhow::Result<RankResult> {
     let dataset = datasets[mr.head];
     let dims = engine.manifest.config.batch_dims();
@@ -1248,7 +1501,7 @@ fn rank_loop_mtl_par(
         // Encoder arrives over the global broadcast from rank 0; each
         // head's branch over its sub-group broadcast from replica 0 —
         // Figure 3's two-level pattern, applied to restore traffic.
-        restore_params_broadcast(&mr.global, &mut encoder, &ckpt.model.encoder);
+        restore_params_broadcast(&mr.global, &mut encoder, &ckpt.model.encoder)?;
         let saved_branch = match &ckpt.model.heads {
             Heads::PerDataset(m) => m.get(&dataset).ok_or_else(|| {
                 anyhow::anyhow!("checkpoint has no head for {}", dataset.name())
@@ -1257,7 +1510,7 @@ fn rank_loop_mtl_par(
                 "checkpoint is shared-head but mode mtl-par is per-dataset"
             ),
         };
-        restore_params_broadcast(&mr.head_group, &mut branch, saved_branch);
+        restore_params_broadcast(&mr.head_group, &mut branch, saved_branch)?;
         opt_enc.load_state(&ckpt.opt_encoder)?;
         opt_br.load_state(ckpt.opt_for(dataset)?)?;
         if mr.rank == 0 {
@@ -1289,25 +1542,36 @@ fn rank_loop_mtl_par(
         );
         acc.data += t0.elapsed();
         let planned = batches.len();
-        let steps = agree_steps(&mr, batches.len());
+        let steps = agree_steps(&mr, batches.len())?;
 
         for step in 0..steps {
+            inject_rank_faults(plan, &mr, epoch, step);
             let batch = &batches[step % batches.len().max(1)];
             assemble_full(&mut full, &encoder, &branch);
 
             let t1 = Instant::now();
-            let out = engine.train_step(&full, batch)?;
+            let mut out = engine.train_step_unchecked(&full, batch)?;
+            if plan.nonfinite_at(mr.rank, epoch, step) {
+                out.loss = f64::NAN;
+            }
             acc.exec += t1.elapsed();
-            acc.record_step(out.loss, out.mae_e, out.mae_f);
 
             // Multi-task parallelism: encoder grads allreduce GLOBALLY
             // (P_s payload); branch grads only within the head sub-group
-            // (P_h payload) — Figure 3's two-level DDP.
+            // (P_h payload) — Figure 3's two-level DDP. A skipped
+            // non-finite batch still joins both collectives with zeros.
             let t2 = Instant::now();
-            out.grads.flatten_prefix_into("encoder.", &mut enc_flat);
-            out.grads.flatten_prefix_into("branch.", &mut br_flat);
-            mr.global.allreduce_mean(&mut enc_flat);
-            mr.head_group.allreduce_mean(&mut br_flat);
+            if out.loss.is_finite() {
+                acc.record_step(out.loss, out.mae_e, out.mae_f);
+                out.grads.flatten_prefix_into("encoder.", &mut enc_flat);
+                out.grads.flatten_prefix_into("branch.", &mut br_flat);
+            } else {
+                skip_batch(cfg, &mut acc, mr.rank, epoch, step)?;
+                zero_flat(&mut enc_flat, enc_g.total_params());
+                zero_flat(&mut br_flat, br_g.total_params());
+            }
+            mr.global.allreduce_mean(&mut enc_flat)?;
+            mr.head_group.allreduce_mean(&mut br_flat)?;
             enc_g.unflatten_from(&enc_flat);
             br_g.unflatten_from(&br_flat);
             acc.comm += t2.elapsed();
@@ -1345,7 +1609,7 @@ fn rank_loop_mtl_par(
                     write_moments(&st.m, &mut block[ph..2 * ph]);
                     write_moments(&st.v, &mut block[2 * ph..]);
                 }
-                mr.global.broadcast(root, &mut block);
+                mr.global.broadcast(root, &mut block)?;
                 head_blocks.push(block);
             }
             if mr.rank == 0 {
@@ -1381,6 +1645,7 @@ fn rank_loop_mtl_par(
                     base_ch + mr.head_group.stats().0,
                 );
                 warn_save_failure(epoch + 1, saved);
+                inject_checkpoint_corruption(plan, cfg, epoch + 1);
             }
         }
         if stop {
@@ -1407,6 +1672,7 @@ fn rank_loop_mtl_par(
 /// Branch-only training against a frozen, pre-trained encoder. DDP over
 /// the global group (one head), branch gradients only — the encoder is
 /// used exactly as given and never updated.
+#[allow(clippy::too_many_arguments)]
 fn rank_loop_fine_tune(
     engine: &Engine,
     cfg: &RunConfig,
@@ -1415,6 +1681,7 @@ fn rank_loop_fine_tune(
     val_store: Arc<FeaturizedStore>,
     encoder: &ParamSet,
     dataset: DatasetId,
+    plan: &FaultPlan,
 ) -> anyhow::Result<RankResult> {
     let dims = engine.manifest.config.batch_dims();
     let (_, mut branches) = init_rank_params(engine, cfg, &[dataset]);
@@ -1449,21 +1716,30 @@ fn rank_loop_fine_tune(
         );
         acc.data += t0.elapsed();
         let planned = batches.len();
-        let steps = agree_steps(&mr, batches.len());
+        let steps = agree_steps(&mr, batches.len())?;
 
         for step in 0..steps {
+            inject_rank_faults(plan, &mr, epoch, step);
             let batch = &batches[step % batches.len().max(1)];
             assemble_full(&mut full, encoder, &branch);
 
             let t1 = Instant::now();
-            let out = engine.train_step(&full, batch)?;
+            let mut out = engine.train_step_unchecked(&full, batch)?;
+            if plan.nonfinite_at(mr.rank, epoch, step) {
+                out.loss = f64::NAN;
+            }
             acc.exec += t1.elapsed();
-            acc.record_step(out.loss, out.mae_e, out.mae_f);
 
             // Branch gradients only; the frozen encoder's grads are dropped.
             let t2 = Instant::now();
-            out.grads.flatten_prefix_into("branch.", &mut br_flat);
-            mr.global.allreduce_mean(&mut br_flat);
+            if out.loss.is_finite() {
+                acc.record_step(out.loss, out.mae_e, out.mae_f);
+                out.grads.flatten_prefix_into("branch.", &mut br_flat);
+            } else {
+                skip_batch(cfg, &mut acc, mr.rank, epoch, step)?;
+                zero_flat(&mut br_flat, br_g.total_params());
+            }
+            mr.global.allreduce_mean(&mut br_flat)?;
             br_g.unflatten_from(&br_flat);
             acc.comm += t2.elapsed();
 

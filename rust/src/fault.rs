@@ -1,0 +1,363 @@
+//! Deterministic fault injection: the chaos half of the fault-tolerance
+//! story.
+//!
+//! The paper's pre-training runs span Perlmutter, Aurora and Frontier,
+//! where rank deaths, stragglers and corrupted files are routine — so the
+//! recovery machinery (failure-aware [`Comm`](crate::comm::Comm)
+//! collectives, [`Trainer::train_with_recovery`]
+//! (crate::coordinator::trainer::Trainer::train_with_recovery), serve-worker
+//! respawn) must be testable *deterministically*, not by waiting for real
+//! hardware to die. A [`FaultPlan`] is a parsed schedule of injected
+//! faults, threaded through `RunConfig.fault`, the `--faults` CLI flag, or
+//! the `HYDRA_MTP_FAULTS` env var, and compiled to a no-op when empty
+//! ([`FaultPlan::is_empty`] guards every hot-path query).
+//!
+//! ## Spec grammar
+//!
+//! Semicolon-separated entries, each `kind@key=value,key=value`:
+//!
+//! ```text
+//! rank-panic@rank=1,epoch=2,step=0      thread panic before the step
+//! stall@rank=0,epoch=1,step=3,ms=50     sleep injected before the step
+//! nonfinite@epoch=1,batch=0[,rank=R]    loss overridden to NaN (rank 0 default)
+//! corrupt-ckpt@epoch=2                  flip bytes in epoch_0002.ckpt after write
+//! serve-panic@batch=0                   serve worker panics on batch attempt B
+//! ```
+//!
+//! Trainer faults key on **(epoch, step-within-epoch)**, never a global
+//! step counter — the coordinates stay well-defined across resume
+//! boundaries. Every fault fires **at most once per plan instance**:
+//! recovery shares one `Arc<FaultPlan>` across restart attempts, so an
+//! injected rank kill cannot re-fire after the run resumes past it and
+//! kill the job forever.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// One scheduled fault. Trainer faults carry (epoch, step) coordinates;
+/// serving faults key on the worker-pool-wide batch attempt counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Rank `rank`'s training thread panics just before (epoch, step).
+    RankPanic { rank: usize, epoch: usize, step: usize },
+    /// Rank `rank` sleeps `ms` milliseconds before (epoch, step) — a
+    /// straggler; with a short collective timeout it becomes a
+    /// `CommError::Timeout` on its peers.
+    CommStall { rank: usize, epoch: usize, step: usize, ms: u64 },
+    /// Rank `rank`'s loss is overridden to NaN on batch `step` of `epoch`
+    /// (exercises the skip-batch path).
+    NonFiniteLoss { rank: usize, epoch: usize, step: usize },
+    /// The checkpoint file written with `epochs_done == epoch` gets bytes
+    /// flipped after the (atomic) write — exercises the CRC rescan.
+    CorruptCheckpoint { epoch: usize },
+    /// A serve worker panics while executing its `batch`-th batch attempt
+    /// (pool-wide counter, starting at 0).
+    ServePanic { batch: u64 },
+}
+
+/// A parsed, at-most-once-per-entry schedule of injected faults. Cheap to
+/// query: every accessor early-outs on [`FaultPlan::is_empty`], so a run
+/// with no faults configured pays one branch per step.
+///
+/// Not `Clone` (the fired flags are identity): share via `Arc`.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+    fired: Vec<AtomicBool>,
+    /// Serving batch-attempt counter (advanced by the worker pool).
+    serve_attempts: AtomicU64,
+}
+
+impl FaultPlan {
+    /// The empty plan: every query is a no-op.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Parse a fault spec (see the module docs for the grammar). An empty
+    /// or whitespace-only spec yields the empty plan.
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for entry in spec.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (kind, kvs) = match entry.split_once('@') {
+                Some((k, rest)) => (k.trim(), parse_kvs(entry, rest)?),
+                None => anyhow::bail!(
+                    "fault entry '{entry}' missing '@' (expected kind@key=value,...)"
+                ),
+            };
+            let get = |key: &str| -> anyhow::Result<u64> {
+                kvs.iter()
+                    .find(|(k, _)| k == key)
+                    .map(|&(_, v)| v)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("fault entry '{entry}' missing '{key}='")
+                    })
+            };
+            let opt = |key: &str| kvs.iter().find(|(k, _)| k == key).map(|&(_, v)| v);
+            for (k, _) in &kvs {
+                let known: &[&str] = match kind {
+                    "rank-panic" => &["rank", "epoch", "step"],
+                    "stall" => &["rank", "epoch", "step", "ms"],
+                    "nonfinite" => &["rank", "epoch", "batch"],
+                    "corrupt-ckpt" => &["epoch"],
+                    "serve-panic" => &["batch"],
+                    other => anyhow::bail!(
+                        "unknown fault kind '{other}' in '{entry}' (expected \
+                         rank-panic|stall|nonfinite|corrupt-ckpt|serve-panic)"
+                    ),
+                };
+                anyhow::ensure!(
+                    known.contains(&k.as_str()),
+                    "fault entry '{entry}': unknown key '{k}' for kind '{kind}'"
+                );
+            }
+            let fault = match kind {
+                "rank-panic" => Fault::RankPanic {
+                    rank: get("rank")? as usize,
+                    epoch: get("epoch")? as usize,
+                    step: get("step")? as usize,
+                },
+                "stall" => Fault::CommStall {
+                    rank: get("rank")? as usize,
+                    epoch: get("epoch")? as usize,
+                    step: get("step")? as usize,
+                    ms: get("ms")?,
+                },
+                "nonfinite" => Fault::NonFiniteLoss {
+                    rank: opt("rank").unwrap_or(0) as usize,
+                    epoch: get("epoch")? as usize,
+                    step: get("batch")? as usize,
+                },
+                "corrupt-ckpt" => Fault::CorruptCheckpoint { epoch: get("epoch")? as usize },
+                "serve-panic" => Fault::ServePanic { batch: get("batch")? },
+                _ => unreachable!("kind validated above"),
+            };
+            faults.push(fault);
+        }
+        let fired = faults.iter().map(|_| AtomicBool::new(false)).collect();
+        Ok(FaultPlan { faults, fired, serve_attempts: AtomicU64::new(0) })
+    }
+
+    /// Plan from the `HYDRA_MTP_FAULTS` env var (empty plan when unset or
+    /// blank). The CI chaos job injects faults into CLI runs this way.
+    pub fn from_env() -> anyhow::Result<FaultPlan> {
+        match std::env::var("HYDRA_MTP_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => FaultPlan::parse(&spec),
+            _ => Ok(FaultPlan::none()),
+        }
+    }
+
+    /// True when no faults are scheduled — the hot-path fast exit.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Scheduled entries (for logging/tests).
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// Fire-once matcher: returns true for the first query matching
+    /// `pred`, marking that entry consumed.
+    fn take(&self, pred: impl Fn(&Fault) -> bool) -> Option<Fault> {
+        for (i, f) in self.faults.iter().enumerate() {
+            if pred(f)
+                && self.fired[i]
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                return Some(*f);
+            }
+        }
+        None
+    }
+
+    /// Should `rank` panic before (epoch, step)? Fires at most once.
+    pub fn panic_at(&self, rank: usize, epoch: usize, step: usize) -> bool {
+        if self.is_empty() {
+            return false;
+        }
+        self.take(|f| {
+            matches!(f, Fault::RankPanic { rank: r, epoch: e, step: s }
+                if *r == rank && *e == epoch && *s == step)
+        })
+        .is_some()
+    }
+
+    /// Milliseconds `rank` should stall before (epoch, step), if any.
+    pub fn stall_ms(&self, rank: usize, epoch: usize, step: usize) -> Option<u64> {
+        if self.is_empty() {
+            return None;
+        }
+        match self.take(|f| {
+            matches!(f, Fault::CommStall { rank: r, epoch: e, step: s, .. }
+                if *r == rank && *e == epoch && *s == step)
+        }) {
+            Some(Fault::CommStall { ms, .. }) => Some(ms),
+            _ => None,
+        }
+    }
+
+    /// Should `rank`'s loss on batch (epoch, step) be overridden to NaN?
+    pub fn nonfinite_at(&self, rank: usize, epoch: usize, step: usize) -> bool {
+        if self.is_empty() {
+            return false;
+        }
+        self.take(|f| {
+            matches!(f, Fault::NonFiniteLoss { rank: r, epoch: e, step: s }
+                if *r == rank && *e == epoch && *s == step)
+        })
+        .is_some()
+    }
+
+    /// Should the checkpoint just written with `epochs_done == epoch` be
+    /// corrupted?
+    pub fn corrupt_after(&self, epoch: usize) -> bool {
+        if self.is_empty() {
+            return false;
+        }
+        self.take(|f| matches!(f, Fault::CorruptCheckpoint { epoch: e } if *e == epoch))
+            .is_some()
+    }
+
+    /// Called by a serve worker per batch attempt: advances the pool-wide
+    /// attempt counter and reports whether THIS attempt should panic.
+    pub fn serve_panic_next(&self) -> bool {
+        if self.is_empty() {
+            return false;
+        }
+        let idx = self.serve_attempts.fetch_add(1, Ordering::AcqRel);
+        self.take(|f| matches!(f, Fault::ServePanic { batch } if *batch == idx))
+            .is_some()
+    }
+}
+
+fn parse_kvs(entry: &str, rest: &str) -> anyhow::Result<Vec<(String, u64)>> {
+    let mut out = Vec::new();
+    for kv in rest.split(',') {
+        let kv = kv.trim();
+        if kv.is_empty() {
+            continue;
+        }
+        let (k, v) = kv.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("fault entry '{entry}': '{kv}' is not key=value")
+        })?;
+        let v: u64 = v.trim().parse().map_err(|e| {
+            anyhow::anyhow!("fault entry '{entry}': value of '{}' not a number: {e}", k.trim())
+        })?;
+        out.push((k.trim().to_string(), v));
+    }
+    anyhow::ensure!(!out.is_empty(), "fault entry '{entry}' has no key=value pairs");
+    Ok(out)
+}
+
+/// Best-effort human-readable message from a caught panic payload. Shared
+/// by the trainer's rank supervision and the serve workers' `catch_unwind`
+/// recovery path.
+pub fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Corrupt an on-disk checkpoint the way the CRC tests do: flip a byte in
+/// the middle of the file (payload region, past the header), in place.
+/// Used by the corrupt-ckpt fault and by tests building corrupt files.
+pub fn corrupt_file(path: &Path) -> std::io::Result<()> {
+    let mut bytes = std::fs::read(path)?;
+    if bytes.is_empty() {
+        return Ok(());
+    }
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(path, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_noop() {
+        let p = FaultPlan::parse("").unwrap();
+        assert!(p.is_empty());
+        assert!(!p.panic_at(0, 0, 0));
+        assert!(p.stall_ms(0, 0, 0).is_none());
+        assert!(!p.nonfinite_at(0, 0, 0));
+        assert!(!p.corrupt_after(0));
+        assert!(!p.serve_panic_next());
+        assert!(FaultPlan::parse("  ; ;").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parses_every_kind() {
+        let p = FaultPlan::parse(
+            "rank-panic@rank=1,epoch=2,step=0; stall@rank=0,epoch=1,step=3,ms=50; \
+             nonfinite@epoch=1,batch=4; corrupt-ckpt@epoch=2; serve-panic@batch=7",
+        )
+        .unwrap();
+        assert_eq!(
+            p.faults(),
+            &[
+                Fault::RankPanic { rank: 1, epoch: 2, step: 0 },
+                Fault::CommStall { rank: 0, epoch: 1, step: 3, ms: 50 },
+                Fault::NonFiniteLoss { rank: 0, epoch: 1, step: 4 },
+                Fault::CorruptCheckpoint { epoch: 2 },
+                Fault::ServePanic { batch: 7 },
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("rank-panic").is_err()); // no '@'
+        assert!(FaultPlan::parse("explode@rank=0").is_err()); // unknown kind
+        assert!(FaultPlan::parse("rank-panic@rank=0,epoch=1").is_err()); // missing step
+        assert!(FaultPlan::parse("rank-panic@rank=x,epoch=1,step=0").is_err()); // NaN value
+        assert!(FaultPlan::parse("corrupt-ckpt@epoch=1,rank=0").is_err()); // stray key
+    }
+
+    #[test]
+    fn faults_fire_at_most_once() {
+        let p = FaultPlan::parse("rank-panic@rank=1,epoch=2,step=0").unwrap();
+        assert!(!p.panic_at(0, 2, 0), "wrong rank must not fire");
+        assert!(!p.panic_at(1, 2, 1), "wrong step must not fire");
+        assert!(p.panic_at(1, 2, 0), "exact match fires");
+        assert!(!p.panic_at(1, 2, 0), "second query must NOT re-fire (recovery replay)");
+    }
+
+    #[test]
+    fn stall_returns_duration_once() {
+        let p = FaultPlan::parse("stall@rank=0,epoch=0,step=2,ms=25").unwrap();
+        assert_eq!(p.stall_ms(0, 0, 2), Some(25));
+        assert_eq!(p.stall_ms(0, 0, 2), None);
+    }
+
+    #[test]
+    fn serve_panic_keys_on_attempt_counter() {
+        let p = FaultPlan::parse("serve-panic@batch=1").unwrap();
+        assert!(!p.serve_panic_next(), "attempt 0 passes");
+        assert!(p.serve_panic_next(), "attempt 1 panics");
+        assert!(!p.serve_panic_next(), "attempt 2 passes (fired once)");
+    }
+
+    #[test]
+    fn corrupt_file_flips_a_payload_byte() {
+        let path = std::env::temp_dir()
+            .join(format!("hydra_mtp_fault_corrupt_{}.bin", std::process::id()));
+        std::fs::write(&path, vec![0u8; 64]).unwrap();
+        corrupt_file(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes.len(), 64, "corruption must not truncate");
+        assert_eq!(bytes.iter().filter(|&&b| b != 0).count(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+}

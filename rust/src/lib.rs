@@ -233,6 +233,49 @@
 //! `cargo bench --bench serving` records the same comparison in
 //! `BENCH_serving.json` (see EXPERIMENTS.md §Serving — quote only
 //! CI-artifact numbers).
+//!
+//! ## Fault tolerance
+//!
+//! Long pre-training runs on shared clusters fail in practice: ranks die,
+//! collectives stall, a bad batch yields NaN, a checkpoint file gets
+//! truncated mid-write. The crate treats each of these as a **typed,
+//! recoverable** event rather than a hang or an abort:
+//!
+//! - **Failure-aware collectives** — every group member installs a
+//!   [`comm::MemberGuard`]; a rank that panics or exits early *poisons* the
+//!   group on drop, waking all waiters with
+//!   [`CommError::RankFailure`](comm::CommError) naming the dead
+//!   rank. Waits are bounded by a configurable timeout
+//!   (`fault.comm_timeout_ms`) that surfaces as
+//!   [`CommError::Timeout`](comm::CommError) — a lost rank can never
+//!   deadlock the mesh.
+//! - **Batch supervision** — a non-finite loss skips the batch (the rank
+//!   contributes a zero gradient but still joins every collective, so the
+//!   group stays step-synchronized), counts it in
+//!   `EpochMetrics::skipped_batches`, and aborts only past a bounded
+//!   per-epoch budget (`fault.skip_batch_budget`).
+//! - **Rank-failure recovery** — `Trainer::train_with_recovery` (CLI:
+//!   `hydra-mtp train --faults .. --max-restarts N`) catches a typed rank
+//!   failure, rescans the checkpoint directory for the **latest CRC-valid**
+//!   file (corrupt or truncated files are warned about and skipped —
+//!   `--resume latest` shares the same scan), and relaunches, up to
+//!   `fault.max_restarts` times. Because resume is bit-identical, the
+//!   recovered run's final parameters equal the fault-free run's **bit for
+//!   bit** (`rust/tests/integration_chaos.rs`).
+//! - **Serving self-healing** — a panicking inference worker answers every
+//!   in-flight request in its batch with `ServeError::Internal` (no waiter
+//!   is ever stranded), then respawns; `ServeStats` counts respawns and
+//!   internal errors.
+//!
+//! All of this is exercised by **deterministic fault injection**
+//! ([`fault::FaultPlan`]): a seeded plan parsed from `RunConfig.fault.spec`
+//! or the `HYDRA_MTP_FAULTS` env var (grammar:
+//! `rank-panic@rank=R,epoch=E,step=S;corrupt-ckpt@epoch=E;...`) injects
+//! rank panics, collective stalls, non-finite losses, checkpoint
+//! corruption, and serve-worker panics at exact points. Each fault fires at
+//! most once, so a recovered run does not re-trip it. An empty plan is a
+//! guaranteed no-op: with no faults configured, every byte of behavior is
+//! identical to a build without the harness.
 
 pub mod checkpoint;
 pub mod comm;
@@ -240,6 +283,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod elements;
+pub mod fault;
 pub mod model;
 pub mod runtime;
 pub mod scalesim;
@@ -249,7 +293,9 @@ pub mod tasks;
 pub mod tensor;
 pub mod util;
 
-pub use config::{RunConfig, ServeConfig, TrainMode};
+pub use comm::CommError;
+pub use config::{FaultConfig, RunConfig, ServeConfig, TrainMode};
+pub use fault::FaultPlan;
 pub use runtime::{BackendKind, Engine, Precision};
 pub use serve::{ServeError, ServeStats, Server};
 pub use session::{Prediction, Predictor, Session, SessionBuilder};

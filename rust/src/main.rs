@@ -71,7 +71,8 @@ COMMANDS
   train    --mode MODE [--config FILE] [--epochs N] [--replicas M]
            [--per-dataset N] [--seed S] [--lr LR] [--backend auto|native|pjrt]
            [--precision f64|mixed-f32] [--artifacts DIR] [--csv FILE]
-           [--checkpoint-dir DIR] [--checkpoint-every N] [--resume PATH]
+           [--checkpoint-dir DIR] [--checkpoint-every N] [--resume PATH|latest]
+           [--faults SPEC] [--max-restarts N]
            MODE: ANI1x|QM7-X|Transition1x|MPTrj|Alexandria|baseline-all|mtl-base|mtl-par
            --backend native (the default resolution on artifact-less machines)
            trains with the pure-rust EGNN engine: no artifacts, no PJRT;
@@ -80,7 +81,15 @@ COMMANDS
            microkernels (f64 accumulation); f64 is the gradcheck oracle.
            Checkpoints record the precision: resume across precisions is refused
            --checkpoint-dir writes CRC-guarded epoch_NNNN.ckpt files; --resume
-           restarts bit-identically from a checkpoint file (or the newest in a dir)
+           restarts bit-identically from a checkpoint file (or the newest in a
+           dir); --resume latest scans --checkpoint-dir for the newest CRC-valid
+           file, skipping corrupt/truncated ones
+           Training runs under rank-failure supervision: a dead or stalled rank
+           surfaces as a typed error and the run restarts from the latest valid
+           checkpoint, up to --max-restarts times. --faults injects
+           deterministic faults for drills (also env HYDRA_MTP_FAULTS), e.g.
+           'rank-panic@rank=1,epoch=2,step=0;corrupt-ckpt@epoch=2' — kinds:
+           rank-panic, stall, nonfinite, corrupt-ckpt, serve-panic
   table1   [--epochs N] [--per-dataset N] [--replicas M] [--backend B] [--csv FILE]
   table2   (same flags; same training runs, force metric)
   fig1     [--per-dataset N] [--seed S] [--max-atoms A]
@@ -175,7 +184,15 @@ fn cmd_datagen(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let mut allowed = vec!["mode", "csv", "checkpoint-dir", "checkpoint-every", "resume"];
+    let mut allowed = vec![
+        "mode",
+        "csv",
+        "checkpoint-dir",
+        "checkpoint-every",
+        "resume",
+        "faults",
+        "max-restarts",
+    ];
     allowed.extend(CONFIG_FLAGS);
     args.ensure_known("train", &allowed)?;
 
@@ -190,6 +207,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.opt_str("resume") {
         cfg.checkpoint.resume = Some(path.to_string());
     }
+    if let Some(spec) = args.opt_str("faults") {
+        cfg.fault.spec = Some(spec.to_string());
+    }
+    if let Some(n) = args.opt_str("max-restarts") {
+        cfg.fault.max_restarts = n.parse()?;
+    }
     cfg.validate()?;
     println!("loading engine ({} backend requested) ...", cfg.backend.name());
     let mut session = Session::builder().config(cfg).build()?;
@@ -203,7 +226,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     // seed-era logs (training only, no data generation).
     session.generate_data();
     let t0 = std::time::Instant::now();
-    let outcome = session.train()?;
+    let outcome = session.train_with_recovery()?;
     println!("\n=== {} ===", outcome.model.name);
     for e in &outcome.log.epochs {
         println!("{}", e.summary());
@@ -400,7 +423,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         stats.avg_batch(),
         errors
     );
-    anyhow::ensure!(errors == 0, "{errors} requests failed");
+    if hydra_mtp::fault::FaultPlan::from_env()?.is_empty() {
+        anyhow::ensure!(errors == 0, "{errors} requests failed");
+    } else {
+        // Chaos mode (HYDRA_MTP_FAULTS set): the injected worker panic is
+        // the point. Require that it fired, was answered, and the worker
+        // recovered — CI's end-to-end serve-respawn check.
+        println!(
+            "chaos: {} worker respawn(s), {} request(s) answered with the \
+             typed internal error",
+            stats.respawned, stats.internal_errors
+        );
+        anyhow::ensure!(stats.respawned >= 1, "injected serve fault never fired");
+        anyhow::ensure!(
+            stats.served >= 1,
+            "server did not recover after the injected panic"
+        );
+    }
     Ok(())
 }
 

@@ -248,14 +248,29 @@ impl Engine {
     }
 
     /// One forward+backward pass: returns loss, MAEs, and named gradients.
+    /// A non-finite loss is an error here; the trainer's skip-batch
+    /// supervision uses [`Engine::train_step_unchecked`] and judges the
+    /// raw loss itself.
     pub fn train_step(
+        &self,
+        params: &ParamSet,
+        batch: &GraphBatch,
+    ) -> anyhow::Result<StepOut> {
+        let out = self.train_step_unchecked(params, batch)?;
+        anyhow::ensure!(out.loss.is_finite(), "train_step produced non-finite loss");
+        Ok(out)
+    }
+
+    /// As [`Engine::train_step`] but a non-finite loss is returned, not an
+    /// error — callers that can *recover* (the trainer skips the batch
+    /// within a bounded budget) inspect `out.loss` themselves.
+    pub fn train_step_unchecked(
         &self,
         params: &ParamSet,
         batch: &GraphBatch,
     ) -> anyhow::Result<StepOut> {
         let out = self.backend().train_step(&self.manifest, params, batch)?;
         self.count();
-        anyhow::ensure!(out.loss.is_finite(), "train_step produced non-finite loss");
         Ok(out)
     }
 

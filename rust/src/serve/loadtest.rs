@@ -16,6 +16,7 @@ use std::time::Instant;
 use crate::config::ServeConfig;
 use crate::coordinator::trainer::{Heads, TrainedModel};
 use crate::data::structures::{AtomicStructure, DatasetId};
+use crate::fault;
 use crate::model::params::ParamSet;
 use crate::runtime::Engine;
 use crate::serve::Server;
@@ -102,6 +103,10 @@ pub struct LoadTestReport {
     pub server: LegReport,
     /// Every server prediction bitwise equal to its sequential twin.
     pub bit_identical: bool,
+    /// Client threads that panicked mid-run. Their slots stay unanswered
+    /// (so `bit_identical` is false), but one bad client no longer takes
+    /// the whole report down.
+    pub failed_clients: usize,
 }
 
 impl LoadTestReport {
@@ -122,6 +127,7 @@ impl LoadTestReport {
             ("server", self.server.to_json()),
             ("speedup", Json::from(self.speedup())),
             ("bit_identical", Json::from(self.bit_identical)),
+            ("failed_clients", Json::from(self.failed_clients)),
         ])
     }
 }
@@ -141,7 +147,8 @@ fn same_bits(a: &Prediction, b: &Prediction) -> bool {
 /// against a fresh [`Server`] started with `cfg` — same process, same
 /// engine. Any failed request is an error; output divergence is not —
 /// it is reported in `bit_identical` so callers (bench, CLI) decide how
-/// loudly to fail.
+/// loudly to fail. A client thread that panics is likewise reported, in
+/// `failed_clients`, rather than propagating the panic out of the run.
 pub fn run_loadtest(
     engine: &Arc<Engine>,
     model: &TrainedModel,
@@ -169,6 +176,7 @@ pub fn run_loadtest(
     let mut srv_out: Vec<Option<Prediction>> = vec![None; structures.len()];
     let mut srv_lat = Vec::with_capacity(structures.len());
     let t0 = Instant::now();
+    let mut failed_clients = 0usize;
     let results: Vec<anyhow::Result<Vec<(usize, u64, Prediction)>>> =
         std::thread::scope(|scope| {
             let server = &server;
@@ -187,7 +195,21 @@ pub fn run_loadtest(
                     Ok(got)
                 }));
             }
-            handles.into_iter().map(|h| h.join().expect("client panicked")).collect()
+            handles
+                .into_iter()
+                .enumerate()
+                .filter_map(|(c, h)| match h.join() {
+                    Ok(r) => Some(r),
+                    Err(p) => {
+                        failed_clients += 1;
+                        eprintln!(
+                            "loadtest client {c} panicked: {}",
+                            fault::panic_message(p.as_ref())
+                        );
+                        None
+                    }
+                })
+                .collect()
         });
     let srv_wall = t0.elapsed().as_secs_f64();
     for r in results {
@@ -208,5 +230,6 @@ pub fn run_loadtest(
         sequential: leg(&mut seq_lat, 1, seq_wall, 1.0),
         server: leg(&mut srv_lat, clients, srv_wall, stats.avg_batch()),
         bit_identical,
+        failed_clients,
     })
 }

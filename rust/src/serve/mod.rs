@@ -28,6 +28,12 @@
 //! * **Graceful shutdown**: [`Server::shutdown`] (also on `Drop`) refuses
 //!   new work, drains the queue, and joins the workers; in-flight clients
 //!   get answers, late ones get [`ServeError::ShuttingDown`].
+//! * **Self-healing workers**: a panic inside a batch (engine bug, or a
+//!   fault injected via [`FaultPlan`]) is caught; every job in that batch
+//!   is answered with [`ServeError::Internal`] — a waiter is never
+//!   stranded — and the worker rebuilds its recycled state and keeps
+//!   serving. Respawns and internally-errored requests are counted in
+//!   [`ServeStats`].
 //!
 //! Bit-identity is the design invariant, not an accident: the eval-only
 //! forward replays the training forward's exact op order, padding slots
@@ -52,11 +58,12 @@ use crate::coordinator::trainer::TrainedModel;
 use crate::data::batch::{BatchDims, GraphBatch};
 use crate::data::graph::radius_graph;
 use crate::data::structures::{AtomicStructure, DatasetId};
+use crate::fault::FaultPlan;
 use crate::model::kernels::thread_cap;
 use crate::runtime::Engine;
 use crate::session::Prediction;
 
-use prepared::PreparedModel;
+use prepared::{PreparedModel, Workspace};
 use queue::{CoalescingQueue, Job};
 
 // ---------------------------------------------------------------------------
@@ -77,6 +84,10 @@ pub enum ServeError {
     NoHead { model: String, task: DatasetId },
     /// The engine failed while executing the batch (formatted cause).
     Engine(String),
+    /// A worker panicked while executing the request's batch (payload
+    /// message). The request is answered — never stranded — and the worker
+    /// respawns; retrying is safe.
+    Internal(String),
 }
 
 impl std::fmt::Display for ServeError {
@@ -97,6 +108,9 @@ impl std::fmt::Display for ServeError {
                 write!(f, "model '{}' has no head for task {}", model, task.name())
             }
             ServeError::Engine(msg) => write!(f, "engine error: {msg}"),
+            ServeError::Internal(msg) => {
+                write!(f, "internal server error: worker panicked: {msg}")
+            }
         }
     }
 }
@@ -112,6 +126,8 @@ struct Counters {
     served: AtomicU64,
     batches: AtomicU64,
     rejected: AtomicU64,
+    respawned: AtomicU64,
+    internal_errors: AtomicU64,
 }
 
 /// Snapshot of a server's lifetime counters.
@@ -124,6 +140,11 @@ pub struct ServeStats {
     /// Requests refused before reaching a worker (overload / too large /
     /// no head / shutting down).
     pub rejected: u64,
+    /// Worker respawns after an in-batch panic (0 on a healthy server).
+    pub respawned: u64,
+    /// Requests answered with [`ServeError::Internal`] because their
+    /// batch's worker panicked.
+    pub internal_errors: u64,
 }
 
 impl ServeStats {
@@ -148,6 +169,7 @@ struct Shared {
     cutoff: f64,
     wait: Duration,
     counters: Counters,
+    faults: Arc<FaultPlan>,
 }
 
 /// An always-on inference server over one [`TrainedModel`]. Construct via
@@ -162,11 +184,25 @@ pub struct Server {
 impl Server {
     /// Prepare the model, spawn the worker pool, and start accepting work.
     /// `cfg.workers == 0` sizes the pool by [`thread_cap`]
-    /// (`HYDRA_MTP_THREADS`, default 8).
+    /// (`HYDRA_MTP_THREADS`, default 8). Reads `HYDRA_MTP_FAULTS` for an
+    /// injected fault plan (no-op when unset).
     pub fn start(
         engine: Arc<Engine>,
         model: TrainedModel,
         cfg: ServeConfig,
+    ) -> anyhow::Result<Server> {
+        let faults = Arc::new(FaultPlan::from_env()?);
+        Server::start_with_faults(engine, model, cfg, faults)
+    }
+
+    /// [`Server::start`] with an explicit fault-injection plan — the chaos
+    /// harness entry point. Production callers use [`Server::start`], which
+    /// takes the plan from the environment (empty ⇒ zero behavior change).
+    pub fn start_with_faults(
+        engine: Arc<Engine>,
+        model: TrainedModel,
+        cfg: ServeConfig,
+        faults: Arc<FaultPlan>,
     ) -> anyhow::Result<Server> {
         let dims = engine.manifest.config.batch_dims();
         let cutoff = engine.manifest.config.cutoff;
@@ -181,6 +217,7 @@ impl Server {
             cutoff,
             wait: Duration::from_millis(cfg.enqueue_wait_ms),
             counters: Counters::default(),
+            faults,
         });
         let pool = if cfg.workers == 0 { thread_cap() } else { cfg.workers };
         let mut workers = Vec::with_capacity(pool);
@@ -237,13 +274,16 @@ impl Server {
         }
     }
 
-    /// Lifetime counters (served / batches / rejected).
+    /// Lifetime counters (served / batches / rejected / respawned /
+    /// internal errors).
     pub fn stats(&self) -> ServeStats {
         let c = &self.shared.counters;
         ServeStats {
             served: c.served.load(Ordering::Relaxed),
             batches: c.batches.load(Ordering::Relaxed),
             rejected: c.rejected.load(Ordering::Relaxed),
+            respawned: c.respawned.load(Ordering::Relaxed),
+            internal_errors: c.internal_errors.load(Ordering::Relaxed),
         }
     }
 
@@ -265,58 +305,79 @@ impl Drop for Server {
 }
 
 /// One worker: recycled batch + workspace, loop until the queue drains
-/// after shutdown.
+/// after shutdown. A panic inside a batch — an engine bug, or one injected
+/// by the fault plan — is caught: every job in the batch is answered with
+/// [`ServeError::Internal`] (a waiter is never stranded), the recycled
+/// batch and workspace are rebuilt from scratch, and the loop continues.
 fn worker_loop(sh: &Shared) {
     let mut batch = GraphBatch::empty(sh.dims);
     let mut ws = sh.prepared.workspace();
     while let Some(jobs) = sh.queue.next_batch(&sh.dims) {
-        batch.clear();
-        let mut packed = true;
-        for j in &jobs {
-            // Cannot fail: the queue admits by the same node/edge budget
-            // the batch enforces. Guarded anyway — a packing bug must
-            // surface as an error to the clients, not a wrong answer.
-            if let Err(e) = batch.push_inference(&j.species, &j.edges) {
-                let msg = format!("batch pack failed: {e}");
-                for j in &jobs {
-                    let _ = j.tx.send(Err(ServeError::Engine(msg.clone())));
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_batch(sh, &mut batch, &mut ws, &jobs);
+        }));
+        if let Err(p) = run {
+            let msg = crate::fault::panic_message(p.as_ref());
+            for j in &jobs {
+                let _ = j.tx.send(Err(ServeError::Internal(msg.clone())));
+            }
+            sh.counters.internal_errors.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+            sh.counters.respawned.fetch_add(1, Ordering::Relaxed);
+            // The panic may have interrupted a batch pack or forward
+            // mid-update; rebuild both recycled states before continuing.
+            batch = GraphBatch::empty(sh.dims);
+            ws = sh.prepared.workspace();
+        }
+    }
+}
+
+/// Pack and execute one coalesced batch, answering every job. Runs under
+/// `catch_unwind` in [`worker_loop`].
+fn run_batch(sh: &Shared, batch: &mut GraphBatch, ws: &mut Workspace, jobs: &[Job]) {
+    if sh.faults.serve_panic_next() {
+        panic!("injected fault: serve worker panics on batch");
+    }
+    batch.clear();
+    for j in jobs {
+        // Cannot fail: the queue admits by the same node/edge budget
+        // the batch enforces. Guarded anyway — a packing bug must
+        // surface as an error to the clients, not a wrong answer.
+        if let Err(e) = batch.push_inference(&j.species, &j.edges) {
+            let msg = format!("batch pack failed: {e}");
+            for j in jobs {
+                let _ = j.tx.send(Err(ServeError::Engine(msg.clone())));
+            }
+            return;
+        }
+    }
+    match sh.prepared.run(jobs[0].task, batch, ws) {
+        Ok(()) => {
+            sh.counters.batches.fetch_add(1, Ordering::Relaxed);
+            sh.counters.served.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+            let ev = ws.energy_per_atom();
+            let fv = ws.forces();
+            let mut node_base = 0usize;
+            for (g, j) in jobs.iter().enumerate() {
+                let n = j.species.len();
+                let epa = ev[g] as f64;
+                let mut fs = Vec::with_capacity(n);
+                for k in 0..n {
+                    let row = (node_base + k) * 3;
+                    fs.push([fv[row] as f64, fv[row + 1] as f64, fv[row + 2] as f64]);
                 }
-                packed = false;
-                break;
+                node_base += n;
+                let _ = j.tx.send(Ok(Prediction {
+                    dataset: j.task,
+                    energy: epa * n as f64,
+                    energy_per_atom: epa,
+                    forces: fs,
+                }));
             }
         }
-        if !packed {
-            continue;
-        }
-        match sh.prepared.run(jobs[0].task, &batch, &mut ws) {
-            Ok(()) => {
-                sh.counters.batches.fetch_add(1, Ordering::Relaxed);
-                sh.counters.served.fetch_add(jobs.len() as u64, Ordering::Relaxed);
-                let ev = ws.energy_per_atom();
-                let fv = ws.forces();
-                let mut node_base = 0usize;
-                for (g, j) in jobs.iter().enumerate() {
-                    let n = j.species.len();
-                    let epa = ev[g] as f64;
-                    let mut fs = Vec::with_capacity(n);
-                    for k in 0..n {
-                        let row = (node_base + k) * 3;
-                        fs.push([fv[row] as f64, fv[row + 1] as f64, fv[row + 2] as f64]);
-                    }
-                    node_base += n;
-                    let _ = j.tx.send(Ok(Prediction {
-                        dataset: j.task,
-                        energy: epa * n as f64,
-                        energy_per_atom: epa,
-                        forces: fs,
-                    }));
-                }
-            }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for j in &jobs {
-                    let _ = j.tx.send(Err(ServeError::Engine(msg.clone())));
-                }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for j in jobs {
+                let _ = j.tx.send(Err(ServeError::Engine(msg.clone())));
             }
         }
     }

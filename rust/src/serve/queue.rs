@@ -250,6 +250,32 @@ mod tests {
     }
 
     #[test]
+    fn shutdown_releases_blocked_submitters() {
+        use std::sync::Arc;
+        let q = Arc::new(CoalescingQueue::new(1));
+        let wait = Duration::from_secs(30);
+        let (j1, _r1) = job(DatasetId::Ani1x, 1, 1);
+        q.submit(j1, wait).unwrap();
+        // A second submitter blocks on the full queue with a long wait...
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let (j2, _r2) = job(DatasetId::Ani1x, 1, 1);
+            q2.submit(j2, wait)
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        // ...and shutdown must wake it promptly with the typed refusal,
+        // not strand it until the 30 s wait expires.
+        let t0 = Instant::now();
+        q.shutdown();
+        let res = h.join().unwrap();
+        assert!(matches!(res, Err(ServeError::ShuttingDown)), "got {res:?}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "blocked submitter not released promptly"
+        );
+    }
+
+    #[test]
     fn shutdown_drains_then_stops() {
         let q = CoalescingQueue::new(16);
         let wait = Duration::from_millis(10);

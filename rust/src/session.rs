@@ -263,6 +263,19 @@ impl Session {
         Trainer::new(Arc::clone(&self.engine), self.config.clone()).train(data)
     }
 
+    /// [`Session::train`] under rank-failure supervision: a run that dies
+    /// with a typed communication error restarts from the latest CRC-valid
+    /// checkpoint in `config.checkpoint.dir`, up to
+    /// `config.fault.max_restarts` times (see
+    /// `Trainer::train_with_recovery`). The CLI's `hydra-mtp train` routes
+    /// through this, so an injected or real rank failure self-heals.
+    pub fn train_with_recovery(&mut self) -> anyhow::Result<TrainOutcome> {
+        self.generate_data();
+        let data = self.data.as_ref().unwrap();
+        Trainer::new(Arc::clone(&self.engine), self.config.clone())
+            .train_with_recovery(data)
+    }
+
     /// Resume an interrupted run from `path` — a checkpoint file, or a
     /// directory of `epoch_*.ckpt` files (highest epoch wins). Restores
     /// parameters, optimizer moments, the metrics log, and the

@@ -49,16 +49,26 @@ impl BenchStats {
 /// Write a bench suite's stats as a machine-readable JSON artifact (e.g.
 /// `BENCH_hot_paths.json`). CI uploads the file; EXPERIMENTS.md §Perf
 /// tracks the trajectory across PRs.
+///
+/// Writes to `<path>.tmp` and renames into place, so a crash mid-write
+/// never leaves a truncated file where CI expects valid JSON.
 pub fn write_bench_json(
     path: impl AsRef<std::path::Path>,
     suite: &str,
     stats: &[BenchStats],
 ) -> std::io::Result<()> {
+    let path = path.as_ref();
     let doc = Json::obj(vec![
         ("suite", Json::str(suite)),
         ("results", Json::Array(stats.iter().map(BenchStats::to_json).collect())),
     ]);
-    std::fs::write(path, format!("{doc}\n"))
+    let tmp = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".tmp");
+        std::path::PathBuf::from(os)
+    };
+    std::fs::write(&tmp, format!("{doc}\n"))?;
+    std::fs::rename(&tmp, path)
 }
 
 /// Benchmark `f`, spending roughly `budget` of wall clock after `warmup`

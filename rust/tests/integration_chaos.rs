@@ -1,0 +1,354 @@
+//! Integration: the chaos harness — deterministic fault injection and the
+//! recovery machinery it exercises.
+//!
+//! Four headline properties:
+//!
+//! 1. a rank panic surfaces on its peers as a **typed**
+//!    [`CommError::RankFailure`] naming the dead rank, never a deadlock;
+//! 2. a mid-training rank kill under [`Trainer::train_with_recovery`]
+//!    resumes from the latest CRC-valid checkpoint (skipping a corrupted
+//!    one) and finishes with parameters **bit-identical** to a fault-free
+//!    run;
+//! 3. an injected non-finite loss is skipped and counted
+//!    (`skipped_batches`), and training still descends;
+//! 4. an injected serve-worker panic answers every in-flight request with
+//!    [`ServeError::Internal`] (no stranded waiters), the worker respawns,
+//!    and subsequent requests stay bit-identical to `predict_one`.
+//!
+//! Fault plans are passed programmatically (`cfg.fault.spec` /
+//! `FaultPlan::parse`), never via `HYDRA_MTP_FAULTS` — tests run in
+//! parallel and must not race on process-wide env state. The env path is
+//! exercised by the CI `chaos-release` job's CLI invocations.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hydra_mtp::comm::{Comm, CommError};
+use hydra_mtp::config::{RunConfig, TrainMode};
+use hydra_mtp::coordinator::{DataBundle, Heads, TrainedModel, Trainer};
+use hydra_mtp::data::generators::{DatasetGenerator, GeneratorConfig};
+use hydra_mtp::data::structures::DatasetId;
+use hydra_mtp::fault::FaultPlan;
+use hydra_mtp::model::params::ParamSet;
+use hydra_mtp::runtime::{Engine, ManifestConfig, Precision};
+use hydra_mtp::serve::loadtest::synthetic_model;
+use hydra_mtp::serve::{ServeError, Server};
+use hydra_mtp::session::Predictor;
+use hydra_mtp::tensor::DType;
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+fn engine() -> Arc<Engine> {
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            let e = Engine::load("artifacts").expect("engine loads on every machine");
+            eprintln!("chaos tests run on the '{}' backend", e.backend_name());
+            Arc::new(e)
+        })
+        .clone()
+}
+
+fn tiny_config(mode: TrainMode, epochs: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.mode = mode;
+    cfg.parallel.replicas = 1;
+    cfg.train.epochs = epochs;
+    cfg.train.patience = 0;
+    cfg.data.per_dataset = 40;
+    cfg.data.max_atoms = 10;
+    cfg
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("hydra_mtp_chaos_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_params_bits_eq(a: &ParamSet, b: &ParamSet, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: leaf count");
+    for ((na, ta), (nb, tb)) in a.iter().zip(b.iter()) {
+        assert_eq!(na, nb, "{what}: leaf name");
+        match ta.dtype() {
+            DType::F32 => {
+                let (xa, xb) = (ta.as_f32(), tb.as_f32());
+                assert_eq!(xa.len(), xb.len(), "{what}: {na} numel");
+                for (i, (x, y)) in xa.iter().zip(xb).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{what}: {na}[{i}]: {x} vs {y} (bitwise)"
+                    );
+                }
+            }
+            DType::I32 => assert_eq!(ta.as_i32(), tb.as_i32(), "{what}: {na}"),
+        }
+    }
+}
+
+fn assert_models_bits_eq(a: &TrainedModel, b: &TrainedModel) {
+    assert_params_bits_eq(&a.encoder, &b.encoder, "encoder");
+    match (&a.heads, &b.heads) {
+        (Heads::Shared(x), Heads::Shared(y)) => assert_params_bits_eq(x, y, "shared head"),
+        (Heads::PerDataset(x), Heads::PerDataset(y)) => {
+            assert_eq!(x.len(), y.len(), "head count");
+            for (d, bx) in x {
+                assert_params_bits_eq(bx, &y[d], &format!("head {}", d.name()));
+            }
+        }
+        _ => panic!("heads kind mismatch"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. rank death surfaces as a typed error, never a deadlock
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rank_panic_surfaces_as_typed_rank_failure_on_peers() {
+    // Three group members with a bounded collective timeout. Member 0
+    // panics while holding a member guard; 1 and 2 sit in an allreduce.
+    // The guard's drop poisons the group, so both peers must return
+    // Err(RankFailure { rank: 0 }) promptly — not hang, not time out.
+    let comms = Comm::group_with(3, Duration::from_secs(10), None);
+    let results: Vec<Result<Result<(), CommError>, String>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .enumerate()
+                .map(|(rank, c)| {
+                    scope.spawn(move || {
+                        let guard = c.member_guard();
+                        if rank == 0 {
+                            panic!("injected fault: rank 0 dies before the collective");
+                        }
+                        let mut data = vec![rank as f32; 64];
+                        let out = c.allreduce_mean(&mut data);
+                        if out.is_ok() {
+                            guard.disarm();
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().map_err(|_| "panicked".to_string()))
+                .collect()
+        });
+
+    assert!(results[0].is_err(), "rank 0 must have panicked");
+    for (rank, r) in results.iter().enumerate().skip(1) {
+        match r {
+            Ok(Err(CommError::RankFailure { rank: dead })) => {
+                assert_eq!(*dead, 0, "peer {rank} must name the dead rank");
+            }
+            other => panic!("peer {rank}: expected RankFailure {{ rank: 0 }}, got {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. rank kill + corrupt checkpoint -> recovery, bit-identical to fault-free
+// ---------------------------------------------------------------------------
+
+#[test]
+fn recovery_from_rank_kill_is_bit_identical_to_fault_free_run() {
+    let e = engine();
+    let datasets = [DatasetId::Ani1x];
+    let epochs = 4;
+
+    // Reference: fault-free, uninterrupted.
+    let mut cfg_ref = tiny_config(TrainMode::Single(DatasetId::Ani1x), epochs);
+    cfg_ref.parallel.replicas = 2;
+    let data = DataBundle::generate(&cfg_ref.data, &datasets);
+    let reference = Trainer::new(Arc::clone(&e), cfg_ref.clone()).train(&data).unwrap();
+
+    // Chaos run: checkpoints every epoch; the file written after epoch 1
+    // (epoch_0002.ckpt) is corrupted on disk, then rank 1 is killed at the
+    // start of epoch 2. Recovery must warn-and-skip the corrupt file,
+    // resume from epoch_0001.ckpt, and (fire-once faults) run clean to the
+    // end. The final model must match the reference to the last bit.
+    let dir = tmp_dir("recovery");
+    let mut cfg = cfg_ref.clone();
+    cfg.checkpoint.dir = Some(dir.to_string_lossy().into_owned());
+    cfg.fault.spec =
+        Some("corrupt-ckpt@epoch=2;rank-panic@rank=1,epoch=2,step=0".to_string());
+    cfg.fault.max_restarts = 2;
+    cfg.fault.comm_timeout_ms = 10_000;
+    let recovered = Trainer::new(Arc::clone(&e), cfg).train_with_recovery(&data).unwrap();
+
+    assert_models_bits_eq(&recovered.model, &reference.model);
+    assert_eq!(recovered.log.epochs.len(), reference.log.epochs.len());
+    for (ea, eb) in recovered.log.epochs.iter().zip(&reference.log.epochs) {
+        assert_eq!(ea.steps, eb.steps, "epoch {}", ea.epoch);
+        assert_eq!(
+            ea.train_loss.to_bits(),
+            eb.train_loss.to_bits(),
+            "epoch {} train_loss",
+            ea.epoch
+        );
+        assert_eq!(ea.val_loss.to_bits(), eb.val_loss.to_bits(), "epoch {}", ea.epoch);
+        assert_eq!(ea.skipped_batches, 0, "no skips in either run");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn recovery_gives_up_after_max_restarts_with_the_typed_cause() {
+    // A panic re-injected on every attempt (one entry per attempt, all at
+    // the same coordinates a restart-from-scratch replays) must exhaust
+    // max_restarts and surface the rank failure, not loop forever.
+    let e = engine();
+    let mut cfg = tiny_config(TrainMode::Single(DatasetId::Qm7x), 2);
+    cfg.parallel.replicas = 2;
+    // No checkpoint dir: every retry is a cold restart, so epoch 0 step 0
+    // is replayed each time and each entry fires on one attempt.
+    cfg.fault.spec = Some(
+        "rank-panic@rank=0,epoch=0,step=0;rank-panic@rank=0,epoch=0,step=0"
+            .to_string(),
+    );
+    cfg.fault.max_restarts = 1;
+    cfg.fault.comm_timeout_ms = 10_000;
+    let data = DataBundle::generate(&cfg.data, &[DatasetId::Qm7x]);
+    let err = Trainer::new(e, cfg).train_with_recovery(&data).unwrap_err();
+    let failure = err.chain().find_map(|c| c.downcast_ref::<CommError>());
+    match failure {
+        Some(CommError::RankFailure { rank }) => assert_eq!(*rank, 0),
+        other => panic!("expected RankFailure {{ rank: 0 }}, got {other:?}: {err:#}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. non-finite loss -> skip + count, training continues
+// ---------------------------------------------------------------------------
+
+#[test]
+fn injected_nonfinite_loss_is_skipped_counted_and_training_descends() {
+    let e = engine();
+    let mut cfg = tiny_config(TrainMode::Single(DatasetId::Ani1x), 4);
+    cfg.fault.spec = Some("nonfinite@epoch=1,batch=0".to_string());
+    let data = DataBundle::generate(&cfg.data, &[DatasetId::Ani1x]);
+    let out = Trainer::new(e, cfg).train(&data).unwrap();
+
+    for ep in &out.log.epochs {
+        let expect = if ep.epoch == 1 { 1 } else { 0 };
+        assert_eq!(
+            ep.skipped_batches, expect,
+            "epoch {}: skipped_batches",
+            ep.epoch
+        );
+        assert!(ep.train_loss.is_finite(), "epoch {}: loss finite", ep.epoch);
+    }
+    let first = out.log.epochs.first().unwrap().train_loss;
+    let last = out.log.epochs.last().unwrap().train_loss;
+    assert!(
+        last < first,
+        "training must still descend across the skipped batch: {first} -> {last}"
+    );
+}
+
+#[test]
+fn exhausted_skip_budget_aborts_instead_of_training_on_garbage() {
+    let e = engine();
+    let mut cfg = tiny_config(TrainMode::Single(DatasetId::Ani1x), 2);
+    // Two injected NaN batches against a budget of one.
+    cfg.fault.spec = Some("nonfinite@epoch=0,batch=0;nonfinite@epoch=0,batch=1".to_string());
+    cfg.fault.skip_batch_budget = 1;
+    let data = DataBundle::generate(&cfg.data, &[DatasetId::Ani1x]);
+    let err = Trainer::new(e, cfg).train(&data).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("skip"), "expected a skip-budget error, got: {msg}");
+}
+
+// ---------------------------------------------------------------------------
+// 4. serve-worker panic -> Internal answers, respawn, bit-identity restored
+// ---------------------------------------------------------------------------
+
+fn small_config() -> ManifestConfig {
+    let mut c = ManifestConfig::default_native();
+    c.max_nodes = 64;
+    c.max_edges = 512;
+    c.max_graphs = 8;
+    c.hidden = 32;
+    c.num_layers = 2;
+    c.num_rbf = 8;
+    c.head_hidden = 32;
+    c
+}
+
+#[test]
+fn serve_worker_panic_answers_inflight_then_respawns_bit_identical() {
+    let e = Arc::new(Engine::native_with(small_config(), Precision::F64));
+    let tasks = [DatasetId::Ani1x];
+    let model = synthetic_model(&e, &tasks, 7);
+    let gen_cfg = GeneratorConfig { max_atoms: 8, ..Default::default() };
+    let ss = DatasetGenerator::new(DatasetId::Ani1x, 42, gen_cfg).take(6);
+
+    let plan = Arc::new(FaultPlan::parse("serve-panic@batch=0").unwrap());
+    let cfg = hydra_mtp::config::ServeConfig {
+        workers: 1,
+        queue_capacity: 64,
+        enqueue_wait_ms: 5_000,
+        latency_budget_ms: 1_000.0,
+    };
+    let server = Server::start_with_faults(Arc::clone(&e), model.clone(), cfg, plan).unwrap();
+
+    // Sequential requests: the first lands in batch attempt 0, whose
+    // worker panics — it must be ANSWERED with the typed internal error,
+    // not left waiting on a dead worker's channel.
+    match server.predict(&ss[0]) {
+        Err(ServeError::Internal(msg)) => {
+            assert!(msg.contains("injected fault"), "payload surfaced: {msg}")
+        }
+        other => panic!("expected Internal for the poisoned batch, got {other:?}"),
+    }
+
+    // The worker respawned: every later request succeeds and matches the
+    // sequential predict_one path bit for bit.
+    let mut seq = Predictor::new(Arc::clone(&e), model);
+    for s in &ss[1..] {
+        let got = server.predict(s).expect("post-respawn request served");
+        let want = seq.predict_one(s).unwrap();
+        assert_eq!(got.energy.to_bits(), want.energy.to_bits());
+        assert_eq!(got.energy_per_atom.to_bits(), want.energy_per_atom.to_bits());
+        assert_eq!(got.forces.len(), want.forces.len());
+        for (fa, fb) in got.forces.iter().zip(&want.forces) {
+            for k in 0..3 {
+                assert_eq!(fa[k].to_bits(), fb[k].to_bits());
+            }
+        }
+    }
+
+    let stats = server.stats();
+    server.shutdown();
+    assert!(stats.respawned >= 1, "worker recovery counted: {stats:?}");
+    assert!(stats.internal_errors >= 1, "internal answers counted: {stats:?}");
+    assert_eq!(stats.served, (ss.len() - 1) as u64, "all later requests served");
+}
+
+// ---------------------------------------------------------------------------
+// guard: a disabled plan changes nothing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn empty_fault_plan_is_bit_identical_to_no_fault_config() {
+    let e = engine();
+    let cfg_plain = tiny_config(TrainMode::Single(DatasetId::Qm7x), 2);
+    let data = DataBundle::generate(&cfg_plain.data, &[DatasetId::Qm7x]);
+    let plain = Trainer::new(Arc::clone(&e), cfg_plain.clone()).train(&data).unwrap();
+
+    // Same run with the fault subsystem explicitly configured but empty:
+    // recovery wrapper, empty spec, custom timeout. Zero behavior change.
+    let mut cfg = cfg_plain;
+    cfg.fault.spec = Some(String::new());
+    cfg.fault.max_restarts = 3;
+    cfg.fault.comm_timeout_ms = 30_000;
+    let wrapped = Trainer::new(e, cfg).train_with_recovery(&data).unwrap();
+    assert_models_bits_eq(&wrapped.model, &plain.model);
+}

@@ -120,7 +120,7 @@ fn prop_allreduce_mean_is_exact_average() {
                     .zip(data2)
                     .map(|(c, mut d)| {
                         s.spawn(move || {
-                            c.allreduce_mean(&mut d);
+                            c.allreduce_mean(&mut d).unwrap();
                             d
                         })
                     })
@@ -185,7 +185,7 @@ fn prop_mesh_subgroup_reductions_are_isolated() {
                     .map(|mr| {
                         s.spawn(move || {
                             let mut v = vec![(mr.head * 100 + mr.replica) as f32];
-                            mr.head_group.allreduce_mean(&mut v);
+                            mr.head_group.allreduce_mean(&mut v).unwrap();
                             (mr.head, v[0])
                         })
                     })
