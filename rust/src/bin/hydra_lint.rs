@@ -1,0 +1,94 @@
+//! `hydra_lint` — the blocking static-analysis gate (see
+//! `hydra_mtp::lint` for the five rules). Walks the source tree, prints
+//! `file:line` diagnostics for every violation, writes the
+//! machine-readable `LINT_report.json`, and exits nonzero when any
+//! unannotated violation exists. Lints its own sources like any others.
+//!
+//! ```text
+//! hydra_lint [--root DIR] [--json PATH] [--quiet]
+//! ```
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use hydra_mtp::lint;
+
+const HELP: &str = "hydra_lint: static invariant checks for hydra-mtp
+
+USAGE:
+    hydra_lint [--root DIR] [--json PATH] [--quiet]
+
+OPTIONS:
+    --root DIR    Source root to scan (default: rust/src, else src)
+    --json PATH   Report path (default: LINT_report.json)
+    --quiet       Suppress human diagnostics (exit code + JSON only)
+    --help        Show this help
+
+Rules: nondeterministic, panic, collective, config, env (see the
+lint module docs for scopes and the lint:allow annotation grammar).
+";
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut json_path = PathBuf::from("LINT_report.json");
+    let mut quiet = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = Some(PathBuf::from(v)),
+                None => return usage("--root needs a value"),
+            },
+            "--json" => match args.next() {
+                Some(v) => json_path = PathBuf::from(v),
+                None => return usage("--json needs a value"),
+            },
+            "--quiet" => quiet = true,
+            "--help" | "-h" => {
+                print!("{HELP}");
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+    let root = root.unwrap_or_else(default_root);
+    if !root.is_dir() {
+        eprintln!("hydra_lint: scan root {} is not a directory", root.display());
+        return ExitCode::from(2);
+    }
+    let report = match lint::run(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("hydra_lint: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    if let Err(e) = std::fs::write(&json_path, report.to_json().to_string()) {
+        eprintln!("hydra_lint: cannot write {}: {e}", json_path.display());
+        return ExitCode::from(2);
+    }
+    if !quiet {
+        print!("{}", report.render_human());
+    }
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn default_root() -> PathBuf {
+    let preferred = PathBuf::from("rust/src");
+    if preferred.is_dir() {
+        preferred
+    } else {
+        PathBuf::from("src")
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("hydra_lint: {msg}\n\n{HELP}");
+    ExitCode::from(2)
+}

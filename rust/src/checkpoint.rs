@@ -434,12 +434,26 @@ fn read_container(kind: u8, path: &Path) -> anyhow::Result<Vec<u8>> {
         path.display(),
         bytes.len()
     );
+    // Byte-range accessor: a typed "truncated" error instead of a slice
+    // panic when an offset is out of range. The length checks above and
+    // below dominate every use, but checkpoint bytes are untrusted input —
+    // decode must fail with context (hydra-lint R2 bans raw range
+    // indexing on this path).
+    let field = |lo: usize, hi: usize, what: &str| -> anyhow::Result<&[u8]> {
+        bytes.get(lo..hi).ok_or_else(|| {
+            anyhow::anyhow!(
+                "{}: truncated checkpoint: {what} needs bytes {lo}..{hi}, file has {}",
+                path.display(),
+                bytes.len()
+            )
+        })
+    };
     anyhow::ensure!(
-        &bytes[..4] == MAGIC,
+        field(0, 4, "magic")? == MAGIC,
         "{}: not a hydra-mtp checkpoint (bad magic)",
         path.display()
     );
-    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    let version = u32::from_le_bytes(arr4(field(4, 8, "version")?));
     anyhow::ensure!(
         version == VERSION,
         "{}: unsupported checkpoint version {version} (this build reads v{VERSION})",
@@ -453,7 +467,7 @@ fn read_container(kind: u8, path: &Path) -> anyhow::Result<Vec<u8>> {
         kind_name(got_kind),
         kind_name(kind)
     );
-    let plen = u64::from_le_bytes(bytes[9..17].try_into().unwrap());
+    let plen = u64::from_le_bytes(arr8(field(9, 17, "payload length")?));
     anyhow::ensure!(
         plen == (bytes.len() - HEADER_LEN - TRAILER_LEN) as u64,
         "{}: truncated or oversized checkpoint ({} payload bytes recorded, {} present)",
@@ -462,11 +476,11 @@ fn read_container(kind: u8, path: &Path) -> anyhow::Result<Vec<u8>> {
         bytes.len() - HEADER_LEN - TRAILER_LEN
     );
     let plen = plen as usize;
-    let payload = &bytes[HEADER_LEN..HEADER_LEN + plen];
+    let payload = field(HEADER_LEN, HEADER_LEN + plen, "payload")?;
     let crc_stored =
-        u32::from_le_bytes(bytes[HEADER_LEN + plen..HEADER_LEN + plen + 4].try_into().unwrap());
+        u32::from_le_bytes(arr4(field(HEADER_LEN + plen, HEADER_LEN + plen + 4, "checksum")?));
     anyhow::ensure!(
-        &bytes[HEADER_LEN + plen + 4..] == MAGIC_END,
+        field(HEADER_LEN + plen + 4, bytes.len(), "trailing magic")? == MAGIC_END,
         "{}: bad trailing magic",
         path.display()
     );
@@ -489,6 +503,17 @@ fn read_container(kind: u8, path: &Path) -> anyhow::Result<Vec<u8>> {
 // ---------------------------------------------------------------------------
 // byte-level primitives
 // ---------------------------------------------------------------------------
+
+/// Fixed-width array from an exactly-sized slice, by scalar indexing — no
+/// `try_into().unwrap()` on the untrusted-input decode path (hydra-lint R2).
+/// Callers pass slices whose length the byte-range accessors already proved.
+fn arr4(b: &[u8]) -> [u8; 4] {
+    [b[0], b[1], b[2], b[3]]
+}
+
+fn arr8(b: &[u8]) -> [u8; 8] {
+    [b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]
+}
 
 #[derive(Default)]
 struct Enc {
@@ -542,7 +567,9 @@ impl<'a> Dec<'a> {
             self.pos,
             self.buf.len() - self.pos
         );
-        let s = &self.buf[self.pos..self.pos + n];
+        let s = self.buf.get(self.pos..self.pos + n).ok_or_else(|| {
+            anyhow::anyhow!("checkpoint payload truncated at offset {}", self.pos)
+        })?;
         self.pos += n;
         Ok(s)
     }
@@ -550,10 +577,10 @@ impl<'a> Dec<'a> {
         Ok(self.take(1)?[0])
     }
     fn u32(&mut self) -> anyhow::Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(arr4(self.take(4)?)))
     }
     fn u64(&mut self) -> anyhow::Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(arr8(self.take(8)?)))
     }
     /// Length/count field: bounded so a corrupt length cannot trigger a
     /// huge allocation before the next bounds check.
@@ -575,18 +602,12 @@ impl<'a> Dec<'a> {
     fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
         let n = self.usize()?;
         let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("overflow"))?)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(arr4(c))).collect())
     }
     fn i32s(&mut self) -> anyhow::Result<Vec<i32>> {
         let n = self.usize()?;
         let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("overflow"))?)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(arr4(c))).collect())
     }
     /// Every byte must be consumed; trailing garbage means a reader/writer
     /// mismatch even when the CRC is intact (e.g. a hand-edited file).

@@ -208,6 +208,7 @@ impl Comm {
         st: MutexGuard<'a, RoundState>,
         deadline: Instant,
     ) -> Result<MutexGuard<'a, RoundState>, CommError> {
+        // lint:allow(nondeterministic): wall-clock bounds the failure-detection wait only
         let now = Instant::now();
         if now >= deadline {
             return Err(CommError::Timeout {
@@ -239,6 +240,7 @@ impl Comm {
             sh.reduced_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
             return Ok(());
         }
+        // lint:allow(nondeterministic): deadline clock never feeds reduced values or ordering
         let deadline = Instant::now() + sh.timeout;
         let mut st = lock(sh);
         // Gate: previous round must fully drain first. A poisoned group
@@ -318,6 +320,7 @@ impl Comm {
             sh.reduced_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
             return Ok(());
         }
+        // lint:allow(nondeterministic): deadline clock never feeds broadcast payloads
         let deadline = Instant::now() + sh.timeout;
         let mut st = lock(sh);
         loop {

@@ -237,6 +237,29 @@ pub struct RunConfig {
     pub fault: FaultConfig,
 }
 
+/// `RunConfig` leaves deliberately **excluded** from
+/// [`RunConfig::trajectory_fingerprint_resolved`], each with the reason it
+/// cannot change a training trajectory. hydra-lint rule R4 checks this
+/// table against the struct: every leaf must be fingerprinted or listed
+/// here (never both, never neither), so adding a field forces an explicit
+/// trajectory-relevance decision instead of silently skipping the resume
+/// guard — the manual-exclusion failure mode PR 6/7 worked around.
+pub const FINGERPRINT_EXCLUDED: &[(&str, &str)] = &[
+    ("artifacts_dir", "output location only; no effect on computed values"),
+    ("train.epochs", "resume may extend a run; epochs are progress, not trajectory shape"),
+    ("checkpoint.dir", "where snapshots land, not what they contain"),
+    ("checkpoint.every", "snapshot cadence; the saved states themselves are unchanged"),
+    ("checkpoint.resume", "names the snapshot being validated; cannot fingerprint itself"),
+    ("serve.workers", "serving-only; inference never mutates trained state"),
+    ("serve.queue_capacity", "serving-only admission bound"),
+    ("serve.enqueue_wait_ms", "serving-only backpressure wait"),
+    ("serve.latency_budget_ms", "serving-only reporting target"),
+    ("fault.spec", "faults fire once; recovery restores the fault-free trajectory"),
+    ("fault.max_restarts", "recovery attempt bound; resumes are bit-identical"),
+    ("fault.comm_timeout_ms", "failure-detection deadline; healthy runs never hit it"),
+    ("fault.skip_batch_budget", "abort bound; healthy runs never hit it"),
+];
+
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {

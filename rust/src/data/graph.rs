@@ -109,12 +109,14 @@ fn dense_scan(positions: &[[f64; 3]], cutoff: f64) -> Vec<Edge> {
 }
 
 /// Cell binning: a flat counting-sort grid over the bounding box when the
-/// box is dense enough to materialize, hashed buckets otherwise (sparse or
-/// elongated systems). Either way the per-cell membership is identical to
-/// the seed's `HashMap<(i64,i64,i64), Vec<usize>>`.
+/// box is dense enough to materialize, sorted-key buckets otherwise (sparse
+/// or elongated systems). Either way the per-cell membership is identical to
+/// the seed's `HashMap<(i64,i64,i64), Vec<usize>>` — but the sparse arm uses
+/// a `BTreeMap` so iteration order (and any future traversal of the index)
+/// is a pure function of the coordinates, never of `RandomState`.
 enum CellIndex {
     Flat { dims: [i64; 3], start: Vec<u32>, items: Vec<u32> },
-    Hashed(std::collections::HashMap<[i64; 3], Vec<u32>>),
+    Hashed(std::collections::BTreeMap<[i64; 3], Vec<u32>>),
 }
 
 impl CellIndex {
@@ -145,8 +147,8 @@ impl CellIndex {
                 CellIndex::Flat { dims, start, items }
             }
             _ => {
-                let mut map: std::collections::HashMap<[i64; 3], Vec<u32>> =
-                    std::collections::HashMap::new();
+                let mut map: std::collections::BTreeMap<[i64; 3], Vec<u32>> =
+                    std::collections::BTreeMap::new();
                 for (i, c) in coords.iter().enumerate() {
                     map.entry(*c).or_default().push(i as u32);
                 }
@@ -271,6 +273,7 @@ pub fn radius_graph_positions_reference(positions: &[[f64; 3]], cutoff: f64) -> 
             ((p[2] - lo[2]) / cutoff) as i64,
         )
     };
+    // lint:allow(nondeterministic): test oracle off the hot path; edges globally sorted below
     let mut cells: std::collections::HashMap<(i64, i64, i64), Vec<usize>> =
         std::collections::HashMap::new();
     for (i, p) in positions.iter().enumerate() {

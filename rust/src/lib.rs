@@ -276,6 +276,42 @@
 //! most once, so a recovered run does not re-trip it. An empty plan is a
 //! guaranteed no-op: with no faults configured, every byte of behavior is
 //! identical to a build without the harness.
+//!
+//! ## Invariants (statically enforced)
+//!
+//! The crate's load-bearing guarantees — bit-determinism, panic-free
+//! supervision paths, collective error discipline — are cheap to break with
+//! an innocent-looking edit. `hydra-lint` (the `hydra_lint` binary, module
+//! [`lint`]) re-checks them on every commit as a blocking CI job, with no
+//! dependencies beyond this crate itself:
+//!
+//! - **R1 determinism** — no `HashMap` / `HashSet` / `Instant::now` in the
+//!   numeric core (`model/egnn.rs`, `model/kernels.rs`, `comm/`,
+//!   `checkpoint.rs`, `data/graph.rs`). Iteration order and wall-clock must
+//!   never reach reduced values, edge lists, or serialized bytes.
+//! - **R2 panic-safety** — no `unwrap` / `expect` / panicking macros / range
+//!   indexing on the serving hot path (`serve/`), the checkpoint
+//!   decode path, or the trainer's rank-supervision path. These paths turn
+//!   failures into typed errors; a panic there strands waiters or kills
+//!   rank 0.
+//! - **R3 collective-safety** — every `Comm` collective returns a
+//!   `Result<_, CommError>` that must be propagated or matched, never
+//!   unwrapped or discarded: a swallowed collective error desynchronizes
+//!   the mesh.
+//! - **R4 config-coverage** — every [`config::RunConfig`] field is either
+//!   hashed into `trajectory_fingerprint_resolved` or listed (with a
+//!   reason) in `config::FINGERPRINT_EXCLUDED`. Adding a field without
+//!   deciding fails the build.
+//! - **R5 env-var registry** — every `HYDRA_MTP_*` environment read is
+//!   declared in [`lint::env_registry`], which also renders the
+//!   `--help` environment section, so docs cannot drift from reads.
+//!
+//! Deliberate exceptions are annotated in place:
+//! `// lint:allow(<rule>): <reason>` on (or immediately above) the offending
+//! line, where `<rule>` is `nondeterministic`, `panic`, or `collective`.
+//! The reason is mandatory and the lint flags annotations that suppress
+//! nothing, so waivers stay accurate. Run it locally with
+//! `cargo run --bin hydra_lint`.
 
 pub mod checkpoint;
 pub mod comm;
@@ -284,6 +320,7 @@ pub mod coordinator;
 pub mod data;
 pub mod elements;
 pub mod fault;
+pub mod lint;
 pub mod model;
 pub mod runtime;
 pub mod scalesim;

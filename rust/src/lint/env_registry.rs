@@ -1,0 +1,78 @@
+//! Central registry of every `HYDRA_MTP_*` environment variable the crate
+//! reads. hydra-lint rule R5 enforces it in both directions: an env read
+//! that is not listed here fails the lint, and an entry that is no longer
+//! read anywhere fails it too (stale docs are wrong docs). The CLI's
+//! `--help` renders [`help_text`], so the documented surface can never
+//! drift from the code.
+
+/// One documented environment variable.
+pub struct EnvVar {
+    pub name: &'static str,
+    /// Effect when set (one line; rendered in `--help`).
+    pub summary: &'static str,
+    /// Behavior when unset.
+    pub unset: &'static str,
+}
+
+/// Every `HYDRA_MTP_*` variable the crate reads, alphabetically.
+pub const REGISTRY: &[EnvVar] = &[
+    EnvVar {
+        name: "HYDRA_MTP_BACKEND",
+        summary: "execution backend override: native | pjrt | auto \
+                  (an invalid value warns and keeps auto)",
+        unset: "auto — pjrt when artifacts + the feature are available, else native",
+    },
+    EnvVar {
+        name: "HYDRA_MTP_FAULTS",
+        summary: "fault-injection spec overriding the configured plan, e.g. \
+                  rank-panic@rank=1,epoch=2,step=0;stall@rank=0,epoch=0,step=1,ms=200",
+        unset: "faults come from --faults / RunConfig.fault.spec (default: none)",
+    },
+    EnvVar {
+        name: "HYDRA_MTP_PRECISION",
+        summary: "native-backend precision override: f64 | mixed-f32 \
+                  (an invalid value warns and is ignored)",
+        unset: "the configured precision (default f64, the gradcheck oracle)",
+    },
+    EnvVar {
+        name: "HYDRA_MTP_THREADS",
+        summary: "kernel worker cap, read once per process; 0 means serial, \
+                  large values are clamped",
+        unset: "the default thread cap (8)",
+    },
+];
+
+/// The `--help` Environment section, rendered from [`REGISTRY`].
+pub fn help_text() -> String {
+    let mut out = String::from("Environment variables:\n");
+    for v in REGISTRY {
+        out.push_str(&format!("  {}\n", v.name));
+        out.push_str(&format!("      {}\n", v.summary));
+        out.push_str(&format!("      unset: {}\n", v.unset));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_sorted_and_prefixed() {
+        for w in REGISTRY.windows(2) {
+            assert!(w[0].name < w[1].name, "registry must stay alphabetical");
+        }
+        for v in REGISTRY {
+            assert!(v.name.starts_with("HYDRA_MTP_"), "bad prefix: {}", v.name);
+            assert!(!v.summary.is_empty() && !v.unset.is_empty());
+        }
+    }
+
+    #[test]
+    fn help_text_names_every_variable() {
+        let h = help_text();
+        for v in REGISTRY {
+            assert!(h.contains(v.name));
+        }
+    }
+}

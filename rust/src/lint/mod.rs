@@ -1,0 +1,215 @@
+//! hydra-lint: the crate's zero-dependency static invariant checker.
+//!
+//! Clippy enforces Rust idioms; this pass enforces *project* invariants
+//! clippy cannot express — the properties the paper's multi-rank training
+//! guarantees rest on. Five rules (see [`rules`]):
+//!
+//! - **R1 `nondeterministic`** — no `HashMap`/`HashSet` and no
+//!   `Instant::now` in the determinism-critical modules (`model/egnn.rs`,
+//!   `model/kernels.rs`, `comm/`, `checkpoint.rs`, `data/graph.rs`).
+//!   Arbitrary iteration order or wall-clock-derived ordering there breaks
+//!   the bit-reproducibility the resume/recovery proofs depend on.
+//! - **R2 `panic`** — no `unwrap`/`expect`/panic macros (and, where
+//!   untrusted lengths flow, no raw range indexing) in the serve worker
+//!   loop, the queue, checkpoint decode, and the trainer's rank
+//!   supervision. A panic there strands waiters or masquerades as a rank
+//!   failure; typed errors recover, panics don't.
+//! - **R3 `collective`** — every `Comm` collective result is propagated
+//!   or matched, never unwrapped or discarded, in every file.
+//! - **R4 `config`** — every `RunConfig` leaf is named either in
+//!   `trajectory_fingerprint_resolved` or in `FINGERPRINT_EXCLUDED`;
+//!   adding a field forces an explicit trajectory-relevance decision.
+//! - **R5 `env`** — every `HYDRA_MTP_*` read appears in
+//!   [`env_registry::REGISTRY`], which also renders the CLI `--help`.
+//!
+//! Justified exceptions carry `lint:allow` annotations (grammar in
+//! [`scan`]); unknown rules, missing reasons and annotations that
+//! suppress nothing are themselves violations. The `hydra_lint` binary
+//! walks `rust/src/**` (its own sources included), prints `file:line`
+//! diagnostics, writes a machine-readable `LINT_report.json`, and exits
+//! nonzero on any violation — CI runs it as a blocking job.
+
+pub mod env_registry;
+pub mod rules;
+pub mod scan;
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One rule hit. `allowed_reason` is `Some` when a `lint:allow`
+/// annotation covers the site (the hit is then informational).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Path relative to the scan root, `/`-separated.
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub message: String,
+    pub allowed_reason: Option<String>,
+    /// 0-based declaration line of the consumed annotation (for the
+    /// stale-annotation check).
+    pub allow_decl_line: Option<usize>,
+}
+
+impl Finding {
+    pub fn is_violation(&self) -> bool {
+        self.allowed_reason.is_none()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("rule", Json::str(self.rule)),
+            ("file", Json::str(self.file.clone())),
+            ("line", Json::from(self.line)),
+            ("message", Json::str(self.message.clone())),
+        ];
+        if let Some(reason) = &self.allowed_reason {
+            pairs.push(("allowed_reason", Json::str(reason.clone())));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Outcome of a lint run: violations fail the build, allowed sites are
+/// the audited exception surface.
+pub struct Report {
+    pub root: String,
+    pub files_scanned: usize,
+    pub violations: Vec<Finding>,
+    pub allowed: Vec<Finding>,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// The `LINT_report.json` payload (deterministic key order via the
+    /// crate's BTreeMap-backed [`Json`]).
+    pub fn to_json(&self) -> Json {
+        let mut by_rule: std::collections::BTreeMap<&str, (i64, i64)> =
+            std::collections::BTreeMap::new();
+        for f in &self.violations {
+            by_rule.entry(f.rule).or_insert((0, 0)).0 += 1;
+        }
+        for f in &self.allowed {
+            by_rule.entry(f.rule).or_insert((0, 0)).1 += 1;
+        }
+        let counts = Json::obj(
+            by_rule
+                .iter()
+                .map(|(rule, (v, a))| {
+                    let c = Json::obj(vec![
+                        ("violations", Json::from(*v)),
+                        ("allowed", Json::from(*a)),
+                    ]);
+                    (*rule, c)
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::str("hydra-lint-report/v1")),
+            ("root", Json::str(self.root.clone())),
+            ("files_scanned", Json::from(self.files_scanned)),
+            ("clean", Json::from(self.clean())),
+            ("counts", counts),
+            ("violations", Json::Array(self.violations.iter().map(Finding::to_json).collect())),
+            ("allowed", Json::Array(self.allowed.iter().map(Finding::to_json).collect())),
+        ])
+    }
+
+    /// Human diagnostics: one `file:line` line per violation, then a
+    /// summary naming the annotated-exception count per rule.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.violations {
+            out.push_str(&format!("error[{}] {}:{}: {}\n", f.rule, f.file, f.line, f.message));
+        }
+        let mut allowed_rules: std::collections::BTreeMap<&str, usize> =
+            std::collections::BTreeMap::new();
+        for f in &self.allowed {
+            *allowed_rules.entry(f.rule).or_insert(0) += 1;
+        }
+        let allowed_desc = if allowed_rules.is_empty() {
+            "none".to_string()
+        } else {
+            allowed_rules
+                .iter()
+                .map(|(r, n)| format!("{r}={n}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        out.push_str(&format!(
+            "hydra-lint: {} files scanned, {} violation(s), annotated allowances: {}\n",
+            self.files_scanned,
+            self.violations.len(),
+            allowed_desc
+        ));
+        out
+    }
+}
+
+/// Run every rule over an in-memory file set (the integration tests feed
+/// fixture snippets through this same path the binary uses).
+pub fn check_files(files: &[scan::SourceFile]) -> Vec<Finding> {
+    let mut findings: Vec<Finding> = Vec::new();
+    for f in files {
+        rules::r1_determinism(f, &mut findings);
+        rules::r2_panic_safety(f, &mut findings);
+        rules::r3_collective_safety(f, &mut findings);
+    }
+    rules::r4_config_coverage(files, &mut findings);
+    rules::r5_env_registry(files, env_registry::REGISTRY, &mut findings);
+    let mut hygiene: Vec<Finding> = Vec::new();
+    rules::check_annotations(files, &findings, &mut hygiene);
+    findings.extend(hygiene);
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    findings
+}
+
+/// Lint every `.rs` file under `root` (deterministic sorted order).
+pub fn run(root: &Path) -> anyhow::Result<Report> {
+    let mut rel_paths: Vec<String> = Vec::new();
+    walk(root, Path::new(""), &mut rel_paths)
+        .map_err(|e| anyhow::anyhow!("cannot walk {}: {e}", root.display()))?;
+    rel_paths.sort();
+    let mut files: Vec<scan::SourceFile> = Vec::with_capacity(rel_paths.len());
+    for rel in &rel_paths {
+        let full = root.join(rel);
+        let text = std::fs::read_to_string(&full)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", full.display()))?;
+        files.push(scan::SourceFile::parse(rel, &text));
+    }
+    let findings = check_files(&files);
+    let (allowed, violations): (Vec<Finding>, Vec<Finding>) =
+        findings.into_iter().partition(|f| f.allowed_reason.is_some());
+    Ok(Report {
+        root: root.display().to_string(),
+        files_scanned: files.len(),
+        violations,
+        allowed,
+    })
+}
+
+fn walk(root: &Path, rel: &Path, out: &mut Vec<String>) -> std::io::Result<()> {
+    let dir = root.join(rel);
+    for entry in std::fs::read_dir(&dir)? {
+        let entry = entry?;
+        let name: PathBuf = entry.file_name().into();
+        let child = rel.join(&name);
+        let ft = entry.file_type()?;
+        if ft.is_dir() {
+            walk(root, &child, out)?;
+        } else if name.to_string_lossy().ends_with(".rs") {
+            // `/`-separated rel paths so rule scoping is platform-stable.
+            let parts: Vec<String> = child
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect();
+            out.push(parts.join("/"));
+        }
+    }
+    Ok(())
+}

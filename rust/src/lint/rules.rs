@@ -1,0 +1,618 @@
+//! The five hydra-lint rules. Each pushes [`Finding`]s; a finding on a
+//! line covered by a matching `lint:allow` annotation is recorded as an
+//! *allowed* site (reported, non-fatal) instead of a violation.
+//!
+//! | rule               | scope                                   | catches |
+//! |--------------------|-----------------------------------------|---------|
+//! | `nondeterministic` | model/egnn, model/kernels, comm/,       | `HashMap`/`HashSet`, `Instant::now` |
+//! |                    | checkpoint, data/graph                  | |
+//! | `panic`            | serve/, checkpoint, coordinator/trainer | `unwrap`/`expect`/panic macros; raw range-indexing (serve/ + checkpoint) |
+//! | `collective`       | every file                              | a collective result unwrapped or discarded |
+//! | `config`           | config.rs                               | a `RunConfig` leaf in neither the fingerprint nor `FINGERPRINT_EXCLUDED` |
+//! | `env`              | every file                              | `HYDRA_MTP_*` reads missing from the registry, and stale registry entries |
+//!
+//! Only the first three are annotation-suppressible: `config` and `env`
+//! are table-driven — the fix is to update the table, not to annotate.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lint::env_registry::EnvVar;
+use crate::lint::scan::SourceFile;
+use crate::lint::Finding;
+
+/// Rule names a `lint:allow` annotation may name.
+pub const ALLOWABLE_RULES: &[&str] = &["nondeterministic", "panic", "collective"];
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Whether `code` contains `needle` at identifier boundaries (so `HashMap`
+/// does not match `MyHashMapLike`). Needles may contain `::`.
+fn has_word(code: &str, needle: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = code.get(from..).and_then(|s| s.find(needle)) {
+        let at = from + p;
+        let end = at + needle.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Build a finding, consuming a covering annotation when one exists.
+fn finding(f: &SourceFile, idx: usize, rule: &'static str, message: String) -> Finding {
+    let allow = f.allow_for(idx, rule);
+    Finding {
+        rule,
+        file: f.rel_path.clone(),
+        line: idx + 1,
+        message,
+        allowed_reason: allow.map(|a| a.reason.clone()),
+        allow_decl_line: allow.map(|a| a.decl_line),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R1: determinism
+// ---------------------------------------------------------------------------
+
+const R1_FILES: &[&str] = &["model/egnn.rs", "model/kernels.rs", "checkpoint.rs", "data/graph.rs"];
+const R1_TOKENS: &[&str] = &["HashMap", "HashSet", "Instant::now"];
+
+fn r1_in_scope(path: &str) -> bool {
+    path.starts_with("comm/") || R1_FILES.contains(&path)
+}
+
+/// R1: no arbitrary-order containers and no wall-clock reads in the
+/// modules whose outputs must be bit-reproducible. `BTreeMap`/`BTreeSet`
+/// iterate in key order and are the sanctioned replacements; wall-clock
+/// use that provably never feeds ordering (timeout deadlines) carries an
+/// annotation saying so.
+pub fn r1_determinism(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !r1_in_scope(&f.rel_path) {
+        return;
+    }
+    for (idx, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for tok in R1_TOKENS {
+            if has_word(&line.code, tok) {
+                out.push(finding(
+                    f,
+                    idx,
+                    "nondeterministic",
+                    format!("`{tok}` in a determinism-critical module"),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R2: panic safety
+// ---------------------------------------------------------------------------
+
+const R2_DOT_TOKENS: &[&str] = &[".unwrap()", ".expect("];
+const R2_MACRO_TOKENS: &[&str] = &["panic!", "unreachable!", "todo!", "unimplemented!"];
+
+fn r2_in_scope(path: &str) -> bool {
+    path.starts_with("serve/") || path == "checkpoint.rs" || path == "coordinator/trainer.rs"
+}
+
+/// The raw range-index leg applies where untrusted lengths flow (decoding
+/// checkpoint bytes, serving request payloads). The trainer's
+/// flatten/unflatten helpers slice layouts computed in the same function
+/// — bounds-proven by construction and pervasive — so the trainer is
+/// covered by the panic-token legs only.
+fn r2_range_scope(path: &str) -> bool {
+    path.starts_with("serve/") || path == "checkpoint.rs"
+}
+
+/// Whether `code` contains a raw range-index expression like `x[a..b]`
+/// (a value followed by brackets holding a top-level `..`). `get(a..b)`
+/// is the sanctioned replacement. Array/vec literals and attributes do
+/// not match (no value precedes their bracket).
+fn has_range_index(code: &str) -> bool {
+    let b = code.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'[' {
+            let mut p = i;
+            while p > 0 && b[p - 1] == b' ' {
+                p -= 1;
+            }
+            let indexes_a_value =
+                p > 0 && (is_ident_byte(b[p - 1]) || b[p - 1] == b')' || b[p - 1] == b']');
+            if indexes_a_value {
+                let mut depth = 1;
+                let mut j = i + 1;
+                while j < b.len() && depth > 0 {
+                    match b[j] {
+                        b'[' => depth += 1,
+                        b']' => depth -= 1,
+                        b'.' if depth == 1 && b.get(j + 1) == Some(&b'.') => return true,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// R2: the serve worker loop, the queue, checkpoint decode and the
+/// trainer's rank supervision must fail with typed errors, never panics —
+/// a panicking worker strands waiters and a panicking rank looks exactly
+/// like a crashed one to its peers. Deliberate panics (fault injection)
+/// carry annotations.
+pub fn r2_panic_safety(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !r2_in_scope(&f.rel_path) {
+        return;
+    }
+    let range_scope = r2_range_scope(&f.rel_path);
+    for (idx, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for tok in R2_DOT_TOKENS {
+            if line.code.contains(tok) {
+                out.push(finding(f, idx, "panic", format!("`{tok}` in a panic-safe path")));
+            }
+        }
+        for tok in R2_MACRO_TOKENS {
+            // Word-bounded so `my_panic!` style identifiers do not match.
+            if has_word(&line.code, tok) {
+                out.push(finding(f, idx, "panic", format!("`{tok}` in a panic-safe path")));
+            }
+        }
+        if range_scope && has_range_index(&line.code) {
+            out.push(finding(
+                f,
+                idx,
+                "panic",
+                "raw range index in a panic-safe path (use `.get(a..b)`)".to_string(),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R3: collective safety
+// ---------------------------------------------------------------------------
+
+const COLLECTIVES: &[&str] =
+    &[".allreduce_mean(", ".allreduce_sum(", ".broadcast(", ".barrier(", ".allgather_f64("];
+
+/// R3: every `Comm` collective call must propagate or match its
+/// `Result<_, CommError>`. Unwrapping turns a recoverable rank failure
+/// into a panic (which peers then see as *another* rank failure), and
+/// discarding it lets a rank continue on stale values after a failed
+/// round. Applies to every file — collectives must be safe wherever they
+/// are called from.
+pub fn r3_collective_safety(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (idx, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let Some(tok) = COLLECTIVES.iter().find(|t| line.code.contains(**t)) else {
+            continue;
+        };
+        // The call's statement may wrap; scan to the terminating `;`.
+        let mut span = String::new();
+        let mut j = idx;
+        while j < f.lines.len() && j < idx + 5 {
+            span.push_str(&f.lines[j].code);
+            span.push(' ');
+            if f.lines[j].code.trim_end().ends_with(';') {
+                break;
+            }
+            j += 1;
+        }
+        let discarded = line.code.trim_start().starts_with("let _ =");
+        let unwrapped =
+            span.contains(".unwrap()") || span.contains(".expect(") || span.contains(".ok()");
+        if unwrapped || discarded {
+            let how = if discarded { "discarded" } else { "unwrapped" };
+            let name = tok.trim_start_matches('.').trim_end_matches('(');
+            out.push(finding(
+                f,
+                idx,
+                "collective",
+                format!("collective `{name}` result {how} instead of propagated"),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// R4: config coverage
+// ---------------------------------------------------------------------------
+
+/// R4: every `RunConfig` leaf field must appear either as a token of
+/// `trajectory_fingerprint_resolved` or in the `FINGERPRINT_EXCLUDED`
+/// table (with a reason) — never both, never neither. This turns the
+/// "new knob silently skips fingerprinting" failure mode into a build
+/// break: adding a field forces an explicit trajectory-relevance call.
+pub fn r4_config_coverage(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let Some(cfg) = files.iter().find(|f| f.rel_path == "config.rs") else {
+        return;
+    };
+    let Some(run_line) = find_code(cfg, "struct RunConfig") else {
+        return;
+    };
+    let structs = parse_structs(cfg);
+    let Some(run_fields) = structs.get("RunConfig") else {
+        return;
+    };
+    let tokens = fingerprint_tokens(cfg);
+    if tokens.is_empty() {
+        out.push(finding(
+            cfg,
+            run_line,
+            "config",
+            "cannot locate `trajectory_fingerprint_resolved` format tokens".to_string(),
+        ));
+        return;
+    }
+    let excluded = excluded_entries(cfg);
+    if excluded.is_empty() {
+        out.push(finding(
+            cfg,
+            run_line,
+            "config",
+            "cannot locate the `FINGERPRINT_EXCLUDED` table".to_string(),
+        ));
+        return;
+    }
+    // Expand RunConfig one level: a field whose type is a struct defined
+    // in config.rs contributes its leaves as `group.field`.
+    let mut leaves: Vec<(String, usize)> = Vec::new();
+    for (fname, ftype, fline) in run_fields {
+        match structs.get(ftype.as_str()) {
+            Some(sub) => {
+                for (sname, _stype, sline) in sub {
+                    leaves.push((format!("{fname}.{sname}"), *sline));
+                }
+            }
+            None => leaves.push((fname.clone(), *fline)),
+        }
+    }
+    for (leaf, line_idx) in &leaves {
+        let last = leaf.rsplit('.').next().unwrap_or(leaf.as_str());
+        let underscored = leaf.replace('.', "_");
+        let in_fp = tokens.contains(&underscored) || tokens.contains(last);
+        let in_ex = excluded.iter().any(|(p, _)| p == leaf);
+        if in_fp && in_ex {
+            out.push(finding(
+                cfg,
+                *line_idx,
+                "config",
+                format!("`{leaf}` is both fingerprinted and in FINGERPRINT_EXCLUDED"),
+            ));
+        } else if !in_fp && !in_ex {
+            out.push(finding(
+                cfg,
+                *line_idx,
+                "config",
+                format!(
+                    "`RunConfig` leaf `{leaf}` is in neither \
+                     `trajectory_fingerprint_resolved` nor `FINGERPRINT_EXCLUDED`"
+                ),
+            ));
+        }
+    }
+    for (path, line_idx) in &excluded {
+        if !leaves.iter().any(|(l, _)| l == path) {
+            out.push(finding(
+                cfg,
+                *line_idx,
+                "config",
+                format!("stale FINGERPRINT_EXCLUDED entry `{path}`: no such RunConfig field"),
+            ));
+        }
+    }
+}
+
+/// 0-based line of the first non-test code line containing `needle`.
+fn find_code(f: &SourceFile, needle: &str) -> Option<usize> {
+    f.lines.iter().position(|l| !l.in_test && l.code.contains(needle))
+}
+
+/// Every `pub struct X { pub field: Type, ... }` in the file, with the
+/// 0-based line of each field declaration.
+fn parse_structs(f: &SourceFile) -> BTreeMap<String, Vec<(String, String, usize)>> {
+    let mut out = BTreeMap::new();
+    let mut i = 0;
+    while i < f.lines.len() {
+        let line = &f.lines[i];
+        let name = if line.in_test { None } else { struct_decl_name(&line.code) };
+        let Some(name) = name else {
+            i += 1;
+            continue;
+        };
+        let mut fields: Vec<(String, String, usize)> = Vec::new();
+        let mut depth: i64 = line.code.chars().filter(|&c| c == '{').count() as i64
+            - line.code.chars().filter(|&c| c == '}').count() as i64;
+        let mut j = i + 1;
+        while j < f.lines.len() && depth > 0 {
+            let code = &f.lines[j].code;
+            if depth == 1 {
+                if let Some((fname, ftype)) = parse_field(code) {
+                    fields.push((fname, ftype, j));
+                }
+            }
+            for c in code.chars() {
+                match c {
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        out.insert(name, fields);
+        i = j;
+    }
+    out
+}
+
+/// `Some(name)` for a `pub struct Name {` declaration line (unit and
+/// tuple structs have no braced fields and are skipped).
+fn struct_decl_name(code: &str) -> Option<String> {
+    let t = code.trim_start();
+    let rest = t.strip_prefix("pub struct ")?;
+    if !code.contains('{') {
+        return None;
+    }
+    let name: String =
+        rest.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// `Some((name, type))` for a `pub name: Type,` field line.
+fn parse_field(code: &str) -> Option<(String, String)> {
+    let t = code.trim();
+    let rest = t.strip_prefix("pub ")?;
+    let colon = rest.find(':')?;
+    let name = rest[..colon].trim();
+    if name.is_empty() || !name.bytes().all(is_ident_byte) {
+        return None;
+    }
+    let ftype = rest[colon + 1..].trim().trim_end_matches(',').trim();
+    Some((name.to_string(), ftype.to_string()))
+}
+
+/// The `name={...}` tokens of the fingerprint format string, read from the
+/// RAW lines of `fn trajectory_fingerprint_resolved` (the tokens live
+/// inside a string literal, which the code view deliberately blanks).
+fn fingerprint_tokens(f: &SourceFile) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let Some(start) = find_code(f, "fn trajectory_fingerprint_resolved") else {
+        return out;
+    };
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    let mut j = start;
+    while j < f.lines.len() {
+        if let Some(raw) = f.raw.get(j) {
+            collect_eq_brace_idents(raw, &mut out);
+        }
+        for c in f.lines[j].code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            break;
+        }
+        j += 1;
+    }
+    out
+}
+
+/// Collect each `ident={` occurrence in `raw` into `out`.
+fn collect_eq_brace_idents(raw: &str, out: &mut BTreeSet<String>) {
+    let b = raw.as_bytes();
+    for i in 0..b.len() {
+        if b[i] != b'=' || b.get(i + 1) != Some(&b'{') {
+            continue;
+        }
+        let mut s = i;
+        while s > 0 && is_ident_byte(b[s - 1]) {
+            s -= 1;
+        }
+        if s < i {
+            if let Some(tok) = raw.get(s..i) {
+                out.insert(tok.to_string());
+            }
+        }
+    }
+}
+
+/// The `("field.path", "reason")` entries of `FINGERPRINT_EXCLUDED`, read
+/// from RAW lines (string literals again), with each entry's 0-based line.
+fn excluded_entries(f: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let Some(start) = find_code(f, "FINGERPRINT_EXCLUDED") else {
+        return out;
+    };
+    let mut j = start;
+    while j < f.lines.len() && j < start + 64 {
+        if let Some(raw) = f.raw.get(j) {
+            if let Some(entry) = first_quoted(raw) {
+                out.push((entry, j));
+            }
+        }
+        if f.lines[j].code.contains("];") {
+            break;
+        }
+        j += 1;
+    }
+    out
+}
+
+/// The first `"..."` substring of `raw`, if any.
+fn first_quoted(raw: &str) -> Option<String> {
+    let open = raw.find('"')?;
+    let rest = raw.get(open + 1..)?;
+    let close = rest.find('"')?;
+    rest.get(..close).map(str::to_string)
+}
+
+// ---------------------------------------------------------------------------
+// R5: env-var registry
+// ---------------------------------------------------------------------------
+
+/// R5: every `HYDRA_MTP_*` env read must appear in
+/// `lint/env_registry.rs`, and every registry entry must still have a
+/// read site (checked only on full-tree scans — fixture sets cannot see
+/// the whole tree). Reads are found on RAW lines: the variable name is a
+/// string literal, which the code view blanks.
+pub fn r5_env_registry(files: &[SourceFile], registry: &[EnvVar], out: &mut Vec<Finding>) {
+    let mut reads: BTreeSet<String> = BTreeSet::new();
+    for f in files {
+        for (idx, raw) in f.raw.iter().enumerate() {
+            if f.lines.get(idx).is_some_and(|l| l.in_test) {
+                continue;
+            }
+            for name in env_reads_in(raw) {
+                let registered = registry.iter().any(|v| v.name == name);
+                if !registered {
+                    out.push(finding(
+                        f,
+                        idx,
+                        "env",
+                        format!("`{name}` is read here but missing from lint/env_registry.rs"),
+                    ));
+                }
+                reads.insert(name);
+            }
+        }
+    }
+    if files.iter().any(|f| f.rel_path == "lint/env_registry.rs") {
+        for v in registry {
+            if !reads.contains(v.name) {
+                out.push(Finding {
+                    rule: "env",
+                    file: "lint/env_registry.rs".to_string(),
+                    line: 1,
+                    message: format!("stale registry entry `{}`: no read site in the tree", v.name),
+                    allowed_reason: None,
+                    allow_decl_line: None,
+                });
+            }
+        }
+    }
+}
+
+/// `HYDRA_MTP_*` names read via `env::var` / `env::var_os` on this raw
+/// line. The needle is the call syntax, not the prefix alone, so prefix
+/// constants in this module do not read as env accesses.
+fn env_reads_in(raw: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for needle in ["var(", "var_os("] {
+        let mut from = 0;
+        while let Some(p) = raw.get(from..).and_then(|s| s.find(needle)) {
+            let at = from + p + needle.len();
+            from = at;
+            let Some(rest) = raw.get(at..) else {
+                break;
+            };
+            let rest = rest.trim_start();
+            let Some(arg) = rest.strip_prefix('"') else {
+                continue;
+            };
+            let name: String = arg
+                .chars()
+                .take_while(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || *c == '_')
+                .collect();
+            if name.starts_with("HYDRA_MTP_") {
+                out.push(name);
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// annotation hygiene
+// ---------------------------------------------------------------------------
+
+/// Violations for malformed annotations: unknown rule names, missing
+/// reasons, and annotations that suppressed nothing (`findings` is the
+/// output of the rules above; a consumed annotation is identified by its
+/// declaration line).
+pub fn check_annotations(files: &[SourceFile], findings: &[Finding], out: &mut Vec<Finding>) {
+    let mut used: BTreeSet<(String, usize)> = BTreeSet::new();
+    for fd in findings {
+        if let Some(decl) = fd.allow_decl_line {
+            used.insert((fd.file.clone(), decl));
+        }
+    }
+    for f in files {
+        let mut seen: BTreeSet<usize> = BTreeSet::new();
+        for line in &f.lines {
+            if line.in_test {
+                continue;
+            }
+            for a in &line.allows {
+                if !seen.insert(a.decl_line) {
+                    continue;
+                }
+                if !ALLOWABLE_RULES.contains(&a.rule.as_str()) {
+                    out.push(Finding {
+                        rule: "annotation",
+                        file: f.rel_path.clone(),
+                        line: a.decl_line + 1,
+                        message: format!("unknown rule `{}` in lint:allow annotation", a.rule),
+                        allowed_reason: None,
+                        allow_decl_line: None,
+                    });
+                    continue;
+                }
+                if a.reason.is_empty() {
+                    out.push(Finding {
+                        rule: "annotation",
+                        file: f.rel_path.clone(),
+                        line: a.decl_line + 1,
+                        message: "lint:allow annotation without a reason".to_string(),
+                        allowed_reason: None,
+                        allow_decl_line: None,
+                    });
+                    continue;
+                }
+                if !used.contains(&(f.rel_path.clone(), a.decl_line)) {
+                    out.push(Finding {
+                        rule: "annotation",
+                        file: f.rel_path.clone(),
+                        line: a.decl_line + 1,
+                        message: format!(
+                            "lint:allow({}) annotation suppresses nothing here",
+                            a.rule
+                        ),
+                        allowed_reason: None,
+                        allow_decl_line: None,
+                    });
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,401 @@
+//! Source scanner for the hydra-lint rules: turns one Rust source file
+//! into per-line records carrying (a) a *code view* — comments stripped
+//! and string/char-literal contents blanked, so token matching cannot be
+//! fooled by doc prose or by rule names spelled inside literals — (b) a
+//! `#[cfg(test)]` membership flag (rules exempt test code, where `unwrap`
+//! on a just-constructed value is idiomatic), and (c) the annotations
+//! attached to each line.
+//!
+//! This is a line/token scanner, not a parser: it understands exactly the
+//! lexical structure the rules need — line and (nested) block comments,
+//! string, raw-string and char literals, brace nesting for test modules —
+//! and nothing more, in the spirit of the crate's vendored-deps policy.
+//!
+//! # Annotation grammar
+//!
+//! A suppression is a line comment whose content *begins with* the marker
+//! (so prose in doc comments that merely mentions the grammar never
+//! parses as one):
+//!
+//! ```text
+//! // lint:allow(<rule>): <reason>
+//! ```
+//!
+//! On its own line it covers the statement that follows (through the
+//! first line ending in `;`, `{` or `}`, so a wrapped statement is fully
+//! covered); as a trailing comment it covers its own line. The `<reason>`
+//! is mandatory — an annotation with no justification is itself a lint
+//! violation, as is one that suppresses nothing.
+
+/// One parsed `lint:allow` annotation.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// Rule name inside the parens (validated by the rules pass).
+    pub rule: String,
+    /// Justification after the colon (empty when omitted — a violation).
+    pub reason: String,
+    /// 0-based line the annotation comment sits on (its identity for the
+    /// stale-annotation check).
+    pub decl_line: usize,
+}
+
+/// One source line, post-lex.
+pub struct Line {
+    /// The code view: comments stripped, literal contents blanked.
+    pub code: String,
+    /// Inside a `#[cfg(test)]` item (attribute line included).
+    pub in_test: bool,
+    /// Annotations covering this line (see the module docs for coverage).
+    pub allows: Vec<Allow>,
+}
+
+/// A scanned file: raw lines (for the table-driven rules that must read
+/// literal contents) plus the lexed per-line records.
+pub struct SourceFile {
+    /// Path relative to the scan root, `/`-separated (e.g. `serve/queue.rs`).
+    pub rel_path: String,
+    /// Original text, split into lines.
+    pub raw: Vec<String>,
+    pub lines: Vec<Line>,
+}
+
+impl SourceFile {
+    pub fn parse(rel_path: &str, text: &str) -> SourceFile {
+        let views = split_views(text);
+        let mut lines: Vec<Line> = Vec::with_capacity(views.len());
+        let mut raw_allows: Vec<Option<Allow>> = Vec::with_capacity(views.len());
+        for (idx, (code, comment)) in views.into_iter().enumerate() {
+            raw_allows.push(parse_allow(&comment, idx));
+            lines.push(Line { code, in_test: false, allows: Vec::new() });
+        }
+        mark_tests(&mut lines);
+        attach_allows(&mut lines, raw_allows);
+        // `split('\n')` (not `lines()`) so `raw` and `lines` stay the same
+        // length even when the file ends with a newline.
+        let raw = text.split('\n').map(str::to_string).collect();
+        SourceFile { rel_path: rel_path.to_string(), raw, lines }
+    }
+
+    /// The first annotation for `rule` covering 0-based line `idx`, if any.
+    pub fn allow_for(&self, idx: usize, rule: &str) -> Option<&Allow> {
+        self.lines.get(idx).and_then(|l| l.allows.iter().find(|a| a.rule == rule))
+    }
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    Normal,
+    LineComment,
+    /// Nesting depth (Rust block comments nest).
+    Block(u32),
+    Str,
+    /// Number of `#`s in the opening `r#*"` delimiter.
+    Raw(usize),
+}
+
+/// Split `text` into per-line `(code, comment)` views. Literal contents
+/// are blanked from the code view (delimiters kept); comment text is
+/// collected separately so annotations can be parsed from it. Newlines
+/// inside multi-line strings and block comments are preserved as line
+/// breaks so line numbers stay aligned with the original file.
+fn split_views(text: &str) -> Vec<(String, String)> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut out: Vec<(String, String)> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Normal;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Normal;
+            }
+            out.push((std::mem::take(&mut code), std::mem::take(&mut comment)));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if c == 'r' {
+                    if let Some(hashes) = raw_string_hashes(&chars, i) {
+                        code.push('r');
+                        code.push('"');
+                        state = State::Raw(hashes);
+                        i += 2 + hashes;
+                    } else {
+                        code.push('r');
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if let Some(len) = char_literal_len(&chars, i) {
+                        code.push('\'');
+                        code.push('\'');
+                        i += len;
+                    } else {
+                        // A lifetime tick; keep it so generics stay intact.
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::Block(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    state = if depth == 1 { State::Normal } else { State::Block(depth - 1) };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::Block(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Skip the escaped char — unless it is a newline
+                    // (line-continuation escape), which must reach the
+                    // `'\n'` handler above to keep line counts right.
+                    if chars.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Normal;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::Raw(hashes) => {
+                if c == '"' && (0..hashes).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                    code.push('"');
+                    state = State::Normal;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.push((code, comment));
+    out
+}
+
+/// `Some(hash_count)` when `chars[i]` (an `r`) opens a raw string literal
+/// (`r"`, `r#"`, ...). An identifier char before the `r` means it is the
+/// tail of an identifier (`var`), and `r#ident` raw identifiers have no
+/// quote after the hashes; both return `None`.
+fn raw_string_hashes(chars: &[char], i: usize) -> Option<usize> {
+    if i > 0 {
+        let prev = chars[i - 1];
+        if prev.is_alphanumeric() || prev == '_' {
+            return None;
+        }
+    }
+    let mut hashes = 0;
+    let mut j = i + 1;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+/// `Some(total_len)` when `chars[i]` (a `'`) opens a char literal;
+/// `None` for a lifetime tick. Escaped literals (`'\n'`, `'\u{1F600}'`)
+/// are found by scanning a bounded window for the closing quote.
+fn char_literal_len(chars: &[char], i: usize) -> Option<usize> {
+    match chars.get(i + 1) {
+        Some('\\') => {
+            let mut j = i + 3;
+            while j < chars.len() && j <= i + 12 {
+                if chars[j] == '\'' {
+                    return Some(j - i + 1);
+                }
+                j += 1;
+            }
+            None
+        }
+        Some(_) => {
+            if chars.get(i + 2) == Some(&'\'') {
+                Some(3)
+            } else {
+                None
+            }
+        }
+        None => None,
+    }
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item. The attribute line
+/// is found in the code view; the item's extent is brace-counted from its
+/// first `{`. An attribute on a braceless item (`#[cfg(test)] use ...;`)
+/// ends at the first `;` before any brace opens.
+fn mark_tests(lines: &mut [Line]) {
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut j = i;
+        while j < lines.len() {
+            lines[j].in_test = true;
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            if !opened && lines[j].code.trim_end().ends_with(';') {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+}
+
+/// Parse an annotation from one line's comment text. Only a comment whose
+/// content *begins with* the marker counts (see the module docs), so doc
+/// prose describing the grammar never parses as a suppression.
+fn parse_allow(comment: &str, decl_line: usize) -> Option<Allow> {
+    let t = comment.trim_start();
+    let rest = t.strip_prefix("lint:allow(")?;
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let tail = &rest[close + 1..];
+    let reason = match tail.strip_prefix(':') {
+        Some(r) => r.trim().to_string(),
+        None => String::new(),
+    };
+    Some(Allow { rule, reason, decl_line })
+}
+
+/// Attach each parsed annotation to the lines it covers: its own line
+/// when it trails code, otherwise the next statement (through the first
+/// line ending in `;`, `{` or `}`, capped at 8 lines).
+fn attach_allows(lines: &mut [Line], raw_allows: Vec<Option<Allow>>) {
+    for (idx, allow) in raw_allows.into_iter().enumerate() {
+        let Some(allow) = allow else {
+            continue;
+        };
+        if !lines[idx].code.trim().is_empty() {
+            lines[idx].allows.push(allow);
+            continue;
+        }
+        let mut j = idx + 1;
+        while j < lines.len() && lines[j].code.trim().is_empty() {
+            j += 1;
+        }
+        let start = j;
+        while j < lines.len() && j - start < 8 {
+            lines[j].allows.push(allow.clone());
+            let t = lines[j].code.trim_end();
+            if t.ends_with(';') || t.ends_with('{') || t.ends_with('}') {
+                break;
+            }
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_leave_the_code_view() {
+        let src = "let x = \"HashMap\"; // HashMap here too\nlet y = 1;\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(!f.lines[0].code.contains("HashMap"));
+        assert!(f.lines[0].code.contains("let x"));
+        assert_eq!(f.lines[1].code, "let y = 1;");
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_blank_out() {
+        let src = "let r = r#\"panic!(inside)\"#;\nlet c = 'x';\nlet lt: &'static str = \"\";\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(!f.lines[0].code.contains("panic"));
+        assert!(f.lines[1].code.contains("''"));
+        assert!(f.lines[2].code.contains("'static"));
+    }
+
+    #[test]
+    fn multiline_string_with_continuation_keeps_line_numbers() {
+        let src = "let s = \"abc\\\n   def\";\nlet z = 9;\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert_eq!(f.lines.len(), 4); // 3 lines + trailing empty
+        assert_eq!(f.lines[2].code, "let z = 9;");
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_marked() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(f.lines[4].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn standalone_annotation_covers_the_next_statement() {
+        let src = "// lint:allow(panic): fixture reason\nlet x = foo\n    .bar();\nlet y = 1;\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(f.allow_for(1, "panic").is_some());
+        assert!(f.allow_for(2, "panic").is_some());
+        assert!(f.allow_for(3, "panic").is_none());
+        assert_eq!(f.allow_for(1, "panic").map(|a| a.decl_line), Some(0));
+    }
+
+    #[test]
+    fn trailing_annotation_covers_its_own_line_only() {
+        let src = "let x = 1; // lint:allow(panic): here\nlet y = 2;\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(f.allow_for(0, "panic").is_some());
+        assert!(f.allow_for(1, "panic").is_none());
+    }
+
+    #[test]
+    fn doc_prose_mentioning_the_grammar_is_not_an_annotation() {
+        let src = "/// write `lint:allow(panic): why` above the site\nfn f() {}\n";
+        let f = SourceFile::parse("a.rs", src);
+        assert!(f.allow_for(1, "panic").is_none());
+    }
+}

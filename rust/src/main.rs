@@ -112,6 +112,10 @@ COMMANDS
 
 Misspelled flags are rejected with the valid list for the subcommand."
     );
+    // Rendered from the central registry (lint/env_registry.rs): hydra-lint
+    // R5 fails the build if an env read exists that this table omits, so the
+    // help below cannot drift from the code.
+    println!("\n{}", hydra_mtp::lint::env_registry::help_text());
 }
 
 /// Flags shared by the config-driven subcommands.

@@ -291,7 +291,9 @@ impl Server {
     /// the workers. Idempotent; also runs on `Drop`.
     pub fn shutdown(&self) {
         self.shared.queue.shutdown();
-        let mut workers = self.workers.lock().expect("server worker list poisoned");
+        // Poison recovery: the list is only ever pushed to at spawn and
+        // drained here, so a poisoned guard holds a perfectly usable Vec.
+        let mut workers = self.workers.lock().unwrap_or_else(|p| p.into_inner());
         for h in workers.drain(..) {
             let _ = h.join();
         }
@@ -335,6 +337,7 @@ fn worker_loop(sh: &Shared) {
 /// `catch_unwind` in [`worker_loop`].
 fn run_batch(sh: &Shared, batch: &mut GraphBatch, ws: &mut Workspace, jobs: &[Job]) {
     if sh.faults.serve_panic_next() {
+        // lint:allow(panic): deliberate fault injection — the chaos harness's serve-worker kill
         panic!("injected fault: serve worker panics on batch");
     }
     batch.clear();

@@ -55,13 +55,14 @@ impl HeadCache {
 
     fn insert(&mut self, d: DatasetId, entry: HeadEntry) {
         if self.entries.len() >= self.cap {
-            let (i, _) = self
-                .entries
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, (_, stamp, _))| *stamp)
-                .expect("cap >= 1 so a full cache is non-empty");
-            self.entries.swap_remove(i);
+            // `cap >= 1` makes a full cache non-empty, so the LRU scan
+            // always finds a victim; `if let` keeps the worker path
+            // panic-free regardless.
+            if let Some((i, _)) =
+                self.entries.iter().enumerate().min_by_key(|(_, (_, stamp, _))| *stamp)
+            {
+                self.entries.swap_remove(i);
+            }
         }
         self.clock += 1;
         self.entries.push((d, self.clock, entry));
@@ -143,7 +144,10 @@ impl PreparedModel {
     }
 
     fn encoder(&self) -> anyhow::Result<Arc<EncoderParams>> {
-        let mut slot = self.encoder.lock().expect("encoder cache poisoned");
+        // Cache locks recover from poison rather than panic: each cache
+        // mutation (an insert or an LRU touch) completes under one guard,
+        // so a panicking peer leaves a consistent — merely colder — cache.
+        let mut slot = self.encoder.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(enc) = &*slot {
             return Ok(Arc::clone(enc));
         }
@@ -173,7 +177,7 @@ impl PreparedModel {
 
     /// Heads currently materialized (bounded by the cap; for tests/stats).
     pub fn cached_heads(&self) -> usize {
-        self.heads.lock().expect("head cache poisoned").entries.len()
+        self.heads.lock().unwrap_or_else(|p| p.into_inner()).entries.len()
     }
 
     /// A fresh per-worker workspace matching the engine's backend.
@@ -189,7 +193,7 @@ impl PreparedModel {
     }
 
     fn native_head(&self, d: DatasetId) -> anyhow::Result<Arc<BranchParams>> {
-        let mut cache = self.heads.lock().expect("head cache poisoned");
+        let mut cache = self.heads.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(HeadEntry::Native(br)) = cache.touch(d) {
             return Ok(Arc::clone(br));
         }
@@ -208,7 +212,7 @@ impl PreparedModel {
     }
 
     fn full_head(&self, d: DatasetId) -> anyhow::Result<Arc<ParamSet>> {
-        let mut cache = self.heads.lock().expect("head cache poisoned");
+        let mut cache = self.heads.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(HeadEntry::Full(full)) = cache.touch(d) {
             return Ok(Arc::clone(full));
         }

@@ -15,7 +15,7 @@
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::data::batch::BatchDims;
@@ -63,12 +63,22 @@ impl CoalescingQueue {
         }
     }
 
+    /// Lock the queue state, recovering from poison instead of panicking:
+    /// every mutation below leaves `QueueState` consistent at each unlock
+    /// point (a push, a pop, or a flag write completes under one guard),
+    /// and worker panics are already contained by `catch_unwind` in the
+    /// worker loop — so a poisoned mutex carries no torn state, only the
+    /// news that some peer panicked. Same policy as `comm::collectives`.
+    fn lock_state(&self) -> MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Enqueue `job`, waiting up to `wait` for a slot when the queue is
     /// full. Returns [`ServeError::Overloaded`] if no slot frees up in time
     /// and [`ServeError::ShuttingDown`] once shutdown has begun.
     pub fn submit(&self, job: Job, wait: Duration) -> Result<(), ServeError> {
         let deadline = Instant::now() + wait;
-        let mut st = self.state.lock().expect("serve queue poisoned");
+        let mut st = self.lock_state();
         loop {
             if st.shutdown {
                 return Err(ServeError::ShuttingDown);
@@ -85,7 +95,7 @@ impl CoalescingQueue {
             let (guard, _timeout) = self
                 .space
                 .wait_timeout(st, deadline - now)
-                .expect("serve queue poisoned");
+                .unwrap_or_else(|p| p.into_inner());
             st = guard;
         }
     }
@@ -99,7 +109,7 @@ impl CoalescingQueue {
     /// Returns `None` when the queue has shut down *and* drained.
     pub fn next_batch(&self, dims: &BatchDims) -> Option<Vec<Job>> {
         let cap = if dims.max_graphs > 1 { dims.max_graphs - 1 } else { 1 };
-        let mut st = self.state.lock().expect("serve queue poisoned");
+        let mut st = self.lock_state();
         loop {
             if let Some(first) = st.jobs.pop_front() {
                 let task = first.task;
@@ -113,10 +123,17 @@ impl CoalescingQueue {
                         && nodes + j.species.len() <= dims.max_nodes
                         && edges + j.edges.len() <= dims.max_edges
                     {
-                        let j = st.jobs.remove(i).expect("index checked above");
-                        nodes += j.species.len();
-                        edges += j.edges.len();
-                        picked.push(j);
+                        // `i < len` is loop-guarded, so `remove` always
+                        // yields; the defensive arm keeps the worker loop
+                        // panic-free even if that invariant ever broke.
+                        match st.jobs.remove(i) {
+                            Some(j) => {
+                                nodes += j.species.len();
+                                edges += j.edges.len();
+                                picked.push(j);
+                            }
+                            None => break,
+                        }
                     } else {
                         i += 1;
                     }
@@ -127,14 +144,14 @@ impl CoalescingQueue {
             if st.shutdown {
                 return None;
             }
-            st = self.work.wait(st).expect("serve queue poisoned");
+            st = self.work.wait(st).unwrap_or_else(|p| p.into_inner());
         }
     }
 
     /// Begin shutdown: refuse new submissions, wake every waiter. Queued
     /// jobs are still drained by `next_batch`.
     pub fn shutdown(&self) {
-        let mut st = self.state.lock().expect("serve queue poisoned");
+        let mut st = self.lock_state();
         st.shutdown = true;
         self.work.notify_all();
         self.space.notify_all();
@@ -143,7 +160,7 @@ impl CoalescingQueue {
 
     /// Jobs currently queued (snapshot; for stats/tests).
     pub fn len(&self) -> usize {
-        self.state.lock().expect("serve queue poisoned").jobs.len()
+        self.lock_state().jobs.len()
     }
 
     pub fn is_empty(&self) -> bool {

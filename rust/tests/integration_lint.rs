@@ -1,0 +1,357 @@
+//! hydra-lint integration tests: per-rule fixtures (a positive hit, an
+//! annotated allow, a clean case), annotation hygiene, and the gate this
+//! whole subsystem exists for — the real tree at HEAD must lint to zero
+//! violations. The binary itself is exercised end to end via
+//! `CARGO_BIN_EXE_hydra_lint` (exit 0 on HEAD, exit 1 on a violating
+//! fixture tree, report JSON written either way).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use hydra_mtp::lint;
+use hydra_mtp::lint::env_registry::EnvVar;
+use hydra_mtp::lint::rules;
+use hydra_mtp::lint::scan::SourceFile;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hydra_mtp_lint_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run every rule over one in-memory fixture file.
+fn scan_one(rel_path: &str, src: &str) -> Vec<lint::Finding> {
+    let f = SourceFile::parse(rel_path, src);
+    lint::check_files(&[f])
+}
+
+fn violations(findings: &[lint::Finding]) -> Vec<&lint::Finding> {
+    findings.iter().filter(|f| f.is_violation()).collect()
+}
+
+/// Whether any finding carries `rule` and a message containing `msg_part`.
+fn has(findings: &[lint::Finding], rule: &str, msg_part: &str) -> bool {
+    findings.iter().any(|f| f.rule == rule && f.message.contains(msg_part))
+}
+
+fn allowed_reasons(findings: &[lint::Finding]) -> Vec<&str> {
+    findings.iter().filter_map(|f| f.allowed_reason.as_deref()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// R1: determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn r1_flags_nondeterminism_in_scope_only() {
+    let hit = scan_one("data/graph.rs", "use std::collections::HashMap;\n");
+    assert!(has(&hit, "nondeterministic", "HashMap"), "{hit:?}");
+    assert_eq!(violations(&hit).len(), 1);
+
+    let src = "pub fn f() { let _t = std::time::Instant::now(); }\n";
+    let clock = scan_one("comm/collectives.rs", src);
+    assert!(has(&clock, "nondeterministic", "Instant::now"), "{clock:?}");
+
+    let clean = scan_one("data/graph.rs", "use std::collections::BTreeMap;\n");
+    assert!(clean.is_empty(), "{clean:?}");
+
+    // model/params.rs is outside the R1 scope: its HashMap keys a by-name
+    // parameter lookup, never an iteration the numerics depend on.
+    let out_of_scope = scan_one("model/params.rs", "use std::collections::HashMap;\n");
+    assert!(out_of_scope.is_empty(), "{out_of_scope:?}");
+}
+
+#[test]
+fn r1_annotated_allow_downgrades_the_finding() {
+    let src = "// lint:allow(nondeterministic): fixture oracle\nuse std::collections::HashMap;\n";
+    let got = scan_one("data/graph.rs", src);
+    assert!(violations(&got).is_empty(), "{got:?}");
+    assert_eq!(allowed_reasons(&got), vec!["fixture oracle"]);
+}
+
+// ---------------------------------------------------------------------------
+// R2: panic safety
+// ---------------------------------------------------------------------------
+
+#[test]
+fn r2_flags_panic_tokens_and_range_indexing_in_scope() {
+    let src = r#"pub fn f(v: &[u8]) -> u8 {
+    let a = v.first().unwrap();
+    let s = &v[1..3];
+    let ok = v.get(1..3);
+    *a + s[0] + ok.map(|x| x[0]).unwrap_or(0)
+}
+"#;
+    let got = scan_one("serve/queue.rs", src);
+    let bad = violations(&got);
+    assert_eq!(bad.len(), 2, "{got:?}");
+    assert!(bad.iter().all(|f| f.rule == "panic"));
+    assert!(has(&got, "panic", "unwrap"));
+    assert!(has(&got, "panic", "range index"));
+}
+
+#[test]
+fn r2_exempts_test_code_and_honors_annotations() {
+    let in_test = "#[cfg(test)]\nmod tests {\n    fn g(x: Option<u8>) { x.unwrap(); }\n}\n";
+    let got = scan_one("serve/queue.rs", in_test);
+    assert!(got.is_empty(), "{got:?}");
+
+    let annotated = "// lint:allow(panic): injected fault fixture\npanic!(\"boom\");\n";
+    let got = scan_one("serve/mod.rs", annotated);
+    assert!(violations(&got).is_empty(), "{got:?}");
+    assert_eq!(allowed_reasons(&got), vec!["injected fault fixture"]);
+}
+
+#[test]
+fn r2_range_leg_does_not_cover_the_trainer() {
+    // The trainer's flatten/unflatten slices are bounds-proven by
+    // construction; only the panic-token legs apply there.
+    let src = "pub fn f(v: &[u8]) -> &[u8] { &v[1..3] }\n";
+    let got = scan_one("coordinator/trainer.rs", src);
+    assert!(got.is_empty(), "{got:?}");
+}
+
+// ---------------------------------------------------------------------------
+// R3: collective safety
+// ---------------------------------------------------------------------------
+
+#[test]
+fn r3_flags_unwrapped_or_discarded_collectives_anywhere() {
+    let src = r#"fn f(c: &Comm, g: &Mesh, x: &mut [f32]) -> Result<(), E> {
+    c.allreduce_mean(x).unwrap();
+    g.global
+        .broadcast(0, x)
+        .expect("boom");
+    let _ = c.barrier();
+    c.allreduce_sum(x)?;
+    Ok(())
+}
+"#;
+    let got = scan_one("anywhere.rs", src);
+    let coll: Vec<_> = got.iter().filter(|f| f.rule == "collective").collect();
+    assert_eq!(coll.len(), 3, "{got:?}");
+    assert!(coll.iter().all(|f| f.is_violation()));
+    assert!(has(&got, "collective", "discarded"));
+    assert!(has(&got, "collective", "unwrapped"));
+}
+
+// ---------------------------------------------------------------------------
+// R4: config coverage
+// ---------------------------------------------------------------------------
+
+const R4_CLEAN: &str = r#"pub struct DataConfig {
+    pub seed: u64,
+}
+
+pub struct RunConfig {
+    pub mode: u32,
+    pub artifacts_dir: String,
+    pub data: DataConfig,
+}
+
+pub const FINGERPRINT_EXCLUDED: &[(&str, &str)] = &[
+    ("artifacts_dir", "output location only"),
+];
+
+impl RunConfig {
+    pub fn trajectory_fingerprint_resolved(&self) -> String {
+        format!("mode={};data_seed={}", self.mode, self.data.seed)
+    }
+}
+"#;
+
+const R4_UNCOVERED: &str = r#"pub struct DataConfig {
+    pub seed: u64,
+}
+
+pub struct RunConfig {
+    pub mode: u32,
+    pub extra: f64,
+    pub artifacts_dir: String,
+    pub data: DataConfig,
+}
+
+pub const FINGERPRINT_EXCLUDED: &[(&str, &str)] = &[
+    ("artifacts_dir", "output location only"),
+];
+
+impl RunConfig {
+    pub fn trajectory_fingerprint_resolved(&self) -> String {
+        format!("mode={};data_seed={}", self.mode, self.data.seed)
+    }
+}
+"#;
+
+const R4_BOTH: &str = r#"pub struct DataConfig {
+    pub seed: u64,
+}
+
+pub struct RunConfig {
+    pub mode: u32,
+    pub artifacts_dir: String,
+    pub data: DataConfig,
+}
+
+pub const FINGERPRINT_EXCLUDED: &[(&str, &str)] = &[
+    ("mode", "oops: it is also fingerprinted"),
+    ("artifacts_dir", "output location only"),
+];
+
+impl RunConfig {
+    pub fn trajectory_fingerprint_resolved(&self) -> String {
+        format!("mode={};data_seed={}", self.mode, self.data.seed)
+    }
+}
+"#;
+
+const R4_STALE: &str = r#"pub struct DataConfig {
+    pub seed: u64,
+}
+
+pub struct RunConfig {
+    pub mode: u32,
+    pub artifacts_dir: String,
+    pub data: DataConfig,
+}
+
+pub const FINGERPRINT_EXCLUDED: &[(&str, &str)] = &[
+    ("artifacts_dir", "output location only"),
+    ("ghost.knob", "this field no longer exists"),
+];
+
+impl RunConfig {
+    pub fn trajectory_fingerprint_resolved(&self) -> String {
+        format!("mode={};data_seed={}", self.mode, self.data.seed)
+    }
+}
+"#;
+
+#[test]
+fn r4_requires_every_leaf_fingerprinted_or_excluded() {
+    let clean = scan_one("config.rs", R4_CLEAN);
+    assert!(clean.is_empty(), "{clean:?}");
+
+    let uncovered = scan_one("config.rs", R4_UNCOVERED);
+    assert!(has(&uncovered, "config", "`extra`"), "{uncovered:?}");
+    assert!(has(&uncovered, "config", "neither"), "{uncovered:?}");
+
+    let both = scan_one("config.rs", R4_BOTH);
+    assert!(has(&both, "config", "both fingerprinted"), "{both:?}");
+
+    let stale = scan_one("config.rs", R4_STALE);
+    assert!(has(&stale, "config", "stale FINGERPRINT_EXCLUDED"), "{stale:?}");
+}
+
+// ---------------------------------------------------------------------------
+// R5: env-var registry
+// ---------------------------------------------------------------------------
+
+#[test]
+fn r5_flags_unregistered_env_reads() {
+    let src = "fn f() { let _ = std::env::var(\"HYDRA_MTP_BOGUS\"); }\n";
+    let bad = scan_one("fault.rs", src);
+    assert!(has(&bad, "env", "HYDRA_MTP_BOGUS"), "{bad:?}");
+
+    let src = "fn f() { let _ = std::env::var(\"HYDRA_MTP_THREADS\"); }\n";
+    let ok = scan_one("fault.rs", src);
+    assert!(ok.is_empty(), "{ok:?}");
+}
+
+#[test]
+fn r5_flags_stale_registry_entries_on_full_tree_scans() {
+    let reg: &[EnvVar] = &[EnvVar {
+        name: "HYDRA_MTP_GHOST",
+        summary: "an entry no code reads",
+        unset: "irrelevant",
+    }];
+    let fixture = SourceFile::parse("lint/env_registry.rs", "pub const REGISTRY: () = ();\n");
+    let mut out = Vec::new();
+    rules::r5_env_registry(&[fixture], reg, &mut out);
+    assert!(has(&out, "env", "stale registry entry"), "{out:?}");
+}
+
+// ---------------------------------------------------------------------------
+// annotation hygiene
+// ---------------------------------------------------------------------------
+
+#[test]
+fn annotation_hygiene_is_enforced() {
+    let unknown = scan_one("x.rs", "// lint:allow(bogus): reason\nlet x = 1;\n");
+    assert!(has(&unknown, "annotation", "unknown rule"), "{unknown:?}");
+
+    let no_reason = scan_one("x.rs", "// lint:allow(panic)\nlet x = 1;\n");
+    assert!(has(&no_reason, "annotation", "without a reason"), "{no_reason:?}");
+
+    let unused = scan_one("x.rs", "// lint:allow(panic): never used\nlet x = 1;\n");
+    assert!(has(&unused, "annotation", "suppresses nothing"), "{unused:?}");
+}
+
+// ---------------------------------------------------------------------------
+// the gate: HEAD lints clean
+// ---------------------------------------------------------------------------
+
+fn repo_src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src")
+}
+
+#[test]
+fn head_tree_is_clean() {
+    let report = lint::run(&repo_src_root()).unwrap();
+    assert!(report.files_scanned > 30, "only {} files scanned", report.files_scanned);
+    let mut diag = String::new();
+    for f in &report.violations {
+        diag.push_str(&format!("{}:{} [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    assert!(report.violations.is_empty(), "HEAD must lint clean:\n{diag}");
+    // The audited exception surface: the three collective deadlines, the
+    // reference radius-graph oracle, and the two injected-fault panics.
+    assert!(report.allowed.len() >= 4, "annotated allowances: {}", report.allowed.len());
+}
+
+// ---------------------------------------------------------------------------
+// the binary, end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn binary_exits_zero_on_head_and_writes_the_report() {
+    let dir = tmp_dir("bin_clean");
+    let json = dir.join("LINT_report.json");
+    let out = Command::new(env!("CARGO_BIN_EXE_hydra_lint"))
+        .arg("--root")
+        .arg(repo_src_root())
+        .arg("--quiet")
+        .arg("--json")
+        .arg(&json)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let report = std::fs::read_to_string(&json).unwrap();
+    assert!(report.contains("hydra-lint-report/v1"), "{report}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn binary_exits_one_on_a_violating_tree() {
+    let dir = tmp_dir("bin_dirty");
+    let root = dir.join("src");
+    std::fs::create_dir_all(root.join("data")).unwrap();
+    std::fs::write(root.join("data/graph.rs"), "use std::collections::HashMap;\n").unwrap();
+    let json = dir.join("LINT_report.json");
+    let out = Command::new(env!("CARGO_BIN_EXE_hydra_lint"))
+        .arg("--root")
+        .arg(&root)
+        .arg("--json")
+        .arg(&json)
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1), "{}", String::from_utf8_lossy(&out.stdout));
+    let report = std::fs::read_to_string(&json).unwrap();
+    let flagged_dirty = report.contains("\"clean\":false") || report.contains("\"clean\": false");
+    assert!(flagged_dirty, "{report}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
