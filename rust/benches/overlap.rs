@@ -1,0 +1,169 @@
+//! Sync-vs-overlapped gradient reduction benchmark. Run with
+//! `cargo bench --bench overlap`.
+//!
+//! Writes `BENCH_overlap.json` — the artifact EXPERIMENTS.md §Overlap
+//! quotes and CI uploads. Two sections, all legs recorded in the SAME run
+//! so the comparison is apples to apples:
+//!
+//! * comm layer: one monolithic `allreduce_mean` of a 1M-f32 payload over
+//!   4 ranks vs the same payload streamed through the overlapped bucketed
+//!   reducer (the raw cost of chunking + the comm thread);
+//! * trainer: an MTL-par training run with the synchronous reduction path
+//!   vs the identical config with overlap on, reporting the measured
+//!   per-step time of each — plus a bit-identity check of the final
+//!   training losses, because a perf win that changes the numbers is a
+//!   bug, not a win.
+//!
+//! The trainer legs run on the native backend (no artifacts needed), so CI
+//! carries real sync-vs-overlapped step timings on every run.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hydra_mtp::comm::{run_group, OverlapReducer, Segment};
+use hydra_mtp::config::{RunConfig, TrainMode};
+use hydra_mtp::coordinator::trainer::TrainOutcome;
+use hydra_mtp::coordinator::{DataBundle, Trainer};
+use hydra_mtp::data::structures::DatasetId;
+use hydra_mtp::runtime::{BackendKind, Engine, Precision};
+use hydra_mtp::util::timer::{bench_n, write_bench_json, BenchStats};
+
+const BENCH_JSON: &str = "BENCH_overlap.json";
+
+const ELEMS: usize = 1 << 20;
+const RANKS: usize = 4;
+const COMM_ITERS: usize = 12;
+
+/// Bench one reduction flavor on a fresh 4-rank group; every rank runs the
+/// same iterations in lockstep, rank 0's timings are reported.
+fn comm_leg(name: &'static str, bucket_elems: usize) -> BenchStats {
+    let results = run_group(RANKS, move |c| {
+        let mut data: Vec<f32> = (0..ELEMS).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut red = OverlapReducer::new(c.clone(), c.clone());
+        bench_n(name, COMM_ITERS, || {
+            if bucket_elems >= ELEMS {
+                c.allreduce_mean(&mut data).unwrap();
+            } else {
+                red.submit_chunks(Segment::Encoder, 0, &data, bucket_elems).unwrap();
+                for rb in red.finish().unwrap() {
+                    data[rb.offset..rb.offset + rb.data.len()].copy_from_slice(&rb.data);
+                    red.recycle(rb.data);
+                }
+            }
+        })
+    });
+    results
+        .into_iter()
+        .next()
+        .expect("rank 0 ran")
+        .expect("no rank failed in a healthy bench group")
+}
+
+/// One MTL-par training leg; returns the outcome and its measured per-step
+/// time (exec + comm + opt over all steps) as a BenchStats row. Quantiles
+/// are per-epoch per-step means.
+fn train_leg(
+    engine: &Arc<Engine>,
+    data: &DataBundle,
+    name: &str,
+    overlap: bool,
+) -> (TrainOutcome, BenchStats) {
+    let mut cfg = RunConfig::default();
+    cfg.mode = TrainMode::MtlPar;
+    cfg.parallel.replicas = 2;
+    cfg.parallel.overlap = overlap;
+    cfg.parallel.bucket_elems = 1 << 14;
+    cfg.train.epochs = 3;
+    cfg.train.patience = 0;
+    cfg.data.per_dataset = 96;
+    cfg.data.max_atoms = 12;
+    let out = Trainer::new(Arc::clone(engine), cfg).train(data).expect("training runs");
+
+    let mut samples: Vec<Duration> = Vec::new();
+    let mut total = Duration::ZERO;
+    let mut steps = 0usize;
+    for ep in &out.log.epochs {
+        let t = ep.time_exec + ep.time_comm + ep.time_opt;
+        if ep.steps > 0 {
+            samples.push(t / ep.steps as u32);
+        }
+        total += t;
+        steps += ep.steps;
+    }
+    samples.sort_unstable();
+    let n = samples.len().max(1);
+    let mean = if steps > 0 { total / steps as u32 } else { Duration::ZERO };
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: steps,
+        mean,
+        p50: samples.get(n / 2).copied().unwrap_or(mean),
+        p95: samples.get((n * 95 / 100).min(n - 1)).copied().unwrap_or(mean),
+        min: samples.first().copied().unwrap_or(mean),
+    };
+    (out, stats)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== hydra-mtp overlapped-reduction benchmarks ==\n");
+    let mut results: Vec<BenchStats> = Vec::new();
+
+    // --- comm layer: monolithic vs bucketed-overlapped, same payload ---
+    for (name, bucket) in [
+        ("allreduce_mean 4x1M f32 (monolithic)", ELEMS),
+        ("overlapped bucketed reduce 4x1M f32 (256k buckets)", 1 << 18),
+        ("overlapped bucketed reduce 4x1M f32 (64k buckets)", 1 << 16),
+    ] {
+        let s = comm_leg(name, bucket);
+        println!("{}", s.report());
+        results.push(s);
+    }
+
+    // --- trainer: sync vs overlapped step time, same config + data ---
+    let engine = Arc::new(Engine::load_full(
+        "artifacts",
+        BackendKind::Native,
+        Precision::F64,
+    )?);
+    let mut data_cfg = RunConfig::default();
+    data_cfg.data.per_dataset = 96;
+    data_cfg.data.max_atoms = 12;
+    let data = DataBundle::generate(
+        &data_cfg.data,
+        &[DatasetId::Ani1x, DatasetId::Qm7x, DatasetId::MpTrj],
+    );
+
+    let (sync_out, sync_stats) =
+        train_leg(&engine, &data, "mtl-par train step (sync reduction)", false);
+    println!("{}", sync_stats.report());
+    results.push(sync_stats.clone());
+
+    let (ov_out, ov_stats) =
+        train_leg(&engine, &data, "mtl-par train step (overlapped reduction)", true);
+    println!("{}", ov_stats.report());
+    results.push(ov_stats.clone());
+
+    // A perf win that changes the numbers is a bug: the two legs must end
+    // at the same training losses to the last bit.
+    for (a, b) in sync_out.log.epochs.iter().zip(&ov_out.log.epochs) {
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "epoch {}: overlapped leg diverged from sync",
+            a.epoch
+        );
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(), "epoch {}", a.epoch);
+    }
+    assert!(ov_out.overlapped_elems > 0, "overlap leg must engage the comm thread");
+    println!(
+        "\nbit-identical: yes; overlapped traffic {:.1} Mf32; step time {:?} -> {:?} ({:+.1}%)",
+        ov_out.overlapped_elems as f64 / 1e6,
+        sync_stats.mean,
+        ov_stats.mean,
+        (ov_stats.mean_secs() / sync_stats.mean_secs() - 1.0) * 100.0
+    );
+
+    write_bench_json(BENCH_JSON, "overlap", &results)?;
+    println!("wrote {BENCH_JSON} ({} ops)", results.len());
+    Ok(())
+}

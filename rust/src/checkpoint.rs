@@ -857,6 +857,7 @@ fn enc_log(e: &mut Enc, log: &RunLog) {
             e.str(&c.dataset);
             e.u64(c.planned as u64);
             e.u64(c.used as u64);
+            e.f64(c.step_ms);
         }
     }
 }
@@ -887,6 +888,7 @@ fn dec_log(d: &mut Dec) -> anyhow::Result<RunLog> {
                 dataset: d.str()?,
                 planned: d.usize()?,
                 used: d.usize()?,
+                step_ms: d.f64()?,
             });
         }
         epochs.push(EpochMetrics {

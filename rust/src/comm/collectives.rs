@@ -67,6 +67,23 @@ impl std::fmt::Display for CommError {
 
 impl std::error::Error for CommError {}
 
+/// Traffic counters of one communicator. `elems` counts every f32 moved
+/// through any collective; `overlapped_elems` is the subset that moved
+/// through the overlapped entry points (bucketed reductions issued from a
+/// comm thread while backward still runs) — the seed's two-counter tuple
+/// could not tell the bench what actually moved concurrently.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommStats {
+    /// Total f32 elements moved through collectives (allreduce AND
+    /// broadcast) on this communicator.
+    pub elems: u64,
+    /// Completed collective rounds.
+    pub rounds: u64,
+    /// f32 elements reduced through [`Comm::allreduce_mean_overlapped`]
+    /// (always `<= elems`).
+    pub overlapped_elems: u64,
+}
+
 #[derive(Default)]
 struct RoundState {
     /// Per-rank contributions of the in-flight round (rank-indexed). The
@@ -102,6 +119,9 @@ struct Shared {
     reduced_elems: AtomicU64,
     /// Number of collective rounds completed.
     rounds: AtomicU64,
+    /// Subset of `reduced_elems` that moved through the overlapped entry
+    /// points (see [`CommStats::overlapped_elems`]).
+    overlapped_elems: AtomicU64,
 }
 
 /// Recover the guard even if a peer panicked while holding the lock: the
@@ -177,6 +197,7 @@ impl Comm {
             labels,
             reduced_elems: AtomicU64::new(0),
             rounds: AtomicU64::new(0),
+            overlapped_elems: AtomicU64::new(0),
         });
         (0..n).map(|i| Comm { shared: Arc::clone(&shared), rank_in_group: i }).collect()
     }
@@ -225,16 +246,28 @@ impl Comm {
 
     /// Elementwise mean across the group, in place. All members must call.
     pub fn allreduce_mean(&self, data: &mut [f32]) -> Result<(), CommError> {
-        self.reduce(data, true)
+        self.reduce(data, true, false)
     }
 
     /// Elementwise sum across the group, in place.
     pub fn allreduce_sum(&self, data: &mut [f32]) -> Result<(), CommError> {
-        self.reduce(data, false)
+        self.reduce(data, false, false)
     }
 
-    fn reduce(&self, data: &mut [f32], mean: bool) -> Result<(), CommError> {
+    /// As [`Comm::allreduce_mean`], tagged as overlapped traffic: the
+    /// payload additionally counts toward [`CommStats::overlapped_elems`].
+    /// Numerically and bit-for-bit identical to the untagged call — the
+    /// overlap machinery (`comm::overlap`) issues its bucket reductions
+    /// through here so the bench can report what moved concurrently.
+    pub fn allreduce_mean_overlapped(&self, data: &mut [f32]) -> Result<(), CommError> {
+        self.reduce(data, true, true)
+    }
+
+    fn reduce(&self, data: &mut [f32], mean: bool, overlapped: bool) -> Result<(), CommError> {
         let sh = &self.shared;
+        if overlapped {
+            sh.overlapped_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
+        }
         if sh.size == 1 {
             sh.rounds.fetch_add(1, Ordering::Relaxed);
             sh.reduced_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
@@ -369,7 +402,7 @@ impl Comm {
     /// Barrier across the group.
     pub fn barrier(&self) -> Result<(), CommError> {
         let mut unit = [0f32; 0];
-        self.reduce(&mut unit, false)
+        self.reduce(&mut unit, false, false)
     }
 
     /// Allgather of one f64 per rank (metrics aggregation).
@@ -386,12 +419,13 @@ impl Comm {
         Ok((0..n).map(|i| slots[2 * i] as f64 + slots[2 * i + 1] as f64).collect())
     }
 
-    /// (total f32 elements moved through collectives, completed rounds).
-    pub fn stats(&self) -> (u64, u64) {
-        (
-            self.shared.reduced_elems.load(Ordering::Relaxed),
-            self.shared.rounds.load(Ordering::Relaxed),
-        )
+    /// Traffic counters of this communicator (see [`CommStats`]).
+    pub fn stats(&self) -> CommStats {
+        CommStats {
+            elems: self.shared.reduced_elems.load(Ordering::Relaxed),
+            rounds: self.shared.rounds.load(Ordering::Relaxed),
+            overlapped_elems: self.shared.overlapped_elems.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -532,10 +566,37 @@ mod tests {
             c.allreduce_mean(&mut d).unwrap();
             c.stats()
         });
-        for (elems, rounds) in results {
-            assert_eq!(elems, 10);
-            assert_eq!(rounds, 1);
+        for st in results {
+            assert_eq!(st.elems, 10);
+            assert_eq!(st.rounds, 1);
+            assert_eq!(st.overlapped_elems, 0, "sync traffic must not be tagged overlapped");
         }
+    }
+
+    #[test]
+    fn overlapped_tag_splits_the_counter_without_changing_bits() {
+        // Same contribution through both entry points: identical bits out,
+        // but only the tagged call moves the overlapped counter.
+        let results = run_group_ok(2, |c| {
+            let mut sync = vec![c.rank_in_group as f32 + 0.25; 6];
+            let mut ovl = sync.clone();
+            c.allreduce_mean(&mut sync).unwrap();
+            c.allreduce_mean_overlapped(&mut ovl).unwrap();
+            (sync, ovl, c.stats())
+        });
+        for (sync, ovl, st) in results {
+            for (a, b) in sync.iter().zip(ovl.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(st.elems, 12);
+            assert_eq!(st.rounds, 2);
+            assert_eq!(st.overlapped_elems, 6);
+        }
+        // Size-1 groups tag consistently with the sync shortcut.
+        let comms = Comm::group(1);
+        let mut d = vec![1.0f32; 3];
+        comms[0].allreduce_mean_overlapped(&mut d).unwrap();
+        assert_eq!(comms[0].stats().overlapped_elems, 3);
     }
 
     #[test]
@@ -547,15 +608,15 @@ mod tests {
             c.broadcast(1, &mut d).unwrap();
             c.stats()
         });
-        for (elems, rounds) in results {
-            assert_eq!(elems, 7, "broadcast payload must be counted");
-            assert_eq!(rounds, 1);
+        for st in results {
+            assert_eq!(st.elems, 7, "broadcast payload must be counted");
+            assert_eq!(st.rounds, 1);
         }
         // Size-1 groups count too (degenerate but consistent with reduce).
         let comms = Comm::group(1);
         let mut d = vec![0f32; 5];
         comms[0].broadcast(0, &mut d).unwrap();
-        assert_eq!(comms[0].stats().0, 5);
+        assert_eq!(comms[0].stats().elems, 5);
     }
 
     #[test]

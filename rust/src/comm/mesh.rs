@@ -93,6 +93,120 @@ pub fn build_mesh_with_timeout(shape: MeshShape, timeout: Duration) -> Vec<MeshR
     out
 }
 
+/// Ragged mesh geometry for the elastic head scheduler: head `h` owns
+/// `sizes[h]` contiguous ranks (head-major layout, like [`MeshShape`] with
+/// per-head widths). Sizes are fixed within an epoch; the elastic trainer
+/// rebuilds the mesh at epoch boundaries from measured per-head step costs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RaggedShape {
+    sizes: Vec<usize>,
+    /// `starts[h]` = first global rank of head `h`; one extra trailing
+    /// entry holds the world size.
+    starts: Vec<usize>,
+}
+
+impl RaggedShape {
+    /// Every head needs at least one rank.
+    pub fn new(sizes: Vec<usize>) -> anyhow::Result<RaggedShape> {
+        anyhow::ensure!(!sizes.is_empty(), "ragged mesh needs at least one head");
+        anyhow::ensure!(
+            sizes.iter().all(|&s| s >= 1),
+            "every head sub-group needs at least one rank (got {sizes:?})"
+        );
+        let mut starts = Vec::with_capacity(sizes.len() + 1);
+        let mut acc = 0usize;
+        for &s in &sizes {
+            starts.push(acc);
+            acc += s;
+        }
+        starts.push(acc);
+        Ok(RaggedShape { sizes, starts })
+    }
+
+    pub fn num_heads(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn world_size(&self) -> usize {
+        *self.starts.last().expect("starts is never empty")
+    }
+
+    pub fn head_size(&self, head: usize) -> usize {
+        self.sizes[head]
+    }
+
+    pub fn head_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// First global rank of `head` — the sub-group's broadcast root for
+    /// checkpoint gathers.
+    pub fn head_root(&self, head: usize) -> usize {
+        self.starts[head]
+    }
+
+    pub fn rank_of(&self, head: usize, replica: usize) -> usize {
+        assert!(head < self.num_heads() && replica < self.sizes[head]);
+        self.starts[head] + replica
+    }
+
+    /// rank -> (head, replica).
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        assert!(rank < self.world_size());
+        // `starts` is strictly increasing, so the owning head is the last
+        // start at or below `rank`.
+        let head = self.starts.partition_point(|&s| s <= rank) - 1;
+        (head, rank - self.starts[head])
+    }
+}
+
+/// One rank's view of a ragged mesh (elastic MTL-par): coordinates plus the
+/// global and head-sub-group communicator handles.
+pub struct RaggedMeshRank {
+    pub rank: usize,
+    pub head: usize,
+    pub replica: usize,
+    pub shape: RaggedShape,
+    pub global: Comm,
+    pub head_group: Comm,
+}
+
+/// As [`build_mesh_with_timeout`] for a ragged shape: one global group over
+/// all ranks plus one sub-group per head sized `shape.head_size(h)`, each
+/// labeled with GLOBAL ranks for failure reporting.
+pub fn build_ragged_mesh_with_timeout(
+    shape: &RaggedShape,
+    timeout: Duration,
+) -> Vec<RaggedMeshRank> {
+    let world = shape.world_size();
+    let global = Comm::group_with(world, timeout, None);
+    let mut head_groups: Vec<Vec<Comm>> = (0..shape.num_heads())
+        .map(|h| {
+            let labels = (0..shape.head_size(h)).map(|r| shape.rank_of(h, r)).collect();
+            Comm::group_with(shape.head_size(h), timeout, Some(labels))
+        })
+        .collect();
+
+    let mut out = Vec::with_capacity(world);
+    for (rank, global_comm) in global.into_iter().enumerate() {
+        let (head, replica) = shape.coords(rank);
+        let head_comm = std::mem::replace(
+            &mut head_groups[head][replica],
+            // Placeholder that is never used again.
+            Comm::group(1).pop().unwrap(),
+        );
+        out.push(RaggedMeshRank {
+            rank,
+            head,
+            replica,
+            shape: shape.clone(),
+            global: global_comm,
+            head_group: head_comm,
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +254,51 @@ mod tests {
             let expected = if head == 0 { 0.5 } else { 2.5 };
             assert!((head_mean - expected).abs() < 1e-6);
             assert!((global_mean - 1.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ragged_coords_roundtrip_and_roots() {
+        let shape = RaggedShape::new(vec![3, 1, 2]).unwrap();
+        assert_eq!(shape.world_size(), 6);
+        assert_eq!(shape.num_heads(), 3);
+        for rank in 0..shape.world_size() {
+            let (h, r) = shape.coords(rank);
+            assert_eq!(shape.rank_of(h, r), rank);
+        }
+        assert_eq!(shape.head_root(0), 0);
+        assert_eq!(shape.head_root(1), 3);
+        assert_eq!(shape.head_root(2), 4);
+        assert!(RaggedShape::new(vec![2, 0]).is_err(), "zero-rank head rejected");
+        assert!(RaggedShape::new(vec![]).is_err(), "empty shape rejected");
+    }
+
+    #[test]
+    fn ragged_head_groups_reduce_independently() {
+        let shape = RaggedShape::new(vec![2, 1]).unwrap();
+        let ranks = build_ragged_mesh_with_timeout(&shape, DEFAULT_TIMEOUT);
+        let handles: Vec<_> = ranks
+            .into_iter()
+            .map(|mr| {
+                thread::spawn(move || {
+                    // Head 0 owns ranks {0,1} -> mean 0.5; head 1 owns {2}
+                    // -> mean 2.0; the global mean over {0,1,2} is 1.0.
+                    let mut head_val = vec![mr.rank as f32];
+                    mr.head_group.allreduce_mean(&mut head_val).unwrap();
+                    let mut global_val = vec![mr.rank as f32];
+                    mr.global.allreduce_mean(&mut global_val).unwrap();
+                    (mr.head, mr.replica, head_val[0], global_val[0])
+                })
+            })
+            .collect();
+        for h in handles {
+            let (head, replica, head_mean, global_mean) = h.join().unwrap();
+            let expected = if head == 0 { 0.5 } else { 2.0 };
+            assert!((head_mean - expected).abs() < 1e-6);
+            assert!((global_mean - 1.0).abs() < 1e-6);
+            if head == 1 {
+                assert_eq!(replica, 0);
+            }
         }
     }
 

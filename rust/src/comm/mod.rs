@@ -4,6 +4,11 @@
 
 pub mod collectives;
 pub mod mesh;
+pub mod overlap;
 
-pub use collectives::{run_group, run_group_with, Comm, CommError, MemberGuard};
-pub use mesh::{build_mesh, build_mesh_with_timeout, MeshRank, MeshShape};
+pub use collectives::{run_group, run_group_with, Comm, CommError, CommStats, MemberGuard};
+pub use mesh::{
+    build_mesh, build_mesh_with_timeout, build_ragged_mesh_with_timeout, MeshRank, MeshShape,
+    RaggedMeshRank, RaggedShape,
+};
+pub use overlap::{BucketPlan, OverlapReducer, OverlapSink, Segment};

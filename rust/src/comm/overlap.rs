@@ -1,0 +1,640 @@
+//! Compute/communication overlap: bucketed gradient reduction on a
+//! per-rank comm thread while the analytic backward pass still runs.
+//!
+//! The synchronous trainer blocks every rank on one monolithic
+//! `allreduce_mean` over the whole flattened gradient after backward
+//! completes. This module splits that payload into size-bounded **buckets**
+//! ordered by backward completion — `branch.*` leaves finish first, then
+//! `encoder.layers.{li}.*` in reverse layer order, `encoder.embed` last —
+//! and reduces each bucket on a dedicated comm thread as soon as its last
+//! block is signaled by `model::egnn::backward_observed`, so the reduction
+//! of early buckets overlaps the backward compute of later ones.
+//!
+//! **Determinism argument.** The shared-memory reduction is elementwise:
+//! each element's reduced value is a pure function of the group's
+//! contributions for that element (f64 widening, rank-order fold, one
+//! multiply by `1/size`). Splitting the payload into buckets therefore
+//! changes *when* each element is reduced, never *what* it reduces to — the
+//! overlapped path is BIT-identical to the monolithic call, which keeps
+//! checkpoint kill-at-k resume parity intact (`integration_overlap.rs`
+//! asserts both). Submission order is a pure function of the bucket plan
+//! (identical on every rank), so no two ranks ever disagree on the round
+//! sequence of a communicator.
+//!
+//! **Failure behavior.** The comm thread issues ordinary collectives, so a
+//! dead peer surfaces as the usual typed [`CommError::RankFailure`] on the
+//! next bucket; [`OverlapReducer`]'s `Drop` poisons its communicators
+//! before joining whenever jobs are still in flight, so a rank aborting
+//! mid-step (skip-budget exhaustion, injected fault) wakes the thread out
+//! of any blocked rendezvous instead of deadlocking it.
+
+use std::sync::mpsc;
+
+use crate::comm::collectives::{Comm, CommError};
+use crate::model::egnn::GradBlock;
+use crate::model::params::{LeafMeta, ParamSet};
+
+/// Which communicator a bucket reduces over. Under MTL-par the encoder
+/// segment reduces on the global group and the branch segment on the head
+/// sub-group; DDP routes both to the global group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Segment {
+    Encoder,
+    Branch,
+}
+
+/// One leaf's placement inside its segment's flat buffer (the order
+/// `ParamSet::flatten_prefix_into` writes).
+#[derive(Debug, Clone)]
+struct BucketLeaf {
+    name: String,
+    /// Offset into the segment's flat buffer.
+    seg_off: usize,
+    len: usize,
+}
+
+/// A size-bounded group of consecutive (in completion order) leaves that
+/// reduces as one collective payload.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    leaves: Vec<BucketLeaf>,
+    /// Total f32 elements in the bucket.
+    pub elems: usize,
+    /// The bucket is ready once the block with this completion ordinal has
+    /// been signaled (the max ordinal over its leaves).
+    pub ready_ordinal: usize,
+}
+
+/// Partition of the manifest's parameter leaves into gradient buckets
+/// ordered by backward completion. Branch buckets are contiguous ranges of
+/// the branch flat buffer (all branch leaves share ordinal 0); encoder
+/// buckets follow completion order (layer `L-1` first, `embed` last), which
+/// is NOT the flat order — each bucket records per-leaf offsets so reduced
+/// values scatter back exactly where `unflatten_prefix_from` expects them.
+#[derive(Debug, Clone)]
+pub struct BucketPlan {
+    enc_buckets: Vec<Bucket>,
+    br_buckets: Vec<Bucket>,
+    enc_len: usize,
+    br_len: usize,
+    num_layers: usize,
+}
+
+impl BucketPlan {
+    /// Build a plan over `metas` (the manifest's full parameter leaf list,
+    /// `branch.*` then `encoder.*`). `bucket_elems` bounds each bucket's
+    /// payload; a single leaf larger than the bound gets its own bucket.
+    pub fn new(
+        metas: &[LeafMeta],
+        num_layers: usize,
+        bucket_elems: usize,
+    ) -> anyhow::Result<BucketPlan> {
+        anyhow::ensure!(bucket_elems >= 1, "bucket_elems must be >= 1");
+        let mut enc_leaves: Vec<(usize, BucketLeaf)> = Vec::new();
+        let mut br_leaves: Vec<(usize, BucketLeaf)> = Vec::new();
+        let (mut enc_len, mut br_len) = (0usize, 0usize);
+        for m in metas {
+            let len = m.numel();
+            if m.name.starts_with("branch.") {
+                let leaf = BucketLeaf { name: m.name.clone(), seg_off: br_len, len };
+                br_leaves.push((GradBlock::Branch.ordinal(num_layers), leaf));
+                br_len += len;
+            } else if m.name.starts_with("encoder.") {
+                let block = block_of_encoder_leaf(&m.name, num_layers)?;
+                let leaf = BucketLeaf { name: m.name.clone(), seg_off: enc_len, len };
+                enc_leaves.push((block.ordinal(num_layers), leaf));
+                enc_len += len;
+            } else {
+                anyhow::bail!("leaf '{}' is neither branch.* nor encoder.*", m.name);
+            }
+        }
+        // Completion order; the stable sort keeps flat order within a block.
+        enc_leaves.sort_by_key(|(ord, _)| *ord);
+        Ok(BucketPlan {
+            enc_buckets: partition(enc_leaves, bucket_elems),
+            br_buckets: partition(br_leaves, bucket_elems),
+            enc_len,
+            br_len,
+            num_layers,
+        })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.num_layers
+    }
+
+    /// Flat length of the encoder segment.
+    pub fn enc_len(&self) -> usize {
+        self.enc_len
+    }
+
+    /// Flat length of the branch segment.
+    pub fn br_len(&self) -> usize {
+        self.br_len
+    }
+
+    pub fn enc_buckets(&self) -> &[Bucket] {
+        &self.enc_buckets
+    }
+
+    pub fn br_buckets(&self) -> &[Bucket] {
+        &self.br_buckets
+    }
+
+    fn buckets(&self, seg: Segment) -> &[Bucket] {
+        match seg {
+            Segment::Encoder => &self.enc_buckets,
+            Segment::Branch => &self.br_buckets,
+        }
+    }
+}
+
+/// Map an `encoder.*` leaf name to its backward block.
+fn block_of_encoder_leaf(name: &str, num_layers: usize) -> anyhow::Result<GradBlock> {
+    if name == "encoder.embed" {
+        return Ok(GradBlock::Embed);
+    }
+    if let Some(rest) = name.strip_prefix("encoder.layers.") {
+        let li: usize = rest
+            .split('.')
+            .next()
+            .unwrap_or("")
+            .parse()
+            .map_err(|_| anyhow::anyhow!("cannot parse layer index from leaf '{name}'"))?;
+        anyhow::ensure!(li < num_layers, "leaf '{name}' exceeds num_layers={num_layers}");
+        return Ok(GradBlock::Layer(li));
+    }
+    anyhow::bail!("unrecognized encoder leaf '{name}'")
+}
+
+/// Greedy size-bounded partition of completion-ordered leaves.
+fn partition(leaves: Vec<(usize, BucketLeaf)>, bucket_elems: usize) -> Vec<Bucket> {
+    let mut out: Vec<Bucket> = Vec::new();
+    for (ord, leaf) in leaves {
+        let open = match out.last() {
+            Some(b) => b.elems + leaf.len <= bucket_elems && !b.leaves.is_empty(),
+            None => false,
+        };
+        if open {
+            let b = out.last_mut().expect("checked non-empty above");
+            b.elems += leaf.len;
+            b.ready_ordinal = b.ready_ordinal.max(ord);
+            b.leaves.push(leaf);
+        } else {
+            out.push(Bucket { elems: leaf.len, ready_ordinal: ord, leaves: vec![leaf] });
+        }
+    }
+    out
+}
+
+struct Job {
+    seq: u64,
+    seg: Segment,
+    dest: usize,
+    offset: usize,
+    buf: Vec<f32>,
+}
+
+struct Done {
+    job: Job,
+    res: Result<(), CommError>,
+}
+
+/// A reduced bucket handed back by [`OverlapReducer::finish`]: scatter
+/// `data` into the destination tagged at submission (`seg`/`dest`/`offset`
+/// are echoed verbatim), then return the buffer via
+/// [`OverlapReducer::recycle`].
+pub struct ReducedBucket {
+    pub seg: Segment,
+    pub dest: usize,
+    pub offset: usize,
+    pub data: Vec<f32>,
+}
+
+/// How many bucket reductions may be in flight on the comm thread at once
+/// (double-buffered: one reducing while the next is staged).
+const IN_FLIGHT_CAP: usize = 2;
+
+/// Per-rank asynchronous bucket reducer: one comm thread executing
+/// `allreduce_mean_overlapped` calls in submission order against clones of
+/// the rank's communicators, with a recycled double-buffered payload pool.
+pub struct OverlapReducer {
+    job_tx: Option<mpsc::Sender<Job>>,
+    done_rx: mpsc::Receiver<Done>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    enc_comm: Comm,
+    br_comm: Comm,
+    pool: Vec<Vec<f32>>,
+    completed: Vec<Done>,
+    in_flight: usize,
+    seq: u64,
+}
+
+impl OverlapReducer {
+    /// Spawn the comm thread. `enc_comm` serves [`Segment::Encoder`]
+    /// buckets and `br_comm` serves [`Segment::Branch`] buckets (pass two
+    /// clones of the same communicator for pure data parallelism).
+    pub fn new(enc_comm: Comm, br_comm: Comm) -> OverlapReducer {
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let (done_tx, done_rx) = mpsc::channel::<Done>();
+        let (enc, br) = (enc_comm.clone(), br_comm.clone());
+        let handle = std::thread::spawn(move || {
+            while let Ok(mut job) = job_rx.recv() {
+                let res = match job.seg {
+                    Segment::Encoder => enc.allreduce_mean_overlapped(&mut job.buf),
+                    Segment::Branch => br.allreduce_mean_overlapped(&mut job.buf),
+                };
+                // A failed collective still reports home; later jobs fail
+                // fast on the poisoned group rather than deadlocking.
+                if done_tx.send(Done { job, res }).is_err() {
+                    return;
+                }
+            }
+        });
+        OverlapReducer {
+            job_tx: Some(job_tx),
+            done_rx,
+            handle: Some(handle),
+            enc_comm,
+            br_comm,
+            pool: Vec::new(),
+            completed: Vec::new(),
+            in_flight: 0,
+            seq: 0,
+        }
+    }
+
+    /// Enqueue one bucket reduction. Blocks only when both in-flight slots
+    /// are busy (backward has outrun the fabric), in which case it waits
+    /// for the oldest bucket to complete first.
+    pub fn submit(
+        &mut self,
+        seg: Segment,
+        dest: usize,
+        offset: usize,
+        data: &[f32],
+    ) -> anyhow::Result<()> {
+        while self.in_flight >= IN_FLIGHT_CAP {
+            let done = self.recv_done()?;
+            self.completed.push(done);
+        }
+        let mut buf = self.pool.pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(data);
+        let job = Job { seq: self.seq, seg, dest, offset, buf };
+        self.seq += 1;
+        self.job_tx
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("overlap reducer already shut down"))?
+            .send(job)
+            .map_err(|_| anyhow::anyhow!("overlap comm thread exited unexpectedly"))?;
+        self.in_flight += 1;
+        Ok(())
+    }
+
+    /// Split `data` into `bucket_elems`-bounded contiguous chunks and
+    /// submit each (offset = chunk start). Every rank must call with the
+    /// same lengths so the chunk sequence — and thus the collective round
+    /// order — is identical group-wide.
+    pub fn submit_chunks(
+        &mut self,
+        seg: Segment,
+        dest: usize,
+        data: &[f32],
+        bucket_elems: usize,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(bucket_elems >= 1, "bucket_elems must be >= 1");
+        let mut off = 0;
+        while off < data.len() {
+            let end = (off + bucket_elems).min(data.len());
+            self.submit(seg, dest, off, &data[off..end])?;
+            off = end;
+        }
+        Ok(())
+    }
+
+    fn recv_done(&mut self) -> anyhow::Result<Done> {
+        let done = self
+            .done_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("overlap comm thread exited unexpectedly"))?;
+        self.in_flight -= 1;
+        Ok(done)
+    }
+
+    /// Drain every in-flight job and hand back the reduced buckets in
+    /// submission order. The first collective failure (by submission
+    /// sequence) is returned as the typed comm error so callers abort
+    /// exactly like a failed synchronous `allreduce_mean`.
+    pub fn finish(&mut self) -> anyhow::Result<Vec<ReducedBucket>> {
+        while self.in_flight > 0 {
+            let done = self.recv_done()?;
+            self.completed.push(done);
+        }
+        let mut done = std::mem::take(&mut self.completed);
+        done.sort_by_key(|d| d.job.seq);
+        let first_err: Option<CommError> = done.iter().find_map(|d| d.res.err());
+        if let Some(err) = first_err {
+            // Recycle what we can; the error aborts the step either way.
+            for d in done {
+                self.pool.push(d.job.buf);
+            }
+            return Err(err.into());
+        }
+        Ok(done
+            .into_iter()
+            .map(|d| ReducedBucket {
+                seg: d.job.seg,
+                dest: d.job.dest,
+                offset: d.job.offset,
+                data: d.job.buf,
+            })
+            .collect())
+    }
+
+    /// Return a consumed bucket's buffer to the pool.
+    pub fn recycle(&mut self, buf: Vec<f32>) {
+        self.pool.push(buf);
+    }
+}
+
+impl Drop for OverlapReducer {
+    fn drop(&mut self) {
+        // Dropped with work in flight means the owning rank is aborting
+        // mid-step: poison the groups FIRST so the comm thread (and every
+        // peer) wakes out of any blocked rendezvous with a typed failure,
+        // then close the channel and join.
+        if self.in_flight > 0 {
+            self.enc_comm.poison();
+            self.br_comm.poison();
+        }
+        self.job_tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Streaming gradient sink for the per-step backward: implements
+/// `runtime::backend::GradObserver`, submitting each bucket the moment its
+/// last block is signaled. One sink lives for a whole rank loop; call
+/// [`OverlapSink::begin_step`] before the step and
+/// [`OverlapSink::finish_step`] after to collect the reduced segments.
+pub struct OverlapSink {
+    plan: BucketPlan,
+    reducer: OverlapReducer,
+    gather: Vec<f32>,
+    /// Submit all-zero payloads (non-finite loss, injected fault): the rank
+    /// still joins every collective so peers never desynchronize.
+    zero: bool,
+    enc_cursor: usize,
+    br_cursor: usize,
+}
+
+impl OverlapSink {
+    pub fn new(plan: BucketPlan, enc_comm: Comm, br_comm: Comm) -> OverlapSink {
+        OverlapSink {
+            plan,
+            reducer: OverlapReducer::new(enc_comm, br_comm),
+            gather: Vec::new(),
+            zero: false,
+            enc_cursor: 0,
+            br_cursor: 0,
+        }
+    }
+
+    pub fn plan(&self) -> &BucketPlan {
+        &self.plan
+    }
+
+    /// Arm the sink for one training step. `force_zero` pre-declares the
+    /// step skipped (fault injection): every bucket carries zeros,
+    /// replicating the synchronous skip-batch path bit-for-bit.
+    pub fn begin_step(&mut self, force_zero: bool) {
+        self.zero = force_zero;
+        self.enc_cursor = 0;
+        self.br_cursor = 0;
+    }
+
+    /// Whether this step's payloads were zeroed (observed or forced
+    /// non-finite loss).
+    pub fn zeroed(&self) -> bool {
+        self.zero
+    }
+
+    /// Record the step's loss before any block is submitted: a non-finite
+    /// loss switches every bucket to zeros (the synchronous path zeroes the
+    /// flat gradient before its allreduce; same values, same rounds).
+    pub fn observe_loss(&mut self, loss: f64) {
+        if !loss.is_finite() {
+            self.zero = true;
+        }
+    }
+
+    /// Signal that `block`'s leaves are final in `grads`; submits every
+    /// bucket whose readiness ordinal is now reached. Branch buckets are
+    /// always drained before encoder buckets at the same ordinal — a fixed
+    /// interleaving rule so all ranks submit in the same order.
+    pub fn observe_block(&mut self, block: GradBlock, grads: &ParamSet) -> anyhow::Result<()> {
+        let ord = block.ordinal(self.plan.num_layers);
+        while self.br_cursor < self.plan.br_buckets.len()
+            && self.plan.br_buckets[self.br_cursor].ready_ordinal <= ord
+        {
+            self.submit_bucket(Segment::Branch, self.br_cursor, grads)?;
+            self.br_cursor += 1;
+        }
+        while self.enc_cursor < self.plan.enc_buckets.len()
+            && self.plan.enc_buckets[self.enc_cursor].ready_ordinal <= ord
+        {
+            self.submit_bucket(Segment::Encoder, self.enc_cursor, grads)?;
+            self.enc_cursor += 1;
+        }
+        Ok(())
+    }
+
+    fn submit_bucket(
+        &mut self,
+        seg: Segment,
+        idx: usize,
+        grads: &ParamSet,
+    ) -> anyhow::Result<()> {
+        let bucket = &self.plan.buckets(seg)[idx];
+        self.gather.clear();
+        if self.zero {
+            self.gather.resize(bucket.elems, 0.0);
+        } else {
+            for leaf in &bucket.leaves {
+                let t = grads
+                    .get(&leaf.name)
+                    .ok_or_else(|| anyhow::anyhow!("gradient leaf '{}' missing", leaf.name))?;
+                self.gather.extend_from_slice(t.as_f32());
+            }
+            anyhow::ensure!(
+                self.gather.len() == bucket.elems,
+                "bucket gather size mismatch ({} vs {})",
+                self.gather.len(),
+                bucket.elems
+            );
+        }
+        // Temporarily take the scratch to appease the borrow between the
+        // gather buffer and the reducer; put it back after the copy-in.
+        let gather = std::mem::take(&mut self.gather);
+        let res = self.reducer.submit(seg, idx, 0, &gather);
+        self.gather = gather;
+        res
+    }
+
+    /// Drain the comm thread and scatter every reduced bucket into the two
+    /// segment buffers (resized to the full segment lengths), exactly as
+    /// the synchronous path leaves them after its monolithic allreduce.
+    pub fn finish_step(
+        &mut self,
+        enc_flat: &mut Vec<f32>,
+        br_flat: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.br_cursor == self.plan.br_buckets.len()
+                && self.enc_cursor == self.plan.enc_buckets.len(),
+            "backward did not signal every gradient block \
+             ({}/{} branch, {}/{} encoder buckets submitted)",
+            self.br_cursor,
+            self.plan.br_buckets.len(),
+            self.enc_cursor,
+            self.plan.enc_buckets.len()
+        );
+        enc_flat.clear();
+        enc_flat.resize(self.plan.enc_len, 0.0);
+        br_flat.clear();
+        br_flat.resize(self.plan.br_len, 0.0);
+        for rb in self.reducer.finish()? {
+            let (bucket, seg_flat) = match rb.seg {
+                Segment::Encoder => (&self.plan.enc_buckets[rb.dest], &mut *enc_flat),
+                Segment::Branch => (&self.plan.br_buckets[rb.dest], &mut *br_flat),
+            };
+            let mut off = 0;
+            for leaf in &bucket.leaves {
+                seg_flat[leaf.seg_off..leaf.seg_off + leaf.len]
+                    .copy_from_slice(&rb.data[off..off + leaf.len]);
+                off += leaf.len;
+            }
+            self.reducer.recycle(rb.data);
+        }
+        Ok(())
+    }
+}
+
+/// The sink IS a [`crate::runtime::backend::GradObserver`]: hand it to
+/// `Engine::train_step_observed_unchecked` and buckets stream out of the
+/// backward as their blocks complete.
+impl crate::runtime::backend::GradObserver for OverlapSink {
+    fn loss_ready(&mut self, loss: f64) {
+        self.observe_loss(loss);
+    }
+
+    fn block_ready(&mut self, block: GradBlock, grads: &ParamSet) -> anyhow::Result<()> {
+        self.observe_block(block, grads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::collectives::run_group;
+
+    fn leaf(name: &str, n: usize) -> LeafMeta {
+        LeafMeta {
+            name: name.into(),
+            shape: vec![n],
+            dtype: crate::tensor::DType::F32,
+            init: None,
+        }
+    }
+
+    fn metas_2layer() -> Vec<LeafMeta> {
+        vec![
+            leaf("branch.trunk.w1", 6),
+            leaf("branch.energy.w", 3),
+            leaf("encoder.embed", 5),
+            leaf("encoder.layers.0.edge.w1", 4),
+            leaf("encoder.layers.1.edge.w1", 4),
+        ]
+    }
+
+    #[test]
+    fn plan_orders_buckets_by_backward_completion() {
+        let plan = BucketPlan::new(&metas_2layer(), 2, 4).unwrap();
+        assert_eq!(plan.br_len(), 9);
+        assert_eq!(plan.enc_len(), 13);
+        // Branch: 6 then 3 (6+3 > 4 → two buckets), all ordinal 0.
+        assert_eq!(plan.br_buckets().len(), 3);
+        assert!(plan.br_buckets().iter().all(|b| b.ready_ordinal == 0));
+        // Encoder completion order: layer 1 (ordinal 1), layer 0 (2),
+        // embed (3) — embed is FIRST in flat order but LAST to be ready.
+        let ords: Vec<usize> = plan.enc_buckets().iter().map(|b| b.ready_ordinal).collect();
+        let mut sorted = ords.clone();
+        sorted.sort_unstable();
+        assert_eq!(ords, sorted, "encoder buckets must be completion-ordered");
+        assert_eq!(*ords.last().unwrap(), 3, "embed bucket readies last");
+    }
+
+    #[test]
+    fn bucketed_reduction_matches_monolithic_bits() {
+        // The reducer over arbitrary chunk boundaries must be bit-identical
+        // to one monolithic allreduce_mean of the same payload.
+        for &ranks in &[1usize, 2, 8] {
+            for &chunk in &[1usize, 3, 7, 64] {
+                let results = run_group(ranks, move |c| {
+                    let mut mono: Vec<f32> = (0..23)
+                        .map(|i| ((i * 31 + c.rank_in_group * 7) as f32).sin() * 1e3)
+                        .collect();
+                    let src = mono.clone();
+                    c.allreduce_mean(&mut mono).unwrap();
+
+                    let mut red = OverlapReducer::new(c.clone(), c.clone());
+                    red.submit_chunks(Segment::Encoder, 0, &src, chunk).unwrap();
+                    let mut out = vec![0f32; src.len()];
+                    for rb in red.finish().unwrap() {
+                        out[rb.offset..rb.offset + rb.data.len()].copy_from_slice(&rb.data);
+                    }
+                    (mono, out)
+                });
+                for r in results {
+                    let (mono, out) = r.unwrap();
+                    for (a, b) in mono.iter().zip(out.iter()) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "ranks={ranks} chunk={chunk}: bucketed != monolithic"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dropped_reducer_mid_flight_poisons_instead_of_deadlocking() {
+        // Rank 1 submits one bucket then drops its reducer while the job is
+        // still formally in flight (an abort mid-step). Rank 0 attempts two
+        // collectives: whatever the interleaving, at least one must surface
+        // a typed failure promptly — never a hang — because the dropping
+        // reducer poisons its groups before joining.
+        let results = run_group(2, |c| {
+            if c.rank_in_group == 1 {
+                let mut red = OverlapReducer::new(c.clone(), c.clone());
+                red.submit(Segment::Encoder, 0, 0, &[1.0, 2.0]).unwrap();
+                drop(red); // in flight → poisons the group
+                return Ok(());
+            }
+            let mut d = vec![0f32; 2];
+            c.allreduce_mean_overlapped(&mut d)?;
+            let mut d2 = vec![0f32; 2];
+            c.allreduce_mean_overlapped(&mut d2)
+        });
+        assert!(
+            results[0].as_ref().unwrap().is_err(),
+            "peer must observe the failure, not deadlock"
+        );
+        assert!(results[1].as_ref().unwrap().is_ok());
+    }
+}

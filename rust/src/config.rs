@@ -107,11 +107,51 @@ pub struct ParallelConfig {
     /// Replicas per head sub-group (M in Figure 3). Head count comes from
     /// the number of datasets in play.
     pub replicas: usize,
+    /// Overlap gradient communication with the backward pass: bucketed
+    /// reductions stream on a per-rank comm thread as blocks complete
+    /// (`comm::overlap`). BIT-identical to the synchronous path — a pure
+    /// scheduling change — so it is excluded from the trajectory
+    /// fingerprint. The `HYDRA_MTP_OVERLAP` env var overrides it at
+    /// train time (see [`ParallelConfig::overlap_resolved`]).
+    pub overlap: bool,
+    /// Bucket payload bound in f32 elements for the overlapped path (>= 1).
+    /// Smaller buckets overlap earlier but pay more per-round latency;
+    /// reduced values are identical at any size.
+    pub bucket_elems: usize,
+    /// Elastic head scheduling for MTL-par: re-size each head's sub-group
+    /// at epoch boundaries from its dataset's measured per-step cost
+    /// (`Coverage::step_ms` EMA x planned batches). Changes which ranks
+    /// average which head's gradients, hence the trajectory — fingerprinted.
+    pub elastic: bool,
 }
 
 impl Default for ParallelConfig {
     fn default() -> Self {
-        ParallelConfig { replicas: 1 }
+        ParallelConfig { replicas: 1, overlap: false, bucket_elems: 8192, elastic: false }
+    }
+}
+
+impl ParallelConfig {
+    /// Whether to run the overlapped reduction path: `HYDRA_MTP_OVERLAP`
+    /// (when set non-empty: `1`/`true`/`on` enable, `0`/`false`/`off`
+    /// disable, anything else warns and falls back to the config) overrides
+    /// the configured flag — the CI matrix flips the whole suite this way.
+    pub fn overlap_resolved(&self) -> bool {
+        if let Ok(env) = std::env::var("HYDRA_MTP_OVERLAP") {
+            let v = env.trim().to_ascii_lowercase();
+            match v.as_str() {
+                "" => {}
+                "1" | "true" | "on" => return true,
+                "0" | "false" | "off" => return false,
+                other => {
+                    eprintln!(
+                        "warning: HYDRA_MTP_OVERLAP ignored: expected 1|true|on|0|false|off, \
+                         got '{other}'"
+                    );
+                }
+            }
+        }
+        self.overlap
     }
 }
 
@@ -258,6 +298,14 @@ pub const FINGERPRINT_EXCLUDED: &[(&str, &str)] = &[
     ("fault.max_restarts", "recovery attempt bound; resumes are bit-identical"),
     ("fault.comm_timeout_ms", "failure-detection deadline; healthy runs never hit it"),
     ("fault.skip_batch_budget", "abort bound; healthy runs never hit it"),
+    (
+        "parallel.overlap",
+        "pure comm scheduling; overlapped reduction is bit-identical to sync by construction",
+    ),
+    (
+        "parallel.bucket_elems",
+        "bucket sizing only changes when elements reduce, never what they reduce to",
+    ),
 ];
 
 impl Default for RunConfig {
@@ -282,6 +330,11 @@ impl RunConfig {
         anyhow::ensure!(self.train.lr > 0.0, "lr must be positive");
         anyhow::ensure!(self.train.epochs > 0, "epochs must be positive");
         anyhow::ensure!(self.parallel.replicas > 0, "replicas must be positive");
+        anyhow::ensure!(
+            self.parallel.bucket_elems >= 1,
+            "parallel.bucket_elems must be >= 1 (got {})",
+            self.parallel.bucket_elems
+        );
         anyhow::ensure!(self.data.per_dataset > 0, "per_dataset must be positive");
         anyhow::ensure!(
             self.data.train_frac + self.data.val_frac < 1.0 + 1e-12,
@@ -352,7 +405,12 @@ impl RunConfig {
             ),
             (
                 "parallel",
-                Json::obj(vec![("replicas", Json::from(self.parallel.replicas))]),
+                Json::obj(vec![
+                    ("replicas", Json::from(self.parallel.replicas)),
+                    ("overlap", Json::from(self.parallel.overlap)),
+                    ("bucket_elems", Json::from(self.parallel.bucket_elems)),
+                    ("elastic", Json::from(self.parallel.elastic)),
+                ]),
             ),
             (
                 "checkpoint",
@@ -462,8 +520,18 @@ impl RunConfig {
         if let Some(v) = t.get("seed").as_i64() {
             cfg.train.seed = v as u64;
         }
-        if let Some(v) = j.get("parallel").get("replicas").as_i64() {
+        let p = j.get("parallel");
+        if let Some(v) = p.get("replicas").as_i64() {
             cfg.parallel.replicas = v as usize;
+        }
+        if let Some(v) = p.get("overlap").as_bool() {
+            cfg.parallel.overlap = v;
+        }
+        if let Some(v) = p.get("bucket_elems").as_i64() {
+            cfg.parallel.bucket_elems = v as usize;
+        }
+        if let Some(v) = p.get("elastic").as_bool() {
+            cfg.parallel.elastic = v;
         }
         let c = j.get("checkpoint");
         if let Some(s) = c.get("dir").as_str() {
@@ -535,7 +603,7 @@ impl RunConfig {
         format!(
             "backend={};precision={};mode={};train_seed={};data_seed={};per_dataset={};max_atoms={};\
              cutoff={};train_frac={};val_frac={};lr={};weight_decay={};beta1={};\
-             beta2={};eps={};grad_clip={};patience={};replicas={}",
+             beta2={};eps={};grad_clip={};patience={};replicas={};elastic={}",
             backend,
             precision,
             self.mode.name(),
@@ -554,6 +622,7 @@ impl RunConfig {
             f(self.train.grad_clip),
             self.train.patience,
             self.parallel.replicas,
+            self.parallel.elastic,
         )
     }
 
@@ -580,6 +649,9 @@ mod tests {
         cfg.precision = Precision::MixedF32;
         cfg.train.lr = 0.005;
         cfg.parallel.replicas = 4;
+        cfg.parallel.overlap = true;
+        cfg.parallel.bucket_elems = 1024;
+        cfg.parallel.elastic = true;
         cfg.checkpoint.dir = Some("ckpts".to_string());
         cfg.checkpoint.every = 3;
         cfg.serve.workers = 2;
@@ -596,6 +668,9 @@ mod tests {
         assert_eq!(back.precision, Precision::MixedF32);
         assert_eq!(back.train.lr, 0.005);
         assert_eq!(back.parallel.replicas, 4);
+        assert!(back.parallel.overlap);
+        assert_eq!(back.parallel.bucket_elems, 1024);
+        assert!(back.parallel.elastic);
         assert_eq!(back.checkpoint.dir.as_deref(), Some("ckpts"));
         assert_eq!(back.checkpoint.every, 3);
         assert!(back.checkpoint.resume.is_none());
@@ -623,6 +698,10 @@ mod tests {
         b.fault.max_restarts = 9;
         b.fault.comm_timeout_ms = 123;
         b.fault.skip_batch_budget = 99;
+        // Overlapped reduction is bit-identical to sync, and bucket sizing
+        // only reschedules it — neither may invalidate a resume.
+        b.parallel.overlap = true;
+        b.parallel.bucket_elems = 17;
         assert_eq!(a.trajectory_fingerprint(), b.trajectory_fingerprint());
         // Every trajectory knob changes it.
         for mutate in [
@@ -634,6 +713,7 @@ mod tests {
             |c| c.train.patience = 9,
             |c| c.backend = BackendKind::Native,
             |c| c.precision = Precision::MixedF32,
+            |c| c.parallel.elastic = true,
         ] {
             let mut c = RunConfig::default();
             mutate(&mut c);
@@ -685,6 +765,9 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = RunConfig::default();
         cfg.parallel.replicas = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = RunConfig::default();
+        cfg.parallel.bucket_elems = 0;
         assert!(cfg.validate().is_err());
         let mut cfg = RunConfig::default();
         cfg.serve.queue_capacity = 0;

@@ -19,14 +19,39 @@ pub struct Coverage {
     pub dataset: String,
     pub planned: usize,
     pub used: usize,
+    /// EMA of this dataset's measured per-step wall time in milliseconds
+    /// (0.0 until the first measurement). The elastic head scheduler sizes
+    /// MTL-par sub-groups from this estimate at epoch boundaries; it is
+    /// persisted in checkpoints so a resumed run replans from the same
+    /// history an uninterrupted one would.
+    pub step_ms: f64,
 }
 
+/// EMA decay for [`Coverage::step_ms`]: heavy enough on the newest epoch to
+/// track load shifts, smooth enough to ignore one noisy epoch.
+pub const STEP_MS_EMA_ALPHA: f64 = 0.5;
+
 impl Coverage {
+    /// Fold one epoch's measured mean step wall time into the EMA. The
+    /// first observation seeds the estimate directly; non-finite or
+    /// non-positive samples are ignored.
+    pub fn observe_step_ms(&mut self, measured_ms: f64) {
+        if !measured_ms.is_finite() || measured_ms <= 0.0 {
+            return;
+        }
+        self.step_ms = if self.step_ms > 0.0 {
+            STEP_MS_EMA_ALPHA * measured_ms + (1.0 - STEP_MS_EMA_ALPHA) * self.step_ms
+        } else {
+            measured_ms
+        };
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("dataset", Json::str(self.dataset.clone())),
             ("planned", Json::from(self.planned)),
             ("used", Json::from(self.used)),
+            ("step_ms", Json::from(self.step_ms)),
         ])
     }
 }
@@ -177,11 +202,18 @@ impl RunLog {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "epoch,steps,train_loss,mae_e,mae_f,val_loss,skipped,total_s,data_s,exec_s,\
-             comm_s,opt_s\n",
+             comm_s,opt_s,step_ms\n",
         );
         for e in &self.epochs {
+            // The flat CSV gets the mean of the per-dataset step-time EMAs;
+            // the per-dataset breakdown lives in the JSON coverage array.
+            let step_ms = if e.coverage.is_empty() {
+                0.0
+            } else {
+                e.coverage.iter().map(|c| c.step_ms).sum::<f64>() / e.coverage.len() as f64
+            };
             out.push_str(&format!(
-                "{},{},{:.6},{:.6},{:.6},{:.6},{},{:.4},{:.4},{:.4},{:.4},{:.4}\n",
+                "{},{},{:.6},{:.6},{:.6},{:.6},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4}\n",
                 e.epoch,
                 e.steps,
                 e.train_loss,
@@ -194,6 +226,7 @@ impl RunLog {
                 e.time_exec.as_secs_f64(),
                 e.time_comm.as_secs_f64(),
                 e.time_opt.as_secs_f64(),
+                step_ms,
             ));
         }
         out
@@ -237,8 +270,8 @@ mod tests {
         let mut a = StepAccum::default();
         a.record_step(1.0, 0.0, 0.0);
         let e = a.into_epoch(0, Duration::ZERO, 1.0).with_coverage(vec![
-            Coverage { dataset: "big".into(), planned: 10, used: 10 },
-            Coverage { dataset: "small".into(), planned: 2, used: 10 },
+            Coverage { dataset: "big".into(), planned: 10, used: 10, step_ms: 0.0 },
+            Coverage { dataset: "small".into(), planned: 2, used: 10, step_ms: 1.25 },
         ]);
         assert_eq!(e.coverage.len(), 2);
         let j = e.to_json();
@@ -246,6 +279,19 @@ mod tests {
         assert_eq!(cov.idx(1).get("dataset").as_str(), Some("small"));
         assert_eq!(cov.idx(1).get("used").as_i64(), Some(10));
         assert_eq!(cov.idx(1).get("planned").as_i64(), Some(2));
+        assert_eq!(cov.idx(1).get("step_ms").as_f64(), Some(1.25));
+    }
+
+    #[test]
+    fn step_ms_ema_seeds_then_smooths() {
+        let mut c = Coverage { dataset: "d".into(), ..Default::default() };
+        c.observe_step_ms(f64::NAN); // ignored
+        c.observe_step_ms(-3.0); // ignored
+        assert_eq!(c.step_ms, 0.0);
+        c.observe_step_ms(10.0); // first sample seeds directly
+        assert_eq!(c.step_ms, 10.0);
+        c.observe_step_ms(20.0);
+        assert_eq!(c.step_ms, STEP_MS_EMA_ALPHA * 20.0 + (1.0 - STEP_MS_EMA_ALPHA) * 10.0);
     }
 
     #[test]

@@ -1,6 +1,57 @@
 //! Training schedule helpers: early stopping (paper Section 5.1: "early
-//! stopping was applied to avoid redundant computations") and learning-rate
-//! schedules.
+//! stopping was applied to avoid redundant computations"), learning-rate
+//! schedules, and the elastic head-group planner that sizes MTL-par
+//! sub-groups from measured per-head step costs.
+
+/// Size each head's sub-group proportionally to its measured cost (elastic
+/// MTL-par). `costs[h]` is head `h`'s total serial-work estimate for the
+/// coming epoch (per-step wall-time EMA x planned batches); `world` ranks
+/// are split so every head keeps at least one rank, with the spare ranks
+/// apportioned by largest remainder over the cost weights (ties to the
+/// lower head index). A pure function of its arguments — every rank replans
+/// at an epoch boundary from identical inputs and must agree bit-for-bit on
+/// the resulting mesh.
+///
+/// Heads with no measurement yet (cost `<= 0` or non-finite, e.g. the first
+/// epoch) weigh zero; when NO head has a measurement the split is as even
+/// as possible, matching the static mesh for a uniform bundle.
+pub fn plan_head_groups(costs: &[f64], world: usize) -> anyhow::Result<Vec<usize>> {
+    let n = costs.len();
+    anyhow::ensure!(n >= 1, "elastic plan needs at least one head");
+    anyhow::ensure!(
+        world >= n,
+        "world size {world} cannot give each of {n} heads a rank"
+    );
+    let sane: Vec<f64> = costs
+        .iter()
+        .map(|&c| if c.is_finite() && c > 0.0 { c } else { 0.0 })
+        .collect();
+    let total: f64 = sane.iter().sum();
+    if total <= 0.0 {
+        let (base, extra) = (world / n, world % n);
+        return Ok((0..n).map(|h| base + usize::from(h < extra)).collect());
+    }
+    // Every head starts with one rank; the spare ranks follow the weights.
+    let spare = (world - n) as f64;
+    let quota: Vec<f64> = sane.iter().map(|&c| c / total * spare).collect();
+    let mut sizes: Vec<usize> = quota.iter().map(|&q| 1 + q.floor() as usize).collect();
+    let assigned: usize = sizes.iter().sum();
+    let mut by_rem: Vec<(usize, f64)> = quota
+        .iter()
+        .enumerate()
+        .map(|(h, &q)| (h, q - q.floor()))
+        .collect();
+    by_rem.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    // Fewer leftovers than heads by construction (fractional parts < 1).
+    for &(h, _) in by_rem.iter().take(world - assigned) {
+        sizes[h] += 1;
+    }
+    Ok(sizes)
+}
 
 /// Early stopping on validation loss with a patience window.
 #[derive(Debug, Clone)]
@@ -170,5 +221,33 @@ mod tests {
         let s = LrSchedule::Constant(0.01);
         assert_eq!(s.at(0), 0.01);
         assert_eq!(s.at(9999), 0.01);
+    }
+
+    #[test]
+    fn elastic_plan_shifts_ranks_toward_expensive_heads() {
+        let sizes = plan_head_groups(&[9.0, 1.0], 10).unwrap();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes[0] > sizes[1], "9x cost head must get more ranks: {sizes:?}");
+        assert!(sizes[1] >= 1);
+        // Extreme skew still leaves every head at least one rank.
+        assert_eq!(plan_head_groups(&[1000.0, 0.001, 0.001], 4).unwrap(), vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn elastic_plan_without_measurements_splits_evenly() {
+        assert_eq!(plan_head_groups(&[0.0, 0.0], 5).unwrap(), vec![3, 2]);
+        assert_eq!(plan_head_groups(&[f64::NAN, -1.0, 0.0], 6).unwrap(), vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn elastic_plan_is_total_and_minimal_worlds_work() {
+        assert_eq!(plan_head_groups(&[5.0, 1.0, 1.0], 3).unwrap(), vec![1, 1, 1]);
+        assert!(plan_head_groups(&[1.0, 1.0], 1).is_err(), "world < heads rejected");
+        assert!(plan_head_groups(&[], 1).is_err());
+        // Deterministic: identical inputs replan to identical sizes.
+        let a = plan_head_groups(&[3.0, 2.0, 2.0, 1.0], 11).unwrap();
+        let b = plan_head_groups(&[3.0, 2.0, 2.0, 1.0], 11).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.iter().sum::<usize>(), 11);
     }
 }

@@ -19,14 +19,18 @@
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::checkpoint::{self, OptHeads, TrainCheckpoint};
-use crate::comm::{build_mesh_with_timeout, Comm, CommError, MeshRank, MeshShape};
+use crate::comm::overlap::{BucketPlan, OverlapReducer, OverlapSink, Segment};
+use crate::comm::{
+    build_mesh_with_timeout, build_ragged_mesh_with_timeout, Comm, CommError, MeshRank,
+    MeshShape, RaggedMeshRank, RaggedShape,
+};
 use crate::config::{RunConfig, TrainMode};
 use crate::fault::{self, FaultPlan};
-use crate::coordinator::metrics::{Coverage, RunLog, StepAccum};
-use crate::coordinator::scheduler::EarlyStopper;
+use crate::coordinator::metrics::{Coverage, EpochMetrics, RunLog, StepAccum};
+use crate::coordinator::scheduler::{plan_head_groups, EarlyStopper};
 use crate::data::batch::{BatchBuilder, BatchPool, GraphBatch};
 use crate::data::featurized::FeaturizedStore;
 use crate::data::split::{Split, SplitSpec};
@@ -190,6 +194,13 @@ pub struct TrainOutcome {
     pub log: RunLog,
     /// (global allreduced f32 elements, head-group allreduced f32 elements).
     pub comm_elems: (u64, u64),
+    /// f32 elements reduced while backward still ran (the overlapped path's
+    /// traffic; 0 on the synchronous path). Max over ranks, global +
+    /// head-group combined.
+    pub overlapped_elems: u64,
+    /// Per-head sub-group sizes of the last trained epoch under elastic
+    /// MTL-par scheduling; empty for every other mode/configuration.
+    pub final_head_sizes: Vec<usize>,
 }
 
 impl Trainer {
@@ -471,6 +482,9 @@ impl Trainer {
         resume: Option<Arc<TrainCheckpoint>>,
         plan: &Arc<FaultPlan>,
     ) -> anyhow::Result<TrainOutcome> {
+        if self.cfg.parallel.elastic {
+            return self.train_mtl_par_elastic(data, resume, plan);
+        }
         let datasets = data.datasets();
         let replicas = self.cfg.parallel.replicas;
         let shape = MeshShape { num_heads: datasets.len(), replicas };
@@ -513,6 +527,237 @@ impl Trainer {
         })?;
 
         finalize_per_dataset("GFM-MTL-All (MTL-par)".to_string(), results, &datasets)
+    }
+
+    /// Elastic MTL-par: the mesh is static within an epoch but re-planned at
+    /// every epoch boundary. Each head's sub-group size comes from its
+    /// measured cost — the per-step wall-time EMA ([`Coverage::step_ms`],
+    /// persisted in checkpoints so a resumed run replans from the same
+    /// history) times its dataset size. Ranks are re-spawned per epoch over
+    /// a [`RaggedShape`] mesh; the driver carries encoder, branches, and
+    /// optimizer state across the boundary and writes the checkpoints
+    /// itself (it already holds every head — no gather collective needed).
+    fn train_mtl_par_elastic(
+        &self,
+        data: &DataBundle,
+        resume: Option<Arc<TrainCheckpoint>>,
+        plan: &Arc<FaultPlan>,
+    ) -> anyhow::Result<TrainOutcome> {
+        let engine = &self.engine;
+        let cfg = &self.cfg;
+        let plan = &**plan;
+        let datasets = data.datasets();
+        let nh = datasets.len();
+        let world = nh * cfg.parallel.replicas;
+        let cutoff = engine.manifest.config.cutoff;
+
+        // Start-of-run state, carried by the driver between epochs.
+        let (init_encoder, init_branches) = init_rank_params(engine, cfg, &datasets);
+        let mut encoder = init_encoder;
+        let mut opt_enc_state = AdamW::new(adamw_cfg(cfg), &encoder).export_state();
+        let mut heads: Vec<ElasticHead> = init_branches
+            .into_iter()
+            .map(|(dataset, branch)| {
+                let opt = AdamW::new(adamw_cfg(cfg), &branch).export_state();
+                ElasticHead { dataset, branch, opt, step_ms: 0.0 }
+            })
+            .collect();
+
+        let mut log = RunLog::new("GFM-MTL-All (MTL-par)");
+        let mut stopper = restore_stopper(cfg, resume.as_deref());
+        let (start_epoch, end_epoch) = epoch_range(cfg, resume.as_deref());
+        let mut base_cg = 0u64;
+        let mut base_ch = 0u64;
+        let mut overlapped = 0u64;
+        if let Some(ckpt) = &resume {
+            encoder = ckpt.model.encoder.clone();
+            let saved_heads = match &ckpt.model.heads {
+                Heads::PerDataset(m) => m,
+                Heads::Shared(_) => anyhow::bail!(
+                    "checkpoint is shared-head but mode mtl-par is per-dataset"
+                ),
+            };
+            for h in heads.iter_mut() {
+                h.branch = saved_heads
+                    .get(&h.dataset)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("checkpoint has no head for {}", h.dataset.name())
+                    })?
+                    .clone();
+                h.opt = ckpt.opt_for(h.dataset)?.clone();
+            }
+            opt_enc_state = ckpt.opt_encoder.clone();
+            log = ckpt.log.clone();
+            base_cg = ckpt.comm_global;
+            base_ch = ckpt.comm_head;
+            // Re-seed the cost EMAs from the last persisted coverage so the
+            // resumed replan matches the uninterrupted run's.
+            if let Some(last) = log.epochs.last() {
+                for c in &last.coverage {
+                    if let Some(h) =
+                        heads.iter_mut().find(|h| h.dataset.name() == c.dataset)
+                    {
+                        h.step_ms = c.step_ms;
+                    }
+                }
+            }
+        }
+
+        let mut final_sizes: Vec<usize> = vec![cfg.parallel.replicas; nh];
+        for epoch in start_epoch..end_epoch {
+            // Cost of head h ~ (per-step time EMA) x (dataset size): the
+            // serial work its sub-group must absorb this epoch. All-zero
+            // EMAs (first epoch, nothing measured yet) plan the even split
+            // — identical to the static mesh.
+            let costs: Vec<f64> = heads
+                .iter()
+                .map(|h| h.step_ms * data.train[&h.dataset].len() as f64)
+                .collect();
+            let sizes = plan_head_groups(&costs, world)?;
+            let shape = RaggedShape::new(sizes)?;
+            final_sizes = shape.head_sizes().to_vec();
+            let mesh = build_ragged_mesh_with_timeout(&shape, cfg.fault.comm_timeout());
+            // Stores are sharded at THIS epoch's sub-group sizes.
+            let stores: Vec<Arc<FeaturizedStore>> = datasets
+                .iter()
+                .enumerate()
+                .map(|(h, d)| {
+                    FeaturizedStore::build(
+                        DDStore::new(data.train[d].to_vec(), shape.head_size(h)),
+                        cutoff,
+                    )
+                })
+                .collect();
+            let val_stores: Vec<Arc<FeaturizedStore>> = datasets
+                .iter()
+                .enumerate()
+                .map(|(h, d)| {
+                    FeaturizedStore::build(
+                        DDStore::new(data.val[d].to_vec(), shape.head_size(h)),
+                        cutoff,
+                    )
+                })
+                .collect();
+
+            let mut results = std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                let heads_ref = &heads;
+                let encoder_ref = &encoder;
+                let opt_enc_ref = &opt_enc_state;
+                for mr in mesh {
+                    let store = Arc::clone(&stores[mr.head]);
+                    let val_store = Arc::clone(&val_stores[mr.head]);
+                    handles.push(scope.spawn(move || {
+                        let guards =
+                            (mr.global.member_guard(), mr.head_group.member_guard());
+                        let head = &heads_ref[mr.head];
+                        let out = rank_epoch_mtl_par_elastic(
+                            engine,
+                            cfg,
+                            mr,
+                            epoch,
+                            store,
+                            val_store,
+                            encoder_ref,
+                            opt_enc_ref,
+                            head,
+                            plan,
+                        );
+                        if out.is_ok() {
+                            guards.0.disarm();
+                            guards.1.disarm();
+                        }
+                        out
+                    }));
+                }
+                join_ranks(handles)
+            })?;
+            results.sort_by_key(|r| r.rank);
+            let pairs: Vec<(usize, &ParamSet)> =
+                results.iter().map(|r| (r.rank, &r.encoder)).collect();
+            check_encoder_pairs(&pairs)?;
+            let r0 = results
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("no rank results"))?;
+            let mut em = r0.metrics.clone();
+            let val_loss = em.val_loss;
+            encoder = r0.encoder.clone();
+            opt_enc_state = r0.opt_enc.clone();
+            base_cg += results.iter().map(|r| r.comm_global).max().unwrap_or(0);
+            base_ch += results.iter().map(|r| r.comm_head).max().unwrap_or(0);
+            overlapped += results.iter().map(|r| r.comm_overlapped).max().unwrap_or(0);
+            for r in &results {
+                if r.replica == 0 {
+                    heads[r.head].branch = r.branch.clone();
+                    heads[r.head].opt = r.opt_br.clone();
+                }
+            }
+            // Full per-head coverage row (dataset order) from each head's
+            // root rank; fold the fresh EMAs back into the driver state —
+            // these are next epoch's replan inputs.
+            let mut coverage = Vec::with_capacity(nh);
+            for h in 0..nh {
+                let root = shape.head_root(h);
+                let c = results
+                    .iter()
+                    .find(|r| r.rank == root)
+                    .and_then(|r| r.metrics.coverage.first())
+                    .cloned()
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("head {h} root rank {root} returned no coverage")
+                    })?;
+                heads[h].step_ms = c.step_ms;
+                coverage.push(c);
+            }
+            em.coverage = coverage;
+            log.push(em);
+            let stop = stopper.update(val_loss);
+            if save_after_epoch(cfg, epoch, end_epoch, stop) {
+                let model = TrainedModel {
+                    name: cfg.mode.name(),
+                    encoder: encoder.clone(),
+                    heads: Heads::PerDataset(
+                        heads.iter().map(|h| (h.dataset, h.branch.clone())).collect(),
+                    ),
+                };
+                let opts = OptHeads::PerDataset(
+                    heads.iter().map(|h| (h.dataset.name(), h.opt.clone())).collect(),
+                );
+                let saved = save_checkpoint_rank0(
+                    engine,
+                    cfg,
+                    epoch + 1,
+                    stop,
+                    &stopper,
+                    model,
+                    opt_enc_state.clone(),
+                    opts,
+                    &log,
+                    base_cg,
+                    base_ch,
+                );
+                warn_save_failure(epoch + 1, saved);
+                inject_checkpoint_corruption(plan, cfg, epoch + 1);
+            }
+            if stop {
+                break;
+            }
+        }
+
+        let model = TrainedModel {
+            name: "GFM-MTL-All (MTL-par)".to_string(),
+            encoder,
+            heads: Heads::PerDataset(
+                heads.into_iter().map(|h| (h.dataset, h.branch)).collect(),
+            ),
+        };
+        Ok(TrainOutcome {
+            model,
+            log,
+            comm_elems: (base_cg, base_ch),
+            overlapped_elems: overlapped,
+            final_head_sizes: final_sizes,
+        })
     }
 
     // -- warm-start fine-tuning ---------------------------------------------
@@ -601,6 +846,8 @@ struct RankResult {
     log: RunLog,
     comm_global: u64,
     comm_head: u64,
+    /// f32 elements this rank reduced through the overlapped path.
+    comm_overlapped: u64,
 }
 
 /// Join every rank thread and collapse their outcomes. Handles are in rank
@@ -614,10 +861,10 @@ struct RankResult {
 /// 2. a rank's own non-communication error (bad checkpoint, exhausted skip
 ///    budget) — again the cause, never retried by recovery;
 /// 3. a communication error (the remaining symptom case).
-fn join_ranks(
-    handles: Vec<std::thread::ScopedJoinHandle<'_, anyhow::Result<RankResult>>>,
-) -> anyhow::Result<Vec<RankResult>> {
-    let joined: Vec<std::thread::Result<anyhow::Result<RankResult>>> =
+fn join_ranks<T>(
+    handles: Vec<std::thread::ScopedJoinHandle<'_, anyhow::Result<T>>>,
+) -> anyhow::Result<Vec<T>> {
+    let joined: Vec<std::thread::Result<anyhow::Result<T>>> =
         handles.into_iter().map(|h| h.join()).collect();
     for (rank, j) in joined.iter().enumerate() {
         if let Err(p) = j {
@@ -724,10 +971,10 @@ fn assemble_full(scratch: &mut ParamSet, encoder: &ParamSet, branch: &ParamSet) 
     scratch.copy_matching_from(branch);
 }
 
-/// Mean validation loss across the group (same value on every rank).
+/// Mean validation loss across `comm`'s group (same value on every rank).
 fn distributed_val_loss(
     engine: &Engine,
-    mr: &MeshRank,
+    comm: &Comm,
     full: &ParamSet,
     val_batches: &[GraphBatch],
 ) -> anyhow::Result<f64> {
@@ -738,8 +985,8 @@ fn distributed_val_loss(
         local += out.loss * b.n_graphs as f64;
         count += b.n_graphs as f64;
     }
-    let sums = mr.global.allgather_f64(local)?;
-    let counts = mr.global.allgather_f64(count)?;
+    let sums = comm.allgather_f64(local)?;
+    let counts = comm.allgather_f64(count)?;
     let total: f64 = sums.iter().sum();
     let n: f64 = counts.iter().sum();
     if n > 0.0 {
@@ -750,7 +997,7 @@ fn distributed_val_loss(
         // stopper itself is NaN-safe now, but the condition deserves a
         // visible warning — it usually means the val split is too small
         // for the replica count).
-        if mr.global.rank_in_group == 0 {
+        if comm.rank_in_group == 0 {
             eprintln!(
                 "warning: validation split produced zero batches across the whole \
                  group; val_loss is NaN and early stopping skips this epoch"
@@ -762,9 +1009,37 @@ fn distributed_val_loss(
 
 /// Shared epoch-count agreement: every rank must run the same number of
 /// steps or the collectives deadlock; take the global min of planned counts.
-fn agree_steps(mr: &MeshRank, planned: usize) -> Result<usize, CommError> {
-    let counts = mr.global.allgather_f64(planned as f64)?;
+fn agree_steps(comm: &Comm, planned: usize) -> Result<usize, CommError> {
+    let counts = comm.allgather_f64(planned as f64)?;
     Ok(counts.into_iter().fold(f64::INFINITY, f64::min) as usize)
+}
+
+/// Mean per-step working time (exec + comm + opt) in milliseconds — the
+/// sample the elastic scheduler's `Coverage::step_ms` EMA folds in.
+fn measured_step_ms(acc: &StepAccum, steps: usize) -> f64 {
+    if steps == 0 {
+        return 0.0;
+    }
+    (acc.exec + acc.comm + acc.opt).as_secs_f64() * 1e3 / steps as f64
+}
+
+/// Build this rank's overlap sink when the overlapped path is on:
+/// encoder buckets reduce on `enc_comm`, branch buckets on `br_comm`.
+fn build_overlap_sink(
+    engine: &Engine,
+    cfg: &RunConfig,
+    enc_comm: &Comm,
+    br_comm: &Comm,
+) -> anyhow::Result<Option<OverlapSink>> {
+    if !cfg.parallel.overlap_resolved() {
+        return Ok(None);
+    }
+    let plan = BucketPlan::new(
+        &engine.manifest.params,
+        engine.manifest.config.num_layers,
+        cfg.parallel.bucket_elems,
+    )?;
+    Ok(Some(OverlapSink::new(plan, enc_comm.clone(), br_comm.clone())))
 }
 
 // ---------------------------------------------------------------------------
@@ -945,16 +1220,13 @@ fn split_moments(template: &ParamSet, flat: &[f32]) -> Vec<Vec<f32>> {
 
 /// Apply rank-kill / collective-stall faults scheduled for this exact
 /// `(rank, epoch, step)`. A no-op on the empty plan.
-fn inject_rank_faults(plan: &FaultPlan, mr: &MeshRank, epoch: usize, step: usize) {
-    if plan.panic_at(mr.rank, epoch, step) {
+fn inject_rank_faults(plan: &FaultPlan, rank: usize, epoch: usize, step: usize) {
+    if plan.panic_at(rank, epoch, step) {
         // lint:allow(panic): deliberate fault injection — the chaos harness's rank-kill primitive
-        panic!("injected fault: rank {} panics at epoch {epoch} step {step}", mr.rank);
+        panic!("injected fault: rank {rank} panics at epoch {epoch} step {step}");
     }
-    if let Some(ms) = plan.stall_ms(mr.rank, epoch, step) {
-        eprintln!(
-            "injected fault: rank {} stalls {ms} ms at epoch {epoch} step {step}",
-            mr.rank
-        );
+    if let Some(ms) = plan.stall_ms(rank, epoch, step) {
+        eprintln!("injected fault: rank {rank} stalls {ms} ms at epoch {epoch} step {step}");
         std::thread::sleep(std::time::Duration::from_millis(ms));
     }
 }
@@ -1037,6 +1309,10 @@ fn rank_loop_single_branch(
     let mut br_flat: Vec<f32> = Vec::new();
     // Per-rank batch pool: epoch N+1 reuses epoch N's buffers.
     let mut pool = BatchPool::default();
+    // Overlapped path: plain DDP has no sub-groups, so encoder and branch
+    // buckets both reduce on the global group.
+    let mut sink = build_overlap_sink(engine, cfg, &mr.global, &mr.global)?;
+    let mut step_ms_ema = 0.0f64;
 
     let (start_epoch, end_epoch) = epoch_range(cfg, resume.as_deref());
     let mut base_cg = 0u64;
@@ -1095,39 +1371,59 @@ fn rank_loop_single_branch(
         );
         acc.data += t0.elapsed();
         let planned = batches.len();
-        let steps = agree_steps(&mr, batches.len())?;
+        let steps = agree_steps(&mr.global, batches.len())?;
 
         for step in 0..steps {
-            inject_rank_faults(plan, &mr, epoch, step);
+            inject_rank_faults(plan, mr.rank, epoch, step);
             let batch = &batches[step % batches.len().max(1)];
             assemble_full(&mut full, &encoder, &branch);
 
             let t1 = Instant::now();
-            let mut out = engine.train_step_unchecked(&full, batch)?;
-            if plan.nonfinite_at(mr.rank, epoch, step) {
-                out.loss = f64::NAN;
-            }
-            acc.exec += t1.elapsed();
-
-            // Plain DDP: allreduce the complete gradient payload globally.
-            // A non-finite loss skips the batch: this rank contributes a
-            // zero gradient but still joins every collective and optimizer
-            // step, so the group stays step-synchronized.
-            let t2 = Instant::now();
-            if out.loss.is_finite() {
-                acc.record_step(out.loss, out.mae_e, out.mae_f);
-                out.grads.flatten_prefix_into("encoder.", &mut enc_flat);
-                out.grads.flatten_prefix_into("branch.", &mut br_flat);
+            if let Some(sink) = sink.as_mut() {
+                // Overlapped DDP: backward streams ready buckets to the comm
+                // thread; by the time finish_step returns, enc_flat/br_flat
+                // hold exactly what the synchronous collectives in the other
+                // arm would have produced (bit-identical by construction).
+                sink.begin_step(plan.nonfinite_at(mr.rank, epoch, step));
+                let out = engine.train_step_observed_unchecked(&full, batch, sink)?;
+                acc.exec += t1.elapsed();
+                let t2 = Instant::now();
+                if sink.zeroed() {
+                    skip_batch(cfg, &mut acc, mr.rank, epoch, step)?;
+                } else {
+                    acc.record_step(out.loss, out.mae_e, out.mae_f);
+                }
+                sink.finish_step(&mut enc_flat, &mut br_flat)?;
+                enc_g.unflatten_from(&enc_flat);
+                br_g.unflatten_from(&br_flat);
+                acc.comm += t2.elapsed();
             } else {
-                skip_batch(cfg, &mut acc, mr.rank, epoch, step)?;
-                zero_flat(&mut enc_flat, enc_g.total_params());
-                zero_flat(&mut br_flat, br_g.total_params());
+                let mut out = engine.train_step_unchecked(&full, batch)?;
+                if plan.nonfinite_at(mr.rank, epoch, step) {
+                    out.loss = f64::NAN;
+                }
+                acc.exec += t1.elapsed();
+
+                // Plain DDP: allreduce the complete gradient payload globally.
+                // A non-finite loss skips the batch: this rank contributes a
+                // zero gradient but still joins every collective and optimizer
+                // step, so the group stays step-synchronized.
+                let t2 = Instant::now();
+                if out.loss.is_finite() {
+                    acc.record_step(out.loss, out.mae_e, out.mae_f);
+                    out.grads.flatten_prefix_into("encoder.", &mut enc_flat);
+                    out.grads.flatten_prefix_into("branch.", &mut br_flat);
+                } else {
+                    skip_batch(cfg, &mut acc, mr.rank, epoch, step)?;
+                    zero_flat(&mut enc_flat, enc_g.total_params());
+                    zero_flat(&mut br_flat, br_g.total_params());
+                }
+                mr.global.allreduce_mean(&mut enc_flat)?;
+                mr.global.allreduce_mean(&mut br_flat)?;
+                enc_g.unflatten_from(&enc_flat);
+                br_g.unflatten_from(&br_flat);
+                acc.comm += t2.elapsed();
             }
-            mr.global.allreduce_mean(&mut enc_flat)?;
-            mr.global.allreduce_mean(&mut br_flat)?;
-            enc_g.unflatten_from(&enc_flat);
-            br_g.unflatten_from(&br_flat);
-            acc.comm += t2.elapsed();
 
             let t3 = Instant::now();
             opt_enc.step(&mut encoder, &enc_g);
@@ -1137,10 +1433,16 @@ fn rank_loop_single_branch(
         pool.recycle(batches);
 
         assemble_full(&mut full, &encoder, &branch);
-        let val_loss = distributed_val_loss(engine, &mr, &full, &val_batches)?;
-        let coverage =
-            vec![Coverage { dataset: stream_label.clone(), planned, used: steps }];
-        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss).with_coverage(coverage));
+        let val_loss = distributed_val_loss(engine, &mr.global, &full, &val_batches)?;
+        let mut cov = Coverage {
+            dataset: stream_label.clone(),
+            planned,
+            used: steps,
+            step_ms: step_ms_ema,
+        };
+        cov.observe_step_ms(measured_step_ms(&acc, steps));
+        step_ms_ema = cov.step_ms;
+        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss).with_coverage(vec![cov]));
         let stop = stopper.update(val_loss);
         if save_after_epoch(cfg, epoch, end_epoch, stop) && mr.rank == 0 {
             let saved = save_checkpoint_rank0(
@@ -1157,7 +1459,7 @@ fn rank_loop_single_branch(
                 opt_enc.export_state(),
                 OptHeads::Shared(opt_br.export_state()),
                 &log,
-                base_cg + mr.global.stats().0,
+                base_cg + mr.global.stats().elems,
                 0,
             );
             warn_save_failure(epoch + 1, saved);
@@ -1168,7 +1470,7 @@ fn rank_loop_single_branch(
         }
     }
 
-    let (cg, _) = mr.global.stats();
+    let st = mr.global.stats();
     Ok(RankResult {
         rank: mr.rank,
         head: mr.head,
@@ -1176,8 +1478,9 @@ fn rank_loop_single_branch(
         encoder,
         branches: vec![(branch_dataset, branch)],
         log,
-        comm_global: base_cg + cg,
+        comm_global: base_cg + st.elems,
         comm_head: 0,
+        comm_overlapped: st.overlapped_elems,
     })
 }
 
@@ -1204,6 +1507,27 @@ fn rank_loop_mtl_base(
     let mut stopper = restore_stopper(cfg, resume.as_deref());
     // Per-rank batch pool shared across datasets and epochs.
     let mut pool = BatchPool::default();
+    let nd = datasets.len();
+    let br_len = branches_scratch_branch(engine).total_params();
+    // Overlapped path: each dataset's branch-gradient chunks go to the comm
+    // thread as soon as that dataset's backward finishes, hiding their
+    // reduction behind the NEXT dataset's forward/backward. The shared
+    // encoder mean can only be formed after every dataset contributed, so
+    // its chunks go out last. Chunked reduction never changes what is
+    // reduced, only when — values stay bit-identical to the monolithic
+    // concatenated-payload allreduce of the synchronous arm.
+    let mut reducer = if cfg.parallel.overlap_resolved() {
+        Some(OverlapReducer::new(mr.global.clone(), mr.global.clone()))
+    } else {
+        None
+    };
+    let mut br_flats: Vec<Vec<f32>> = vec![Vec::new(); nd];
+    let mut br_g_scratch: Vec<ParamSet> = if reducer.is_some() {
+        (0..nd).map(|_| branches_scratch_branch(engine)).collect()
+    } else {
+        Vec::new()
+    };
+    let mut step_ms_emas = vec![0.0f64; nd];
 
     let (start_epoch, end_epoch) = epoch_range(cfg, resume.as_deref());
     let mut base_cg = 0u64;
@@ -1292,10 +1616,11 @@ fn rank_loop_mtl_base(
         // failure mode the multi-fidelity setting is about. Coverage is
         // recorded in the run log so truncation can never be silent again.
         let max_batches = per_ds_batches.iter().map(|b| b.len()).max().unwrap_or(0);
-        let steps = agree_steps(&mr, max_batches)?;
+        let steps = agree_steps(&mr.global, max_batches)?;
+        let mut ds_exec: Vec<Duration> = vec![Duration::ZERO; nd];
 
         for step in 0..steps {
-            inject_rank_faults(plan, &mr, epoch, step);
+            inject_rank_faults(plan, mr.rank, epoch, step);
             // A non-finite injection at (rank, epoch, step) hits the first
             // dataset processed this step (deterministic: dataset order is
             // the BTreeMap's).
@@ -1310,7 +1635,17 @@ fn rank_loop_mtl_base(
                 if per_ds_batches[k].is_empty() {
                     // No local shard: contribute zero branch grads so the
                     // global collective payload stays structurally uniform.
-                    br_grads.push(branches_scratch_branch(engine));
+                    if let Some(red) = reducer.as_mut() {
+                        zero_flat(&mut br_flats[k], br_len);
+                        red.submit_chunks(
+                            Segment::Branch,
+                            k,
+                            &br_flats[k],
+                            cfg.parallel.bucket_elems,
+                        )?;
+                    } else {
+                        br_grads.push(branches_scratch_branch(engine));
+                    }
                     continue;
                 }
                 let batch = &per_ds_batches[k][step % per_ds_batches[k].len()];
@@ -1324,12 +1659,26 @@ fn rank_loop_mtl_base(
                     // Skip this dataset's batch: zero branch grads, no
                     // encoder contribution; the collective payload below
                     // stays structurally uniform so the group never skews.
-                    acc.exec += t1.elapsed();
+                    let dt = t1.elapsed();
+                    acc.exec += dt;
+                    ds_exec[k] += dt;
                     skip_batch(cfg, &mut acc, mr.rank, epoch, step)?;
-                    br_grads.push(branches_scratch_branch(engine));
+                    if let Some(red) = reducer.as_mut() {
+                        zero_flat(&mut br_flats[k], br_len);
+                        red.submit_chunks(
+                            Segment::Branch,
+                            k,
+                            &br_flats[k],
+                            cfg.parallel.bucket_elems,
+                        )?;
+                    } else {
+                        br_grads.push(branches_scratch_branch(engine));
+                    }
                     continue;
                 }
-                acc.exec += t1.elapsed();
+                let dt = t1.elapsed();
+                acc.exec += dt;
+                ds_exec[k] += dt;
                 loss_sum += out.loss;
                 mae_e_sum += out.mae_e;
                 mae_f_sum += out.mae_f;
@@ -1342,13 +1691,21 @@ fn rank_loop_mtl_base(
                         }
                     }
                 }
-                br_grads.push(out.grads.subset("branch."));
+                if let Some(red) = reducer.as_mut() {
+                    out.grads.flatten_prefix_into("branch.", &mut br_flats[k]);
+                    red.submit_chunks(
+                        Segment::Branch,
+                        k,
+                        &br_flats[k],
+                        cfg.parallel.bucket_elems,
+                    )?;
+                } else {
+                    br_grads.push(out.grads.subset("branch."));
+                }
             }
             let nh = active;
             acc.record_step(loss_sum / nh, mae_e_sum / nh, mae_f_sum / nh);
 
-            // ONE global allreduce over P_s + N_h * P_h (the paper's
-            // MTL-base payload): concatenate encoder mean + all branches.
             let t2 = Instant::now();
             // None only when every local batch this step was skipped as
             // non-finite: contribute a zero encoder gradient.
@@ -1357,38 +1714,75 @@ fn rank_loop_mtl_base(
             for g in enc_flat.iter_mut() {
                 *g /= nh as f32;
             }
-            let enc_len = enc_flat.len();
-            let mut payload = enc_flat;
-            let mut br_lens = Vec::with_capacity(br_grads.len());
-            for bg in &br_grads {
-                let f = bg.flatten();
-                br_lens.push(f.len());
-                payload.extend(f);
-            }
-            mr.global.allreduce_mean(&mut payload)?;
-            acc.comm += t2.elapsed();
-
-            let t3 = Instant::now();
-            let mut enc_g = branches_scratch_encoder(engine);
-            enc_g.unflatten_from(&payload[..enc_len]);
-            opt_enc.step(&mut encoder, &enc_g);
-            let mut off = enc_len;
-            for (k, bg) in br_grads.iter_mut().enumerate() {
-                bg.unflatten_from(&payload[off..off + br_lens[k]]);
-                off += br_lens[k];
-                if !globally_empty[k] {
-                    opt_brs[k].step(&mut branches[k].1, bg);
+            if let Some(red) = reducer.as_mut() {
+                // Overlapped: the branch chunks are already in flight (or
+                // reduced); send the encoder mean and drain everything.
+                red.submit_chunks(Segment::Encoder, 0, &enc_flat, cfg.parallel.bucket_elems)?;
+                for rb in red.finish()? {
+                    let dst = match rb.seg {
+                        Segment::Encoder => &mut enc_flat,
+                        Segment::Branch => &mut br_flats[rb.dest],
+                    };
+                    dst[rb.offset..rb.offset + rb.data.len()].copy_from_slice(&rb.data);
+                    red.recycle(rb.data);
                 }
+                acc.comm += t2.elapsed();
+
+                let t3 = Instant::now();
+                let mut enc_g = branches_scratch_encoder(engine);
+                enc_g.unflatten_from(&enc_flat);
+                opt_enc.step(&mut encoder, &enc_g);
+                for k in 0..nd {
+                    if !globally_empty[k] {
+                        br_g_scratch[k].unflatten_from(&br_flats[k]);
+                        opt_brs[k].step(&mut branches[k].1, &br_g_scratch[k]);
+                    }
+                }
+                acc.opt += t3.elapsed();
+            } else {
+                // ONE global allreduce over P_s + N_h * P_h (the paper's
+                // MTL-base payload): concatenate encoder mean + all branches.
+                let enc_len = enc_flat.len();
+                let mut payload = enc_flat;
+                let mut br_lens = Vec::with_capacity(br_grads.len());
+                for bg in &br_grads {
+                    let f = bg.flatten();
+                    br_lens.push(f.len());
+                    payload.extend(f);
+                }
+                mr.global.allreduce_mean(&mut payload)?;
+                acc.comm += t2.elapsed();
+
+                let t3 = Instant::now();
+                let mut enc_g = branches_scratch_encoder(engine);
+                enc_g.unflatten_from(&payload[..enc_len]);
+                opt_enc.step(&mut encoder, &enc_g);
+                let mut off = enc_len;
+                for (k, bg) in br_grads.iter_mut().enumerate() {
+                    bg.unflatten_from(&payload[off..off + br_lens[k]]);
+                    off += br_lens[k];
+                    if !globally_empty[k] {
+                        opt_brs[k].step(&mut branches[k].1, bg);
+                    }
+                }
+                acc.opt += t3.elapsed();
             }
-            acc.opt += t3.elapsed();
         }
         let coverage: Vec<Coverage> = datasets
             .iter()
             .enumerate()
-            .map(|(k, d)| Coverage {
-                dataset: d.name(),
-                planned: per_ds_batches[k].len(),
-                used: if per_ds_batches[k].is_empty() { 0 } else { steps },
+            .map(|(k, d)| {
+                let mut c = Coverage {
+                    dataset: d.name(),
+                    planned: per_ds_batches[k].len(),
+                    used: if per_ds_batches[k].is_empty() { 0 } else { steps },
+                    step_ms: step_ms_emas[k],
+                };
+                if steps > 0 {
+                    c.observe_step_ms(ds_exec[k].as_secs_f64() * 1e3 / steps as f64);
+                }
+                step_ms_emas[k] = c.step_ms;
+                c
             })
             .collect();
         for b in per_ds_batches {
@@ -1447,7 +1841,7 @@ fn rank_loop_mtl_base(
                         .collect(),
                 ),
                 &log,
-                base_cg + mr.global.stats().0,
+                base_cg + mr.global.stats().elems,
                 0,
             );
             warn_save_failure(epoch + 1, saved);
@@ -1458,7 +1852,7 @@ fn rank_loop_mtl_base(
         }
     }
 
-    let (cg, _) = mr.global.stats();
+    let st = mr.global.stats();
     Ok(RankResult {
         rank: mr.rank,
         head: mr.head,
@@ -1466,8 +1860,9 @@ fn rank_loop_mtl_base(
         encoder,
         branches,
         log,
-        comm_global: base_cg + cg,
+        comm_global: base_cg + st.elems,
         comm_head: 0,
+        comm_overlapped: st.overlapped_elems,
     })
 }
 
@@ -1512,6 +1907,11 @@ fn rank_loop_mtl_par(
     let mut br_flat: Vec<f32> = Vec::new();
     // Per-rank batch pool: epoch N+1 reuses epoch N's buffers.
     let mut pool = BatchPool::default();
+    // Overlapped path: encoder buckets reduce on the GLOBAL group, branch
+    // buckets on this head's sub-group — Figure 3's two-level pattern,
+    // pipelined behind backward.
+    let mut sink = build_overlap_sink(engine, cfg, &mr.global, &mr.head_group)?;
+    let mut step_ms_ema = 0.0f64;
 
     let (start_epoch, end_epoch) = epoch_range(cfg, resume.as_deref());
     let mut base_cg = 0u64;
@@ -1561,39 +1961,60 @@ fn rank_loop_mtl_par(
         );
         acc.data += t0.elapsed();
         let planned = batches.len();
-        let steps = agree_steps(&mr, batches.len())?;
+        let steps = agree_steps(&mr.global, batches.len())?;
 
         for step in 0..steps {
-            inject_rank_faults(plan, &mr, epoch, step);
+            inject_rank_faults(plan, mr.rank, epoch, step);
             let batch = &batches[step % batches.len().max(1)];
             assemble_full(&mut full, &encoder, &branch);
 
             let t1 = Instant::now();
-            let mut out = engine.train_step_unchecked(&full, batch)?;
-            if plan.nonfinite_at(mr.rank, epoch, step) {
-                out.loss = f64::NAN;
-            }
-            acc.exec += t1.elapsed();
-
-            // Multi-task parallelism: encoder grads allreduce GLOBALLY
-            // (P_s payload); branch grads only within the head sub-group
-            // (P_h payload) — Figure 3's two-level DDP. A skipped
-            // non-finite batch still joins both collectives with zeros.
-            let t2 = Instant::now();
-            if out.loss.is_finite() {
-                acc.record_step(out.loss, out.mae_e, out.mae_f);
-                out.grads.flatten_prefix_into("encoder.", &mut enc_flat);
-                out.grads.flatten_prefix_into("branch.", &mut br_flat);
+            if let Some(sink) = sink.as_mut() {
+                // Overlapped two-level reduction: branch buckets reach the
+                // sub-group while the encoder's backward still runs, then
+                // encoder buckets reach the global group layer by layer.
+                // finish_step leaves enc_flat/br_flat bit-identical to the
+                // synchronous arm's collectives.
+                sink.begin_step(plan.nonfinite_at(mr.rank, epoch, step));
+                let out = engine.train_step_observed_unchecked(&full, batch, sink)?;
+                acc.exec += t1.elapsed();
+                let t2 = Instant::now();
+                if sink.zeroed() {
+                    skip_batch(cfg, &mut acc, mr.rank, epoch, step)?;
+                } else {
+                    acc.record_step(out.loss, out.mae_e, out.mae_f);
+                }
+                sink.finish_step(&mut enc_flat, &mut br_flat)?;
+                enc_g.unflatten_from(&enc_flat);
+                br_g.unflatten_from(&br_flat);
+                acc.comm += t2.elapsed();
             } else {
-                skip_batch(cfg, &mut acc, mr.rank, epoch, step)?;
-                zero_flat(&mut enc_flat, enc_g.total_params());
-                zero_flat(&mut br_flat, br_g.total_params());
+                let mut out = engine.train_step_unchecked(&full, batch)?;
+                if plan.nonfinite_at(mr.rank, epoch, step) {
+                    out.loss = f64::NAN;
+                }
+                acc.exec += t1.elapsed();
+
+                // Multi-task parallelism: encoder grads allreduce GLOBALLY
+                // (P_s payload); branch grads only within the head sub-group
+                // (P_h payload) — Figure 3's two-level DDP. A skipped
+                // non-finite batch still joins both collectives with zeros.
+                let t2 = Instant::now();
+                if out.loss.is_finite() {
+                    acc.record_step(out.loss, out.mae_e, out.mae_f);
+                    out.grads.flatten_prefix_into("encoder.", &mut enc_flat);
+                    out.grads.flatten_prefix_into("branch.", &mut br_flat);
+                } else {
+                    skip_batch(cfg, &mut acc, mr.rank, epoch, step)?;
+                    zero_flat(&mut enc_flat, enc_g.total_params());
+                    zero_flat(&mut br_flat, br_g.total_params());
+                }
+                mr.global.allreduce_mean(&mut enc_flat)?;
+                mr.head_group.allreduce_mean(&mut br_flat)?;
+                enc_g.unflatten_from(&enc_flat);
+                br_g.unflatten_from(&br_flat);
+                acc.comm += t2.elapsed();
             }
-            mr.global.allreduce_mean(&mut enc_flat)?;
-            mr.head_group.allreduce_mean(&mut br_flat)?;
-            enc_g.unflatten_from(&enc_flat);
-            br_g.unflatten_from(&br_flat);
-            acc.comm += t2.elapsed();
 
             let t3 = Instant::now();
             opt_enc.step(&mut encoder, &enc_g);
@@ -1603,10 +2024,12 @@ fn rank_loop_mtl_par(
         pool.recycle(batches);
 
         assemble_full(&mut full, &encoder, &branch);
-        let val_loss = distributed_val_loss(engine, &mr, &full, &val_batches)?;
-        let coverage =
-            vec![Coverage { dataset: dataset.name(), planned, used: steps }];
-        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss).with_coverage(coverage));
+        let val_loss = distributed_val_loss(engine, &mr.global, &full, &val_batches)?;
+        let mut cov =
+            Coverage { dataset: dataset.name(), planned, used: steps, step_ms: step_ms_ema };
+        cov.observe_step_ms(measured_step_ms(&acc, steps));
+        step_ms_ema = cov.step_ms;
+        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss).with_coverage(vec![cov]));
         let stop = stopper.update(val_loss);
         if save_after_epoch(cfg, epoch, end_epoch, stop) {
             // Under multi-task parallelism no single rank holds every head,
@@ -1660,8 +2083,8 @@ fn rank_loop_mtl_par(
                     opt_enc.export_state(),
                     OptHeads::PerDataset(opts),
                     &log,
-                    base_cg + mr.global.stats().0,
-                    base_ch + mr.head_group.stats().0,
+                    base_cg + mr.global.stats().elems,
+                    base_ch + mr.head_group.stats().elems,
                 );
                 warn_save_failure(epoch + 1, saved);
                 inject_checkpoint_corruption(plan, cfg, epoch + 1);
@@ -1672,8 +2095,8 @@ fn rank_loop_mtl_par(
         }
     }
 
-    let (cg, _) = mr.global.stats();
-    let (ch, _) = mr.head_group.stats();
+    let sg = mr.global.stats();
+    let sh = mr.head_group.stats();
     Ok(RankResult {
         rank: mr.rank,
         head: mr.head,
@@ -1681,8 +2104,162 @@ fn rank_loop_mtl_par(
         encoder,
         branches: vec![(dataset, branch)],
         log,
-        comm_global: base_cg + cg,
-        comm_head: base_ch + ch,
+        comm_global: base_cg + sg.elems,
+        comm_head: base_ch + sh.elems,
+        comm_overlapped: sg.overlapped_elems + sh.overlapped_elems,
+    })
+}
+
+// -- elastic MTL-par epoch loop -----------------------------------------------
+
+/// One head's state carried by the elastic driver between epochs.
+struct ElasticHead {
+    dataset: DatasetId,
+    branch: ParamSet,
+    opt: AdamWState,
+    /// Per-step wall-time EMA in ms ([`Coverage::step_ms`]) — the replan's
+    /// cost signal, fed from each head's root-rank coverage.
+    step_ms: f64,
+}
+
+/// What one rank of one elastic epoch returns to the driver.
+struct ElasticRankOut {
+    rank: usize,
+    head: usize,
+    replica: usize,
+    encoder: ParamSet,
+    branch: ParamSet,
+    opt_enc: AdamWState,
+    opt_br: AdamWState,
+    metrics: EpochMetrics,
+    comm_global: u64,
+    comm_head: u64,
+    comm_overlapped: u64,
+}
+
+/// One epoch of one rank under elastic MTL-par: identical step semantics to
+/// [`rank_loop_mtl_par`] (including the overlapped path), but parameterized
+/// on a ragged mesh rank and driver-held start-of-epoch state, because the
+/// mesh may be rebuilt with different sub-group sizes next epoch.
+#[allow(clippy::too_many_arguments)]
+fn rank_epoch_mtl_par_elastic(
+    engine: &Engine,
+    cfg: &RunConfig,
+    mr: RaggedMeshRank,
+    epoch: usize,
+    store: Arc<FeaturizedStore>,
+    val_store: Arc<FeaturizedStore>,
+    encoder_init: &ParamSet,
+    opt_enc_state: &AdamWState,
+    head: &ElasticHead,
+    plan: &FaultPlan,
+) -> anyhow::Result<ElasticRankOut> {
+    let dataset = head.dataset;
+    let dims = engine.manifest.config.batch_dims();
+    let group = mr.shape.head_size(mr.head);
+    let mut encoder = encoder_init.clone();
+    let mut branch = head.branch.clone();
+    let mut full = ParamSet::zeros_like(&engine.manifest.params);
+    let mut opt_enc = AdamW::new(adamw_cfg(cfg), &encoder);
+    opt_enc.load_state(opt_enc_state)?;
+    let mut opt_br = AdamW::new(adamw_cfg(cfg), &branch);
+    opt_br.load_state(&head.opt)?;
+    let mut enc_g = ParamSet::zeros_like(&engine.manifest.params).subset("encoder.");
+    let mut br_g = ParamSet::zeros_like(&engine.manifest.params).subset("branch.");
+    let mut enc_flat: Vec<f32> = Vec::new();
+    let mut br_flat: Vec<f32> = Vec::new();
+    let mut pool = BatchPool::default();
+    let mut sink = build_overlap_sink(engine, cfg, &mr.global, &mr.head_group)?;
+
+    let val_batches =
+        val_store.plan_epoch_batches(mr.replica, group, dims, cfg.train.seed ^ VAL_SEED, &mut pool);
+
+    let t_epoch = Instant::now();
+    let mut acc = StepAccum::default();
+    let t0 = Instant::now();
+    let batches = store.plan_epoch_batches(
+        mr.replica,
+        group,
+        dims,
+        cfg.train.seed.wrapping_add(epoch as u64 * 7_777_777) ^ dataset.index() as u64,
+        &mut pool,
+    );
+    acc.data += t0.elapsed();
+    let planned = batches.len();
+    let steps = agree_steps(&mr.global, batches.len())?;
+
+    for step in 0..steps {
+        inject_rank_faults(plan, mr.rank, epoch, step);
+        let batch = &batches[step % batches.len().max(1)];
+        assemble_full(&mut full, &encoder, &branch);
+
+        let t1 = Instant::now();
+        if let Some(sink) = sink.as_mut() {
+            sink.begin_step(plan.nonfinite_at(mr.rank, epoch, step));
+            let out = engine.train_step_observed_unchecked(&full, batch, sink)?;
+            acc.exec += t1.elapsed();
+            let t2 = Instant::now();
+            if sink.zeroed() {
+                skip_batch(cfg, &mut acc, mr.rank, epoch, step)?;
+            } else {
+                acc.record_step(out.loss, out.mae_e, out.mae_f);
+            }
+            sink.finish_step(&mut enc_flat, &mut br_flat)?;
+            enc_g.unflatten_from(&enc_flat);
+            br_g.unflatten_from(&br_flat);
+            acc.comm += t2.elapsed();
+        } else {
+            let mut out = engine.train_step_unchecked(&full, batch)?;
+            if plan.nonfinite_at(mr.rank, epoch, step) {
+                out.loss = f64::NAN;
+            }
+            acc.exec += t1.elapsed();
+
+            let t2 = Instant::now();
+            if out.loss.is_finite() {
+                acc.record_step(out.loss, out.mae_e, out.mae_f);
+                out.grads.flatten_prefix_into("encoder.", &mut enc_flat);
+                out.grads.flatten_prefix_into("branch.", &mut br_flat);
+            } else {
+                skip_batch(cfg, &mut acc, mr.rank, epoch, step)?;
+                zero_flat(&mut enc_flat, enc_g.total_params());
+                zero_flat(&mut br_flat, br_g.total_params());
+            }
+            mr.global.allreduce_mean(&mut enc_flat)?;
+            mr.head_group.allreduce_mean(&mut br_flat)?;
+            enc_g.unflatten_from(&enc_flat);
+            br_g.unflatten_from(&br_flat);
+            acc.comm += t2.elapsed();
+        }
+
+        let t3 = Instant::now();
+        opt_enc.step(&mut encoder, &enc_g);
+        opt_br.step(&mut branch, &br_g);
+        acc.opt += t3.elapsed();
+    }
+    pool.recycle(batches);
+
+    assemble_full(&mut full, &encoder, &branch);
+    let val_loss = distributed_val_loss(engine, &mr.global, &full, &val_batches)?;
+    let mut cov =
+        Coverage { dataset: dataset.name(), planned, used: steps, step_ms: head.step_ms };
+    cov.observe_step_ms(measured_step_ms(&acc, steps));
+    let metrics =
+        acc.into_epoch(epoch, t_epoch.elapsed(), val_loss).with_coverage(vec![cov]);
+    let sg = mr.global.stats();
+    let sh = mr.head_group.stats();
+    Ok(ElasticRankOut {
+        rank: mr.rank,
+        head: mr.head,
+        replica: mr.replica,
+        encoder,
+        branch,
+        opt_enc: opt_enc.export_state(),
+        opt_br: opt_br.export_state(),
+        metrics,
+        comm_global: sg.elems,
+        comm_head: sh.elems,
+        comm_overlapped: sg.overlapped_elems + sh.overlapped_elems,
     })
 }
 
@@ -1691,6 +2268,11 @@ fn rank_loop_mtl_par(
 /// Branch-only training against a frozen, pre-trained encoder. DDP over
 /// the global group (one head), branch gradients only — the encoder is
 /// used exactly as given and never updated.
+///
+/// Deliberately synchronous even when `parallel.overlap` is on: the branch
+/// payload is the FIRST block backward completes, so there is no later
+/// compute to hide its reduction behind — an overlap sink would add comm-
+/// thread hops for zero pipelining win.
 #[allow(clippy::too_many_arguments)]
 fn rank_loop_fine_tune(
     engine: &Engine,
@@ -1712,6 +2294,7 @@ fn rank_loop_fine_tune(
     let mut br_g = ParamSet::zeros_like(&engine.manifest.params).subset("branch.");
     let mut br_flat: Vec<f32> = Vec::new();
     let mut pool = BatchPool::default();
+    let mut step_ms_ema = 0.0f64;
 
     let val_batches = val_store.plan_epoch_batches(
         mr.replica,
@@ -1735,10 +2318,10 @@ fn rank_loop_fine_tune(
         );
         acc.data += t0.elapsed();
         let planned = batches.len();
-        let steps = agree_steps(&mr, batches.len())?;
+        let steps = agree_steps(&mr.global, batches.len())?;
 
         for step in 0..steps {
-            inject_rank_faults(plan, &mr, epoch, step);
+            inject_rank_faults(plan, mr.rank, epoch, step);
             let batch = &batches[step % batches.len().max(1)];
             assemble_full(&mut full, encoder, &branch);
 
@@ -1769,16 +2352,18 @@ fn rank_loop_fine_tune(
         pool.recycle(batches);
 
         assemble_full(&mut full, encoder, &branch);
-        let val_loss = distributed_val_loss(engine, &mr, &full, &val_batches)?;
-        let coverage =
-            vec![Coverage { dataset: dataset.name(), planned, used: steps }];
-        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss).with_coverage(coverage));
+        let val_loss = distributed_val_loss(engine, &mr.global, &full, &val_batches)?;
+        let mut cov =
+            Coverage { dataset: dataset.name(), planned, used: steps, step_ms: step_ms_ema };
+        cov.observe_step_ms(measured_step_ms(&acc, steps));
+        step_ms_ema = cov.step_ms;
+        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss).with_coverage(vec![cov]));
         if stopper.update(val_loss) {
             break;
         }
     }
 
-    let (cg, _) = mr.global.stats();
+    let st = mr.global.stats();
     Ok(RankResult {
         rank: mr.rank,
         head: mr.head,
@@ -1786,8 +2371,9 @@ fn rank_loop_fine_tune(
         encoder: encoder.clone(),
         branches: vec![(dataset, branch)],
         log,
-        comm_global: cg,
+        comm_global: st.elems,
         comm_head: 0,
+        comm_overlapped: st.overlapped_elems,
     })
 }
 
@@ -1811,6 +2397,7 @@ fn finalize_shared(
         results.iter().map(|r| r.comm_global).max().unwrap_or(0),
         results.iter().map(|r| r.comm_head).max().unwrap_or(0),
     );
+    let overlapped_elems = results.iter().map(|r| r.comm_overlapped).max().unwrap_or(0);
     let r0 = results
         .into_iter()
         .next()
@@ -1826,6 +2413,8 @@ fn finalize_shared(
             .with_name(name),
         log: r0.log,
         comm_elems,
+        overlapped_elems,
+        final_head_sizes: Vec::new(),
     })
 }
 
@@ -1834,15 +2423,24 @@ fn finalize_shared(
 /// DDP invariant: every rank's encoder must end bit-identically in sync
 /// (same init, exact collectives, deterministic optimizer).
 fn check_encoder_sync(results: &[RankResult]) -> anyhow::Result<()> {
-    let r0 = &results[0];
-    for r in &results[1..] {
-        for ((name, a), (_, b)) in r0.encoder.iter().zip(r.encoder.iter()) {
+    let pairs: Vec<(usize, &ParamSet)> =
+        results.iter().map(|r| (r.rank, &r.encoder)).collect();
+    check_encoder_pairs(&pairs)
+}
+
+/// The rank-agnostic core of [`check_encoder_sync`], shared with the
+/// elastic driver (whose per-epoch results are not `RankResult`s).
+fn check_encoder_pairs(pairs: &[(usize, &ParamSet)]) -> anyhow::Result<()> {
+    let Some((_, e0)) = pairs.first() else {
+        return Ok(());
+    };
+    for (rank, e) in &pairs[1..] {
+        for ((name, a), (_, b)) in e0.iter().zip(e.iter()) {
             let (av, bv) = (a.as_f32(), b.as_f32());
             for i in 0..av.len() {
                 anyhow::ensure!(
                     (av[i] - bv[i]).abs() <= 1e-5 * (1.0 + av[i].abs()),
-                    "encoder desync: rank {} vs 0 at {name}[{i}]: {} vs {}",
-                    r.rank,
+                    "encoder desync: rank {rank} vs 0 at {name}[{i}]: {} vs {}",
                     bv[i],
                     av[i]
                 );
@@ -1863,6 +2461,7 @@ fn finalize_per_dataset(
         results.iter().map(|r| r.comm_global).max().unwrap_or(0),
         results.iter().map(|r| r.comm_head).max().unwrap_or(0),
     );
+    let overlapped_elems = results.iter().map(|r| r.comm_overlapped).max().unwrap_or(0);
     let mut heads: BTreeMap<DatasetId, ParamSet> = BTreeMap::new();
     for r in &results {
         if r.replica == 0 {
@@ -1882,6 +2481,8 @@ fn finalize_per_dataset(
         model: TrainedModel { name, encoder: r0.encoder, heads: Heads::PerDataset(heads) },
         log: r0.log,
         comm_elems,
+        overlapped_elems,
+        final_head_sizes: Vec::new(),
     })
 }
 

@@ -234,6 +234,58 @@
 //! `BENCH_serving.json` (see EXPERIMENTS.md §Serving — quote only
 //! CI-artifact numbers).
 //!
+//! ## Overlapped gradient reduction + elastic head scheduling
+//!
+//! At scale the synchronous pattern — finish backward, then reduce the whole
+//! gradient in one monolithic collective — leaves the fabric idle during
+//! backward and the cores idle during the reduce. The trainer overlaps the
+//! two without giving up a single bit of determinism:
+//!
+//! - **Bucketed reduction** — [`comm::BucketPlan`] partitions the manifest's
+//!   leaf set into size-bounded buckets (`parallel.bucket_elems` f32 cap)
+//!   ordered by *backward completion*: the native backward pass signals each
+//!   block group (heads/trunk first, embedding last) through a
+//!   [`runtime::backend::GradObserver`] the moment its leaf gradients are
+//!   final, so
+//!   early buckets start reducing while later layers are still
+//!   differentiating.
+//! - **The comm thread** — [`comm::OverlapReducer`] owns one per-rank
+//!   reduction thread, double-buffered (two buckets in flight): `submit` is
+//!   non-blocking until both slots are busy, `finish` drains in submission
+//!   order. Within each bucket, ranks still reduce in rank order over
+//!   exactly the same element spans, so the overlapped sum is
+//!   **bit-identical** to the monolithic `allreduce_mean` — overlapped
+//!   training reaches the same final parameters bit for bit in all three
+//!   parallel modes, and kill-at-k checkpoint resume parity holds with
+//!   overlap on (`rust/tests/integration_overlap.rs`). A rank that dies
+//!   mid-bucket poisons the group exactly like the sync path: peers get a
+//!   typed [`CommError::RankFailure`](comm::CommError), never a comm-thread
+//!   deadlock.
+//! - **Elastic head scheduling** — `mtl-par` normally gives every head the
+//!   same number of data-parallel ranks, but multi-source bundles are
+//!   *imbalanced*: a head with 10x the data takes 10x the steps. With
+//!   `parallel.elastic` on, each head's per-step wall time is tracked as an
+//!   EMA (`Coverage::step_ms`, persisted in checkpoints and the metrics
+//!   JSON), and at every epoch boundary
+//!   [`coordinator::scheduler::plan_head_groups`] re-splits the world
+//!   proportionally to measured cost x steps (largest-remainder, min one
+//!   rank per head). The mesh is static *within* an epoch, so determinism
+//!   is per-plan; resume re-seeds the EMAs from the checkpointed coverage.
+//!
+//! Knobs: `Session::builder().overlap(true).bucket_elems(n).elastic(true)`,
+//! CLI `--overlap/--bucket-elems/--elastic`, env `HYDRA_MTP_OVERLAP`.
+//! `overlap`/`bucket_elems` are fingerprint-excluded (they cannot change
+//! results); `elastic` changes the training trajectory and is fingerprinted.
+//! [`Comm::stats`](comm::Comm::stats) splits traffic into
+//! `(elems, rounds, overlapped_elems)` so tests can assert that overlap
+//! hides traffic without changing its volume, and
+//! [`scalesim`]`::predicted_overlap_win` extends the perf model with the
+//! overlap window (backward ~2/3 of step compute) — confronted against the
+//! measured win in `rust/tests/integration_overlap.rs`. `cargo bench
+//! --bench overlap` records sync-vs-overlapped step times side by side in
+//! `BENCH_overlap.json` (see EXPERIMENTS.md §Overlap — quote only
+//! CI-artifact numbers).
+//!
 //! ## Fault tolerance
 //!
 //! Long pre-training runs on shared clusters fail in practice: ranks die,

@@ -29,6 +29,13 @@ pub const REGISTRY: &[EnvVar] = &[
         unset: "faults come from --faults / RunConfig.fault.spec (default: none)",
     },
     EnvVar {
+        name: "HYDRA_MTP_OVERLAP",
+        summary: "overlapped bucketed gradient reduction override: 1|true|on or \
+                  0|false|off (an invalid value warns and keeps the config; \
+                  reduced values are bit-identical either way)",
+        unset: "the configured ParallelConfig.overlap flag (default: off)",
+    },
+    EnvVar {
         name: "HYDRA_MTP_PRECISION",
         summary: "native-backend precision override: f64 | mixed-f32 \
                   (an invalid value warns and is ignored)",

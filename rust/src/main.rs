@@ -73,6 +73,7 @@ COMMANDS
            [--precision f64|mixed-f32] [--artifacts DIR] [--csv FILE]
            [--checkpoint-dir DIR] [--checkpoint-every N] [--resume PATH|latest]
            [--faults SPEC] [--max-restarts N]
+           [--overlap [BOOL]] [--bucket-elems N] [--elastic [BOOL]]
            MODE: ANI1x|QM7-X|Transition1x|MPTrj|Alexandria|baseline-all|mtl-base|mtl-par
            --backend native (the default resolution on artifact-less machines)
            trains with the pure-rust EGNN engine: no artifacts, no PJRT;
@@ -90,6 +91,11 @@ COMMANDS
            deterministic faults for drills (also env HYDRA_MTP_FAULTS), e.g.
            'rank-panic@rank=1,epoch=2,step=0;corrupt-ckpt@epoch=2' — kinds:
            rank-panic, stall, nonfinite, corrupt-ckpt, serve-panic
+           --overlap reduces gradient buckets on a per-rank comm thread while
+           backward still runs (bit-identical to the sync path; also env
+           HYDRA_MTP_OVERLAP); --bucket-elems caps a bucket's f32 payload;
+           --elastic (mtl-par only) re-sizes each head's sub-group at epoch
+           boundaries from its dataset's measured per-step cost EMA
   table1   [--epochs N] [--per-dataset N] [--replicas M] [--backend B] [--csv FILE]
   table2   (same flags; same training runs, force metric)
   fig1     [--per-dataset N] [--seed S] [--max-atoms A]
@@ -196,6 +202,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "resume",
         "faults",
         "max-restarts",
+        "overlap",
+        "bucket-elems",
+        "elastic",
     ];
     allowed.extend(CONFIG_FLAGS);
     args.ensure_known("train", &allowed)?;
@@ -216,6 +225,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(n) = args.opt_str("max-restarts") {
         cfg.fault.max_restarts = n.parse()?;
+    }
+    // `--overlap` / `--elastic` alone mean true; `--overlap false` turns a
+    // config-file setting back off.
+    if args.flags.contains_key("overlap") {
+        cfg.parallel.overlap = args.bool("overlap");
+    }
+    if let Some(n) = args.opt_str("bucket-elems") {
+        cfg.parallel.bucket_elems = n.parse()?;
+    }
+    if args.flags.contains_key("elastic") {
+        cfg.parallel.elastic = args.bool("elastic");
     }
     cfg.validate()?;
     println!("loading engine ({} backend requested) ...", cfg.backend.name());
@@ -241,6 +261,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         outcome.comm_elems.0 as f64 / 1e6,
         outcome.comm_elems.1 as f64 / 1e6
     );
+    if outcome.overlapped_elems > 0 {
+        println!(
+            "overlapped reduction hid {:.1} Mf32 of that traffic behind backward",
+            outcome.overlapped_elems as f64 / 1e6
+        );
+    }
+    if !outcome.final_head_sizes.is_empty() {
+        println!(
+            "elastic head sub-group sizes (final epoch): {:?}",
+            outcome.final_head_sizes
+        );
+    }
     if let Some(path) = args.opt_str("csv") {
         std::fs::write(path, outcome.log.to_csv())?;
         println!("wrote {path}");

@@ -1107,6 +1107,34 @@ pub fn loss_metrics(dims: &EgnnDims, b: &Batch64, bs: &BranchState) -> Metrics {
 // backward
 // ---------------------------------------------------------------------------
 
+/// A completion-ordered block of the analytic backward pass. The backward
+/// finishes gradients in a fixed order — all `branch.*` leaves first, then
+/// each `encoder.layers.{li}.*` block in REVERSE layer order, and
+/// `encoder.embed` last — which is what lets `comm::overlap` start reducing
+/// early buckets while later blocks are still being computed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradBlock {
+    /// All `branch.*` leaves (trunk + energy/force heads); first to finish.
+    Branch,
+    /// One message-passing layer's `encoder.layers.{li}.*` leaves. Layer
+    /// `L-1` finishes first, layer `0` last.
+    Layer(usize),
+    /// `encoder.embed` — the final block.
+    Embed,
+}
+
+impl GradBlock {
+    /// Position in backward completion order: `Branch` → 0,
+    /// `Layer(li)` → `L - li`, `Embed` → `L + 1`.
+    pub fn ordinal(&self, num_layers: usize) -> usize {
+        match *self {
+            GradBlock::Branch => 0,
+            GradBlock::Layer(li) => num_layers - li,
+            GradBlock::Embed => num_layers + 1,
+        }
+    }
+}
+
 /// Analytic gradients of the loss wrt every encoder + branch parameter.
 /// Validated entry-by-entry against central finite differences in
 /// `rust/tests/gradcheck.rs`.
@@ -1119,6 +1147,30 @@ pub fn backward(
     bs: &BranchState,
     b: &Batch64,
 ) -> (EncoderParams, BranchParams) {
+    backward_observed(dims, enc, br, es, bs, b, &mut |_, _, _| Ok(()))
+        .expect("infallible observer: backward itself never errors")
+}
+
+/// As [`backward`], signaling each [`GradBlock`]'s completion through
+/// `on_block` the moment its gradients are final (the grad containers are
+/// passed so the observer can read the finished block; later blocks are
+/// still zero at that point). The computation — every operation, in the
+/// same order — is exactly [`backward`]'s, so observed and unobserved runs
+/// produce bit-identical gradients; the only errors are the observer's own.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_observed(
+    dims: &EgnnDims,
+    enc: &EncoderParams,
+    br: &BranchParams,
+    es: &EncoderState,
+    bs: &BranchState,
+    b: &Batch64,
+    on_block: &mut dyn FnMut(
+        GradBlock,
+        &EncoderParams,
+        &BranchParams,
+    ) -> anyhow::Result<()>,
+) -> anyhow::Result<(EncoderParams, BranchParams)> {
     let (n, e, g, h, d) = (dims.n, dims.e, dims.g, dims.h, dims.d);
     let p = dims.precision;
 
@@ -1196,6 +1248,7 @@ pub fn backward(
     // v accumulates additively across layers, so its cotangent is the same
     // `d_v` at every layer; each layer only extracts its own vagg term.
     let mut ge = EncoderParams::zeros(dims);
+    on_block(GradBlock::Branch, &ge, &gb)?;
     let kx = dims.kx();
     for (li, lc) in es.layers.iter().enumerate().rev() {
         let lp = &enc.layers[li];
@@ -1312,6 +1365,7 @@ pub fn backward(
             }
         }
         d_h = d_h_in;
+        on_block(GradBlock::Layer(li), &ge, &gb)?;
     }
 
     // h0 = embed[species] * node_mask
@@ -1326,7 +1380,8 @@ pub fn backward(
         }
     }
 
-    (ge, gb)
+    on_block(GradBlock::Embed, &ge, &gb)?;
+    Ok((ge, gb))
 }
 
 #[cfg(test)]

@@ -38,7 +38,36 @@ use crate::runtime::engine::{EvalOut, StepOut};
 use crate::runtime::manifest::Manifest;
 use crate::tensor::Tensor;
 
+pub use crate::model::egnn::GradBlock;
 pub use crate::model::kernels::Precision;
+
+/// Observer of gradient-block completion inside one train step. The
+/// contract every backend honors (natively streaming or by replay):
+///
+/// 1. `loss_ready` fires exactly once, after the forward pass and before
+///    any gradient block — so a sink can decide to zero its payloads (the
+///    skip-batch path) before anything is submitted.
+/// 2. `block_ready` fires once per [`GradBlock`] in backward completion
+///    order (`Branch`, `Layer(L-1)` … `Layer(0)`, `Embed`); when it fires,
+///    that block's leaves are final in `grads` while later blocks are
+///    still zero.
+///
+/// An error from `block_ready` aborts the step and propagates out of
+/// `train_step_observed`.
+pub trait GradObserver {
+    fn loss_ready(&mut self, loss: f64);
+    fn block_ready(&mut self, block: GradBlock, grads: &ParamSet) -> anyhow::Result<()>;
+}
+
+/// Observer that ignores every signal (the plain synchronous step).
+pub struct NoopGradObserver;
+
+impl GradObserver for NoopGradObserver {
+    fn loss_ready(&mut self, _loss: f64) {}
+    fn block_ready(&mut self, _block: GradBlock, _grads: &ParamSet) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
 
 /// One execution backend for the train/eval/predict hot path. All methods
 /// take the engine's manifest so a backend carries no duplicate state; they
@@ -58,6 +87,29 @@ pub trait Backend: Send + Sync {
         params: &ParamSet,
         batch: &GraphBatch,
     ) -> anyhow::Result<StepOut>;
+
+    /// As `train_step`, signaling gradient-block completion through `obs`
+    /// (see [`GradObserver`]). The default implementation runs the full
+    /// step and then REPLAYS the blocks in backward completion order from
+    /// the finished grad map — correct for any backend, with no overlap
+    /// win. The native backend overrides this with true streaming out of
+    /// its analytic backward; both paths produce bit-identical gradients.
+    fn train_step_observed(
+        &self,
+        manifest: &Manifest,
+        params: &ParamSet,
+        batch: &GraphBatch,
+        obs: &mut dyn GradObserver,
+    ) -> anyhow::Result<StepOut> {
+        let out = self.train_step(manifest, params, batch)?;
+        obs.loss_ready(out.loss);
+        obs.block_ready(GradBlock::Branch, &out.grads)?;
+        for li in (0..manifest.config.num_layers).rev() {
+            obs.block_ready(GradBlock::Layer(li), &out.grads)?;
+        }
+        obs.block_ready(GradBlock::Embed, &out.grads)?;
+        Ok(out)
+    }
 
     /// Metrics-only evaluation pass.
     fn eval_step(

@@ -274,6 +274,24 @@ impl Engine {
         Ok(out)
     }
 
+    /// As [`Engine::train_step_unchecked`], signaling gradient-block
+    /// completion through `obs` while backward runs (native backend) or by
+    /// replay after the step (other backends). See
+    /// [`crate::runtime::backend::GradObserver`] for the contract; the
+    /// overlapped trainer path feeds a `comm::overlap::OverlapSink` here.
+    pub fn train_step_observed_unchecked(
+        &self,
+        params: &ParamSet,
+        batch: &GraphBatch,
+        obs: &mut dyn crate::runtime::backend::GradObserver,
+    ) -> anyhow::Result<StepOut> {
+        let out = self
+            .backend()
+            .train_step_observed(&self.manifest, params, batch, obs)?;
+        self.count();
+        Ok(out)
+    }
+
     /// Metrics-only evaluation pass.
     pub fn eval_step(
         &self,

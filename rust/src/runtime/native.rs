@@ -19,12 +19,12 @@
 
 use crate::data::batch::GraphBatch;
 use crate::model::egnn::{
-    backward, branch_forward, encoder_forward, loss_metrics, Batch64, BranchParams, EgnnDims,
-    EncoderParams, EncoderState,
+    backward_observed, branch_forward, encoder_forward, loss_metrics, Batch64, BranchParams,
+    EgnnDims, EncoderParams, EncoderState, GradBlock, LayerParams,
 };
 use crate::model::kernels::Precision;
 use crate::model::params::ParamSet;
-use crate::runtime::backend::Backend;
+use crate::runtime::backend::{Backend, GradObserver, NoopGradObserver};
 use crate::runtime::engine::{EvalOut, StepOut};
 use crate::runtime::manifest::Manifest;
 use crate::tensor::Tensor;
@@ -92,6 +92,36 @@ fn write_scalar(grads: &mut ParamSet, name: &str, v: f64) -> anyhow::Result<()> 
     write_leaf(grads, name, &[v])
 }
 
+/// Write every `branch.*` gradient leaf (the backward's first-completed
+/// block).
+fn write_branch_leaves(grads: &mut ParamSet, gb: &BranchParams) -> anyhow::Result<()> {
+    write_leaf(grads, "branch.trunk.w1", &gb.tw1)?;
+    write_leaf(grads, "branch.trunk.b1", &gb.tb1)?;
+    write_leaf(grads, "branch.trunk.w2", &gb.tw2)?;
+    write_leaf(grads, "branch.trunk.b2", &gb.tb2)?;
+    write_leaf(grads, "branch.trunk.w3", &gb.tw3)?;
+    write_leaf(grads, "branch.trunk.b3", &gb.tb3)?;
+    write_leaf(grads, "branch.energy.w", &gb.ew)?;
+    write_scalar(grads, "branch.energy.b", gb.eb)?;
+    write_leaf(grads, "branch.force.w", &gb.fw)?;
+    write_scalar(grads, "branch.force.b", gb.fb)
+}
+
+/// Write one layer's `encoder.layers.{li}.*` gradient leaves.
+fn write_layer_leaves(grads: &mut ParamSet, li: usize, gl: &LayerParams) -> anyhow::Result<()> {
+    let name = |part: &str| format!("encoder.layers.{li}.{part}");
+    write_leaf(grads, &name("edge.w1"), &gl.ew1)?;
+    write_leaf(grads, &name("edge.b1"), &gl.eb1)?;
+    write_leaf(grads, &name("edge.w2"), &gl.ew2)?;
+    write_leaf(grads, &name("edge.b2"), &gl.eb2)?;
+    write_leaf(grads, &name("edge.wg"), &gl.wg)?;
+    write_scalar(grads, &name("edge.bg"), gl.bg)?;
+    write_leaf(grads, &name("node.w1"), &gl.nw1)?;
+    write_leaf(grads, &name("node.b1"), &gl.nb1)?;
+    write_leaf(grads, &name("node.w2"), &gl.nw2)?;
+    write_leaf(grads, &name("node.b2"), &gl.nb2)
+}
+
 impl Backend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
@@ -107,36 +137,31 @@ impl Backend for NativeBackend {
         params: &ParamSet,
         batch: &GraphBatch,
     ) -> anyhow::Result<StepOut> {
+        // One write path for both the plain and the observed step keeps
+        // them bit-identical by construction.
+        self.train_step_observed(manifest, params, batch, &mut NoopGradObserver)
+    }
+
+    fn train_step_observed(
+        &self,
+        manifest: &Manifest,
+        params: &ParamSet,
+        batch: &GraphBatch,
+        obs: &mut dyn GradObserver,
+    ) -> anyhow::Result<StepOut> {
         let (dims, b, enc, br, es) = self.run_forward(manifest, params, batch)?;
         let bs = branch_forward(&dims, &br, &es, &b);
         let metrics = loss_metrics(&dims, &b, &bs);
-        let (ge, gb) = backward(&dims, &enc, &br, &es, &bs, &b);
-
+        obs.loss_ready(metrics.loss);
         let mut grads = ParamSet::zeros_like(&manifest.params);
-        write_leaf(&mut grads, "branch.trunk.w1", &gb.tw1)?;
-        write_leaf(&mut grads, "branch.trunk.b1", &gb.tb1)?;
-        write_leaf(&mut grads, "branch.trunk.w2", &gb.tw2)?;
-        write_leaf(&mut grads, "branch.trunk.b2", &gb.tb2)?;
-        write_leaf(&mut grads, "branch.trunk.w3", &gb.tw3)?;
-        write_leaf(&mut grads, "branch.trunk.b3", &gb.tb3)?;
-        write_leaf(&mut grads, "branch.energy.w", &gb.ew)?;
-        write_scalar(&mut grads, "branch.energy.b", gb.eb)?;
-        write_leaf(&mut grads, "branch.force.w", &gb.fw)?;
-        write_scalar(&mut grads, "branch.force.b", gb.fb)?;
-        write_leaf(&mut grads, "encoder.embed", &ge.embed)?;
-        for (li, gl) in ge.layers.iter().enumerate() {
-            let name = |part: &str| format!("encoder.layers.{li}.{part}");
-            write_leaf(&mut grads, &name("edge.w1"), &gl.ew1)?;
-            write_leaf(&mut grads, &name("edge.b1"), &gl.eb1)?;
-            write_leaf(&mut grads, &name("edge.w2"), &gl.ew2)?;
-            write_leaf(&mut grads, &name("edge.b2"), &gl.eb2)?;
-            write_leaf(&mut grads, &name("edge.wg"), &gl.wg)?;
-            write_scalar(&mut grads, &name("edge.bg"), gl.bg)?;
-            write_leaf(&mut grads, &name("node.w1"), &gl.nw1)?;
-            write_leaf(&mut grads, &name("node.b1"), &gl.nb1)?;
-            write_leaf(&mut grads, &name("node.w2"), &gl.nw2)?;
-            write_leaf(&mut grads, &name("node.b2"), &gl.nb2)?;
-        }
+        backward_observed(&dims, &enc, &br, &es, &bs, &b, &mut |block, ge, gb| {
+            match block {
+                GradBlock::Branch => write_branch_leaves(&mut grads, gb)?,
+                GradBlock::Layer(li) => write_layer_leaves(&mut grads, li, &ge.layers[li])?,
+                GradBlock::Embed => write_leaf(&mut grads, "encoder.embed", &ge.embed)?,
+            }
+            obs.block_ready(block, &grads)
+        })?;
         Ok(StepOut { loss: metrics.loss, mae_e: metrics.mae_e, mae_f: metrics.mae_f, grads })
     }
 

@@ -7,7 +7,10 @@ pub mod perfmodel;
 pub mod sweep;
 
 pub use machines::{machine_by_name, MachineProfile, ALL_MACHINES, AURORA, FRONTIER, PERLMUTTER};
-pub use perfmodel::{SimMode, Workload};
+pub use perfmodel::{
+    predicted_overlap_win, step_time_overlapped, step_time_sync, SimMode, Workload,
+    OVERLAP_WINDOW_FRACTION,
+};
 pub use sweep::{fig4_all, render_panel, strong_scaling, to_csv, weak_scaling, SweepRow};
 
 #[cfg(test)]

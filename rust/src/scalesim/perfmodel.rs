@@ -131,6 +131,62 @@ pub fn step_comm_time(m: &MachineProfile, w: &Workload, mode: SimMode, n_gpus: u
     }
 }
 
+/// Fraction of a step's compute during which bucket reductions can hide:
+/// backward is ~2/3 of the fwd+bwd FLOPs and the bucket plan streams blocks
+/// out as backward completes them (trunk/heads first, embedding last), so
+/// roughly the backward window is available to the comm thread.
+pub const OVERLAP_WINDOW_FRACTION: f64 = 2.0 / 3.0;
+
+/// Per-step time (seconds) on the synchronous path: compute, then the full
+/// gradient allreduce on the critical path.
+pub fn step_time_sync(
+    m: &MachineProfile,
+    w: &Workload,
+    mode: SimMode,
+    n_gpus: usize,
+    local_batch: usize,
+) -> f64 {
+    step_compute_time(m, w, mode, local_batch)
+        + step_comm_time(m, w, mode, n_gpus)
+        + step_data_time(w, local_batch)
+}
+
+/// Per-step time (seconds) with overlapped bucketed reduction: only the
+/// communication that does not fit inside the backward window stays on the
+/// critical path. Compute is unchanged — overlap hides traffic, it never
+/// removes it.
+pub fn step_time_overlapped(
+    m: &MachineProfile,
+    w: &Workload,
+    mode: SimMode,
+    n_gpus: usize,
+    local_batch: usize,
+) -> f64 {
+    let compute = step_compute_time(m, w, mode, local_batch);
+    let comm = step_comm_time(m, w, mode, n_gpus);
+    let exposed = (comm - OVERLAP_WINDOW_FRACTION * compute).max(0.0);
+    compute + exposed + step_data_time(w, local_batch)
+}
+
+/// Predicted fractional step-time win of overlap over sync, in [0, 1).
+/// Approaches `comm / (compute + comm)` when the backward window swallows
+/// the whole reduction, and 0 when compute dominates so completely that
+/// there is nothing worth hiding. `rust/tests/integration_overlap.rs`
+/// confronts the sign of this prediction with the measured win.
+pub fn predicted_overlap_win(
+    m: &MachineProfile,
+    w: &Workload,
+    mode: SimMode,
+    n_gpus: usize,
+    local_batch: usize,
+) -> f64 {
+    let sync = step_time_sync(m, w, mode, n_gpus, local_batch);
+    if sync <= 0.0 {
+        return 0.0;
+    }
+    (sync - step_time_overlapped(m, w, mode, n_gpus, local_batch)) / sync
+}
+
 /// Per-epoch data-pipeline time: DDStore batch fetch + padding, overlapped
 /// except for a small per-step residue; grows slowly with scale (metadata).
 pub fn step_data_time(w: &Workload, local_batch: usize) -> f64 {
@@ -211,6 +267,29 @@ mod tests {
         big.dims.head_hidden = 4096;
         assert!(!fits_memory(&PERLMUTTER, &big, SimMode::MtlBase));
         assert!(fits_memory(&PERLMUTTER, &big, SimMode::MtlPar));
+    }
+
+    #[test]
+    fn overlap_never_slower_and_wins_when_comm_bound() {
+        for m in [&FRONTIER, &PERLMUTTER, &AURORA] {
+            for mode in [SimMode::MtlBase, SimMode::MtlPar] {
+                for (n, b) in [(8usize, 4usize), (640, 16), (640, 1024)] {
+                    let sync = step_time_sync(m, &w(), mode, n, b);
+                    let ov = step_time_overlapped(m, &w(), mode, n, b);
+                    assert!(ov <= sync + 1e-15, "{} {:?}: ov={ov} sync={sync}", m.name, mode);
+                    let win = predicted_overlap_win(m, &w(), mode, n, b);
+                    assert!((0.0..1.0).contains(&win));
+                }
+            }
+        }
+        // Comm-bound point (many ranks, tiny local batch): overlap must win.
+        let win = predicted_overlap_win(&AURORA, &w(), SimMode::MtlBase, 640, 1);
+        assert!(win > 0.1, "comm-bound win = {win}");
+        // Compute-bound point: the window swallows everything, win ~ comm share.
+        let big = predicted_overlap_win(&FRONTIER, &w(), SimMode::MtlBase, 8, 4096);
+        let sync = step_time_sync(&FRONTIER, &w(), SimMode::MtlBase, 8, 4096);
+        let comm = step_comm_time(&FRONTIER, &w(), SimMode::MtlBase, 8);
+        assert!((big - comm / sync).abs() < 1e-12, "fully hidden: win equals comm share");
     }
 
     #[test]

@@ -81,6 +81,33 @@ impl SessionBuilder {
         self
     }
 
+    /// Overlapped bucketed gradient reduction: reduce gradient buckets on a
+    /// per-rank comm thread while backward still runs (see
+    /// [`crate::comm::overlap`]). Bit-identical to the synchronous path;
+    /// the `HYDRA_MTP_OVERLAP` env var overrides this at run time.
+    pub fn overlap(mut self, on: bool) -> Self {
+        self.config.parallel.overlap = on;
+        self
+    }
+
+    /// Gradient bucket size in f32 elements for the overlapped path
+    /// (excluded from the trajectory fingerprint — it never changes the
+    /// reduced values, only when they are reduced).
+    pub fn bucket_elems(mut self, elems: usize) -> Self {
+        self.config.parallel.bucket_elems = elems;
+        self
+    }
+
+    /// Elastic head scheduling for MTL-par: size each head's sub-group from
+    /// its dataset's measured per-step cost (the [`Coverage::step_ms`] EMA),
+    /// re-planned at epoch boundaries. The mesh is static within an epoch.
+    ///
+    /// [`Coverage::step_ms`]: crate::coordinator::metrics::Coverage
+    pub fn elastic(mut self, on: bool) -> Self {
+        self.config.parallel.elastic = on;
+        self
+    }
+
     pub fn epochs(mut self, epochs: usize) -> Self {
         self.config.train.epochs = epochs;
         self
