@@ -1,0 +1,197 @@
+//! Graph-parallel (domain-decomposed) training benchmark. Run with
+//! `cargo bench --bench graph_parallel`.
+//!
+//! Writes `BENCH_graph_parallel.json` — the artifact EXPERIMENTS.md §Graph
+//! parallel quotes and CI uploads. Two sections:
+//!
+//! * step layer: one `graphpar::train_step` on crystal fragments of growing
+//!   atom count across worlds 1/2/4, timed inside the rank group. The
+//!   measured per-step [`Comm::stats`] delta is asserted EQUAL to
+//!   `GpPlan::predicted_step_elems` — the analytic halo-traffic formula the
+//!   scalesim quotes must match what the implementation actually moves,
+//!   element for element;
+//! * trainer layer: a Supercell (1000-atom bulk) graph-parallel training
+//!   run at replicas 1 vs 2 through the full `Trainer` path, reporting the
+//!   measured per-step time of each — plus a bit-identity check of every
+//!   epoch loss, because domain decomposition that changes the numbers is
+//!   a bug, not a speedup.
+//!
+//! All legs run on the native backend, so CI carries real measurements on
+//! every run.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hydra_mtp::comm::run_group;
+use hydra_mtp::config::{RunConfig, TrainMode};
+use hydra_mtp::coordinator::trainer::TrainOutcome;
+use hydra_mtp::coordinator::{DataBundle, Trainer};
+use hydra_mtp::data::featurized::compute_segments;
+use hydra_mtp::data::generators::inorganic::build_crystal;
+use hydra_mtp::data::graph::radius_graph_positions;
+use hydra_mtp::data::potential::energy_and_forces;
+use hydra_mtp::model::egnn::{BranchParams, EgnnDims, EncoderParams};
+use hydra_mtp::model::graphpar::{self, GpPlan, GpStructure, GradLayout};
+use hydra_mtp::model::ParamSet;
+use hydra_mtp::runtime::{BackendKind, Engine, Manifest, ManifestConfig, Precision};
+use hydra_mtp::tasks::register_large_presets;
+use hydra_mtp::util::rng::Rng;
+use hydra_mtp::util::timer::{bench_n, write_bench_json, BenchStats};
+
+const BENCH_JSON: &str = "BENCH_graph_parallel.json";
+const STEP_ITERS: usize = 6;
+
+/// Bench `train_step` on one structure at one world size; every rank runs
+/// the same iterations in lockstep, rank 0's timings are reported. Returns
+/// (stats, measured f64 elems per step, predicted f64 elems per step).
+fn step_leg(m: &Manifest, natoms: usize, world: usize) -> (BenchStats, u64, u64) {
+    let dims = EgnnDims::from_config(&m.config);
+    let layout = GradLayout::new(&dims);
+    let params = ParamSet::init(&m.params, 5);
+    let mut rng = Rng::new(31);
+    let (species, positions) = build_crystal(&mut rng, &[12, 8, 11, 17], natoms);
+    let (energy, forces) = energy_and_forces(&species, &positions);
+    let y_epa = energy / natoms as f64;
+    let edges = radius_graph_positions(&positions, m.config.cutoff);
+    let segments = compute_segments(&positions, m.config.cutoff);
+    let plan = GpPlan::build(&segments, &edges, world);
+    let predicted = plan.predicted_step_elems(dims.h, dims.l, layout.len);
+
+    let name = format!("graph-par train_step {natoms} atoms world {world}");
+    let results = run_group(world, |c| {
+        let enc = EncoderParams::from_set(&dims, &params).unwrap();
+        let br = BranchParams::from_set(&dims, &params).unwrap();
+        let st = GpStructure {
+            species: &species,
+            edges: &edges,
+            y_energy_per_atom: y_epa,
+            y_forces: &forces,
+        };
+        let before = c.stats().elems;
+        let stats = bench_n(&name, STEP_ITERS, || {
+            graphpar::train_step(&dims, &enc, &br, &st, &plan, &layout, &c).unwrap();
+        });
+        let per_step = (c.stats().elems - before) / STEP_ITERS as u64;
+        (stats, per_step)
+    });
+    let (stats, measured) = results
+        .into_iter()
+        .next()
+        .expect("rank 0 ran")
+        .expect("no rank failed in a healthy bench group");
+    (stats, measured, predicted)
+}
+
+/// One graph-parallel training leg through the full Trainer path; returns
+/// the outcome and its measured per-step time (exec + comm + opt over all
+/// steps). Quantiles are per-epoch per-step means.
+fn train_leg(
+    engine: &Arc<Engine>,
+    data: &DataBundle,
+    supercell: hydra_mtp::DatasetId,
+    name: &str,
+    replicas: usize,
+) -> (TrainOutcome, BenchStats) {
+    let mut cfg = RunConfig::default();
+    cfg.mode = TrainMode::Single(supercell);
+    cfg.parallel.replicas = replicas;
+    cfg.parallel.graph_par = true;
+    cfg.train.epochs = 2;
+    cfg.train.patience = 0;
+    cfg.data.per_dataset = 6;
+    let out = Trainer::new(Arc::clone(engine), cfg).train(data).expect("training runs");
+
+    let mut samples: Vec<Duration> = Vec::new();
+    let mut total = Duration::ZERO;
+    let mut steps = 0usize;
+    for ep in &out.log.epochs {
+        let t = ep.time_exec + ep.time_comm + ep.time_opt;
+        if ep.steps > 0 {
+            samples.push(t / ep.steps as u32);
+        }
+        total += t;
+        steps += ep.steps;
+    }
+    samples.sort_unstable();
+    let n = samples.len().max(1);
+    let mean = if steps > 0 { total / steps as u32 } else { Duration::ZERO };
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: steps,
+        mean,
+        p50: samples.get(n / 2).copied().unwrap_or(mean),
+        p95: samples.get((n * 95 / 100).min(n - 1)).copied().unwrap_or(mean),
+        min: samples.first().copied().unwrap_or(mean),
+    };
+    (out, stats)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== hydra-mtp graph-parallel benchmarks ==\n");
+    let mut results: Vec<BenchStats> = Vec::new();
+
+    // --- step layer: train_step time + halo traffic vs atom count/world ---
+    let m = Manifest::synthesize(ManifestConfig::default_native());
+    for natoms in [120usize, 480, 1000] {
+        for world in [1usize, 2, 4] {
+            let (stats, measured, predicted) = step_leg(&m, natoms, world);
+            println!("{}", stats.report());
+            println!(
+                "    halo traffic: {measured} f64 elems/step measured, \
+                 {predicted} predicted ({:.1} KiB)",
+                measured as f64 * 8.0 / 1024.0
+            );
+            assert_eq!(
+                measured, predicted,
+                "{natoms} atoms world {world}: the analytic halo-traffic \
+                 model must match Comm::stats exactly"
+            );
+            results.push(stats);
+        }
+    }
+
+    // --- trainer layer: full graph-par run, 1 vs 2 ranks, same data ---
+    let (supercell, _) = register_large_presets()?;
+    let engine = Arc::new(Engine::load_full(
+        "artifacts",
+        BackendKind::Native,
+        Precision::F64,
+    )?);
+    let mut data_cfg = RunConfig::default();
+    data_cfg.data.per_dataset = 6;
+    let data = DataBundle::generate(&data_cfg.data, &[supercell]);
+
+    let (solo, solo_stats) =
+        train_leg(&engine, &data, supercell, "supercell graph-par step (1 rank)", 1);
+    println!("{}", solo_stats.report());
+    results.push(solo_stats.clone());
+
+    let (duo, duo_stats) =
+        train_leg(&engine, &data, supercell, "supercell graph-par step (2 ranks)", 2);
+    println!("{}", duo_stats.report());
+    results.push(duo_stats.clone());
+
+    // Decomposition that changes the numbers is a bug: both legs must land
+    // on the same losses to the last bit.
+    assert_eq!(solo.log.epochs.len(), duo.log.epochs.len());
+    for (a, b) in solo.log.epochs.iter().zip(&duo.log.epochs) {
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "epoch {}: 2-rank leg diverged from single-rank",
+            a.epoch
+        );
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(), "epoch {}", a.epoch);
+    }
+    println!(
+        "\nbit-identical across worlds: yes; comm {:.1} Mf64 (2 ranks); \
+         step time {:?} (1 rank) -> {:?} (2 ranks)",
+        duo.comm_elems.0 as f64 / 1e6,
+        solo_stats.mean,
+        duo_stats.mean,
+    );
+
+    write_bench_json(BENCH_JSON, "graph_parallel", &results)?;
+    println!("wrote {BENCH_JSON} ({} ops)", results.len());
+    Ok(())
+}

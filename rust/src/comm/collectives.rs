@@ -341,6 +341,76 @@ impl Comm {
         Ok(())
     }
 
+    /// Elementwise f64 sum across the group, in place. The full-precision
+    /// sibling of [`Comm::allreduce_sum`]: payloads stay f64 end to end (no
+    /// f32 round-trip), which the graph-parallel halo exchange depends on —
+    /// boundary activations and gradients are exchanged mid-computation, so
+    /// any rounding here would break bit-identity with the single-rank run.
+    /// Folding happens in rank order like the f32 path, so the result is
+    /// arrival-order independent. Counts one element per f64 into
+    /// [`CommStats::elems`].
+    pub fn allreduce_sum_f64(&self, data: &mut [f64]) -> Result<(), CommError> {
+        let sh = &self.shared;
+        if sh.size == 1 {
+            sh.rounds.fetch_add(1, Ordering::Relaxed);
+            sh.reduced_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
+            return Ok(());
+        }
+        // lint:allow(nondeterministic): deadline clock never feeds reduced values or ordering
+        let deadline = Instant::now() + sh.timeout;
+        let mut st = lock(sh);
+        loop {
+            if let Some(rank) = st.failed {
+                return Err(CommError::RankFailure { rank });
+            }
+            if st.departing == 0 {
+                break;
+            }
+            st = self.wait_deadline(st, deadline)?;
+        }
+        {
+            let slot = &mut st.parts[self.rank_in_group];
+            slot.clear();
+            slot.extend_from_slice(data);
+        }
+        st.arrived += 1;
+        if st.arrived == sh.size {
+            {
+                let RoundState { parts, accum, .. } = &mut *st;
+                accum.clear();
+                accum.resize(data.len(), 0.0);
+                for part in parts.iter() {
+                    for (a, &x) in accum.iter_mut().zip(part.iter()) {
+                        *a += x;
+                    }
+                }
+            }
+            st.arrived = 0;
+            st.departing = sh.size;
+            sh.rounds.fetch_add(1, Ordering::Relaxed);
+            sh.reduced_elems.fetch_add(data.len() as u64, Ordering::Relaxed);
+            sh.cv.notify_all();
+        } else {
+            // Release wait: round-complete is checked BEFORE the poison
+            // flag — a round that rendezvoused is never aborted.
+            loop {
+                if st.departing > 0 {
+                    break;
+                }
+                if let Some(rank) = st.failed {
+                    return Err(CommError::RankFailure { rank });
+                }
+                st = self.wait_deadline(st, deadline)?;
+            }
+        }
+        data.copy_from_slice(&st.accum);
+        st.departing -= 1;
+        if st.departing == 0 {
+            sh.cv.notify_all();
+        }
+        Ok(())
+    }
+
     /// Broadcast `data` from `root` to every member, in place. The payload
     /// counts toward [`Comm::stats`] like any other collective (the seed
     /// moved the bytes but never incremented the traffic counter, so
@@ -645,6 +715,69 @@ mod tests {
                     f32::from_bits(expected)
                 );
             }
+        }
+    }
+
+    #[test]
+    fn f64_sum_is_exact_and_bit_deterministic() {
+        // f64 payloads must survive the exchange without an f32 round-trip
+        // (0.1 is not representable in f32) and fold in rank order: the
+        // cancellation pattern (1e18 + 1.0) - 1e18 distinguishes fold
+        // orders, so 200 rounds under varying thread scheduling must all
+        // produce the identical bit pattern.
+        let contributions = [1e18f64, 1.0, -1e18, 0.1];
+        let results = run_group_ok(4, move |c| {
+            let mut out = Vec::new();
+            for _ in 0..200 {
+                let mut d = vec![contributions[c.rank_in_group], 0.1];
+                c.allreduce_sum_f64(&mut d).unwrap();
+                out.push((d[0].to_bits(), d[1].to_bits()));
+            }
+            out
+        });
+        let expected = results[0][0];
+        assert_eq!(f64::from_bits(results[0][0].1), 0.4);
+        for r in &results {
+            for (round, &bits) in r.iter().enumerate() {
+                assert_eq!(bits, expected, "round {round}: nondeterministic f64 fold");
+            }
+        }
+    }
+
+    #[test]
+    fn f64_sum_counts_stats_and_is_identity_alone() {
+        let results = run_group_ok(2, |c| {
+            let mut d = vec![1.5f64; 9];
+            c.allreduce_sum_f64(&mut d).unwrap();
+            (d, c.stats())
+        });
+        for (d, st) in results {
+            assert!(d.iter().all(|&x| x == 3.0));
+            assert_eq!(st.elems, 9);
+            assert_eq!(st.rounds, 1);
+        }
+        let comms = Comm::group(1);
+        let mut d = vec![0.3f64, -7.25];
+        comms[0].allreduce_sum_f64(&mut d).unwrap();
+        assert_eq!(d, vec![0.3, -7.25]);
+        assert_eq!(comms[0].stats().elems, 2);
+    }
+
+    #[test]
+    fn f64_sum_surfaces_rank_failure() {
+        let results = run_group_with(3, Duration::from_secs(10), |c| {
+            if c.rank_in_group == 2 {
+                panic!("injected: rank 2 dies before the f64 collective");
+            }
+            let mut d = vec![1.0f64; 4];
+            c.allreduce_sum_f64(&mut d)
+        });
+        for r in &results[..2] {
+            assert_eq!(
+                r.as_ref().unwrap(),
+                &Err(CommError::RankFailure { rank: 2 }),
+                "peers must see the failed rank, not deadlock"
+            );
         }
     }
 

@@ -1,0 +1,325 @@
+//! Halo-exchange plan for graph-parallel (domain-decomposed) training.
+//!
+//! One huge structure is partitioned across ranks by atom: the
+//! [`crate::data::featurized::FeaturizedStore`] assigns every atom a
+//! segment 0..8 (contiguous chunks of the cell-sorted atom order), and rank
+//! `r` of a world `W in {1,2,4,8}` owns segments `r*8/W..(r+1)*8/W`. A rank
+//! computes EGNN layer work only for its owned atoms (node work) and for
+//! edges whose destination it owns (edge work), which is where the O(n*h^2)
+//! MLP cost lives. The graph topology itself is replicated — atomistic
+//! graphs are edge lists, not dense tensors, so replicating connectivity is
+//! cheap while the feature/activation math is what must be divided.
+//!
+//! Cross-owner edges need remote data in two places:
+//!
+//! * **forward**: the edge MLP of an edge owned by `owner(dst)` reads the
+//!   hidden state `h[src]` of a possibly remote atom. The *boundary atoms*
+//!   (atoms appearing as `src` of any cross-owner edge) are exchanged
+//!   before every EGNN block.
+//! * **backward**: the analytic backward of the same edge produces a
+//!   gradient contribution `d_x[ei][:h]` for `h[src]`, computed by
+//!   `owner(dst)` but folded by `owner(src)`. The *boundary edges* (the
+//!   cross-owner edges themselves) are exchanged once per block in reverse.
+//!
+//! Both exchanges ride the same slotted [`Comm::allreduce_sum_f64`]: the
+//! plan lays boundary slots out in a canonical order — atoms by
+//! `(owner_rank, global_atom_index)`, edges by global edge index — the slot
+//! owner deposits the value, everyone else deposits `0.0`, and the rank-
+//! ordered f64 fold returns the owner's exact bits to every rank
+//! (`0.0 + x == x`). The exchange is therefore bit-deterministic and
+//! world-shape independent, which the trainer's N-rank == single-rank
+//! parity guarantee rests on.
+//!
+//! The per-atom vector feature `v` never crosses ranks: it is accumulated
+//! and consumed strictly per destination atom, so only `h` is exchanged
+//! (the halo payload the ISSUE's `h`/`v` phrasing bounds from above).
+
+use crate::comm::collectives::{Comm, CommError};
+use crate::data::graph::Edge;
+
+/// Number of ownership segments every structure is split into. Fixed at 8
+/// (the largest supported world) so the segment partition — and therefore
+/// every per-segment fold order — is independent of the world size.
+pub const SEGMENTS: usize = 8;
+
+/// Slots of the per-step loss allreduce: per-segment partial sums of the
+/// energy prediction, the squared force error and the absolute force error
+/// (see `model::graphpar`).
+pub const LOSS_SLOTS: usize = 3 * SEGMENTS;
+
+/// Owning rank of a segment: rank `r` owns segments `r*8/W..(r+1)*8/W`.
+#[inline]
+pub fn segment_owner(segment: u8, world: usize) -> usize {
+    debug_assert!(matches!(world, 1 | 2 | 4 | 8), "graph-par world must divide 8");
+    segment as usize * world / SEGMENTS
+}
+
+/// Send/recv lists of one structure's domain decomposition, built once per
+/// structure and reused every step (the layout is a pure function of the
+/// segment assignment, the edge list and the world size).
+pub struct HaloPlan {
+    world: usize,
+    /// Owning rank per atom.
+    owners: Vec<usize>,
+    /// Boundary atoms (appear as `src` of a cross-owner edge), sorted by
+    /// `(owner_rank, global_atom_index)` — the canonical slot order.
+    boundary_atoms: Vec<u32>,
+    /// Cross-owner edges, ascending global edge index — the canonical slot
+    /// order of the reverse exchange.
+    boundary_edges: Vec<u32>,
+    /// `owner(dst)` per boundary edge (the rank that computes its row).
+    boundary_edge_owners: Vec<u8>,
+}
+
+impl HaloPlan {
+    /// Build the plan for one structure. `segments` comes from
+    /// [`crate::data::featurized::FeaturizedStore::segments`]; `edges` is
+    /// the structure's radius graph in its canonical `(src, dst)`-sorted
+    /// order.
+    pub fn build(segments: &[u8], edges: &[Edge], world: usize) -> HaloPlan {
+        assert!(matches!(world, 1 | 2 | 4 | 8), "graph-par world must be 1, 2, 4 or 8");
+        let owners: Vec<usize> =
+            segments.iter().map(|&s| segment_owner(s, world)).collect();
+        let mut is_boundary = vec![false; owners.len()];
+        let mut boundary_edges = Vec::new();
+        let mut boundary_edge_owners = Vec::new();
+        for (ei, e) in edges.iter().enumerate() {
+            let (s, d) = (e.src as usize, e.dst as usize);
+            if owners[s] != owners[d] {
+                is_boundary[s] = true;
+                boundary_edges.push(ei as u32);
+                boundary_edge_owners.push(owners[d] as u8);
+            }
+        }
+        let mut boundary_atoms: Vec<u32> = (0..owners.len() as u32)
+            .filter(|&a| is_boundary[a as usize])
+            .collect();
+        boundary_atoms.sort_by_key(|&a| (owners[a as usize], a));
+        HaloPlan { world, owners, boundary_atoms, boundary_edges, boundary_edge_owners }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Owning rank of `atom`.
+    #[inline]
+    pub fn owner(&self, atom: usize) -> usize {
+        self.owners[atom]
+    }
+
+    /// Whether `rank` owns `atom` (i.e. computes its node work).
+    #[inline]
+    pub fn owns(&self, rank: usize, atom: usize) -> bool {
+        self.owners[atom] == rank
+    }
+
+    /// Atoms whose hidden state crosses ranks each block (canonical order).
+    pub fn boundary_atoms(&self) -> &[u32] {
+        &self.boundary_atoms
+    }
+
+    /// Cross-owner edges (canonical order of the reverse exchange).
+    pub fn boundary_edges(&self) -> &[u32] {
+        &self.boundary_edges
+    }
+
+    /// Exchange `width` features per boundary atom from the node-major
+    /// array `data` (length `natoms * width`): each boundary atom's owner
+    /// deposits its row, every rank receives the owner's exact bits. No-op
+    /// (zero traffic) when the boundary is empty — in particular at
+    /// world 1.
+    pub fn exchange_node_rows(
+        &self,
+        comm: &Comm,
+        data: &mut [f64],
+        width: usize,
+    ) -> Result<(), CommError> {
+        if self.boundary_atoms.is_empty() {
+            return Ok(());
+        }
+        let rank = comm.rank_in_group;
+        let mut buf = vec![0.0f64; self.boundary_atoms.len() * width];
+        for (slot, &a) in self.boundary_atoms.iter().enumerate() {
+            if self.owners[a as usize] == rank {
+                buf[slot * width..][..width]
+                    .copy_from_slice(&data[a as usize * width..][..width]);
+            }
+        }
+        comm.allreduce_sum_f64(&mut buf)?;
+        for (slot, &a) in self.boundary_atoms.iter().enumerate() {
+            data[a as usize * width..][..width]
+                .copy_from_slice(&buf[slot * width..][..width]);
+        }
+        Ok(())
+    }
+
+    /// Exchange the first `width` columns of every boundary edge's row in
+    /// the edge-major array `data` (row stride `stride >= width`): the
+    /// edge's `owner(dst)` — the rank that computed the row — deposits,
+    /// every rank receives. Used by the reverse halo (the `d_x` src-part
+    /// gradient rows of the analytic backward).
+    pub fn exchange_edge_rows(
+        &self,
+        comm: &Comm,
+        data: &mut [f64],
+        stride: usize,
+        width: usize,
+    ) -> Result<(), CommError> {
+        debug_assert!(width <= stride);
+        if self.boundary_edges.is_empty() {
+            return Ok(());
+        }
+        let rank = comm.rank_in_group;
+        let mut buf = vec![0.0f64; self.boundary_edges.len() * width];
+        for (slot, &ei) in self.boundary_edges.iter().enumerate() {
+            if self.boundary_edge_owners[slot] as usize == rank {
+                buf[slot * width..][..width]
+                    .copy_from_slice(&data[ei as usize * stride..][..width]);
+            }
+        }
+        comm.allreduce_sum_f64(&mut buf)?;
+        for (slot, &ei) in self.boundary_edges.iter().enumerate() {
+            data[ei as usize * stride..][..width]
+                .copy_from_slice(&buf[slot * width..][..width]);
+        }
+        Ok(())
+    }
+
+    /// Exact f64 elements this plan moves through `Comm` for ONE training
+    /// step: `layers` forward node exchanges (boundary atoms x hidden),
+    /// `layers` reverse edge exchanges (boundary edges x hidden), the
+    /// [`LOSS_SLOTS`] loss fold and the `8 * param_len` segmented gradient
+    /// fold. Confronted against the measured [`Comm::stats`] delta by the
+    /// scalesim tests and the graph-parallel bench.
+    pub fn predicted_step_elems(&self, hidden: usize, layers: usize, param_len: usize) -> u64 {
+        let halo = (self.boundary_atoms.len() + self.boundary_edges.len())
+            * hidden
+            * layers;
+        (halo + LOSS_SLOTS + SEGMENTS * param_len) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::collectives::run_group;
+
+    /// Chain graph 0-1-2-3 (both directions) with hand-placed segments.
+    fn chain_edges() -> Vec<Edge> {
+        let mk = |src: u32, dst: u32| Edge {
+            src,
+            dst,
+            rel_hat: [1.0, 0.0, 0.0],
+            dist: 1.0,
+        };
+        // (src, dst)-sorted like radius_graph output.
+        vec![mk(0, 1), mk(1, 0), mk(1, 2), mk(2, 1), mk(2, 3), mk(3, 2)]
+    }
+
+    #[test]
+    fn segment_ownership_rule() {
+        for seg in 0..8u8 {
+            assert_eq!(segment_owner(seg, 1), 0);
+            assert_eq!(segment_owner(seg, 8), seg as usize);
+        }
+        assert_eq!(segment_owner(3, 2), 0);
+        assert_eq!(segment_owner(4, 2), 1);
+        assert_eq!(segment_owner(1, 4), 0);
+        assert_eq!(segment_owner(2, 4), 1);
+        assert_eq!(segment_owner(7, 4), 3);
+    }
+
+    #[test]
+    fn plan_finds_boundary_atoms_and_edges() {
+        // Atoms 0,1 in segment 0 (rank 0 at world 2), atoms 2,3 in segment
+        // 4 (rank 1): the cross edges are 1->2 and 2->1 (indices 2, 3).
+        let plan = HaloPlan::build(&[0, 0, 4, 4], &chain_edges(), 2);
+        assert_eq!(plan.boundary_atoms(), &[1, 2]);
+        assert_eq!(plan.boundary_edges(), &[2, 3]);
+        assert_eq!(plan.owner(1), 0);
+        assert_eq!(plan.owner(2), 1);
+        assert!(plan.owns(0, 0) && !plan.owns(1, 0));
+    }
+
+    #[test]
+    fn world_one_has_no_boundary() {
+        let plan = HaloPlan::build(&[0, 2, 5, 7], &chain_edges(), 1);
+        assert!(plan.boundary_atoms().is_empty());
+        assert!(plan.boundary_edges().is_empty());
+        let comms = crate::comm::Comm::group(1);
+        let mut data = vec![1.25f64; 4 * 3];
+        plan.exchange_node_rows(&comms[0], &mut data, 3).unwrap();
+        assert_eq!(comms[0].stats().elems, 0, "empty boundary moves nothing");
+    }
+
+    #[test]
+    fn node_exchange_delivers_owner_bits_to_everyone() {
+        let plan = std::sync::Arc::new(HaloPlan::build(&[0, 0, 4, 4], &chain_edges(), 2));
+        let width = 3;
+        let results = run_group(2, |c| {
+            let rank = c.rank_in_group;
+            // Owned rows hold rank-specific irrational-ish values; remote
+            // rows hold garbage that must be overwritten.
+            let mut data = vec![-99.0f64; 4 * width];
+            for a in 0..4 {
+                if plan.owns(rank, a) {
+                    for k in 0..width {
+                        data[a * width + k] = (rank * 100 + a * 10 + k) as f64 + 0.1;
+                    }
+                }
+            }
+            plan.exchange_node_rows(&c, &mut data, width).unwrap();
+            (data, c.stats())
+        });
+        let mut outs = Vec::new();
+        for r in results {
+            let (data, st) = r.unwrap();
+            // Boundary atom 1 owned by rank 0, atom 2 by rank 1.
+            assert_eq!(&data[width..2 * width], &[10.1, 11.1, 12.1]);
+            assert_eq!(&data[2 * width..3 * width], &[120.1, 121.1, 122.1]);
+            // Non-boundary remote rows stay untouched (never exchanged).
+            assert_eq!(st.elems, (2 * width) as u64);
+            outs.push(data);
+        }
+        // Bit-identical across ranks on the exchanged rows.
+        for k in width..3 * width {
+            assert_eq!(outs[0][k].to_bits(), outs[1][k].to_bits());
+        }
+    }
+
+    #[test]
+    fn edge_exchange_fills_src_part_from_dst_owner() {
+        let plan = std::sync::Arc::new(HaloPlan::build(&[0, 0, 4, 4], &chain_edges(), 2));
+        let (stride, width) = (5, 2);
+        let results = run_group(2, |c| {
+            let rank = c.rank_in_group;
+            let edges = chain_edges();
+            let mut data = vec![0.0f64; edges.len() * stride];
+            for (ei, e) in edges.iter().enumerate() {
+                if plan.owns(rank, e.dst as usize) {
+                    for k in 0..stride {
+                        data[ei * stride + k] = (rank * 100 + ei * 10 + k) as f64 + 0.5;
+                    }
+                }
+            }
+            plan.exchange_edge_rows(&c, &mut data, stride, width).unwrap();
+            data
+        });
+        for r in results {
+            let data = r.unwrap();
+            // Edge 2 (1->2): dst 2 owned by rank 1 -> rows from rank 1.
+            assert_eq!(&data[2 * stride..2 * stride + width], &[120.5, 121.5]);
+            // Edge 3 (2->1): dst 1 owned by rank 0 -> rows from rank 0.
+            assert_eq!(&data[3 * stride..3 * stride + width], &[30.5, 31.5]);
+        }
+    }
+
+    #[test]
+    fn predicted_elems_formula() {
+        let plan = HaloPlan::build(&[0, 0, 4, 4], &chain_edges(), 2);
+        // 2 boundary atoms + 2 boundary edges, hidden 16, 4 layers, 10
+        // param elems: (2+2)*16*4 + 24 + 80.
+        assert_eq!(plan.predicted_step_elems(16, 4, 10), 256 + 24 + 80);
+    }
+}

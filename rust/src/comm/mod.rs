@@ -3,10 +3,12 @@
 //! the paper's multi-task-parallel + DDP gradient synchronization.
 
 pub mod collectives;
+pub mod halo;
 pub mod mesh;
 pub mod overlap;
 
 pub use collectives::{run_group, run_group_with, Comm, CommError, CommStats, MemberGuard};
+pub use halo::{segment_owner, HaloPlan};
 pub use mesh::{
     build_mesh, build_mesh_with_timeout, build_ragged_mesh_with_timeout, MeshRank, MeshShape,
     RaggedMeshRank, RaggedShape,

@@ -123,11 +123,25 @@ pub struct ParallelConfig {
     /// (`Coverage::step_ms` EMA x planned batches). Changes which ranks
     /// average which head's gradients, hence the trajectory — fingerprinted.
     pub elastic: bool,
+    /// Graph parallelism for single-branch modes: instead of replicating
+    /// every structure on every rank (DDP), each structure's atoms are
+    /// domain-decomposed into 8 spatial segments and ranks own contiguous
+    /// segment ranges, exchanging boundary (halo) activations per EGNN
+    /// block (`comm::halo`, `model::graphpar`). Changes the data path —
+    /// every rank steps the SAME structure each step — hence the
+    /// trajectory: fingerprinted. Requires `replicas` in {1, 2, 4, 8}.
+    pub graph_par: bool,
 }
 
 impl Default for ParallelConfig {
     fn default() -> Self {
-        ParallelConfig { replicas: 1, overlap: false, bucket_elems: 8192, elastic: false }
+        ParallelConfig {
+            replicas: 1,
+            overlap: false,
+            bucket_elems: 8192,
+            elastic: false,
+            graph_par: false,
+        }
     }
 }
 
@@ -335,6 +349,20 @@ impl RunConfig {
             "parallel.bucket_elems must be >= 1 (got {})",
             self.parallel.bucket_elems
         );
+        if self.parallel.graph_par {
+            anyhow::ensure!(
+                matches!(self.parallel.replicas, 1 | 2 | 4 | 8),
+                "parallel.graph_par requires replicas in {{1, 2, 4, 8}} (the 8-segment \
+                 domain decomposition must split evenly across ranks); got {}",
+                self.parallel.replicas
+            );
+            anyhow::ensure!(
+                matches!(self.mode, TrainMode::Single(_) | TrainMode::BaselineAll),
+                "parallel.graph_par applies to the single-branch modes only \
+                 (a dataset name or baseline-all); got mode '{}'",
+                self.mode.name()
+            );
+        }
         anyhow::ensure!(self.data.per_dataset > 0, "per_dataset must be positive");
         anyhow::ensure!(
             self.data.train_frac + self.data.val_frac < 1.0 + 1e-12,
@@ -410,6 +438,7 @@ impl RunConfig {
                     ("overlap", Json::from(self.parallel.overlap)),
                     ("bucket_elems", Json::from(self.parallel.bucket_elems)),
                     ("elastic", Json::from(self.parallel.elastic)),
+                    ("graph_par", Json::from(self.parallel.graph_par)),
                 ]),
             ),
             (
@@ -533,6 +562,9 @@ impl RunConfig {
         if let Some(v) = p.get("elastic").as_bool() {
             cfg.parallel.elastic = v;
         }
+        if let Some(v) = p.get("graph_par").as_bool() {
+            cfg.parallel.graph_par = v;
+        }
         let c = j.get("checkpoint");
         if let Some(s) = c.get("dir").as_str() {
             cfg.checkpoint.dir = Some(s.to_string());
@@ -603,7 +635,7 @@ impl RunConfig {
         format!(
             "backend={};precision={};mode={};train_seed={};data_seed={};per_dataset={};max_atoms={};\
              cutoff={};train_frac={};val_frac={};lr={};weight_decay={};beta1={};\
-             beta2={};eps={};grad_clip={};patience={};replicas={};elastic={}",
+             beta2={};eps={};grad_clip={};patience={};replicas={};elastic={};graph_par={}",
             backend,
             precision,
             self.mode.name(),
@@ -623,6 +655,7 @@ impl RunConfig {
             self.train.patience,
             self.parallel.replicas,
             self.parallel.elastic,
+            self.parallel.graph_par,
         )
     }
 
@@ -652,6 +685,7 @@ mod tests {
         cfg.parallel.overlap = true;
         cfg.parallel.bucket_elems = 1024;
         cfg.parallel.elastic = true;
+        cfg.parallel.graph_par = true;
         cfg.checkpoint.dir = Some("ckpts".to_string());
         cfg.checkpoint.every = 3;
         cfg.serve.workers = 2;
@@ -671,6 +705,7 @@ mod tests {
         assert!(back.parallel.overlap);
         assert_eq!(back.parallel.bucket_elems, 1024);
         assert!(back.parallel.elastic);
+        assert!(back.parallel.graph_par);
         assert_eq!(back.checkpoint.dir.as_deref(), Some("ckpts"));
         assert_eq!(back.checkpoint.every, 3);
         assert!(back.checkpoint.resume.is_none());
@@ -714,6 +749,7 @@ mod tests {
             |c| c.backend = BackendKind::Native,
             |c| c.precision = Precision::MixedF32,
             |c| c.parallel.elastic = true,
+            |c| c.parallel.graph_par = true,
         ] {
             let mut c = RunConfig::default();
             mutate(&mut c);
@@ -781,6 +817,31 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.fault.spec = Some("bogus-fault@x=1".into());
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn graph_par_validation() {
+        // Accepted: single-branch mode with a world that divides 8 segments.
+        let mut cfg = RunConfig::default();
+        cfg.mode = TrainMode::Single(DatasetId::MpTrj);
+        cfg.parallel.graph_par = true;
+        for replicas in [1, 2, 4, 8] {
+            cfg.parallel.replicas = replicas;
+            assert!(cfg.validate().is_ok(), "replicas={replicas}");
+        }
+        // Rejected: worlds that cannot split 8 contiguous segments evenly.
+        for replicas in [3, 5, 6, 7, 16] {
+            cfg.parallel.replicas = replicas;
+            assert!(cfg.validate().is_err(), "replicas={replicas}");
+        }
+        // Rejected: multi-head modes (graph-par is a single-branch data path).
+        cfg.parallel.replicas = 2;
+        for mode in [TrainMode::MtlBase, TrainMode::MtlPar] {
+            cfg.mode = mode;
+            assert!(cfg.validate().is_err(), "mode={}", cfg.mode.name());
+        }
+        cfg.mode = TrainMode::BaselineAll;
+        assert!(cfg.validate().is_ok(), "baseline-all is single-branch");
     }
 
     #[test]

@@ -202,18 +202,26 @@ impl RunLog {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "epoch,steps,train_loss,mae_e,mae_f,val_loss,skipped,total_s,data_s,exec_s,\
-             comm_s,opt_s,step_ms\n",
+             comm_s,opt_s,step_ms,step_ms_unseeded\n",
         );
         for e in &self.epochs {
-            // The flat CSV gets the mean of the per-dataset step-time EMAs;
-            // the per-dataset breakdown lives in the JSON coverage array.
-            let step_ms = if e.coverage.is_empty() {
+            // The flat CSV gets the mean of the per-dataset step-time EMAs
+            // over SEEDED (> 0) entries only: an EMA is 0.0 until its first
+            // measurement, and in MTL-par a rank only ever observes its own
+            // head's datasets — folding those zeros in dragged the reported
+            // mean toward zero in early epochs. The count of still-unseeded
+            // datasets rides along so the flat row stays honest about how
+            // much of the fleet the mean covers; the per-dataset breakdown
+            // lives in the JSON coverage array.
+            let seeded = e.coverage.iter().filter(|c| c.step_ms > 0.0).count();
+            let step_ms = if seeded == 0 {
                 0.0
             } else {
-                e.coverage.iter().map(|c| c.step_ms).sum::<f64>() / e.coverage.len() as f64
+                e.coverage.iter().map(|c| c.step_ms).sum::<f64>() / seeded as f64
             };
+            let unseeded = e.coverage.len() - seeded;
             out.push_str(&format!(
-                "{},{},{:.6},{:.6},{:.6},{:.6},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4}\n",
+                "{},{},{:.6},{:.6},{:.6},{:.6},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{}\n",
                 e.epoch,
                 e.steps,
                 e.train_loss,
@@ -227,6 +235,7 @@ impl RunLog {
                 e.time_comm.as_secs_f64(),
                 e.time_opt.as_secs_f64(),
                 step_ms,
+                unseeded,
             ));
         }
         out
@@ -292,6 +301,47 @@ mod tests {
         assert_eq!(c.step_ms, 10.0);
         c.observe_step_ms(20.0);
         assert_eq!(c.step_ms, STEP_MS_EMA_ALPHA * 20.0 + (1.0 - STEP_MS_EMA_ALPHA) * 10.0);
+    }
+
+    #[test]
+    fn csv_step_ms_averages_seeded_emas_only() {
+        // One dataset has never been timed (EMA still 0.0); its zero must not
+        // drag the flat-CSV mean down, and the unseeded count must ride along
+        // in the final column.
+        let mut a = StepAccum::default();
+        a.record_step(1.0, 0.0, 0.0);
+        let e = a.into_epoch(0, Duration::ZERO, 1.0).with_coverage(vec![
+            Coverage { dataset: "unseeded".into(), planned: 4, used: 0, step_ms: 0.0 },
+            Coverage { dataset: "fast".into(), planned: 4, used: 4, step_ms: 1.25 },
+            Coverage { dataset: "slow".into(), planned: 4, used: 4, step_ms: 2.75 },
+        ]);
+        let mut log = RunLog::new("t");
+        log.push(e);
+        let csv = log.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.ends_with(",step_ms,step_ms_unseeded"));
+        let row = csv.lines().nth(1).unwrap();
+        let cols: Vec<&str> = row.split(',').collect();
+        assert_eq!(cols.len(), header.split(',').count());
+        // Mean of {1.25, 2.75}, not of {0.0, 1.25, 2.75}.
+        assert_eq!(cols[cols.len() - 2], "2.0000");
+        assert_eq!(cols[cols.len() - 1], "1");
+    }
+
+    #[test]
+    fn csv_step_ms_is_zero_when_nothing_is_seeded() {
+        let mut a = StepAccum::default();
+        a.record_step(1.0, 0.0, 0.0);
+        let e = a.into_epoch(0, Duration::ZERO, 1.0).with_coverage(vec![
+            Coverage { dataset: "a".into(), planned: 2, used: 0, step_ms: 0.0 },
+            Coverage { dataset: "b".into(), planned: 2, used: 0, step_ms: 0.0 },
+        ]);
+        let mut log = RunLog::new("t");
+        log.push(e);
+        let row = log.to_csv().lines().nth(1).unwrap().to_string();
+        let cols: Vec<&str> = row.split(',').collect();
+        assert_eq!(cols[cols.len() - 2], "0.0000");
+        assert_eq!(cols[cols.len() - 1], "2");
     }
 
     #[test]

@@ -53,6 +53,49 @@ pub fn plan_head_groups(costs: &[f64], world: usize) -> anyhow::Result<Vec<usize
     Ok(sizes)
 }
 
+/// [`plan_head_groups`] with a planned-steps fallback for unseeded heads.
+///
+/// The bare planner gives a head with no cost measurement yet (cost `<= 0`
+/// or non-finite) weight 0.0, so in a PARTIALLY measured epoch — e.g. right
+/// after a new head joins, or on resume when only some coverage rows carried
+/// an EMA — the unseeded head is starved down to its 1-rank floor no matter
+/// how much work it has planned. Here an unseeded head is instead imputed
+/// the cost `mean measured cost per planned step x its planned steps`
+/// (`planned[h]` is head `h`'s batch count for the coming epoch); when no
+/// head is measured at all, that degenerates to pure planned-steps
+/// weighting. Still a pure function of its arguments, so every rank replans
+/// to the same mesh.
+pub fn plan_head_groups_with_fallback(
+    costs: &[f64],
+    planned: &[usize],
+    world: usize,
+) -> anyhow::Result<Vec<usize>> {
+    anyhow::ensure!(
+        costs.len() == planned.len(),
+        "cost vector ({}) and planned-steps vector ({}) disagree on head count",
+        costs.len(),
+        planned.len()
+    );
+    let seeded: Vec<Option<f64>> = costs
+        .iter()
+        .map(|&c| if c.is_finite() && c > 0.0 { Some(c) } else { None })
+        .collect();
+    // Scale that makes an imputed cost commensurate with the measured ones:
+    // mean measured cost per planned step across the seeded heads.
+    let (cost_sum, steps_sum) = seeded
+        .iter()
+        .zip(planned)
+        .filter_map(|(c, &p)| c.map(|c| (c, p)))
+        .fold((0.0f64, 0usize), |(cs, ps), (c, p)| (cs + c, ps + p));
+    let per_step = if steps_sum > 0 { cost_sum / steps_sum as f64 } else { 1.0 };
+    let imputed: Vec<f64> = seeded
+        .iter()
+        .zip(planned)
+        .map(|(c, &p)| c.unwrap_or(per_step * p as f64))
+        .collect();
+    plan_head_groups(&imputed, world)
+}
+
 /// Early stopping on validation loss with a patience window.
 #[derive(Debug, Clone)]
 pub struct EarlyStopper {
@@ -237,6 +280,55 @@ mod tests {
     fn elastic_plan_without_measurements_splits_evenly() {
         assert_eq!(plan_head_groups(&[0.0, 0.0], 5).unwrap(), vec![3, 2]);
         assert_eq!(plan_head_groups(&[f64::NAN, -1.0, 0.0], 6).unwrap(), vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn fallback_plan_does_not_starve_unseeded_heads() {
+        // Regression: with the bare planner a partially measured cost vector
+        // zero-weights the unseeded head, pinning it to the 1-rank floor.
+        assert_eq!(plan_head_groups(&[f64::NAN, 4.0], 4).unwrap(), vec![1, 3]);
+        // The fallback imputes it the seeded heads' per-step cost (4.0 / 10
+        // per step x 10 planned = 4.0), so equal workloads split evenly.
+        assert_eq!(
+            plan_head_groups_with_fallback(&[f64::NAN, 4.0], &[10, 10], 4).unwrap(),
+            vec![2, 2]
+        );
+        // An unseeded head with 3x the planned steps wins ranks accordingly.
+        assert_eq!(
+            plan_head_groups_with_fallback(&[0.0, 2.0], &[30, 10], 6).unwrap(),
+            vec![4, 2]
+        );
+    }
+
+    #[test]
+    fn fallback_plan_weights_by_planned_steps_when_nothing_is_measured() {
+        // No measurements at all: pure planned-steps weighting...
+        assert_eq!(
+            plan_head_groups_with_fallback(&[0.0, 0.0], &[9, 1], 10).unwrap(),
+            vec![8, 2]
+        );
+        // ...which for equal workloads is the familiar even split.
+        assert_eq!(
+            plan_head_groups_with_fallback(&[0.0, 0.0], &[5, 5], 5).unwrap(),
+            vec![3, 2]
+        );
+        assert_eq!(
+            plan_head_groups_with_fallback(&[f64::NAN, -1.0, 0.0], &[4, 4, 4], 6).unwrap(),
+            vec![2, 2, 2]
+        );
+        // Degenerate all-zero planned steps: falls through to the bare
+        // planner's even split rather than dividing by zero.
+        assert_eq!(
+            plan_head_groups_with_fallback(&[0.0, 0.0], &[0, 0], 5).unwrap(),
+            vec![3, 2]
+        );
+        // Fully measured vectors are untouched by the fallback.
+        assert_eq!(
+            plan_head_groups_with_fallback(&[9.0, 1.0], &[1, 99], 10).unwrap(),
+            plan_head_groups(&[9.0, 1.0], 10).unwrap()
+        );
+        // Mismatched head counts are a hard error.
+        assert!(plan_head_groups_with_fallback(&[1.0], &[1, 2], 3).is_err());
     }
 
     #[test]

@@ -30,12 +30,14 @@ use crate::comm::{
 use crate::config::{RunConfig, TrainMode};
 use crate::fault::{self, FaultPlan};
 use crate::coordinator::metrics::{Coverage, EpochMetrics, RunLog, StepAccum};
-use crate::coordinator::scheduler::{plan_head_groups, EarlyStopper};
+use crate::coordinator::scheduler::{plan_head_groups_with_fallback, EarlyStopper};
 use crate::data::batch::{BatchBuilder, BatchPool, GraphBatch};
 use crate::data::featurized::FeaturizedStore;
 use crate::data::split::{Split, SplitSpec};
 use crate::data::structures::{AtomicStructure, DatasetId};
 use crate::data::DDStore;
+use crate::model::egnn::{BranchParams, EgnnDims, EncoderParams};
+use crate::model::graphpar::{self, GpPlan, GpStructure, GradLayout};
 use crate::model::optimizer::{AdamW, AdamWConfig, AdamWState};
 use crate::model::params::ParamSet;
 use crate::runtime::Engine;
@@ -231,7 +233,20 @@ impl Trainer {
     ) -> anyhow::Result<TrainOutcome> {
         validate_bundle(self.cfg.mode, data)?;
         let resume = self.load_resume(data)?;
+        let graph_par = self.cfg.parallel.graph_par;
         match self.cfg.mode {
+            TrainMode::Single(d) if graph_par => {
+                self.train_graph_par(data, vec![d], resume, plan)
+            }
+            TrainMode::BaselineAll if graph_par => {
+                let datasets = data.datasets();
+                self.train_graph_par(data, datasets, resume, plan)
+            }
+            _ if graph_par => anyhow::bail!(
+                "parallel.graph_par applies to the single-branch modes only \
+                 (a dataset name or baseline-all); got mode '{}'",
+                self.cfg.mode.name()
+            ),
             TrainMode::Single(d) => self.train_ddp(data, vec![d], resume, plan),
             TrainMode::BaselineAll => {
                 let datasets = data.datasets();
@@ -403,6 +418,75 @@ impl Trainer {
                 handles.push(scope.spawn(move || {
                     let guards = (mr.global.member_guard(), mr.head_group.member_guard());
                     let out = rank_loop_single_branch(
+                        engine, cfg, mr, store, val_store, &datasets, resume, plan,
+                    );
+                    if out.is_ok() {
+                        guards.0.disarm();
+                        guards.1.disarm();
+                    }
+                    out
+                }));
+            }
+            join_ranks(handles)
+        })?;
+
+        let name = self.cfg.mode.name();
+        finalize_shared(name, results, datasets)
+    }
+
+    // -- mode: graph-parallel single branch ----------------------------------
+
+    /// One branch, `replicas` ranks cooperating on every structure: each
+    /// structure's atoms are domain-decomposed into 8 spatial segments
+    /// (`FeaturizedStore::segments`), ranks own contiguous segment ranges
+    /// and exchange boundary (halo) activations per EGNN block instead of
+    /// replicating the whole graph. The per-structure loss and the folded
+    /// gradient are bit-identical on every world size in {1, 2, 4, 8}
+    /// (`model::graphpar`, proven in
+    /// `rust/tests/integration_graph_parallel.rs`), so the trained model is
+    /// bit-for-bit the single-rank model while the per-rank working set
+    /// shrinks with the world — the path to structures too large for one
+    /// rank's memory.
+    fn train_graph_par(
+        &self,
+        data: &DataBundle,
+        datasets: Vec<DatasetId>,
+        resume: Option<Arc<TrainCheckpoint>>,
+        plan: &Arc<FaultPlan>,
+    ) -> anyhow::Result<TrainOutcome> {
+        let replicas = self.cfg.parallel.replicas;
+        anyhow::ensure!(
+            matches!(replicas, 1 | 2 | 4 | 8),
+            "graph-parallel training requires replicas in {{1, 2, 4, 8}} (the 8-segment \
+             decomposition must split evenly across ranks); got {replicas}"
+        );
+        let shape = MeshShape { num_heads: 1, replicas };
+        let mesh = build_mesh_with_timeout(shape, self.cfg.fault.comm_timeout());
+        let engine = &self.engine;
+        let cfg = &self.cfg;
+        let plan = &**plan;
+
+        // Graph parallelism splits ATOMS across ranks, not structures:
+        // every rank steps the same structure, so the store is built with
+        // world 1 (no round-robin sample sharding).
+        let cutoff = engine.manifest.config.cutoff;
+        let mixed: Vec<AtomicStructure> =
+            datasets.iter().flat_map(|d| data.train[d].iter().cloned()).collect();
+        let store = FeaturizedStore::build(DDStore::new(mixed, 1), cutoff);
+        let val_mixed: Vec<AtomicStructure> =
+            datasets.iter().flat_map(|d| data.val[d].iter().cloned()).collect();
+        let val_store = FeaturizedStore::build(DDStore::new(val_mixed, 1), cutoff);
+
+        let results = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for mr in mesh {
+                let store = Arc::clone(&store);
+                let val_store = Arc::clone(&val_store);
+                let datasets = datasets.clone();
+                let resume = resume.clone();
+                handles.push(scope.spawn(move || {
+                    let guards = (mr.global.member_guard(), mr.head_group.member_guard());
+                    let out = rank_loop_graph_par(
                         engine, cfg, mr, store, val_store, &datasets, resume, plan,
                     );
                     if out.is_ok() {
@@ -606,14 +690,17 @@ impl Trainer {
         let mut final_sizes: Vec<usize> = vec![cfg.parallel.replicas; nh];
         for epoch in start_epoch..end_epoch {
             // Cost of head h ~ (per-step time EMA) x (dataset size): the
-            // serial work its sub-group must absorb this epoch. All-zero
-            // EMAs (first epoch, nothing measured yet) plan the even split
-            // — identical to the static mesh.
+            // serial work its sub-group must absorb this epoch. Heads with
+            // no EMA yet (first epoch, or a coverage row that never seeded)
+            // fall back to dataset-size weighting instead of being starved
+            // at the 1-rank floor by a zero weight.
             let costs: Vec<f64> = heads
                 .iter()
                 .map(|h| h.step_ms * data.train[&h.dataset].len() as f64)
                 .collect();
-            let sizes = plan_head_groups(&costs, world)?;
+            let planned: Vec<usize> =
+                heads.iter().map(|h| data.train[&h.dataset].len()).collect();
+            let sizes = plan_head_groups_with_fallback(&costs, &planned, world)?;
             let shape = RaggedShape::new(sizes)?;
             final_sizes = shape.head_sizes().to_vec();
             let mesh = build_ragged_mesh_with_timeout(&shape, cfg.fault.comm_timeout());
@@ -1434,6 +1521,226 @@ fn rank_loop_single_branch(
 
         assemble_full(&mut full, &encoder, &branch);
         let val_loss = distributed_val_loss(engine, &mr.global, &full, &val_batches)?;
+        let mut cov = Coverage {
+            dataset: stream_label.clone(),
+            planned,
+            used: steps,
+            step_ms: step_ms_ema,
+        };
+        cov.observe_step_ms(measured_step_ms(&acc, steps));
+        step_ms_ema = cov.step_ms;
+        log.push(acc.into_epoch(epoch, t_epoch.elapsed(), val_loss).with_coverage(vec![cov]));
+        let stop = stopper.update(val_loss);
+        if save_after_epoch(cfg, epoch, end_epoch, stop) && mr.rank == 0 {
+            let saved = save_checkpoint_rank0(
+                engine,
+                cfg,
+                epoch + 1,
+                stop,
+                &stopper,
+                TrainedModel {
+                    name: cfg.mode.name(),
+                    encoder: encoder.clone(),
+                    heads: Heads::Shared(branch.clone()),
+                },
+                opt_enc.export_state(),
+                OptHeads::Shared(opt_br.export_state()),
+                &log,
+                base_cg + mr.global.stats().elems,
+                0,
+            );
+            warn_save_failure(epoch + 1, saved);
+            inject_checkpoint_corruption(plan, cfg, epoch + 1);
+        }
+        if stop {
+            break;
+        }
+    }
+
+    let st = mr.global.stats();
+    Ok(RankResult {
+        rank: mr.rank,
+        head: mr.head,
+        replica: mr.replica,
+        encoder,
+        branches: vec![(branch_dataset, branch)],
+        log,
+        comm_global: base_cg + st.elems,
+        comm_head: 0,
+        comm_overlapped: st.overlapped_elems,
+    })
+}
+
+// -- graph-parallel single-branch loop ----------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn rank_loop_graph_par(
+    engine: &Engine,
+    cfg: &RunConfig,
+    mr: MeshRank,
+    store: Arc<FeaturizedStore>,
+    val_store: Arc<FeaturizedStore>,
+    datasets: &[DatasetId],
+    resume: Option<Arc<TrainCheckpoint>>,
+    plan: &FaultPlan,
+) -> anyhow::Result<RankResult> {
+    // Graph-parallel math is pure f64 end to end regardless of the
+    // configured precision: halo-exchanged activations feed the next
+    // block's matmuls directly, so a blocked-f32 variant would make
+    // results depend on the world size. `EgnnDims::from_config` pins the
+    // oracle precision (model::graphpar documents the invariant).
+    let dims = EgnnDims::from_config(&engine.manifest.config);
+    let layout = GradLayout::new(&dims);
+    let world = mr.shape.replicas;
+
+    let (encoder, mut branches) = init_rank_params(engine, cfg, &datasets[..1]);
+    let mut encoder = encoder;
+    let branch_dataset = branches[0].0;
+    let mut branch = branches.remove(0).1;
+    let mut opt_enc = AdamW::new(adamw_cfg(cfg), &encoder);
+    let mut opt_br = AdamW::new(adamw_cfg(cfg), &branch);
+    let mut log = RunLog::new(cfg.mode.name());
+    let mut stopper = restore_stopper(cfg, resume.as_deref());
+    // Full-set gradient image: `GradLayout::write_into` addresses every
+    // named leaf; the optimizers consume the encoder/branch subsets.
+    let mut g_full = ParamSet::zeros_like(&engine.manifest.params);
+    let mut enc_g = ParamSet::zeros_like(&engine.manifest.params).subset("encoder.");
+    let mut br_g = ParamSet::zeros_like(&engine.manifest.params).subset("branch.");
+    let mut zeros: Vec<f32> = Vec::new();
+    // Per-structure work plans, built on first touch and reused across
+    // epochs (the partition is a pure function of positions + world).
+    let mut plans: Vec<Option<GpPlan>> = (0..store.len()).map(|_| None).collect();
+    let mut val_plans: Vec<Option<GpPlan>> =
+        (0..val_store.len()).map(|_| None).collect();
+    let mut step_ms_ema = 0.0f64;
+
+    let (start_epoch, end_epoch) = epoch_range(cfg, resume.as_deref());
+    let mut base_cg = 0u64;
+    if let Some(ckpt) = &resume {
+        restore_params_broadcast(&mr.global, &mut encoder, &ckpt.model.encoder)?;
+        let saved_branch = match &ckpt.model.heads {
+            Heads::Shared(b) => b,
+            Heads::PerDataset(_) => anyhow::bail!(
+                "checkpoint is per-dataset but mode {} uses a shared head",
+                cfg.mode.name()
+            ),
+        };
+        restore_params_broadcast(&mr.global, &mut branch, saved_branch)?;
+        opt_enc.load_state(&ckpt.opt_encoder)?;
+        let saved_opt = match &ckpt.opt_heads {
+            OptHeads::Shared(s) => s,
+            OptHeads::PerDataset(_) => anyhow::bail!(
+                "checkpoint optimizer state is per-dataset but mode {} is shared",
+                cfg.mode.name()
+            ),
+        };
+        opt_br.load_state(saved_opt)?;
+        if mr.rank == 0 {
+            log = ckpt.log.clone();
+        }
+        base_cg = ckpt.comm_global;
+    }
+
+    let stream_label = if datasets.len() == 1 {
+        datasets[0].name()
+    } else {
+        format!("mixed({} tasks)", datasets.len())
+    };
+
+    for epoch in start_epoch..end_epoch {
+        let t_epoch = Instant::now();
+        let mut acc = StepAccum::default();
+
+        // Identical shuffle on every rank — NO rank sharding: the whole
+        // group cooperates on one structure per step instead of splitting
+        // the epoch's list (same epoch-seed recipe as the DDP planner).
+        let t0 = Instant::now();
+        let mut order: Vec<usize> = (0..store.len()).collect();
+        let mut rng = Rng::new(cfg.train.seed.wrapping_add(epoch as u64 * 7_777_777));
+        rng.shuffle(&mut order);
+        acc.data += t0.elapsed();
+        let planned = order.len();
+        let steps = agree_steps(&mr.global, order.len())?;
+
+        for step in 0..steps {
+            inject_rank_faults(plan, mr.rank, epoch, step);
+            let idx = order[step % order.len().max(1)];
+            let gp = plans[idx].get_or_insert_with(|| {
+                GpPlan::build(store.segments(idx), store.edges(idx), world)
+            });
+            let st = GpStructure {
+                species: store.species(idx),
+                edges: store.edges(idx),
+                y_energy_per_atom: store.energy_per_atom(idx),
+                y_forces: store.forces(idx),
+            };
+
+            let t1 = Instant::now();
+            let enc_p = EncoderParams::from_set(&dims, &encoder)?;
+            let br_p = BranchParams::from_set(&dims, &branch)?;
+            let (mut out, flat) =
+                graphpar::train_step(&dims, &enc_p, &br_p, &st, gp, &layout, &mr.global)?;
+            acc.exec += t1.elapsed();
+
+            // A non-finite injection is keyed per rank, but one shared
+            // structure per step means a poisoned batch poisons the whole
+            // group: agree with a 1-element sum so every rank skips (or
+            // none) — a per-rank skip would diverge the cooperatively
+            // computed update. Zero cost on the fault-free path.
+            if !plan.is_empty() {
+                let mine = plan.nonfinite_at(mr.rank, epoch, step);
+                let mut poisoned = [if mine { 1.0f64 } else { 0.0 }];
+                mr.global.allreduce_sum_f64(&mut poisoned)?;
+                if poisoned[0] != 0.0 {
+                    out.loss = f64::NAN;
+                }
+            }
+
+            let t2 = Instant::now();
+            if out.loss.is_finite() {
+                acc.record_step(out.loss, out.mae_e, out.mae_f);
+                // `flat` is already the group-folded gradient (bit-identical
+                // on every rank): no DDP allreduce follows, only the
+                // downcast into the optimizer's named leaves.
+                layout.write_into(&flat, &mut g_full)?;
+                enc_g.copy_matching_from(&g_full);
+                br_g.copy_matching_from(&g_full);
+            } else {
+                skip_batch(cfg, &mut acc, mr.rank, epoch, step)?;
+                zero_flat(&mut zeros, enc_g.total_params());
+                enc_g.unflatten_from(&zeros);
+                zero_flat(&mut zeros, br_g.total_params());
+                br_g.unflatten_from(&zeros);
+            }
+            acc.comm += t2.elapsed();
+
+            let t3 = Instant::now();
+            opt_enc.step(&mut encoder, &enc_g);
+            opt_br.step(&mut branch, &br_g);
+            acc.opt += t3.elapsed();
+        }
+
+        // Validation: mean per-structure loss over the shared val list.
+        // Each `eval_step` loss is already identical on every rank, so the
+        // mean is too — no extra reduction needed.
+        let enc_p = EncoderParams::from_set(&dims, &encoder)?;
+        let br_p = BranchParams::from_set(&dims, &branch)?;
+        let mut val_sum = 0.0;
+        for i in 0..val_store.len() {
+            let gp = val_plans[i].get_or_insert_with(|| {
+                GpPlan::build(val_store.segments(i), val_store.edges(i), world)
+            });
+            let st = GpStructure {
+                species: val_store.species(i),
+                edges: val_store.edges(i),
+                y_energy_per_atom: val_store.energy_per_atom(i),
+                y_forces: val_store.forces(i),
+            };
+            val_sum +=
+                graphpar::eval_step(&dims, &enc_p, &br_p, &st, gp, &mr.global)?.loss;
+        }
+        let val_loss = val_sum / val_store.len().max(1) as f64;
+
         let mut cov = Coverage {
             dataset: stream_label.clone(),
             planned,

@@ -40,6 +40,14 @@ pub struct FeaturizedStore {
     node_off: Vec<usize>,
     species: Vec<u8>,
     forces: Vec<[f64; 3]>,
+    /// Graph-parallel domain decomposition: segment 0..8 per atom (flat,
+    /// aligned with `species`). Atoms are sorted by spatial cell (the same
+    /// cutoff-sized cells `radius_graph` bins into) and split into 8
+    /// balanced contiguous chunks of that order, so segments are spatially
+    /// compact — boundary (halo) sets stay small — and a pure function of
+    /// positions. Rank `r` of a graph-parallel world `W in {1,2,4,8}` owns
+    /// segments `r*8/W..(r+1)*8/W` (see `comm::halo`).
+    segments: Vec<u8>,
     /// Labeled total energy per structure.
     energy: Vec<f64>,
     /// Planned-access locality counters — the in-process analogue of
@@ -92,12 +100,14 @@ impl FeaturizedStore {
         let mut energy = Vec::with_capacity(n);
         edge_off.push(0);
         node_off.push(0);
+        let mut segments = Vec::new();
         for (g, es) in per.into_iter().enumerate() {
             let s = store.peek(g).expect("global index in range");
             edges.extend(es);
             edge_off.push(edges.len());
             species.extend_from_slice(&s.species);
             forces.extend_from_slice(&s.forces);
+            segments.extend(compute_segments(&s.positions, cutoff));
             node_off.push(species.len());
             energy.push(s.energy);
         }
@@ -109,6 +119,7 @@ impl FeaturizedStore {
             node_off,
             species,
             forces,
+            segments,
             energy,
             local_gets: AtomicU64::new(0),
             remote_gets: AtomicU64::new(0),
@@ -151,6 +162,19 @@ impl FeaturizedStore {
 
     pub fn forces(&self, i: usize) -> &[[f64; 3]] {
         &self.forces[self.node_off[i]..self.node_off[i + 1]]
+    }
+
+    /// Graph-parallel segment (0..8) of every atom of structure `i`; see
+    /// the field docs for the ownership rule.
+    pub fn segments(&self, i: usize) -> &[u8] {
+        &self.segments[self.node_off[i]..self.node_off[i + 1]]
+    }
+
+    /// Labeled total energy of structure `i` (graph-parallel training fits
+    /// the per-structure energy directly rather than the batched per-atom
+    /// view).
+    pub fn energy(&self, i: usize) -> f64 {
+        self.energy[i]
     }
 
     /// Same value the seed path computed via
@@ -213,6 +237,41 @@ impl FeaturizedStore {
     }
 }
 
+/// Contiguous-by-sorted-cell partition of one structure's atoms into 8
+/// balanced segments: sort atoms by their `cutoff`-sized spatial cell
+/// (lexicographic, ties broken by atom index — fully deterministic), then
+/// chunk the sorted order evenly. Exposed for the graph-parallel property
+/// tests; production access goes through [`FeaturizedStore::segments`].
+pub fn compute_segments(positions: &[[f64; 3]], cutoff: f64) -> Vec<u8> {
+    let n = positions.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut lo = [f64::INFINITY; 3];
+    for p in positions {
+        for k in 0..3 {
+            lo[k] = lo[k].min(p[k]);
+        }
+    }
+    let cells: Vec<[i64; 3]> = positions
+        .iter()
+        .map(|p| {
+            [
+                ((p[0] - lo[0]) / cutoff) as i64,
+                ((p[1] - lo[1]) / cutoff) as i64,
+                ((p[2] - lo[2]) / cutoff) as i64,
+            ]
+        })
+        .collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| (cells[i], i));
+    let mut seg = vec![0u8; n];
+    for (pos, &atom) in order.iter().enumerate() {
+        seg[atom] = (pos * 8 / n) as u8;
+    }
+    seg
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,6 +299,30 @@ mod tests {
             assert_eq!(fs.forces(i), &s.forces[..], "sample {i}");
             assert_eq!(fs.energy_per_atom(i), s.energy_per_atom(), "sample {i}");
             assert_eq!(fs.edges(i), &radius_graph(s, 6.0)[..], "sample {i}");
+        }
+    }
+
+    #[test]
+    fn segments_are_balanced_deterministic_and_spatially_sorted() {
+        let ss = samples(6);
+        let store = DDStore::new(ss.clone(), 2);
+        let fs = FeaturizedStore::build(store, 6.0);
+        for (i, s) in ss.iter().enumerate() {
+            let seg = fs.segments(i);
+            assert_eq!(seg.len(), s.natoms());
+            assert!(seg.iter().all(|&x| x < 8), "segment ids are 0..8");
+            // Pure function of positions: rebuilding yields identical bits.
+            assert_eq!(seg, &compute_segments(&s.positions, 6.0)[..], "sample {i}");
+            // Balanced: chunk sizes of the sorted order differ by <= 1.
+            let mut counts = [0usize; 8];
+            for &x in seg {
+                counts[x as usize] += 1;
+            }
+            let n = s.natoms();
+            for (c, &count) in counts.iter().enumerate() {
+                let expect = (c + 1) * n / 8 - c * n / 8;
+                assert_eq!(count, expect, "sample {i} segment {c}");
+            }
         }
     }
 

@@ -16,6 +16,9 @@ pub fn build_crystal(
 ) -> (Vec<u8>, Vec<[f64; 3]>) {
     assert!(natoms >= 2);
     // Composition: 1-4 distinct elements, like typical MP entries.
+    // `Rng::int_range` is INCLUSIVE on both ends, so this draws the
+    // documented maximum of 4 (the `four_species_structures_occur` test
+    // below pins that the upper bound is reachable).
     let n_species = rng.int_range(1, 4.min(natoms));
     let chosen: Vec<usize> =
         rng.choose_k(palette.len(), n_species).into_iter().map(|i| palette[i]).collect();
@@ -95,6 +98,27 @@ mod tests {
             uniq.dedup();
             assert!(uniq.len() <= 4);
         }
+    }
+
+    #[test]
+    fn four_species_structures_occur() {
+        // Regression guard for the composition draw's upper bound:
+        // `int_range(1, 4)` is inclusive, so over a seeded sweep the full
+        // 4-species compositions must actually appear (they would not if
+        // the bound were exclusive).
+        let mut rng = Rng::new(0xC0FFEE);
+        let mut max_seen = 0usize;
+        for _ in 0..200 {
+            let (s, _) = build_crystal(&mut rng, &mptrj_palette(), 24);
+            let mut uniq: Vec<u8> = s.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            max_seen = max_seen.max(uniq.len());
+        }
+        assert_eq!(
+            max_seen, 4,
+            "4-species structures must occur over a seeded sweep (saw max {max_seen})"
+        );
     }
 
     #[test]

@@ -1,0 +1,158 @@
+//! Bulk-structure builders for the large-structure task family (Supercell,
+//! AmorphousBox): thousands-of-atom periodic-style slabs that do not fit a
+//! single rank's batch budget and exist to exercise graph-parallel
+//! (domain-decomposed) training. Unlike the cluster builder in
+//! `inorganic.rs`, these fill a full cubic grid instead of carving a compact
+//! cluster, so the atom count is exact and the geometry has genuine bulk
+//! interior (most atoms see no surface within the model cutoff).
+
+use crate::data::potential::pair_params;
+use crate::util::rng::Rng;
+
+/// Rock-salt style supercell: `reps^3` sites on a cubic grid, two palette
+/// species interleaved by site parity, spacing set to the species pair's
+/// Morse equilibrium distance (slightly randomized) so the lattice is
+/// near-equilibrium without any relaxation pass. A small positional jitter
+/// breaks exact symmetry so forces are non-trivial.
+pub fn build_supercell(
+    rng: &mut Rng,
+    palette: &[usize],
+    reps: usize,
+) -> (Vec<u8>, Vec<[f64; 3]>) {
+    assert!(reps >= 2, "supercell needs reps >= 2");
+    let (za, zb) = if palette.len() >= 2 {
+        let picks = rng.choose_k(palette.len(), 2);
+        (palette[picks[0]], palette[picks[1]])
+    } else {
+        (palette[0], palette[0])
+    };
+    let spacing = pair_params(za, zb).r0 * rng.range(0.98, 1.04);
+    let n = reps * reps * reps;
+    let mut species: Vec<u8> = Vec::with_capacity(n);
+    let mut positions: Vec<[f64; 3]> = Vec::with_capacity(n);
+    let j = 0.02 * spacing;
+    for ix in 0..reps {
+        for iy in 0..reps {
+            for iz in 0..reps {
+                let z = if (ix + iy + iz) % 2 == 0 { za } else { zb };
+                species.push(z as u8);
+                positions.push([
+                    spacing * ix as f64 + rng.range(-j, j),
+                    spacing * iy as f64 + rng.range(-j, j),
+                    spacing * iz as f64 + rng.range(-j, j),
+                ]);
+            }
+        }
+    }
+    (species, positions)
+}
+
+/// Amorphous (glass-like) box: `natoms` atoms of random palette species on
+/// a strongly jittered cubic grid. The jitter bound (10% of the grid
+/// spacing per coordinate) keeps every pair separated by at least
+/// ~0.65 x spacing, so the structure is disordered but overlap-free by
+/// construction — no rejection sampling, which matters at this size.
+pub fn build_amorphous_box(
+    rng: &mut Rng,
+    palette: &[usize],
+    natoms: usize,
+) -> (Vec<u8>, Vec<[f64; 3]>) {
+    assert!(natoms >= 2, "amorphous box needs >= 2 atoms");
+    let r0_mean =
+        palette.iter().map(|&z| pair_params(z, z).r0).sum::<f64>() / palette.len() as f64;
+    // Slightly open lattice (1.12 x mean like-pair equilibrium): amorphous
+    // packings are less dense than crystals and the slack absorbs jitter.
+    let spacing = r0_mean * 1.12 * rng.range(0.98, 1.04);
+    let side = (natoms as f64).cbrt().ceil() as usize;
+    let mut species: Vec<u8> = Vec::with_capacity(natoms);
+    let mut positions: Vec<[f64; 3]> = Vec::with_capacity(natoms);
+    let j = 0.10 * spacing;
+    'fill: for ix in 0..side {
+        for iy in 0..side {
+            for iz in 0..side {
+                if species.len() == natoms {
+                    break 'fill;
+                }
+                species.push(palette[rng.below(palette.len())] as u8);
+                positions.push([
+                    spacing * ix as f64 + rng.range(-j, j),
+                    spacing * iy as f64 + rng.range(-j, j),
+                    spacing * iz as f64 + rng.range(-j, j),
+                ]);
+            }
+        }
+    }
+    (species, positions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PALETTE: [usize; 5] = [12, 8, 11, 17, 22];
+
+    fn min_pair_dist(positions: &[[f64; 3]]) -> f64 {
+        let mut best = f64::INFINITY;
+        for i in 0..positions.len() {
+            for k in (i + 1)..positions.len() {
+                let d2 = (positions[i][0] - positions[k][0]).powi(2)
+                    + (positions[i][1] - positions[k][1]).powi(2)
+                    + (positions[i][2] - positions[k][2]).powi(2);
+                best = best.min(d2.sqrt());
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn supercell_exact_count_and_two_species() {
+        let mut rng = Rng::new(1);
+        let (s, p) = build_supercell(&mut rng, &PALETTE, 5);
+        assert_eq!(s.len(), 125);
+        assert_eq!(p.len(), 125);
+        let mut kinds: Vec<u8> = s.clone();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert!(kinds.len() <= 2, "rock-salt motif uses at most two species");
+        assert!(kinds.iter().all(|&z| PALETTE.contains(&(z as usize))));
+    }
+
+    #[test]
+    fn supercell_no_overlaps() {
+        let mut rng = Rng::new(2);
+        let (_, p) = build_supercell(&mut rng, &PALETTE, 4);
+        assert!(min_pair_dist(&p) > 1.0, "lattice sites must stay separated");
+    }
+
+    #[test]
+    fn amorphous_exact_count_and_no_overlaps() {
+        let mut rng = Rng::new(3);
+        let (s, p) = build_amorphous_box(&mut rng, &PALETTE, 200);
+        assert_eq!(s.len(), 200);
+        assert_eq!(p.len(), 200);
+        assert!(min_pair_dist(&p) > 1.0, "jitter bound must prevent overlaps");
+        assert!(s.iter().all(|&z| PALETTE.contains(&(z as usize))));
+    }
+
+    #[test]
+    fn builders_are_deterministic() {
+        let (sa, pa) = build_supercell(&mut Rng::new(7), &PALETTE, 4);
+        let (sb, pb) = build_supercell(&mut Rng::new(7), &PALETTE, 4);
+        assert_eq!(sa, sb);
+        assert_eq!(pa, pb);
+        let (sa, pa) = build_amorphous_box(&mut Rng::new(8), &PALETTE, 100);
+        let (sb, pb) = build_amorphous_box(&mut Rng::new(8), &PALETTE, 100);
+        assert_eq!(sa, sb);
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn amorphous_mixes_species() {
+        let mut rng = Rng::new(9);
+        let (s, _) = build_amorphous_box(&mut rng, &PALETTE, 300);
+        let mut kinds: Vec<u8> = s;
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert!(kinds.len() >= 3, "300 draws over 5 species must mix");
+    }
+}

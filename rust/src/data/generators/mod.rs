@@ -14,6 +14,7 @@
 //! behaviour the paper studies.
 
 pub mod inorganic;
+pub mod large;
 pub mod organic;
 
 use std::sync::Arc;
@@ -131,6 +132,15 @@ impl DatasetGenerator {
             StructureKind::Crystal { min_atoms } => {
                 let natoms = self.rng.int_range(min_atoms, self.config.max_atoms);
                 inorganic::build_crystal(&mut self.rng, &self.spec.palette, natoms)
+            }
+            // Bulk kinds deliberately ignore `config.max_atoms`: the whole
+            // point is structures too large for one rank's batch budget
+            // (graph-parallel training partitions them across ranks).
+            StructureKind::Supercell { reps } => {
+                large::build_supercell(&mut self.rng, &self.spec.palette, reps)
+            }
+            StructureKind::AmorphousBox { natoms } => {
+                large::build_amorphous_box(&mut self.rng, &self.spec.palette, natoms)
             }
         };
 
@@ -308,6 +318,61 @@ mod tests {
             }
             assert_eq!(s, a.sample(), "custom-task generation must be deterministic");
         }
+    }
+
+    #[test]
+    fn bulk_kinds_generate_valid_structures_beyond_the_batch_cap() {
+        use crate::tasks::{
+            FidelityProfile, GeneratorProfile, StructureKind, TaskRegistry, TaskSpec,
+        };
+        let fid = FidelityProfile {
+            seed_tag: 77,
+            shift_sigma: 0.25,
+            scale_jitter: 0.01,
+            force_scale_jitter: 0.005,
+            energy_noise: 0.002,
+            force_noise: 0.003,
+            shift_offset: 0.0,
+        };
+        let prof = |kind| GeneratorProfile {
+            kind,
+            relax_steps: 0,
+            relax_step_size: 0.05,
+            perturb_factor: 0.2,
+        };
+        let reg = TaskRegistry::global();
+        let sc = reg
+            .register(TaskSpec::new(
+                "GenTest-Supercell",
+                vec![12, 8, 11, 17],
+                prof(StructureKind::Supercell { reps: 4 }),
+                fid.clone(),
+            ))
+            .unwrap();
+        let ab = reg
+            .register(TaskSpec::new(
+                "GenTest-Amorphous",
+                vec![12, 8, 11, 17],
+                prof(StructureKind::AmorphousBox { natoms: 100 }),
+                fid,
+            ))
+            .unwrap();
+        let cfg = GeneratorConfig::default();
+        let mut g = DatasetGenerator::new(sc, 13, cfg.clone());
+        let s = g.sample();
+        s.validate().unwrap();
+        assert_eq!(s.natoms(), 64, "supercell size is exact (reps^3)");
+        assert!(s.natoms() > cfg.max_atoms, "bulk kinds ignore the batch cap");
+        // Bulk near-equilibrium lattices pass the curation filters as-is.
+        assert!(s.energy_per_atom().abs() <= cfg.max_energy_per_atom);
+        let mut g = DatasetGenerator::new(ab, 13, cfg.clone());
+        let s = g.sample();
+        s.validate().unwrap();
+        assert_eq!(s.natoms(), 100, "amorphous box size is exact");
+        // Determinism across generator instances, like every other kind.
+        let mut a = DatasetGenerator::new(ab, 17, cfg.clone());
+        let mut b = DatasetGenerator::new(ab, 17, cfg);
+        assert_eq!(a.sample(), b.sample());
     }
 
     #[test]

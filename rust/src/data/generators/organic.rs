@@ -47,6 +47,9 @@ pub fn build_molecule_heavy_limited(
     max_atoms: usize,
 ) -> (Vec<u8>, Vec<[f64; 3]>) {
     let heavy_palette: Vec<usize> = palette.iter().copied().filter(|&z| z != 1).collect();
+    // Audited alongside inorganic.rs's composition draw: `Rng::int_range`
+    // is INCLUSIVE on both ends, so `max_heavy` heavy atoms do occur (the
+    // `heavy_limit_is_reachable` test below pins it).
     let n_heavy = rng.int_range(1, max_heavy).max(1);
     let n_h = rng.int_range(1, (2 * n_heavy + 2).min(max_atoms.saturating_sub(n_heavy)).max(1));
 
@@ -180,6 +183,25 @@ mod tests {
         for i in 1..n {
             assert_eq!(find(&mut parent, i), root, "atom {i} disconnected");
         }
+    }
+
+    #[test]
+    fn heavy_limit_is_reachable() {
+        // The inclusive `int_range(1, max_heavy)` draw must actually reach
+        // the documented maximum over a seeded sweep (regression guard for
+        // an exclusive-upper-bound off-by-one).
+        let mut rng = Rng::new(0xBEEF);
+        let mut max_seen = 0usize;
+        for _ in 0..100 {
+            let (s, _) = build_molecule_heavy_limited(
+                &mut rng,
+                &crate::elements::qm7x_palette(),
+                7,
+                24,
+            );
+            max_seen = max_seen.max(s.iter().filter(|&&z| z != 1).count());
+        }
+        assert_eq!(max_seen, 7, "7-heavy molecules must occur (saw max {max_seen})");
     }
 
     #[test]

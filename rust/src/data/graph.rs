@@ -42,6 +42,15 @@ pub fn radius_graph_call_count() -> u64 {
 /// dominates there — see BENCH_hot_paths.json).
 const DENSE_CUTOVER: usize = 48;
 
+/// Whether a structure of `n` atoms takes the cell-grid path rather than
+/// the dense O(n^2) scan. Exposed so the graph-parallel suite can assert
+/// that the large-structure generators land strictly above the cutover —
+/// a bulk structure silently falling back to the dense scan would hide a
+/// quadratic blowup in the halo-plan build.
+pub fn uses_grid_path(n: usize) -> bool {
+    n > DENSE_CUTOVER
+}
+
 /// Radius graph over a structure. Edges are emitted in both directions.
 pub fn radius_graph(structure: &AtomicStructure, cutoff: f64) -> Vec<Edge> {
     radius_graph_positions(&structure.positions, cutoff)

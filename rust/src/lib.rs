@@ -267,10 +267,12 @@
 //!   `parallel.elastic` on, each head's per-step wall time is tracked as an
 //!   EMA (`Coverage::step_ms`, persisted in checkpoints and the metrics
 //!   JSON), and at every epoch boundary
-//!   [`coordinator::scheduler::plan_head_groups`] re-splits the world
-//!   proportionally to measured cost x steps (largest-remainder, min one
-//!   rank per head). The mesh is static *within* an epoch, so determinism
-//!   is per-plan; resume re-seeds the EMAs from the checkpointed coverage.
+//!   [`coordinator::scheduler::plan_head_groups_with_fallback`] re-splits
+//!   the world proportionally to measured cost x steps (largest-remainder,
+//!   min one rank per head); heads with no measurement yet fall back to
+//!   planned-steps weighting instead of starving at the one-rank floor. The
+//!   mesh is static *within* an epoch, so determinism is per-plan; resume
+//!   re-seeds the EMAs from the checkpointed coverage.
 //!
 //! Knobs: `Session::builder().overlap(true).bucket_elems(n).elastic(true)`,
 //! CLI `--overlap/--bucket-elems/--elastic`, env `HYDRA_MTP_OVERLAP`.
@@ -285,6 +287,51 @@
 //! --bench overlap` records sync-vs-overlapped step times side by side in
 //! `BENCH_overlap.json` (see EXPERIMENTS.md §Overlap — quote only
 //! CI-artifact numbers).
+//!
+//! ## Graph parallelism
+//!
+//! Replica and MTL parallelism shard *structures* across ranks; a bulk
+//! structure too large to fit one rank's step budget needs the opposite
+//! decomposition — shard the **atoms of one structure**. With
+//! `parallel.graph_par` on (CLI `--graph-par`, fingerprinted: it changes
+//! the trajectory versus the single-rank schedule only in world topology,
+//! never in values), the trainer domain-decomposes every structure:
+//!
+//! - **Fixed spatial partition** — [`comm::HaloPlan`] splits the cell into
+//!   a constant number of slabs (8), *independent of world size*; rank `r`
+//!   of `W` owns a contiguous slab range ([`comm::segment_owner`]). The
+//!   partition being world-invariant is what makes 1/2/4/8-rank runs
+//!   **bit-identical**: every sum is assembled from the same 8 segment
+//!   contributions in the same order, whoever computes them.
+//! - **Halo exchange** — each EGNN layer's forward exchanges boundary-atom
+//!   node features ([`comm::halo`]), and the backward pass reverse-flows
+//!   boundary-edge position gradients; the per-step collective volume has a
+//!   closed form, `HaloPlan::predicted_step_elems`, asserted **equal to the
+//!   measured [`Comm::stats`](comm::Comm::stats) element count on every
+//!   rank at every world** (no traffic is unaccounted). [`scalesim`]
+//!   mirrors the same closed form (`graph_par_step_elems`,
+//!   `graph_par_step_comm_time`) to predict halo cost at machine scale.
+//! - **Checkpointed recompute** — the graph-par engine
+//!   ([`model::graphpar`]) stores only per-layer block *inputs* and
+//!   recomputes activations in the backward sweep, bounding memory by one
+//!   layer's working set — the standard trade for structures whose
+//!   activation footprint exceeds a rank.
+//! - **f64 only** — graph-par pins the compute to the f64 oracle path
+//!   regardless of the `precision` knob; the knob is provably ignored
+//!   (MixedF32 and F64 engines produce bit-identical graph-par runs in
+//!   `rust/tests/integration_graph_parallel.rs`).
+//!
+//! The large-structure generators ride in through the task registry:
+//! [`tasks::register_large_presets`] adds `Supercell` (1000-atom repeated
+//! crystal) and `AmorphousBox` (1200-atom disordered box) presets, so
+//! `hydra-mtp train --mode supercell --graph-par --replicas 4` trains a
+//! huge-structure task end to end. Kill-at-k resume parity and typed
+//! mid-halo [`CommError::RankFailure`](comm::CommError) surfacing carry
+//! over from the other modes, and the partition + exchange provably
+//! reconstructs single-rank `radius_graph` neighborhoods (property test,
+//! same suite). `cargo bench --bench graph_parallel` records per-step time
+//! and halo bytes versus atom count in `BENCH_graph_parallel.json` (see
+//! EXPERIMENTS.md §Graph parallel — quote only CI-artifact numbers).
 //!
 //! ## Fault tolerance
 //!

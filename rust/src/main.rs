@@ -74,7 +74,9 @@ COMMANDS
            [--checkpoint-dir DIR] [--checkpoint-every N] [--resume PATH|latest]
            [--faults SPEC] [--max-restarts N]
            [--overlap [BOOL]] [--bucket-elems N] [--elastic [BOOL]]
+           [--graph-par [BOOL]]
            MODE: ANI1x|QM7-X|Transition1x|MPTrj|Alexandria|baseline-all|mtl-base|mtl-par
+                 |Supercell|AmorphousBox (large-structure presets, any custom task)
            --backend native (the default resolution on artifact-less machines)
            trains with the pure-rust EGNN engine: no artifacts, no PJRT;
            --backend pjrt requires `make artifacts` + `--features pjrt`
@@ -96,6 +98,11 @@ COMMANDS
            HYDRA_MTP_OVERLAP); --bucket-elems caps a bucket's f32 payload;
            --elastic (mtl-par only) re-sizes each head's sub-group at epoch
            boundaries from its dataset's measured per-step cost EMA
+           --graph-par (single-branch modes, --replicas 1|2|4|8) domain-
+           decomposes each structure's atoms across ranks with per-layer halo
+           exchange instead of replicating graphs; results are bit-identical
+           to --replicas 1 at every world size (pure-f64 math). The path for
+           structures too large for one rank, e.g. --mode supercell
   table1   [--epochs N] [--per-dataset N] [--replicas M] [--backend B] [--csv FILE]
   table2   (same flags; same training runs, force metric)
   fig1     [--per-dataset N] [--seed S] [--max-atoms A]
@@ -205,10 +212,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "overlap",
         "bucket-elems",
         "elastic",
+        "graph-par",
     ];
     allowed.extend(CONFIG_FLAGS);
     args.ensure_known("train", &allowed)?;
 
+    // The large-structure presets (Supercell / AmorphousBox) are runtime
+    // registrations, so `--mode supercell` must see them before parse.
+    hydra_mtp::tasks::register_large_presets()?;
     let mut cfg = base_config(args)?;
     cfg.mode = TrainMode::parse(&args.str("mode", "mtl-par"))?;
     if let Some(dir) = args.opt_str("checkpoint-dir") {
@@ -236,6 +247,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     if args.flags.contains_key("elastic") {
         cfg.parallel.elastic = args.bool("elastic");
+    }
+    if args.flags.contains_key("graph-par") {
+        cfg.parallel.graph_par = args.bool("graph-par");
     }
     cfg.validate()?;
     println!("loading engine ({} backend requested) ...", cfg.backend.name());

@@ -633,12 +633,10 @@ fn build_edge_input(x: &mut [f64], hbuf: &[f64], rbf: &[f64], b: &Batch64, dims:
     }
 }
 
-/// Shared-encoder forward pass with cached intermediates.
-pub fn encoder_forward(dims: &EgnnDims, enc: &EncoderParams, b: &Batch64) -> EncoderState {
-    let (n, e, h, r) = (dims.n, dims.e, dims.h, dims.r);
-    let p = dims.precision;
-
-    // Gaussian RBF under the cosine cutoff envelope, masked.
+/// Masked Gaussian RBF (cosine cutoff envelope) + degree normalization
+/// `1 / (1 + in-degree)` — the shared encoder prologue.
+fn rbf_and_inv_deg(dims: &EgnnDims, b: &Batch64) -> (Vec<f64>, Vec<f64>) {
+    let (n, e, r) = (dims.n, dims.e, dims.r);
     let mut rbf = vec![0.0; e * r];
     let gamma = (r as f64 / dims.cutoff).powi(2);
     for ei in 0..e {
@@ -654,15 +652,17 @@ pub fn encoder_forward(dims: &EgnnDims, enc: &EncoderParams, b: &Batch64) -> Enc
             rbf[ei * r + ri] = (-gamma * dd * dd).exp() * env * b.emask[ei];
         }
     }
-
-    // Degree normalization (1 / (1 + in-degree)).
     let mut deg = vec![0.0; n];
     for ei in 0..e {
         deg[b.dst[ei]] += b.emask[ei];
     }
-    let inv_deg: Vec<f64> = deg.iter().map(|&x| 1.0 / (1.0 + x)).collect();
+    let inv_deg = deg.iter().map(|&x| 1.0 / (1.0 + x)).collect();
+    (rbf, inv_deg)
+}
 
-    // h0 = embed[species] * node_mask; v starts at zero.
+/// h0 = embed[species] * node_mask.
+fn embed_h0(dims: &EgnnDims, enc: &EncoderParams, b: &Batch64) -> Vec<f64> {
+    let (n, h) = (dims.n, dims.h);
     let mut hbuf = vec![0.0; n * h];
     for nd in 0..n {
         let nm = b.nmask[nd];
@@ -674,75 +674,139 @@ pub fn encoder_forward(dims: &EgnnDims, enc: &EncoderParams, b: &Batch64) -> Enc
             hbuf[nd * h + j] = enc.embed[sp * h + j] * nm;
         }
     }
-    let mut v = vec![0.0; n * 3];
+    hbuf
+}
 
+/// One message-passing block from its input features `h_in`: writes the
+/// layer output into `h_out`, accumulates the equivariant update into `v`,
+/// and returns the full activation cache. The single code path behind both
+/// encoder forwards — [`encoder_forward`] retains every returned cache,
+/// [`encoder_forward_checkpoint`] keeps only `h_in` and recomputes the rest
+/// during [`backward_checkpoint`] — so the two are bit-identical by
+/// construction.
+fn layer_forward(
+    dims: &EgnnDims,
+    lp: &LayerParams,
+    b: &Batch64,
+    rbf: &[f64],
+    inv_deg: &[f64],
+    h_in: Vec<f64>,
+    h_out: &mut [f64],
+    v: &mut [f64],
+) -> LayerCache {
+    let (n, e, h) = (dims.n, dims.e, dims.h);
+    let p = dims.precision;
     let kx = dims.kx();
+    let mut x = vec![0.0; e * kx];
+    build_edge_input(&mut x, &h_in, rbf, b, dims);
+
+    let mut ae1 = vec![0.0; e * h];
+    let u = lin_silu(p, &x, &lp.ew1, &lp.eb1, &mut ae1, e, kx, h);
+    let mut ae2 = vec![0.0; e * h];
+    let mut m = lin_silu(p, &u, &lp.ew2, &lp.eb2, &mut ae2, e, h, h);
+    for ei in 0..e {
+        if b.emask[ei] == 0.0 {
+            m[ei * h..(ei + 1) * h].fill(0.0);
+        }
+    }
+    let mut gate = vec![0.0; e];
+    for ei in 0..e {
+        gate[ei] = tanh_p(p, dot_p(p, &m[ei * h..(ei + 1) * h], &lp.wg) + lp.bg);
+    }
+
+    // Scatter aggregation (serial, edge order: deterministic).
+    let mut hagg = vec![0.0; n * h];
+    for ei in 0..e {
+        if b.emask[ei] == 0.0 {
+            continue;
+        }
+        let nd = b.dst[ei];
+        for j in 0..h {
+            hagg[nd * h + j] += m[ei * h + j];
+        }
+    }
+    for ei in 0..e {
+        let em = b.emask[ei];
+        if em == 0.0 {
+            continue;
+        }
+        let nd = b.dst[ei];
+        let sc = gate[ei] * em * inv_deg[nd] * b.nmask[nd];
+        for k in 0..3 {
+            v[nd * 3 + k] += b.rel_hat[ei * 3 + k] * sc;
+        }
+    }
+
+    // Residual node update on [h | hagg * inv_deg].
+    let mut nin = vec![0.0; n * 2 * h];
+    for nd in 0..n {
+        nin[nd * 2 * h..nd * 2 * h + h].copy_from_slice(&h_in[nd * h..(nd + 1) * h]);
+        let id = inv_deg[nd];
+        for j in 0..h {
+            nin[nd * 2 * h + h + j] = hagg[nd * h + j] * id;
+        }
+    }
+    let mut an1 = vec![0.0; n * h];
+    let s1 = lin_silu(p, &nin, &lp.nw1, &lp.nb1, &mut an1, n, 2 * h, h);
+    let mut upd = vec![0.0; n * h];
+    lin(p, &s1, &lp.nw2, &lp.nb2, &mut upd, n, h, h);
+    for nd in 0..n {
+        let nm = b.nmask[nd];
+        for j in 0..h {
+            h_out[nd * h + j] = (h_in[nd * h + j] + upd[nd * h + j]) * nm;
+        }
+    }
+    LayerCache { h_in, ae1, u, ae2, m, gate, hagg, an1, s1 }
+}
+
+/// Shared-encoder forward pass with cached intermediates.
+pub fn encoder_forward(dims: &EgnnDims, enc: &EncoderParams, b: &Batch64) -> EncoderState {
+    let (rbf, inv_deg) = rbf_and_inv_deg(dims, b);
+    let mut hbuf = embed_h0(dims, enc, b);
+    let mut v = vec![0.0; dims.n * 3];
     let mut layers = Vec::with_capacity(dims.l);
     for lp in &enc.layers {
         let h_in = hbuf.clone();
-        let mut x = vec![0.0; e * kx];
-        build_edge_input(&mut x, &h_in, &rbf, b, dims);
-
-        let mut ae1 = vec![0.0; e * h];
-        let u = lin_silu(p, &x, &lp.ew1, &lp.eb1, &mut ae1, e, kx, h);
-        let mut ae2 = vec![0.0; e * h];
-        let mut m = lin_silu(p, &u, &lp.ew2, &lp.eb2, &mut ae2, e, h, h);
-        for ei in 0..e {
-            if b.emask[ei] == 0.0 {
-                m[ei * h..(ei + 1) * h].fill(0.0);
-            }
-        }
-        let mut gate = vec![0.0; e];
-        for ei in 0..e {
-            gate[ei] = tanh_p(p, dot_p(p, &m[ei * h..(ei + 1) * h], &lp.wg) + lp.bg);
-        }
-
-        // Scatter aggregation (serial, edge order: deterministic).
-        let mut hagg = vec![0.0; n * h];
-        for ei in 0..e {
-            if b.emask[ei] == 0.0 {
-                continue;
-            }
-            let nd = b.dst[ei];
-            for j in 0..h {
-                hagg[nd * h + j] += m[ei * h + j];
-            }
-        }
-        for ei in 0..e {
-            let em = b.emask[ei];
-            if em == 0.0 {
-                continue;
-            }
-            let nd = b.dst[ei];
-            let sc = gate[ei] * em * inv_deg[nd] * b.nmask[nd];
-            for k in 0..3 {
-                v[nd * 3 + k] += b.rel_hat[ei * 3 + k] * sc;
-            }
-        }
-
-        // Residual node update on [h | hagg * inv_deg].
-        let mut nin = vec![0.0; n * 2 * h];
-        for nd in 0..n {
-            nin[nd * 2 * h..nd * 2 * h + h].copy_from_slice(&h_in[nd * h..(nd + 1) * h]);
-            let id = inv_deg[nd];
-            for j in 0..h {
-                nin[nd * 2 * h + h + j] = hagg[nd * h + j] * id;
-            }
-        }
-        let mut an1 = vec![0.0; n * h];
-        let s1 = lin_silu(p, &nin, &lp.nw1, &lp.nb1, &mut an1, n, 2 * h, h);
-        let mut upd = vec![0.0; n * h];
-        lin(p, &s1, &lp.nw2, &lp.nb2, &mut upd, n, h, h);
-        for nd in 0..n {
-            let nm = b.nmask[nd];
-            for j in 0..h {
-                hbuf[nd * h + j] = (h_in[nd * h + j] + upd[nd * h + j]) * nm;
-            }
-        }
-
-        layers.push(LayerCache { h_in, ae1, u, ae2, m, gate, hagg, an1, s1 });
+        layers.push(layer_forward(dims, lp, b, &rbf, &inv_deg, h_in, &mut hbuf, &mut v));
     }
     EncoderState { rbf, inv_deg, layers, h: hbuf, v }
+}
+
+/// Gradient-checkpointed encoder forward state: only each block's INPUT
+/// features survive the forward pass. The eight other per-layer activation
+/// buffers (`[E,H]` x 5 + `[N,H]` x 3 in [`LayerCache`]) are recomputed one
+/// layer at a time inside [`backward_checkpoint`] — for the edge-heavy
+/// graphs of the graph-parallel path that cuts retained forward state by
+/// roughly the edge/node ratio, at the cost of one extra block forward per
+/// layer in the backward sweep.
+pub struct CheckpointedEncoder {
+    rbf: Vec<f64>,
+    inv_deg: Vec<f64>,
+    h_ins: Vec<Vec<f64>>,
+    /// Final invariant node features [N,H].
+    pub h: Vec<f64>,
+    /// Final equivariant channel [N,3].
+    pub v: Vec<f64>,
+}
+
+/// As [`encoder_forward`] — same helper, same operation order, bit-identical
+/// `h` and `v` — but retaining only the per-layer inputs (see
+/// [`CheckpointedEncoder`]).
+pub fn encoder_forward_checkpoint(
+    dims: &EgnnDims,
+    enc: &EncoderParams,
+    b: &Batch64,
+) -> CheckpointedEncoder {
+    let (rbf, inv_deg) = rbf_and_inv_deg(dims, b);
+    let mut hbuf = embed_h0(dims, enc, b);
+    let mut v = vec![0.0; dims.n * 3];
+    let mut h_ins = Vec::with_capacity(dims.l);
+    for lp in &enc.layers {
+        let h_in = hbuf.clone();
+        let lc = layer_forward(dims, lp, b, &rbf, &inv_deg, h_in, &mut hbuf, &mut v);
+        h_ins.push(lc.h_in);
+    }
+    CheckpointedEncoder { rbf, inv_deg, h_ins, h: hbuf, v }
 }
 
 /// Branch forward pass (trunk MLP -> energy-per-atom + force sub-heads).
@@ -752,10 +816,23 @@ pub fn branch_forward(
     es: &EncoderState,
     b: &Batch64,
 ) -> BranchState {
+    branch_forward_h(dims, br, &es.h, &es.v, b)
+}
+
+/// [`branch_forward`] from raw encoder outputs — the entry point for the
+/// checkpointed path, whose [`CheckpointedEncoder`] is not an
+/// [`EncoderState`]. Identical computation.
+pub fn branch_forward_h(
+    dims: &EgnnDims,
+    br: &BranchParams,
+    enc_h: &[f64],
+    enc_v: &[f64],
+    b: &Batch64,
+) -> BranchState {
     let (n, g, h, d) = (dims.n, dims.g, dims.h, dims.d);
     let p = dims.precision;
     let mut at1 = vec![0.0; n * d];
-    let z1 = lin_silu(p, &es.h, &br.tw1, &br.tb1, &mut at1, n, h, d);
+    let z1 = lin_silu(p, enc_h, &br.tw1, &br.tb1, &mut at1, n, h, d);
     let mut at2 = vec![0.0; n * d];
     let z2 = lin_silu(p, &z1, &br.tw2, &br.tb2, &mut at2, n, d, d);
     let mut at3 = vec![0.0; n * d];
@@ -784,7 +861,7 @@ pub fn branch_forward(
         let sc = fr[nd] * b.nmask[nd];
         if sc != 0.0 {
             for k in 0..3 {
-                forces[nd * 3 + k] = sc * es.v[nd * 3 + k];
+                forces[nd * 3 + k] = sc * enc_v[nd * 3 + k];
             }
         }
     }
@@ -1171,7 +1248,98 @@ pub fn backward_observed(
         &BranchParams,
     ) -> anyhow::Result<()>,
 ) -> anyhow::Result<(EncoderParams, BranchParams)> {
-    let (n, e, g, h, d) = (dims.n, dims.e, dims.g, dims.h, dims.d);
+    let mut gb = BranchParams::zeros(dims);
+    let (mut d_h, d_v) = branch_backward(dims, br, &es.h, &es.v, bs, b, &mut gb);
+
+    // --- encoder backward (reverse layer order) ---
+    // v accumulates additively across layers, so its cotangent is the same
+    // `d_v` at every layer; each layer only extracts its own vagg term.
+    let mut ge = EncoderParams::zeros(dims);
+    on_block(GradBlock::Branch, &ge, &gb)?;
+    for (li, lc) in es.layers.iter().enumerate().rev() {
+        d_h = layer_backward(
+            dims,
+            &enc.layers[li],
+            lc,
+            b,
+            &es.rbf,
+            &es.inv_deg,
+            &d_h,
+            &d_v,
+            &mut ge.layers[li],
+        );
+        on_block(GradBlock::Layer(li), &ge, &gb)?;
+    }
+    embed_backward(dims, b, &d_h, &mut ge);
+    on_block(GradBlock::Embed, &ge, &gb)?;
+    Ok((ge, gb))
+}
+
+/// As [`backward`], but from a gradient-checkpointed forward
+/// ([`encoder_forward_checkpoint`]): each layer's activation cache is
+/// recomputed from its saved input immediately before that layer's
+/// backward, in reverse layer order, so at most ONE [`LayerCache`] is live
+/// at a time. Both sweeps go through the shared
+/// [`layer_forward`]/[`layer_backward`] helpers — identical operations in
+/// identical order — so the gradients are bit-identical to [`backward`]'s
+/// at either precision (pinned by `checkpointed_backward_is_bit_identical`
+/// below).
+pub fn backward_checkpoint(
+    dims: &EgnnDims,
+    enc: &EncoderParams,
+    br: &BranchParams,
+    ck: &CheckpointedEncoder,
+    bs: &BranchState,
+    b: &Batch64,
+) -> (EncoderParams, BranchParams) {
+    let mut gb = BranchParams::zeros(dims);
+    let (mut d_h, d_v) = branch_backward(dims, br, &ck.h, &ck.v, bs, b, &mut gb);
+    let mut ge = EncoderParams::zeros(dims);
+    let mut scratch_h = vec![0.0; dims.n * dims.h];
+    // The recompute's equivariant updates are discarded (the final `v` is
+    // already in `ck.v`; the backward only needs the layer cache).
+    let mut scratch_v = vec![0.0; dims.n * 3];
+    for li in (0..dims.l).rev() {
+        let lp = &enc.layers[li];
+        let lc = layer_forward(
+            dims,
+            lp,
+            b,
+            &ck.rbf,
+            &ck.inv_deg,
+            ck.h_ins[li].clone(),
+            &mut scratch_h,
+            &mut scratch_v,
+        );
+        d_h = layer_backward(
+            dims,
+            lp,
+            &lc,
+            b,
+            &ck.rbf,
+            &ck.inv_deg,
+            &d_h,
+            &d_v,
+            &mut ge.layers[li],
+        );
+    }
+    embed_backward(dims, b, &d_h, &mut ge);
+    (ge, gb)
+}
+
+/// Loss seeds + branch backward: accumulates every `branch.*` gradient into
+/// `gb` and returns the cotangents flowing into the encoder
+/// (`d_h [N,H]`, `d_v [N,3]`).
+fn branch_backward(
+    dims: &EgnnDims,
+    br: &BranchParams,
+    enc_h: &[f64],
+    enc_v: &[f64],
+    bs: &BranchState,
+    b: &Batch64,
+    gb: &mut BranchParams,
+) -> (Vec<f64>, Vec<f64>) {
+    let (n, g, h, d) = (dims.n, dims.g, dims.h, dims.d);
     let p = dims.precision;
 
     // Loss seeds (always f64: full-precision accumulation of the loss and
@@ -1196,8 +1364,6 @@ pub fn backward_observed(
         }
     }
 
-    // --- branch backward ---
-    let mut gb = BranchParams::zeros(dims);
     let mut d_er = vec![0.0; n];
     let mut d_fr = vec![0.0; n];
     let mut d_v = vec![0.0; n * 3];
@@ -1207,7 +1373,7 @@ pub fn backward_observed(
         d_er[nd] = d_e_pa[gq] * b.inv_atoms[gq] * nm;
         let mut s = 0.0;
         for k in 0..3 {
-            s += d_forces[nd * 3 + k] * es.v[nd * 3 + k];
+            s += d_forces[nd * 3 + k] * enc_v[nd * 3 + k];
             d_v[nd * 3 + k] = d_forces[nd * 3 + k] * bs.fr[nd] * nm;
         }
         d_fr[nd] = s * nm;
@@ -1239,136 +1405,149 @@ pub fn backward_observed(
     let mut d_z1 = vec![0.0; n * d];
     gx_into(p, &d_at2, &br.tw2, &mut d_z1, n, d, d);
     let d_at1 = mul_dsilu_p(p, &d_z1, &bs.at1);
-    gw_into(p, &es.h, &d_at1, &mut gb.tw1, n, h, d);
+    gw_into(p, enc_h, &d_at1, &mut gb.tw1, n, h, d);
     colsum_into(&d_at1, &mut gb.tb1, n, d);
     let mut d_h = vec![0.0; n * h];
     gx_into(p, &d_at1, &br.tw1, &mut d_h, n, h, d);
+    (d_h, d_v)
+}
 
-    // --- encoder backward (reverse layer order) ---
-    // v accumulates additively across layers, so its cotangent is the same
-    // `d_v` at every layer; each layer only extracts its own vagg term.
-    let mut ge = EncoderParams::zeros(dims);
-    on_block(GradBlock::Branch, &ge, &gb)?;
+/// One message-passing block's backward from its activation cache:
+/// accumulates the layer's gradients into `gl` and returns the cotangent
+/// of the layer INPUT (`d_h_in [N,H]`). Shared by the cached and the
+/// checkpointed sweeps.
+#[allow(clippy::too_many_arguments)]
+fn layer_backward(
+    dims: &EgnnDims,
+    lp: &LayerParams,
+    lc: &LayerCache,
+    b: &Batch64,
+    rbf: &[f64],
+    inv_deg: &[f64],
+    d_h: &[f64],
+    d_v: &[f64],
+    gl: &mut LayerParams,
+) -> Vec<f64> {
+    let (n, e, h) = (dims.n, dims.e, dims.h);
+    let p = dims.precision;
     let kx = dims.kx();
-    for (li, lc) in es.layers.iter().enumerate().rev() {
-        let lp = &enc.layers[li];
-        let gl = &mut ge.layers[li];
 
-        // h_out = (h_in + upd) * node_mask
-        let mut d_pre = vec![0.0; n * h];
-        for nd in 0..n {
-            let nm = b.nmask[nd];
-            if nm == 0.0 {
-                continue;
-            }
-            for j in 0..h {
-                d_pre[nd * h + j] = d_h[nd * h + j] * nm;
-            }
+    // h_out = (h_in + upd) * node_mask
+    let mut d_pre = vec![0.0; n * h];
+    for nd in 0..n {
+        let nm = b.nmask[nd];
+        if nm == 0.0 {
+            continue;
         }
-        let mut d_h_in = d_pre.clone();
+        for j in 0..h {
+            d_pre[nd * h + j] = d_h[nd * h + j] * nm;
+        }
+    }
+    let mut d_h_in = d_pre.clone();
 
-        // upd = silu(an1) @ nw2 + nb2
-        gw_into(p, &lc.s1, &d_pre, &mut gl.nw2, n, h, h);
-        colsum_into(&d_pre, &mut gl.nb2, n, h);
-        let mut d_s1 = vec![0.0; n * h];
-        gx_into(p, &d_pre, &lp.nw2, &mut d_s1, n, h, h);
-        let d_an1 = mul_dsilu_p(p, &d_s1, &lc.an1);
+    // upd = silu(an1) @ nw2 + nb2
+    gw_into(p, &lc.s1, &d_pre, &mut gl.nw2, n, h, h);
+    colsum_into(&d_pre, &mut gl.nb2, n, h);
+    let mut d_s1 = vec![0.0; n * h];
+    gx_into(p, &d_pre, &lp.nw2, &mut d_s1, n, h, h);
+    let d_an1 = mul_dsilu_p(p, &d_s1, &lc.an1);
 
-        // an1 = [h_in | hagg * inv_deg] @ nw1 + nb1
-        let mut nin = vec![0.0; n * 2 * h];
-        for nd in 0..n {
-            nin[nd * 2 * h..nd * 2 * h + h].copy_from_slice(&lc.h_in[nd * h..(nd + 1) * h]);
-            let id = es.inv_deg[nd];
-            for j in 0..h {
-                nin[nd * 2 * h + h + j] = lc.hagg[nd * h + j] * id;
-            }
+    // an1 = [h_in | hagg * inv_deg] @ nw1 + nb1
+    let mut nin = vec![0.0; n * 2 * h];
+    for nd in 0..n {
+        nin[nd * 2 * h..nd * 2 * h + h].copy_from_slice(&lc.h_in[nd * h..(nd + 1) * h]);
+        let id = inv_deg[nd];
+        for j in 0..h {
+            nin[nd * 2 * h + h + j] = lc.hagg[nd * h + j] * id;
         }
-        gw_into(p, &nin, &d_an1, &mut gl.nw1, n, 2 * h, h);
-        colsum_into(&d_an1, &mut gl.nb1, n, h);
-        let mut d_nin = vec![0.0; n * 2 * h];
-        gx_into(p, &d_an1, &lp.nw1, &mut d_nin, n, 2 * h, h);
-        let mut d_hagg = vec![0.0; n * h];
-        for nd in 0..n {
-            let id = es.inv_deg[nd];
-            for j in 0..h {
-                d_h_in[nd * h + j] += d_nin[nd * 2 * h + j];
-                d_hagg[nd * h + j] = d_nin[nd * 2 * h + h + j] * id;
-            }
+    }
+    gw_into(p, &nin, &d_an1, &mut gl.nw1, n, 2 * h, h);
+    colsum_into(&d_an1, &mut gl.nb1, n, h);
+    let mut d_nin = vec![0.0; n * 2 * h];
+    gx_into(p, &d_an1, &lp.nw1, &mut d_nin, n, 2 * h, h);
+    let mut d_hagg = vec![0.0; n * h];
+    for nd in 0..n {
+        let id = inv_deg[nd];
+        for j in 0..h {
+            d_h_in[nd * h + j] += d_nin[nd * 2 * h + j];
+            d_hagg[nd * h + j] = d_nin[nd * 2 * h + h + j] * id;
         }
-
-        // Gather the scatter-sums back to edges: message + gate paths.
-        let mut d_m = vec![0.0; e * h];
-        let mut d_ag = vec![0.0; e];
-        for ei in 0..e {
-            let em = b.emask[ei];
-            if em == 0.0 {
-                continue;
-            }
-            let nd = b.dst[ei];
-            for j in 0..h {
-                d_m[ei * h + j] = d_hagg[nd * h + j] * em;
-            }
-            let sc = es.inv_deg[nd] * b.nmask[nd] * em;
-            let mut dg = 0.0;
-            for k in 0..3 {
-                dg += d_v[nd * 3 + k] * b.rel_hat[ei * 3 + k];
-            }
-            let t = lc.gate[ei];
-            d_ag[ei] = dg * sc * (1.0 - t * t);
-        }
-        for ei in 0..e {
-            let da = d_ag[ei];
-            gl.bg += da;
-            if da == 0.0 {
-                continue;
-            }
-            let mrow = &lc.m[ei * h..(ei + 1) * h];
-            let drow = &mut d_m[ei * h..(ei + 1) * h];
-            for j in 0..h {
-                gl.wg[j] += mrow[j] * da;
-                drow[j] += da * lp.wg[j];
-            }
-        }
-
-        // m = silu(ae2) * emask
-        let mut d_ae2 = vec![0.0; e * h];
-        for ei in 0..e {
-            let em = b.emask[ei];
-            if em == 0.0 {
-                continue;
-            }
-            for j in 0..h {
-                d_ae2[ei * h + j] = d_m[ei * h + j] * em * dsilu_p(p, lc.ae2[ei * h + j]);
-            }
-        }
-        gw_into(p, &lc.u, &d_ae2, &mut gl.ew2, e, h, h);
-        colsum_into(&d_ae2, &mut gl.eb2, e, h);
-        let mut d_u = vec![0.0; e * h];
-        gx_into(p, &d_ae2, &lp.ew2, &mut d_u, e, h, h);
-        let d_ae1 = mul_dsilu_p(p, &d_u, &lc.ae1);
-
-        // ae1 = [h_src | h_dst | rbf] @ ew1 + eb1
-        let mut x = vec![0.0; e * kx];
-        build_edge_input(&mut x, &lc.h_in, &es.rbf, b, dims);
-        gw_into(p, &x, &d_ae1, &mut gl.ew1, e, kx, h);
-        colsum_into(&d_ae1, &mut gl.eb1, e, h);
-        let mut d_x = vec![0.0; e * kx];
-        gx_into(p, &d_ae1, &lp.ew1, &mut d_x, e, kx, h);
-        for ei in 0..e {
-            if b.emask[ei] == 0.0 {
-                continue; // padded-edge rows of d_x are exactly zero
-            }
-            let (si, di) = (b.src[ei], b.dst[ei]);
-            for j in 0..h {
-                d_h_in[si * h + j] += d_x[ei * kx + j];
-                d_h_in[di * h + j] += d_x[ei * kx + h + j];
-            }
-        }
-        d_h = d_h_in;
-        on_block(GradBlock::Layer(li), &ge, &gb)?;
     }
 
-    // h0 = embed[species] * node_mask
+    // Gather the scatter-sums back to edges: message + gate paths.
+    let mut d_m = vec![0.0; e * h];
+    let mut d_ag = vec![0.0; e];
+    for ei in 0..e {
+        let em = b.emask[ei];
+        if em == 0.0 {
+            continue;
+        }
+        let nd = b.dst[ei];
+        for j in 0..h {
+            d_m[ei * h + j] = d_hagg[nd * h + j] * em;
+        }
+        let sc = inv_deg[nd] * b.nmask[nd] * em;
+        let mut dg = 0.0;
+        for k in 0..3 {
+            dg += d_v[nd * 3 + k] * b.rel_hat[ei * 3 + k];
+        }
+        let t = lc.gate[ei];
+        d_ag[ei] = dg * sc * (1.0 - t * t);
+    }
+    for ei in 0..e {
+        let da = d_ag[ei];
+        gl.bg += da;
+        if da == 0.0 {
+            continue;
+        }
+        let mrow = &lc.m[ei * h..(ei + 1) * h];
+        let drow = &mut d_m[ei * h..(ei + 1) * h];
+        for j in 0..h {
+            gl.wg[j] += mrow[j] * da;
+            drow[j] += da * lp.wg[j];
+        }
+    }
+
+    // m = silu(ae2) * emask
+    let mut d_ae2 = vec![0.0; e * h];
+    for ei in 0..e {
+        let em = b.emask[ei];
+        if em == 0.0 {
+            continue;
+        }
+        for j in 0..h {
+            d_ae2[ei * h + j] = d_m[ei * h + j] * em * dsilu_p(p, lc.ae2[ei * h + j]);
+        }
+    }
+    gw_into(p, &lc.u, &d_ae2, &mut gl.ew2, e, h, h);
+    colsum_into(&d_ae2, &mut gl.eb2, e, h);
+    let mut d_u = vec![0.0; e * h];
+    gx_into(p, &d_ae2, &lp.ew2, &mut d_u, e, h, h);
+    let d_ae1 = mul_dsilu_p(p, &d_u, &lc.ae1);
+
+    // ae1 = [h_src | h_dst | rbf] @ ew1 + eb1
+    let mut x = vec![0.0; e * kx];
+    build_edge_input(&mut x, &lc.h_in, rbf, b, dims);
+    gw_into(p, &x, &d_ae1, &mut gl.ew1, e, kx, h);
+    colsum_into(&d_ae1, &mut gl.eb1, e, h);
+    let mut d_x = vec![0.0; e * kx];
+    gx_into(p, &d_ae1, &lp.ew1, &mut d_x, e, kx, h);
+    for ei in 0..e {
+        if b.emask[ei] == 0.0 {
+            continue; // padded-edge rows of d_x are exactly zero
+        }
+        let (si, di) = (b.src[ei], b.dst[ei]);
+        for j in 0..h {
+            d_h_in[si * h + j] += d_x[ei * kx + j];
+            d_h_in[di * h + j] += d_x[ei * kx + h + j];
+        }
+    }
+    d_h_in
+}
+
+/// h0 = embed[species] * node_mask.
+fn embed_backward(dims: &EgnnDims, b: &Batch64, d_h: &[f64], ge: &mut EncoderParams) {
+    let (n, h) = (dims.n, dims.h);
     for nd in 0..n {
         let nm = b.nmask[nd];
         if nm == 0.0 {
@@ -1379,9 +1558,6 @@ pub fn backward_observed(
             ge.embed[sp * h + j] += d_h[nd * h + j] * nm;
         }
     }
-
-    on_block(GradBlock::Embed, &ge, &gb)?;
-    Ok((ge, gb))
 }
 
 #[cfg(test)]
@@ -1413,6 +1589,62 @@ mod tests {
                 (tanh_p(Precision::MixedF32, a) - a.tanh()).abs() < 1e-6,
                 "tanh({a})"
             );
+        }
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn checkpointed_backward_is_bit_identical() {
+        use crate::data::batch::BatchPool;
+        use crate::data::graph::radius_graph_positions;
+        use crate::model::params::ParamSet;
+        use crate::runtime::manifest::{Manifest, ManifestConfig};
+
+        let m = Manifest::synthesize(ManifestConfig::default_native());
+        let params = ParamSet::init(&m.params, 5);
+        let mut rng = crate::util::rng::Rng::new(7);
+        let (species, positions) =
+            crate::data::generators::inorganic::build_crystal(&mut rng, &[12, 8, 11], 20);
+        let (energy, forces) =
+            crate::data::potential::energy_and_forces(&species, &positions);
+        let edges = radius_graph_positions(&positions, m.config.cutoff);
+        let mut pool = BatchPool::new();
+        let mut batch = pool.acquire(m.config.batch_dims());
+        batch.push_raw(&species, &forces, energy / species.len() as f64, &edges).unwrap();
+
+        for precision in [Precision::F64, Precision::MixedF32] {
+            let dims = EgnnDims::from_config_with(&m.config, precision);
+            let enc = EncoderParams::from_set(&dims, &params).unwrap();
+            let br = BranchParams::from_set(&dims, &params).unwrap();
+            let b = Batch64::new(&dims, &batch).unwrap();
+
+            let es = encoder_forward(&dims, &enc, &b);
+            let bs = branch_forward(&dims, &br, &es, &b);
+            let (ge, gb) = backward(&dims, &enc, &br, &es, &bs, &b);
+
+            let ck = encoder_forward_checkpoint(&dims, &enc, &b);
+            assert_eq!(bits(&es.h), bits(&ck.h), "{precision:?} forward h");
+            assert_eq!(bits(&es.v), bits(&ck.v), "{precision:?} forward v");
+            let bs2 = branch_forward_h(&dims, &br, &ck.h, &ck.v, &b);
+            assert_eq!(bits(&bs.forces), bits(&bs2.forces), "{precision:?} forces");
+            assert_eq!(bits(&bs.e_pa), bits(&bs2.e_pa), "{precision:?} e_pa");
+            let (ge2, gb2) = backward_checkpoint(&dims, &enc, &br, &ck, &bs2, &b);
+            assert_eq!(bits(&ge.embed), bits(&ge2.embed), "{precision:?} d embed");
+            for li in 0..dims.l {
+                let (a, c) = (&ge.layers[li], &ge2.layers[li]);
+                assert_eq!(bits(&a.ew1), bits(&c.ew1), "{precision:?} L{li} d ew1");
+                assert_eq!(bits(&a.wg), bits(&c.wg), "{precision:?} L{li} d wg");
+                assert_eq!(a.bg.to_bits(), c.bg.to_bits(), "{precision:?} L{li} d bg");
+                assert_eq!(bits(&a.nw1), bits(&c.nw1), "{precision:?} L{li} d nw1");
+                assert_eq!(bits(&a.nw2), bits(&c.nw2), "{precision:?} L{li} d nw2");
+            }
+            assert_eq!(bits(&gb.tw1), bits(&gb2.tw1), "{precision:?} d tw1");
+            assert_eq!(bits(&gb.ew), bits(&gb2.ew), "{precision:?} d ew");
+            assert_eq!(gb.eb.to_bits(), gb2.eb.to_bits(), "{precision:?} d eb");
+            assert_eq!(gb.fb.to_bits(), gb2.fb.to_bits(), "{precision:?} d fb");
         }
     }
 }

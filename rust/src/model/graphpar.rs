@@ -1,0 +1,934 @@
+//! Graph-parallel EGNN: one (huge) structure's forward/backward domain-
+//! decomposed across ranks, bit-identical to the same computation at any
+//! other world size.
+//!
+//! The padded-batch engine ([`crate::model::egnn`]) holds every activation
+//! of every structure in a batch at once — fine for molecules, impossible
+//! for the bulk `supercell` / `amorphous_box` structures whose atom counts
+//! exceed the whole batch budget. This module is the path for those: all
+//! ranks step the SAME structure, each computing only the node work of its
+//! owned atoms and the edge work of the edges it owns by destination (the
+//! `O(atoms * hidden^2)` MLP cost), exchanging boundary hidden-state rows
+//! before every EGNN block and reverse-exchanging boundary `d_x` gradient
+//! rows once per block on the way back (see [`crate::comm::halo`]).
+//!
+//! **World-shape invariance.** The central guarantee — verified in
+//! `rust/tests/integration_graph_parallel.rs` — is that losses, metrics and
+//! every gradient element are *bit-identical* for worlds 1, 2, 4 and 8. It
+//! is engineered, not observed:
+//!
+//! * all computation and every cross-rank sum is grouped by the fixed
+//!   8-segment partition of [`crate::data::featurized::compute_segments`],
+//!   never by rank: weight-gradient and loss contributions accumulate into
+//!   per-segment f64 accumulators (rows in ascending global order within a
+//!   segment), are combined through the slotted
+//!   [`Comm::allreduce_sum_f64`] (one writer per slot), and every rank
+//!   folds segments `0..8` in order. A world-sized fold would regroup the
+//!   f64 additions and change bits;
+//! * activations are exchanged at full f64 width, and the single-writer
+//!   slot fold hands the owner's exact bits to every rank;
+//! * row-level kernels ([`linear_into`] etc.) are row-independent, so
+//!   computing a segment's rows as a compact matrix yields the same bits
+//!   on whichever rank owns the segment.
+//!
+//! Consequently the `world = 1` run *is* the single-rank reference: it
+//! walks the same segmented code path (its halo sets are empty, so the
+//! exchanges are no-ops) and defines the bits every other world must
+//! reproduce. Against the padded-batch engine the results agree only to
+//! rounding (different summation grouping, f64 instead of f32 targets) —
+//! pinned approximately in the tests below.
+//!
+//! **Checkpointing.** Only the per-layer *inputs* `h_in` (halo rows
+//! included) are retained by the forward; each layer's internal
+//! activations are recomputed segment-by-segment during the backward
+//! sweep, the same recompute-from-block-boundary scheme as
+//! [`crate::model::egnn::backward_checkpoint`]. Peak per-layer live memory
+//! drops from nine `[E,H]`/`[N,H]` buffers to one `[N,H]` input per layer.
+//!
+//! **Precision.** This path always computes in f64 (the engine's oracle
+//! precision), regardless of the session's [`Precision`] knob: halo
+//! payloads are exchanged mid-computation, so any f32 round-trip would
+//! break the N-rank == 1-rank guarantee. Both session precisions therefore
+//! produce the same graph-parallel bits by construction.
+
+use crate::comm::collectives::{Comm, CommError};
+use crate::comm::halo::{HaloPlan, LOSS_SLOTS, SEGMENTS};
+use crate::data::graph::Edge;
+use crate::model::egnn::{BranchParams, EgnnDims, EncoderParams, LayerParams};
+use crate::model::kernels::{
+    colsum_into, dot, dsilu, grad_w_into, grad_x_into, linear_into, map_silu, mul_dsilu,
+};
+use crate::model::params::ParamSet;
+
+// ---------------------------------------------------------------------------
+// plan
+// ---------------------------------------------------------------------------
+
+/// One structure's graph-parallel work plan: the halo send/recv lists plus
+/// per-segment node/edge work lists (all in ascending global order — the
+/// accumulation order every world reproduces). Built once per structure
+/// per world and reused across steps/epochs.
+pub struct GpPlan {
+    pub halo: HaloPlan,
+    /// Atoms of each segment, ascending global atom index.
+    seg_nodes: Vec<Vec<u32>>,
+    /// Edges of each segment (keyed by `segment(dst)` — edge work follows
+    /// the destination atom), ascending global edge index.
+    seg_edges: Vec<Vec<u32>>,
+    /// Position of each atom within its segment's `seg_nodes` list.
+    node_slot: Vec<u32>,
+}
+
+impl GpPlan {
+    pub fn build(segments: &[u8], edges: &[Edge], world: usize) -> GpPlan {
+        let halo = HaloPlan::build(segments, edges, world);
+        let mut seg_nodes: Vec<Vec<u32>> = vec![Vec::new(); SEGMENTS];
+        for (a, &sg) in segments.iter().enumerate() {
+            seg_nodes[sg as usize].push(a as u32);
+        }
+        let mut node_slot = vec![0u32; segments.len()];
+        for sn in &seg_nodes {
+            for (slot, &a) in sn.iter().enumerate() {
+                node_slot[a as usize] = slot as u32;
+            }
+        }
+        let mut seg_edges: Vec<Vec<u32>> = vec![Vec::new(); SEGMENTS];
+        for (ei, ed) in edges.iter().enumerate() {
+            seg_edges[segments[ed.dst as usize] as usize].push(ei as u32);
+        }
+        GpPlan { halo, seg_nodes, seg_edges, node_slot }
+    }
+
+    /// Segments rank `r` owns: `r*8/W..(r+1)*8/W`.
+    pub fn owned_segments(&self, rank: usize) -> std::ops::Range<usize> {
+        let w = self.halo.world();
+        rank * SEGMENTS / w..(rank + 1) * SEGMENTS / w
+    }
+
+    /// Exact f64 elements one training step moves through `Comm`; see
+    /// [`HaloPlan::predicted_step_elems`].
+    pub fn predicted_step_elems(&self, hidden: usize, layers: usize, param_len: usize) -> u64 {
+        self.halo.predicted_step_elems(hidden, layers, param_len)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gradient layout (the 8P segmented exchange)
+// ---------------------------------------------------------------------------
+
+/// Offsets of one flat-f64 gradient image of every parameter leaf, in the
+/// fixed order `encoder.embed`, `encoder.layers.{li}.*`, `branch.*`. The
+/// per-segment accumulator is 8 such images back to back; after the
+/// exchange every rank folds the 8 segments per element.
+pub struct GradLayout {
+    embed: (usize, usize),
+    /// Per layer: ew1, eb1, ew2, eb2, wg, bg, nw1, nb1, nw2, nb2.
+    layers: Vec<[(usize, usize); 10]>,
+    /// tw1, tb1, tw2, tb2, tw3, tb3, ew, eb, fw, fb.
+    branch: [(usize, usize); 10],
+    /// Total flat length P.
+    pub len: usize,
+}
+
+impl GradLayout {
+    pub fn new(dims: &EgnnDims) -> GradLayout {
+        let (s, h, r, d, l) = (dims.s, dims.h, dims.r, dims.d, dims.l);
+        let kx = 2 * h + r;
+        let mut off = 0usize;
+        let mut span = |len: usize| {
+            let o = (off, len);
+            off += len;
+            o
+        };
+        let embed = span(s * h);
+        let layers = (0..l)
+            .map(|_| {
+                [
+                    span(kx * h), // ew1
+                    span(h),      // eb1
+                    span(h * h),  // ew2
+                    span(h),      // eb2
+                    span(h),      // wg
+                    span(1),      // bg
+                    span(2 * h * h), // nw1
+                    span(h),      // nb1
+                    span(h * h),  // nw2
+                    span(h),      // nb2
+                ]
+            })
+            .collect();
+        let branch = [
+            span(h * d), // tw1
+            span(d),     // tb1
+            span(d * d), // tw2
+            span(d),     // tb2
+            span(d * d), // tw3
+            span(d),     // tb3
+            span(d),     // ew
+            span(1),     // eb
+            span(d),     // fw
+            span(1),     // fb
+        ];
+        GradLayout { embed, layers, branch, len: off }
+    }
+
+    /// Downcast the folded flat gradient image into the named f32 leaves of
+    /// `grads` (the exact `ParamSet` structure the optimizer and the DDP
+    /// collectives consume).
+    pub fn write_into(&self, flat: &[f64], grads: &mut ParamSet) -> anyhow::Result<()> {
+        debug_assert_eq!(flat.len(), self.len);
+        let mut write = |name: &str, (off, len): (usize, usize)| -> anyhow::Result<()> {
+            let t = grads
+                .get_mut(name)
+                .ok_or_else(|| anyhow::anyhow!("gradient for unknown leaf '{name}'"))?;
+            let dst = t.as_f32_mut();
+            anyhow::ensure!(
+                dst.len() == len,
+                "gradient leaf '{name}': {len} values, expected {}",
+                dst.len()
+            );
+            for (o, &v) in dst.iter_mut().zip(&flat[off..off + len]) {
+                *o = v as f32;
+            }
+            Ok(())
+        };
+        write("encoder.embed", self.embed)?;
+        const LAYER_PARTS: [&str; 10] = [
+            "edge.w1", "edge.b1", "edge.w2", "edge.b2", "edge.wg", "edge.bg", "node.w1",
+            "node.b1", "node.w2", "node.b2",
+        ];
+        for (li, spans) in self.layers.iter().enumerate() {
+            for (part, &sp) in LAYER_PARTS.iter().zip(spans.iter()) {
+                write(&format!("encoder.layers.{li}.{part}"), sp)?;
+            }
+        }
+        const BRANCH_PARTS: [&str; 10] = [
+            "branch.trunk.w1",
+            "branch.trunk.b1",
+            "branch.trunk.w2",
+            "branch.trunk.b2",
+            "branch.trunk.w3",
+            "branch.trunk.b3",
+            "branch.energy.w",
+            "branch.energy.b",
+            "branch.force.w",
+            "branch.force.b",
+        ];
+        for (part, &sp) in BRANCH_PARTS.iter().zip(self.branch.iter()) {
+            write(part, sp)?;
+        }
+        Ok(())
+    }
+}
+
+/// Mutable per-segment view into the `8 x P` accumulator.
+#[inline]
+fn seg(acc: &mut [f64], p_len: usize, s: usize, (off, len): (usize, usize)) -> &mut [f64] {
+    &mut acc[s * p_len + off..s * p_len + off + len]
+}
+
+// ---------------------------------------------------------------------------
+// input + outputs
+// ---------------------------------------------------------------------------
+
+/// One structure's graph-parallel training example (borrowed from the
+/// [`crate::data::featurized::FeaturizedStore`] caches). Targets stay f64
+/// end to end — no padded-batch f32 round trip.
+pub struct GpStructure<'a> {
+    pub species: &'a [u8],
+    pub edges: &'a [Edge],
+    /// Labeled energy per atom.
+    pub y_energy_per_atom: f64,
+    /// Labeled forces `[N][3]`.
+    pub y_forces: &'a [[f64; 3]],
+}
+
+/// Scalar outputs of one graph-parallel step, identical on every rank.
+#[derive(Debug, Clone, Copy)]
+pub struct GpOut {
+    pub loss: f64,
+    pub mae_e: f64,
+    pub mae_f: f64,
+}
+
+// ---------------------------------------------------------------------------
+// forward
+// ---------------------------------------------------------------------------
+
+/// Immutable per-step context shared by the forward and backward sweeps.
+struct Ctx<'a> {
+    h: usize,
+    r: usize,
+    kx: usize,
+    st: &'a GpStructure<'a>,
+    plan: &'a GpPlan,
+    rbf: Vec<f64>,
+    inv_deg: Vec<f64>,
+}
+
+/// One segment's recomputable layer activations (compact rows in the
+/// segment's ascending node/edge order).
+struct SegFwd {
+    x: Vec<f64>,    // [ec, 2H+R] edge-MLP input
+    ae1: Vec<f64>,  // [ec, H]
+    u: Vec<f64>,    // [ec, H]
+    ae2: Vec<f64>,  // [ec, H]
+    m: Vec<f64>,    // [ec, H]
+    gate: Vec<f64>, // [ec]
+    nin: Vec<f64>,  // [nc, 2H]
+    an1: Vec<f64>,  // [nc, H]
+    s1: Vec<f64>,   // [nc, H]
+    upd: Vec<f64>,  // [nc, H]
+}
+
+/// Recompute one segment's slice of one EGNN block from the layer input
+/// `h_in` (halo rows valid). Pure f64; identical bits on every world.
+fn layer_seg_forward(cx: &Ctx, lp: &LayerParams, h_in: &[f64], s: usize) -> SegFwd {
+    let (h, r, kx) = (cx.h, cx.r, cx.kx);
+    let edges_s = &cx.plan.seg_edges[s];
+    let nodes_s = &cx.plan.seg_nodes[s];
+    let (ec, nc) = (edges_s.len(), nodes_s.len());
+
+    let mut x = vec![0.0; ec * kx];
+    for (row, &ei) in edges_s.iter().enumerate() {
+        let ed = &cx.st.edges[ei as usize];
+        let (si, di) = (ed.src as usize, ed.dst as usize);
+        let rw = &mut x[row * kx..(row + 1) * kx];
+        rw[..h].copy_from_slice(&h_in[si * h..(si + 1) * h]);
+        rw[h..2 * h].copy_from_slice(&h_in[di * h..(di + 1) * h]);
+        rw[2 * h..].copy_from_slice(&cx.rbf[ei as usize * r..(ei as usize + 1) * r]);
+    }
+    let mut ae1 = vec![0.0; ec * h];
+    linear_into(&x, &lp.ew1, &lp.eb1, &mut ae1, ec, kx, h);
+    let u = map_silu(&ae1);
+    let mut ae2 = vec![0.0; ec * h];
+    linear_into(&u, &lp.ew2, &lp.eb2, &mut ae2, ec, h, h);
+    let m = map_silu(&ae2);
+    let mut gate = vec![0.0; ec];
+    for row in 0..ec {
+        gate[row] = (dot(&m[row * h..(row + 1) * h], &lp.wg) + lp.bg).tanh();
+    }
+
+    // Scatter-sum of messages per destination atom, in ascending global
+    // edge order (each atom's per-contribution addition order matches the
+    // engine's full serial loop restricted to that atom).
+    let mut hagg = vec![0.0; nc * h];
+    for (row, &ei) in edges_s.iter().enumerate() {
+        let di = cx.st.edges[ei as usize].dst as usize;
+        let slot = cx.plan.node_slot[di] as usize;
+        for j in 0..h {
+            hagg[slot * h + j] += m[row * h + j];
+        }
+    }
+
+    let mut nin = vec![0.0; nc * 2 * h];
+    for (slot, &a) in nodes_s.iter().enumerate() {
+        let a = a as usize;
+        nin[slot * 2 * h..slot * 2 * h + h].copy_from_slice(&h_in[a * h..(a + 1) * h]);
+        let id = cx.inv_deg[a];
+        for j in 0..h {
+            nin[slot * 2 * h + h + j] = hagg[slot * h + j] * id;
+        }
+    }
+    let mut an1 = vec![0.0; nc * h];
+    linear_into(&nin, &lp.nw1, &lp.nb1, &mut an1, nc, 2 * h, h);
+    let s1 = map_silu(&an1);
+    let mut upd = vec![0.0; nc * h];
+    linear_into(&s1, &lp.nw2, &lp.nb2, &mut upd, nc, h, h);
+    SegFwd { x, ae1, u, ae2, m, gate, nin, an1, s1, upd }
+}
+
+/// Forward state retained for the backward sweep. Only the per-layer
+/// inputs are kept (the checkpointing scheme); everything else is either
+/// owned-rows-only or scalar.
+struct GpForward {
+    /// Layer inputs `[L][N,H]`, halo rows valid (exchanged in forward).
+    saved_h: Vec<Vec<f64>>,
+    /// Final hidden state `[N,H]`, owned rows valid.
+    h: Vec<f64>,
+    /// Equivariant channel `[N,3]`, owned rows valid.
+    v: Vec<f64>,
+    // Branch intermediates, owned rows valid (not checkpointed — one set,
+    // like the engine).
+    at1: Vec<f64>,
+    z1: Vec<f64>,
+    at2: Vec<f64>,
+    z2: Vec<f64>,
+    at3: Vec<f64>,
+    z3: Vec<f64>,
+    fr: Vec<f64>,
+    forces: Vec<f64>,
+    /// Energy-prediction residual (global, identical on every rank).
+    de: f64,
+    out: GpOut,
+}
+
+/// Shared forward: encoder with per-block halo exchange, branch over owned
+/// atoms, segment-folded loss. Every rank returns identical scalars.
+fn forward(
+    cx: &Ctx,
+    enc: &EncoderParams,
+    br: &BranchParams,
+    dims: &EgnnDims,
+    comm: &Comm,
+) -> Result<GpForward, CommError> {
+    let st = cx.st;
+    let plan = cx.plan;
+    let n = st.species.len();
+    let (h, d) = (cx.h, dims.d);
+    let rank = comm.rank_in_group;
+    let segs = plan.owned_segments(rank);
+
+    // h0 = embed[species] for owned atoms (node masks are all 1 here —
+    // there is no padding on this path).
+    let mut hbuf = vec![0.0; n * h];
+    for s in segs.clone() {
+        for &a in &plan.seg_nodes[s] {
+            let a = a as usize;
+            let sp = (st.species[a] as usize).min(dims.s - 1);
+            hbuf[a * h..(a + 1) * h].copy_from_slice(&enc.embed[sp * h..(sp + 1) * h]);
+        }
+    }
+    let mut v = vec![0.0; n * 3];
+
+    let mut saved_h = Vec::with_capacity(dims.l);
+    for lp in &enc.layers {
+        // Boundary hidden rows before EVERY block (the layer-0 exchange
+        // delivers the owner's embedding rows).
+        plan.halo.exchange_node_rows(comm, &mut hbuf, h)?;
+        let h_in = hbuf.clone();
+        for s in segs.clone() {
+            let sf = layer_seg_forward(cx, lp, &h_in, s);
+            // Equivariant update (forward only; `v` never crosses ranks —
+            // it is written and read strictly per owned destination atom).
+            for (row, &ei) in plan.seg_edges[s].iter().enumerate() {
+                let ed = &st.edges[ei as usize];
+                let di = ed.dst as usize;
+                let sc = sf.gate[row] * cx.inv_deg[di];
+                for k in 0..3 {
+                    v[di * 3 + k] += ed.rel_hat[k] as f64 * sc;
+                }
+            }
+            // Residual node update; reads go through the saved `h_in`
+            // clone, so overwriting `hbuf` rows segment-by-segment is safe.
+            for (slot, &a) in plan.seg_nodes[s].iter().enumerate() {
+                let a = a as usize;
+                for j in 0..h {
+                    hbuf[a * h + j] = h_in[a * h + j] + sf.upd[slot * h + j];
+                }
+            }
+        }
+        saved_h.push(h_in);
+    }
+
+    // Branch over owned atoms, segment by segment (compact rows scattered
+    // back to global-node-indexed buffers for the backward pass).
+    let mut at1 = vec![0.0; n * d];
+    let mut z1 = vec![0.0; n * d];
+    let mut at2 = vec![0.0; n * d];
+    let mut z2 = vec![0.0; n * d];
+    let mut at3 = vec![0.0; n * d];
+    let mut z3 = vec![0.0; n * d];
+    let mut er = vec![0.0; n];
+    let mut fr = vec![0.0; n];
+    let mut forces = vec![0.0; n * 3];
+    for s in segs.clone() {
+        let nodes_s = &plan.seg_nodes[s];
+        let nc = nodes_s.len();
+        let mut xh = vec![0.0; nc * h];
+        for (slot, &a) in nodes_s.iter().enumerate() {
+            let a = a as usize;
+            xh[slot * h..(slot + 1) * h].copy_from_slice(&hbuf[a * h..(a + 1) * h]);
+        }
+        let mut at1c = vec![0.0; nc * d];
+        linear_into(&xh, &br.tw1, &br.tb1, &mut at1c, nc, h, d);
+        let z1c = map_silu(&at1c);
+        let mut at2c = vec![0.0; nc * d];
+        linear_into(&z1c, &br.tw2, &br.tb2, &mut at2c, nc, d, d);
+        let z2c = map_silu(&at2c);
+        let mut at3c = vec![0.0; nc * d];
+        linear_into(&z2c, &br.tw3, &br.tb3, &mut at3c, nc, d, d);
+        let z3c = map_silu(&at3c);
+        for (slot, &a) in nodes_s.iter().enumerate() {
+            let a = a as usize;
+            let zrow = &z3c[slot * d..(slot + 1) * d];
+            er[a] = dot(zrow, &br.ew) + br.eb;
+            fr[a] = dot(zrow, &br.fw) + br.fb;
+            for k in 0..3 {
+                forces[a * 3 + k] = fr[a] * v[a * 3 + k];
+            }
+            at1[a * d..(a + 1) * d].copy_from_slice(&at1c[slot * d..(slot + 1) * d]);
+            z1[a * d..(a + 1) * d].copy_from_slice(&z1c[slot * d..(slot + 1) * d]);
+            at2[a * d..(a + 1) * d].copy_from_slice(&at2c[slot * d..(slot + 1) * d]);
+            z2[a * d..(a + 1) * d].copy_from_slice(&z2c[slot * d..(slot + 1) * d]);
+            at3[a * d..(a + 1) * d].copy_from_slice(&at3c[slot * d..(slot + 1) * d]);
+            z3[a * d..(a + 1) * d].copy_from_slice(zrow);
+        }
+    }
+
+    // Loss: per-segment partial sums -> one 24-slot exchange -> every rank
+    // folds segments 0..8 in order. The fold grouping is the segment
+    // partition, never the world shape.
+    let mut buf = [0.0f64; LOSS_SLOTS];
+    for s in segs.clone() {
+        let nodes_s = &plan.seg_nodes[s];
+        let (mut ep, mut sfp, mut afp) = (0.0, 0.0, 0.0);
+        for &a in nodes_s {
+            ep += er[a as usize];
+        }
+        for &a in nodes_s {
+            let a = a as usize;
+            for k in 0..3 {
+                let df = forces[a * 3 + k] - st.y_forces[a][k];
+                sfp += df * df;
+                afp += df.abs();
+            }
+        }
+        buf[s] = ep;
+        buf[SEGMENTS + s] = sfp;
+        buf[2 * SEGMENTS + s] = afp;
+    }
+    comm.allreduce_sum_f64(&mut buf)?;
+    let (mut e_sum, mut sf_sum, mut af_sum) = (0.0, 0.0, 0.0);
+    for s in 0..SEGMENTS {
+        e_sum += buf[s];
+    }
+    for s in 0..SEGMENTS {
+        sf_sum += buf[SEGMENTS + s];
+    }
+    for s in 0..SEGMENTS {
+        af_sum += buf[2 * SEGMENTS + s];
+    }
+    let n_f = n as f64;
+    let e_pa = e_sum * (1.0 / n_f);
+    let de = e_pa - st.y_energy_per_atom;
+    let mse_e = de * de; // one graph
+    let mse_f = sf_sum / (3.0 * n_f);
+    let out = GpOut {
+        loss: dims.w_energy * mse_e + dims.w_force * mse_f,
+        mae_e: de.abs(),
+        mae_f: af_sum / (3.0 * n_f),
+    };
+    Ok(GpForward { saved_h, h: hbuf, v, at1, z1, at2, z2, at3, z3, fr, forces, de, out })
+}
+
+/// Build the shared per-step context (RBF + degree normalization are pure
+/// functions of the structure, computed identically on every rank).
+fn build_ctx<'a>(dims: &EgnnDims, st: &'a GpStructure<'a>, plan: &'a GpPlan) -> Ctx<'a> {
+    let (h, r) = (dims.h, dims.r);
+    let e = st.edges.len();
+    let n = st.species.len();
+    let mut rbf = vec![0.0; e * r];
+    let gamma = (r as f64 / dims.cutoff).powi(2);
+    for (ei, ed) in st.edges.iter().enumerate() {
+        let dist = ed.dist as f64;
+        let env =
+            0.5 * ((std::f64::consts::PI * (dist / dims.cutoff).clamp(0.0, 1.0)).cos() + 1.0);
+        for ri in 0..r {
+            let c = if r > 1 { dims.cutoff * ri as f64 / (r - 1) as f64 } else { 0.0 };
+            let dd = dist - c;
+            rbf[ei * r + ri] = (-gamma * dd * dd).exp() * env;
+        }
+    }
+    let mut deg = vec![0.0f64; n];
+    for ed in st.edges {
+        deg[ed.dst as usize] += 1.0;
+    }
+    let inv_deg: Vec<f64> = deg.iter().map(|&x| 1.0 / (1.0 + x)).collect();
+    Ctx { h, r, kx: 2 * h + r, st, plan, rbf, inv_deg }
+}
+
+/// Evaluation-only graph-parallel pass: forward + the loss exchange.
+pub fn eval_step(
+    dims: &EgnnDims,
+    enc: &EncoderParams,
+    br: &BranchParams,
+    st: &GpStructure,
+    plan: &GpPlan,
+    comm: &Comm,
+) -> Result<GpOut, CommError> {
+    let cx = build_ctx(dims, st, plan);
+    Ok(forward(&cx, enc, br, dims, comm)?.out)
+}
+
+// ---------------------------------------------------------------------------
+// backward
+// ---------------------------------------------------------------------------
+
+/// One graph-parallel training step: forward (with per-block halo
+/// exchange), segment-folded loss, checkpointed backward (recompute per
+/// segment, reverse `d_x` halo per block), and the `8 x P` segmented
+/// gradient fold. Returns the step scalars plus the flat f64 gradient
+/// image (layout per [`GradLayout`]) — both bit-identical on every rank of
+/// every world.
+pub fn train_step(
+    dims: &EgnnDims,
+    enc: &EncoderParams,
+    br: &BranchParams,
+    st: &GpStructure,
+    plan: &GpPlan,
+    layout: &GradLayout,
+    comm: &Comm,
+) -> Result<(GpOut, Vec<f64>), CommError> {
+    let cx = build_ctx(dims, st, plan);
+    let fwd = forward(&cx, enc, br, dims, comm)?;
+    let n = st.species.len();
+    let (h, d, kx) = (cx.h, dims.d, cx.kx);
+    let rank = comm.rank_in_group;
+    let segs = plan.owned_segments(rank);
+    let p_len = layout.len;
+    let mut acc = vec![0.0f64; SEGMENTS * p_len];
+
+    // Loss seeds. d_e_pa is global (one graph, graph mask 1); force seeds
+    // are per owned atom.
+    let n_f = n as f64;
+    let d_e_pa = dims.w_energy * 2.0 * fwd.de;
+    let denom_f = 3.0 * n_f;
+    let inv_atoms = 1.0 / n_f;
+
+    // --- branch backward (per owned segment) ---
+    let [tw1s, tb1s, tw2s, tb2s, tw3s, tb3s, ews, ebs, fws, fbs] = layout.branch;
+    let mut d_h = vec![0.0; n * h];
+    let mut d_v = vec![0.0; n * 3];
+    for s in segs.clone() {
+        let nodes_s = &plan.seg_nodes[s];
+        let nc = nodes_s.len();
+        let mut d_z3 = vec![0.0; nc * d];
+        for (slot, &a) in nodes_s.iter().enumerate() {
+            let a = a as usize;
+            let d_er = d_e_pa * inv_atoms;
+            let mut d_fr = 0.0;
+            for k in 0..3 {
+                let df = fwd.forces[a * 3 + k] - st.y_forces[a][k];
+                let d_f = dims.w_force * 2.0 * df / denom_f;
+                d_fr += d_f * fwd.v[a * 3 + k];
+                d_v[a * 3 + k] = d_f * fwd.fr[a];
+            }
+            seg(&mut acc, p_len, s, ebs)[0] += d_er;
+            seg(&mut acc, p_len, s, fbs)[0] += d_fr;
+            if d_er == 0.0 && d_fr == 0.0 {
+                continue;
+            }
+            let zrow = &fwd.z3[a * d..(a + 1) * d];
+            {
+                let ew_acc = seg(&mut acc, p_len, s, ews);
+                for j in 0..d {
+                    ew_acc[j] += zrow[j] * d_er;
+                }
+            }
+            {
+                let fw_acc = seg(&mut acc, p_len, s, fws);
+                for j in 0..d {
+                    fw_acc[j] += zrow[j] * d_fr;
+                }
+            }
+            let drow = &mut d_z3[slot * d..(slot + 1) * d];
+            for j in 0..d {
+                drow[j] = d_er * br.ew[j] + d_fr * br.fw[j];
+            }
+        }
+        // Gather the compact trunk activations of this segment.
+        let gather = |src: &[f64], width: usize| -> Vec<f64> {
+            let mut out = vec![0.0; nc * width];
+            for (slot, &a) in nodes_s.iter().enumerate() {
+                let a = a as usize;
+                out[slot * width..(slot + 1) * width]
+                    .copy_from_slice(&src[a * width..(a + 1) * width]);
+            }
+            out
+        };
+        let at3c = gather(&fwd.at3, d);
+        let z2c = gather(&fwd.z2, d);
+        let at2c = gather(&fwd.at2, d);
+        let z1c = gather(&fwd.z1, d);
+        let at1c = gather(&fwd.at1, d);
+        let xhc = gather(&fwd.h, h);
+
+        let d_at3 = mul_dsilu(&d_z3, &at3c);
+        grad_w_into(&z2c, &d_at3, seg(&mut acc, p_len, s, tw3s), nc, d, d);
+        colsum_into(&d_at3, seg(&mut acc, p_len, s, tb3s), nc, d);
+        let mut d_z2 = vec![0.0; nc * d];
+        grad_x_into(&d_at3, &br.tw3, &mut d_z2, nc, d, d);
+        let d_at2 = mul_dsilu(&d_z2, &at2c);
+        grad_w_into(&z1c, &d_at2, seg(&mut acc, p_len, s, tw2s), nc, d, d);
+        colsum_into(&d_at2, seg(&mut acc, p_len, s, tb2s), nc, d);
+        let mut d_z1 = vec![0.0; nc * d];
+        grad_x_into(&d_at2, &br.tw2, &mut d_z1, nc, d, d);
+        let d_at1 = mul_dsilu(&d_z1, &at1c);
+        grad_w_into(&xhc, &d_at1, seg(&mut acc, p_len, s, tw1s), nc, h, d);
+        colsum_into(&d_at1, seg(&mut acc, p_len, s, tb1s), nc, d);
+        let mut d_hc = vec![0.0; nc * h];
+        grad_x_into(&d_at1, &br.tw1, &mut d_hc, nc, h, d);
+        for (slot, &a) in nodes_s.iter().enumerate() {
+            let a = a as usize;
+            d_h[a * h..(a + 1) * h].copy_from_slice(&d_hc[slot * h..(slot + 1) * h]);
+        }
+    }
+
+    // --- encoder backward: reverse layer sweep with per-segment recompute
+    // (checkpointing) and one reverse d_x halo per block ---
+    for li in (0..dims.l).rev() {
+        let lp = &enc.layers[li];
+        let [ew1s, eb1s, ew2s, eb2s, wgs, bgs, nw1s, nb1s, nw2s, nb2s] = layout.layers[li];
+        let h_in = &fwd.saved_h[li];
+        let mut d_h_in = vec![0.0; n * h];
+        let mut d_x = vec![0.0; st.edges.len() * kx];
+        for s in segs.clone() {
+            let sf = layer_seg_forward(&cx, lp, h_in, s);
+            let nodes_s = &plan.seg_nodes[s];
+            let edges_s = &plan.seg_edges[s];
+            let (nc, ec) = (nodes_s.len(), edges_s.len());
+
+            // Node update backward: h_out = h_in + upd (masks all 1).
+            let mut d_pre = vec![0.0; nc * h];
+            for (slot, &a) in nodes_s.iter().enumerate() {
+                let a = a as usize;
+                d_pre[slot * h..(slot + 1) * h].copy_from_slice(&d_h[a * h..(a + 1) * h]);
+                d_h_in[a * h..(a + 1) * h].copy_from_slice(&d_h[a * h..(a + 1) * h]);
+            }
+            grad_w_into(&sf.s1, &d_pre, seg(&mut acc, p_len, s, nw2s), nc, h, h);
+            colsum_into(&d_pre, seg(&mut acc, p_len, s, nb2s), nc, h);
+            let mut d_s1 = vec![0.0; nc * h];
+            grad_x_into(&d_pre, &lp.nw2, &mut d_s1, nc, h, h);
+            let d_an1 = mul_dsilu(&d_s1, &sf.an1);
+            grad_w_into(&sf.nin, &d_an1, seg(&mut acc, p_len, s, nw1s), nc, 2 * h, h);
+            colsum_into(&d_an1, seg(&mut acc, p_len, s, nb1s), nc, h);
+            let mut d_nin = vec![0.0; nc * 2 * h];
+            grad_x_into(&d_an1, &lp.nw1, &mut d_nin, nc, 2 * h, h);
+            let mut d_hagg = vec![0.0; nc * h];
+            for (slot, &a) in nodes_s.iter().enumerate() {
+                let a = a as usize;
+                let id = cx.inv_deg[a];
+                for j in 0..h {
+                    d_h_in[a * h + j] += d_nin[slot * 2 * h + j];
+                    d_hagg[slot * h + j] = d_nin[slot * 2 * h + h + j] * id;
+                }
+            }
+
+            // Edge backward: message + gate paths (edge masks all 1).
+            let mut d_m = vec![0.0; ec * h];
+            let mut d_ag = vec![0.0; ec];
+            for (row, &ei) in edges_s.iter().enumerate() {
+                let ed = &st.edges[ei as usize];
+                let di = ed.dst as usize;
+                let slot = plan.node_slot[di] as usize;
+                for j in 0..h {
+                    d_m[row * h + j] = d_hagg[slot * h + j];
+                }
+                let sc = cx.inv_deg[di];
+                let mut dg = 0.0;
+                for k in 0..3 {
+                    dg += d_v[di * 3 + k] * ed.rel_hat[k] as f64;
+                }
+                let t = sf.gate[row];
+                d_ag[row] = dg * sc * (1.0 - t * t);
+            }
+            for row in 0..ec {
+                let da = d_ag[row];
+                seg(&mut acc, p_len, s, bgs)[0] += da;
+                if da == 0.0 {
+                    continue;
+                }
+                let mrow = &sf.m[row * h..(row + 1) * h];
+                let wg_acc = seg(&mut acc, p_len, s, wgs);
+                for j in 0..h {
+                    wg_acc[j] += mrow[j] * da;
+                }
+                let drow = &mut d_m[row * h..(row + 1) * h];
+                for j in 0..h {
+                    drow[j] += da * lp.wg[j];
+                }
+            }
+            let mut d_ae2 = vec![0.0; ec * h];
+            for i in 0..ec * h {
+                d_ae2[i] = d_m[i] * dsilu(sf.ae2[i]);
+            }
+            grad_w_into(&sf.u, &d_ae2, seg(&mut acc, p_len, s, ew2s), ec, h, h);
+            colsum_into(&d_ae2, seg(&mut acc, p_len, s, eb2s), ec, h);
+            let mut d_u = vec![0.0; ec * h];
+            grad_x_into(&d_ae2, &lp.ew2, &mut d_u, ec, h, h);
+            let d_ae1 = mul_dsilu(&d_u, &sf.ae1);
+            grad_w_into(&sf.x, &d_ae1, seg(&mut acc, p_len, s, ew1s), ec, kx, h);
+            colsum_into(&d_ae1, seg(&mut acc, p_len, s, eb1s), ec, h);
+            let mut d_xc = vec![0.0; ec * kx];
+            grad_x_into(&d_ae1, &lp.ew1, &mut d_xc, ec, kx, h);
+            for (row, &ei) in edges_s.iter().enumerate() {
+                d_x[ei as usize * kx..(ei as usize + 1) * kx]
+                    .copy_from_slice(&d_xc[row * kx..(row + 1) * kx]);
+            }
+        }
+
+        // Reverse halo: boundary edges' src-part gradient rows travel from
+        // owner(dst) (who computed them) to everyone.
+        plan.halo.exchange_edge_rows(comm, &mut d_x, kx, h)?;
+
+        // Fold edge contributions into owned atoms in GLOBAL edge order —
+        // the engine's exact per-atom addition sequence.
+        for (ei, ed) in st.edges.iter().enumerate() {
+            let (si, di) = (ed.src as usize, ed.dst as usize);
+            if plan.halo.owner(si) == rank {
+                for j in 0..h {
+                    d_h_in[si * h + j] += d_x[ei * kx + j];
+                }
+            }
+            if plan.halo.owner(di) == rank {
+                for j in 0..h {
+                    d_h_in[di * h + j] += d_x[ei * kx + h + j];
+                }
+            }
+        }
+        d_h = d_h_in;
+    }
+
+    // Embedding gradient (per owned segment).
+    for s in segs.clone() {
+        for &a in &plan.seg_nodes[s] {
+            let a = a as usize;
+            let sp = (st.species[a] as usize).min(dims.s - 1);
+            let emb_acc = seg(&mut acc, p_len, s, layout.embed);
+            for j in 0..h {
+                emb_acc[sp * h + j] += d_h[a * h + j];
+            }
+        }
+    }
+
+    // The 8 x P segmented gradient fold: owners deposit their segments'
+    // images (the rest stay 0.0), one exchange, then every rank folds
+    // segments 0..8 per element — the world-invariant grouping.
+    comm.allreduce_sum_f64(&mut acc)?;
+    let mut flat = vec![0.0f64; p_len];
+    for s in 0..SEGMENTS {
+        let base = s * p_len;
+        for (i, f) in flat.iter_mut().enumerate() {
+            *f += acc[base + i];
+        }
+    }
+    Ok((fwd.out, flat))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::collectives::run_group;
+    use crate::data::batch::BatchPool;
+    use crate::data::generators::inorganic::build_crystal;
+    use crate::data::graph::radius_graph_positions;
+    use crate::model::kernels::Precision;
+    use crate::runtime::backend::Backend;
+    use crate::runtime::manifest::{Manifest, ManifestConfig};
+    use crate::util::rng::Rng;
+
+    fn test_structure(natoms: usize) -> (Vec<u8>, Vec<[f64; 3]>, Vec<[f64; 3]>, f64) {
+        let mut rng = Rng::new(42);
+        let (species, positions) = build_crystal(&mut rng, &[12, 8, 11, 17], natoms);
+        let (energy, forces) =
+            crate::data::potential::energy_and_forces(&species, &positions);
+        (species, positions, forces, energy / natoms as f64)
+    }
+
+    fn manifest() -> Manifest {
+        Manifest::synthesize(ManifestConfig::default_native())
+    }
+
+    #[test]
+    fn grad_layout_covers_every_parameter() {
+        let m = manifest();
+        let dims = EgnnDims::from_config(&m.config);
+        let layout = GradLayout::new(&dims);
+        let params = ParamSet::init(&m.params, 7);
+        assert_eq!(layout.len, params.total_params());
+        let mut grads = ParamSet::zeros_like(&m.params);
+        let flat: Vec<f64> = (0..layout.len).map(|i| i as f64).collect();
+        layout.write_into(&flat, &mut grads).unwrap();
+        // Spot-check: the embed leaf holds the first S*H values.
+        let emb = grads.get("encoder.embed").unwrap().as_f32();
+        assert_eq!(emb[0], 0.0);
+        assert_eq!(emb[1], 1.0);
+        assert_eq!(grads.get("branch.force.b").unwrap().as_f32()[0], (layout.len - 1) as f32);
+    }
+
+    #[test]
+    fn world_one_tracks_the_padded_engine() {
+        // Same structure through the graph-parallel path (world 1) and the
+        // padded-batch engine: losses agree to rounding (the paths group
+        // f64 sums differently and the engine's targets round through f32).
+        let m = manifest();
+        let dims = EgnnDims::from_config(&m.config);
+        let params = ParamSet::init(&m.params, 3);
+        let (species, positions, forces, y_epa) = test_structure(30);
+        let edges = radius_graph_positions(&positions, m.config.cutoff);
+        let segments = crate::data::featurized::compute_segments(&positions, m.config.cutoff);
+
+        let plan = GpPlan::build(&segments, &edges, 1);
+        let layout = GradLayout::new(&dims);
+        let st = GpStructure {
+            species: &species,
+            edges: &edges,
+            y_energy_per_atom: y_epa,
+            y_forces: &forces,
+        };
+        let enc = EncoderParams::from_set(&dims, &params).unwrap();
+        let br = BranchParams::from_set(&dims, &params).unwrap();
+        let comms = crate::comm::Comm::group(1);
+        let (out, flat) =
+            train_step(&dims, &enc, &br, &st, &plan, &layout, &comms[0]).unwrap();
+
+        let mut pool = BatchPool::new();
+        let mut batch = pool.acquire(m.config.batch_dims());
+        batch
+            .push_raw(&species, &forces, y_epa, &edges)
+            .expect("structure fits the default batch dims");
+        let backend = crate::runtime::native::NativeBackend::new(Precision::F64);
+        let step = backend.train_step(&m, &params, &batch).unwrap();
+
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-12);
+        assert!(rel(out.loss, step.loss) < 1e-4, "loss {} vs {}", out.loss, step.loss);
+        assert!(rel(out.mae_f, step.mae_f) < 1e-4, "mae_f {} vs {}", out.mae_f, step.mae_f);
+        // Gradients agree loosely too (same math, different fold grouping
+        // and target precision).
+        let g_engine: f64 =
+            step.grads.get("branch.energy.b").unwrap().as_f32()[0] as f64;
+        let mut grads = ParamSet::zeros_like(&m.params);
+        layout.write_into(&flat, &mut grads).unwrap();
+        let g_gp: f64 = grads.get("branch.energy.b").unwrap().as_f32()[0] as f64;
+        assert!(rel(g_gp, g_engine) < 1e-3, "d eb {g_gp} vs {g_engine}");
+    }
+
+    #[test]
+    fn train_step_is_bit_identical_across_worlds() {
+        let m = manifest();
+        let dims = EgnnDims::from_config(&m.config);
+        let params = ParamSet::init(&m.params, 11);
+        let (species, positions, forces, y_epa) = test_structure(24);
+        let edges = radius_graph_positions(&positions, m.config.cutoff);
+        let segments = crate::data::featurized::compute_segments(&positions, m.config.cutoff);
+        let layout = GradLayout::new(&dims);
+        let enc = EncoderParams::from_set(&dims, &params).unwrap();
+        let br = BranchParams::from_set(&dims, &params).unwrap();
+
+        let mut reference: Option<(u64, Vec<u64>)> = None;
+        for world in [1usize, 2, 4] {
+            let plan = GpPlan::build(&segments, &edges, world);
+            let st = GpStructure {
+                species: &species,
+                edges: &edges,
+                y_energy_per_atom: y_epa,
+                y_forces: &forces,
+            };
+            let results = run_group(world, |c| {
+                train_step(&dims, &enc, &br, &st, &plan, &layout, &c).unwrap()
+            });
+            for r in results {
+                let (out, flat) = r.unwrap();
+                let bits: Vec<u64> = flat.iter().map(|x| x.to_bits()).collect();
+                match &reference {
+                    None => reference = Some((out.loss.to_bits(), bits)),
+                    Some((lref, gref)) => {
+                        assert_eq!(out.loss.to_bits(), *lref, "world {world} loss bits");
+                        assert_eq!(&bits, gref, "world {world} gradient bits");
+                    }
+                }
+            }
+        }
+    }
+}

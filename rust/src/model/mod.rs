@@ -5,11 +5,13 @@
 
 pub mod arch;
 pub mod egnn;
+pub mod graphpar;
 pub mod kernels;
 pub mod optimizer;
 pub mod params;
 
 pub use arch::{ArchDims, ParallelismRegime};
+pub use graphpar::{GpOut, GpPlan, GpStructure, GradLayout};
 pub use kernels::Precision;
 pub use optimizer::{AdamW, AdamWConfig, AdamWState, Sgd};
 pub use params::{Init, LeafMeta, ParamSet};

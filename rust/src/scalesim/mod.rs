@@ -8,6 +8,7 @@ pub mod sweep;
 
 pub use machines::{machine_by_name, MachineProfile, ALL_MACHINES, AURORA, FRONTIER, PERLMUTTER};
 pub use perfmodel::{
+    graph_par_boundary_fraction, graph_par_step_comm_time, graph_par_step_elems,
     predicted_overlap_win, step_time_overlapped, step_time_sync, SimMode, Workload,
     OVERLAP_WINDOW_FRACTION,
 };

@@ -211,6 +211,51 @@ pub fn epoch_time(
     noisy
 }
 
+/// Exact f64 elements ONE graph-parallel training step moves through the
+/// collectives — the closed form of
+/// [`crate::comm::halo::HaloPlan::predicted_step_elems`], usable before a
+/// plan exists: `layers` forward node exchanges (boundary atoms x hidden),
+/// `layers` reverse edge exchanges (boundary edges x hidden), the 24-slot
+/// segment-folded loss reduce, and the `8 x P` segmented gradient fold.
+/// World 1 has empty boundaries but still folds loss + gradients, so the
+/// formula holds at every world in {1, 2, 4, 8}. Confronted against both
+/// the plan's prediction and the measured [`crate::comm::Comm`] stats delta
+/// in `rust/tests/integration_graph_parallel.rs` and the
+/// `graph_parallel` bench.
+pub fn graph_par_step_elems(
+    boundary_atoms: usize,
+    boundary_edges: usize,
+    hidden: usize,
+    layers: usize,
+    param_len: usize,
+) -> u64 {
+    let halo = (boundary_atoms + boundary_edges) * hidden * layers;
+    (halo + crate::comm::halo::LOSS_SLOTS + crate::comm::halo::SEGMENTS * param_len) as u64
+}
+
+/// Estimated fraction of a structure's atoms on segment boundaries under
+/// the 8-segment cell-sorted decomposition: cuts are (roughly) planar, so
+/// the boundary scales with the surface-to-volume ratio `n^(2/3) / n`.
+/// A coarse planning estimate for sizing halo traffic before featurizing —
+/// the exact count comes from `HaloPlan::build`.
+pub fn graph_par_boundary_fraction(natoms: usize, world: usize) -> f64 {
+    if world <= 1 || natoms == 0 {
+        return 0.0;
+    }
+    // (world - 1) cut planes, each intersecting ~n^(2/3) atoms of an
+    // isotropic structure; clamp to 1 for tiny structures where every atom
+    // borders a cut.
+    let n = natoms as f64;
+    ((world - 1) as f64 * n.powf(2.0 / 3.0) / n).min(1.0)
+}
+
+/// Predicted per-step wall-clock (seconds) of the graph-parallel exchanges
+/// on `m`: every collective in the step is an allreduce over the full
+/// `world`, so one ring transfer covers the summed f64 payload.
+pub fn graph_par_step_comm_time(m: &MachineProfile, step_elems: u64, world: usize) -> f64 {
+    ring_allreduce_time(m, world, step_elems as f64 * 8.0)
+}
+
 /// Check the per-GPU parameter memory fits the machine's HBM (the paper's
 /// motivation for MTP: MTL-base replicates every head).
 pub fn fits_memory(m: &MachineProfile, w: &Workload, mode: SimMode) -> bool {
@@ -290,6 +335,63 @@ mod tests {
         let sync = step_time_sync(&FRONTIER, &w(), SimMode::MtlBase, 8, 4096);
         let comm = step_comm_time(&FRONTIER, &w(), SimMode::MtlBase, 8);
         assert!((big - comm / sync).abs() < 1e-12, "fully hidden: win equals comm share");
+    }
+
+    #[test]
+    fn graph_par_elems_match_a_real_halo_plan() {
+        use crate::comm::halo::HaloPlan;
+        use crate::data::featurized::compute_segments;
+        use crate::data::generators::inorganic::build_crystal;
+        use crate::data::graph::radius_graph_positions;
+        use crate::util::rng::Rng;
+
+        let (_, positions) = build_crystal(&mut Rng::new(11), &[12, 8, 11, 17], 60);
+        let edges = radius_graph_positions(&positions, 6.0);
+        let segments = compute_segments(&positions, 6.0);
+        let (hidden, layers, p) = (16usize, 4usize, 12_345usize);
+        for world in [1usize, 2, 4, 8] {
+            let plan = HaloPlan::build(&segments, &edges, world);
+            assert_eq!(
+                graph_par_step_elems(
+                    plan.boundary_atoms().len(),
+                    plan.boundary_edges().len(),
+                    hidden,
+                    layers,
+                    p
+                ),
+                plan.predicted_step_elems(hidden, layers, p),
+                "world {world}: the closed form must equal the plan's prediction"
+            );
+        }
+        // World 1 has no boundary: only the loss + gradient folds remain.
+        let w1 = HaloPlan::build(&segments, &edges, 1);
+        assert!(w1.boundary_atoms().is_empty());
+        assert_eq!(
+            w1.predicted_step_elems(hidden, layers, p),
+            (crate::comm::halo::LOSS_SLOTS + crate::comm::halo::SEGMENTS * p) as u64
+        );
+    }
+
+    #[test]
+    fn graph_par_boundary_fraction_shrinks_with_size() {
+        assert_eq!(graph_par_boundary_fraction(1000, 1), 0.0);
+        assert_eq!(graph_par_boundary_fraction(0, 8), 0.0);
+        let small = graph_par_boundary_fraction(100, 8);
+        let large = graph_par_boundary_fraction(100_000, 8);
+        assert!(large < small, "surface-to-volume: {large} < {small}");
+        assert!((0.0..=1.0).contains(&small) && (0.0..=1.0).contains(&large));
+        // More ranks cut more planes.
+        assert!(
+            graph_par_boundary_fraction(10_000, 8) > graph_par_boundary_fraction(10_000, 2)
+        );
+    }
+
+    #[test]
+    fn graph_par_comm_time_scales_with_payload_and_vanishes_alone() {
+        assert_eq!(graph_par_step_comm_time(&FRONTIER, 1 << 20, 1), 0.0);
+        let t2 = graph_par_step_comm_time(&FRONTIER, 1 << 20, 2);
+        let t2_big = graph_par_step_comm_time(&FRONTIER, 1 << 27, 2);
+        assert!(t2 > 0.0 && t2_big > t2 * 10.0);
     }
 
     #[test]

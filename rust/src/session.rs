@@ -108,6 +108,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Graph-parallel training for single-branch modes: domain-decompose
+    /// each structure's atoms across ranks with per-EGNN-block halo
+    /// exchange (`crate::comm::halo`, `crate::model::graphpar`) instead of
+    /// replicating whole graphs. Requires `replicas` in {1, 2, 4, 8};
+    /// results are bit-identical to the single-rank run at every world.
+    pub fn graph_par(mut self, on: bool) -> Self {
+        self.config.parallel.graph_par = on;
+        self
+    }
+
     pub fn epochs(mut self, epochs: usize) -> Self {
         self.config.train.epochs = epochs;
         self

@@ -88,9 +88,14 @@ impl DatasetId {
         TaskRegistry::global().spec(*self)
     }
 
-    /// Whether the task generates inorganic (crystalline) structures.
+    /// Whether the task generates inorganic (crystalline / bulk) structures.
     pub fn is_inorganic(&self) -> bool {
-        matches!(self.spec().generator.kind, StructureKind::Crystal { .. })
+        matches!(
+            self.spec().generator.kind,
+            StructureKind::Crystal { .. }
+                | StructureKind::Supercell { .. }
+                | StructureKind::AmorphousBox { .. }
+        )
     }
 
     /// Element palette of the task (atomic numbers).
@@ -130,6 +135,15 @@ pub enum StructureKind {
     MoleculeHeavyLimited { min_heavy: usize, max_heavy: usize },
     /// Crystalline cluster with `min_atoms..config.max_atoms` atoms.
     Crystal { min_atoms: usize },
+    /// Bulk crystalline supercell: `reps^3` lattice sites on a cubic grid,
+    /// two palette species interleaved rock-salt style. Deliberately ignores
+    /// `GeneratorConfig::max_atoms` — thousands-of-atom structures are the
+    /// point (graph-parallel training splits them across ranks).
+    Supercell { reps: usize },
+    /// Amorphous bulk: `natoms` atoms of random palette species on a
+    /// strongly jittered cubic grid (glass-like disorder, overlap-free by
+    /// construction). Also ignores `GeneratorConfig::max_atoms`.
+    AmorphousBox { natoms: usize },
 }
 
 /// How a task's structures are generated (geometry + equilibrium character).
@@ -248,6 +262,22 @@ impl TaskSpec {
                 anyhow::ensure!(
                     min_atoms >= 2,
                     "task '{}': crystals need at least 2 atoms",
+                    self.name
+                );
+            }
+            StructureKind::Supercell { reps } => {
+                // reps^3 atoms: cap at 32^3 so the O(n^2) ground-truth
+                // labeler stays tractable.
+                anyhow::ensure!(
+                    (2..=32).contains(&reps),
+                    "task '{}': supercell reps must be in 2..=32, got {reps}",
+                    self.name
+                );
+            }
+            StructureKind::AmorphousBox { natoms } => {
+                anyhow::ensure!(
+                    (2..=32_768).contains(&natoms),
+                    "task '{}': amorphous box needs 2..=32768 atoms, got {natoms}",
                     self.name
                 );
             }
@@ -499,6 +529,68 @@ fn builtin_specs() -> Vec<TaskSpec> {
     ]
 }
 
+// ---------------------------------------------------------------------------
+// large-structure presets (graph-parallel training)
+// ---------------------------------------------------------------------------
+
+/// Register the two large-structure presets used by graph-parallel training:
+/// "Supercell" (rock-salt bulk, `10^3 = 1000` atoms) and "AmorphousBox"
+/// (glass-like bulk, 1200 atoms). They are NOT built in — single-rank batch
+/// training cannot hold them — so every entry point that wants them (the CLI
+/// before `TrainMode::parse`, tests, benches) calls this. Idempotent:
+/// re-registration of the identical specs returns the existing handles.
+pub fn register_large_presets() -> anyhow::Result<(DatasetId, DatasetId)> {
+    let reg = TaskRegistry::global();
+    // Small inorganic palette (Mg, O, Na, Cl, Ti, Si, Al, Fe, S): the
+    // supercell builder picks two species per structure, the amorphous
+    // builder mixes them all.
+    let palette: Vec<usize> = vec![12, 8, 11, 17, 22, 14, 13, 26, 16];
+    let supercell = reg.register(TaskSpec::new(
+        "Supercell",
+        palette.clone(),
+        GeneratorProfile {
+            kind: StructureKind::Supercell { reps: 10 },
+            // No steepest-descent relaxation: the lattice is built at the
+            // Morse equilibrium spacing and the O(n^2) potential makes
+            // per-step relaxation of 1000-atom cells needlessly expensive.
+            relax_steps: 0,
+            relax_step_size: 0.05,
+            perturb_factor: 0.2,
+        },
+        FidelityProfile {
+            // Same PBE-family tag as MPTrj/Alexandria: bulk supercells model
+            // the same theory level as the inorganic sources.
+            seed_tag: 53,
+            shift_sigma: 0.25,
+            scale_jitter: 0.01,
+            force_scale_jitter: 0.005,
+            energy_noise: 0.002,
+            force_noise: 0.003,
+            shift_offset: 0.0,
+        },
+    ))?;
+    let amorphous = reg.register(TaskSpec::new(
+        "AmorphousBox",
+        palette,
+        GeneratorProfile {
+            kind: StructureKind::AmorphousBox { natoms: 1200 },
+            relax_steps: 0,
+            relax_step_size: 0.05,
+            perturb_factor: 0.2,
+        },
+        FidelityProfile {
+            seed_tag: 61,
+            shift_sigma: 0.40,
+            scale_jitter: 0.02,
+            force_scale_jitter: 0.01,
+            energy_noise: 0.003,
+            force_noise: 0.005,
+            shift_offset: 0.0,
+        },
+    ))?;
+    Ok((supercell, amorphous))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -624,5 +716,56 @@ mod tests {
     #[test]
     fn debug_prints_task_name() {
         assert_eq!(format!("{:?}", DatasetId::Ani1x), "DatasetId(ANI1x)");
+    }
+
+    #[test]
+    fn large_presets_register_idempotently() {
+        let (sc, ab) = register_large_presets().unwrap();
+        assert_eq!(register_large_presets().unwrap(), (sc, ab));
+        assert_eq!(DatasetId::from_name("supercell"), Some(sc));
+        assert_eq!(DatasetId::from_name("amorphousbox"), Some(ab));
+        assert!(sc.is_inorganic() && ab.is_inorganic());
+        assert!(matches!(
+            sc.spec().generator.kind,
+            StructureKind::Supercell { reps: 10 }
+        ));
+        assert!(matches!(
+            ab.spec().generator.kind,
+            StructureKind::AmorphousBox { natoms: 1200 }
+        ));
+    }
+
+    #[test]
+    fn large_kind_validation_bounds() {
+        let reg = TaskRegistry::global();
+        let mk = |name: &str, kind: StructureKind| {
+            TaskSpec::new(
+                name,
+                vec![12, 8],
+                GeneratorProfile {
+                    kind,
+                    relax_steps: 0,
+                    relax_step_size: 0.05,
+                    perturb_factor: 0.2,
+                },
+                FidelityProfile {
+                    seed_tag: 1,
+                    shift_sigma: 0.1,
+                    scale_jitter: 0.0,
+                    force_scale_jitter: 0.0,
+                    energy_noise: 0.0,
+                    force_noise: 0.0,
+                    shift_offset: 0.0,
+                },
+            )
+        };
+        assert!(reg.register(mk("ScBad1", StructureKind::Supercell { reps: 1 })).is_err());
+        assert!(reg.register(mk("ScBad2", StructureKind::Supercell { reps: 33 })).is_err());
+        assert!(reg
+            .register(mk("AbBad1", StructureKind::AmorphousBox { natoms: 1 }))
+            .is_err());
+        assert!(reg
+            .register(mk("AbBad2", StructureKind::AmorphousBox { natoms: 40_000 }))
+            .is_err());
     }
 }

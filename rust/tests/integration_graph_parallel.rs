@@ -1,0 +1,460 @@
+//! Integration: graph-parallel (domain-decomposed) training with halo
+//! exchange.
+//!
+//! Headline properties:
+//!
+//! 1. training one-structure-per-step with atoms partitioned across 2/4/8
+//!    ranks is **bit-identical** to the single-rank run — final parameters
+//!    and metric trajectories to the last bit (the fixed 8-segment
+//!    decomposition + slotted f64 exchange make the fold order
+//!    world-invariant);
+//! 2. the graph-parallel path deliberately ignores the precision knob
+//!    (pure f64 end to end): an engine loaded at MixedF32 produces the
+//!    exact bits of the f64 engine;
+//! 3. kill-at-k checkpoint resume parity holds under graph parallelism;
+//! 4. a rank dying mid-step (between halo exchanges) surfaces as a typed
+//!    rank failure on its peers — never a deadlock;
+//! 5. a non-finite loss injected at ONE rank skips the batch on EVERY rank
+//!    (the group shares one structure per step), keeping the run
+//!    bit-identical to a single-rank run with the same injection;
+//! 6. property: the segment partition + halo exchange delivers every
+//!    cross-rank neighbor row exactly, on structures large enough for the
+//!    cell-grid radius-graph path, which itself must match brute force;
+//! 7. the analytic halo-traffic formula (`predicted_step_elems`) equals
+//!    the measured per-step `Comm::stats` delta, element for element;
+//! 8. the registered 1000-atom Supercell preset trains end to end under
+//!    graph parallelism.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hydra_mtp::comm::{run_group, HaloPlan};
+use hydra_mtp::config::{RunConfig, TrainMode};
+use hydra_mtp::coordinator::{DataBundle, Heads, RunLog, TrainedModel, Trainer};
+use hydra_mtp::data::featurized::compute_segments;
+use hydra_mtp::data::generators::inorganic::build_crystal;
+use hydra_mtp::data::graph::{
+    radius_graph_positions, radius_graph_positions_reference, uses_grid_path,
+};
+use hydra_mtp::data::potential::energy_and_forces;
+use hydra_mtp::data::structures::DatasetId;
+use hydra_mtp::model::egnn::{BranchParams, EgnnDims, EncoderParams};
+use hydra_mtp::model::graphpar::{self, GpPlan, GpStructure, GradLayout};
+use hydra_mtp::model::params::ParamSet;
+use hydra_mtp::runtime::{BackendKind, Engine, Manifest, ManifestConfig, Precision};
+use hydra_mtp::tasks::{
+    register_large_presets, FidelityProfile, GeneratorProfile, StructureKind,
+    TaskRegistry, TaskSpec,
+};
+use hydra_mtp::tensor::DType;
+use hydra_mtp::util::prop::{check, forall};
+use hydra_mtp::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+/// Shared f64 engine. The graph-parallel trainer path only consumes the
+/// manifest (dims + parameter init), so any backend works identically.
+fn engine() -> Arc<Engine> {
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            let e = Engine::load("artifacts").expect("engine loads on every machine");
+            eprintln!("graph-parallel tests run on the '{}' backend", e.backend_name());
+            Arc::new(e)
+        })
+        .clone()
+}
+
+/// Native mixed-f32 engine: the precision knob the graph-parallel path must
+/// provably IGNORE (its math is pinned to f64).
+fn engine_f32() -> Arc<Engine> {
+    use std::sync::OnceLock;
+    static ENGINE: OnceLock<Arc<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            let e = Engine::load_full("artifacts", BackendKind::Native, Precision::MixedF32)
+                .expect("native engine loads on every machine");
+            Arc::new(e)
+        })
+        .clone()
+}
+
+/// A test-sized bulk task: 5^3 = 125-atom supercells — the same generator
+/// family as the registered 1000-atom preset, small enough that the
+/// world-parity matrix stays fast. Registered once per process (the
+/// registry is idempotent for identical specs).
+fn bulk_task() -> DatasetId {
+    TaskRegistry::global()
+        .register(TaskSpec::new(
+            "GpTest-Bulk",
+            vec![12, 8, 11, 17],
+            GeneratorProfile {
+                kind: StructureKind::Supercell { reps: 5 },
+                relax_steps: 0,
+                relax_step_size: 0.05,
+                perturb_factor: 0.2,
+            },
+            FidelityProfile {
+                seed_tag: 53,
+                shift_sigma: 0.25,
+                scale_jitter: 0.01,
+                force_scale_jitter: 0.005,
+                energy_noise: 0.002,
+                force_noise: 0.003,
+                shift_offset: 0.0,
+            },
+        ))
+        .expect("identical re-registration is idempotent")
+}
+
+fn gp_config(dataset: DatasetId, replicas: usize, epochs: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.mode = TrainMode::Single(dataset);
+    cfg.parallel.replicas = replicas;
+    cfg.parallel.graph_par = true;
+    cfg.train.epochs = epochs;
+    cfg.train.patience = 0;
+    cfg.data.per_dataset = 5;
+    cfg
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("hydra_mtp_graphpar_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_params_bits_eq(a: &ParamSet, b: &ParamSet, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: leaf count");
+    for ((na, ta), (nb, tb)) in a.iter().zip(b.iter()) {
+        assert_eq!(na, nb, "{what}: leaf name");
+        match ta.dtype() {
+            DType::F32 => {
+                let (xa, xb) = (ta.as_f32(), tb.as_f32());
+                assert_eq!(xa.len(), xb.len(), "{what}: {na} numel");
+                for (i, (x, y)) in xa.iter().zip(xb).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{what}: {na}[{i}]: {x} vs {y} (bitwise)"
+                    );
+                }
+            }
+            DType::I32 => assert_eq!(ta.as_i32(), tb.as_i32(), "{what}: {na}"),
+        }
+    }
+}
+
+fn assert_models_bits_eq(a: &TrainedModel, b: &TrainedModel) {
+    assert_params_bits_eq(&a.encoder, &b.encoder, "encoder");
+    match (&a.heads, &b.heads) {
+        (Heads::Shared(x), Heads::Shared(y)) => assert_params_bits_eq(x, y, "shared head"),
+        _ => panic!("graph-parallel modes train a shared head"),
+    }
+}
+
+/// Trajectory equality ignoring wall-clock quantities (phase timings and
+/// the `step_ms` coverage EMA legitimately differ between runs; everything
+/// numeric must match to the last bit).
+fn assert_logs_bits_eq(a: &RunLog, b: &RunLog) {
+    assert_eq!(a.epochs.len(), b.epochs.len(), "epoch count");
+    for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(ea.epoch, eb.epoch);
+        assert_eq!(ea.steps, eb.steps, "epoch {}", ea.epoch);
+        assert_eq!(ea.skipped_batches, eb.skipped_batches, "epoch {}", ea.epoch);
+        assert_eq!(
+            ea.train_loss.to_bits(),
+            eb.train_loss.to_bits(),
+            "epoch {} train_loss {} vs {}",
+            ea.epoch,
+            ea.train_loss,
+            eb.train_loss
+        );
+        assert_eq!(ea.mae_e.to_bits(), eb.mae_e.to_bits(), "epoch {}", ea.epoch);
+        assert_eq!(ea.mae_f.to_bits(), eb.mae_f.to_bits(), "epoch {}", ea.epoch);
+        assert_eq!(ea.val_loss.to_bits(), eb.val_loss.to_bits(), "epoch {}", ea.epoch);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. world-shape invariance: 2/4/8 ranks == 1 rank, bitwise
+// ---------------------------------------------------------------------------
+
+#[test]
+fn graph_par_bit_identical_across_worlds() {
+    let e = engine();
+    let d = bulk_task();
+    let cfg1 = gp_config(d, 1, 2);
+    let data = DataBundle::generate(&cfg1.data, &[d]);
+    let reference = Trainer::new(Arc::clone(&e), cfg1).train(&data).unwrap();
+    assert!(reference.log.epochs.iter().all(|ep| ep.steps > 0), "must actually train");
+    assert!(reference.log.epochs.iter().all(|ep| ep.train_loss.is_finite()));
+
+    for replicas in [2usize, 4, 8] {
+        let out = Trainer::new(Arc::clone(&e), gp_config(d, replicas, 2))
+            .train(&data)
+            .unwrap();
+        assert_models_bits_eq(&out.model, &reference.model);
+        assert_logs_bits_eq(&out.log, &reference.log);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. the precision knob is provably ignored (pure-f64 invariant)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn graph_par_ignores_the_precision_knob() {
+    let d = bulk_task();
+    let cfg = gp_config(d, 2, 2);
+    let data = DataBundle::generate(&cfg.data, &[d]);
+    let f64_out = Trainer::new(engine(), cfg.clone()).train(&data).unwrap();
+    let f32_out = Trainer::new(engine_f32(), cfg).train(&data).unwrap();
+    assert_models_bits_eq(&f32_out.model, &f64_out.model);
+    assert_logs_bits_eq(&f32_out.log, &f64_out.log);
+}
+
+// ---------------------------------------------------------------------------
+// 3. kill-at-k resume parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kill_at_k_resume_parity_graph_par() {
+    let e = engine();
+    let d = bulk_task();
+    let epochs = 4;
+    let k = 2;
+    let cfg_full = gp_config(d, 2, epochs);
+    let data = DataBundle::generate(&cfg_full.data, &[d]);
+    let full = Trainer::new(Arc::clone(&e), cfg_full).train(&data).unwrap();
+
+    let dir = tmp_dir("resume");
+    let mut cfg_phase1 = gp_config(d, 2, k);
+    cfg_phase1.checkpoint.dir = Some(dir.to_string_lossy().into_owned());
+    Trainer::new(Arc::clone(&e), cfg_phase1).train(&data).unwrap();
+
+    let mut cfg_phase2 = gp_config(d, 2, epochs);
+    cfg_phase2.checkpoint.resume = Some(dir.to_string_lossy().into_owned());
+    let resumed = Trainer::new(e, cfg_phase2).train(&data).unwrap();
+
+    assert_models_bits_eq(&resumed.model, &full.model);
+    assert_logs_bits_eq(&resumed.log, &full.log);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 4. chaos: rank death mid-step is typed, never a deadlock
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rank_death_mid_halo_is_typed_not_deadlock() {
+    // A rank-panic fault fires before step 1 of epoch 0 on rank 1. The dead
+    // rank leaves its peers inside the step's halo/loss/gradient collective
+    // sequence; they must wake with a typed error naming rank 1 within the
+    // comm timeout — not hang waiting for its slot deposits.
+    let e = engine();
+    let d = bulk_task();
+    let mut cfg = gp_config(d, 2, 2);
+    cfg.fault.spec = Some("rank-panic@rank=1,epoch=0,step=1".into());
+    cfg.fault.comm_timeout_ms = 10_000;
+    let data = DataBundle::generate(&cfg.data, &[d]);
+    let t0 = std::time::Instant::now();
+    let err = Trainer::new(e, cfg).train(&data).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank 1"), "expected a typed rank-1 failure, got: {msg}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "failure must surface promptly, took {:?}",
+        t0.elapsed()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 5. a non-finite loss at one rank skips the batch on every rank
+// ---------------------------------------------------------------------------
+
+#[test]
+fn nonfinite_injection_skips_the_whole_group() {
+    // The group cooperates on ONE structure per step, so a poisoned batch
+    // must be skipped group-uniformly: a world-2 run with the injection at
+    // rank 1 lands on the exact bits of a world-1 run with the injection
+    // at rank 0 (the only rank there is).
+    let e = engine();
+    let d = bulk_task();
+    let mut cfg1 = gp_config(d, 1, 2);
+    cfg1.fault.spec = Some("nonfinite@rank=0,epoch=0,batch=1".into());
+    let data = DataBundle::generate(&cfg1.data, &[d]);
+    let solo = Trainer::new(Arc::clone(&e), cfg1).train(&data).unwrap();
+    assert!(
+        solo.log.epochs[0].skipped_batches >= 1,
+        "the injection must actually skip a batch"
+    );
+
+    let mut cfg2 = gp_config(d, 2, 2);
+    cfg2.fault.spec = Some("nonfinite@rank=1,epoch=0,batch=1".into());
+    let duo = Trainer::new(e, cfg2).train(&data).unwrap();
+    assert_models_bits_eq(&duo.model, &solo.model);
+    assert_logs_bits_eq(&duo.log, &solo.log);
+}
+
+// ---------------------------------------------------------------------------
+// 6. property: partition + halo exchange reconstructs brute-force
+//    neighborhoods (cell-grid-sized structures)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn large_structures_take_the_cell_grid_path() {
+    // The dense O(n^2) scan cuts over to the cell grid at 48 atoms; every
+    // bulk size the graph-parallel generators produce must sit strictly
+    // above it (a silent fallback would make halo-plan builds quadratic).
+    assert!(!uses_grid_path(48));
+    assert!(uses_grid_path(49));
+    for bulk in [125usize, 1000, 1200] {
+        assert!(uses_grid_path(bulk), "{bulk}-atom bulk must use the cell grid");
+    }
+}
+
+#[test]
+fn prop_halo_exchange_reconstructs_brute_force_neighborhoods() {
+    forall(
+        "partition+halo delivers every cross-rank neighbor row",
+        8,
+        |rng| (rng.int_range(20, 120), rng.next_u64()),
+        |&(natoms, seed)| {
+            // Sizes straddle the 48-atom cutover: the cell-grid edge list
+            // (the path every large structure takes) and the dense-scan
+            // edge list must BOTH equal the brute-force reference — the
+            // halo plan inherits any topology bug wholesale.
+            let mut rng = Rng::new(seed);
+            let (_, positions) = build_crystal(&mut rng, &[12, 8, 11, 17], natoms);
+            let cutoff = 6.0;
+            let edges = radius_graph_positions(&positions, cutoff);
+            let brute = radius_graph_positions_reference(&positions, cutoff);
+            let pairs = |es: &[hydra_mtp::data::graph::Edge]| {
+                es.iter().map(|e| (e.src, e.dst)).collect::<Vec<_>>()
+            };
+            check(
+                pairs(&edges) == pairs(&brute),
+                format!("{natoms} atoms: cell-grid edges != brute force"),
+            )?;
+
+            let segments = compute_segments(&positions, cutoff);
+            let width = 5usize;
+            for &world in &[2usize, 4, 8] {
+                let plan = HaloPlan::build(&segments, &edges, world);
+                let results = run_group(world, |c| {
+                    let rank = c.rank_in_group;
+                    // Owned rows hold a known function of the atom index;
+                    // everything remote starts as NaN poison.
+                    let n = positions.len();
+                    let mut data = vec![f64::NAN; n * width];
+                    for a in 0..n {
+                        if plan.owns(rank, a) {
+                            for k in 0..width {
+                                data[a * width + k] = (a * width + k) as f64 + 0.25;
+                            }
+                        }
+                    }
+                    plan.exchange_node_rows(&c, &mut data, width).unwrap();
+                    // Post-exchange, this rank's edge work can read the src
+                    // row of EVERY edge whose dst it owns — local or remote
+                    // — with the owner's exact bits.
+                    for e in &edges {
+                        let (s, dst) = (e.src as usize, e.dst as usize);
+                        if !plan.owns(rank, dst) {
+                            continue;
+                        }
+                        for k in 0..width {
+                            let got = data[s * width + k];
+                            let want = (s * width + k) as f64 + 0.25;
+                            if got.to_bits() != want.to_bits() {
+                                return Err(format!(
+                                    "rank {rank}: edge {s}->{dst} src row [{k}]: \
+                                     {got} vs {want}"
+                                ));
+                            }
+                        }
+                    }
+                    Ok(())
+                });
+                for (r, res) in results.into_iter().enumerate() {
+                    res.map_err(|e| format!("world {world} rank {r}: {e}"))?
+                        .map_err(|e| format!("world {world}: {e}"))?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 7. analytic halo traffic == measured Comm::stats, exactly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn predicted_step_elems_matches_measured_comm_stats() {
+    let m = Manifest::synthesize(ManifestConfig::default_native());
+    let dims = EgnnDims::from_config(&m.config);
+    let layout = GradLayout::new(&dims);
+    let params = ParamSet::init(&m.params, 9);
+    let mut rng = Rng::new(5);
+    let (species, positions) = build_crystal(&mut rng, &[12, 8, 11, 17], 80);
+    let (energy, forces) = energy_and_forces(&species, &positions);
+    let y_epa = energy / positions.len() as f64;
+    let edges = radius_graph_positions(&positions, m.config.cutoff);
+    let segments = compute_segments(&positions, m.config.cutoff);
+
+    for world in [1usize, 2, 4] {
+        let plan = GpPlan::build(&segments, &edges, world);
+        let predicted = plan.predicted_step_elems(dims.h, dims.l, layout.len);
+        let results = run_group(world, |c| {
+            let enc = EncoderParams::from_set(&dims, &params).unwrap();
+            let br = BranchParams::from_set(&dims, &params).unwrap();
+            let st = GpStructure {
+                species: &species,
+                edges: &edges,
+                y_energy_per_atom: y_epa,
+                y_forces: &forces,
+            };
+            let before = c.stats().elems;
+            graphpar::train_step(&dims, &enc, &br, &st, &plan, &layout, &c).unwrap();
+            c.stats().elems - before
+        });
+        for (r, res) in results.into_iter().enumerate() {
+            let measured = res.unwrap_or_else(|e| panic!("world {world} rank {r}: {e}"));
+            assert_eq!(
+                measured, predicted,
+                "world {world} rank {r}: the analytic halo-traffic model \
+                 must match Comm::stats element for element"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 8. the 1000-atom Supercell preset trains end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn supercell_preset_trains_graph_parallel() {
+    let (supercell, _) = register_large_presets().unwrap();
+    let e = engine();
+    let mut cfg = gp_config(supercell, 2, 1);
+    cfg.data.per_dataset = 2;
+    let data = DataBundle::generate(&cfg.data, &[supercell]);
+    // The preset really is beyond any single-rank batch budget.
+    let n = data.train[&supercell]
+        .first()
+        .or_else(|| data.val[&supercell].first())
+        .expect("preset generates structures")
+        .natoms();
+    assert_eq!(n, 1000, "Supercell preset is 10^3 atoms");
+
+    let out = Trainer::new(e, cfg).train(&data).unwrap();
+    assert!(out.log.epochs.iter().all(|ep| ep.train_loss.is_finite()));
+    assert!(out.comm_elems.0 > 0, "halo + loss + gradient folds must be on record");
+}

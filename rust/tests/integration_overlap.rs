@@ -393,10 +393,10 @@ fn injected_rank_panic_with_overlap_on_is_typed_not_deadlock() {
 
 #[test]
 fn elastic_scheduler_shifts_subgroup_sizes_under_imbalance() {
-    // 10:1 sample imbalance between two datasets. Epoch 0 plans evenly
-    // (no cost history), so the run starts exactly like the static mesh;
-    // from epoch 1 the measured step-cost EMA must pull ranks toward the
-    // big dataset's head.
+    // 10:1 sample imbalance between two datasets. Epoch 0 has no cost
+    // history, so the planner's fallback weights by planned steps — already
+    // tilted toward the big dataset — and from epoch 1 the measured
+    // step-cost EMA keeps ranks pulled toward the big dataset's head.
     let e = engine();
     let mut big_cfg = tiny_config(TrainMode::MtlPar, 3, 3);
     big_cfg.parallel.elastic = true;
